@@ -1,0 +1,173 @@
+//! End-to-end lifetime deployment — the repo's headline E2E driver
+//! (recorded in EXPERIMENTS.md).
+//!
+//! Full pipeline on the CIFAR-10 analog:
+//!  1. QAT backbone training with loss/accuracy curve logging.
+//!  2. BN folding + int4 differential programming onto 256×512 tiles.
+//!  3. Algorithm 1 drift-aware scheduling (offline): discovers the drift
+//!     levels that need compensation and trains one (b, d) set per level.
+//!  4. A 10-year accelerated serve: Poisson request traffic, dynamic
+//!     batching, set switching as the device ages — reporting accuracy,
+//!     throughput, latency percentiles and the storage footprint.
+//!
+//! Run: `cargo run --release --example lifetime_deployment [-- --full]`
+
+use std::sync::Arc;
+use vera_plus::compensation::SetStore;
+use vera_plus::coordinator::deploy;
+use vera_plus::coordinator::scheduler::{schedule, ScheduleCfg};
+use vera_plus::coordinator::serve::{
+    BatchPolicy, LifetimeClock, Server, Workload,
+};
+use vera_plus::coordinator::trainer::{
+    train_backbone, BackboneTrainCfg, CompTrainCfg,
+};
+use vera_plus::rram::{fmt_time, ConductanceGrid, IbmDrift, YEAR};
+use vera_plus::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let full = std::env::args().any(|a| a == "--full");
+    let model = "resnet20_easy";
+    let rt = Arc::new(Runtime::cpu(vera_plus::find_artifacts())?);
+
+    // ---- 1. Backbone QAT ------------------------------------------------
+    let steps = if full { 600 } else { 300 };
+    println!("=== [1] backbone QAT: {model}, {steps} steps ===");
+    let t0 = std::time::Instant::now();
+    let (params, trace) = train_backbone(
+        &rt,
+        model,
+        &BackboneTrainCfg { steps, eval_every: 50, ..Default::default() },
+    )?;
+    println!("loss curve (step, train-loss, test-acc):");
+    for (step, loss, acc) in &trace {
+        println!("  {step:>5}  {loss:.4}  {acc:.4}");
+    }
+    println!("backbone trained in {:.1}s", t0.elapsed().as_secs_f64());
+
+    // ---- 2. Deploy ---------------------------------------------------------
+    println!("\n=== [2] deploy: fold BN, quantize W4, program arrays ===");
+    let dep = deploy(
+        rt.clone(),
+        model,
+        &params,
+        "veraplus",
+        1,
+        Box::new(IbmDrift::default()),
+        ConductanceGrid::default(),
+        7,
+    )?;
+    println!(
+        "{} RRAM weights -> {} devices on {} tiles",
+        dep.manifest.rram_params(),
+        dep.net.devices(),
+        dep.net.n_tiles()
+    );
+
+    // ---- 3. Algorithm 1 ----------------------------------------------------
+    println!("\n=== [3] Algorithm 1: drift-aware scheduling ===");
+    let t0 = std::time::Instant::now();
+    let cfg = ScheduleCfg {
+        norm_floor: 0.95,
+        n_instances: if full { 10 } else { 3 },
+        max_samples: if full { 512 } else { 256 },
+        train: CompTrainCfg {
+            epochs: if full { 3 } else { 1 },
+            max_train: if full { 2048 } else { 768 },
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let result = schedule(&dep, &cfg)?;
+    println!(
+        "drift-free {:.2}%, floor {:.2}% (5% drop tolerance)",
+        100.0 * result.drift_free_acc,
+        100.0 * result.floor_acc
+    );
+    for d in &result.decisions {
+        if d.trained_new_set {
+            println!(
+                "  NEW SET at t={:<9} (µ-3σ was {:.3} < floor {:.3})",
+                fmt_time(d.t),
+                d.lower,
+                d.floor
+            );
+        }
+    }
+    let stored: usize = result.store.stored_params();
+    println!(
+        "{} sets scheduled in {:.1}s — {} stored scalars \
+         ({:.2} KB at int4)",
+        result.store.len(),
+        t0.elapsed().as_secs_f64(),
+        stored,
+        stored as f64 * 0.5 / 1024.0
+    );
+    std::fs::create_dir_all("results")?;
+    result
+        .store
+        .save(std::path::Path::new("results/lifetime_store"))?;
+    let store = SetStore::load(std::path::Path::new(
+        "results/lifetime_store",
+    ))?;
+
+    // ---- 4. 10-year accelerated serve ---------------------------------------
+    println!("\n=== [4] serving a 10-year lifetime (accelerated) ===");
+    let serve_wall = if full { 40.0 } else { 15.0 };
+    let accel = 10.0 * YEAR / serve_wall;
+    let mut server = Server::new(
+        &dep,
+        &store,
+        LifetimeClock::new(1.0, accel),
+        BatchPolicy { max_batch: 32, max_wait: 0.01 },
+        11,
+    );
+    let mut workload = Workload::new(400.0, 5);
+    let mut wall = 0.0;
+    let tick = serve_wall / 40.0;
+    let t0 = std::time::Instant::now();
+    while wall < serve_wall {
+        let reqs = workload.arrivals(
+            tick,
+            &server.clock,
+            dep.dataset.test_len(),
+        );
+        for r in reqs {
+            server.submit(r);
+        }
+        server.drain(tick / 100.0)?;
+        // Advance the lifetime clock by the tick itself (idle aging):
+        // the device keeps getting older between batches.
+        server.clock.advance(tick);
+        wall += tick;
+    }
+    let real = t0.elapsed().as_secs_f64();
+    let m = &server.metrics;
+    println!(
+        "device age at end: {}",
+        fmt_time(server.clock.device_age())
+    );
+    println!(
+        "served {:>6} requests  |  accuracy {:.2}%  (drift-free {:.2}%, \
+         normalized {:.3})",
+        m.served,
+        100.0 * m.accuracy(),
+        100.0 * result.drift_free_acc,
+        m.accuracy() / result.drift_free_acc.max(1e-9)
+    );
+    println!(
+        "batches {:>4} (occupancy {:.2})  |  set switches {}  |  \
+         throughput {:.0} req/s (wall)",
+        m.batches,
+        m.mean_occupancy(),
+        m.set_switches,
+        m.served as f64 / real
+    );
+    println!(
+        "latency p50 {:.1} ms  p90 {:.1} ms  p99 {:.1} ms (virtual)",
+        1e3 * m.latency_percentile(0.5),
+        1e3 * m.latency_percentile(0.9),
+        1e3 * m.latency_percentile(0.99)
+    );
+    Ok(())
+}

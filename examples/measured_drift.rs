@@ -1,0 +1,104 @@
+//! Measured-drift validation (the paper's Fig. 6 flow end to end).
+//!
+//! 1. Characterize a simulated 180 nm 1T1R array: program 200 devices to
+//!    each of 8 conductance levels, age one week under the ground-truth
+//!    fab drift model, read back, fit per-state (µᵢ, σᵢ).
+//! 2. Train VeRA+ compensation vectors using only the *fitted* model.
+//! 3. Evaluate against fresh readouts of the ground-truth fab drift —
+//!    i.e. the compensation never saw the true drift process.
+//!
+//! Run: `cargo run --release --example measured_drift`
+
+use std::sync::Arc;
+use vera_plus::coordinator::deploy;
+use vera_plus::coordinator::eval::{eval_accuracy, EvalMode};
+use vera_plus::coordinator::trainer::{
+    train_backbone, train_comp_at, BackboneTrainCfg, CompTrainCfg,
+};
+use vera_plus::rram::{
+    characterize, fit_measured_model, ConductanceGrid, FabDrift, WEEK,
+};
+use vera_plus::runtime::Runtime;
+use vera_plus::util::rng::Pcg64;
+use vera_plus::util::tensor::TensorMap;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Arc::new(Runtime::cpu(vera_plus::find_artifacts())?);
+    let model = "resnet20_easy";
+    let grid = ConductanceGrid::default();
+    let fab = FabDrift::default();
+    let mut rng = Pcg64::new(0xfab);
+
+    println!("=== [1] characterizing the 1T1R array (one week) ===");
+    let stats = characterize(&grid, &fab, 200, WEEK, &mut rng);
+    println!("  level    µᵢ[µS]   σᵢ[µS]   (true µ)");
+    for st in &stats {
+        println!(
+            "  {:>4.0}µS  {:>7.3}  {:>7.3}   ({:.3})",
+            st.g_level,
+            st.mu,
+            st.sigma,
+            fab.mu(st.g_level, WEEK)
+        );
+    }
+    let measured = fit_measured_model(&stats, WEEK);
+
+    println!("\n=== [2] train backbone + compensation on the FITTED \
+              model ===");
+    let (params, _) = train_backbone(
+        &rt,
+        model,
+        &BackboneTrainCfg { steps: 300, eval_every: 0,
+                            ..Default::default() },
+    )?;
+    let dep = deploy(
+        rt,
+        model,
+        &params,
+        "veraplus",
+        1,
+        Box::new(measured),
+        grid,
+        7,
+    )?;
+    let empty = TensorMap::new();
+    let ideal = dep.net.read_ideal();
+    let drift_free =
+        eval_accuracy(&dep, &ideal, &empty, EvalMode::Plain, 512)?;
+    let trained = train_comp_at(
+        &dep,
+        WEEK,
+        dep.fresh_trainables(42),
+        &CompTrainCfg { epochs: 2, max_train: 1024,
+                        ..Default::default() },
+        &mut rng,
+    )?;
+
+    println!("\n=== [3] evaluate on GROUND-TRUTH fab readouts ===");
+    let mut unc = Vec::new();
+    let mut comp = Vec::new();
+    for _ in 0..5 {
+        let w = dep.net.read_drifted(WEEK, &fab, &mut rng);
+        unc.push(eval_accuracy(&dep, &w, &empty, EvalMode::Plain, 512)?);
+        comp.push(eval_accuracy(
+            &dep,
+            &w,
+            &trained.trainables,
+            EvalMode::Compensated,
+            512,
+        )?);
+    }
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    println!("  drift-free         {:.2}%", 100.0 * drift_free);
+    println!("  1wk uncompensated  {:.2}%", 100.0 * mean(&unc));
+    println!(
+        "  1wk compensated    {:.2}%   (normalized {:.4})",
+        100.0 * mean(&comp),
+        mean(&comp) / drift_free.max(1e-9)
+    );
+    println!(
+        "\ncompensation trained on extracted statistics transfers to \
+         the true state-dependent drift — the paper's Fig. 6(d) claim."
+    );
+    Ok(())
+}

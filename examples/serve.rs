@@ -1,0 +1,108 @@
+//! Serving demo: drift-aware routing + dynamic batching under load.
+//!
+//! Loads (or schedules) a compensation-set store, then runs the request
+//! loop at three arrival rates, showing how the batcher trades occupancy
+//! against latency while the router switches compensation sets as the
+//! device ages across a simulated decade.
+//!
+//! Run: `cargo run --release --example serve`
+
+use std::sync::Arc;
+use vera_plus::compensation::SetStore;
+use vera_plus::coordinator::deploy;
+use vera_plus::coordinator::scheduler::{schedule, ScheduleCfg};
+use vera_plus::coordinator::serve::{
+    BatchPolicy, LifetimeClock, Server, Workload,
+};
+use vera_plus::coordinator::trainer::{
+    train_backbone, BackboneTrainCfg, CompTrainCfg,
+};
+use vera_plus::rram::{ConductanceGrid, IbmDrift, YEAR};
+use vera_plus::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Arc::new(Runtime::cpu(vera_plus::find_artifacts())?);
+    let model = "resnet20_easy";
+    let (params, _) = train_backbone(
+        &rt,
+        model,
+        &BackboneTrainCfg { steps: 300, eval_every: 0,
+                            ..Default::default() },
+    )?;
+    let dep = deploy(
+        rt,
+        model,
+        &params,
+        "veraplus",
+        1,
+        Box::new(IbmDrift::default()),
+        ConductanceGrid::default(),
+        7,
+    )?;
+
+    // Reuse a previously scheduled store if present, else schedule one.
+    let stem = std::path::Path::new("results/serve_store");
+    let store = if stem.with_extension("json").exists() {
+        println!("loading existing store {}", stem.display());
+        SetStore::load(stem)?
+    } else {
+        println!("scheduling compensation sets (Alg. 1, quick budget)...");
+        let result = schedule(
+            &dep,
+            &ScheduleCfg {
+                norm_floor: 0.95,
+                n_instances: 3,
+                max_samples: 256,
+                train: CompTrainCfg { epochs: 1, max_train: 768,
+                                      ..Default::default() },
+                ..Default::default()
+            },
+        )?;
+        std::fs::create_dir_all("results")?;
+        result.store.save(stem)?;
+        result.store
+    };
+    println!("store: {} sets at t = {:?}\n",
+             store.len(),
+             store
+                 .sets
+                 .iter()
+                 .map(|s| vera_plus::rram::fmt_time(s.t_start))
+                 .collect::<Vec<_>>());
+
+    for rate in [50.0, 400.0, 2000.0] {
+        let mut server = Server::new(
+            &dep,
+            &store,
+            LifetimeClock::new(1.0, 10.0 * YEAR / 10.0),
+            BatchPolicy { max_batch: 32, max_wait: 0.01 },
+            11,
+        );
+        let mut workload = Workload::new(rate, 5);
+        let mut wall = 0.0;
+        while wall < 10.0 {
+            let reqs = workload.arrivals(
+                0.25,
+                &server.clock,
+                dep.dataset.test_len(),
+            );
+            for r in reqs {
+                server.submit(r);
+            }
+            server.drain(0.005)?;
+            wall += 0.25;
+        }
+        let m = &server.metrics;
+        println!(
+            "rate {rate:>6.0} req/s | served {:>6} | acc {:.2}% | \
+             occupancy {:.2} | switches {:>2} | p50 {:.1} ms p99 {:.1} ms",
+            m.served,
+            100.0 * m.accuracy(),
+            m.mean_occupancy(),
+            m.set_switches,
+            1e3 * m.latency_percentile(0.5),
+            1e3 * m.latency_percentile(0.99)
+        );
+    }
+    Ok(())
+}

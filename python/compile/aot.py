@@ -1,0 +1,198 @@
+"""AOT compile path: lower every L2 graph to HLO *text* + a JSON manifest.
+
+HLO text (not ``.serialize()``) is the interchange format: jax ≥ 0.5 emits
+HloModuleProtos with 64-bit instruction ids which the xla_extension 0.5.1
+bundled with the Rust `xla` crate rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage (normally via ``make artifacts``):
+
+    python -m compile.aot --out ../artifacts            # full default set
+    python -m compile.aot --out ../artifacts --model resnet20_easy
+    python -m compile.aot --list
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import bert, model, resnet
+
+DTYPE_NAMES = {jnp.float32.dtype: "f32", jnp.int32.dtype: "i32",
+               jnp.int8.dtype: "i8"}
+
+
+def to_hlo_text(fn, arg_specs) -> str:
+    lowered = jax.jit(fn).lower(*arg_specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _io_entry(name, spec):
+    return {"name": name, "shape": list(spec.shape),
+            "dtype": DTYPE_NAMES[jnp.dtype(spec.dtype)]}
+
+
+def _graph_manifest(fn, arg_specs, in_names, out_names, fname):
+    outs = jax.eval_shape(fn, *arg_specs)
+    assert len(outs) == len(out_names), (len(outs), out_names)
+    return {
+        "file": fname,
+        "inputs": [_io_entry(n, s) for n, s in zip(in_names, arg_specs)],
+        "outputs": [_io_entry(n, s) for n, s in zip(out_names, outs)],
+    }
+
+
+def _model_meta(name):
+    cfg = model.ALL_CONFIGS[name]
+    if isinstance(cfg, resnet.ResNetCfg):
+        meta = {
+            "model": name, "kind": "resnet", "depth": cfg.depth,
+            "widths": list(cfg.widths), "image": cfg.image,
+            "classes": cfg.classes, "w_bits": cfg.w_bits,
+            "a_bits": cfg.a_bits,
+            "d_in_max": cfg.d_in_max, "d_out_max": cfg.d_out_max,
+            "layers": [{
+                "name": l.name, "kind": l.kind, "cin": l.cin,
+                "cout": l.cout, "k": l.k, "stride": l.stride,
+                "hw_in": l.hw_in, "hw_out": l.hw_out,
+            } for l in cfg.layers()],
+            "deploy_weights": [
+                {"name": s["name"], "shape": list(s["shape"]),
+                 "rram": s["rram"]}
+                for s in resnet.deploy_weight_specs(cfg)],
+            "train_weights": [
+                {"name": s["name"], "shape": list(s["shape"]),
+                 "grad": s.get("grad", True), "init": s.get("init")}
+                for s in resnet.train_weight_specs(cfg)],
+        }
+    else:
+        meta = {
+            "model": name, "kind": "bert", "layers_n": cfg.layers_n,
+            "d_model": cfg.d_model, "heads": cfg.heads, "seq": cfg.seq,
+            "vocab": cfg.vocab, "classes": cfg.classes,
+            "w_bits": cfg.w_bits, "a_bits": cfg.a_bits,
+            "d_in_max": cfg.d_in_max, "d_out_max": cfg.d_out_max,
+            "layers": [{
+                "name": l["name"], "kind": "linear", "cin": l["cin"],
+                "cout": l["cout"], "k": 1, "stride": 1,
+                "hw_in": 1 if l["name"] == "cls" else cfg.seq,
+                "hw_out": 1 if l["name"] == "cls" else cfg.seq,
+            } for l in cfg.linear_layers()],
+            "deploy_weights": [
+                {"name": s["name"], "shape": list(s["shape"]),
+                 "rram": s["rram"], "init": s.get("init")}
+                for s in bert.deploy_weight_specs(cfg)],
+            "train_weights": [
+                {"name": s["name"], "shape": list(s["shape"]),
+                 "grad": True, "init": s.get("init"), "rram": s["rram"]}
+                for s in bert.train_weight_specs(cfg)],
+        }
+    return meta
+
+
+def build_graph(name, key):
+    cfg = model.ALL_CONFIGS[name]
+    builder_name, kwargs = model.default_graphs(name)[key]
+    return model.BUILDERS[builder_name](cfg, **kwargs)
+
+
+def emit_model(name: str, out_dir: str, force=False, only_graph=None,
+               verbose=True):
+    meta = _model_meta(name)
+    graphs = {}
+    for key in model.default_graphs(name):
+        if only_graph and key != only_graph:
+            continue
+        fname = f"{name}.{key}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        fn, arg_specs, in_names, out_names = build_graph(name, key)
+        graphs[key] = _graph_manifest(fn, arg_specs, in_names, out_names,
+                                      fname)
+        if not force and os.path.exists(path):
+            if verbose:
+                print(f"  [cached] {fname}")
+            continue
+        text = to_hlo_text(fn, arg_specs)
+        with open(path, "w") as f:
+            f.write(text)
+        if verbose:
+            print(f"  [lowered] {fname} ({len(text) // 1024} KiB)")
+    meta["graphs"] = graphs
+    mpath = os.path.join(out_dir, f"{name}.manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(meta, f, indent=1)
+    return mpath
+
+
+def emit_kernels(out_dir: str, force=False, verbose=True):
+    """Standalone L1 kernel artifacts (runtime unit tests + hotpath bench)."""
+    kernels = {
+        "kernel_vera": model.build_kernel_vera(),
+        "kernel_vera_small": model.build_kernel_vera(
+            n=256, cin=32, cout=64, rank=4, block_n=128),
+        "kernel_crossbar": model.build_kernel_crossbar(),
+    }
+    manifest = {}
+    for key, (fn, arg_specs, in_names, out_names) in kernels.items():
+        fname = f"{key}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        manifest[key] = _graph_manifest(fn, arg_specs, in_names, out_names,
+                                        fname)
+        if not force and os.path.exists(path):
+            if verbose:
+                print(f"  [cached] {fname}")
+            continue
+        text = to_hlo_text(fn, arg_specs)
+        with open(path, "w") as f:
+            f.write(text)
+        if verbose:
+            print(f"  [lowered] {fname} ({len(text) // 1024} KiB)")
+    with open(os.path.join(out_dir, "kernels.manifest.json"), "w") as f:
+        json.dump({"graphs": manifest}, f, indent=1)
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts")
+    p.add_argument("--model", default=None,
+                   help="only this model (default: all)")
+    p.add_argument("--graph", default=None, help="only this graph key")
+    p.add_argument("--force", action="store_true")
+    p.add_argument("--list", action="store_true")
+    args = p.parse_args(argv)
+
+    if args.list:
+        for name in model.ALL_CONFIGS:
+            print(name)
+            for key in model.default_graphs(name):
+                print(f"  {key}")
+        return 0
+
+    os.makedirs(args.out, exist_ok=True)
+    names = [args.model] if args.model else list(model.ALL_CONFIGS)
+    for name in names:
+        print(f"[model] {name}")
+        emit_model(name, args.out, force=args.force, only_graph=args.graph)
+    if not args.model:
+        print("[kernels]")
+        emit_kernels(args.out, force=args.force)
+        index = {"models": list(model.ALL_CONFIGS),
+                 "eval_batch": model.EVAL_BATCH,
+                 "train_batch": model.TRAIN_BATCH}
+        with open(os.path.join(args.out, "index.json"), "w") as f:
+            json.dump(index, f, indent=1)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,170 @@
+"""L2 model: quantized BERT-style encoder (W4A8) with weights-as-inputs.
+
+Stands in for the paper's BERT-base/large × QQP/SST-5 experiments at a
+CPU-trainable scale (DESIGN.md substitution table). All MVM weight matrices
+(q/k/v/o, FFN, classifier) are RRAM-mapped and drift; embeddings, positional
+encodings, LayerNorm parameters and biases are digital (SRAM) — the standard
+IMC mapping where only matrix-vector products live in crossbars.
+
+Compensation: each linear layer gets a VeRA+ branch computed by the fused
+L1 Pallas kernel on the flattened [B·T, d] activation rows, with the shared
+A_max/B_max sliced to the layer's (cin, cout) exactly as in the CNN case.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from . import quant
+from .kernels import vera_plus as vp_kernel
+
+LN_EPS = 1e-5
+
+
+@dataclasses.dataclass(frozen=True)
+class BertCfg:
+    name: str
+    layers_n: int
+    d_model: int
+    heads: int
+    seq: int
+    vocab: int
+    classes: int
+    w_bits: int = 4
+    a_bits: int = 8
+
+    @property
+    def d_ff(self) -> int:
+        return 4 * self.d_model
+
+    def linear_layers(self) -> List[dict]:
+        """Ordered RRAM linear-layer inventory."""
+        out = []
+        for i in range(self.layers_n):
+            pre = f"l{i}"
+            for nm in ("wq", "wk", "wv", "wo"):
+                out.append({"name": f"{pre}.{nm}", "cin": self.d_model,
+                            "cout": self.d_model})
+            out.append({"name": f"{pre}.ff1", "cin": self.d_model,
+                        "cout": self.d_ff})
+            out.append({"name": f"{pre}.ff2", "cin": self.d_ff,
+                        "cout": self.d_model})
+        out.append({"name": "cls", "cin": self.d_model,
+                    "cout": self.classes})
+        return out
+
+    @property
+    def d_in_max(self) -> int:
+        return max(l["cin"] for l in self.linear_layers())
+
+    @property
+    def d_out_max(self) -> int:
+        return max(l["cout"] for l in self.linear_layers())
+
+
+def deploy_weight_specs(cfg: BertCfg) -> List[dict]:
+    """All deploy weights. RRAM-flagged tensors drift; the rest are digital."""
+    out = [
+        {"name": "tok_emb", "shape": (cfg.vocab, cfg.d_model), "rram": False},
+        {"name": "pos_emb", "shape": (cfg.seq, cfg.d_model), "rram": False},
+    ]
+    for l in cfg.linear_layers():
+        out.append({"name": f"{l['name']}.w",
+                    "shape": (l["cin"], l["cout"]), "rram": True})
+        out.append({"name": f"{l['name']}.bias", "shape": (l["cout"],),
+                    "rram": False})
+    for i in range(cfg.layers_n):
+        for ln in ("ln1", "ln2"):
+            out.append({"name": f"l{i}.{ln}.gamma",
+                        "shape": (cfg.d_model,), "rram": False, "init": 1.0})
+            out.append({"name": f"l{i}.{ln}.beta",
+                        "shape": (cfg.d_model,), "rram": False, "init": 0.0})
+    out.append({"name": "ln_f.gamma", "shape": (cfg.d_model,),
+                "rram": False, "init": 1.0})
+    out.append({"name": "ln_f.beta", "shape": (cfg.d_model,),
+                "rram": False, "init": 0.0})
+    return out
+
+
+# BERT analogs train in deploy form directly (no BN to fold), so the QAT
+# train step shares the deploy weight manifest.
+train_weight_specs = deploy_weight_specs
+
+
+def comp_param_specs(cfg: BertCfg, method: str, rank: int) -> dict:
+    if method != "veraplus":
+        raise ValueError("BERT analogs support the veraplus method only")
+    frozen = [
+        {"name": "A_max", "shape": (rank, cfg.d_in_max)},
+        {"name": "B_max", "shape": (cfg.d_out_max, rank)},
+    ]
+    trainable = []
+    for l in cfg.linear_layers():
+        trainable.append({"name": f"{l['name']}.d", "shape": (rank,)})
+        trainable.append({"name": f"{l['name']}.b", "shape": (l["cout"],)})
+    return {"frozen": frozen, "trainable": trainable}
+
+
+def _ln(x, gamma, beta):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + LN_EPS) * gamma + beta
+
+
+def forward(cfg: BertCfg, weights: Dict[str, jax.Array], tokens,
+            comp=None, qat=False):
+    """Forward pass. `tokens` is int32 [B, T]; returns [B, classes] logits.
+
+    `comp = (method, rank, (A_max, B_max), trainables, block_n)` adds the
+    VeRA+ branch to every linear layer. `qat=True` applies STE weight
+    fake-quant (backbone training); deploy graphs receive already-programmed
+    (drifted) weights and skip it.
+    """
+    b, t = tokens.shape
+
+    def linear(name, cin, cout, xin):
+        """Quantized linear over the last axis, plus compensation branch."""
+        x_q = quant.act_quant(xin, cfg.a_bits)
+        w = weights[f"{name}.w"]
+        if qat:
+            w = quant.weight_quant(w, cfg.w_bits)
+        y = x_q @ w + weights[f"{name}.bias"]
+        if comp is not None:
+            method, rank, frozen, tr, block_n = comp
+            a_max, b_max = frozen
+            rows = x_q.reshape(-1, cin)
+            cy = vp_kernel.vera_plus_apply_diff(
+                rows, a_max[:, :cin], b_max[:cout, :],
+                tr[f"{name}.d"], tr[f"{name}.b"], block_n)
+            y = y + cy.reshape(*y.shape)
+        return y
+
+    h = weights["tok_emb"][tokens] + weights["pos_emb"][None, :, :]
+    dh = cfg.d_model // cfg.heads
+    for i in range(cfg.layers_n):
+        pre = f"l{i}"
+        hn = _ln(h, weights[f"{pre}.ln1.gamma"], weights[f"{pre}.ln1.beta"])
+        q = linear(f"{pre}.wq", cfg.d_model, cfg.d_model, hn)
+        k = linear(f"{pre}.wk", cfg.d_model, cfg.d_model, hn)
+        v = linear(f"{pre}.wv", cfg.d_model, cfg.d_model, hn)
+
+        def split(z):
+            return z.reshape(b, t, cfg.heads, dh).transpose(0, 2, 1, 3)
+
+        att = jnp.einsum("bhqd,bhkd->bhqk", split(q), split(k))
+        att = jax.nn.softmax(att / jnp.sqrt(float(dh)), axis=-1)
+        ctx = jnp.einsum("bhqk,bhkd->bhqd", att, split(v))
+        ctx = ctx.transpose(0, 2, 1, 3).reshape(b, t, cfg.d_model)
+        h = h + linear(f"{pre}.wo", cfg.d_model, cfg.d_model, ctx)
+
+        hn = _ln(h, weights[f"{pre}.ln2.gamma"], weights[f"{pre}.ln2.beta"])
+        ff = jax.nn.gelu(linear(f"{pre}.ff1", cfg.d_model, cfg.d_ff, hn))
+        h = h + linear(f"{pre}.ff2", cfg.d_ff, cfg.d_model, ff)
+
+    h = _ln(h, weights["ln_f.gamma"], weights["ln_f.beta"])
+    pooled = jnp.mean(h, axis=1)
+    return linear("cls", cfg.d_model, cfg.classes, pooled)

@@ -1,0 +1,14 @@
+"""L1 Pallas kernels for the VeRA+ reproduction.
+
+- :mod:`vera_plus`  — fused b⊙(B_R(d⊙(A_R x))) compensation (paper Eq. 8).
+- :mod:`crossbar`   — RRAM-tile int MVM with fused ADC epilogue.
+- :mod:`quantize`   — symmetric fake-quantization (W4A4 / W4A8).
+- :mod:`ref`        — pure-jnp oracles for all of the above.
+
+All kernels lower with ``interpret=True`` so the resulting HLO runs on the
+CPU PJRT client used by the Rust runtime.
+"""
+
+from . import crossbar, quantize, ref, vera_plus  # noqa: F401
+
+__all__ = ["crossbar", "quantize", "ref", "vera_plus"]

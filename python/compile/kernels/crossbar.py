@@ -1,0 +1,82 @@
+"""L1 Pallas kernel: RRAM crossbar MVM emulation with fused ADC epilogue.
+
+Models the analog in-memory matrix-vector multiply of one RRAM tile the way
+the digital system observes it: integer-domain accumulation (bitline current
+summing over the rows), per-column ADC clipping + rounding, then affine
+dequantization back to fp32.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the 256×512 crossbar tile
+becomes an MXU-shaped int-domain matmul — the int4 weight grid is held
+VMEM-resident like conductances held in the array, activations stream through
+in row blocks, accumulation happens in int32 (the bitline), and the ADC
+transfer function is fused into the epilogue instead of being a separate
+pass over an HBM-spilled accumulator.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _crossbar_kernel(adc_bits, rows, x_ref, w_ref, xs_ref, ws_ref, o_ref):
+    x = x_ref[...].astype(jnp.int32)          # [bn, rows]
+    w = w_ref[...].astype(jnp.int32)          # [rows, cols]
+    acc = jax.lax.dot_general(                 # bitline accumulate, int32
+        x, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    # Fused ADC epilogue: symmetric clip + round to `adc_bits` codes sized
+    # for the worst-case column swing (rows × 7 × 7 for int4 × int4).
+    lim = 2 ** (adc_bits - 1) - 1
+    full_scale = jnp.float32(rows * 7 * 7)
+    lsb = full_scale / jnp.float32(lim)
+    code = jnp.clip(jnp.round(acc.astype(jnp.float32) / lsb), -lim, lim)
+    o_ref[...] = code * lsb * xs_ref[0] * ws_ref[0]
+
+
+@functools.partial(jax.jit, static_argnames=("adc_bits", "block_n"))
+def crossbar_mvm(x_int, w_int, x_scale, w_scale, *, adc_bits=8, block_n=128):
+    """Emulate one crossbar tile MVM: ``dequant(ADC(x_int @ w_int))``.
+
+    Args:
+      x_int:  [n, rows] int8 (values on the signed int4 activation grid).
+      w_int:  [rows, cols] int8 (differential-pair-folded signed int4
+              weights, i.e. G+ − G− expressed on the weight grid).
+      x_scale, w_scale: scalar fp32 dequantization scales.
+      adc_bits: ADC resolution (paper-era macros use 6–8 bit ADCs).
+      block_n: activation rows per grid step.
+
+    Returns:
+      [n, cols] fp32, equal (1e-4) to ``ref.crossbar_mvm``.
+    """
+    n, rows = x_int.shape
+    rows_w, cols = w_int.shape
+    if rows != rows_w:
+        raise ValueError(f"x rows {rows} != w rows {rows_w}")
+    xs = jnp.asarray(x_scale, jnp.float32).reshape(1)
+    ws = jnp.asarray(w_scale, jnp.float32).reshape(1)
+
+    bn = min(block_n, max(n, 1))
+    n_pad = (-n) % bn
+    xp = jnp.pad(x_int, ((0, n_pad), (0, 0))) if n_pad else x_int
+    grid = (xp.shape[0] // bn,)
+
+    kern = functools.partial(_crossbar_kernel, adc_bits, rows)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, rows), lambda i: (i, 0)),     # x streams
+            pl.BlockSpec((rows, cols), lambda i: (0, 0)),   # weights resident
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bn, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], cols), jnp.float32),
+        interpret=True,
+    )(xp, w_int, xs, ws)
+    return out[:n] if n_pad else out

@@ -1,0 +1,53 @@
+"""L1 Pallas kernel: symmetric uniform fake-quantization (W4A4 / W4A8).
+
+Elementwise quantize-dequantize used on the activation path of the quantized
+models. Tiled over flattened elements; the scale is a broadcast scalar kept
+in VMEM for the whole sweep.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fake_quant_kernel(lim, x_ref, s_ref, o_ref):
+    x = x_ref[...]
+    s = s_ref[0]
+    q = jnp.clip(jnp.round(x / s), -lim, lim)
+    o_ref[...] = q * s
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block"))
+def fake_quant(x, scale, *, bits=4, block=1024):
+    """Quantize-dequantize ``x`` onto the symmetric ``bits`` grid.
+
+    Matches ``ref.fake_quant`` exactly (same rounding mode). Works on any
+    shape; internally flattens and tiles.
+    """
+    lim = float(2 ** (bits - 1) - 1)
+    shape = x.shape
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    bn = min(block, max(n, 1))
+    n_pad = (-n) % bn
+    xp = jnp.pad(flat, (0, n_pad)) if n_pad else flat
+    s = jnp.asarray(scale, jnp.float32).reshape(1)
+
+    kern = functools.partial(_fake_quant_kernel, lim)
+    out = pl.pallas_call(
+        kern,
+        grid=(xp.shape[0] // bn,),
+        in_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0],), jnp.float32),
+        interpret=True,
+    )(xp, s)
+    out = out[:n] if n_pad else out
+    return out.reshape(shape)

@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground-truth implementations used by the pytest/hypothesis
+suite (``python/tests/test_kernels.py``) to validate the Pallas kernels, and
+they double as the drop-in fallback the L2 model builders can use when a
+graph variant does not route through Pallas (e.g. reference fwd graphs).
+
+Everything here is shape-polymorphic pure jnp — no pallas, no side effects.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def vera_plus_apply(x, a_r, b_r, d, b):
+    """VeRA+ digital compensation:  y = b ⊙ (B_R (d ⊙ (A_R x))).
+
+    Args:
+      x:   [n, c_in]   activations (rows = batch·spatial positions).
+      a_r: [r, c_in]   shared random down-projection slice for this layer.
+      b_r: [c_out, r]  shared random up-projection slice for this layer.
+      d:   [r]         drift-level-specific scaling vector (paper Eq. 8).
+      b:   [c_out]     drift-level-specific scaling vector (paper Eq. 8).
+
+    Returns:
+      [n, c_out] compensation output, fp32.
+    """
+    t = x @ a_r.T            # [n, r]
+    t = t * d[None, :]       # d ⊙ (A_R x)
+    y = t @ b_r.T            # [n, c_out]
+    return y * b[None, :]    # b ⊙ (...)
+
+
+def crossbar_mvm(x_int, w_int, x_scale, w_scale, adc_bits=8):
+    """Crossbar (RRAM tile) MVM emulation with per-column ADC quantization.
+
+    Models one analog in-memory matrix-vector multiply the way the digital
+    simulator sees it: int-domain accumulate (bitline current summing),
+    symmetric ADC clipping/rounding per column, then affine dequantization.
+
+    Args:
+      x_int:  [n, rows] int8-valued (activations on the int4/int8 grid).
+      w_int:  [rows, cols] int8-valued (differential conductance pairs
+              already folded to signed weights on the int4 grid).
+      x_scale: scalar fp32 activation dequant scale.
+      w_scale: scalar fp32 weight dequant scale.
+      adc_bits: ADC resolution; accumulated values are clipped to the
+              symmetric range of this many bits before dequantization.
+
+    Returns:
+      [n, cols] fp32 dequantized MVM result.
+    """
+    acc = jnp.matmul(
+        x_int.astype(jnp.int32), w_int.astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+    # Per-column ADC: the bitline current is digitized with a symmetric
+    # clipping range scaled so the ADC covers the worst-case column swing.
+    lim = jnp.int32(2 ** (adc_bits - 1) - 1)
+    rows = w_int.shape[0]
+    # Full-scale design point: every row contributes a max-magnitude product.
+    full_scale = jnp.float32(rows * 7 * 7)
+    lsb = full_scale / jnp.float32(lim)
+    code = jnp.clip(jnp.round(acc.astype(jnp.float32) / lsb), -lim, lim)
+    return code * lsb * x_scale * w_scale
+
+
+def fake_quant(x, scale, bits=4):
+    """Symmetric uniform fake-quantization (paper: W4A4 / W4A8 setting).
+
+    q = clip(round(x / scale), -(2^{bits-1}-1), 2^{bits-1}-1) * scale
+    """
+    lim = float(2 ** (bits - 1) - 1)
+    q = jnp.clip(jnp.round(x / scale), -lim, lim)
+    return q * scale
+
+
+def abs_max_scale(x, bits=4):
+    """Per-tensor dynamic quantization scale: max|x| mapped to grid edge."""
+    lim = float(2 ** (bits - 1) - 1)
+    return jnp.maximum(jnp.max(jnp.abs(x)), 1e-8) / lim

@@ -1,0 +1,146 @@
+"""L1 Pallas kernel: fused VeRA+ digital compensation.
+
+Computes the paper's Eq. (8) correction  y = b ⊙ (B_R (d ⊙ (A_R x)))  for a
+block of activation rows, with both rank-r matmuls and both diagonal scalings
+fused in one kernel so the rank-r intermediate never leaves VMEM.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): on a real TPU the two matmuls
+are MXU ops with fused vector epilogues; `A_R`/`B_R` slices stay VMEM-resident
+(they are shared across layers and drift levels — the reason VeRA+ fits the
+SRAM-IMC budget), activations stream through in `block_n`-row tiles chosen as
+a multiple of the 128-lane register width. The kernel is always lowered with
+``interpret=True`` here because the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU performance is estimated analytically in
+EXPERIMENTS.md §Perf from the VMEM footprint this BlockSpec implies.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _vera_plus_kernel(x_ref, a_ref, b_ref, d_ref, bvec_ref, o_ref):
+    """One grid step: a [block_n, c_in] tile of x → [block_n, c_out] of y."""
+    x = x_ref[...]                       # [bn, c_in]
+    a = a_ref[...]                       # [r, c_in]
+    bmat = b_ref[...]                    # [c_out, r]
+    d = d_ref[...]                       # [r]
+    bvec = bvec_ref[...]                 # [c_out]
+    # Down-projection + d-scaling. dot_general keeps fp32 accumulation.
+    t = jax.lax.dot_general(
+        x, a, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                    # [bn, r]
+    t = t * d[None, :]
+    # Up-projection + b-scaling; the [bn, r] intermediate stays in VMEM.
+    y = jax.lax.dot_general(
+        t, bmat, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                    # [bn, c_out]
+    o_ref[...] = y * bvec[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def vera_plus_apply(x, a_r, b_r, d, b, *, block_n=128):
+    """Apply the VeRA+ compensation branch to a batch of activation rows.
+
+    Args:
+      x:   [n, c_in] fp32 activations (batch·spatial positions as rows).
+      a_r: [r, c_in] shared down-projection slice (frozen).
+      b_r: [c_out, r] shared up-projection slice (frozen).
+      d:   [r] drift-specific scaling vector.
+      b:   [c_out] drift-specific scaling vector.
+      block_n: rows per grid step; multiples of 128 map onto TPU lanes.
+
+    Returns:
+      [n, c_out] fp32 compensation values, numerically equal (1e-5) to
+      ``ref.vera_plus_apply``.
+    """
+    n, c_in = x.shape
+    r = a_r.shape[0]
+    c_out = b_r.shape[0]
+    if a_r.shape != (r, c_in):
+        raise ValueError(f"a_r shape {a_r.shape} != ({r},{c_in})")
+    if d.shape != (r,):
+        raise ValueError(f"d shape {d.shape} != ({r},)")
+    if b.shape != (c_out,):
+        raise ValueError(f"b shape {b.shape} != ({c_out},)")
+
+    # Pad the row axis up to a whole number of blocks.
+    bn = min(block_n, max(n, 1))
+    n_pad = (-n) % bn
+    xp = jnp.pad(x, ((0, n_pad), (0, 0))) if n_pad else x
+    grid = (xp.shape[0] // bn,)
+
+    out = pl.pallas_call(
+        _vera_plus_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, c_in), lambda i: (i, 0)),       # x streams
+            pl.BlockSpec((r, c_in), lambda i: (0, 0)),        # A_R resident
+            pl.BlockSpec((c_out, r), lambda i: (0, 0)),       # B_R resident
+            pl.BlockSpec((r,), lambda i: (0,)),               # d resident
+            pl.BlockSpec((c_out,), lambda i: (0,)),           # b resident
+        ],
+        out_specs=pl.BlockSpec((bn, c_out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], c_out), jnp.float32),
+        interpret=True,
+    )(xp, a_r, b_r, d, b)
+    return out[:n] if n_pad else out
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def vera_plus_apply_diff(x, a_r, b_r, d, b, block_n=128):
+    """Differentiable wrapper around :func:`vera_plus_apply`.
+
+    Pallas kernels carry no autodiff rule, so the compensation-training
+    graphs (paper Alg. 1 inner loop) use this custom-VJP wrapper: the
+    forward pass runs the fused Pallas kernel, the backward pass is the
+    hand-derived jnp VJP of  y = b ⊙ ((x Aᵀ ⊙ d) Bᵀ). Full gradients are
+    produced for every operand (including the frozen projections, so the
+    wrapper stays correct if a caller ever unfreezes them).
+    """
+    return vera_plus_apply(x, a_r, b_r, d, b, block_n=block_n)
+
+
+def _vera_fwd(x, a_r, b_r, d, b, block_n):
+    y = vera_plus_apply(x, a_r, b_r, d, b, block_n=block_n)
+    return y, (x, a_r, b_r, d, b)
+
+
+def _vera_bwd(block_n, res, g):
+    x, a_r, b_r, d, b = res
+    s = x @ a_r.T                # [n, r]
+    t = s * d[None, :]           # [n, r]
+    u = t @ b_r.T                # [n, c_out]
+    db = jnp.sum(g * u, axis=0)                 # [c_out]
+    gb = g * b[None, :]                         # [n, c_out]
+    d_bmat = gb.T @ t                           # [c_out, r]
+    dt = gb @ b_r                               # [n, r]
+    dd = jnp.sum(dt * s, axis=0)                # [r]
+    ds = dt * d[None, :]                        # [n, r]
+    d_amat = ds.T @ x                           # [r, c_in]
+    dx = ds @ a_r                               # [n, c_in]
+    return dx, d_amat, d_bmat, dd, db
+
+
+vera_plus_apply_diff.defvjp(_vera_fwd, _vera_bwd)
+
+
+def vera_plus_conv1x1(x_nhwc, a_r, b_r, d, b, *, block_n=128):
+    """VeRA+ 1×1-kernel compensation for a conv layer (paper §III-C).
+
+    The paper's CNN-specific scheme generates compensation in 1×1 form:
+    every spatial position is corrected independently, so an NHWC activation
+    tensor is flattened to rows, pushed through :func:`vera_plus_apply`, and
+    reshaped back. This is the `9×` cheaper alternative to lowering the full
+    K×K kernel the way official LoRA/VeRA for CNNs do.
+    """
+    n, h, w, c_in = x_nhwc.shape
+    rows = x_nhwc.reshape(n * h * w, c_in)
+    y = vera_plus_apply_diff(rows, a_r, b_r, d, b, block_n)
+    return y.reshape(n, h, w, b_r.shape[0])

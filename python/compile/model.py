@@ -1,0 +1,374 @@
+"""L2 graph registry: model configs + AOT graph builders.
+
+Each *graph* is a pure jax function over flat positional tensor arguments
+(weights first, in manifest order, then batch inputs, then scalars). The
+flat calling convention is the contract with the Rust runtime: the manifest
+JSON written by :mod:`compile.aot` records the exact argument order, shapes
+and dtypes for every graph, and the Rust `runtime::artifact` module marshals
+buffers accordingly. Python never runs at deployment time.
+
+Graph inventory per model (subset depends on config, see `DEFAULT_GRAPHS`):
+
+- ``fwd_b{N}``                      — plain deploy forward, batch N.
+- ``comp_{method}_r{r}_b{N}``       — deploy forward + compensation branch.
+- ``train_backbone``                — QAT SGD-momentum step (batch 64).
+- ``train_{method}_r{r}``           — compensation-vector SGD-momentum step
+                                      on frozen (drifted) deploy weights
+                                      (paper Alg. 1 lines 7–12).
+- ``bn_fwd``                        — unfolded-BN forward returning batch
+                                      statistics (BN-calibration baseline).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import bert, resnet
+
+# Compensation-train and backbone-train batch size (paper §III-D: 64).
+TRAIN_BATCH = 64
+# Evaluation batch used by EvalStats on the Rust side.
+EVAL_BATCH = 256
+# Pallas block size for model-graph kernels: big blocks keep the lowered
+# grid loop short for the CPU PJRT backend (64 sequential 1024-row blocks
+# per layer doubled end-to-end latency — EXPERIMENTS.md §Perf); the TPU
+# design point (128-row tiles sized for VMEM) is covered by the standalone
+# kernel artifact + unit tests.
+MODEL_BLOCK_N = 16384
+
+CNN_CONFIGS: Dict[str, resnet.ResNetCfg] = {
+    # CIFAR-10 / CIFAR-100 analogs (DESIGN.md substitution table): same
+    # 6n+2 depth structure as the paper's ResNet-20/32 at reduced width
+    # and resolution so the full drift×rank×method grid trains on CPU.
+    "resnet20_easy": resnet.ResNetCfg("resnet20_easy", 20, (8, 16, 32), 16, 10),
+    "resnet20_hard": resnet.ResNetCfg("resnet20_hard", 20, (8, 16, 32), 16, 100),
+    "resnet32_easy": resnet.ResNetCfg("resnet32_easy", 32, (8, 16, 32), 16, 10),
+    "resnet32_hard": resnet.ResNetCfg("resnet32_hard", 32, (8, 16, 32), 16, 100),
+    # ImageNet-1K/ResNet-50 analog: wider + harder task.
+    "resnet_large_vhard": resnet.ResNetCfg(
+        "resnet_large_vhard", 20, (16, 32, 64), 16, 100),
+}
+
+BERT_CONFIGS: Dict[str, bert.BertCfg] = {
+    "bert_tiny_qqp": bert.BertCfg("bert_tiny_qqp", 2, 64, 2, 32, 512, 2),
+    "bert_tiny_sst": bert.BertCfg("bert_tiny_sst", 2, 64, 2, 32, 512, 5),
+    "bert_small_qqp": bert.BertCfg("bert_small_qqp", 4, 96, 4, 32, 512, 2),
+    "bert_small_sst": bert.BertCfg("bert_small_sst", 4, 96, 4, 32, 512, 5),
+}
+
+ALL_CONFIGS = {**CNN_CONFIGS, **BERT_CONFIGS}
+
+
+def is_cnn(name: str) -> bool:
+    return name in CNN_CONFIGS
+
+
+# --------------------------------------------------------------------------
+# Spec plumbing: flat-arg <-> dict marshalling.
+# --------------------------------------------------------------------------
+
+def _spec_list(specs: List[dict], dtype=jnp.float32):
+    return [jax.ShapeDtypeStruct(tuple(s["shape"]), dtype) for s in specs]
+
+
+def _pack(names: List[str], args) -> Dict[str, jax.Array]:
+    return dict(zip(names, args))
+
+
+def _ce_loss(logits, labels):
+    logz = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logz, labels[:, None], axis=1))
+
+
+def _batch_specs(cfg, batch):
+    if isinstance(cfg, resnet.ResNetCfg):
+        return jax.ShapeDtypeStruct((batch, cfg.image, cfg.image, 3),
+                                    jnp.float32)
+    return jax.ShapeDtypeStruct((batch, cfg.seq), jnp.int32)
+
+
+def _deploy_specs(cfg):
+    if isinstance(cfg, resnet.ResNetCfg):
+        return resnet.deploy_weight_specs(cfg)
+    return bert.deploy_weight_specs(cfg)
+
+
+def _train_specs(cfg):
+    if isinstance(cfg, resnet.ResNetCfg):
+        return resnet.train_weight_specs(cfg)
+    return bert.train_weight_specs(cfg)
+
+
+def _comp_specs(cfg, method, rank):
+    if isinstance(cfg, resnet.ResNetCfg):
+        return resnet.comp_param_specs(cfg, method, rank)
+    return bert.comp_param_specs(cfg, method, rank)
+
+
+def _fwd(cfg, weights, x, comp=None):
+    if isinstance(cfg, resnet.ResNetCfg):
+        return resnet.forward_deploy(cfg, weights, x, comp=comp)
+    return bert.forward(cfg, weights, x, comp=comp, qat=False)
+
+
+# --------------------------------------------------------------------------
+# Graph builders. Each returns (fn, arg_specs, input_names, output_names).
+# --------------------------------------------------------------------------
+
+def build_fwd(cfg, batch: int):
+    specs = _deploy_specs(cfg)
+    names = [s["name"] for s in specs]
+
+    def fn(*args):
+        ws = _pack(names, args[: len(names)])
+        x = args[len(names)]
+        return (_fwd(cfg, ws, x),)
+
+    arg_specs = _spec_list(specs) + [_batch_specs(cfg, batch)]
+    return fn, arg_specs, names + ["x"], ["logits"]
+
+
+def build_comp_fwd(cfg, method: str, rank: int, batch: int):
+    specs = _deploy_specs(cfg)
+    cspec = _comp_specs(cfg, method, rank)
+    names = [s["name"] for s in specs]
+    fnames = [s["name"] for s in cspec["frozen"]]
+    tnames = [s["name"] for s in cspec["trainable"]]
+
+    def fn(*args):
+        i = 0
+        ws = _pack(names, args[i: i + len(names)]); i += len(names)
+        frozen = args[i: i + len(fnames)]; i += len(fnames)
+        tr = _pack(tnames, args[i: i + len(tnames)]); i += len(tnames)
+        x = args[i]
+        comp = (method, rank, frozen, tr, MODEL_BLOCK_N)
+        return (_fwd(cfg, ws, x, comp=comp),)
+
+    arg_specs = (_spec_list(specs) + _spec_list(cspec["frozen"])
+                 + _spec_list(cspec["trainable"])
+                 + [_batch_specs(cfg, batch)])
+    return fn, arg_specs, names + fnames + tnames + ["x"], ["logits"]
+
+
+def build_train_comp(cfg, method: str, rank: int, batch: int = TRAIN_BATCH):
+    """Paper Alg. 1 lines 7–12: one SGD-momentum step on the compensation
+    trainables with the (drifted) backbone frozen."""
+    specs = _deploy_specs(cfg)
+    cspec = _comp_specs(cfg, method, rank)
+    names = [s["name"] for s in specs]
+    fnames = [s["name"] for s in cspec["frozen"]]
+    tnames = [s["name"] for s in cspec["trainable"]]
+
+    def fn(*args):
+        i = 0
+        ws = _pack(names, args[i: i + len(names)]); i += len(names)
+        frozen = args[i: i + len(fnames)]; i += len(fnames)
+        tr_list = list(args[i: i + len(tnames)]); i += len(tnames)
+        mom = list(args[i: i + len(tnames)]); i += len(tnames)
+        x, y, lr = args[i], args[i + 1], args[i + 2]
+
+        def loss_fn(tr_flat):
+            tr = _pack(tnames, tr_flat)
+            comp = (method, rank, frozen, tr, MODEL_BLOCK_N)
+            return _ce_loss(_fwd(cfg, ws, x, comp=comp), y)
+
+        loss, grads = jax.value_and_grad(loss_fn)(tr_list)
+        # Global-norm gradient clipping: the (b, d) bilinear branch is
+        # prone to runaway SGD-momentum trajectories once |b|·|d| grows;
+        # clipping to unit global norm keeps 3-epoch training stable
+        # across the whole drift grid.
+        gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in grads) + 1e-12)
+        clip = jnp.minimum(1.0, 1.0 / gnorm)
+        grads = [g * clip for g in grads]
+        new_mom = [0.9 * m + g for m, g in zip(mom, grads)]
+        new_tr = [t - lr * m for t, m in zip(tr_list, new_mom)]
+        return tuple(new_tr) + tuple(new_mom) + (loss,)
+
+    arg_specs = (_spec_list(specs) + _spec_list(cspec["frozen"])
+                 + _spec_list(cspec["trainable"])
+                 + _spec_list(cspec["trainable"])   # momenta
+                 + [_batch_specs(cfg, batch),
+                    jax.ShapeDtypeStruct((batch,), jnp.int32),
+                    jax.ShapeDtypeStruct((), jnp.float32)])
+    in_names = (names + fnames + tnames + [f"m:{n}" for n in tnames]
+                + ["x", "y", "lr"])
+    out_names = tnames + [f"m:{n}" for n in tnames] + ["loss"]
+    return fn, arg_specs, in_names, out_names
+
+
+def build_train_backbone(cfg, batch: int = TRAIN_BATCH):
+    """One QAT SGD-momentum step on the backbone (pre-deployment training)."""
+    specs = _train_specs(cfg)
+    names = [s["name"] for s in specs]
+    grad_mask = [s.get("grad", True) for s in specs]
+    gnames = [n for n, g in zip(names, grad_mask) if g]
+
+    def fn(*args):
+        i = 0
+        params = _pack(names, args[i: i + len(names)]); i += len(names)
+        mom = _pack(gnames, args[i: i + len(gnames)]); i += len(gnames)
+        x, y, lr = args[i], args[i + 1], args[i + 2]
+
+        if isinstance(cfg, resnet.ResNetCfg):
+            def loss_fn(gparams):
+                p = dict(params)
+                p.update(gparams)
+                logits, new_stats, _ = resnet.forward_train(cfg, p, x)
+                return _ce_loss(logits, y), new_stats
+            (loss, new_stats), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)({n: params[n] for n in gnames})
+        else:
+            def loss_fn(gparams):
+                p = dict(params)
+                p.update(gparams)
+                logits = bert.forward(cfg, p, x, qat=True)
+                return _ce_loss(logits, y), {}
+            (loss, new_stats), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)({n: params[n] for n in gnames})
+
+        new_mom = {n: 0.9 * mom[n] + grads[n] for n in gnames}
+        new_params = dict(params)
+        for n in gnames:
+            new_params[n] = params[n] - lr * new_mom[n]
+        new_params.update(new_stats)   # BN running-stat EMA (CNNs)
+        return (tuple(new_params[n] for n in names)
+                + tuple(new_mom[n] for n in gnames) + (loss,))
+
+    arg_specs = (_spec_list(specs)
+                 + _spec_list([s for s in specs if s.get("grad", True)])
+                 + [_batch_specs(cfg, batch),
+                    jax.ShapeDtypeStruct((batch,), jnp.int32),
+                    jax.ShapeDtypeStruct((), jnp.float32)])
+    in_names = (names + [f"m:{n}" for n in gnames] + ["x", "y", "lr"])
+    out_names = names + [f"m:{n}" for n in gnames] + ["loss"]
+    return fn, arg_specs, in_names, out_names
+
+
+def build_train_fwd(cfg, batch: int):
+    """Inference in *train form* (CNN: BN on running stats, QAT weights).
+
+    Used to evaluate the backbone during/after QAT training, before folding.
+    """
+    specs = _train_specs(cfg)
+    names = [s["name"] for s in specs]
+
+    def fn(*args):
+        params = _pack(names, args[: len(names)])
+        x = args[len(names)]
+        if isinstance(cfg, resnet.ResNetCfg):
+            logits, _, _ = resnet.forward_train(cfg, params, x,
+                                                update_stats=False)
+        else:
+            logits = bert.forward(cfg, params, x, qat=True)
+        return (logits,)
+
+    arg_specs = _spec_list(specs) + [_batch_specs(cfg, batch)]
+    return fn, arg_specs, names + ["x"], ["logits"]
+
+
+def build_bn_fwd(cfg, batch: int):
+    """BN-calibration baseline: unfolded forward returning batch stats."""
+    assert isinstance(cfg, resnet.ResNetCfg)
+    specs = _train_specs(cfg)
+    names = [s["name"] for s in specs]
+    conv_names = [l.name for l in cfg.layers() if l.kind == "conv"]
+
+    def fn(*args):
+        params = _pack(names, args[: len(names)])
+        x = args[len(names)]
+        logits, collected = resnet.forward_bn_deploy(cfg, params, x)
+        return (logits,) + tuple(collected)
+
+    arg_specs = _spec_list(specs) + [_batch_specs(cfg, batch)]
+    out_names = ["logits"]
+    for n in conv_names:
+        out_names += [f"{n}.mean", f"{n}.var"]
+    return fn, arg_specs, names + ["x"], out_names
+
+
+def build_kernel_vera(n=8192, cin=64, cout=128, rank=8, block_n=128):
+    """Standalone L1 kernel artifact (runtime unit tests + hotpath bench)."""
+    from .kernels import vera_plus as vp
+
+    def fn(x, a, b, d, bv):
+        return (vp.vera_plus_apply(x, a, b, d, bv, block_n=block_n),)
+
+    arg_specs = [
+        jax.ShapeDtypeStruct((n, cin), jnp.float32),
+        jax.ShapeDtypeStruct((rank, cin), jnp.float32),
+        jax.ShapeDtypeStruct((cout, rank), jnp.float32),
+        jax.ShapeDtypeStruct((rank,), jnp.float32),
+        jax.ShapeDtypeStruct((cout,), jnp.float32),
+    ]
+    return fn, arg_specs, ["x", "A", "B", "d", "b"], ["y"]
+
+
+def build_kernel_crossbar(n=128, rows=256, cols=512, adc_bits=8):
+    """Standalone crossbar-tile artifact (256×512, the paper's array size)."""
+    from .kernels import crossbar as cb
+
+    def fn(x, w, xs, ws):
+        return (cb.crossbar_mvm(x, w, xs, ws, adc_bits=adc_bits,
+                                block_n=n),)
+
+    arg_specs = [
+        jax.ShapeDtypeStruct((n, rows), jnp.int8),
+        jax.ShapeDtypeStruct((rows, cols), jnp.int8),
+        jax.ShapeDtypeStruct((), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.float32),
+    ]
+    return fn, arg_specs, ["x_int", "w_int", "x_scale", "w_scale"], ["y"]
+
+
+# --------------------------------------------------------------------------
+# Default artifact set (what `make artifacts` produces).
+# --------------------------------------------------------------------------
+
+def default_graphs(model: str) -> Dict[str, Tuple]:
+    """graph_key -> (builder_name, kwargs). Consumed by compile.aot."""
+    cfg = ALL_CONFIGS[model]
+    g: Dict[str, Tuple] = {
+        f"fwd_b{EVAL_BATCH}": ("fwd", {"batch": EVAL_BATCH}),
+        "train_backbone": ("train_backbone", {}),
+        f"train_fwd_b{EVAL_BATCH}": ("train_fwd", {"batch": EVAL_BATCH}),
+        f"comp_veraplus_r1_b{EVAL_BATCH}": (
+            "comp_fwd", {"method": "veraplus", "rank": 1,
+                         "batch": EVAL_BATCH}),
+        "train_veraplus_r1": ("train_comp", {"method": "veraplus",
+                                             "rank": 1}),
+    }
+    if model in ("resnet20_easy", "resnet20_hard"):
+        for r in (2, 4, 6, 8):
+            g[f"comp_veraplus_r{r}_b{EVAL_BATCH}"] = (
+                "comp_fwd", {"method": "veraplus", "rank": r,
+                             "batch": EVAL_BATCH})
+            g[f"train_veraplus_r{r}"] = (
+                "train_comp", {"method": "veraplus", "rank": r})
+        for method in ("vera", "lora"):
+            for r in (1, 6):
+                g[f"comp_{method}_r{r}_b{EVAL_BATCH}"] = (
+                    "comp_fwd", {"method": method, "rank": r,
+                                 "batch": EVAL_BATCH})
+                g[f"train_{method}_r{r}"] = (
+                    "train_comp", {"method": method, "rank": r})
+    if model == "resnet20_easy":
+        g[f"bn_fwd_b{EVAL_BATCH}"] = ("bn_fwd", {"batch": EVAL_BATCH})
+        for b in (1, 32):
+            g[f"fwd_b{b}"] = ("fwd", {"batch": b})
+            g[f"comp_veraplus_r1_b{b}"] = (
+                "comp_fwd", {"method": "veraplus", "rank": 1, "batch": b})
+    _ = cfg
+    return g
+
+
+BUILDERS = {
+    "fwd": build_fwd,
+    "comp_fwd": build_comp_fwd,
+    "train_comp": build_train_comp,
+    "train_backbone": build_train_backbone,
+    "train_fwd": build_train_fwd,
+    "bn_fwd": build_bn_fwd,
+}

@@ -1,0 +1,51 @@
+"""Quantization-aware-training helpers (paper §III-D: QAT per Jacob et al.).
+
+The backbone is trained W4A4 (CNNs) / W4A8 (BERT analogs) with symmetric
+uniform fake-quantization and straight-through-estimator gradients; after
+training the Rust side snaps weights onto the int4 grid and maps them to
+differential conductance pairs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+
+
+def ste_fake_quant(x, bits):
+    """Fake-quantize with a straight-through gradient (identity backward)."""
+    scale = ref.abs_max_scale(jax.lax.stop_gradient(x), bits)
+    fq = ref.fake_quant(x, scale, bits)
+    return x + jax.lax.stop_gradient(fq - x)
+
+
+def act_quant(x, bits):
+    """Activation-path quantization (the crossbar's input DAC grid).
+
+    Per-sample abs-max scale (axis 0 = batch): each inference ranges its
+    own DAC, so batched and single-request execution produce identical
+    numerics for the same sample — a requirement for the Rust dynamic
+    batcher. Straight-through gradient.
+    """
+    lim = float(2 ** (bits - 1) - 1)
+    axes = tuple(range(1, x.ndim))
+    amax = jnp.max(jnp.abs(jax.lax.stop_gradient(x)), axis=axes,
+                   keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / lim
+    q = jnp.clip(jnp.round(x / scale), -lim, lim) * scale
+    return x + jax.lax.stop_gradient(q - x)
+
+
+def weight_quant(w, bits):
+    """Weight-path QAT quantization (what programming will snap onto)."""
+    return ste_fake_quant(w, bits)
+
+
+def quantize_to_grid(w, bits=4):
+    """Hard-quantize to (code, scale): what actually gets programmed."""
+    scale = ref.abs_max_scale(w, bits)
+    lim = 2 ** (bits - 1) - 1
+    code = jnp.clip(jnp.round(w / scale), -lim, lim).astype(jnp.int8)
+    return code, scale

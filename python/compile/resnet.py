@@ -1,0 +1,362 @@
+"""L2 model: quantized ResNet family (CIFAR-style) with weights-as-inputs.
+
+Every graph in this module takes the network weights as *arguments* rather
+than baked-in constants: the Rust coordinator owns the RRAM array simulator
+and injects drifted effective weights into the same compiled executable for
+every drift time / instance (DESIGN.md "weights-as-inputs").
+
+Two parameterizations exist:
+
+- **train form** — conv weights + BatchNorm (γ, β, running µ, running σ²),
+  used by the QAT backbone train step. BN runs on batch statistics.
+- **deploy form** — BN folded into per-layer (w, bias). Folding happens on
+  the Rust side before programming (`rram::mapping::fold_bn`); all deploy
+  graphs (plain fwd, compensated fwd, compensation train step) consume the
+  folded form. Weight tensors marked `rram` in the manifest drift; biases
+  are digital.
+
+Compensation branches:
+
+- ``veraplus`` — paper §III-C: globally shared A_max/B_max sliced per layer,
+  1×1 kernel scheme, per-layer per-drift-level vectors (b, d). Forward goes
+  through the fused L1 Pallas kernel (:func:`kernels.vera_plus
+  .vera_plus_conv1x1`).
+- ``vera``     — shared K×K down-projection + shared 1×1 up-projection with
+  per-layer (b, d): the VeRA baseline adapted to CNNs the official way
+  (K×K lowering), 9× more first-stage compute than veraplus.
+- ``lora``     — per-layer trainable (A, B) pair: K×K conv to rank r, then
+  1×1 conv to C_out. The heavyweight baseline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from . import quant
+from .kernels import vera_plus as vp_kernel
+
+BN_EPS = 1e-5
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """One compensation-eligible (= RRAM-mapped) layer."""
+
+    name: str
+    kind: str          # "conv" | "linear"
+    cin: int
+    cout: int
+    k: int             # kernel size (1 for linear)
+    stride: int
+    hw_in: int         # input spatial side (1 for linear)
+    hw_out: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ResNetCfg:
+    name: str
+    depth: int                 # 6n+2
+    widths: tuple              # per-stage channel widths
+    image: int                 # input spatial side
+    classes: int
+    w_bits: int = 4
+    a_bits: int = 4
+
+    @property
+    def blocks_per_stage(self) -> int:
+        assert (self.depth - 2) % 6 == 0, "depth must be 6n+2"
+        return (self.depth - 2) // 6
+
+    def layers(self) -> List[LayerSpec]:
+        """Ordered RRAM layer inventory (matches graph weight order)."""
+        specs = [LayerSpec("stem", "conv", 3, self.widths[0], 3, 1,
+                           self.image, self.image)]
+        hw = self.image
+        cin = self.widths[0]
+        for s, width in enumerate(self.widths):
+            for b in range(self.blocks_per_stage):
+                stride = 2 if (s > 0 and b == 0) else 1
+                hw_out = hw // stride
+                pre = f"s{s}b{b}"
+                specs.append(LayerSpec(f"{pre}.conv1", "conv", cin, width,
+                                       3, stride, hw, hw_out))
+                specs.append(LayerSpec(f"{pre}.conv2", "conv", width, width,
+                                       3, 1, hw_out, hw_out))
+                if stride != 1 or cin != width:
+                    specs.append(LayerSpec(f"{pre}.down", "conv", cin, width,
+                                           1, stride, hw, hw_out))
+                cin = width
+                hw = hw_out
+        specs.append(LayerSpec("fc", "linear", self.widths[-1], self.classes,
+                               1, 1, 1, 1))
+        return specs
+
+    @property
+    def d_in_max(self) -> int:
+        return max(l.cin for l in self.layers())
+
+    @property
+    def d_out_max(self) -> int:
+        return max(l.cout for l in self.layers())
+
+
+# --------------------------------------------------------------------------
+# Parameter manifests (name → shape), in graph argument order.
+# --------------------------------------------------------------------------
+
+def deploy_weight_specs(cfg: ResNetCfg) -> List[dict]:
+    """Folded deploy weights: per layer (w, bias). Conv weights are HWIO."""
+    out = []
+    for l in cfg.layers():
+        if l.kind == "conv":
+            shape = (l.k, l.k, l.cin, l.cout)
+        else:
+            shape = (l.cin, l.cout)
+        out.append({"name": f"{l.name}.w", "shape": shape, "rram": True})
+        out.append({"name": f"{l.name}.bias", "shape": (l.cout,),
+                    "rram": False})
+    return out
+
+
+def train_weight_specs(cfg: ResNetCfg) -> List[dict]:
+    """QAT train form: conv w + BN(γ, β, µ, σ²) per conv; fc (w, bias)."""
+    out = []
+    for l in cfg.layers():
+        if l.kind == "conv":
+            out.append({"name": f"{l.name}.w",
+                        "shape": (l.k, l.k, l.cin, l.cout), "grad": True})
+            for p, init in (("gamma", 1.0), ("beta", 0.0)):
+                out.append({"name": f"{l.name}.{p}", "shape": (l.cout,),
+                            "grad": True, "init": init})
+            for p, init in (("mu", 0.0), ("var", 1.0)):
+                out.append({"name": f"{l.name}.{p}", "shape": (l.cout,),
+                            "grad": False, "init": init})
+        else:
+            out.append({"name": f"{l.name}.w", "shape": (l.cin, l.cout),
+                        "grad": True})
+            out.append({"name": f"{l.name}.bias", "shape": (l.cout,),
+                        "grad": True, "init": 0.0})
+    return out
+
+
+def comp_param_specs(cfg: ResNetCfg, method: str, rank: int) -> dict:
+    """Compensation parameters: frozen shared projections + trainables."""
+    layers = cfg.layers()
+    if method == "veraplus":
+        frozen = [
+            {"name": "A_max", "shape": (rank, cfg.d_in_max)},
+            {"name": "B_max", "shape": (cfg.d_out_max, rank)},
+        ]
+        trainable = []
+        for l in layers:
+            trainable.append({"name": f"{l.name}.d", "shape": (rank,)})
+            trainable.append({"name": f"{l.name}.b", "shape": (l.cout,)})
+    elif method == "vera":
+        # Shared K×K down-projection (K=3 lowering) + shared up-projection.
+        frozen = [
+            {"name": "A_max", "shape": (3, 3, cfg.d_in_max, rank)},
+            {"name": "B_max", "shape": (cfg.d_out_max, rank)},
+        ]
+        trainable = []
+        for l in layers:
+            trainable.append({"name": f"{l.name}.d", "shape": (rank,)})
+            trainable.append({"name": f"{l.name}.b", "shape": (l.cout,)})
+    elif method == "lora":
+        frozen = []
+        trainable = []
+        for l in layers:
+            kk = l.k
+            trainable.append({"name": f"{l.name}.A",
+                              "shape": (kk, kk, l.cin, rank)})
+            trainable.append({"name": f"{l.name}.B", "shape": (l.cout, rank)})
+    else:
+        raise ValueError(f"unknown method {method}")
+    return {"frozen": frozen, "trainable": trainable}
+
+
+# --------------------------------------------------------------------------
+# Forward passes.
+# --------------------------------------------------------------------------
+
+def _conv(x, w, stride):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def _comp_branch(cfg, l, x_q, method, rank, frozen, d_vec, b_vec, block_n):
+    """Compensation output for one layer (same shape as the conv output)."""
+    if method == "veraplus":
+        a_max, b_max = frozen
+        a_sl = a_max[:, : l.cin]
+        b_sl = b_max[: l.cout, :]
+        if l.kind == "conv":
+            xin = x_q[:, :: l.stride, :: l.stride, :]
+            return vp_kernel.vera_plus_conv1x1(
+                xin, a_sl, b_sl, d_vec, b_vec, block_n=block_n)
+        return vp_kernel.vera_plus_apply_diff(
+            x_q, a_sl, b_sl, d_vec, b_vec, block_n)
+    if method == "vera":
+        a_max, b_max = frozen
+        b_sl = b_max[: l.cout, :]
+        if l.kind == "conv":
+            a_sl = a_max[:, :, : l.cin, :]
+            t = _conv(x_q, a_sl, l.stride)          # [n,h,w,r] K×K stage
+            t = t * d_vec[None, None, None, :]
+            y = jnp.einsum("nhwr,cr->nhwc", t, b_sl)
+            return y * b_vec[None, None, None, :]
+        a_sl = a_max[0, 0, : l.cin, :]              # linear: 1×1 slice
+        t = (x_q @ a_sl) * d_vec[None, :]
+        return (t @ b_sl.T) * b_vec[None, :]
+    if method == "lora":
+        a_l, b_l = d_vec, b_vec                     # repurposed slots
+        if l.kind == "conv":
+            t = _conv(x_q, a_l, l.stride)
+            return jnp.einsum("nhwr,cr->nhwc", t, b_l)
+        return (x_q @ a_l[0, 0]) @ b_l.T
+    raise ValueError(method)
+
+
+def forward_deploy(cfg: ResNetCfg, weights: Dict[str, jax.Array], x,
+                   comp=None):
+    """Folded-BN forward. `comp = (method, rank, frozen, trainables)`."""
+    layers = {l.name: l for l in cfg.layers()}
+
+    def layer_out(name, xin):
+        l = layers[name]
+        x_q = quant.act_quant(xin, cfg.a_bits)
+        if l.kind == "conv":
+            y = _conv(x_q, weights[f"{name}.w"], l.stride)
+            y = y + weights[f"{name}.bias"][None, None, None, :]
+        else:
+            y = x_q @ weights[f"{name}.w"] + weights[f"{name}.bias"][None, :]
+        if comp is not None:
+            method, rank, frozen, tr, block_n = comp
+            if method == "lora":
+                p1, p2 = tr[f"{name}.A"], tr[f"{name}.B"]
+            else:
+                p1, p2 = tr[f"{name}.d"], tr[f"{name}.b"]
+            y = y + _comp_branch(cfg, l, x_q, method, rank, frozen,
+                                 p1, p2, block_n)
+        return y
+
+    h = jax.nn.relu(layer_out("stem", x))
+    cin = cfg.widths[0]
+    for s, width in enumerate(cfg.widths):
+        for bi in range(cfg.blocks_per_stage):
+            stride = 2 if (s > 0 and bi == 0) else 1
+            pre = f"s{s}b{bi}"
+            y = jax.nn.relu(layer_out(f"{pre}.conv1", h))
+            y = layer_out(f"{pre}.conv2", y)
+            if stride != 1 or cin != width:
+                sc = layer_out(f"{pre}.down", h)
+            else:
+                sc = h
+            h = jax.nn.relu(y + sc)
+            cin = width
+    pooled = jnp.mean(h, axis=(1, 2))
+    return layer_out("fc", pooled)
+
+
+def forward_train(cfg: ResNetCfg, params: Dict[str, jax.Array], x,
+                  update_stats=True, collect_stats=False):
+    """QAT train-form forward with BatchNorm on batch statistics.
+
+    Returns (logits, new_stats, collected) where `new_stats` maps running
+    µ/σ² names to EMA-updated values and `collected` maps layer names to
+    the raw batch (mean, var) pairs (for the BN-calibration baseline).
+    """
+    layers = {l.name: l for l in cfg.layers()}
+    new_stats: Dict[str, jax.Array] = {}
+    collected: Dict[str, jax.Array] = {}
+
+    def bn_conv(name, xin):
+        l = layers[name]
+        x_q = quant.act_quant(xin, cfg.a_bits)
+        w_q = quant.weight_quant(params[f"{name}.w"], cfg.w_bits)
+        y = _conv(x_q, w_q, l.stride)
+        if update_stats:
+            mu = jnp.mean(y, axis=(0, 1, 2))
+            var = jnp.var(y, axis=(0, 1, 2))
+            new_stats[f"{name}.mu"] = 0.9 * params[f"{name}.mu"] + 0.1 * mu
+            new_stats[f"{name}.var"] = (0.9 * params[f"{name}.var"]
+                                        + 0.1 * var)
+        else:
+            mu = params[f"{name}.mu"]
+            var = params[f"{name}.var"]
+        if collect_stats:
+            bmu = jnp.mean(y, axis=(0, 1, 2))
+            bvar = jnp.var(y, axis=(0, 1, 2))
+            collected[f"{name}.mean"] = bmu
+            collected[f"{name}.var"] = bvar
+        yn = (y - mu[None, None, None, :]) / jnp.sqrt(
+            var[None, None, None, :] + BN_EPS)
+        return (yn * params[f"{name}.gamma"][None, None, None, :]
+                + params[f"{name}.beta"][None, None, None, :])
+
+    h = jax.nn.relu(bn_conv("stem", x))
+    cin = cfg.widths[0]
+    for s, width in enumerate(cfg.widths):
+        for bi in range(cfg.blocks_per_stage):
+            stride = 2 if (s > 0 and bi == 0) else 1
+            pre = f"s{s}b{bi}"
+            y = jax.nn.relu(bn_conv(f"{pre}.conv1", h))
+            y = bn_conv(f"{pre}.conv2", y)
+            if stride != 1 or cin != width:
+                sc = bn_conv(f"{pre}.down", h)
+            else:
+                sc = h
+            h = jax.nn.relu(y + sc)
+            cin = width
+    pooled = jnp.mean(h, axis=(1, 2))
+    pooled_q = quant.act_quant(pooled, cfg.a_bits)
+    w_q = quant.weight_quant(params["fc.w"], cfg.w_bits)
+    logits = pooled_q @ w_q + params["fc.bias"][None, :]
+    return logits, new_stats, collected
+
+
+def forward_bn_deploy(cfg: ResNetCfg, params: Dict[str, jax.Array], x):
+    """Unfolded deploy forward for the BN-calibration baseline.
+
+    Same math as :func:`forward_train` with `update_stats=False`, but the
+    conv weights are the (drifted) *programmed* weights — no QAT STE — and
+    the per-layer batch statistics are returned so the host can recompute
+    BN statistics from calibration data (Joshi et al. [7]).
+    """
+    layers = {l.name: l for l in cfg.layers()}
+    collected: List[jax.Array] = []
+
+    def bn_conv(name, xin):
+        l = layers[name]
+        x_q = quant.act_quant(xin, cfg.a_bits)
+        y = _conv(x_q, params[f"{name}.w"], l.stride)
+        collected.append(jnp.mean(y, axis=(0, 1, 2)))
+        collected.append(jnp.var(y, axis=(0, 1, 2)))
+        yn = (y - params[f"{name}.mu"][None, None, None, :]) / jnp.sqrt(
+            params[f"{name}.var"][None, None, None, :] + BN_EPS)
+        return (yn * params[f"{name}.gamma"][None, None, None, :]
+                + params[f"{name}.beta"][None, None, None, :])
+
+    h = jax.nn.relu(bn_conv("stem", x))
+    cin = cfg.widths[0]
+    for s, width in enumerate(cfg.widths):
+        for bi in range(cfg.blocks_per_stage):
+            stride = 2 if (s > 0 and bi == 0) else 1
+            pre = f"s{s}b{bi}"
+            y = jax.nn.relu(bn_conv(f"{pre}.conv1", h))
+            y = bn_conv(f"{pre}.conv2", y)
+            if stride != 1 or cin != width:
+                sc = bn_conv(f"{pre}.down", h)
+            else:
+                sc = h
+            h = jax.nn.relu(y + sc)
+            cin = width
+    pooled = jnp.mean(h, axis=(1, 2))
+    pooled_q = quant.act_quant(pooled, cfg.a_bits)
+    logits = pooled_q @ params["fc.w"] + params["fc.bias"][None, :]
+    return logits, collected

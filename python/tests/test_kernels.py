@@ -1,0 +1,246 @@
+"""L1 kernel correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes, ranks, block sizes and (for quantize) bit widths;
+every property asserts allclose against ``kernels.ref``. This is the core
+correctness signal for the compensation hot path.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import crossbar, quantize, ref, vera_plus
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _rand(rng, *shape):
+    return rng.standard_normal(shape).astype(np.float32)
+
+
+# --------------------------------------------------------------------------
+# vera_plus
+# --------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 300),
+    cin=st.integers(1, 96),
+    cout=st.integers(1, 96),
+    rank=st.integers(1, 8),
+    block_n=st.sampled_from([1, 7, 32, 128, 512]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_vera_plus_matches_ref(n, cin, cout, rank, block_n, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, n, cin)
+    a = _rand(rng, rank, cin)
+    b = _rand(rng, cout, rank)
+    d = _rand(rng, rank)
+    bv = _rand(rng, cout)
+    got = vera_plus.vera_plus_apply(x, a, b, d, bv, block_n=block_n)
+    want = ref.vera_plus_apply(jnp.asarray(x), jnp.asarray(a),
+                               jnp.asarray(b), jnp.asarray(d),
+                               jnp.asarray(bv))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_vera_plus_zero_b_is_zero():
+    rng = np.random.default_rng(0)
+    y = vera_plus.vera_plus_apply(
+        _rand(rng, 17, 8), _rand(rng, 2, 8), _rand(rng, 5, 2),
+        _rand(rng, 2), np.zeros(5, np.float32))
+    assert np.all(np.asarray(y) == 0.0)
+
+
+def test_vera_plus_zero_d_is_zero():
+    rng = np.random.default_rng(0)
+    y = vera_plus.vera_plus_apply(
+        _rand(rng, 17, 8), _rand(rng, 2, 8), _rand(rng, 5, 2),
+        np.zeros(2, np.float32), _rand(rng, 5))
+    assert np.all(np.asarray(y) == 0.0)
+
+
+def test_vera_plus_linearity_in_d():
+    """y(2d) = 2·y(d): the branch is linear in each scaling vector."""
+    rng = np.random.default_rng(3)
+    x, a, b = _rand(rng, 9, 6), _rand(rng, 3, 6), _rand(rng, 7, 3)
+    d, bv = _rand(rng, 3), _rand(rng, 7)
+    y1 = np.asarray(vera_plus.vera_plus_apply(x, a, b, d, bv))
+    y2 = np.asarray(vera_plus.vera_plus_apply(x, a, b, 2 * d, bv))
+    np.testing.assert_allclose(y2, 2 * y1, rtol=1e-5, atol=1e-6)
+
+
+def test_vera_plus_shape_validation():
+    rng = np.random.default_rng(0)
+    with pytest.raises(ValueError):
+        vera_plus.vera_plus_apply(
+            _rand(rng, 4, 8), _rand(rng, 2, 8), _rand(rng, 5, 2),
+            _rand(rng, 3), _rand(rng, 5))  # d has wrong rank length
+    with pytest.raises(ValueError):
+        vera_plus.vera_plus_apply(
+            _rand(rng, 4, 8), _rand(rng, 2, 8), _rand(rng, 5, 2),
+            _rand(rng, 2), _rand(rng, 4))  # b has wrong length
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 64),
+    h=st.integers(1, 8),
+    cin=st.integers(1, 32),
+    cout=st.integers(1, 32),
+    rank=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_vera_plus_conv1x1_matches_rowwise_ref(n, h, cin, cout, rank, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, n, h, h, cin)
+    a = _rand(rng, rank, cin)
+    b = _rand(rng, cout, rank)
+    d, bv = _rand(rng, rank), _rand(rng, cout)
+    got = vera_plus.vera_plus_conv1x1(x, a, b, d, bv, block_n=64)
+    want = ref.vera_plus_apply(
+        jnp.asarray(x.reshape(-1, cin)), jnp.asarray(a), jnp.asarray(b),
+        jnp.asarray(d), jnp.asarray(bv)).reshape(n, h, h, cout)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# --------------------------------------------------------------------------
+# vera_plus custom VJP (compensation training correctness)
+# --------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1), rank=st.integers(1, 6))
+def test_vera_plus_vjp_matches_autodiff_of_ref(seed, rank):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, 11, 9)
+    a = _rand(rng, rank, 9)
+    b = _rand(rng, 13, rank)
+    d, bv = _rand(rng, rank), _rand(rng, 13)
+
+    def loss_kernel(x, a, b, d, bv):
+        return jnp.sum(jnp.sin(
+            vera_plus.vera_plus_apply_diff(x, a, b, d, bv, 32)))
+
+    def loss_ref(x, a, b, d, bv):
+        return jnp.sum(jnp.sin(ref.vera_plus_apply(x, a, b, d, bv)))
+
+    g_k = jax.grad(loss_kernel, argnums=(0, 1, 2, 3, 4))(
+        jnp.asarray(x), jnp.asarray(a), jnp.asarray(b), jnp.asarray(d),
+        jnp.asarray(bv))
+    g_r = jax.grad(loss_ref, argnums=(0, 1, 2, 3, 4))(
+        jnp.asarray(x), jnp.asarray(a), jnp.asarray(b), jnp.asarray(d),
+        jnp.asarray(bv))
+    for gk, gr in zip(g_k, g_r):
+        # fp32 reassociation between the hand-written VJP and autodiff
+        # of the reference leaves ~2e-4 relative noise at rank 6.
+        np.testing.assert_allclose(np.asarray(gk), np.asarray(gr),
+                                   rtol=8e-4, atol=8e-5)
+
+
+# --------------------------------------------------------------------------
+# crossbar
+# --------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 80),
+    rows=st.sampled_from([16, 64, 256]),
+    cols=st.sampled_from([8, 32, 512]),
+    adc_bits=st.sampled_from([6, 8, 12]),
+    block_n=st.sampled_from([1, 16, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_crossbar_matches_ref(n, rows, cols, adc_bits, block_n, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(-7, 8, (n, rows)).astype(np.int8)
+    w = rng.integers(-7, 8, (rows, cols)).astype(np.int8)
+    got = crossbar.crossbar_mvm(x, w, 0.07, 0.013, adc_bits=adc_bits,
+                                block_n=block_n)
+    want = ref.crossbar_mvm(jnp.asarray(x), jnp.asarray(w), 0.07, 0.013,
+                            adc_bits=adc_bits)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_crossbar_adc_saturates():
+    """All-max inputs drive the accumulator to the ADC full-scale clip."""
+    rows, cols = 32, 4
+    x = np.full((1, rows), 7, np.int8)
+    w = np.full((rows, cols), 7, np.int8)
+    y = np.asarray(crossbar.crossbar_mvm(x, w, 1.0, 1.0, adc_bits=6))
+    lim = 2 ** 5 - 1
+    full_scale = rows * 49
+    lsb = full_scale / lim
+    assert np.allclose(y, lim * lsb)
+
+
+def test_crossbar_adc_quantization_error_bounded():
+    """ADC rounding error per output ≤ LSB/2 × scales."""
+    rng = np.random.default_rng(7)
+    rows, cols = 256, 16
+    x = rng.integers(-7, 8, (4, rows)).astype(np.int8)
+    w = rng.integers(-7, 8, (rows, cols)).astype(np.int8)
+    exact = x.astype(np.int64) @ w.astype(np.int64)
+    y = np.asarray(crossbar.crossbar_mvm(x, w, 1.0, 1.0, adc_bits=12))
+    lim = 2 ** 11 - 1
+    lsb = rows * 49 / lim
+    assert np.max(np.abs(y - exact)) <= lsb / 2 + 1e-3
+
+
+def test_crossbar_row_mismatch_raises():
+    with pytest.raises(ValueError):
+        crossbar.crossbar_mvm(np.zeros((2, 16), np.int8),
+                              np.zeros((8, 4), np.int8), 1.0, 1.0)
+
+
+# --------------------------------------------------------------------------
+# quantize
+# --------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 4000),
+    bits=st.sampled_from([2, 4, 8]),
+    scale=st.floats(1e-3, 10.0),
+    block=st.sampled_from([64, 1024]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fake_quant_matches_ref(n, bits, scale, block, seed):
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal(n) * 3).astype(np.float32)
+    got = quantize.fake_quant(x, scale, bits=bits, block=block)
+    want = ref.fake_quant(jnp.asarray(x), scale, bits=bits)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+
+def test_fake_quant_preserves_shape():
+    x = np.zeros((3, 5, 7), np.float32)
+    assert quantize.fake_quant(x, 0.1).shape == (3, 5, 7)
+
+
+def test_fake_quant_idempotent():
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal(100).astype(np.float32)
+    q1 = np.asarray(quantize.fake_quant(x, 0.25, bits=4))
+    q2 = np.asarray(quantize.fake_quant(q1, 0.25, bits=4))
+    np.testing.assert_allclose(q1, q2)
+
+
+def test_fake_quant_grid_values():
+    """Outputs land exactly on the {-7..7}·scale grid for 4 bits."""
+    rng = np.random.default_rng(2)
+    x = (rng.standard_normal(500) * 2).astype(np.float32)
+    q = np.asarray(quantize.fake_quant(x, 0.3, bits=4))
+    codes = q / 0.3
+    np.testing.assert_allclose(codes, np.round(codes), atol=1e-5)
+    assert codes.min() >= -7 and codes.max() <= 7
+
+
+def test_abs_max_scale():
+    x = jnp.asarray([-2.8, 1.0])
+    assert abs(float(ref.abs_max_scale(x, 4)) - 2.8 / 7) < 1e-6

@@ -1,0 +1,16 @@
+//! `cargo bench --bench fig3_degradation`: regenerates the paper's fig3 rows at the
+//! quick budget and times the end-to-end run (in-repo bencher; criterion
+//! is unavailable offline). Full-budget runs: `vera-plus experiment
+//! --id fig3 --full`.
+
+use vera_plus::harness::{self, Budget, Ctx};
+use vera_plus::util::bencher::fmt_ns;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = Ctx::new(Budget::quick())?;
+    let t0 = std::time::Instant::now();
+    harness::run(&ctx, "fig3")?;
+    let ns = t0.elapsed().as_nanos() as f64;
+    println!("\nfig3_degradation: end-to-end {}", fmt_ns(ns));
+    Ok(())
+}

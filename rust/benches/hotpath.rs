@@ -1,0 +1,146 @@
+//! `cargo bench --bench hotpath`: microbenchmarks of the serving hot path
+//! (the §Perf targets in EXPERIMENTS.md).
+//!
+//! Measured stages, per the DESIGN.md perf plan:
+//!  - drift sampling + conductance→weight conversion (L3, per instance)
+//!  - plain fwd executable invocation (L2+L1 via PJRT, batch 256 / 32 / 1)
+//!  - compensated fwd (adds the Pallas branch)
+//!  - compensation train step (Alg. 1 inner loop step)
+//!  - standalone VeRA+ kernel artifact (L1 in isolation, 8192×64 rows)
+//!  - SetStore selection + SRAM reload (router path)
+
+use std::sync::Arc;
+use vera_plus::compensation::{CompSet, SetStore};
+use vera_plus::coordinator::deploy;
+use vera_plus::coordinator::trainer::{train_backbone, BackboneTrainCfg};
+use vera_plus::rram::{ConductanceGrid, IbmDrift, YEAR};
+use vera_plus::runtime::Runtime;
+use vera_plus::util::bencher::Bencher;
+use vera_plus::util::rng::Pcg64;
+use vera_plus::util::tensor::{DType, Tensor, TensorMap};
+
+fn main() -> anyhow::Result<()> {
+    let rt = Arc::new(Runtime::cpu(vera_plus::find_artifacts())?);
+    let model = "resnet20_easy";
+    // Small backbone is fine — timings don't depend on weight values.
+    let (params, _) = train_backbone(
+        &rt,
+        model,
+        &BackboneTrainCfg { steps: 10, eval_every: 0,
+                            ..Default::default() },
+    )?;
+    let dep = deploy(
+        rt.clone(),
+        model,
+        &params,
+        "veraplus",
+        1,
+        Box::new(IbmDrift::default()),
+        ConductanceGrid::default(),
+        7,
+    )?;
+    let mut rng = Pcg64::new(1);
+    let mut bench = Bencher::default();
+
+    // --- L3: drift sampling + weight conversion --------------------------
+    let t10y = 10.0 * YEAR;
+    bench.bench("drift_readout/136k devices", || {
+        let w = dep.drifted_weights(t10y, &mut rng);
+        std::hint::black_box(w.len());
+    });
+
+    // --- executions -------------------------------------------------------
+    let weights = dep.drifted_weights(t10y, &mut rng);
+    let trainables = dep.fresh_trainables(3);
+    for batch in [256usize, 32, 1] {
+        let fwd = rt.executable(model, &format!("fwd_b{batch}"))?;
+        let idx: Vec<usize> = (0..batch).collect();
+        let data = dep.dataset.test_batch(&idx);
+        let mut inputs = TensorMap::new();
+        inputs.insert("x".into(), data.x);
+        bench.bench(&format!("fwd_b{batch}"), || {
+            let o = fwd.run_named(&[&weights, &inputs]).unwrap();
+            std::hint::black_box(o.len());
+        });
+        let comp =
+            rt.executable(model, &format!("comp_veraplus_r1_b{batch}"))?;
+        bench.bench(&format!("comp_fwd_b{batch}"), || {
+            let o = comp
+                .run_named(&[&weights, &dep.frozen, &trainables, &inputs])
+                .unwrap();
+            std::hint::black_box(o.len());
+        });
+    }
+
+    // --- Alg. 1 inner-loop train step --------------------------------------
+    let train = rt.executable(model, "train_veraplus_r1")?;
+    let momenta: TensorMap = trainables
+        .iter()
+        .map(|(k, v)| {
+            (format!("m:{k}"), Tensor::zeros(DType::F32, &v.shape))
+        })
+        .collect();
+    let idx: Vec<usize> = (0..64).collect();
+    let tb = dep.dataset.train_batch(&idx);
+    let mut batch_map = TensorMap::new();
+    batch_map.insert("x".into(), tb.x);
+    batch_map.insert("y".into(), tb.y);
+    batch_map.insert("lr".into(), Tensor::scalar_f32(0.1));
+    bench.bench("train_comp_step_b64", || {
+        let o = train
+            .run_named(&[
+                &weights,
+                &dep.frozen,
+                &trainables,
+                &momenta,
+                &batch_map,
+            ])
+            .unwrap();
+        std::hint::black_box(o.len());
+    });
+    bench.bench("train_comp_step_b64+drift", || {
+        let w = dep.drifted_weights(t10y, &mut rng);
+        let o = train
+            .run_named(&[&w, &dep.frozen, &trainables, &momenta,
+                         &batch_map])
+            .unwrap();
+        std::hint::black_box(o.len());
+    });
+
+    // --- L1 kernel in isolation -------------------------------------------
+    let kern = rt.kernel_executable("kernel_vera")?;
+    let mut krng = Pcg64::new(2);
+    let mk = |len: usize, rng: &mut Pcg64| {
+        let mut v = vec![0f32; len];
+        rng.fill_normal_f32(&mut v, 0.0, 1.0);
+        v
+    };
+    let kx = Tensor::from_f32(&[8192, 64], mk(8192 * 64, &mut krng));
+    let ka = Tensor::from_f32(&[8, 64], mk(512, &mut krng));
+    let kb = Tensor::from_f32(&[128, 8], mk(1024, &mut krng));
+    let kd = Tensor::from_f32(&[8], mk(8, &mut krng));
+    let kbv = Tensor::from_f32(&[128], mk(128, &mut krng));
+    bench.bench("kernel_vera 8192x64->128 r8", || {
+        let o = kern.run(&[&kx, &ka, &kb, &kd, &kbv]).unwrap();
+        std::hint::black_box(o.len());
+    });
+
+    // --- router path --------------------------------------------------------
+    let mut store = SetStore::new(model, "veraplus", 1, 7);
+    for i in 0..11 {
+        store.insert(CompSet {
+            t_start: 1.5f64.powi(i * 4),
+            trainables: trainables.clone(),
+            train_loss: 0.0,
+            accuracy: 0.9,
+        });
+    }
+    let mut q = 1.0f64;
+    bench.bench("store_select (11 sets)", || {
+        q = (q * 1.8) % (10.0 * YEAR);
+        std::hint::black_box(store.select(q.max(1.0)).unwrap().t_start);
+    });
+
+    bench.write_json("hotpath")?;
+    Ok(())
+}

@@ -1,0 +1,16 @@
+//! `cargo bench --bench table2_accuracy`: regenerates the paper's table2 rows at the
+//! quick budget and times the end-to-end run (in-repo bencher; criterion
+//! is unavailable offline). Full-budget runs: `vera-plus experiment
+//! --id table2 --full`.
+
+use vera_plus::harness::{self, Budget, Ctx};
+use vera_plus::util::bencher::fmt_ns;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = Ctx::new(Budget::quick())?;
+    let t0 = std::time::Instant::now();
+    harness::run(&ctx, "table2")?;
+    let ns = t0.elapsed().as_nanos() as f64;
+    println!("\ntable2_accuracy: end-to-end {}", fmt_ns(ns));
+    Ok(())
+}

@@ -1,0 +1,16 @@
+//! `cargo bench --bench table5_bn_comparison`: regenerates the paper's table5 rows at the
+//! quick budget and times the end-to-end run (in-repo bencher; criterion
+//! is unavailable offline). Full-budget runs: `vera-plus experiment
+//! --id table5 --full`.
+
+use vera_plus::harness::{self, Budget, Ctx};
+use vera_plus::util::bencher::fmt_ns;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = Ctx::new(Budget::quick())?;
+    let t0 = std::time::Instant::now();
+    harness::run(&ctx, "table5")?;
+    let ns = t0.elapsed().as_nanos() as f64;
+    println!("\ntable5_bn_comparison: end-to-end {}", fmt_ns(ns));
+    Ok(())
+}

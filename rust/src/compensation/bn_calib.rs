@@ -1,0 +1,117 @@
+//! BN-based calibration baseline (Joshi et al. [7], paper Table V).
+//!
+//! Keeps the network in *unfolded* train form, stores a calibration subset
+//! (5% of the training data in the paper), and periodically recomputes BN
+//! running statistics from forward passes over that subset under the
+//! current (drifted) weights. Contrast with VeRA+: requires on-chip data
+//! storage + online calibration passes, and blocks BN folding.
+
+use crate::data::Dataset;
+use crate::runtime::Executable;
+use crate::util::tensor::{Tensor, TensorMap};
+use anyhow::Result;
+use std::sync::Arc;
+
+/// EMA factor per calibration batch (matches the train-graph convention).
+const BN_MOMENTUM: f32 = 0.1;
+
+/// Host-side BN calibration state for one model.
+pub struct BnCalibrator {
+    /// Conv layer names, in manifest order (each has µ/σ² stats).
+    pub conv_layers: Vec<String>,
+    /// Indices of the calibration subset within the train split.
+    pub calib_indices: Vec<usize>,
+    pub batch: usize,
+}
+
+impl BnCalibrator {
+    pub fn new(conv_layers: Vec<String>, dataset: &dyn Dataset,
+               fraction: f64, batch: usize) -> BnCalibrator {
+        let n = ((dataset.train_len() as f64 * fraction) as usize)
+            .max(batch);
+        BnCalibrator {
+            conv_layers,
+            calib_indices: (0..n).collect(),
+            batch,
+        }
+    }
+
+    /// Stored calibration bytes (for the Table V storage row).
+    pub fn stored_bytes(&self, sample_bytes: usize) -> u64 {
+        (self.calib_indices.len() * sample_bytes) as u64
+    }
+
+    /// Run calibration: forward the calibration subset through the
+    /// `bn_fwd` graph with `params` (train form, drifted conv weights) and
+    /// EMA-update the `.mu`/`.var` entries in place from the returned
+    /// batch statistics. Returns the number of calibration batches run.
+    pub fn calibrate(
+        &self,
+        exe: &Arc<Executable>,
+        params: &mut TensorMap,
+        dataset: &dyn Dataset,
+    ) -> Result<usize> {
+        let mut batches = 0;
+        for chunk in self.calib_indices.chunks(self.batch) {
+            if chunk.len() < self.batch {
+                break; // graph has a static batch dimension
+            }
+            let b = dataset.train_batch(chunk);
+            let mut inputs = TensorMap::new();
+            inputs.insert("x".into(), b.x);
+            let outs = exe.run_named(&[params, &inputs])?;
+            for layer in &self.conv_layers {
+                let mean = outs
+                    .get(&format!("{layer}.mean"))
+                    .expect("bn_fwd must emit per-layer means");
+                let var = outs
+                    .get(&format!("{layer}.var"))
+                    .expect("bn_fwd must emit per-layer vars");
+                ema_update(
+                    params.get_mut(&format!("{layer}.mu")).unwrap(),
+                    mean,
+                );
+                ema_update(
+                    params.get_mut(&format!("{layer}.var")).unwrap(),
+                    var,
+                );
+            }
+            batches += 1;
+        }
+        Ok(batches)
+    }
+}
+
+fn ema_update(running: &mut Tensor, batch_stat: &Tensor) {
+    let r = running.as_f32_mut();
+    let b = batch_stat.as_f32();
+    for (rv, bv) in r.iter_mut().zip(b) {
+        *rv = (1.0 - BN_MOMENTUM) * *rv + BN_MOMENTUM * bv;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{ImageTask, ImageTaskKind};
+
+    #[test]
+    fn calibrator_sizes_subset_to_fraction() {
+        let ds = ImageTask::new(ImageTaskKind::Easy, 1);
+        let c = BnCalibrator::new(vec!["stem".into()], &ds, 0.05, 16);
+        assert_eq!(c.calib_indices.len(), 102); // 5% of 2048
+        // Paper scale: 5% of 50k CIFAR images × 3072 B ≈ 7.5 MB.
+        let paper_bytes = (50_000f64 * 0.05) as u64 * 3072;
+        assert!((paper_bytes as f64 / 1e6 - 7.68).abs() < 0.1);
+    }
+
+    #[test]
+    fn ema_moves_toward_batch_stat() {
+        let mut run = Tensor::from_f32(&[2], vec![0.0, 1.0]);
+        let batch = Tensor::from_f32(&[2], vec![1.0, 1.0]);
+        ema_update(&mut run, &batch);
+        let v = run.as_f32();
+        assert!((v[0] - 0.1).abs() < 1e-6);
+        assert!((v[1] - 1.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,8 @@
+//! Compensation parameter management: the external-memory set store
+//! (paper Fig. 2 "External Memory" → SRAM-IMC loading) and the
+//! BN-calibration baseline state.
+
+pub mod bn_calib;
+pub mod store;
+
+pub use store::{CompSet, SetStore};

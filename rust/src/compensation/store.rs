@@ -1,0 +1,267 @@
+//! Drift-compensation set store.
+//!
+//! The complete collection `{(t_k, b_k, d_k)}` produced by the scheduler
+//! lives in "external memory" (a VPTS image on disk); at serve time the
+//! coordinator selects the set for the device's age and loads it into the
+//! SRAM-IMC slot. Selection rule (paper Eq. 9): the set with the largest
+//! `t_k ≤ t`, i.e. each set covers `[t_k, t_{k+1})`.
+
+use crate::util::json::{arr, num, obj, s};
+use crate::util::tensor::{read_vpts, write_vpts, TensorMap};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// One trained compensation set.
+#[derive(Debug, Clone)]
+pub struct CompSet {
+    /// Drift level this set was trained for (seconds since programming).
+    pub t_start: f64,
+    /// Trained drift-specific tensors (per-layer b/d or LoRA A/B).
+    pub trainables: TensorMap,
+    /// Training metadata: final loss, epochs, accuracy estimate.
+    pub train_loss: f64,
+    pub accuracy: f64,
+}
+
+/// The full lifetime store for one model + method + rank.
+#[derive(Debug, Clone)]
+pub struct SetStore {
+    pub model: String,
+    pub method: String,
+    pub rank: usize,
+    /// Seed that regenerates the shared projections (A_max/B_max).
+    pub projection_seed: u64,
+    /// Sets ordered by ascending `t_start`; sets[0] covers deployment
+    /// start (t_start = 0 or 1).
+    pub sets: Vec<CompSet>,
+}
+
+impl SetStore {
+    pub fn new(model: &str, method: &str, rank: usize,
+               projection_seed: u64) -> SetStore {
+        SetStore {
+            model: model.to_string(),
+            method: method.to_string(),
+            rank,
+            projection_seed,
+            sets: Vec::new(),
+        }
+    }
+
+    /// Insert a set, keeping ascending `t_start` order.
+    pub fn insert(&mut self, set: CompSet) {
+        let pos = self
+            .sets
+            .partition_point(|existing| existing.t_start <= set.t_start);
+        self.sets.insert(pos, set);
+    }
+
+    /// Paper Eq. 9 selection: the last set with `t_start ≤ t`.
+    /// Falls back to the earliest set for t before the first level.
+    pub fn select(&self, t: f64) -> Option<&CompSet> {
+        if self.sets.is_empty() {
+            return None;
+        }
+        let pos = self.sets.partition_point(|set| set.t_start <= t);
+        Some(if pos == 0 { &self.sets[0] } else { &self.sets[pos - 1] })
+    }
+
+    /// Index of the set [`select`] would return (for batching keys).
+    pub fn select_index(&self, t: f64) -> Option<usize> {
+        if self.sets.is_empty() {
+            return None;
+        }
+        let pos = self.sets.partition_point(|set| set.t_start <= t);
+        Some(pos.saturating_sub(1))
+    }
+
+    pub fn len(&self) -> usize {
+        self.sets.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sets.is_empty()
+    }
+
+    /// Total stored drift-specific parameters (all sets).
+    pub fn stored_params(&self) -> usize {
+        self.sets
+            .iter()
+            .map(|s| {
+                s.trainables.values().map(|t| t.len()).sum::<usize>()
+            })
+            .sum()
+    }
+
+    /// Serialize: `<stem>.json` index + `<stem>.vpts` tensor image.
+    pub fn save(&self, stem: &Path) -> Result<()> {
+        let mut all = TensorMap::new();
+        let mut index = Vec::new();
+        for (i, set) in self.sets.iter().enumerate() {
+            for (name, t) in &set.trainables {
+                all.insert(format!("set{i}:{name}"), t.clone());
+            }
+            index.push(obj(vec![
+                ("t_start", num(set.t_start)),
+                ("train_loss", num(set.train_loss)),
+                ("accuracy", num(set.accuracy)),
+                (
+                    "tensors",
+                    arr(set
+                        .trainables
+                        .keys()
+                        .map(|k| s(k))
+                        .collect()),
+                ),
+            ]));
+        }
+        let meta = obj(vec![
+            ("model", s(&self.model)),
+            ("method", s(&self.method)),
+            ("rank", num(self.rank as f64)),
+            ("projection_seed", num(self.projection_seed as f64)),
+            ("sets", arr(index)),
+        ]);
+        std::fs::write(
+            stem.with_extension("json"),
+            meta.to_string_pretty(),
+        )?;
+        write_vpts(&stem.with_extension("vpts"), &all)?;
+        Ok(())
+    }
+
+    pub fn load(stem: &Path) -> Result<SetStore> {
+        let jpath = stem.with_extension("json");
+        let text = std::fs::read_to_string(&jpath)
+            .with_context(|| format!("read {}", jpath.display()))?;
+        let j = crate::util::json::parse(&text)?;
+        let all = read_vpts(&stem.with_extension("vpts"))?;
+        let mut store = SetStore::new(
+            j.req_str("model")?,
+            j.req_str("method")?,
+            j.req_usize("rank")?,
+            j.req_f64("projection_seed")? as u64,
+        );
+        for (i, entry) in j.req_arr("sets")?.iter().enumerate() {
+            let mut trainables = TensorMap::new();
+            for name in entry.req_arr("tensors")? {
+                let name = name
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("bad tensor name"))?;
+                let t = all
+                    .get(&format!("set{i}:{name}"))
+                    .with_context(|| format!("missing set{i}:{name}"))?;
+                trainables.insert(name.to_string(), t.clone());
+            }
+            store.sets.push(CompSet {
+                t_start: entry.req_f64("t_start")?,
+                trainables,
+                train_loss: entry.req_f64("train_loss")?,
+                accuracy: entry.req_f64("accuracy")?,
+            });
+        }
+        // Defensive: file might have been edited; restore order.
+        store
+            .sets
+            .sort_by(|a, b| a.t_start.partial_cmp(&b.t_start).unwrap());
+        Ok(store)
+    }
+
+    /// Check every set fits the SRAM-IMC capacity (bits).
+    pub fn check_sram_capacity(&self, sram_bits: f64,
+                               shared_params: usize) -> Result<()> {
+        for set in &self.sets {
+            let params: usize =
+                set.trainables.values().map(|t| t.len()).sum();
+            let need = (params + shared_params) as f64
+                * crate::costmodel::constants::VEC_BITS;
+            if need > sram_bits {
+                bail!(
+                    "set at t={} needs {need} bits > SRAM capacity \
+                     {sram_bits}",
+                    set.t_start
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tensor::Tensor;
+
+    fn set(t: f64) -> CompSet {
+        let mut m = TensorMap::new();
+        m.insert("l.d".into(), Tensor::from_f32(&[1], vec![t as f32]));
+        m.insert("l.b".into(), Tensor::from_f32(&[4], vec![0.0; 4]));
+        CompSet {
+            t_start: t,
+            trainables: m,
+            train_loss: 0.5,
+            accuracy: 0.9,
+        }
+    }
+
+    #[test]
+    fn select_covers_intervals() {
+        let mut st = SetStore::new("m", "veraplus", 1, 7);
+        for t in [1.0, 100.0, 10_000.0] {
+            st.insert(set(t));
+        }
+        assert_eq!(st.select(0.5).unwrap().t_start, 1.0); // pre-first
+        assert_eq!(st.select(1.0).unwrap().t_start, 1.0);
+        assert_eq!(st.select(99.0).unwrap().t_start, 1.0);
+        assert_eq!(st.select(100.0).unwrap().t_start, 100.0);
+        assert_eq!(st.select(1e9).unwrap().t_start, 10_000.0);
+        assert_eq!(st.select_index(150.0), Some(1));
+    }
+
+    #[test]
+    fn insert_keeps_order() {
+        let mut st = SetStore::new("m", "veraplus", 1, 7);
+        for t in [100.0, 1.0, 10_000.0, 50.0] {
+            st.insert(set(t));
+        }
+        let ts: Vec<f64> = st.sets.iter().map(|s| s.t_start).collect();
+        assert_eq!(ts, vec![1.0, 50.0, 100.0, 10_000.0]);
+    }
+
+    #[test]
+    fn empty_store_selects_none() {
+        let st = SetStore::new("m", "veraplus", 1, 7);
+        assert!(st.select(1.0).is_none());
+        assert!(st.select_index(1.0).is_none());
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join("setstore_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut st = SetStore::new("resnet20_easy", "veraplus", 1, 42);
+        st.insert(set(1.0));
+        st.insert(set(3600.0));
+        let stem = dir.join("store");
+        st.save(&stem).unwrap();
+        let back = SetStore::load(&stem).unwrap();
+        assert_eq!(back.model, "resnet20_easy");
+        assert_eq!(back.rank, 1);
+        assert_eq!(back.projection_seed, 42);
+        assert_eq!(back.len(), 2);
+        assert_eq!(
+            back.sets[1].trainables.get("l.d").unwrap().as_f32()[0],
+            3600.0
+        );
+        assert_eq!(back.stored_params(), st.stored_params());
+    }
+
+    #[test]
+    fn sram_capacity_check() {
+        let mut st = SetStore::new("m", "veraplus", 1, 7);
+        st.insert(set(1.0));
+        // 5 params + 0 shared @4 bits (int4 storage) = 20 bits.
+        assert!(st.check_sram_capacity(100.0, 0).is_ok());
+        assert!(st.check_sram_capacity(16.0, 0).is_err());
+    }
+}

@@ -1,0 +1,172 @@
+//! Accuracy evaluation under drift.
+//!
+//! [`eval_accuracy`] runs the (compensated) forward graph over the test
+//! split with a given drifted weight readout. [`EvalStats`] is the paper's
+//! EVALSTATS (Alg. 1 line 4): it samples `n_instances` independent drift
+//! readouts at time `t` and reports the accuracy mean and standard
+//! deviation, which the scheduler compares as `µ − 3σ` against the floor.
+
+use crate::coordinator::Deployment;
+use crate::util::rng::Pcg64;
+use crate::util::tensor::{Tensor, TensorMap};
+use anyhow::Result;
+
+/// Argmax accuracy of logits against labels.
+pub fn accuracy_of(logits: &Tensor, labels: &[i32]) -> f64 {
+    let n = labels.len();
+    let classes = logits.shape[1];
+    let v = logits.as_f32();
+    let mut correct = 0usize;
+    for (i, &label) in labels.iter().enumerate() {
+        let row = &v[i * classes..(i + 1) * classes];
+        let mut best = 0usize;
+        for c in 1..classes {
+            if row[c] > row[best] {
+                best = c;
+            }
+        }
+        if best as i32 == label {
+            correct += 1;
+        }
+    }
+    correct as f64 / n as f64
+}
+
+/// Evaluation mode: plain backbone or backbone + compensation branch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EvalMode {
+    Plain,
+    Compensated,
+}
+
+/// Evaluate test-split accuracy for one drifted readout.
+///
+/// `trainables` must hold the active compensation set for
+/// `EvalMode::Compensated` and may be empty for `EvalMode::Plain`.
+pub fn eval_accuracy(
+    dep: &Deployment,
+    weights: &TensorMap,
+    trainables: &TensorMap,
+    mode: EvalMode,
+    max_samples: usize,
+) -> Result<f64> {
+    let key = match mode {
+        EvalMode::Plain => dep.fwd_key(256),
+        EvalMode::Compensated => dep.comp_key(256),
+    };
+    let exe = dep.rt.executable(&dep.manifest.model, &key)?;
+    let batch = 256usize;
+    let n_test = dep.dataset.test_len().min(max_samples);
+    let mut correct_weighted = 0.0;
+    let mut total = 0usize;
+    let mut idx = 0usize;
+    while idx + batch <= n_test {
+        let indices: Vec<usize> = (idx..idx + batch).collect();
+        let b = dep.dataset.test_batch(&indices);
+        let mut inputs = TensorMap::new();
+        inputs.insert("x".into(), b.x);
+        let outs = match mode {
+            EvalMode::Plain => exe.run_named(&[weights, &inputs])?,
+            EvalMode::Compensated => exe.run_named(&[
+                weights,
+                &dep.frozen,
+                trainables,
+                &inputs,
+            ])?,
+        };
+        let logits = outs.get("logits").expect("graph emits logits");
+        correct_weighted +=
+            accuracy_of(logits, b.y.as_i32()) * batch as f64;
+        total += batch;
+        idx += batch;
+    }
+    anyhow::ensure!(total > 0, "test set smaller than one batch");
+    Ok(correct_weighted / total as f64)
+}
+
+/// EVALSTATS result.
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub mean: f64,
+    pub std: f64,
+    pub n: usize,
+}
+
+impl Stats {
+    /// Lower edge of the 99.7% confidence interval (paper line 5).
+    pub fn lower_3sigma(&self) -> f64 {
+        self.mean - 3.0 * self.std
+    }
+
+    pub fn from_samples(samples: &[f64]) -> Stats {
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples
+            .iter()
+            .map(|s| (s - mean) * (s - mean))
+            .sum::<f64>()
+            / n as f64;
+        Stats {
+            mean,
+            std: var.sqrt(),
+            n,
+        }
+    }
+}
+
+/// Paper Alg. 1 EVALSTATS: accuracy statistics over `n_instances`
+/// independent drift readouts at device age `t`.
+pub fn eval_stats(
+    dep: &Deployment,
+    trainables: &TensorMap,
+    mode: EvalMode,
+    t: f64,
+    n_instances: usize,
+    max_samples: usize,
+    rng: &mut Pcg64,
+) -> Result<Stats> {
+    let mut samples = Vec::with_capacity(n_instances);
+    let mut weights = TensorMap::new(); // reused readout buffers (§Perf)
+    for _ in 0..n_instances {
+        dep.drifted_weights_into(t, rng, &mut weights);
+        samples.push(eval_accuracy(
+            dep,
+            &weights,
+            trainables,
+            mode,
+            max_samples,
+        )?);
+    }
+    Ok(Stats::from_samples(&samples))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_of_counts_argmax() {
+        let logits = Tensor::from_f32(
+            &[3, 2],
+            vec![0.9, 0.1, 0.2, 0.8, 0.6, 0.4],
+        );
+        assert!((accuracy_of(&logits, &[0, 1, 1]) - 2.0 / 3.0).abs() < 1e-9);
+        assert_eq!(accuracy_of(&logits, &[0, 1, 0]), 1.0);
+        assert_eq!(accuracy_of(&logits, &[1, 0, 1]), 0.0);
+    }
+
+    #[test]
+    fn stats_from_samples() {
+        let s = Stats::from_samples(&[0.8, 0.9, 1.0]);
+        assert!((s.mean - 0.9).abs() < 1e-9);
+        assert!((s.std - (0.02f64 / 3.0).sqrt()).abs() < 1e-9);
+        assert!(s.lower_3sigma() < s.mean);
+    }
+
+    #[test]
+    fn stats_zero_variance() {
+        let s = Stats::from_samples(&[0.5, 0.5]);
+        assert_eq!(s.std, 0.0);
+        assert_eq!(s.lower_3sigma(), 0.5);
+    }
+}

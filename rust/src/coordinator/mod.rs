@@ -1,0 +1,159 @@
+//! L3 coordinator — the paper's system contribution.
+//!
+//! - [`Deployment`] bundles everything a deployed chip has: the PJRT
+//!   runtime, the programmed RRAM arrays, the dataset, the compensation
+//!   method and the frozen shared projections.
+//! - [`eval`] evaluates accuracy under drift ([`eval::EvalStats`] = the
+//!   paper's EVALSTATS: µ/σ over independent drift instances).
+//! - [`trainer`] runs the drift-inject compensation training (Alg. 1
+//!   lines 7–12) and backbone QAT training by driving AOT train-step
+//!   executables — Python is never on this path.
+//! - [`scheduler`] implements Algorithm 1 end to end and emits a
+//!   [`crate::compensation::SetStore`].
+//! - [`serve`] is the deployment-time request loop: lifetime clock,
+//!   drift-level routing, dynamic batching, latency/throughput metrics.
+
+pub mod eval;
+pub mod scheduler;
+pub mod serve;
+pub mod trainer;
+
+use crate::data::Dataset;
+use crate::nn::init;
+use crate::nn::manifest::ModelManifest;
+use crate::rram::drift::DriftModel;
+use crate::rram::mapping::ProgrammedNetwork;
+use crate::runtime::Runtime;
+use crate::util::rng::Pcg64;
+use crate::util::tensor::TensorMap;
+use anyhow::Result;
+use std::sync::Arc;
+
+/// A deployed model: programmed arrays + runtime + task + method config.
+pub struct Deployment {
+    pub rt: Arc<Runtime>,
+    pub manifest: Arc<ModelManifest>,
+    pub net: ProgrammedNetwork,
+    pub dataset: Box<dyn Dataset>,
+    pub method: String,
+    pub rank: usize,
+    /// Frozen shared projections (A_max/B_max); empty for LoRA.
+    pub frozen: TensorMap,
+    pub drift: Box<dyn DriftModel>,
+    pub projection_seed: u64,
+}
+
+impl Deployment {
+    /// Assemble a deployment from an already-programmed network.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        rt: Arc<Runtime>,
+        manifest: Arc<ModelManifest>,
+        net: ProgrammedNetwork,
+        dataset: Box<dyn Dataset>,
+        method: &str,
+        rank: usize,
+        drift: Box<dyn DriftModel>,
+        projection_seed: u64,
+    ) -> Deployment {
+        let mut frozen = TensorMap::new();
+        match method {
+            "veraplus" => {
+                let (a, b) = init::init_projections(
+                    &manifest,
+                    rank,
+                    projection_seed,
+                );
+                frozen.insert("A_max".into(), a);
+                frozen.insert("B_max".into(), b);
+            }
+            "vera" => {
+                let (a, b) = init::init_projections_vera(
+                    &manifest,
+                    rank,
+                    projection_seed,
+                );
+                frozen.insert("A_max".into(), a);
+                frozen.insert("B_max".into(), b);
+            }
+            "lora" => {}
+            other => panic!("unknown method {other}"),
+        }
+        Deployment {
+            rt,
+            manifest,
+            net,
+            dataset,
+            method: method.to_string(),
+            rank,
+            frozen,
+            drift,
+            projection_seed,
+        }
+    }
+
+    /// Graph key helpers.
+    pub fn fwd_key(&self, batch: usize) -> String {
+        format!("fwd_b{batch}")
+    }
+
+    pub fn comp_key(&self, batch: usize) -> String {
+        format!("comp_{}_r{}_b{batch}", self.method, self.rank)
+    }
+
+    pub fn train_key(&self) -> String {
+        format!("train_{}_r{}", self.method, self.rank)
+    }
+
+    /// Sample a drifted weight readout at device age `t`.
+    pub fn drifted_weights(&self, t: f64, rng: &mut Pcg64) -> TensorMap {
+        self.net.read_drifted(t, self.drift.as_ref(), rng)
+    }
+
+    /// Buffer-reusing drift readout (hot path; see §Perf).
+    pub fn drifted_weights_into(
+        &self,
+        t: f64,
+        rng: &mut Pcg64,
+        out: &mut TensorMap,
+    ) {
+        self.net.read_drifted_into(t, self.drift.as_ref(), rng, out);
+    }
+
+    /// Fresh compensation trainables (paper: "Initialize b(t), d(t)").
+    pub fn fresh_trainables(&self, seed: u64) -> TensorMap {
+        init::init_comp_trainables(
+            &self.manifest,
+            &self.method,
+            self.rank,
+            seed,
+        )
+    }
+}
+
+/// Build + program a deployment from trained backbone parameters.
+#[allow(clippy::too_many_arguments)]
+pub fn deploy(
+    rt: Arc<Runtime>,
+    model: &str,
+    train_params: &TensorMap,
+    method: &str,
+    rank: usize,
+    drift: Box<dyn DriftModel>,
+    grid: crate::rram::ConductanceGrid,
+    seed: u64,
+) -> Result<Deployment> {
+    let manifest = rt.manifest(model)?;
+    let deploy_weights = crate::rram::fold_bn(&manifest, train_params)?;
+    let mut rng = Pcg64::with_stream(seed, 0xdeb1);
+    let net = ProgrammedNetwork::program(
+        &manifest,
+        &deploy_weights,
+        grid,
+        &mut rng,
+    )?;
+    let dataset = crate::data::for_model(model, crate::data::TASK_SEED)?;
+    Ok(Deployment::new(
+        rt, manifest, net, dataset, method, rank, drift, seed,
+    ))
+}

@@ -1,0 +1,246 @@
+//! Algorithm 1: drift-aware scheduling and training.
+//!
+//! Advances device age exponentially (`t ← 1.5·t`, matching the log-time
+//! drift kinetics), estimates accuracy statistics at each age with
+//! EVALSTATS, and allocates + trains a new compensation set only when the
+//! 99.7% lower confidence bound `µ − 3σ` falls below the accuracy floor.
+//! Output is a [`SetStore`] plus a full decision log for the harness.
+
+use crate::compensation::{CompSet, SetStore};
+use crate::coordinator::eval::{self, EvalMode};
+use crate::coordinator::trainer::{self, CompTrainCfg};
+use crate::coordinator::Deployment;
+use crate::util::rng::Pcg64;
+use anyhow::Result;
+
+/// Scheduler configuration (paper Alg. 1 inputs).
+#[derive(Debug, Clone)]
+pub struct ScheduleCfg {
+    /// Accuracy floor a_thr, as *normalized* accuracy (fraction of the
+    /// drift-free accuracy, e.g. 0.95 = tolerate a 5% relative drop).
+    pub norm_floor: f64,
+    /// Time advance multiplier (paper: 1.5, "can be adjusted").
+    pub growth: f64,
+    /// Maximum device age to plan for (paper: 10 years).
+    pub t_max: f64,
+    /// EVALSTATS drift instances (paper: 100; budget knob).
+    pub n_instances: usize,
+    /// Test samples per accuracy evaluation.
+    pub max_samples: usize,
+    pub train: CompTrainCfg,
+    pub seed: u64,
+}
+
+impl Default for ScheduleCfg {
+    fn default() -> Self {
+        ScheduleCfg {
+            norm_floor: 0.95,
+            growth: 1.5,
+            t_max: 10.0 * crate::rram::drift::YEAR,
+            n_instances: 8,
+            max_samples: 512,
+            train: CompTrainCfg::default(),
+            seed: 0x5c4ed,
+        }
+    }
+}
+
+/// One step of the scheduler's decision log.
+#[derive(Debug, Clone)]
+pub struct Decision {
+    pub t: f64,
+    pub mean: f64,
+    pub std: f64,
+    /// µ − 3σ compared against the floor.
+    pub lower: f64,
+    pub floor: f64,
+    pub trained_new_set: bool,
+}
+
+/// Full scheduling outcome.
+pub struct ScheduleResult {
+    pub store: SetStore,
+    pub drift_free_acc: f64,
+    pub floor_acc: f64,
+    pub decisions: Vec<Decision>,
+}
+
+/// Run Algorithm 1 against a deployment.
+pub fn schedule(dep: &Deployment, cfg: &ScheduleCfg)
+                -> Result<ScheduleResult> {
+    let mut rng = Pcg64::with_stream(cfg.seed, 0xa160);
+    // Drift-free reference accuracy (t = 0 readout, plain forward).
+    let ideal = dep.net.read_ideal();
+    let empty = crate::util::tensor::TensorMap::new();
+    let drift_free_acc = eval::eval_accuracy(
+        dep,
+        &ideal,
+        &empty,
+        EvalMode::Plain,
+        cfg.max_samples,
+    )?;
+    let floor_acc = cfg.norm_floor * drift_free_acc;
+
+    let mut store = SetStore::new(
+        &dep.manifest.model,
+        &dep.method,
+        dep.rank,
+        dep.projection_seed,
+    );
+    let mut decisions = Vec::new();
+
+    // Line 1: t ← 1; the initial set is trained at t = 1 s so deployment
+    // always has a set to select.
+    let mut t = 1.0f64;
+    let first = trainer::train_comp_at(
+        dep,
+        t,
+        dep.fresh_trainables(cfg.seed),
+        &cfg.train,
+        &mut rng,
+    )?;
+    let first_stats = eval::eval_stats(
+        dep,
+        &first.trainables,
+        EvalMode::Compensated,
+        t,
+        cfg.n_instances,
+        cfg.max_samples,
+        &mut rng,
+    )?;
+    store.insert(CompSet {
+        t_start: t,
+        trainables: first.trainables,
+        train_loss: first.final_loss,
+        accuracy: first_stats.mean,
+    });
+    decisions.push(Decision {
+        t,
+        mean: first_stats.mean,
+        std: first_stats.std,
+        lower: first_stats.lower_3sigma(),
+        floor: floor_acc,
+        trained_new_set: true,
+    });
+
+    // Lines 2–14.
+    while t < cfg.t_max {
+        t *= cfg.growth; // line 3
+        let active = store
+            .select(t)
+            .expect("store has at least the initial set")
+            .trainables
+            .clone();
+        // Line 4: EVALSTATS over drift instances with the active set.
+        let stats = eval::eval_stats(
+            dep,
+            &active,
+            EvalMode::Compensated,
+            t,
+            cfg.n_instances,
+            cfg.max_samples,
+            &mut rng,
+        )?;
+        let needs_new = stats.lower_3sigma() < floor_acc; // line 5
+        let mut trained = false;
+        if needs_new {
+            // Lines 6–12: allocate + train b(t), d(t). Guarded insert:
+            // a trained set is only adopted if it actually improves on
+            // the active set at this drift level (protects the store
+            // against an occasional diverged training run); the warm
+            // start is retried from a fresh init when it fails.
+            let mut best: Option<(crate::util::tensor::TensorMap, f64,
+                                  f64)> = None;
+            let inits: Vec<crate::util::tensor::TensorMap> =
+                if cfg.train.warm_start {
+                    vec![
+                        active.clone(),
+                        dep.fresh_trainables(cfg.seed ^ t.to_bits()),
+                    ]
+                } else {
+                    vec![dep.fresh_trainables(cfg.seed ^ t.to_bits())]
+                };
+            for init in inits {
+                let result = trainer::train_comp_at(
+                    dep, t, init, &cfg.train, &mut rng,
+                )?;
+                let post = eval::eval_stats(
+                    dep,
+                    &result.trainables,
+                    EvalMode::Compensated,
+                    t,
+                    cfg.n_instances,
+                    cfg.max_samples,
+                    &mut rng,
+                )?;
+                if best.as_ref().map_or(true, |(_, _, acc)| {
+                    post.mean > *acc
+                }) {
+                    best = Some((
+                        result.trainables,
+                        result.final_loss,
+                        post.mean,
+                    ));
+                }
+                // Good enough: stop after the first candidate that
+                // clears the floor.
+                if best.as_ref().unwrap().2 >= floor_acc {
+                    break;
+                }
+            }
+            let (trainables, loss, acc) = best.unwrap();
+            if acc > stats.mean {
+                store.insert(CompSet {
+                    t_start: t,
+                    trainables,
+                    train_loss: loss,
+                    accuracy: acc,
+                });
+                trained = true;
+            }
+        }
+        decisions.push(Decision {
+            t,
+            mean: stats.mean,
+            std: stats.std,
+            lower: stats.lower_3sigma(),
+            floor: floor_acc,
+            trained_new_set: trained,
+        });
+    }
+
+    Ok(ScheduleResult {
+        store,
+        drift_free_acc,
+        floor_acc,
+        decisions,
+    })
+}
+
+/// The exponential time ladder Alg. 1 visits (useful for harness sweeps).
+pub fn time_ladder(growth: f64, t_max: f64) -> Vec<f64> {
+    let mut ts = vec![1.0];
+    let mut t = 1.0;
+    while t < t_max {
+        t *= growth;
+        ts.push(t);
+    }
+    ts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ladder_is_exponential_and_bounded() {
+        let ts = time_ladder(1.5, 10.0 * crate::rram::drift::YEAR);
+        assert_eq!(ts[0], 1.0);
+        for w in ts.windows(2) {
+            assert!((w[1] / w[0] - 1.5).abs() < 1e-12);
+        }
+        assert!(*ts.last().unwrap() >= 10.0 * crate::rram::drift::YEAR);
+        // ln(3.16e8)/ln(1.5) ≈ 48 steps.
+        assert!(ts.len() > 40 && ts.len() < 60, "{}", ts.len());
+    }
+}

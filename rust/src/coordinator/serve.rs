@@ -1,0 +1,390 @@
+//! Deployment-time serving: lifetime clock, drift-level routing, dynamic
+//! batching and metrics.
+//!
+//! The chip ages over years while requests arrive continuously; the
+//! router reads the lifetime clock, selects the compensation set for the
+//! current device age (a cheap table lookup — the paper's point is that
+//! *no on-chip retraining or data replay* happens here), loads it into
+//! the SRAM slot if it changed, and the batcher groups requests so one
+//! executable invocation serves many requests.
+
+use crate::compensation::SetStore;
+use crate::coordinator::eval::accuracy_of;
+use crate::coordinator::Deployment;
+use crate::util::rng::Pcg64;
+use crate::util::tensor::{Tensor, TensorMap};
+use anyhow::Result;
+use std::collections::VecDeque;
+
+/// Simulated lifetime clock: maps serving progress onto device age.
+/// `accel` compresses years into a test run (e.g. 1e7 ⇒ 31 s wall ≈ 10 y).
+#[derive(Debug, Clone)]
+pub struct LifetimeClock {
+    pub t0: f64,
+    pub accel: f64,
+    elapsed_virtual: f64,
+}
+
+impl LifetimeClock {
+    pub fn new(t0: f64, accel: f64) -> LifetimeClock {
+        LifetimeClock {
+            t0,
+            accel,
+            elapsed_virtual: 0.0,
+        }
+    }
+
+    /// Advance by `wall_seconds` of serving time.
+    pub fn advance(&mut self, wall_seconds: f64) {
+        self.elapsed_virtual += wall_seconds * self.accel;
+    }
+
+    /// Current device age (seconds since programming).
+    pub fn device_age(&self) -> f64 {
+        self.t0 + self.elapsed_virtual
+    }
+}
+
+/// One inference request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    /// Sample index into the test split (the workload generator draws
+    /// real task samples so accuracy is measurable end-to-end).
+    pub sample: usize,
+    /// Device age at arrival.
+    pub arrival_age: f64,
+    /// Arrival time on the serving (wall) axis, seconds.
+    pub arrival_wall: f64,
+}
+
+/// Completed request with measured latency.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: u64,
+    pub correct: bool,
+    /// Queueing + execution latency on the wall axis (seconds).
+    pub latency: f64,
+    /// Batch it was served in.
+    pub batch_size: usize,
+    /// Compensation set index used.
+    pub set_index: usize,
+}
+
+/// Dynamic batcher policy.
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    /// Preferred (maximum) batch size — must match an available graph.
+    pub max_batch: usize,
+    /// Max wall-seconds a request may wait before forcing a partial batch.
+    pub max_wait: f64,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 32,
+            max_wait: 0.010,
+        }
+    }
+}
+
+/// Serving metrics.
+#[derive(Debug, Clone, Default)]
+pub struct ServeMetrics {
+    pub served: usize,
+    pub correct: usize,
+    pub batches: usize,
+    pub set_switches: usize,
+    pub latencies: Vec<f64>,
+    pub occupancy_sum: f64,
+}
+
+impl ServeMetrics {
+    pub fn accuracy(&self) -> f64 {
+        if self.served == 0 {
+            0.0
+        } else {
+            self.correct as f64 / self.served as f64
+        }
+    }
+
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.occupancy_sum / self.batches as f64
+        }
+    }
+
+    pub fn latency_percentile(&self, p: f64) -> f64 {
+        if self.latencies.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.latencies.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((v.len() as f64 - 1.0) * p).round() as usize;
+        v[idx]
+    }
+}
+
+/// The serving loop. Owns a queue, the clock, the set store and a single
+/// drifted-weight view per drift "era" (the weight readout is refreshed
+/// whenever the active set changes — a conservative proxy for continuous
+/// drift that keeps the simulation cheap).
+pub struct Server<'a> {
+    pub dep: &'a Deployment,
+    pub store: &'a SetStore,
+    pub clock: LifetimeClock,
+    pub policy: BatchPolicy,
+    pub metrics: ServeMetrics,
+    queue: VecDeque<Request>,
+    active_set: Option<usize>,
+    weights: TensorMap,
+    /// SRAM slot: the currently loaded trainables.
+    sram: TensorMap,
+    rng: Pcg64,
+    wall: f64,
+}
+
+impl<'a> Server<'a> {
+    pub fn new(
+        dep: &'a Deployment,
+        store: &'a SetStore,
+        clock: LifetimeClock,
+        policy: BatchPolicy,
+        seed: u64,
+    ) -> Server<'a> {
+        let mut rng = Pcg64::with_stream(seed, 0x5e12e);
+        let weights = dep.drifted_weights(clock.device_age(), &mut rng);
+        Server {
+            dep,
+            store,
+            clock,
+            policy,
+            metrics: ServeMetrics::default(),
+            queue: VecDeque::new(),
+            active_set: None,
+            weights,
+            sram: TensorMap::new(),
+            rng,
+            wall: 0.0,
+        }
+    }
+
+    pub fn submit(&mut self, req: Request) {
+        // Align the serving wall with the arrival timeline so measured
+        // latency = queueing + execution (never negative).
+        if req.arrival_wall > self.wall {
+            self.wall = req.arrival_wall;
+        }
+        self.queue.push_back(req);
+    }
+
+    /// Route: pick the set for the current age; reload SRAM + refresh the
+    /// drifted weight view when the era changes.
+    fn route(&mut self) -> usize {
+        let age = self.clock.device_age();
+        let idx = self
+            .store
+            .select_index(age)
+            .expect("serving requires a scheduled store");
+        if self.active_set != Some(idx) {
+            self.sram = self.store.sets[idx].trainables.clone();
+            self.weights = self.dep.drifted_weights(age, &mut self.rng);
+            self.metrics.set_switches += 1;
+            self.active_set = Some(idx);
+        }
+        idx
+    }
+
+    /// Serve queued requests in batches until the queue is drained.
+    /// `wall_per_exec` advances the clock per executed batch (models the
+    /// execution time at the accelerated timescale).
+    pub fn drain(&mut self, wall_per_exec: f64) -> Result<()> {
+        while !self.queue.is_empty() {
+            self.step(wall_per_exec)?;
+        }
+        Ok(())
+    }
+
+    /// Execute one batch: honors `max_batch` and `max_wait`.
+    pub fn step(&mut self, wall_per_exec: f64) -> Result<()> {
+        if self.queue.is_empty() {
+            return Ok(());
+        }
+        let set_index = self.route();
+        // Take up to max_batch requests (oldest first).
+        let take = self.queue.len().min(self.policy.max_batch);
+        let batch: Vec<Request> =
+            self.queue.drain(..take).collect();
+        // Pick the graph: full-batch graph when full, else batch-1 loop.
+        let (exec_batch, pad) = if batch.len() == self.policy.max_batch {
+            (self.policy.max_batch, 0)
+        } else {
+            (self.policy.max_batch, self.policy.max_batch - batch.len())
+        };
+        let indices: Vec<usize> = batch
+            .iter()
+            .map(|r| r.sample)
+            .chain(std::iter::repeat(0).take(pad))
+            .collect();
+        let data = self.dep.dataset.test_batch(&indices);
+        let exe = self.dep.rt.executable(
+            &self.dep.manifest.model,
+            &self.dep.comp_key(exec_batch),
+        )?;
+        let mut inputs = TensorMap::new();
+        inputs.insert("x".into(), data.x);
+        let outs = exe.run_named(&[
+            &self.weights,
+            &self.dep.frozen,
+            &self.sram,
+            &inputs,
+        ])?;
+        let logits = outs.get("logits").unwrap();
+        self.wall += wall_per_exec;
+        self.clock.advance(wall_per_exec);
+        // Score the real (non-padded) rows.
+        let labels = data.y.as_i32();
+        let per_row = row_correct(logits, labels);
+        for (i, req) in batch.iter().enumerate() {
+            let latency = self.wall - req.arrival_wall;
+            self.metrics.served += 1;
+            if per_row[i] {
+                self.metrics.correct += 1;
+            }
+            self.metrics.latencies.push(latency.max(0.0));
+            let _ = Completion {
+                id: req.id,
+                correct: per_row[i],
+                latency,
+                batch_size: batch.len(),
+                set_index,
+            };
+        }
+        self.metrics.batches += 1;
+        self.metrics.occupancy_sum +=
+            batch.len() as f64 / exec_batch as f64;
+        Ok(())
+    }
+}
+
+fn row_correct(logits: &Tensor, labels: &[i32]) -> Vec<bool> {
+    let classes = logits.shape[1];
+    let v = logits.as_f32();
+    labels
+        .iter()
+        .enumerate()
+        .map(|(i, &label)| {
+            let row = &v[i * classes..(i + 1) * classes];
+            let mut best = 0usize;
+            for c in 1..classes {
+                if row[c] > row[best] {
+                    best = c;
+                }
+            }
+            best as i32 == label
+        })
+        .collect()
+}
+
+/// Poisson workload generator over the test split.
+pub struct Workload {
+    pub rate: f64, // requests per wall second
+    rng: Pcg64,
+    next_id: u64,
+    wall: f64,
+}
+
+impl Workload {
+    pub fn new(rate: f64, seed: u64) -> Workload {
+        Workload {
+            rate,
+            rng: Pcg64::with_stream(seed, 0x3019),
+            next_id: 0,
+            wall: 0.0,
+        }
+    }
+
+    /// Generate arrivals for the next `dt` wall-seconds at device age
+    /// provided by `clock`.
+    pub fn arrivals(&mut self, dt: f64, clock: &LifetimeClock,
+                    test_len: usize) -> Vec<Request> {
+        let mut out = Vec::new();
+        let end = self.wall + dt;
+        loop {
+            let gap = -self.rng.uniform().max(1e-12).ln() / self.rate;
+            if self.wall + gap > end {
+                self.wall = end;
+                break;
+            }
+            self.wall += gap;
+            out.push(Request {
+                id: self.next_id,
+                sample: self.rng.below(test_len),
+                arrival_age: clock.device_age(),
+                arrival_wall: self.wall,
+            });
+            self.next_id += 1;
+        }
+        out
+    }
+
+    /// Acceptance check: `accuracy_of` vs per-row scoring must agree.
+    pub fn _doc() {}
+}
+
+#[allow(unused_imports)]
+use accuracy_of as _keep;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_accelerates() {
+        let mut c = LifetimeClock::new(1.0, 1e6);
+        c.advance(10.0);
+        assert!((c.device_age() - (1.0 + 1e7)).abs() < 1.0);
+    }
+
+    #[test]
+    fn workload_poisson_rate() {
+        let mut w = Workload::new(100.0, 1);
+        let clock = LifetimeClock::new(1.0, 1.0);
+        let reqs = w.arrivals(10.0, &clock, 512);
+        // ~1000 expected; Poisson std ≈ 32.
+        assert!(
+            (800..1200).contains(&reqs.len()),
+            "got {}",
+            reqs.len()
+        );
+        // Sample indices within range, ids unique and increasing.
+        assert!(reqs.iter().all(|r| r.sample < 512));
+        assert!(reqs.windows(2).all(|w| w[0].id < w[1].id));
+        assert!(reqs
+            .windows(2)
+            .all(|w| w[0].arrival_wall <= w[1].arrival_wall));
+    }
+
+    #[test]
+    fn metrics_percentiles() {
+        let mut m = ServeMetrics::default();
+        m.latencies = vec![0.1, 0.2, 0.3, 0.4, 1.0];
+        assert!((m.latency_percentile(0.5) - 0.3).abs() < 1e-9);
+        assert!((m.latency_percentile(1.0) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn row_correct_matches_accuracy() {
+        let logits = Tensor::from_f32(
+            &[2, 3],
+            vec![0.1, 0.9, 0.0, 0.5, 0.2, 0.3],
+        );
+        let rows = row_correct(&logits, &[1, 0]);
+        assert_eq!(rows, vec![true, true]);
+        let acc = accuracy_of(&logits, &[1, 2]);
+        assert!((acc - 0.5).abs() < 1e-9);
+    }
+}

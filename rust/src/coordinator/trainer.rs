@@ -1,0 +1,246 @@
+//! Training drivers: both run entirely in Rust against AOT train-step
+//! executables (Python never executes at deployment/scheduling time).
+//!
+//! - [`train_backbone`] — pre-deployment QAT (paper §III-D first step).
+//! - [`train_comp_at`] — drift-inject compensation training (Alg. 1
+//!   lines 7–12): a fresh drift instance is sampled for every mini-batch,
+//!   the frozen backbone is *temporarily* replaced by the drifted weights
+//!   for the forward/backward pass, and only (b, d) update.
+
+use crate::coordinator::{eval, Deployment};
+use crate::runtime::Runtime;
+use crate::util::rng::Pcg64;
+use crate::util::tensor::{DType, Tensor, TensorMap};
+use anyhow::{Context, Result};
+use std::sync::Arc;
+
+/// Hyper-parameters for compensation training (paper: 3 epochs, batch 64).
+#[derive(Debug, Clone)]
+pub struct CompTrainCfg {
+    pub epochs: usize,
+    pub batch: usize,
+    pub lr: f64,
+    /// Warm-start from the previous set instead of re-initializing
+    /// (speed knob; the paper re-initializes — set false for fidelity).
+    pub warm_start: bool,
+    /// Cap on train-split samples per epoch (budget knob; 0 = all).
+    pub max_train: usize,
+}
+
+impl Default for CompTrainCfg {
+    fn default() -> Self {
+        CompTrainCfg {
+            epochs: 3,
+            batch: 64,
+            // Vector-only updates tolerate a large lr, but 1.0 can
+            // diverge on weak backbones at large drift; 0.3 is stable
+            // across the whole model×drift grid.
+            lr: 0.3,
+            warm_start: true,
+            max_train: 0,
+        }
+    }
+}
+
+/// Outcome of one compensation training run.
+#[derive(Debug, Clone)]
+pub struct CompTrainResult {
+    pub trainables: TensorMap,
+    pub final_loss: f64,
+    pub steps: usize,
+}
+
+/// Train compensation vectors for drift level `t` (Alg. 1 lines 7–12).
+pub fn train_comp_at(
+    dep: &Deployment,
+    t: f64,
+    init: TensorMap,
+    cfg: &CompTrainCfg,
+    rng: &mut Pcg64,
+) -> Result<CompTrainResult> {
+    let exe = dep
+        .rt
+        .executable(&dep.manifest.model, &dep.train_key())?;
+    let mut trainables = init;
+    let mut momenta: TensorMap = trainables
+        .iter()
+        .map(|(k, v)| {
+            (format!("m:{k}"), Tensor::zeros(DType::F32, &v.shape))
+        })
+        .collect();
+    let n_train = if cfg.max_train == 0 {
+        dep.dataset.train_len()
+    } else {
+        dep.dataset.train_len().min(cfg.max_train)
+    };
+    let mut order: Vec<usize> = (0..n_train).collect();
+    let total_steps = cfg.epochs * (n_train / cfg.batch).max(1);
+    let mut final_loss = f64::NAN;
+    let mut steps = 0usize;
+    // Reused across mini-batches: drift readout buffers (§Perf L3).
+    let mut drifted = TensorMap::new();
+    for _epoch in 0..cfg.epochs {
+        rng.shuffle(&mut order);
+        for chunk in order.chunks(cfg.batch) {
+            if chunk.len() < cfg.batch {
+                break; // static batch dimension
+            }
+            // Cosine lr decay to 10% over the run (host-side; lr is a
+            // graph input so no re-lowering is needed).
+            let prog = steps as f64 / total_steps.max(1) as f64;
+            let lr = cfg.lr
+                * (0.1 + 0.9 * 0.5
+                    * (1.0 + (std::f64::consts::PI * prog).cos()));
+            let mut scalars = TensorMap::new();
+            scalars.insert("lr".into(), Tensor::scalar_f32(lr as f32));
+            // Paper line 8: a fresh drift instance per mini-batch.
+            dep.drifted_weights_into(t, rng, &mut drifted);
+            let b = dep.dataset.train_batch(chunk);
+            let mut batch_map = TensorMap::new();
+            batch_map.insert("x".into(), b.x);
+            batch_map.insert("y".into(), b.y);
+            let outs = exe
+                .run_named(&[
+                    &drifted,
+                    &dep.frozen,
+                    &trainables,
+                    &momenta,
+                    &batch_map,
+                    &scalars,
+                ])
+                .context("train_comp step")?;
+            for (name, tensor) in outs {
+                if name == "loss" {
+                    final_loss = tensor.as_f32()[0] as f64;
+                } else if let Some(m) = momenta.get_mut(&name) {
+                    *m = tensor;
+                } else if let Some(tr) = trainables.get_mut(&name) {
+                    *tr = tensor;
+                }
+            }
+            steps += 1;
+        }
+    }
+    Ok(CompTrainResult {
+        trainables,
+        final_loss,
+        steps,
+    })
+}
+
+/// Backbone QAT configuration.
+#[derive(Debug, Clone)]
+pub struct BackboneTrainCfg {
+    pub steps: usize,
+    pub batch: usize,
+    pub lr: f64,
+    /// Cosine decay to this fraction of `lr` by the last step.
+    pub lr_final_frac: f64,
+    /// Evaluate every `eval_every` steps (0 = never).
+    pub eval_every: usize,
+    pub seed: u64,
+}
+
+impl Default for BackboneTrainCfg {
+    fn default() -> Self {
+        BackboneTrainCfg {
+            steps: 400,
+            batch: 64,
+            lr: 0.08,
+            lr_final_frac: 0.1,
+            eval_every: 100,
+            seed: 0xbac1b0e,
+        }
+    }
+}
+
+/// QAT-train a backbone from scratch; returns train-form parameters and
+/// the (loss, accuracy) trace for EXPERIMENTS.md.
+pub fn train_backbone(
+    rt: &Arc<Runtime>,
+    model: &str,
+    cfg: &BackboneTrainCfg,
+) -> Result<(TensorMap, Vec<(usize, f64, f64)>)> {
+    let manifest = rt.manifest(model)?;
+    let exe = rt.executable(model, "train_backbone")?;
+    let dataset = crate::data::for_model(model, crate::data::TASK_SEED)?;
+    let mut params = crate::nn::init::init_train_params(&manifest, cfg.seed);
+    let mut momenta = crate::nn::init::zero_momenta(&manifest.train_weights);
+    let mut rng = Pcg64::with_stream(cfg.seed, 0x7a11);
+    let mut order: Vec<usize> = (0..dataset.train_len()).collect();
+    rng.shuffle(&mut order);
+    let mut cursor = 0usize;
+    let mut trace = Vec::new();
+    let mut loss = f64::NAN;
+    for step in 0..cfg.steps {
+        if cursor + cfg.batch > order.len() {
+            rng.shuffle(&mut order);
+            cursor = 0;
+        }
+        let chunk = &order[cursor..cursor + cfg.batch];
+        cursor += cfg.batch;
+        let b = dataset.train_batch(chunk);
+        // Cosine learning-rate decay.
+        let prog = step as f64 / cfg.steps.max(1) as f64;
+        let lr = cfg.lr
+            * (cfg.lr_final_frac
+                + (1.0 - cfg.lr_final_frac)
+                    * 0.5
+                    * (1.0 + (std::f64::consts::PI * prog).cos()));
+        let mut batch_map = TensorMap::new();
+        batch_map.insert("x".into(), b.x);
+        batch_map.insert("y".into(), b.y);
+        batch_map.insert("lr".into(), Tensor::scalar_f32(lr as f32));
+        let outs = exe
+            .run_named(&[&params, &momenta, &batch_map])
+            .context("train_backbone step")?;
+        for (name, tensor) in outs {
+            if name == "loss" {
+                loss = tensor.as_f32()[0] as f64;
+            } else if name.starts_with("m:") {
+                momenta.insert(name, tensor);
+            } else {
+                params.insert(name, tensor);
+            }
+        }
+        if cfg.eval_every > 0
+            && (step + 1) % cfg.eval_every == 0
+        {
+            let acc =
+                eval_backbone(rt, model, &params, dataset.as_ref(), 512)?;
+            trace.push((step + 1, loss, acc));
+        }
+    }
+    Ok((params, trace))
+}
+
+/// Evaluate a train-form backbone (BN running stats) on the test split.
+pub fn eval_backbone(
+    rt: &Arc<Runtime>,
+    model: &str,
+    params: &TensorMap,
+    dataset: &dyn crate::data::Dataset,
+    max_samples: usize,
+) -> Result<f64> {
+    let exe = rt.executable(model, "train_fwd_b256")?;
+    let batch = 256usize;
+    let n = dataset.test_len().min(max_samples);
+    let mut acc = 0.0;
+    let mut total = 0;
+    let mut idx = 0;
+    while idx + batch <= n {
+        let indices: Vec<usize> = (idx..idx + batch).collect();
+        let b = dataset.test_batch(&indices);
+        let mut inputs = TensorMap::new();
+        inputs.insert("x".into(), b.x);
+        let outs = exe.run_named(&[params, &inputs])?;
+        acc += eval::accuracy_of(
+            outs.get("logits").unwrap(),
+            b.y.as_i32(),
+        ) * batch as f64;
+        total += batch;
+        idx += batch;
+    }
+    anyhow::ensure!(total > 0, "test set smaller than one batch");
+    Ok(acc / total as f64)
+}

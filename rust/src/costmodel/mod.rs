@@ -1,0 +1,449 @@
+//! 22 nm hardware cost model (paper Tables I, III, IV, V and Eq. 10).
+//!
+//! Pure arithmetic over layer geometry + method parameters, so tables can
+//! be regenerated both for this repo's scaled configs and for the paper's
+//! *real* ResNet-20 geometry ([`paper_resnet20_layers`]) — the latter lets
+//! EXPERIMENTS.md compare against the paper's absolute numbers.
+
+pub mod constants {
+    //! Paper Table I: RRAM-IMC [15] vs SRAM-IMC [16] at 22 nm, int4.
+
+    /// RRAM-IMC energy efficiency (TOPS/W, int4).
+    pub const RRAM_TOPS_W: f64 = 209.0;
+    /// SRAM-IMC energy efficiency (TOPS/W, int4).
+    pub const SRAM_TOPS_W: f64 = 89.0;
+    /// RRAM-IMC memory density (Mb/mm²).
+    pub const RRAM_MB_MM2: f64 = 2.53;
+    /// SRAM-IMC memory density (Mb/mm²).
+    pub const SRAM_MB_MM2: f64 = 0.31;
+    /// Weight precision (bits) for both memories.
+    pub const W_BITS: f64 = 4.0;
+    /// Compensation parameters are stored int4 (the paper's int4 setting;
+    /// its Table IV storage figures imply ≈5 bits/param incl. scales).
+    pub const VEC_BITS: f64 = 4.0;
+}
+
+use crate::nn::manifest::LayerGeom;
+
+/// Adaptation method being costed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    VeraPlus,
+    Vera,
+    Lora,
+}
+
+impl Method {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::VeraPlus => "VeRA+",
+            Method::Vera => "VeRA",
+            Method::Lora => "LoRA",
+        }
+    }
+
+    pub fn key(&self) -> &'static str {
+        match self {
+            Method::VeraPlus => "veraplus",
+            Method::Vera => "vera",
+            Method::Lora => "lora",
+        }
+    }
+}
+
+/// Per-method cost breakdown for one model at one rank.
+#[derive(Debug, Clone)]
+pub struct MethodCost {
+    pub method: Method,
+    pub rank: usize,
+    pub n_sets: usize,
+    /// Backbone parameters (RRAM).
+    pub backbone_params: u64,
+    /// Backbone MACs per inference.
+    pub backbone_macs: u64,
+    /// Shared projection parameters (stored once, SRAM-resident).
+    pub shared_params: u64,
+    /// Drift-specific parameters per set (all layers).
+    pub per_set_params: u64,
+    /// Compensation MACs per inference (branch compute).
+    pub comp_macs: u64,
+}
+
+impl MethodCost {
+    /// Parameter overhead: all stored compensation parameters (shared
+    /// projections + every drift set) over backbone parameters — the
+    /// paper's Table III "Params Overhead ... with 11 sets" convention.
+    pub fn params_overhead(&self) -> f64 {
+        (self.shared_params
+            + self.n_sets as u64 * self.per_set_params) as f64
+            / self.backbone_params as f64
+    }
+
+    /// Operation overhead per inference (paper Table III "Ops Overhead").
+    pub fn ops_overhead(&self) -> f64 {
+        self.comp_macs as f64 / self.backbone_macs as f64
+    }
+
+    /// External-memory storage for the full lifetime set (paper Table IV
+    /// "Storage"): shared projections + n_sets drift-specific vectors,
+    /// fp16. Returns KB.
+    pub fn storage_kb(&self) -> f64 {
+        (self.shared_params + self.n_sets as u64 * self.per_set_params)
+            as f64
+            * (constants::VEC_BITS / 8.0)
+            / 1024.0
+    }
+
+    /// Weight data moved from external memory into SRAM over the lifetime
+    /// (paper Table IV "Weight Data Movement"): shared projections once +
+    /// one per-set load per scheduled set. Returns KB.
+    pub fn movement_kb(&self) -> f64 {
+        self.storage_kb()
+    }
+
+    /// SRAM-IMC bits needed while serving: shared projections + one set.
+    pub fn sram_bits(&self) -> f64 {
+        (self.shared_params + self.per_set_params) as f64
+            * constants::VEC_BITS
+    }
+
+    /// RRAM macro area (mm²) for the backbone.
+    pub fn rram_area_mm2(&self) -> f64 {
+        self.backbone_params as f64 * constants::W_BITS
+            / 1e6
+            / constants::RRAM_MB_MM2
+    }
+
+    /// SRAM-IMC area (mm²) for the compensation module.
+    pub fn sram_area_mm2(&self) -> f64 {
+        self.sram_bits() / 1e6 / constants::SRAM_MB_MM2
+    }
+
+    pub fn total_area_mm2(&self) -> f64 {
+        self.rram_area_mm2() + self.sram_area_mm2()
+    }
+
+    pub fn area_overhead(&self) -> f64 {
+        self.sram_area_mm2() / self.rram_area_mm2()
+    }
+
+    /// Energy per inference (nJ), paper Eq. 10: backbone ops on RRAM-IMC,
+    /// compensation ops on SRAM-IMC. 1 MAC = 1 op (Table I convention).
+    pub fn energy_nj(&self) -> f64 {
+        self.backbone_macs as f64 / constants::RRAM_TOPS_W / 1e3
+            + self.comp_macs as f64 / constants::SRAM_TOPS_W / 1e3
+    }
+
+    /// Backbone-only energy (pure-RRAM baseline row).
+    pub fn backbone_energy_nj(&self) -> f64 {
+        self.backbone_macs as f64 / constants::RRAM_TOPS_W / 1e3
+    }
+
+    pub fn energy_overhead(&self) -> f64 {
+        self.energy_nj() / self.backbone_energy_nj() - 1.0
+    }
+}
+
+/// Cost a method over a layer inventory (paper §III-C accounting):
+///
+/// - **VeRA+**: shared `A_max[r, d_in_max]` + `B_max[d_out_max, r]`;
+///   per layer per set `(r + c_out)` scalars; branch compute per position
+///   `r·(c_in + c_out)` matmul MACs + `(r + c_out)` Hadamard ops
+///   (1×1 scheme).
+/// - **VeRA** (official CNN lowering, paper §III-C: `A[r·K, C_in·K]`,
+///   `B[C_out·K, r·K]`): shared `K²·r·(d_in_max + d_out_max)`; per layer
+///   per set `(r·K + c_out·K)` vectors; branch compute
+///   `r·K²·(c_in + c_out)` + Hadamards per position.
+/// - **LoRA** (same official lowering, but `A`/`B` are per-layer
+///   trainables): per layer per set `r·K²·(c_in + c_out)`; branch compute
+///   `r·K²·(c_in + c_out)` per position, no Hadamards.
+pub fn cost_method(
+    layers: &[LayerGeom],
+    d_in_max: usize,
+    d_out_max: usize,
+    method: Method,
+    rank: usize,
+    n_sets: usize,
+) -> MethodCost {
+    let backbone_params: u64 = layers.iter().map(|l| l.params()).sum();
+    let backbone_macs: u64 = layers.iter().map(|l| l.macs()).sum();
+    let r = rank as u64;
+    let mut shared_params = 0u64;
+    let mut per_set_params = 0u64;
+    let mut comp_macs = 0u64;
+    let kmax = layers.iter().map(|l| l.k).max().unwrap_or(1) as u64;
+    match method {
+        Method::VeraPlus => {
+            shared_params =
+                r * d_in_max as u64 + d_out_max as u64 * r;
+        }
+        Method::Vera => {
+            shared_params = kmax * kmax * r
+                * (d_in_max as u64 + d_out_max as u64);
+        }
+        Method::Lora => {}
+    }
+    for l in layers {
+        let k = l.k as u64;
+        let positions = if l.kind == "conv" {
+            (l.hw_out * l.hw_out) as u64
+        } else {
+            l.hw_out as u64
+        };
+        let (cin, cout) = (l.cin as u64, l.cout as u64);
+        match method {
+            Method::VeraPlus => {
+                per_set_params += r + cout;
+                comp_macs += positions * (r * (cin + cout) + r + cout);
+            }
+            Method::Vera => {
+                per_set_params += r * k + cout * k;
+                comp_macs += positions
+                    * (r * k * k * (cin + cout) + r * k + cout * k);
+            }
+            Method::Lora => {
+                per_set_params += r * k * k * (cin + cout);
+                comp_macs += positions * (r * k * k * (cin + cout));
+            }
+        }
+    }
+    MethodCost {
+        method,
+        rank,
+        n_sets,
+        backbone_params,
+        backbone_macs,
+        shared_params,
+        per_set_params,
+        comp_macs,
+    }
+}
+
+/// BN-based calibration baseline cost (paper Table V, Joshi et al. [7]).
+#[derive(Debug, Clone)]
+pub struct BnCalibCost {
+    /// Stored calibration subset (bytes).
+    pub calib_bytes: u64,
+    /// BN parameter storage (bytes).
+    pub bn_param_bytes: u64,
+    /// Extra ops per inference from unfolded BN (normalize+scale+shift
+    /// per activation element).
+    pub bn_ops: u64,
+    pub backbone_macs: u64,
+}
+
+impl BnCalibCost {
+    /// Paper setting: 5% of the training set stored on-chip.
+    pub fn for_cifar_like(
+        layers: &[LayerGeom],
+        train_set: usize,
+        image_bytes: usize,
+    ) -> BnCalibCost {
+        let backbone_macs: u64 = layers.iter().map(|l| l.macs()).sum();
+        let bn_channels: u64 = layers
+            .iter()
+            .filter(|l| l.kind == "conv")
+            .map(|l| l.cout as u64)
+            .sum();
+        let bn_ops: u64 = layers
+            .iter()
+            .filter(|l| l.kind == "conv")
+            .map(|l| 2 * (l.hw_out * l.hw_out * l.cout) as u64)
+            .sum();
+        BnCalibCost {
+            calib_bytes: (train_set as u64 / 20) * image_bytes as u64,
+            bn_param_bytes: bn_channels * 4 * 4, // γ, β, µ, σ² fp32
+            bn_ops,
+            backbone_macs,
+        }
+    }
+
+    pub fn storage_mb(&self) -> f64 {
+        (self.calib_bytes + self.bn_param_bytes) as f64 / 1e6
+    }
+
+    pub fn ops_overhead(&self) -> f64 {
+        self.bn_ops as f64 / self.backbone_macs as f64
+    }
+}
+
+/// The paper's *real* ResNet-20 (CIFAR) geometry: widths 16/32/64,
+/// 32×32 input, 3 stages × 3 blocks, used to regenerate Tables III–V at
+/// paper scale without needing executable artifacts.
+pub fn paper_resnet20_layers(classes: usize) -> Vec<LayerGeom> {
+    let mut layers = Vec::new();
+    let widths = [16usize, 32, 64];
+    let mut hw = 32usize;
+    layers.push(LayerGeom {
+        name: "stem".into(),
+        kind: "conv".into(),
+        cin: 3,
+        cout: 16,
+        k: 3,
+        stride: 1,
+        hw_in: hw,
+        hw_out: hw,
+    });
+    let mut cin = 16;
+    for (s, &w) in widths.iter().enumerate() {
+        for b in 0..3 {
+            let stride = if s > 0 && b == 0 { 2 } else { 1 };
+            let hw_out = hw / stride;
+            layers.push(LayerGeom {
+                name: format!("s{s}b{b}.conv1"),
+                kind: "conv".into(),
+                cin,
+                cout: w,
+                k: 3,
+                stride,
+                hw_in: hw,
+                hw_out,
+            });
+            layers.push(LayerGeom {
+                name: format!("s{s}b{b}.conv2"),
+                kind: "conv".into(),
+                cin: w,
+                cout: w,
+                k: 3,
+                stride: 1,
+                hw_in: hw_out,
+                hw_out,
+            });
+            if stride != 1 || cin != w {
+                layers.push(LayerGeom {
+                    name: format!("s{s}b{b}.down"),
+                    kind: "conv".into(),
+                    cin,
+                    cout: w,
+                    k: 1,
+                    stride,
+                    hw_in: hw,
+                    hw_out,
+                });
+            }
+            cin = w;
+            hw = hw_out;
+        }
+    }
+    layers.push(LayerGeom {
+        name: "fc".into(),
+        kind: "linear".into(),
+        cin: 64,
+        cout: classes,
+        k: 1,
+        stride: 1,
+        hw_in: 1,
+        hw_out: 1,
+    });
+    layers
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn paper20() -> Vec<LayerGeom> {
+        paper_resnet20_layers(10)
+    }
+
+    #[test]
+    fn paper_resnet20_param_count() {
+        let layers = paper20();
+        let params: u64 = layers.iter().map(|l| l.params()).sum();
+        // Real ResNet-20 ≈ 0.27 M parameters.
+        assert!(
+            (260_000..290_000).contains(&params),
+            "params {params}"
+        );
+    }
+
+    #[test]
+    fn pure_rram_area_and_energy_match_table4() {
+        let layers = paper20();
+        let c = cost_method(&layers, 64, 64, Method::VeraPlus, 1, 11);
+        // Paper Table IV pure-RRAM row: 0.429 mm², 210.2 nJ.
+        assert!(
+            (c.rram_area_mm2() - 0.429).abs() < 0.02,
+            "area {}",
+            c.rram_area_mm2()
+        );
+        assert!(
+            (c.backbone_energy_nj() - 210.0).abs() < 25.0,
+            "energy {}",
+            c.backbone_energy_nj()
+        );
+    }
+
+    #[test]
+    fn method_overheads_match_table3() {
+        // Table III @ r=1, 11 sets: LoRA 47.0% params / 11.5% ops;
+        // VeRA 11.9% / 12.5%; VeRA+ 3.5% / 1.9%.
+        let layers = paper20();
+        let vp = cost_method(&layers, 64, 64, Method::VeraPlus, 1, 11);
+        let ve = cost_method(&layers, 64, 64, Method::Vera, 1, 11);
+        let lo = cost_method(&layers, 64, 64, Method::Lora, 1, 11);
+        let close = |got: f64, want: f64, tol: f64| {
+            assert!(
+                (got / want - 1.0).abs() < tol,
+                "got {got:.4}, paper {want:.4}"
+            );
+        };
+        close(vp.params_overhead(), 0.035, 0.35);
+        close(ve.params_overhead(), 0.119, 0.45);
+        close(lo.params_overhead(), 0.470, 0.35);
+        close(vp.ops_overhead(), 0.019, 0.45);
+        close(ve.ops_overhead(), 0.125, 0.45);
+        close(lo.ops_overhead(), 0.115, 0.45);
+        assert!(vp.params_overhead() < ve.params_overhead());
+        assert!(ve.params_overhead() < lo.params_overhead());
+    }
+
+    #[test]
+    fn veraplus_9x_cheaper_than_vera_first_stage() {
+        // §III-C: the 1×1 scheme cuts the K×K lowering by up to 9×.
+        let layers = paper20();
+        let vp = cost_method(&layers, 64, 64, Method::VeraPlus, 1, 1);
+        let ve = cost_method(&layers, 64, 64, Method::Vera, 1, 1);
+        let ratio = ve.comp_macs as f64 / vp.comp_macs as f64;
+        assert!(ratio > 5.0 && ratio < 9.5, "ratio {ratio}");
+    }
+
+    #[test]
+    fn storage_matches_table4_scale() {
+        // Table IV storage @ 11 sets: VeRA+ r=1 5.15 KB, VeRA r=1
+        // 16.5 KB, LoRA r=1 66.52 KB. int4 packing puts us within ~30%.
+        let layers = paper20();
+        let vp = cost_method(&layers, 64, 64, Method::VeraPlus, 1, 11);
+        let ve = cost_method(&layers, 64, 64, Method::Vera, 1, 11);
+        let lo = cost_method(&layers, 64, 64, Method::Lora, 1, 11);
+        assert!((vp.storage_kb() - 5.15).abs() < 2.0, "{}", vp.storage_kb());
+        assert!((ve.storage_kb() - 16.5).abs() < 6.0, "{}", ve.storage_kb());
+        assert!((lo.storage_kb() - 66.5).abs() < 25.0, "{}", lo.storage_kb());
+        // >1000× below the BN baseline's 7.5 MB.
+        assert!(vp.storage_kb() * 1000.0 < 7500.0 * 1.1);
+    }
+
+    #[test]
+    fn bn_calib_matches_table5_scale() {
+        // Paper Table V: 7.5 MB storage, 1.8% ops overhead for
+        // ResNet-20 on CIFAR-10 (50k train images, 3 KB each).
+        let layers = paper20();
+        let bn = BnCalibCost::for_cifar_like(&layers, 50_000, 3072);
+        assert!((bn.storage_mb() - 7.7).abs() < 0.5, "{}", bn.storage_mb());
+        assert!(bn.ops_overhead() < 0.05);
+    }
+
+    #[test]
+    fn energy_overhead_ordering_matches_table4() {
+        let layers = paper20();
+        let vp1 = cost_method(&layers, 64, 64, Method::VeraPlus, 1, 11);
+        let vp6 = cost_method(&layers, 64, 64, Method::VeraPlus, 6, 11);
+        let ve1 = cost_method(&layers, 64, 64, Method::Vera, 1, 11);
+        let lo6 = cost_method(&layers, 64, 64, Method::Lora, 6, 11);
+        assert!(vp1.energy_overhead() < vp6.energy_overhead());
+        assert!(vp1.energy_overhead() < ve1.energy_overhead());
+        assert!(lo6.energy_overhead() > vp6.energy_overhead());
+        // VeRA+ r=1 energy overhead small (paper: 4.5%).
+        assert!(vp1.energy_overhead() < 0.10, "{}", vp1.energy_overhead());
+    }
+}

@@ -1,0 +1,225 @@
+//! Procedural token-classification tasks (QQP / SST-5 analogs).
+//!
+//! - `pair_task` (QQP analog, 2 classes): the sequence is two halves;
+//!   label 1 ("paraphrase") when the second half is a shuffled copy of the
+//!   first with small token perturbations, label 0 when it is independent.
+//! - `sentiment_task` (SST-5 analog, 5 classes): tokens are drawn from a
+//!   vocabulary with a latent valence; the label is the quantized mean
+//!   valence of the sequence. Adjacent classes overlap — like SST-5's
+//!   ordinal labels — which makes the task measurably harder than QQP,
+//!   mirroring the paper's degradation ordering.
+
+use crate::data::{Batch, Dataset};
+use crate::util::rng::Pcg64;
+use crate::util::tensor::Tensor;
+
+pub const SEQ: usize = 32;
+pub const VOCAB: usize = 512;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Kind {
+    Pair,
+    Sentiment,
+}
+
+pub struct TokenTask {
+    kind: Kind,
+    seed: u64,
+    /// Latent valence per token (sentiment task).
+    valence: Vec<f32>,
+    train_n: usize,
+    test_n: usize,
+}
+
+impl TokenTask {
+    pub fn pair_task(seed: u64) -> TokenTask {
+        TokenTask {
+            kind: Kind::Pair,
+            seed,
+            valence: Vec::new(),
+            train_n: 2048,
+            test_n: 512,
+        }
+    }
+
+    pub fn sentiment_task(seed: u64) -> TokenTask {
+        let mut rng = Pcg64::with_stream(seed, 0x7e47);
+        let valence = (0..VOCAB)
+            .map(|_| rng.uniform_in(-1.0, 1.0) as f32)
+            .collect();
+        TokenTask {
+            kind: Kind::Sentiment,
+            seed,
+            valence,
+            train_n: 2048,
+            test_n: 512,
+        }
+    }
+
+    fn sample(&self, split: u64, idx: usize) -> (Vec<i32>, i32) {
+        let mut rng = Pcg64::with_stream(
+            self.seed ^ (split << 32) ^ idx as u64,
+            0x70c5,
+        );
+        match self.kind {
+            Kind::Pair => {
+                let half = SEQ / 2;
+                let label = rng.below(2) as i32;
+                let a: Vec<i32> = (0..half)
+                    .map(|_| rng.below(VOCAB) as i32)
+                    .collect();
+                let b: Vec<i32> = if label == 1 {
+                    // Shuffled copy with ~10% token substitutions.
+                    let mut b = a.clone();
+                    rng.shuffle(&mut b);
+                    for tok in b.iter_mut() {
+                        if rng.uniform() < 0.1 {
+                            *tok = rng.below(VOCAB) as i32;
+                        }
+                    }
+                    b
+                } else {
+                    (0..half).map(|_| rng.below(VOCAB) as i32).collect()
+                };
+                let mut seq = a;
+                seq.extend(b);
+                (seq, label)
+            }
+            Kind::Sentiment => {
+                // Draw a latent target valence, then sample tokens whose
+                // valence is near it (rejection from 3 candidates).
+                let target = rng.uniform_in(-1.0, 1.0) as f32;
+                let seq: Vec<i32> = (0..SEQ)
+                    .map(|_| {
+                        let mut best = rng.below(VOCAB);
+                        let mut bd = (self.valence[best] - target).abs();
+                        for _ in 0..2 {
+                            let c = rng.below(VOCAB);
+                            let d = (self.valence[c] - target).abs();
+                            if d < bd {
+                                best = c;
+                                bd = d;
+                            }
+                        }
+                        best as i32
+                    })
+                    .collect();
+                let mean: f32 = seq
+                    .iter()
+                    .map(|&t| self.valence[t as usize])
+                    .sum::<f32>()
+                    / SEQ as f32;
+                // Quantize the realized mean valence into 5 ordinal bins.
+                let label = (((mean + 0.75) / 1.5 * 5.0).floor() as i32)
+                    .clamp(0, 4);
+                (seq, label)
+            }
+        }
+    }
+
+    fn batch(&self, split: u64, indices: &[usize]) -> Batch {
+        let n = indices.len();
+        let mut xs = Vec::with_capacity(n * SEQ);
+        let mut ys = Vec::with_capacity(n);
+        for &i in indices {
+            let (seq, y) = self.sample(split, i);
+            xs.extend_from_slice(&seq);
+            ys.push(y);
+        }
+        Batch {
+            x: Tensor::from_i32(&[n, SEQ], xs),
+            y: Tensor::from_i32(&[n], ys),
+        }
+    }
+}
+
+impl Dataset for TokenTask {
+    fn classes(&self) -> usize {
+        match self.kind {
+            Kind::Pair => 2,
+            Kind::Sentiment => 5,
+        }
+    }
+
+    fn train_len(&self) -> usize {
+        self.train_n
+    }
+
+    fn test_len(&self) -> usize {
+        self.test_n
+    }
+
+    fn train_batch(&self, indices: &[usize]) -> Batch {
+        self.batch(0, indices)
+    }
+
+    fn test_batch(&self, indices: &[usize]) -> Batch {
+        self.batch(1, indices)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pair_task_halves_overlap_iff_label1() {
+        let t = TokenTask::pair_task(1);
+        let idx: Vec<usize> = (0..256).collect();
+        let b = t.train_batch(&idx);
+        let xs = b.x.as_i32();
+        let ys = b.y.as_i32();
+        let mut ov1 = 0.0;
+        let mut ov0 = 0.0;
+        let (mut n1, mut n0) = (0, 0);
+        for i in 0..256 {
+            let row = &xs[i * SEQ..(i + 1) * SEQ];
+            let (a, bb) = row.split_at(SEQ / 2);
+            let overlap = a
+                .iter()
+                .filter(|t| bb.contains(t))
+                .count() as f64
+                / (SEQ / 2) as f64;
+            if ys[i] == 1 {
+                ov1 += overlap;
+                n1 += 1;
+            } else {
+                ov0 += overlap;
+                n0 += 1;
+            }
+        }
+        assert!(n1 > 50 && n0 > 50);
+        assert!((ov1 / n1 as f64) > 0.8);
+        assert!((ov0 / n0 as f64) < 0.2);
+    }
+
+    #[test]
+    fn sentiment_labels_span_bins() {
+        let t = TokenTask::sentiment_task(2);
+        let b = t.train_batch(&(0..512).collect::<Vec<_>>());
+        let mut seen = [0usize; 5];
+        for &y in b.y.as_i32() {
+            seen[y as usize] += 1;
+        }
+        assert!(seen.iter().all(|&c| c > 10), "bins {seen:?}");
+    }
+
+    #[test]
+    fn tokens_in_vocab() {
+        for t in [TokenTask::pair_task(3), TokenTask::sentiment_task(3)] {
+            let b = t.test_batch(&(0..64).collect::<Vec<_>>());
+            assert!(b
+                .x
+                .as_i32()
+                .iter()
+                .all(|&v| v >= 0 && (v as usize) < VOCAB));
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let t = TokenTask::sentiment_task(4);
+        assert_eq!(t.train_batch(&[7]).x, t.train_batch(&[7]).x);
+        assert_ne!(t.train_batch(&[7]).x, t.train_batch(&[8]).x);
+    }
+}

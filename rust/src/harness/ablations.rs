@@ -1,0 +1,199 @@
+//! Ablations on the reproduction's design choices (beyond the paper's own
+//! tables; DESIGN.md calls these out):
+//!
+//! 1. **drift-instance cadence** — the paper resamples a drift instance
+//!    per *mini-batch* (Alg. 1 line 8). Ablation: one instance per epoch.
+//!    Expectation: per-batch training generalizes better across hardware
+//!    realizations (lower accuracy variance at eval).
+//! 2. **warm-start vs fresh-init** — Alg. 1 re-initializes (b, d) per
+//!    level; warm-starting from the previous set is the speed knob the
+//!    scheduler uses. Ablation quantifies the accuracy gap.
+//! 3. **per-channel vs per-tensor programming quantization** — the
+//!    per-column crossbar scaling this repo uses vs the naive per-tensor
+//!    grid (which collapses after BN folding — the bug §Perf found).
+//!
+//! Run: `vera-plus experiment --id ablations`.
+
+use crate::coordinator::eval::{eval_stats, EvalMode};
+use crate::coordinator::trainer::{train_comp_at, CompTrainCfg};
+use crate::coordinator::Deployment;
+use crate::harness::common::{print_row, Ctx};
+use crate::rram::drift::YEAR;
+use crate::rram::mapping::{quantize_per_channel, quantize_tensor};
+use crate::util::json::{arr, num, obj, s};
+use crate::util::rng::Pcg64;
+use crate::util::tensor::TensorMap;
+use anyhow::Result;
+
+pub fn run(ctx: &Ctx) -> Result<()> {
+    println!("\n== Ablations ==");
+    let model = "resnet20_hard"; // drift actually bites here
+    let dep = ctx.default_deployment(model)?;
+    let t = 10.0 * YEAR;
+    let mut rng = Pcg64::with_stream(ctx.budget.seed, 0xab1a);
+    let mut rows = Vec::new();
+
+    // --- 1. drift-instance cadence -----------------------------------------
+    println!("-- drift-inject cadence (t = 10y, {model}) --");
+    let per_batch = train_comp_at(
+        &dep,
+        t,
+        dep.fresh_trainables(1),
+        &ctx.budget.comp_train_cfg(),
+        &mut rng,
+    )?;
+    let st_batch = eval_stats(
+        &dep, &per_batch.trainables, EvalMode::Compensated, t,
+        ctx.budget.instances.max(4), ctx.budget.samples, &mut rng,
+    )?;
+    let per_epoch = train_comp_frozen_instance(
+        &dep, t, dep.fresh_trainables(1),
+        &ctx.budget.comp_train_cfg(), &mut rng,
+    )?;
+    let st_epoch = eval_stats(
+        &dep, &per_epoch, EvalMode::Compensated, t,
+        ctx.budget.instances.max(4), ctx.budget.samples, &mut rng,
+    )?;
+    let widths = [26usize, 12, 12];
+    print_row(&["cadence".into(), "mean acc".into(), "std".into()],
+              &widths);
+    print_row(
+        &["per-batch (paper)".into(),
+          format!("{:.3}", st_batch.mean), format!("{:.4}", st_batch.std)],
+        &widths,
+    );
+    print_row(
+        &["single instance".into(),
+          format!("{:.3}", st_epoch.mean), format!("{:.4}", st_epoch.std)],
+        &widths,
+    );
+    rows.push(obj(vec![
+        ("ablation", s("drift_cadence")),
+        ("per_batch_mean", num(st_batch.mean)),
+        ("per_batch_std", num(st_batch.std)),
+        ("single_instance_mean", num(st_epoch.mean)),
+        ("single_instance_std", num(st_epoch.std)),
+    ]));
+
+    // --- 2. warm-start vs fresh-init ----------------------------------------
+    println!("-- warm-start vs fresh init (second level at 10y) --");
+    let warm = train_comp_at(
+        &dep, t, per_batch.trainables.clone(),
+        &ctx.budget.comp_train_cfg(), &mut rng,
+    )?;
+    let st_warm = eval_stats(
+        &dep, &warm.trainables, EvalMode::Compensated, t,
+        ctx.budget.instances.max(4), ctx.budget.samples, &mut rng,
+    )?;
+    print_row(
+        &["fresh init (paper)".into(),
+          format!("{:.3}", st_batch.mean), format!("{:.4}", st_batch.std)],
+        &widths,
+    );
+    print_row(
+        &["warm-start".into(),
+          format!("{:.3}", st_warm.mean), format!("{:.4}", st_warm.std)],
+        &widths,
+    );
+    rows.push(obj(vec![
+        ("ablation", s("warm_start")),
+        ("fresh_mean", num(st_batch.mean)),
+        ("warm_mean", num(st_warm.mean)),
+    ]));
+
+    // --- 3. per-channel vs per-tensor quantization ---------------------------
+    println!("-- programming quantization granularity --");
+    let params = ctx.backbone(model)?;
+    let folded = crate::rram::fold_bn(&dep.manifest, &params)?;
+    let mut worst_tensor_err = (0.0f64, 0.0f64); // (per-tensor, per-chan)
+    for spec in dep.manifest.deploy_weights.iter().filter(|w| w.rram) {
+        let w = folded.get(&spec.name).unwrap().as_f32();
+        let cout = *spec.shape.last().unwrap();
+        let (ct, st_) = quantize_tensor(w, 4);
+        let (cc, sc) = quantize_per_channel(w, cout, 4);
+        let rms = |deq: &dyn Fn(usize) -> f32| -> f64 {
+            let num: f64 = w
+                .iter()
+                .enumerate()
+                .map(|(i, &v)| ((v - deq(i)) as f64).powi(2))
+                .sum();
+            let den: f64 =
+                w.iter().map(|&v| (v as f64).powi(2)).sum::<f64>().max(1e-12);
+            (num / den).sqrt()
+        };
+        let e_t = rms(&|i| ct[i] as f32 * st_);
+        let e_c = rms(&|i| cc[i] as f32 * sc[i % cout]);
+        if e_t > worst_tensor_err.0 {
+            worst_tensor_err = (e_t, e_c);
+        }
+    }
+    println!(
+        "worst-layer relative RMS quant error: per-tensor {:.3}, \
+         per-channel {:.3}",
+        worst_tensor_err.0, worst_tensor_err.1
+    );
+    rows.push(obj(vec![
+        ("ablation", s("quant_granularity")),
+        ("per_tensor_worst_rms", num(worst_tensor_err.0)),
+        ("per_channel_worst_rms", num(worst_tensor_err.1)),
+    ]));
+
+    ctx.write_result("ablations", obj(vec![("rows", arr(rows))]))
+}
+
+/// Variant of the Alg. 1 inner loop that samples ONE drift instance for
+/// the whole run (the ablation's "single instance" arm).
+fn train_comp_frozen_instance(
+    dep: &Deployment,
+    t: f64,
+    init: TensorMap,
+    cfg: &CompTrainCfg,
+    rng: &mut Pcg64,
+) -> Result<TensorMap> {
+    use crate::util::tensor::{DType, Tensor};
+    let exe = dep.rt.executable(&dep.manifest.model, &dep.train_key())?;
+    let mut trainables = init;
+    let mut momenta: TensorMap = trainables
+        .iter()
+        .map(|(k, v)| {
+            (format!("m:{k}"), Tensor::zeros(DType::F32, &v.shape))
+        })
+        .collect();
+    let drifted = dep.drifted_weights(t, rng); // sampled ONCE
+    let n_train = if cfg.max_train == 0 {
+        dep.dataset.train_len()
+    } else {
+        dep.dataset.train_len().min(cfg.max_train)
+    };
+    let mut order: Vec<usize> = (0..n_train).collect();
+    for _epoch in 0..cfg.epochs {
+        rng.shuffle(&mut order);
+        for chunk in order.chunks(cfg.batch) {
+            if chunk.len() < cfg.batch {
+                break;
+            }
+            let b = dep.dataset.train_batch(chunk);
+            let mut batch_map = TensorMap::new();
+            batch_map.insert("x".into(), b.x);
+            batch_map.insert("y".into(), b.y);
+            batch_map
+                .insert("lr".into(), Tensor::scalar_f32(cfg.lr as f32));
+            let outs = exe.run_named(&[
+                &drifted,
+                &dep.frozen,
+                &trainables,
+                &momenta,
+                &batch_map,
+            ])?;
+            for (name, tensor) in outs {
+                if name == "loss" {
+                } else if momenta.contains_key(&name) {
+                    momenta.insert(name, tensor);
+                } else if trainables.contains_key(&name) {
+                    trainables.insert(name, tensor);
+                }
+            }
+        }
+    }
+    Ok(trainables)
+}

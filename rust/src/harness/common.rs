@@ -1,0 +1,188 @@
+//! Shared harness infrastructure: budgets, backbone caching, deployment
+//! assembly, result emission.
+
+use crate::coordinator::trainer::{
+    train_backbone, BackboneTrainCfg, CompTrainCfg,
+};
+use crate::coordinator::{deploy, Deployment};
+use crate::rram::drift::DriftModel;
+use crate::rram::{ConductanceGrid, IbmDrift};
+use crate::runtime::Runtime;
+use crate::util::json::Json;
+use crate::util::tensor::{read_vpts, write_vpts, TensorMap};
+use anyhow::Result;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// Experiment budget: trades fidelity for wall time.
+#[derive(Debug, Clone)]
+pub struct Budget {
+    /// Backbone QAT steps (paper-equivalent: full convergence).
+    pub backbone_steps: usize,
+    /// Drift instances per EVALSTATS (paper: 100).
+    pub instances: usize,
+    /// Test samples per accuracy evaluation.
+    pub samples: usize,
+    /// Compensation-training epochs (paper: 3).
+    pub comp_epochs: usize,
+    /// Train-split cap for compensation training (0 = all).
+    pub comp_max_train: usize,
+    /// Rank sweep for fig4.
+    pub ranks: Vec<usize>,
+    /// Drift times for sweeps (fig3/fig4/table2 columns).
+    pub times: Vec<(&'static str, f64)>,
+    pub seed: u64,
+}
+
+impl Budget {
+    /// Smoke-scale: every trend visible, minutes of CPU.
+    pub fn quick() -> Budget {
+        use crate::rram::drift::*;
+        Budget {
+            backbone_steps: 250,
+            instances: 3,
+            samples: 256,
+            comp_epochs: 1,
+            comp_max_train: 768,
+            ranks: vec![1, 4, 8],
+            times: vec![
+                ("1s", SECOND),
+                ("1d", DAY),
+                ("1mon", MONTH),
+                ("1y", YEAR),
+                ("10y", 10.0 * YEAR),
+            ],
+            seed: 0xbeef,
+        }
+    }
+
+    /// Paper-scale columns (still reduced instance counts vs the paper's
+    /// 100 — see EXPERIMENTS.md for the mapping).
+    pub fn full() -> Budget {
+        use crate::rram::drift::*;
+        Budget {
+            backbone_steps: 600,
+            instances: 10,
+            samples: 512,
+            comp_epochs: 3,
+            comp_max_train: 2048,
+            ranks: vec![1, 2, 4, 6, 8],
+            times: vec![
+                ("1s", SECOND),
+                ("1h", HOUR),
+                ("1d", DAY),
+                ("1mon", MONTH),
+                ("1y", YEAR),
+                ("10y", 10.0 * YEAR),
+            ],
+            seed: 0xbeef,
+        }
+    }
+
+    pub fn comp_train_cfg(&self) -> CompTrainCfg {
+        CompTrainCfg {
+            epochs: self.comp_epochs,
+            max_train: self.comp_max_train,
+            ..Default::default()
+        }
+    }
+}
+
+/// Harness context: runtime + budget + output directory.
+pub struct Ctx {
+    pub rt: Arc<Runtime>,
+    pub budget: Budget,
+    pub results_dir: PathBuf,
+}
+
+impl Ctx {
+    pub fn new(budget: Budget) -> Result<Ctx> {
+        let rt = Arc::new(Runtime::cpu(crate::find_artifacts())?);
+        let results_dir = PathBuf::from(crate::RESULTS_DIR);
+        std::fs::create_dir_all(&results_dir)?;
+        std::fs::create_dir_all(results_dir.join("backbones"))?;
+        Ok(Ctx {
+            rt,
+            budget,
+            results_dir,
+        })
+    }
+
+    /// Train-or-load a cached backbone for `model`. Cache is keyed by the
+    /// step budget so quick/full runs don't collide.
+    pub fn backbone(&self, model: &str) -> Result<TensorMap> {
+        let path = self.results_dir.join(format!(
+            "backbones/{model}.s{}.vpts",
+            self.budget.backbone_steps
+        ));
+        if path.exists() {
+            return read_vpts(&path);
+        }
+        eprintln!(
+            "[harness] training backbone {model} \
+             ({} steps, cached to {})",
+            self.budget.backbone_steps,
+            path.display()
+        );
+        let cfg = BackboneTrainCfg {
+            steps: self.budget.backbone_steps,
+            eval_every: 0,
+            ..Default::default()
+        };
+        let (params, _) = train_backbone(&self.rt, model, &cfg)?;
+        write_vpts(&path, &params)?;
+        Ok(params)
+    }
+
+    /// Deploy `model` with a method/rank under a drift model.
+    pub fn deployment(
+        &self,
+        model: &str,
+        method: &str,
+        rank: usize,
+        drift: Box<dyn DriftModel>,
+    ) -> Result<Deployment> {
+        let params = self.backbone(model)?;
+        deploy(
+            self.rt.clone(),
+            model,
+            &params,
+            method,
+            rank,
+            drift,
+            ConductanceGrid::default(),
+            self.budget.seed,
+        )
+    }
+
+    /// Default deployment (VeRA+ r=1, IBM drift).
+    pub fn default_deployment(&self, model: &str) -> Result<Deployment> {
+        self.deployment(model, "veraplus", 1,
+                        Box::new(IbmDrift::default()))
+    }
+
+    /// Write an experiment's JSON result.
+    pub fn write_result(&self, id: &str, value: Json) -> Result<()> {
+        let path = self.results_dir.join(format!("{id}.json"));
+        std::fs::write(&path, value.to_string_pretty())?;
+        eprintln!("[harness] wrote {}", path.display());
+        Ok(())
+    }
+}
+
+/// Pretty row printing: fixed-width columns.
+pub fn print_row(cells: &[String], widths: &[usize]) {
+    let mut line = String::new();
+    for (c, w) in cells.iter().zip(widths) {
+        line.push_str(&format!("{c:>w$} ", w = w));
+    }
+    println!("{line}");
+}
+
+pub fn fmt_pct(x: f64) -> String {
+    format!("{:.2}%", 100.0 * x)
+}
+
+pub fn fmt_pm(mean: f64, std: f64) -> String {
+    format!("{:.2}±{:.1}", 100.0 * mean, 100.0 * std)
+}

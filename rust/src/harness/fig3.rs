@@ -1,0 +1,126 @@
+//! Fig. 3: normalized accuracy degradation under drift, no compensation.
+//! (a) CNNs, (b) transformer analogs — the paper's observations:
+//! (i) harder tasks degrade faster, (ii) CNNs are more vulnerable than
+//! transformers, (iii) the ImageNet-scale model degrades the most.
+
+use crate::coordinator::eval::{eval_stats, EvalMode};
+use crate::harness::common::{print_row, Ctx};
+use crate::util::json::{arr, num, obj, s, Json};
+use crate::util::rng::Pcg64;
+use crate::util::tensor::TensorMap;
+use anyhow::Result;
+
+pub const CNNS: [&str; 5] = [
+    "resnet20_easy",
+    "resnet20_hard",
+    "resnet32_easy",
+    "resnet32_hard",
+    "resnet_large_vhard",
+];
+
+pub const BERTS: [&str; 4] = [
+    "bert_tiny_qqp",
+    "bert_tiny_sst",
+    "bert_small_qqp",
+    "bert_small_sst",
+];
+
+pub struct Curve {
+    pub model: String,
+    pub drift_free: f64,
+    /// (label, t, mean acc, std) per checkpoint.
+    pub points: Vec<(String, f64, f64, f64)>,
+}
+
+/// Degradation curve for one model (no compensation).
+pub fn degradation_curve(ctx: &Ctx, model: &str) -> Result<Curve> {
+    let dep = ctx.default_deployment(model)?;
+    let mut rng = Pcg64::with_stream(ctx.budget.seed, 0xf163);
+    let empty = TensorMap::new();
+    let ideal = dep.net.read_ideal();
+    let drift_free = crate::coordinator::eval::eval_accuracy(
+        &dep,
+        &ideal,
+        &empty,
+        EvalMode::Plain,
+        ctx.budget.samples,
+    )?;
+    let mut points = Vec::new();
+    for (label, t) in &ctx.budget.times {
+        let stats = eval_stats(
+            &dep,
+            &empty,
+            EvalMode::Plain,
+            *t,
+            ctx.budget.instances,
+            ctx.budget.samples,
+            &mut rng,
+        )?;
+        points.push((label.to_string(), *t, stats.mean, stats.std));
+    }
+    Ok(Curve {
+        model: model.to_string(),
+        drift_free,
+        points,
+    })
+}
+
+pub fn run(ctx: &Ctx) -> Result<()> {
+    println!("\n== Fig. 3: normalized accuracy under drift \
+              (no compensation) ==");
+    let labels: Vec<String> = ctx
+        .budget
+        .times
+        .iter()
+        .map(|(l, _)| l.to_string())
+        .collect();
+    let mut widths = vec![20usize];
+    widths.extend(std::iter::repeat(9).take(labels.len() + 1));
+    let mut header = vec!["model".to_string(), "free".to_string()];
+    header.extend(labels.iter().cloned());
+    print_row(&header, &widths);
+
+    let mut rows = Vec::new();
+    for group in [&CNNS[..], &BERTS[..]] {
+        for model in group {
+            let c = degradation_curve(ctx, model)?;
+            let mut cells = vec![
+                c.model.clone(),
+                format!("{:.1}%", 100.0 * c.drift_free),
+            ];
+            for (_, _, mean, _) in &c.points {
+                cells.push(format!("{:.3}", mean / c.drift_free.max(1e-9)));
+            }
+            print_row(&cells, &widths);
+            rows.push(curve_json(&c));
+        }
+        println!();
+    }
+    ctx.write_result("fig3", obj(vec![("curves", arr(rows))]))
+}
+
+pub fn curve_json(c: &Curve) -> Json {
+    obj(vec![
+        ("model", s(&c.model)),
+        ("drift_free", num(c.drift_free)),
+        (
+            "points",
+            arr(c
+                .points
+                .iter()
+                .map(|(l, t, m, sd)| {
+                    obj(vec![
+                        ("label", s(l)),
+                        ("t", num(*t)),
+                        ("mean", num(*m)),
+                        ("std", num(*sd)),
+                        (
+                            "normalized",
+                            num(m / c.drift_free.max(1e-9)),
+                        ),
+                    ])
+                })
+                .collect()),
+        ),
+    ])
+}

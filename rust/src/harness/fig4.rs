@@ -1,0 +1,91 @@
+//! Fig. 4: rank ablation — VeRA+ compensation quality vs r on the
+//! CIFAR-10/100 analogs. The paper's finding: r=1 already recovers most
+//! accuracy; gains grow to r≈6, dip slightly at r=8.
+
+use crate::coordinator::eval::{eval_stats, EvalMode};
+use crate::coordinator::trainer::train_comp_at;
+use crate::harness::common::{print_row, Ctx};
+use crate::rram::IbmDrift;
+use crate::util::json::{arr, num, obj, s};
+use crate::util::rng::Pcg64;
+use crate::util::tensor::TensorMap;
+use anyhow::Result;
+
+pub const MODELS: [&str; 2] = ["resnet20_easy", "resnet20_hard"];
+
+pub fn run(ctx: &Ctx) -> Result<()> {
+    println!("\n== Fig. 4: rank ablation (VeRA+) ==");
+    let mut rows = Vec::new();
+    for model in MODELS {
+        println!("-- {model} --");
+        let labels: Vec<String> = ctx
+            .budget
+            .times
+            .iter()
+            .map(|(l, _)| l.to_string())
+            .collect();
+        let mut header = vec!["rank".to_string(), "free".to_string()];
+        header.extend(labels.clone());
+        let mut widths = vec![6usize, 8];
+        widths.extend(std::iter::repeat(9).take(labels.len()));
+        print_row(&header, &widths);
+        for &rank in &ctx.budget.ranks {
+            let dep = ctx.deployment(
+                model,
+                "veraplus",
+                rank,
+                Box::new(IbmDrift::default()),
+            )?;
+            let mut rng =
+                Pcg64::with_stream(ctx.budget.seed, 0xf164 + rank as u64);
+            let empty = TensorMap::new();
+            let ideal = dep.net.read_ideal();
+            let drift_free = crate::coordinator::eval::eval_accuracy(
+                &dep,
+                &ideal,
+                &empty,
+                EvalMode::Plain,
+                ctx.budget.samples,
+            )?;
+            let mut cells = vec![
+                format!("r={rank}"),
+                format!("{:.1}%", 100.0 * drift_free),
+            ];
+            let mut jpoints = Vec::new();
+            for (label, t) in &ctx.budget.times {
+                let trained = train_comp_at(
+                    &dep,
+                    *t,
+                    dep.fresh_trainables(ctx.budget.seed),
+                    &ctx.budget.comp_train_cfg(),
+                    &mut rng,
+                )?;
+                let st = eval_stats(
+                    &dep,
+                    &trained.trainables,
+                    EvalMode::Compensated,
+                    *t,
+                    ctx.budget.instances,
+                    ctx.budget.samples,
+                    &mut rng,
+                )?;
+                let norm = st.mean / drift_free.max(1e-9);
+                cells.push(format!("{norm:.3}"));
+                jpoints.push(obj(vec![
+                    ("label", s(label)),
+                    ("t", num(*t)),
+                    ("mean", num(st.mean)),
+                    ("normalized", num(norm)),
+                ]));
+            }
+            print_row(&cells, &widths);
+            rows.push(obj(vec![
+                ("model", s(model)),
+                ("rank", num(rank as f64)),
+                ("drift_free", num(drift_free)),
+                ("points", arr(jpoints)),
+            ]));
+        }
+    }
+    ctx.write_result("fig4", obj(vec![("rows", arr(rows))]))
+}

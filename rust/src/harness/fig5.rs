@@ -1,0 +1,59 @@
+//! Fig. 5: number of VeRA+ sets required vs accuracy-drop tolerance
+//! (Algorithm 1 end-to-end). The paper: 5% drop → 5 sets, 2.5% → 11 sets;
+//! tighter floors require finer-grained compensation.
+
+use crate::coordinator::scheduler::{schedule, ScheduleCfg};
+use crate::harness::common::{print_row, Ctx};
+use crate::util::json::{arr, num, obj};
+use anyhow::Result;
+
+pub const DROPS: [f64; 4] = [0.10, 0.05, 0.025, 0.01];
+
+pub fn run(ctx: &Ctx) -> Result<()> {
+    println!("\n== Fig. 5: #sets vs accuracy tolerance (Alg. 1) ==");
+    let model = "resnet20_easy";
+    let widths = [12usize, 10, 10, 14];
+    print_row(
+        &["tolerance".into(), "sets".into(), "floor".into(),
+          "free acc".into()],
+        &widths,
+    );
+    let mut rows = Vec::new();
+    for drop in DROPS {
+        let dep = ctx.default_deployment(model)?;
+        let cfg = ScheduleCfg {
+            norm_floor: 1.0 - drop,
+            n_instances: ctx.budget.instances,
+            max_samples: ctx.budget.samples,
+            train: ctx.budget.comp_train_cfg(),
+            seed: ctx.budget.seed,
+            ..Default::default()
+        };
+        let result = schedule(&dep, &cfg)?;
+        print_row(
+            &[
+                format!("{:.1}%", 100.0 * drop),
+                format!("{}", result.store.len()),
+                format!("{:.1}%", 100.0 * result.floor_acc),
+                format!("{:.1}%", 100.0 * result.drift_free_acc),
+            ],
+            &widths,
+        );
+        rows.push(obj(vec![
+            ("drop_tolerance", num(drop)),
+            ("n_sets", num(result.store.len() as f64)),
+            ("floor", num(result.floor_acc)),
+            ("drift_free", num(result.drift_free_acc)),
+            (
+                "set_times",
+                arr(result
+                    .store
+                    .sets
+                    .iter()
+                    .map(|set| num(set.t_start))
+                    .collect()),
+            ),
+        ]));
+    }
+    ctx.write_result("fig5", obj(vec![("rows", arr(rows))]))
+}

@@ -1,0 +1,147 @@
+//! Fig. 6: validation under realistic device drift.
+//!
+//! Reproduces the paper's flow against the synthetic fab (DESIGN.md
+//! substitution): (c) characterize the 1T1R array one week after
+//! programming — 200 devices per state — and fit per-state (µᵢ, σᵢ);
+//! then (d) train VeRA+ with the *fitted* model and evaluate against an
+//! independent readout of the *ground-truth* fab drift. The claim under
+//! test: compensation trained on extracted statistics transfers to the
+//! real (non-uniform, state-dependent) array behavior.
+
+use crate::coordinator::eval::{eval_accuracy, EvalMode};
+use crate::coordinator::trainer::train_comp_at;
+use crate::coordinator::Deployment;
+use crate::harness::common::{print_row, Ctx};
+use crate::rram::drift::WEEK;
+use crate::rram::{characterize, fit_measured_model, ConductanceGrid,
+                  FabDrift};
+use crate::util::json::{arr, num, obj, s};
+use crate::util::rng::Pcg64;
+use crate::util::tensor::TensorMap;
+use anyhow::Result;
+
+pub const MODELS: [&str; 2] = ["resnet20_easy", "resnet20_hard"];
+
+pub fn run(ctx: &Ctx) -> Result<()> {
+    println!("\n== Fig. 6: measured-drift validation (1T1R fab analog) ==");
+    let grid = ConductanceGrid::default();
+    let fab = FabDrift::default();
+    let mut rng = Pcg64::with_stream(ctx.budget.seed, 0xfab6);
+
+    // (c) Characterization: 200 devices per state, read at one week.
+    let stats = characterize(&grid, &fab, 200, WEEK, &mut rng);
+    println!("per-state drift statistics (1 week, 200 devices/state):");
+    print_row(
+        &["g [µS]".into(), "µᵢ [µS]".into(), "σᵢ [µS]".into()],
+        &[10, 12, 12],
+    );
+    for st in &stats {
+        print_row(
+            &[
+                format!("{:.0}", st.g_level),
+                format!("{:.3}", st.mu),
+                format!("{:.3}", st.sigma),
+            ],
+            &[10, 12, 12],
+        );
+    }
+    let measured = fit_measured_model(&stats, WEEK);
+
+    // (d) Train on the fitted model, evaluate on ground-truth fab drift.
+    let mut rows = Vec::new();
+    print_row(
+        &["model".into(), "free".into(), "1wk drift".into(),
+          "1wk comp".into(), "norm".into()],
+        &[20, 9, 12, 12, 8],
+    );
+    for model in MODELS {
+        let dep = ctx.deployment(
+            model,
+            "veraplus",
+            1,
+            Box::new(measured.clone()),
+        )?;
+        let empty = TensorMap::new();
+        let ideal = dep.net.read_ideal();
+        let drift_free = eval_accuracy(
+            &dep, &ideal, &empty, EvalMode::Plain, ctx.budget.samples,
+        )?;
+        // Ground-truth fab readout (the "real array" measurement).
+        let fab_stats = eval_fab(
+            &dep, &empty, EvalMode::Plain, &fab, WEEK,
+            ctx.budget.instances, ctx.budget.samples, &mut rng,
+        )?;
+        // Train with the *fitted measured* model (dep.drift).
+        let trained = train_comp_at(
+            &dep,
+            WEEK,
+            dep.fresh_trainables(ctx.budget.seed),
+            &ctx.budget.comp_train_cfg(),
+            &mut rng,
+        )?;
+        // Evaluate compensation against the ground-truth fab drift.
+        let comp_stats = eval_fab(
+            &dep, &trained.trainables, EvalMode::Compensated, &fab, WEEK,
+            ctx.budget.instances, ctx.budget.samples, &mut rng,
+        )?;
+        let norm = comp_stats.0 / drift_free.max(1e-9);
+        print_row(
+            &[
+                model.to_string(),
+                format!("{:.1}%", 100.0 * drift_free),
+                format!("{:.1}%", 100.0 * fab_stats.0),
+                format!("{:.1}%", 100.0 * comp_stats.0),
+                format!("{norm:.3}"),
+            ],
+            &[20, 9, 12, 12, 8],
+        );
+        rows.push(obj(vec![
+            ("model", s(model)),
+            ("drift_free", num(drift_free)),
+            ("fab_1wk_uncomp", num(fab_stats.0)),
+            ("fab_1wk_comp", num(comp_stats.0)),
+            ("normalized", num(norm)),
+        ]));
+    }
+    ctx.write_result(
+        "fig6",
+        obj(vec![
+            (
+                "level_stats",
+                arr(stats
+                    .iter()
+                    .map(|st| {
+                        obj(vec![
+                            ("g", num(st.g_level)),
+                            ("mu", num(st.mu)),
+                            ("sigma", num(st.sigma)),
+                        ])
+                    })
+                    .collect()),
+            ),
+            ("rows", arr(rows)),
+        ]),
+    )
+}
+
+/// Accuracy (mean, std) with weights drifted by an explicit model
+/// (instead of the deployment's own drift model).
+#[allow(clippy::too_many_arguments)]
+fn eval_fab(
+    dep: &Deployment,
+    trainables: &TensorMap,
+    mode: EvalMode,
+    fab: &FabDrift,
+    t: f64,
+    instances: usize,
+    samples: usize,
+    rng: &mut Pcg64,
+) -> Result<(f64, f64)> {
+    let mut accs = Vec::new();
+    for _ in 0..instances {
+        let weights = dep.net.read_drifted(t, fab, rng);
+        accs.push(eval_accuracy(dep, &weights, trainables, mode, samples)?);
+    }
+    let st = crate::coordinator::eval::Stats::from_samples(&accs);
+    Ok((st.mean, st.std))
+}

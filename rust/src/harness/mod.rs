@@ -1,0 +1,50 @@
+//! Benchmark harness: regenerates every table and figure of the paper's
+//! evaluation section (see DESIGN.md per-experiment index).
+//!
+//! Each experiment prints the paper's rows to stdout and writes machine-
+//! readable JSON under `results/`. Budgets are configurable because the
+//! full paper grid (100 drift instances × all models × all ranks) is a
+//! multi-hour CPU run; `Budget::quick()` reproduces every trend at a
+//! fraction of the cost and is what `cargo bench` uses.
+
+pub mod ablations;
+pub mod common;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod table2;
+pub mod table3;
+pub mod table4;
+pub mod table5;
+
+pub use common::{Budget, Ctx};
+
+use anyhow::Result;
+
+/// Run one experiment by id ("fig3" … "table5").
+pub fn run(ctx: &Ctx, id: &str) -> Result<()> {
+    match id {
+        "ablations" => ablations::run(ctx),
+        "fig3" => fig3::run(ctx),
+        "fig4" => fig4::run(ctx),
+        "fig5" => fig5::run(ctx),
+        "fig6" => fig6::run(ctx),
+        "table2" => table2::run(ctx),
+        "table3" => table3::run(ctx),
+        "table4" => table4::run(ctx),
+        "table5" => table5::run(ctx),
+        "all" => {
+            for id in ALL {
+                run(ctx, id)?;
+            }
+            Ok(())
+        }
+        other => anyhow::bail!("unknown experiment '{other}'"),
+    }
+}
+
+pub const ALL: [&str; 9] = [
+    "table3", "table4", "table5", "fig3", "fig4", "fig5", "fig6", "table2",
+    "ablations",
+];

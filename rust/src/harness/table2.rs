@@ -1,0 +1,98 @@
+//! Table II: accuracy degradation over time + r=1 VeRA+ compensation at
+//! 1 y and 10 y (mean ± std over drift instances), for every model/task.
+
+use crate::coordinator::eval::{eval_stats, EvalMode};
+use crate::coordinator::trainer::train_comp_at;
+use crate::harness::common::{fmt_pm, print_row, Ctx};
+use crate::harness::fig3::{BERTS, CNNS};
+use crate::rram::drift::YEAR;
+use crate::util::json::{arr, num, obj, s};
+use crate::util::rng::Pcg64;
+use crate::util::tensor::TensorMap;
+use anyhow::Result;
+
+pub fn run(ctx: &Ctx) -> Result<()> {
+    println!("\n== Table II: degradation + compensation (r=1) ==");
+    let labels: Vec<String> = ctx
+        .budget
+        .times
+        .iter()
+        .map(|(l, _)| l.to_string())
+        .collect();
+    let mut header = vec!["model".to_string(), "free".to_string()];
+    header.extend(labels.iter().cloned());
+    header.push("1y comp".into());
+    header.push("10y comp".into());
+    let mut widths = vec![20usize, 8];
+    widths.extend(std::iter::repeat(11).take(labels.len() + 2));
+    print_row(&header, &widths);
+
+    let mut rows = Vec::new();
+    for model in CNNS.iter().chain(BERTS.iter()) {
+        let dep = ctx.default_deployment(model)?;
+        let mut rng = Pcg64::with_stream(ctx.budget.seed, 0x7ab2e);
+        let empty = TensorMap::new();
+        let ideal = dep.net.read_ideal();
+        let drift_free = crate::coordinator::eval::eval_accuracy(
+            &dep,
+            &ideal,
+            &empty,
+            EvalMode::Plain,
+            ctx.budget.samples,
+        )?;
+        let mut cells =
+            vec![model.to_string(), format!("{:.2}", 100.0 * drift_free)];
+        let mut jpoints = Vec::new();
+        for (label, t) in &ctx.budget.times {
+            let st = eval_stats(
+                &dep,
+                &empty,
+                EvalMode::Plain,
+                *t,
+                ctx.budget.instances,
+                ctx.budget.samples,
+                &mut rng,
+            )?;
+            cells.push(fmt_pm(st.mean, st.std));
+            jpoints.push(obj(vec![
+                ("label", s(label)),
+                ("mean", num(st.mean)),
+                ("std", num(st.std)),
+            ]));
+        }
+        // Compensation at 1 y and 10 y (paper's "1y comp."/"10y comp.").
+        let mut jcomp = Vec::new();
+        for (label, t) in [("1y", YEAR), ("10y", 10.0 * YEAR)] {
+            let trained = train_comp_at(
+                &dep,
+                t,
+                dep.fresh_trainables(ctx.budget.seed),
+                &ctx.budget.comp_train_cfg(),
+                &mut rng,
+            )?;
+            let st = eval_stats(
+                &dep,
+                &trained.trainables,
+                EvalMode::Compensated,
+                t,
+                ctx.budget.instances,
+                ctx.budget.samples,
+                &mut rng,
+            )?;
+            cells.push(fmt_pm(st.mean, st.std));
+            jcomp.push(obj(vec![
+                ("label", s(label)),
+                ("mean", num(st.mean)),
+                ("std", num(st.std)),
+            ]));
+        }
+        print_row(&cells, &widths);
+        rows.push(obj(vec![
+            ("model", s(model)),
+            ("drift_free", num(drift_free)),
+            ("uncompensated", arr(jpoints)),
+            ("compensated", arr(jcomp)),
+        ]));
+    }
+    ctx.write_result("table2", obj(vec![("rows", arr(rows))]))
+}

@@ -1,0 +1,62 @@
+//! Table III: parameter and operation overhead of LoRA / VeRA / VeRA+ at
+//! r = 1 with 11 sets. Pure cost-model arithmetic, printed both at the
+//! paper's real ResNet-20 geometry (for direct comparison with the
+//! published numbers) and at this repo's scaled config.
+
+use crate::costmodel::{cost_method, paper_resnet20_layers, Method};
+use crate::harness::common::{fmt_pct, print_row, Ctx};
+use crate::util::json::{arr, num, obj, s};
+use anyhow::Result;
+
+/// Paper Table III reference values (r=1, 11 sets).
+pub const PAPER: [(&str, f64, f64); 3] = [
+    ("LoRA", 0.470, 0.115),
+    ("VeRA", 0.119, 0.125),
+    ("VeRA+", 0.035, 0.019),
+];
+
+pub fn run(ctx: &Ctx) -> Result<()> {
+    println!("\n== Table III: param/ops overhead @ r=1, 11 sets ==");
+    let widths = [8usize, 14, 12, 14, 12];
+    print_row(
+        &["method".into(), "params (ours)".into(), "(paper)".into(),
+          "ops (ours)".into(), "(paper)".into()],
+        &widths,
+    );
+    let mut rows = Vec::new();
+    for geometry in ["paper_resnet20", "repo_resnet20"] {
+        println!("-- geometry: {geometry} --");
+        let (layers, din, dout) = if geometry == "paper_resnet20" {
+            (paper_resnet20_layers(10), 64, 64)
+        } else {
+            let man = ctx.rt.manifest("resnet20_easy")?;
+            (man.layers.clone(), man.d_in_max, man.d_out_max)
+        };
+        for (method, (pname, p_params, p_ops)) in [
+            (Method::Lora, PAPER[0]),
+            (Method::Vera, PAPER[1]),
+            (Method::VeraPlus, PAPER[2]),
+        ] {
+            let c = cost_method(&layers, din, dout, method, 1, 11);
+            print_row(
+                &[
+                    pname.to_string(),
+                    fmt_pct(c.params_overhead()),
+                    fmt_pct(p_params),
+                    fmt_pct(c.ops_overhead()),
+                    fmt_pct(p_ops),
+                ],
+                &widths,
+            );
+            rows.push(obj(vec![
+                ("geometry", s(geometry)),
+                ("method", s(pname)),
+                ("params_overhead", num(c.params_overhead())),
+                ("paper_params_overhead", num(p_params)),
+                ("ops_overhead", num(c.ops_overhead())),
+                ("paper_ops_overhead", num(p_ops)),
+            ]));
+        }
+    }
+    ctx.write_result("table3", obj(vec![("rows", arr(rows))]))
+}

@@ -1,0 +1,194 @@
+//! Table V: BN-based calibration [7] vs VeRA+ on the CIFAR-10 analog.
+//!
+//! The BN baseline keeps the network unfolded, stores 5% of the training
+//! set, and recomputes BN statistics from calibration forward passes
+//! under drifted weights. We measure both methods' recovered accuracy at
+//! 1 month of drift and report the storage/ops/on-chip-calibration
+//! comparison (storage at paper scale comes from the cost model).
+
+use crate::compensation::bn_calib::BnCalibrator;
+use crate::coordinator::eval::{accuracy_of, eval_accuracy, eval_stats,
+                               EvalMode};
+use crate::coordinator::trainer::train_comp_at;
+use crate::costmodel::{cost_method, paper_resnet20_layers, BnCalibCost,
+                       Method};
+use crate::harness::common::{print_row, Ctx};
+use crate::nn::manifest::ModelManifest;
+use crate::rram::drift::MONTH;
+use crate::rram::mapping::ProgrammedNetwork;
+use crate::rram::{ConductanceGrid, IbmDrift};
+use crate::util::json::{num, obj, s};
+use crate::util::rng::Pcg64;
+use crate::util::tensor::TensorMap;
+use anyhow::Result;
+
+pub fn run(ctx: &Ctx) -> Result<()> {
+    println!("\n== Table V: BN-based calibration vs VeRA+ \
+              (ResNet-20, CIFAR-10 analog) ==");
+    let model = "resnet20_easy";
+    let t = MONTH;
+    let mut rng = Pcg64::with_stream(ctx.budget.seed, 0x7ab5);
+
+    // ---- VeRA+ side -----------------------------------------------------
+    let dep = ctx.default_deployment(model)?;
+    let empty = TensorMap::new();
+    let ideal = dep.net.read_ideal();
+    let drift_free = eval_accuracy(
+        &dep, &ideal, &empty, EvalMode::Plain, ctx.budget.samples,
+    )?;
+    let uncomp = eval_stats(
+        &dep, &empty, EvalMode::Plain, t,
+        ctx.budget.instances, ctx.budget.samples, &mut rng,
+    )?;
+    let trained = train_comp_at(
+        &dep,
+        t,
+        dep.fresh_trainables(ctx.budget.seed),
+        &ctx.budget.comp_train_cfg(),
+        &mut rng,
+    )?;
+    let vera_acc = eval_stats(
+        &dep, &trained.trainables, EvalMode::Compensated, t,
+        ctx.budget.instances, ctx.budget.samples, &mut rng,
+    )?;
+
+    // ---- BN-calibration side --------------------------------------------
+    // Program the *unfolded* train-form conv weights (BN digital).
+    let manifest = ctx.rt.manifest(model)?;
+    let params = ctx.backbone(model)?;
+    let bn_manifest = bn_pseudo_manifest(&manifest);
+    let mut prng = Pcg64::with_stream(ctx.budget.seed, 0xb7);
+    let bn_net = ProgrammedNetwork::program(
+        &bn_manifest,
+        &params,
+        ConductanceGrid::default(),
+        &mut prng,
+    )?;
+    let drift = IbmDrift::default();
+    let exe = ctx.rt.executable(model, "bn_fwd_b256")?;
+    let conv_layers: Vec<String> = manifest
+        .layers
+        .iter()
+        .filter(|l| l.kind == "conv")
+        .map(|l| l.name.clone())
+        .collect();
+    let calib = BnCalibrator::new(
+        conv_layers,
+        dep.dataset.as_ref(),
+        0.05,
+        256,
+    );
+    // Accuracy before/after calibration under one drifted readout.
+    let mut drifted = bn_net.read_drifted(t, &drift, &mut rng);
+    let acc_before = bn_eval(&exe, &drifted, dep.dataset.as_ref(),
+                             ctx.budget.samples)?;
+    let batches =
+        calib.calibrate(&exe, &mut drifted, dep.dataset.as_ref())?;
+    let acc_after = bn_eval(&exe, &drifted, dep.dataset.as_ref(),
+                            ctx.budget.samples)?;
+
+    // ---- Cost columns at paper scale --------------------------------------
+    let layers = paper_resnet20_layers(10);
+    let bn_cost = BnCalibCost::for_cifar_like(&layers, 50_000, 3072);
+    let vp_cost = cost_method(&layers, 64, 64, Method::VeraPlus, 1, 11);
+
+    let widths = [10usize, 14, 12, 12, 14, 12];
+    print_row(
+        &["method".into(), "storage".into(), "ops ovh".into(),
+          "on-chip".into(), "1mon acc".into(), "norm".into()],
+        &widths,
+    );
+    print_row(
+        &[
+            "BN[7]".into(),
+            format!("{:.1} MB", bn_cost.storage_mb()),
+            format!("{:.1}%", 100.0 * bn_cost.ops_overhead()),
+            "Yes".into(),
+            format!("{:.2}%", 100.0 * acc_after),
+            format!("{:.3}", acc_after / drift_free.max(1e-9)),
+        ],
+        &widths,
+    );
+    print_row(
+        &[
+            "VeRA+".into(),
+            format!("{:.2} KB", vp_cost.storage_kb()),
+            format!("{:.1}%", 100.0 * vp_cost.ops_overhead()),
+            "No".into(),
+            format!("{:.2}%", 100.0 * vera_acc.mean),
+            format!("{:.3}", vera_acc.mean / drift_free.max(1e-9)),
+        ],
+        &widths,
+    );
+    println!(
+        "(uncompensated @1mon: {:.2}%; BN before calibration: {:.2}%; \
+         calibration batches: {batches}; storage reduction: {:.0}×)",
+        100.0 * uncomp.mean,
+        100.0 * acc_before,
+        bn_cost.storage_mb() * 1024.0 / vp_cost.storage_kb()
+    );
+
+    ctx.write_result(
+        "table5",
+        obj(vec![
+            ("drift_free", num(drift_free)),
+            ("uncompensated_1mon", num(uncomp.mean)),
+            ("bn_before_calib", num(acc_before)),
+            ("bn_after_calib", num(acc_after)),
+            ("veraplus_1mon", num(vera_acc.mean)),
+            ("bn_storage_mb", num(bn_cost.storage_mb())),
+            ("veraplus_storage_kb", num(vp_cost.storage_kb())),
+            ("bn_ops_overhead", num(bn_cost.ops_overhead())),
+            ("veraplus_ops_overhead", num(vp_cost.ops_overhead())),
+            (
+                "storage_reduction_x",
+                num(bn_cost.storage_mb() * 1024.0 / vp_cost.storage_kb()),
+            ),
+            ("bn_on_chip_calibration", s("yes")),
+            ("veraplus_on_chip_calibration", s("no")),
+        ]),
+    )
+}
+
+/// Pseudo-manifest that maps the train-form parameters onto RRAM: conv/fc
+/// weights drift, BN parameters and biases stay digital.
+pub fn bn_pseudo_manifest(manifest: &ModelManifest) -> ModelManifest {
+    let mut m = manifest.clone();
+    m.deploy_weights = manifest
+        .train_weights
+        .iter()
+        .map(|w| {
+            let mut w = w.clone();
+            w.rram = w.name.ends_with(".w");
+            w
+        })
+        .collect();
+    m
+}
+
+/// Evaluate accuracy through the unfolded bn_fwd graph.
+pub fn bn_eval(
+    exe: &std::sync::Arc<crate::runtime::Executable>,
+    params: &TensorMap,
+    dataset: &dyn crate::data::Dataset,
+    max_samples: usize,
+) -> Result<f64> {
+    let batch = 256usize;
+    let n = dataset.test_len().min(max_samples);
+    let mut acc = 0.0;
+    let mut total = 0usize;
+    let mut idx = 0usize;
+    while idx + batch <= n {
+        let indices: Vec<usize> = (idx..idx + batch).collect();
+        let b = dataset.test_batch(&indices);
+        let mut inputs = TensorMap::new();
+        inputs.insert("x".into(), b.x);
+        let outs = exe.run_named(&[params, &inputs])?;
+        acc += accuracy_of(outs.get("logits").unwrap(), b.y.as_i32())
+            * batch as f64;
+        total += batch;
+        idx += batch;
+    }
+    anyhow::ensure!(total > 0, "empty test set");
+    Ok(acc / total as f64)
+}

@@ -1,0 +1,48 @@
+//! # vera_plus — VeRA+ drift-resilient RRAM-IMC, reproduced
+//!
+//! Rust + JAX + Pallas three-layer reproduction of *VeRA+: Vector-Based
+//! Lightweight Digital Compensation for Drift-Resilient RRAM In-Memory
+//! Computing* (DAC 2026). See DESIGN.md for the system inventory and
+//! EXPERIMENTS.md for paper-vs-measured results.
+//!
+//! Layer map:
+//! - `runtime`      — PJRT CPU client loading AOT HLO-text artifacts.
+//! - `rram`         — 1T1R device/array simulator + drift models.
+//! - `coordinator`  — the paper's contribution: drift-aware scheduling
+//!   (Alg. 1), compensation training, set management, serving.
+//! - `compensation` — VeRA+/VeRA/LoRA/BN-calibration parameter containers,
+//!   storage accounting, external-memory image format.
+//! - `costmodel`    — 22 nm area/energy/storage estimates (Tables I,III–V).
+//! - `data`         — synthetic image/token tasks (dataset substitutions).
+//! - `harness`      — regenerates every paper table and figure.
+
+pub mod compensation;
+pub mod coordinator;
+pub mod costmodel;
+pub mod data;
+pub mod harness;
+pub mod nn;
+pub mod rram;
+pub mod runtime;
+pub mod util;
+
+/// Default artifact directory (relative to the repo root).
+pub const ARTIFACT_DIR: &str = "artifacts";
+
+/// Default results directory for harness outputs.
+pub const RESULTS_DIR: &str = "results";
+
+/// Locate the artifact directory from the current working directory,
+/// walking up so tests/examples work from target subdirectories.
+pub fn find_artifacts() -> std::path::PathBuf {
+    let mut dir = std::env::current_dir().unwrap_or_default();
+    loop {
+        let cand = dir.join(ARTIFACT_DIR);
+        if cand.join("index.json").exists() {
+            return cand;
+        }
+        if !dir.pop() {
+            return std::path::PathBuf::from(ARTIFACT_DIR);
+        }
+    }
+}

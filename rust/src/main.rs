@@ -1,0 +1,302 @@
+//! `vera-plus` CLI: the L3 coordinator entrypoint.
+//!
+//! Subcommands drive the full deployment lifecycle:
+//!
+//! ```text
+//! vera-plus train-backbone --model resnet20_easy [--steps 600]
+//! vera-plus schedule       --model resnet20_easy [--drop 0.05] [...]
+//! vera-plus serve          --model resnet20_easy --store results/...
+//! vera-plus experiment     --id fig3|fig4|fig5|fig6|table2..5|all
+//! vera-plus report         [--table 1]
+//! vera-plus info
+//! ```
+
+use anyhow::Result;
+use std::sync::Arc;
+use vera_plus::coordinator::scheduler::{schedule, ScheduleCfg};
+use vera_plus::coordinator::serve::{
+    BatchPolicy, LifetimeClock, Server, Workload,
+};
+use vera_plus::coordinator::trainer::{
+    train_backbone, BackboneTrainCfg, CompTrainCfg,
+};
+use vera_plus::harness::{self, Budget, Ctx};
+use vera_plus::rram::{fmt_time, IbmDrift, YEAR};
+use vera_plus::runtime::Runtime;
+use vera_plus::util::cli::Args;
+use vera_plus::util::tensor::{read_vpts, write_vpts};
+
+fn main() {
+    let args = match Args::parse(&["quick", "full", "help"]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.subcommand() {
+        Some("train-backbone") => cmd_train_backbone(args),
+        Some("schedule") => cmd_schedule(args),
+        Some("serve") => cmd_serve(args),
+        Some("experiment") => cmd_experiment(args),
+        Some("report") => cmd_report(args),
+        Some("info") => cmd_info(),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "vera-plus — drift-resilient RRAM-IMC serving (VeRA+, DAC'26)\n\n\
+         USAGE: vera-plus <command> [options]\n\n\
+         COMMANDS:\n  \
+         train-backbone  QAT-train a backbone (--model, --steps, --lr)\n  \
+         schedule        Run Alg. 1, save the compensation set store\n  \
+         \u{20}                (--model, --drop, --instances, --epochs, --out)\n  \
+         serve           Serve an accelerated lifetime against a store\n  \
+         \u{20}                (--model, --store, --rate, --seconds, --batch)\n  \
+         experiment      Regenerate a paper table/figure\n  \
+         \u{20}                (--id fig3|fig4|fig5|fig6|table2..table5|all,\n  \
+         \u{20}                 --quick | --full)\n  \
+         report          Print cost-model tables (--table 1|3|4|5)\n  \
+         info            Show artifact/manifest inventory\n"
+    );
+}
+
+fn budget(args: &Args) -> Budget {
+    if args.has_flag("full") {
+        Budget::full()
+    } else {
+        Budget::quick()
+    }
+}
+
+fn cmd_train_backbone(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "resnet20_easy");
+    let cfg = BackboneTrainCfg {
+        steps: args.get_usize("steps", 600)?,
+        lr: args.get_f64("lr", 0.08)?,
+        eval_every: args.get_usize("eval-every", 100)?,
+        seed: args.get_u64("seed", 0xbac1b0e)?,
+        ..Default::default()
+    };
+    let rt = Arc::new(Runtime::cpu(vera_plus::find_artifacts())?);
+    let t0 = std::time::Instant::now();
+    let (params, trace) = train_backbone(&rt, &model, &cfg)?;
+    for (step, loss, acc) in &trace {
+        println!("step {step:>5}  loss {loss:.4}  test-acc {acc:.4}");
+    }
+    let out = args.get_or(
+        "out",
+        &format!("results/backbones/{model}.s{}.vpts", cfg.steps),
+    );
+    std::fs::create_dir_all(
+        std::path::Path::new(&out).parent().unwrap(),
+    )?;
+    write_vpts(std::path::Path::new(&out), &params)?;
+    println!(
+        "trained {model} for {} steps in {:.1}s -> {out}",
+        cfg.steps,
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+fn cmd_schedule(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "resnet20_easy");
+    let method = args.get_or("method", "veraplus");
+    let rank = args.get_usize("rank", 1)?;
+    let ctx = Ctx::new(budget(args))?;
+    let dep = ctx.deployment(
+        &model,
+        &method,
+        rank,
+        Box::new(IbmDrift::default()),
+    )?;
+    let cfg = ScheduleCfg {
+        norm_floor: 1.0 - args.get_f64("drop", 0.05)?,
+        growth: args.get_f64("growth", 1.5)?,
+        t_max: args.get_f64("tmax-years", 10.0)? * YEAR,
+        n_instances: args.get_usize("instances", ctx.budget.instances)?,
+        max_samples: args.get_usize("samples", ctx.budget.samples)?,
+        train: CompTrainCfg {
+            epochs: args.get_usize("epochs", ctx.budget.comp_epochs)?,
+            max_train: ctx.budget.comp_max_train,
+            ..Default::default()
+        },
+        seed: args.get_u64("seed", 0x5c4ed)?,
+    };
+    let t0 = std::time::Instant::now();
+    let result = schedule(&dep, &cfg)?;
+    println!(
+        "drift-free acc {:.2}%  floor {:.2}%",
+        100.0 * result.drift_free_acc,
+        100.0 * result.floor_acc
+    );
+    for d in &result.decisions {
+        println!(
+            "t={:<9} µ={:.3} σ={:.3} µ-3σ={:.3} {}",
+            fmt_time(d.t),
+            d.mean,
+            d.std,
+            d.lower,
+            if d.trained_new_set { "-> NEW SET" } else { "" }
+        );
+    }
+    println!(
+        "{} sets scheduled in {:.1}s",
+        result.store.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    let out = args.get_or(
+        "out",
+        &format!("results/store_{model}_{method}_r{rank}"),
+    );
+    result.store.save(std::path::Path::new(&out))?;
+    println!("store saved to {out}.{{json,vpts}}");
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "resnet20_easy");
+    let method = args.get_or("method", "veraplus");
+    let rank = args.get_usize("rank", 1)?;
+    let store_path = args.get_or(
+        "store",
+        &format!("results/store_{model}_{method}_r{rank}"),
+    );
+    let store = vera_plus::compensation::SetStore::load(
+        std::path::Path::new(&store_path),
+    )?;
+    let ctx = Ctx::new(budget(args))?;
+    let dep = ctx.deployment(
+        &model,
+        &method,
+        rank,
+        Box::new(IbmDrift::default()),
+    )?;
+    let seconds = args.get_f64("seconds", 20.0)?;
+    let accel = args.get_f64("accel", 10.0 * YEAR / 20.0)?;
+    let rate = args.get_f64("rate", 500.0)?;
+    let clock = LifetimeClock::new(1.0, accel);
+    let mut server = Server::new(
+        &dep,
+        &store,
+        clock,
+        BatchPolicy {
+            max_batch: args.get_usize("batch", 32)?,
+            max_wait: 0.01,
+        },
+        args.get_u64("seed", 11)?,
+    );
+    let mut workload = Workload::new(rate, 5);
+    let mut wall = 0.0;
+    let tick = 0.5;
+    while wall < seconds {
+        let reqs = workload.arrivals(
+            tick,
+            &server.clock,
+            dep.dataset.test_len(),
+        );
+        for r in reqs {
+            server.submit(r);
+        }
+        server.drain(tick / 50.0)?;
+        wall += tick;
+    }
+    let m = &server.metrics;
+    println!(
+        "served {} requests in {} batches (occupancy {:.2})",
+        m.served,
+        m.batches,
+        m.mean_occupancy()
+    );
+    println!(
+        "accuracy {:.2}%  set switches {}  p50 latency {:.1} ms  \
+         p99 {:.1} ms",
+        100.0 * m.accuracy(),
+        m.set_switches,
+        1e3 * m.latency_percentile(0.5),
+        1e3 * m.latency_percentile(0.99),
+    );
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let id = args.get_or("id", "all");
+    let ctx = Ctx::new(budget(args))?;
+    let t0 = std::time::Instant::now();
+    harness::run(&ctx, &id)?;
+    println!("\nexperiment '{id}' done in {:.1}s",
+             t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    use vera_plus::costmodel::constants::*;
+    let table = args.get_usize("table", 1)?;
+    match table {
+        1 => {
+            println!("== Table I: RRAM vs SRAM IMC @ 22 nm (int4) ==");
+            println!("metric             RRAM-IMC    SRAM-IMC");
+            println!(
+                "energy eff.        {RRAM_TOPS_W} TOPS/W  {SRAM_TOPS_W} \
+                 TOPS/W"
+            );
+            println!(
+                "memory density     {RRAM_MB_MM2} Mb/mm²  {SRAM_MB_MM2} \
+                 Mb/mm²"
+            );
+            println!("volatility         non-volatile  volatile");
+        }
+        3 | 4 | 5 => {
+            let ctx = Ctx::new(budget(args))?;
+            harness::run(&ctx, &format!("table{table}"))?;
+        }
+        other => anyhow::bail!("no table {other}"),
+    }
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    let dir = vera_plus::find_artifacts();
+    println!("artifact dir: {}", dir.display());
+    let rt = Runtime::cpu(&dir)?;
+    let index = std::fs::read_to_string(dir.join("index.json"))?;
+    let j = vera_plus::util::json::parse(&index)?;
+    for model in j.req_arr("models")? {
+        let name = model.as_str().unwrap();
+        let man = rt.manifest(name)?;
+        println!(
+            "{name:<22} {:>7} rram params  {:>10} MACs  {:>2} graphs \
+             {:>2} layers",
+            man.rram_params(),
+            man.backbone_macs(),
+            man.graphs.len(),
+            man.layers.len()
+        );
+    }
+    // Backbone caches.
+    if let Ok(entries) = std::fs::read_dir("results/backbones") {
+        for e in entries.flatten() {
+            if let Ok(m) = read_vpts(&e.path()) {
+                println!(
+                    "backbone cache {} ({} tensors)",
+                    e.path().display(),
+                    m.len()
+                );
+            }
+        }
+    }
+    Ok(())
+}

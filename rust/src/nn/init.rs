@@ -1,0 +1,214 @@
+//! Host-side parameter initialization (weights are runtime inputs, so the
+//! Rust side owns every initial value).
+
+use crate::nn::manifest::{ModelManifest, WeightSpec};
+use crate::util::rng::Pcg64;
+use crate::util::tensor::{Tensor, TensorMap};
+
+/// Initialize backbone train-form parameters: He-normal for weights
+/// (fan-in from the trailing axes of the HWIO/[in,out] layout), manifest
+/// `init` hints for BN/LN parameters, zeros for biases.
+pub fn init_train_params(manifest: &ModelManifest, seed: u64) -> TensorMap {
+    let mut rng = Pcg64::with_stream(seed, 0x1111);
+    let mut out = TensorMap::new();
+    for spec in &manifest.train_weights {
+        out.insert(spec.name.clone(), init_weight(spec, &mut rng));
+    }
+    out
+}
+
+fn init_weight(spec: &WeightSpec, rng: &mut Pcg64) -> Tensor {
+    let n = spec.numel();
+    if let Some(c) = spec.init {
+        return Tensor::from_f32(&spec.shape, vec![c as f32; n]);
+    }
+    if spec.name.ends_with(".bias") {
+        return Tensor::zeros(crate::util::tensor::DType::F32, &spec.shape);
+    }
+    // Fan-in: product of all dims except the last (HWIO conv / [in,out]
+    // linear / [vocab,d] embedding all keep output last).
+    let fan_in: usize = if spec.shape.len() >= 2 {
+        spec.shape[..spec.shape.len() - 1].iter().product()
+    } else {
+        spec.shape.first().copied().unwrap_or(1)
+    };
+    let mut v = vec![0f32; n];
+    rng.he_normal_f32(&mut v, fan_in);
+    Tensor::from_f32(&spec.shape, v)
+}
+
+/// Zero momentum buffers for the grad-flagged subset of `specs`.
+pub fn zero_momenta(specs: &[WeightSpec]) -> TensorMap {
+    specs
+        .iter()
+        .filter(|s| s.grad)
+        .map(|s| {
+            (
+                format!("m:{}", s.name),
+                Tensor::zeros(crate::util::tensor::DType::F32, &s.shape),
+            )
+        })
+        .collect()
+}
+
+/// Shared VeRA+ projections A_max [r, d_in_max], B_max [d_out_max, r]:
+/// unit-variance Gaussian, frozen, identical across layers and drift
+/// levels (paper §III-A). Seeded independently of everything else so the
+/// same projections are regenerated at deployment.
+pub fn init_projections(manifest: &ModelManifest, rank: usize, seed: u64)
+                        -> (Tensor, Tensor) {
+    let mut rng = Pcg64::with_stream(seed, 0x2222);
+    let mut a = vec![0f32; rank * manifest.d_in_max];
+    let mut b = vec![0f32; manifest.d_out_max * rank];
+    rng.fill_normal_f32(&mut a, 0.0, 1.0);
+    rng.fill_normal_f32(&mut b, 0.0, 1.0);
+    (
+        Tensor::from_f32(&[rank, manifest.d_in_max], a),
+        Tensor::from_f32(&[manifest.d_out_max, rank], b),
+    )
+}
+
+/// Shared VeRA (baseline) projections: K×K down-projection + 1×1 up.
+pub fn init_projections_vera(manifest: &ModelManifest, rank: usize,
+                             seed: u64) -> (Tensor, Tensor) {
+    let mut rng = Pcg64::with_stream(seed, 0x3333);
+    let k = 3usize;
+    let mut a = vec![0f32; k * k * manifest.d_in_max * rank];
+    let mut b = vec![0f32; manifest.d_out_max * rank];
+    rng.fill_normal_f32(&mut a, 0.0, 1.0);
+    rng.fill_normal_f32(&mut b, 0.0, 1.0);
+    (
+        Tensor::from_f32(&[k, k, manifest.d_in_max, rank], a),
+        Tensor::from_f32(&[manifest.d_out_max, rank], b),
+    )
+}
+
+/// Initial compensation trainables for a method, in manifest layer order:
+/// VeRA/VeRA+: d = 0.1, b = 0 (branch starts at exactly zero); LoRA:
+/// A He-normal, B = 0.
+pub fn init_comp_trainables(manifest: &ModelManifest, method: &str,
+                            rank: usize, seed: u64) -> TensorMap {
+    let mut rng = Pcg64::with_stream(seed, 0x4444);
+    let mut out = TensorMap::new();
+    for layer in &manifest.layers {
+        match method {
+            "veraplus" | "vera" => {
+                out.insert(
+                    format!("{}.d", layer.name),
+                    Tensor::from_f32(&[rank], vec![0.1; rank]),
+                );
+                out.insert(
+                    format!("{}.b", layer.name),
+                    Tensor::zeros(
+                        crate::util::tensor::DType::F32,
+                        &[layer.cout],
+                    ),
+                );
+            }
+            "lora" => {
+                let shape = vec![layer.k, layer.k, layer.cin, rank];
+                let mut a = vec![0f32; shape.iter().product()];
+                rng.he_normal_f32(&mut a, layer.k * layer.k * layer.cin);
+                out.insert(format!("{}.A", layer.name),
+                           Tensor::from_f32(&shape, a));
+                out.insert(
+                    format!("{}.B", layer.name),
+                    Tensor::zeros(
+                        crate::util::tensor::DType::F32,
+                        &[layer.cout, rank],
+                    ),
+                );
+            }
+            other => panic!("unknown method {other}"),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+    use std::path::Path;
+
+    fn man() -> ModelManifest {
+        let j = parse(
+            r#"{
+            "model": "t", "kind": "resnet", "classes": 4, "image": 8,
+            "w_bits": 4, "a_bits": 4, "d_in_max": 16, "d_out_max": 8,
+            "layers": [
+              {"name": "stem", "kind": "conv", "cin": 3, "cout": 8,
+               "k": 3, "stride": 1, "hw_in": 8, "hw_out": 8}
+            ],
+            "deploy_weights": [],
+            "train_weights": [
+              {"name": "stem.w", "shape": [3,3,3,8], "grad": true},
+              {"name": "stem.gamma", "shape": [8], "grad": true, "init": 1},
+              {"name": "stem.mu", "shape": [8], "grad": false, "init": 0},
+              {"name": "fc.bias", "shape": [4], "grad": true, "init": 0}
+            ],
+            "graphs": {}}"#,
+        )
+        .unwrap();
+        ModelManifest::from_json(&j, Path::new(".")).unwrap()
+    }
+
+    #[test]
+    fn init_hints_respected() {
+        let p = init_train_params(&man(), 1);
+        assert!(p.get("stem.gamma").unwrap().as_f32().iter()
+            .all(|&v| v == 1.0));
+        assert!(p.get("stem.mu").unwrap().as_f32().iter()
+            .all(|&v| v == 0.0));
+        assert!(p.get("fc.bias").unwrap().as_f32().iter()
+            .all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn he_init_variance() {
+        let p = init_train_params(&man(), 2);
+        let w = p.get("stem.w").unwrap().as_f32();
+        let var: f32 =
+            w.iter().map(|v| v * v).sum::<f32>() / w.len() as f32;
+        let want = 2.0 / 27.0; // fan_in = 3·3·3
+        assert!((var / want - 1.0).abs() < 0.4, "var {var} want {want}");
+    }
+
+    #[test]
+    fn init_deterministic_in_seed() {
+        let a = init_train_params(&man(), 3);
+        let b = init_train_params(&man(), 3);
+        assert_eq!(a, b);
+        let c = init_train_params(&man(), 4);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn projections_shapes_and_determinism() {
+        let (a, b) = init_projections(&man(), 4, 9);
+        assert_eq!(a.shape, vec![4, 16]);
+        assert_eq!(b.shape, vec![8, 4]);
+        let (a2, _) = init_projections(&man(), 4, 9);
+        assert_eq!(a, a2);
+    }
+
+    #[test]
+    fn comp_trainables_zero_branch() {
+        let tr = init_comp_trainables(&man(), "veraplus", 2, 5);
+        assert!(tr.get("stem.b").unwrap().as_f32().iter()
+            .all(|&v| v == 0.0));
+        assert!(tr.get("stem.d").unwrap().as_f32().iter()
+            .all(|&v| v == 0.1));
+        let lora = init_comp_trainables(&man(), "lora", 2, 5);
+        assert!(lora.get("stem.B").unwrap().as_f32().iter()
+            .all(|&v| v == 0.0));
+        assert_eq!(lora.get("stem.A").unwrap().shape, vec![3, 3, 3, 2]);
+    }
+
+    #[test]
+    fn zero_momenta_only_grad_params() {
+        let m = zero_momenta(&man().train_weights);
+        assert!(m.contains_key("m:stem.w"));
+        assert!(!m.contains_key("m:stem.mu"));
+    }
+}

@@ -1,0 +1,337 @@
+//! Model manifests: the contract between `python/compile/aot.py` and the
+//! Rust runtime. One JSON manifest per model records the layer inventory,
+//! the weight tensors (with RRAM flags), and the exact input/output
+//! signature of every lowered graph.
+
+use crate::util::json::Json;
+use crate::util::tensor::DType;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One compensation-eligible (RRAM-mapped) layer.
+#[derive(Debug, Clone)]
+pub struct LayerGeom {
+    pub name: String,
+    pub kind: String, // "conv" | "linear"
+    pub cin: usize,
+    pub cout: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub hw_in: usize,
+    pub hw_out: usize,
+}
+
+impl LayerGeom {
+    /// MACs for one inference sample through this layer.
+    pub fn macs(&self) -> u64 {
+        let spatial = (self.hw_out * self.hw_out) as u64;
+        (self.k * self.k * self.cin * self.cout) as u64
+            * if self.kind == "conv" { spatial } else { self.hw_out as u64 }
+    }
+
+    /// Weight parameter count.
+    pub fn params(&self) -> u64 {
+        (self.k * self.k * self.cin * self.cout) as u64
+    }
+}
+
+/// A named tensor slot in a graph signature or weight list.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn parse(j: &Json) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: j.req_str("name")?.to_string(),
+            shape: j.req("shape")?.shape()?,
+            dtype: DType::from_name(j.req_str("dtype")?)?,
+        })
+    }
+}
+
+/// A deploy/train weight entry.
+#[derive(Debug, Clone)]
+pub struct WeightSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// True if this tensor is programmed into RRAM (drifts).
+    pub rram: bool,
+    /// True if the backbone train step produces a gradient for it.
+    pub grad: bool,
+    /// Constant-init hint (1.0 for BN γ etc.); None = random init.
+    pub init: Option<f64>,
+}
+
+impl WeightSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One lowered graph: HLO file + IO signature.
+#[derive(Debug, Clone)]
+pub struct GraphSig {
+    pub key: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl GraphSig {
+    pub fn input_index(&self, name: &str) -> Result<usize> {
+        self.inputs
+            .iter()
+            .position(|t| t.name == name)
+            .with_context(|| format!("graph {}: no input '{name}'", self.key))
+    }
+
+    pub fn output_index(&self, name: &str) -> Result<usize> {
+        self.outputs
+            .iter()
+            .position(|t| t.name == name)
+            .with_context(|| {
+                format!("graph {}: no output '{name}'", self.key)
+            })
+    }
+}
+
+/// Full model manifest.
+#[derive(Debug, Clone)]
+pub struct ModelManifest {
+    pub model: String,
+    pub kind: String, // "resnet" | "bert"
+    pub classes: usize,
+    pub w_bits: usize,
+    pub a_bits: usize,
+    /// CNN: input image side; BERT: sequence length.
+    pub input_dim: usize,
+    /// BERT vocabulary (0 for CNNs).
+    pub vocab: usize,
+    pub d_in_max: usize,
+    pub d_out_max: usize,
+    pub layers: Vec<LayerGeom>,
+    pub deploy_weights: Vec<WeightSpec>,
+    pub train_weights: Vec<WeightSpec>,
+    pub graphs: BTreeMap<String, GraphSig>,
+}
+
+impl ModelManifest {
+    pub fn load(path: &Path) -> Result<ModelManifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read manifest {}", path.display()))?;
+        let j = crate::util::json::parse(&text)
+            .with_context(|| format!("parse manifest {}", path.display()))?;
+        let dir = path.parent().unwrap_or(Path::new("."));
+        Self::from_json(&j, dir)
+    }
+
+    pub fn from_json(j: &Json, artifact_dir: &Path) -> Result<ModelManifest> {
+        // Kernel-only manifests (kernels.manifest.json) carry just a
+        // graphs table; give everything else permissive defaults.
+        let kind = j
+            .get("kind")
+            .and_then(|v| v.as_str())
+            .unwrap_or("kernel")
+            .to_string();
+        let layers = j
+            .get("layers")
+            .and_then(|v| v.as_arr())
+            .unwrap_or(&[])
+            .iter()
+            .map(|l| {
+                Ok(LayerGeom {
+                    name: l.req_str("name")?.to_string(),
+                    kind: l.req_str("kind")?.to_string(),
+                    cin: l.req_usize("cin")?,
+                    cout: l.req_usize("cout")?,
+                    k: l.req_usize("k")?,
+                    stride: l.req_usize("stride")?,
+                    hw_in: l.req_usize("hw_in")?,
+                    hw_out: l.req_usize("hw_out")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let parse_weights = |key: &str| -> Result<Vec<WeightSpec>> {
+            j.get(key)
+                .and_then(|v| v.as_arr())
+                .unwrap_or(&[])
+                .iter()
+                .map(|w| {
+                    Ok(WeightSpec {
+                        name: w.req_str("name")?.to_string(),
+                        shape: w.req("shape")?.shape()?,
+                        rram: w
+                            .get("rram")
+                            .and_then(|v| v.as_bool())
+                            .unwrap_or(false),
+                        grad: w
+                            .get("grad")
+                            .and_then(|v| v.as_bool())
+                            .unwrap_or(true),
+                        init: w.get("init").and_then(|v| v.as_f64()),
+                    })
+                })
+                .collect()
+        };
+        let deploy_weights = parse_weights("deploy_weights")?;
+        let train_weights = parse_weights("train_weights")?;
+
+        let mut graphs = BTreeMap::new();
+        if let Some(Json::Obj(gmap)) = j.get("graphs") {
+            for (key, g) in gmap {
+                let parse_io = |k: &str| -> Result<Vec<TensorSpec>> {
+                    g.req_arr(k)?.iter().map(TensorSpec::parse).collect()
+                };
+                graphs.insert(
+                    key.clone(),
+                    GraphSig {
+                        key: key.clone(),
+                        file: artifact_dir.join(g.req_str("file")?),
+                        inputs: parse_io("inputs")?,
+                        outputs: parse_io("outputs")?,
+                    },
+                );
+            }
+        }
+
+        let opt_usize = |key: &str| -> usize {
+            j.get(key).and_then(|v| v.as_usize()).unwrap_or(0)
+        };
+        Ok(ModelManifest {
+            model: j
+                .get("model")
+                .and_then(|v| v.as_str())
+                .unwrap_or("kernels")
+                .to_string(),
+            kind: kind.clone(),
+            classes: opt_usize("classes"),
+            w_bits: opt_usize("w_bits"),
+            a_bits: opt_usize("a_bits"),
+            input_dim: if kind == "resnet" {
+                opt_usize("image")
+            } else {
+                opt_usize("seq")
+            },
+            vocab: opt_usize("vocab"),
+            d_in_max: opt_usize("d_in_max"),
+            d_out_max: opt_usize("d_out_max"),
+            layers,
+            deploy_weights,
+            train_weights,
+            graphs,
+        })
+    }
+
+    pub fn graph(&self, key: &str) -> Result<&GraphSig> {
+        self.graphs
+            .get(key)
+            .with_context(|| format!("model {}: no graph '{key}'", self.model))
+    }
+
+    pub fn layer(&self, name: &str) -> Result<&LayerGeom> {
+        self.layers
+            .iter()
+            .find(|l| l.name == name)
+            .with_context(|| format!("model {}: no layer '{name}'", self.model))
+    }
+
+    /// Total RRAM-mapped parameters.
+    pub fn rram_params(&self) -> u64 {
+        self.deploy_weights
+            .iter()
+            .filter(|w| w.rram)
+            .map(|w| w.numel() as u64)
+            .sum()
+    }
+
+    /// Total MACs per inference sample (backbone only).
+    pub fn backbone_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    fn sample_manifest() -> Json {
+        parse(
+            r#"{
+            "model": "m", "kind": "resnet", "classes": 10, "image": 16,
+            "w_bits": 4, "a_bits": 4, "d_in_max": 32, "d_out_max": 100,
+            "layers": [
+              {"name": "stem", "kind": "conv", "cin": 3, "cout": 8,
+               "k": 3, "stride": 1, "hw_in": 16, "hw_out": 16},
+              {"name": "fc", "kind": "linear", "cin": 32, "cout": 10,
+               "k": 1, "stride": 1, "hw_in": 1, "hw_out": 1}
+            ],
+            "deploy_weights": [
+              {"name": "stem.w", "shape": [3,3,3,8], "rram": true},
+              {"name": "stem.bias", "shape": [8], "rram": false}
+            ],
+            "train_weights": [
+              {"name": "stem.w", "shape": [3,3,3,8], "grad": true},
+              {"name": "stem.mu", "shape": [8], "grad": false, "init": 0}
+            ],
+            "graphs": {
+              "fwd_b1": {"file": "m.fwd_b1.hlo.txt",
+                "inputs": [{"name": "stem.w", "shape": [3,3,3,8],
+                            "dtype": "f32"},
+                           {"name": "x", "shape": [1,16,16,3],
+                            "dtype": "f32"}],
+                "outputs": [{"name": "logits", "shape": [1,10],
+                             "dtype": "f32"}]}
+            }}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_and_indexes() {
+        let m =
+            ModelManifest::from_json(&sample_manifest(), Path::new("/a"))
+                .unwrap();
+        assert_eq!(m.model, "m");
+        assert_eq!(m.layers.len(), 2);
+        assert_eq!(m.rram_params(), 3 * 3 * 3 * 8);
+        let g = m.graph("fwd_b1").unwrap();
+        assert_eq!(g.input_index("x").unwrap(), 1);
+        assert_eq!(g.output_index("logits").unwrap(), 0);
+        assert_eq!(g.file, Path::new("/a/m.fwd_b1.hlo.txt"));
+        assert!(m.graph("nope").is_err());
+    }
+
+    #[test]
+    fn macs_accounting() {
+        let m =
+            ModelManifest::from_json(&sample_manifest(), Path::new("."))
+                .unwrap();
+        let stem = m.layer("stem").unwrap();
+        // 3×3 conv 3->8 over 16×16 output: 9·3·8·256 MACs.
+        assert_eq!(stem.macs(), 9 * 3 * 8 * 256);
+        let fc = m.layer("fc").unwrap();
+        assert_eq!(fc.macs(), 320);
+        assert_eq!(m.backbone_macs(), stem.macs() + fc.macs());
+    }
+
+    #[test]
+    fn grad_and_init_flags() {
+        let m =
+            ModelManifest::from_json(&sample_manifest(), Path::new("."))
+                .unwrap();
+        assert!(m.train_weights[0].grad);
+        assert!(!m.train_weights[1].grad);
+        assert_eq!(m.train_weights[1].init, Some(0.0));
+    }
+}

@@ -1,0 +1,8 @@
+//! Model-side metadata: manifests (the aot.py contract) and host-side
+//! parameter initialization for backbone + compensation training.
+
+pub mod init;
+pub mod manifest;
+
+pub use manifest::{GraphSig, LayerGeom, ModelManifest, TensorSpec,
+                   WeightSpec};

@@ -1,0 +1,222 @@
+//! Crossbar array tiles: the physical container for programmed devices.
+//!
+//! A [`Tile`] is one 256×512 1T1R array (the paper's fabricated geometry).
+//! A [`ArrayBank`] is the set of tiles a network's RRAM weights are mapped
+//! onto (the paper maps ResNet-20 onto five such arrays). Tiles own the
+//! *target* conductances written at programming time; reads sample a drift
+//! model — programming never happens again after deployment (the paper's
+//! core constraint: no RRAM rewrite).
+
+use crate::rram::device::ConductanceGrid;
+use crate::rram::drift::DriftModel;
+use crate::util::rng::Pcg64;
+
+/// Paper §IV-G array geometry.
+pub const TILE_ROWS: usize = 256;
+pub const TILE_COLS: usize = 512;
+
+/// One programmed crossbar tile.
+#[derive(Debug, Clone)]
+pub struct Tile {
+    pub rows: usize,
+    pub cols: usize,
+    /// Target conductances (µS) after write-verify, row-major; devices
+    /// never re-programmed. Unused cells hold 0.
+    pub g_target: Vec<f32>,
+    /// Number of cells actually allocated to weights.
+    pub used: usize,
+}
+
+impl Tile {
+    pub fn new(rows: usize, cols: usize) -> Tile {
+        Tile {
+            rows,
+            cols,
+            g_target: vec![0.0; rows * cols],
+            used: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    pub fn free(&self) -> usize {
+        self.capacity() - self.used
+    }
+
+    /// Program `targets` into the next free cells; returns the cell range.
+    pub fn program(
+        &mut self,
+        targets: &[f64],
+        grid: &ConductanceGrid,
+        rng: &mut Pcg64,
+    ) -> std::ops::Range<usize> {
+        assert!(targets.len() <= self.free(), "tile overflow");
+        let start = self.used;
+        for (i, &t) in targets.iter().enumerate() {
+            self.g_target[start + i] = grid.program(t, rng) as f32;
+        }
+        self.used += targets.len();
+        start..self.used
+    }
+
+    /// Sample drifted conductances for a cell range at time `t`.
+    pub fn read_drifted(
+        &self,
+        range: std::ops::Range<usize>,
+        t: f64,
+        model: &dyn DriftModel,
+        rng: &mut Pcg64,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(out.len(), range.len());
+        for (o, &g) in out.iter_mut().zip(&self.g_target[range]) {
+            *o = model.sample(g as f64, t, rng).max(0.0) as f32;
+        }
+    }
+}
+
+/// The bank of tiles a network is mapped onto.
+#[derive(Debug, Clone, Default)]
+pub struct ArrayBank {
+    pub tiles: Vec<Tile>,
+}
+
+impl ArrayBank {
+    /// Allocate + program a run of conductance targets, adding tiles as
+    /// needed. Returns (tile index, cell range) segments.
+    pub fn program(
+        &mut self,
+        targets: &[f64],
+        grid: &ConductanceGrid,
+        rng: &mut Pcg64,
+    ) -> Vec<(usize, std::ops::Range<usize>)> {
+        let mut segs = Vec::new();
+        let mut off = 0;
+        while off < targets.len() {
+            if self.tiles.last().map_or(true, |t| t.free() == 0) {
+                self.tiles.push(Tile::new(TILE_ROWS, TILE_COLS));
+            }
+            let ti = self.tiles.len() - 1;
+            let tile = &mut self.tiles[ti];
+            let take = tile.free().min(targets.len() - off);
+            let range = tile.program(&targets[off..off + take], grid, rng);
+            segs.push((ti, range));
+            off += take;
+        }
+        segs
+    }
+
+    /// Total programmed devices.
+    pub fn devices_used(&self) -> usize {
+        self.tiles.iter().map(|t| t.used).sum()
+    }
+
+    pub fn n_tiles(&self) -> usize {
+        self.tiles.len()
+    }
+
+    /// Read a programmed segment list back with drift at time `t`.
+    pub fn read_drifted(
+        &self,
+        segs: &[(usize, std::ops::Range<usize>)],
+        t: f64,
+        model: &dyn DriftModel,
+        rng: &mut Pcg64,
+        out: &mut Vec<f32>,
+    ) {
+        out.clear();
+        for (ti, range) in segs {
+            let start = out.len();
+            out.resize(start + range.len(), 0.0);
+            self.tiles[*ti].read_drifted(
+                range.clone(),
+                t,
+                model,
+                rng,
+                &mut out[start..],
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rram::drift::{IbmDrift, NoDrift};
+
+    fn grid() -> ConductanceGrid {
+        let mut g = ConductanceGrid::default();
+        g.prog_sigma = 0.0; // exact programming for deterministic tests
+        g
+    }
+
+    #[test]
+    fn program_fills_tiles_in_order() {
+        let mut bank = ArrayBank::default();
+        let g = grid();
+        let mut rng = Pcg64::new(1);
+        let n = TILE_ROWS * TILE_COLS + 100; // spills into a second tile
+        let targets: Vec<f64> = (0..n).map(|i| 5.0 + (i % 8) as f64).collect();
+        let segs = bank.program(&targets, &g, &mut rng);
+        assert_eq!(bank.n_tiles(), 2);
+        assert_eq!(bank.devices_used(), n);
+        assert_eq!(segs.len(), 2);
+        assert_eq!(segs[1].1.clone().count(), 100);
+    }
+
+    #[test]
+    fn read_nodrift_returns_programmed() {
+        let mut bank = ArrayBank::default();
+        let g = grid();
+        let mut rng = Pcg64::new(1);
+        let targets = vec![5.0, 10.0, 40.0];
+        let segs = bank.program(&targets, &g, &mut rng);
+        let mut out = Vec::new();
+        bank.read_drifted(&segs, 1e6, &NoDrift, &mut rng, &mut out);
+        assert_eq!(out, vec![5.0, 10.0, 40.0]);
+    }
+
+    #[test]
+    fn read_drifted_moves_mean_up() {
+        let mut bank = ArrayBank::default();
+        let g = grid();
+        let mut rng = Pcg64::new(1);
+        let targets = vec![20.0; 10_000];
+        let segs = bank.program(&targets, &g, &mut rng);
+        let mut out = Vec::new();
+        let model = IbmDrift::default();
+        bank.read_drifted(&segs, 86_400.0, &model, &mut rng, &mut out);
+        let mean: f64 =
+            out.iter().map(|&v| v as f64).sum::<f64>() / out.len() as f64;
+        let want = 20.0 + model.mu_drift(86_400.0);
+        assert!((mean - want).abs() < 0.1, "{mean} vs {want}");
+    }
+
+    #[test]
+    fn conductance_never_negative() {
+        let mut bank = ArrayBank::default();
+        let g = grid();
+        let mut rng = Pcg64::new(5);
+        let segs = bank.program(&vec![5.0; 5000], &g, &mut rng);
+        let mut out = Vec::new();
+        bank.read_drifted(
+            &segs,
+            10.0 * crate::rram::drift::YEAR,
+            &IbmDrift::default(),
+            &mut rng,
+            &mut out,
+        );
+        assert!(out.iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn resnet20_analog_fits_predicted_tiles() {
+        // Our resnet20 analog has ~78k weights -> ~156k devices -> 2 tiles.
+        let weights: usize = 78_000;
+        let devices = weights * 2;
+        let tiles = devices.div_ceil(TILE_ROWS * TILE_COLS);
+        assert_eq!(tiles, 2);
+    }
+}

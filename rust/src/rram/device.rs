@@ -1,0 +1,153 @@
+//! 1T1R RRAM cell model: conductance state grid + program-and-verify.
+//!
+//! Mirrors the paper's fabricated Ti/HfOx/Pt 1T1R devices: eight
+//! conductance levels from 5 to 40 µS programmed by tuning the
+//! access-transistor compliance current, read at 0.2 V (§IV-G). Programming
+//! runs a write-verify loop; the residual error after verification is
+//! modeled as a Gaussian with configurable σ (the "static programming
+//! error" the paper distinguishes from drift).
+
+use crate::util::rng::Pcg64;
+
+/// The programmable conductance grid (µS).
+#[derive(Debug, Clone)]
+pub struct ConductanceGrid {
+    /// Ascending level targets in µS.
+    pub levels: Vec<f64>,
+    /// Write-verify residual σ in µS.
+    pub prog_sigma: f64,
+    /// Physical conductance bounds (µS) — samples clip here.
+    pub g_min: f64,
+    pub g_max: f64,
+}
+
+impl Default for ConductanceGrid {
+    /// Paper §IV-G: eight levels, 5–40 µS.
+    fn default() -> Self {
+        let levels = (0..8).map(|i| 5.0 + 5.0 * i as f64).collect();
+        ConductanceGrid {
+            levels,
+            prog_sigma: 0.15,
+            g_min: 0.0,
+            g_max: 50.0,
+        }
+    }
+}
+
+impl ConductanceGrid {
+    pub fn n_levels(&self) -> usize {
+        self.levels.len()
+    }
+
+    /// Conductance step between adjacent levels (µS); the grid is uniform.
+    pub fn step(&self) -> f64 {
+        (self.levels[self.levels.len() - 1] - self.levels[0])
+            / (self.levels.len() - 1) as f64
+    }
+
+    /// Baseline (lowest) level used as the differential-pair reference.
+    pub fn base(&self) -> f64 {
+        self.levels[0]
+    }
+
+    /// Target conductance for a non-negative magnitude code
+    /// (0 ≤ code ≤ n_levels-1): `base + code·step`.
+    pub fn level_for_code(&self, code: u8) -> f64 {
+        assert!((code as usize) < self.n_levels(), "code {code} off grid");
+        self.levels[code as usize]
+    }
+
+    /// Program one device to `g_target` with write-verify: the achieved
+    /// conductance is the target plus the residual verification error.
+    pub fn program(&self, g_target: f64, rng: &mut Pcg64) -> f64 {
+        let g = rng.normal_with(g_target, self.prog_sigma);
+        g.clamp(self.g_min, self.g_max)
+    }
+
+    /// Map a signed int4 weight code (−(n−1) ..= n−1) to a differential
+    /// conductance pair (g_plus, g_minus) on the grid.
+    pub fn code_to_pair(&self, code: i8) -> (f64, f64) {
+        let lim = (self.n_levels() - 1) as i8;
+        assert!(
+            code >= -lim && code <= lim,
+            "weight code {code} outside ±{lim}"
+        );
+        if code >= 0 {
+            (self.level_for_code(code as u8), self.base())
+        } else {
+            (self.base(), self.level_for_code((-code) as u8))
+        }
+    }
+
+    /// Inverse of [`code_to_pair`] under ideal (noise-free) conductances:
+    /// recover the signed weight code from a differential read.
+    pub fn pair_to_weight(&self, g_plus: f64, g_minus: f64) -> f64 {
+        (g_plus - g_minus) / self.step()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_grid_matches_paper() {
+        let g = ConductanceGrid::default();
+        assert_eq!(g.n_levels(), 8);
+        assert_eq!(g.levels[0], 5.0);
+        assert_eq!(g.levels[7], 40.0);
+        assert!((g.step() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pair_roundtrip_all_codes() {
+        let g = ConductanceGrid::default();
+        for code in -7i8..=7 {
+            let (gp, gm) = g.code_to_pair(code);
+            let w = g.pair_to_weight(gp, gm);
+            assert!((w - code as f64).abs() < 1e-12, "code {code} -> {w}");
+        }
+    }
+
+    #[test]
+    fn zero_code_is_balanced() {
+        let g = ConductanceGrid::default();
+        let (gp, gm) = g.code_to_pair(0);
+        assert_eq!(gp, gm);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside")]
+    fn code_out_of_range_panics() {
+        ConductanceGrid::default().code_to_pair(8);
+    }
+
+    #[test]
+    fn program_noise_statistics() {
+        let g = ConductanceGrid::default();
+        let mut rng = Pcg64::new(2);
+        let n = 20_000;
+        let mut sum = 0.0;
+        let mut sq = 0.0;
+        for _ in 0..n {
+            let v = g.program(20.0, &mut rng);
+            sum += v;
+            sq += v * v;
+        }
+        let mean = sum / n as f64;
+        let sd = (sq / n as f64 - mean * mean).sqrt();
+        assert!((mean - 20.0).abs() < 0.01);
+        assert!((sd - g.prog_sigma).abs() < 0.01);
+    }
+
+    #[test]
+    fn program_clips_to_physical_range() {
+        let mut g = ConductanceGrid::default();
+        g.prog_sigma = 100.0; // absurd noise to force clipping
+        let mut rng = Pcg64::new(3);
+        for _ in 0..100 {
+            let v = g.program(20.0, &mut rng);
+            assert!((g.g_min..=g.g_max).contains(&v));
+        }
+    }
+}

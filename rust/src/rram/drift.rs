@@ -1,0 +1,310 @@
+//! Conductance drift models (paper §II-A and §IV-G).
+//!
+//! Two calibrated models are provided behind the [`DriftModel`] trait:
+//!
+//! - [`IbmDrift`] — the statistical model from IBM's Analog AI Hardware Kit
+//!   used for all main-paper experiments (Eqs. 1–4):
+//!   `g_drift(t) ~ N(µ(t), σ²(t))` with `µ(t) = 0.089·ln t` µS and
+//!   `σ(t) = 0.042·ln t + 0.4118` µS, plus a per-device multiplicative
+//!   `(1 + ε), ε ~ N(0, 0.05²)` variation.
+//! - [`MeasuredDrift`] — the paper's Fig. 6 path: a *state-dependent*
+//!   Gaussian `(µᵢ, σᵢ)` per programmed conductance level, extracted from
+//!   device characterization (here: from the simulated 1T1R array in
+//!   `rram::characterize`, standing in for the fabricated 180 nm array).
+//!
+//! All conductances are in µS. Time is in seconds; `ln t` follows the
+//! paper's convention (natural log, t ≥ 1 s).
+
+use crate::util::rng::Pcg64;
+
+/// Seconds for the paper's canonical drift checkpoints.
+pub const SECOND: f64 = 1.0;
+pub const MINUTE: f64 = 60.0;
+pub const HOUR: f64 = 3600.0;
+pub const DAY: f64 = 86_400.0;
+pub const WEEK: f64 = 7.0 * DAY;
+pub const MONTH: f64 = 30.0 * DAY;
+pub const YEAR: f64 = 365.25 * DAY;
+
+/// The paper's Table II drift checkpoints (1 s … 10 y).
+pub fn paper_checkpoints() -> Vec<(&'static str, f64)> {
+    vec![
+        ("1s", SECOND),
+        ("1h", HOUR),
+        ("1d", DAY),
+        ("1mon", MONTH),
+        ("1y", YEAR),
+        ("10y", 10.0 * YEAR),
+    ]
+}
+
+/// Human-readable drift time (for harness tables).
+pub fn fmt_time(t: f64) -> String {
+    if t < MINUTE {
+        format!("{t:.0}s")
+    } else if t < HOUR {
+        format!("{:.0}min", t / MINUTE)
+    } else if t < DAY {
+        format!("{:.0}h", t / HOUR)
+    } else if t < MONTH {
+        format!("{:.0}d", t / DAY)
+    } else if t < YEAR {
+        format!("{:.1}mon", t / MONTH)
+    } else {
+        format!("{:.1}y", t / YEAR)
+    }
+}
+
+/// A conductance drift model: maps (target conductance, elapsed time) to a
+/// drifted conductance sample.
+pub trait DriftModel: Send + Sync {
+    /// Sample the *drifted* conductance of one device programmed to
+    /// `g_target` µS after `t` seconds. `rng` carries the instance noise.
+    fn sample(&self, g_target: f64, t: f64, rng: &mut Pcg64) -> f64;
+
+    /// Mean drifted conductance (no sampling) — used by deterministic
+    /// compensation baselines and cost analyses.
+    fn mean(&self, g_target: f64, t: f64) -> f64;
+
+    /// Name for manifests/logs.
+    fn name(&self) -> &str;
+}
+
+/// IBM Analog-AI-Kit statistical drift (paper Eqs. 1–4).
+#[derive(Debug, Clone)]
+pub struct IbmDrift {
+    /// µ(t) slope in µS per ln-second (paper: 0.089).
+    pub mu_slope: f64,
+    /// σ(t) slope in µS per ln-second (paper: 0.042).
+    pub sigma_slope: f64,
+    /// σ(t) intercept in µS (paper: 0.4118).
+    pub sigma_icept: f64,
+    /// Device-to-device multiplicative variation σ (paper: 0.05).
+    pub dev_var: f64,
+}
+
+impl Default for IbmDrift {
+    fn default() -> Self {
+        IbmDrift {
+            mu_slope: 0.089,
+            sigma_slope: 0.042,
+            sigma_icept: 0.4118,
+            dev_var: 0.05,
+        }
+    }
+}
+
+impl IbmDrift {
+    /// µ_drift(t) in µS (Eq. 2). Clamped at t = 1 s (ln 1 = 0).
+    pub fn mu_drift(&self, t: f64) -> f64 {
+        self.mu_slope * t.max(1.0).ln()
+    }
+
+    /// σ_drift(t) in µS (Eq. 3).
+    pub fn sigma_drift(&self, t: f64) -> f64 {
+        self.sigma_slope * t.max(1.0).ln() + self.sigma_icept
+    }
+}
+
+impl DriftModel for IbmDrift {
+    fn sample(&self, g_target: f64, t: f64, rng: &mut Pcg64) -> f64 {
+        // Eq. 1: g_drift ~ N(µ(t), σ²(t)); Eq. 4: multiplicative ε.
+        let g_drift = rng.normal_with(self.mu_drift(t), self.sigma_drift(t));
+        let eps = rng.normal_with(0.0, self.dev_var);
+        (g_target + g_drift) * (1.0 + eps)
+    }
+
+    fn mean(&self, g_target: f64, t: f64) -> f64 {
+        g_target + self.mu_drift(t)
+    }
+
+    fn name(&self) -> &str {
+        "ibm"
+    }
+}
+
+/// State-dependent measured drift: per-level (µᵢ, σᵢ) (paper Fig. 6(c)).
+///
+/// `levels` holds the programmed conductance grid in µS (ascending);
+/// `mu`/`sigma` hold the drift offset statistics measured for each level
+/// after the characterization interval (one week in the paper). Samples
+/// for intermediate conductances interpolate linearly between levels —
+/// drift physics varies smoothly with the programmed state.
+#[derive(Debug, Clone)]
+pub struct MeasuredDrift {
+    pub levels: Vec<f64>,
+    pub mu: Vec<f64>,
+    pub sigma: Vec<f64>,
+    /// Interval the statistics were measured at (seconds); sampling at a
+    /// different `t` rescales µ and σ by `ln t / ln t_meas` following the
+    /// log-time kinetics of Eqs. 2–3.
+    pub t_meas: f64,
+    /// Device-to-device multiplicative variation σ.
+    pub dev_var: f64,
+}
+
+impl MeasuredDrift {
+    pub fn new(levels: Vec<f64>, mu: Vec<f64>, sigma: Vec<f64>,
+               t_meas: f64) -> Self {
+        assert_eq!(levels.len(), mu.len());
+        assert_eq!(levels.len(), sigma.len());
+        assert!(levels.len() >= 2, "need at least two levels");
+        MeasuredDrift { levels, mu, sigma, t_meas, dev_var: 0.05 }
+    }
+
+    /// Interpolated (µ, σ) for an arbitrary target conductance at `t`.
+    pub fn stats_at(&self, g_target: f64, t: f64) -> (f64, f64) {
+        let g = g_target.abs();
+        let n = self.levels.len();
+        let (i0, i1, w) = if g <= self.levels[0] {
+            (0, 0, 0.0)
+        } else if g >= self.levels[n - 1] {
+            (n - 1, n - 1, 0.0)
+        } else {
+            let mut i = 0;
+            while self.levels[i + 1] < g {
+                i += 1;
+            }
+            let span = self.levels[i + 1] - self.levels[i];
+            (i, i + 1, (g - self.levels[i]) / span)
+        };
+        let mu = self.mu[i0] * (1.0 - w) + self.mu[i1] * w;
+        let sigma = self.sigma[i0] * (1.0 - w) + self.sigma[i1] * w;
+        // Log-time rescale from the measurement interval to t.
+        let k = t.max(1.0).ln() / self.t_meas.max(std::f64::consts::E).ln();
+        (mu * k, (sigma * k.sqrt()).max(1e-6))
+    }
+}
+
+impl DriftModel for MeasuredDrift {
+    fn sample(&self, g_target: f64, t: f64, rng: &mut Pcg64) -> f64 {
+        let (mu, sigma) = self.stats_at(g_target, t);
+        let g_drift = rng.normal_with(mu, sigma);
+        let eps = rng.normal_with(0.0, self.dev_var);
+        (g_target + g_drift) * (1.0 + eps)
+    }
+
+    fn mean(&self, g_target: f64, t: f64) -> f64 {
+        g_target + self.stats_at(g_target, t).0
+    }
+
+    fn name(&self) -> &str {
+        "measured"
+    }
+}
+
+/// No drift (drift-free baseline rows of every table).
+#[derive(Debug, Clone, Default)]
+pub struct NoDrift;
+
+impl DriftModel for NoDrift {
+    fn sample(&self, g_target: f64, _t: f64, _rng: &mut Pcg64) -> f64 {
+        g_target
+    }
+
+    fn mean(&self, g_target: f64, _t: f64) -> f64 {
+        g_target
+    }
+
+    fn name(&self) -> &str {
+        "none"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ibm_constants_match_paper() {
+        let m = IbmDrift::default();
+        // µ(1h) = 0.089·ln(3600) ≈ 0.7285 µS
+        assert!((m.mu_drift(3600.0) - 0.089 * 3600f64.ln()).abs() < 1e-12);
+        assert!((m.sigma_drift(1.0) - 0.4118).abs() < 1e-12);
+        // 10-year drift mean ≈ 0.089·ln(3.156e8) ≈ 1.74 µS
+        let ten_y = 10.0 * YEAR;
+        assert!((m.mu_drift(ten_y) - 1.742).abs() < 0.01);
+    }
+
+    #[test]
+    fn ibm_sample_statistics() {
+        let m = IbmDrift::default();
+        let mut rng = Pcg64::new(1);
+        let t = DAY;
+        let n = 40_000;
+        let g0 = 20.0;
+        let mut sum = 0.0;
+        let mut sq = 0.0;
+        for _ in 0..n {
+            let g = m.sample(g0, t, &mut rng);
+            sum += g;
+            sq += g * g;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        let want_mean = g0 + m.mu_drift(t);
+        // Var ≈ σ_drift² + (g0+µ)²·0.05² (independent mult. noise).
+        let want_var = m.sigma_drift(t).powi(2)
+            + (want_mean * m.dev_var).powi(2);
+        assert!((mean - want_mean).abs() < 0.05, "{mean} vs {want_mean}");
+        assert!((var / want_var - 1.0).abs() < 0.1, "{var} vs {want_var}");
+    }
+
+    #[test]
+    fn drift_grows_with_log_time() {
+        let m = IbmDrift::default();
+        let d1 = m.mu_drift(HOUR);
+        let d2 = m.mu_drift(MONTH);
+        let d3 = m.mu_drift(10.0 * YEAR);
+        assert!(d1 < d2 && d2 < d3);
+        // Log kinetics: equal ratios in log-time give equal increments.
+        let a = m.mu_drift(100.0) - m.mu_drift(10.0);
+        let b = m.mu_drift(1000.0) - m.mu_drift(100.0);
+        assert!((a - b).abs() < 1e-12);
+    }
+
+    #[test]
+    fn measured_interpolates_between_levels() {
+        let m = MeasuredDrift::new(
+            vec![5.0, 10.0],
+            vec![0.2, 0.6],
+            vec![0.1, 0.3],
+            WEEK,
+        );
+        let (mu, sigma) = m.stats_at(7.5, WEEK);
+        assert!((mu - 0.4).abs() < 1e-9);
+        assert!((sigma - 0.2).abs() < 1e-9);
+        // Clamp below/above the grid.
+        assert!((m.stats_at(1.0, WEEK).0 - 0.2).abs() < 1e-9);
+        assert!((m.stats_at(100.0, WEEK).0 - 0.6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn measured_log_time_rescale() {
+        let m = MeasuredDrift::new(
+            vec![5.0, 40.0],
+            vec![0.5, 0.5],
+            vec![0.2, 0.2],
+            WEEK,
+        );
+        let (mu_w, _) = m.stats_at(20.0, WEEK);
+        let (mu_10y, _) = m.stats_at(20.0, 10.0 * YEAR);
+        assert!((mu_w - 0.5).abs() < 1e-9);
+        let k = (10.0 * YEAR).ln() / WEEK.ln();
+        assert!((mu_10y - 0.5 * k).abs() < 1e-9);
+    }
+
+    #[test]
+    fn no_drift_is_identity() {
+        let mut rng = Pcg64::new(0);
+        assert_eq!(NoDrift.sample(17.0, 1e9, &mut rng), 17.0);
+    }
+
+    #[test]
+    fn fmt_time_human() {
+        assert_eq!(fmt_time(1.0), "1s");
+        assert_eq!(fmt_time(3600.0), "1h");
+        assert_eq!(fmt_time(MONTH), "1.0mon");
+        assert_eq!(fmt_time(10.0 * YEAR), "10.0y");
+    }
+}

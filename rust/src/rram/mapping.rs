@@ -1,0 +1,468 @@
+//! Network → crossbar mapping: BN folding, int4 quantization, differential
+//! programming, and drifted readout back to effective weights.
+//!
+//! This is the deployment pipeline of the paper's Fig. 2:
+//!
+//! 1. [`fold_bn`] — fold trained BatchNorm into per-layer (w, bias); the
+//!    deploy graphs consume the folded form (inference keeps operator
+//!    fusion, one of the paper's arguments against BN-calibration).
+//! 2. [`ProgrammedNetwork::program`] — per-tensor symmetric int4
+//!    quantization, then each weight code becomes a differential
+//!    conductance pair on the [`ArrayBank`] (write-verify noise included).
+//! 3. [`ProgrammedNetwork::read_drifted`] — sample every device under a
+//!    drift model at time `t` and convert conductance pairs back to
+//!    effective fp32 weights: `w = scale · (g⁺ − g⁻)/Δg`. These are the
+//!    weight buffers fed to the AOT executables.
+
+use crate::nn::manifest::ModelManifest;
+use crate::rram::array::ArrayBank;
+use crate::rram::device::ConductanceGrid;
+use crate::rram::drift::DriftModel;
+use crate::util::rng::Pcg64;
+use crate::util::tensor::{Tensor, TensorMap};
+use anyhow::{bail, Context, Result};
+
+pub const BN_EPS: f32 = 1e-5;
+
+/// Fold BatchNorm into conv weights/biases (train form → deploy form).
+///
+/// For each conv layer `l` with BN(γ, β, µ, σ²):
+///   `w' = w · γ/√(σ²+ε)` (per output channel), `bias' = β − µ·γ/√(σ²+ε)`.
+/// The fc layer carries its bias through unchanged. BERT models train in
+/// deploy form already, so folding is the identity there.
+pub fn fold_bn(manifest: &ModelManifest, train: &TensorMap)
+               -> Result<TensorMap> {
+    if manifest.kind != "resnet" {
+        // BERT analog: train form == deploy form.
+        return Ok(train.clone());
+    }
+    let mut out = TensorMap::new();
+    for layer in &manifest.layers {
+        let name = &layer.name;
+        let w = train
+            .get(&format!("{name}.w"))
+            .with_context(|| format!("missing train weight {name}.w"))?;
+        if layer.kind == "linear" {
+            out.insert(format!("{name}.w"), w.clone());
+            out.insert(
+                format!("{name}.bias"),
+                train
+                    .get(&format!("{name}.bias"))
+                    .context("missing fc bias")?
+                    .clone(),
+            );
+            continue;
+        }
+        let gamma = train.get(&format!("{name}.gamma")).context("gamma")?;
+        let beta = train.get(&format!("{name}.beta")).context("beta")?;
+        let mu = train.get(&format!("{name}.mu")).context("mu")?;
+        let var = train.get(&format!("{name}.var")).context("var")?;
+        let cout = layer.cout;
+        if w.shape != vec![layer.k, layer.k, layer.cin, cout] {
+            bail!("layer {name}: unexpected weight shape {:?}", w.shape);
+        }
+        // HWIO layout: output channel is the innermost axis.
+        let wv = w.as_f32();
+        let (g, b, m, v) =
+            (gamma.as_f32(), beta.as_f32(), mu.as_f32(), var.as_f32());
+        let mut folded = vec![0f32; wv.len()];
+        for (i, &val) in wv.iter().enumerate() {
+            let c = i % cout;
+            folded[i] = val * g[c] / (v[c] + BN_EPS).sqrt();
+        }
+        let bias: Vec<f32> = (0..cout)
+            .map(|c| b[c] - m[c] * g[c] / (v[c] + BN_EPS).sqrt())
+            .collect();
+        out.insert(format!("{name}.w"), Tensor::from_f32(&w.shape, folded));
+        out.insert(format!("{name}.bias"), Tensor::from_f32(&[cout], bias));
+    }
+    Ok(out)
+}
+
+/// Symmetric per-tensor int quantization: code = round(w/s) clipped.
+pub fn quantize_tensor(w: &[f32], bits: usize) -> (Vec<i8>, f32) {
+    let lim = ((1i32 << (bits - 1)) - 1) as f32;
+    let amax = w.iter().fold(0f32, |a, &v| a.max(v.abs())).max(1e-8);
+    let scale = amax / lim;
+    let codes = w
+        .iter()
+        .map(|&v| (v / scale).round().clamp(-lim, lim) as i8)
+        .collect();
+    (codes, scale)
+}
+
+/// Per-output-channel symmetric quantization (the crossbar's per-column
+/// digital scale). The output channel is the innermost axis in both the
+/// HWIO conv and [in, out] linear layouts; BN folding scales weights per
+/// channel, so per-channel grids are required to keep folded weights on
+/// a usable int4 grid.
+pub fn quantize_per_channel(w: &[f32], cout: usize, bits: usize)
+                            -> (Vec<i8>, Vec<f32>) {
+    let lim = ((1i32 << (bits - 1)) - 1) as f32;
+    let mut amax = vec![1e-8f32; cout];
+    for (i, &v) in w.iter().enumerate() {
+        let c = i % cout;
+        amax[c] = amax[c].max(v.abs());
+    }
+    let scales: Vec<f32> = amax.iter().map(|&a| a / lim).collect();
+    let codes = w
+        .iter()
+        .enumerate()
+        .map(|(i, &v)| {
+            (v / scales[i % cout]).round().clamp(-lim, lim) as i8
+        })
+        .collect();
+    (codes, scales)
+}
+
+/// One RRAM-programmed weight tensor.
+#[derive(Debug, Clone)]
+pub struct ProgrammedTensor {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// int4 codes (kept for exact re-reads and accounting).
+    pub codes: Vec<i8>,
+    /// Per-output-channel dequantization scales (the crossbar's
+    /// per-column digital scaling).
+    pub scales: Vec<f32>,
+    /// Output channels (innermost axis length).
+    pub cout: usize,
+    /// Positive-line segments on the bank.
+    pub plus_segs: Vec<(usize, std::ops::Range<usize>)>,
+    /// Negative-line segments on the bank.
+    pub minus_segs: Vec<(usize, std::ops::Range<usize>)>,
+}
+
+/// A network mapped onto RRAM tiles + its digital (SRAM) tensors.
+#[derive(Debug, Clone)]
+pub struct ProgrammedNetwork {
+    pub model: String,
+    pub grid: ConductanceGrid,
+    pub bank: ArrayBank,
+    pub tensors: Vec<ProgrammedTensor>,
+    /// Non-RRAM deploy tensors (biases, embeddings, LN params): digital,
+    /// drift-free, passed through to the executables unchanged.
+    pub digital: TensorMap,
+}
+
+impl ProgrammedNetwork {
+    /// Quantize + program every RRAM-flagged deploy tensor.
+    pub fn program(
+        manifest: &ModelManifest,
+        deploy: &TensorMap,
+        grid: ConductanceGrid,
+        rng: &mut Pcg64,
+    ) -> Result<ProgrammedNetwork> {
+        let mut bank = ArrayBank::default();
+        let mut tensors = Vec::new();
+        let mut digital = TensorMap::new();
+        for spec in &manifest.deploy_weights {
+            let t = deploy
+                .get(&spec.name)
+                .with_context(|| format!("missing deploy {}", spec.name))?;
+            if !spec.rram {
+                digital.insert(spec.name.clone(), t.clone());
+                continue;
+            }
+            let cout = *spec.shape.last().unwrap_or(&1);
+            let (codes, scales) =
+                quantize_per_channel(t.as_f32(), cout, manifest.w_bits);
+            let plus: Vec<f64> = codes
+                .iter()
+                .map(|&c| grid.code_to_pair(c).0)
+                .collect();
+            let minus: Vec<f64> = codes
+                .iter()
+                .map(|&c| grid.code_to_pair(c).1)
+                .collect();
+            let plus_segs = bank.program(&plus, &grid, rng);
+            let minus_segs = bank.program(&minus, &grid, rng);
+            tensors.push(ProgrammedTensor {
+                name: spec.name.clone(),
+                shape: spec.shape.clone(),
+                codes,
+                scales,
+                cout,
+                plus_segs,
+                minus_segs,
+            });
+        }
+        Ok(ProgrammedNetwork {
+            model: manifest.model.clone(),
+            grid,
+            bank,
+            tensors,
+            digital,
+        })
+    }
+
+    /// Total devices (2 per weight).
+    pub fn devices(&self) -> usize {
+        self.bank.devices_used()
+    }
+
+    /// Number of 256×512 tiles in use (paper: 5 for ResNet-20).
+    pub fn n_tiles(&self) -> usize {
+        self.bank.n_tiles()
+    }
+
+    /// Sample a full drifted readout at time `t`: every device drifts
+    /// independently, conductance pairs convert back to effective weights.
+    /// Returns the complete deploy TensorMap (drifted RRAM + digital).
+    pub fn read_drifted(
+        &self,
+        t: f64,
+        model: &dyn DriftModel,
+        rng: &mut Pcg64,
+    ) -> TensorMap {
+        let mut out = TensorMap::new();
+        self.read_drifted_into(t, model, rng, &mut out);
+        out
+    }
+
+    /// Buffer-reusing variant: refreshes `out` in place. On repeat calls
+    /// (the EVALSTATS / drift-inject-training hot path) no allocation or
+    /// digital-tensor cloning happens — §Perf L3 optimization.
+    pub fn read_drifted_into(
+        &self,
+        t: f64,
+        model: &dyn DriftModel,
+        rng: &mut Pcg64,
+        out: &mut TensorMap,
+    ) {
+        let step = self.grid.step() as f32;
+        for (k, v) in &self.digital {
+            if !out.contains_key(k) {
+                out.insert(k.clone(), v.clone());
+            }
+        }
+        let mut gp = Vec::new();
+        let mut gm = Vec::new();
+        for pt in &self.tensors {
+            self.bank.read_drifted(&pt.plus_segs, t, model, rng, &mut gp);
+            self.bank
+                .read_drifted(&pt.minus_segs, t, model, rng, &mut gm);
+            let dst = out
+                .entry(pt.name.clone())
+                .or_insert_with(|| {
+                    Tensor::zeros(
+                        crate::util::tensor::DType::F32,
+                        &pt.shape,
+                    )
+                });
+            let w = dst.as_f32_mut();
+            for (i, (&p, &m)) in gp.iter().zip(&gm).enumerate() {
+                w[i] = pt.scales[i % pt.cout] * (p - m) / step;
+            }
+        }
+    }
+
+    /// Ideal (quantized, drift-free) readout — the t=0 deploy weights.
+    pub fn read_ideal(&self) -> TensorMap {
+        let mut out = self.digital.clone();
+        for pt in &self.tensors {
+            let w: Vec<f32> = pt
+                .codes
+                .iter()
+                .enumerate()
+                .map(|(i, &c)| pt.scales[i % pt.cout] * c as f32)
+                .collect();
+            out.insert(pt.name.clone(), Tensor::from_f32(&pt.shape, w));
+        }
+        out
+    }
+
+    /// Serialize programming state (targets are reconstructable from
+    /// codes + grid; we persist codes, scales and tile fill levels).
+    pub fn to_tensor_map(&self) -> TensorMap {
+        let mut m = TensorMap::new();
+        for pt in &self.tensors {
+            m.insert(
+                format!("codes:{}", pt.name),
+                Tensor::from_i8(&pt.shape, pt.codes.clone()),
+            );
+            m.insert(
+                format!("scale:{}", pt.name),
+                Tensor::from_f32(&[pt.cout], pt.scales.clone()),
+            );
+        }
+        for (k, v) in &self.digital {
+            m.insert(format!("digital:{k}"), v.clone());
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rram::drift::NoDrift;
+    use crate::util::json::parse;
+    use std::path::Path;
+
+    fn tiny_manifest() -> ModelManifest {
+        let j = parse(
+            r#"{
+            "model": "t", "kind": "resnet", "classes": 4, "image": 8,
+            "w_bits": 4, "a_bits": 4, "d_in_max": 8, "d_out_max": 8,
+            "layers": [
+              {"name": "stem", "kind": "conv", "cin": 3, "cout": 4,
+               "k": 3, "stride": 1, "hw_in": 8, "hw_out": 8},
+              {"name": "fc", "kind": "linear", "cin": 4, "cout": 4,
+               "k": 1, "stride": 1, "hw_in": 1, "hw_out": 1}
+            ],
+            "deploy_weights": [
+              {"name": "stem.w", "shape": [3,3,3,4], "rram": true},
+              {"name": "stem.bias", "shape": [4], "rram": false},
+              {"name": "fc.w", "shape": [4,4], "rram": true},
+              {"name": "fc.bias", "shape": [4], "rram": false}
+            ],
+            "train_weights": [],
+            "graphs": {}}"#,
+        )
+        .unwrap();
+        ModelManifest::from_json(&j, Path::new(".")).unwrap()
+    }
+
+    fn deploy_map() -> TensorMap {
+        let mut m = TensorMap::new();
+        let mut rng = Pcg64::new(7);
+        let mut w = vec![0f32; 108];
+        rng.fill_normal_f32(&mut w, 0.0, 0.2);
+        m.insert("stem.w".into(), Tensor::from_f32(&[3, 3, 3, 4], w));
+        m.insert("stem.bias".into(), Tensor::from_f32(&[4], vec![0.1; 4]));
+        let mut w2 = vec![0f32; 16];
+        rng.fill_normal_f32(&mut w2, 0.0, 0.4);
+        m.insert("fc.w".into(), Tensor::from_f32(&[4, 4], w2));
+        m.insert("fc.bias".into(), Tensor::from_f32(&[4], vec![0.0; 4]));
+        m
+    }
+
+    #[test]
+    fn quantize_tensor_grid() {
+        let w = vec![-1.4, 0.0, 0.7, 1.4];
+        let (codes, scale) = quantize_tensor(&w, 4);
+        assert!((scale - 0.2).abs() < 1e-6);
+        assert_eq!(codes, vec![-7, 0, 4, 7]);
+    }
+
+    #[test]
+    fn program_and_ideal_readback_matches_quantized() {
+        let man = tiny_manifest();
+        let mut grid = ConductanceGrid::default();
+        grid.prog_sigma = 0.0;
+        let mut rng = Pcg64::new(1);
+        let deploy = deploy_map();
+        let net =
+            ProgrammedNetwork::program(&man, &deploy, grid, &mut rng)
+                .unwrap();
+        assert_eq!(net.tensors.len(), 2);
+        assert_eq!(net.devices(), (108 + 16) * 2);
+        let ideal = net.read_ideal();
+        // Ideal readback = quantized original within one scale step.
+        let orig = deploy.get("stem.w").unwrap().as_f32();
+        let got = ideal.get("stem.w").unwrap().as_f32();
+        let max_scale = net.tensors[0]
+            .scales
+            .iter()
+            .fold(0f32, |a, &s| a.max(s));
+        for (a, b) in orig.iter().zip(got) {
+            assert!((a - b).abs() <= max_scale / 2.0 + 1e-6);
+        }
+        // Digital tensors pass through.
+        assert_eq!(
+            ideal.get("stem.bias").unwrap().as_f32(),
+            &[0.1, 0.1, 0.1, 0.1]
+        );
+    }
+
+    #[test]
+    fn nodrift_readout_equals_ideal_with_exact_programming() {
+        let man = tiny_manifest();
+        let mut grid = ConductanceGrid::default();
+        grid.prog_sigma = 0.0;
+        let mut rng = Pcg64::new(2);
+        let net = ProgrammedNetwork::program(&man, &deploy_map(), grid,
+                                             &mut rng)
+        .unwrap();
+        let drifted = net.read_drifted(1.0, &NoDrift, &mut rng);
+        let ideal = net.read_ideal();
+        for name in ["stem.w", "fc.w"] {
+            let a = drifted.get(name).unwrap().as_f32();
+            let b = ideal.get(name).unwrap().as_f32();
+            for (x, y) in a.iter().zip(b) {
+                assert!((x - y).abs() < 1e-5, "{name}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn drift_perturbs_weights() {
+        let man = tiny_manifest();
+        let grid = ConductanceGrid::default();
+        let mut rng = Pcg64::new(3);
+        let net = ProgrammedNetwork::program(&man, &deploy_map(), grid,
+                                             &mut rng)
+        .unwrap();
+        let model = crate::rram::drift::IbmDrift::default();
+        let d1 = net.read_drifted(crate::rram::drift::YEAR, &model, &mut rng);
+        let ideal = net.read_ideal();
+        let a = d1.get("fc.w").unwrap().as_f32();
+        let b = ideal.get("fc.w").unwrap().as_f32();
+        let max_dev: f32 = a
+            .iter()
+            .zip(b)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0, f32::max);
+        assert!(max_dev > 1e-3, "drift must move weights, got {max_dev}");
+        // Two reads are independent instances.
+        let d2 = net.read_drifted(crate::rram::drift::YEAR, &model, &mut rng);
+        assert_ne!(
+            d1.get("fc.w").unwrap().as_f32(),
+            d2.get("fc.w").unwrap().as_f32()
+        );
+    }
+
+    #[test]
+    fn fold_bn_math() {
+        // Single conv layer, hand-checked folding.
+        let j = parse(
+            r#"{
+            "model": "t", "kind": "resnet", "classes": 2, "image": 4,
+            "w_bits": 4, "a_bits": 4, "d_in_max": 2, "d_out_max": 2,
+            "layers": [
+              {"name": "stem", "kind": "conv", "cin": 1, "cout": 2,
+               "k": 1, "stride": 1, "hw_in": 4, "hw_out": 4},
+              {"name": "fc", "kind": "linear", "cin": 2, "cout": 2,
+               "k": 1, "stride": 1, "hw_in": 1, "hw_out": 1}
+            ],
+            "deploy_weights": [], "train_weights": [], "graphs": {}}"#,
+        )
+        .unwrap();
+        let man = ModelManifest::from_json(&j, Path::new(".")).unwrap();
+        let mut train = TensorMap::new();
+        train.insert("stem.w".into(),
+                     Tensor::from_f32(&[1, 1, 1, 2], vec![2.0, 4.0]));
+        train.insert("stem.gamma".into(),
+                     Tensor::from_f32(&[2], vec![1.0, 2.0]));
+        train.insert("stem.beta".into(),
+                     Tensor::from_f32(&[2], vec![0.5, -0.5]));
+        train.insert("stem.mu".into(),
+                     Tensor::from_f32(&[2], vec![1.0, 3.0]));
+        train.insert("stem.var".into(),
+                     Tensor::from_f32(&[2], vec![4.0, 1.0]));
+        train.insert("fc.w".into(),
+                     Tensor::from_f32(&[2, 2], vec![1., 0., 0., 1.]));
+        train.insert("fc.bias".into(),
+                     Tensor::from_f32(&[2], vec![0.0, 0.0]));
+        let deploy = fold_bn(&man, &train).unwrap();
+        let w = deploy.get("stem.w").unwrap().as_f32();
+        // w'[c] = w[c]·γ[c]/√(var[c]+ε): [2·1/2, 4·2/1] = [1, 8]
+        assert!((w[0] - 1.0).abs() < 1e-4);
+        assert!((w[1] - 8.0).abs() < 1e-4);
+        let b = deploy.get("stem.bias").unwrap().as_f32();
+        // bias'[c] = β − µ·γ/√var: [0.5 − 0.5, −0.5 − 6] = [0, −6.5]
+        assert!((b[0] - 0.0).abs() < 1e-4);
+        assert!((b[1] + 6.5).abs() < 1e-3);
+    }
+}

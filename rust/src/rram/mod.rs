@@ -1,0 +1,17 @@
+//! RRAM substrate: 1T1R device model, crossbar tiles, drift models,
+//! network→conductance mapping, and the Fig. 6 characterization flow.
+
+pub mod array;
+pub mod characterize;
+pub mod device;
+pub mod drift;
+pub mod mapping;
+
+pub use array::{ArrayBank, Tile, TILE_COLS, TILE_ROWS};
+pub use characterize::{characterize, fit_measured_model, FabDrift};
+pub use device::ConductanceGrid;
+pub use drift::{
+    fmt_time, paper_checkpoints, DriftModel, IbmDrift, MeasuredDrift,
+    NoDrift, DAY, HOUR, MINUTE, MONTH, SECOND, WEEK, YEAR,
+};
+pub use mapping::{fold_bn, quantize_tensor, ProgrammedNetwork};

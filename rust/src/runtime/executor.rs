@@ -1,0 +1,107 @@
+//! A loaded + compiled graph with typed marshalling against its manifest
+//! signature.
+
+use crate::nn::manifest::GraphSig;
+use crate::util::tensor::{Tensor, TensorMap};
+use anyhow::{bail, Context, Result};
+use std::sync::Arc;
+
+/// One compiled executable bound to its IO signature.
+pub struct Executable {
+    pub sig: GraphSig,
+    exe: xla::PjRtLoadedExecutable,
+    /// Cumulative execution count (metrics).
+    pub executions: std::sync::atomic::AtomicU64,
+}
+
+impl Executable {
+    pub fn compile(client: &xla::PjRtClient, sig: &GraphSig)
+                   -> Result<Arc<Executable>> {
+        let proto = xla::HloModuleProto::from_text_file(&sig.file)
+            .with_context(|| format!("load HLO {}", sig.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compile {}", sig.key))?;
+        Ok(Arc::new(Executable {
+            sig: sig.clone(),
+            exe,
+            executions: std::sync::atomic::AtomicU64::new(0),
+        }))
+    }
+
+    /// Execute with positional tensors (must match the signature order).
+    pub fn run(&self, args: &[&Tensor]) -> Result<Vec<Tensor>> {
+        if args.len() != self.sig.inputs.len() {
+            bail!(
+                "graph {}: got {} args, signature has {}",
+                self.sig.key,
+                args.len(),
+                self.sig.inputs.len()
+            );
+        }
+        for (a, spec) in args.iter().zip(&self.sig.inputs) {
+            if a.shape != spec.shape {
+                bail!(
+                    "graph {} input '{}': shape {:?} != expected {:?}",
+                    self.sig.key,
+                    spec.name,
+                    a.shape,
+                    spec.shape
+                );
+            }
+            if a.dtype != spec.dtype {
+                bail!(
+                    "graph {} input '{}': dtype {} != expected {}",
+                    self.sig.key,
+                    spec.name,
+                    a.dtype.name(),
+                    spec.dtype.name()
+                );
+            }
+        }
+        let literals: Vec<xla::Literal> = args
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        self.executions
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        // aot.py lowers with return_tuple=True: one tuple output.
+        let tuple = result[0][0].to_literal_sync()?;
+        let elems = tuple.to_tuple()?;
+        if elems.len() != self.sig.outputs.len() {
+            bail!(
+                "graph {}: {} outputs, signature has {}",
+                self.sig.key,
+                elems.len(),
+                self.sig.outputs.len()
+            );
+        }
+        elems.iter().map(Tensor::from_literal).collect()
+    }
+
+    /// Execute with named tensors gathered from `maps` (first match wins),
+    /// returning outputs as a named map.
+    pub fn run_named(&self, maps: &[&TensorMap]) -> Result<TensorMap> {
+        let mut args: Vec<&Tensor> = Vec::with_capacity(self.sig.inputs.len());
+        for spec in &self.sig.inputs {
+            let t = maps
+                .iter()
+                .find_map(|m| m.get(&spec.name))
+                .with_context(|| {
+                    format!("graph {}: missing input '{}'",
+                            self.sig.key, spec.name)
+                })?;
+            args.push(t);
+        }
+        let outs = self.run(&args)?;
+        Ok(self
+            .sig
+            .outputs
+            .iter()
+            .map(|o| o.name.clone())
+            .zip(outs)
+            .collect())
+    }
+}

@@ -1,0 +1,13 @@
+//! PJRT runtime: loads HLO-text artifacts produced by `python/compile/aot.py`
+//! and executes them on the CPU PJRT client from the request path.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`. HLO
+//! *text* is the interchange format (jax ≥ 0.5 emits 64-bit instruction
+//! ids that xla_extension 0.5.1 rejects in proto form).
+
+pub mod executor;
+pub mod registry;
+
+pub use executor::Executable;
+pub use registry::Runtime;

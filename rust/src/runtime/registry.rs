@@ -1,0 +1,68 @@
+//! Artifact registry: one PJRT client + lazily compiled executables,
+//! keyed by (model, graph). Compilation happens once per graph; the
+//! request path only executes.
+
+use crate::nn::manifest::ModelManifest;
+use crate::runtime::executor::Executable;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub artifact_dir: PathBuf,
+    manifests: Mutex<BTreeMap<String, Arc<ModelManifest>>>,
+    executables: Mutex<BTreeMap<(String, String), Arc<Executable>>>,
+}
+
+impl Runtime {
+    /// CPU PJRT client over the artifact directory.
+    pub fn cpu(artifact_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("create PJRT client")?;
+        Ok(Runtime {
+            client,
+            artifact_dir: artifact_dir.as_ref().to_path_buf(),
+            manifests: Mutex::new(BTreeMap::new()),
+            executables: Mutex::new(BTreeMap::new()),
+        })
+    }
+
+    /// Load (and cache) a model manifest.
+    pub fn manifest(&self, model: &str) -> Result<Arc<ModelManifest>> {
+        if let Some(m) = self.manifests.lock().unwrap().get(model) {
+            return Ok(m.clone());
+        }
+        let path = self.artifact_dir.join(format!("{model}.manifest.json"));
+        let m = Arc::new(ModelManifest::load(&path)?);
+        self.manifests
+            .lock()
+            .unwrap()
+            .insert(model.to_string(), m.clone());
+        Ok(m)
+    }
+
+    /// Get (compile-once) the executable for a model graph.
+    pub fn executable(&self, model: &str, graph: &str)
+                      -> Result<Arc<Executable>> {
+        let key = (model.to_string(), graph.to_string());
+        if let Some(e) = self.executables.lock().unwrap().get(&key) {
+            return Ok(e.clone());
+        }
+        let manifest = self.manifest(model)?;
+        let sig = manifest.graph(graph)?;
+        let exe = Executable::compile(&self.client, sig)?;
+        self.executables.lock().unwrap().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Kernel artifacts live in a model-less manifest.
+    pub fn kernel_executable(&self, kernel: &str) -> Result<Arc<Executable>> {
+        self.executable("kernels", kernel)
+    }
+
+    /// Graphs compiled so far (metrics / tests).
+    pub fn compiled_count(&self) -> usize {
+        self.executables.lock().unwrap().len()
+    }
+}

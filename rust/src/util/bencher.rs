@@ -1,0 +1,167 @@
+//! Minimal benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` targets are `harness = false` binaries that use
+//! [`Bencher`] for warmup + timed iterations with median/p10/p90 stats,
+//! and print both human-readable rows and a machine-readable JSON file
+//! under `results/`.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub median_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+    pub mean_ns: f64,
+}
+
+impl BenchStats {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.median_ns / 1e9)
+    }
+
+    pub fn human(&self) -> String {
+        format!(
+            "{:<44} {:>12} median  [{} .. {}]  ({} iters)",
+            self.name,
+            fmt_ns(self.median_ns),
+            fmt_ns(self.p10_ns),
+            fmt_ns(self.p90_ns),
+            self.iters
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+pub struct Bencher {
+    /// Minimum total measurement time per benchmark (seconds).
+    pub min_time: f64,
+    /// Maximum iterations regardless of time.
+    pub max_iters: usize,
+    pub warmup_iters: usize,
+    pub results: Vec<BenchStats>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            min_time: 1.0,
+            max_iters: 10_000,
+            warmup_iters: 2,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher {
+            min_time: 0.2,
+            max_iters: 200,
+            warmup_iters: 1,
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f` repeatedly; returns and records the stats.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> BenchStats {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        while start.elapsed().as_secs_f64() < self.min_time
+            && samples.len() < self.max_iters
+        {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_nanos() as f64);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let stats = BenchStats {
+            name: name.to_string(),
+            iters: n,
+            median_ns: samples[n / 2],
+            p10_ns: samples[n / 10],
+            p90_ns: samples[(n * 9) / 10],
+            mean_ns: samples.iter().sum::<f64>() / n as f64,
+        };
+        println!("{}", stats.human());
+        self.results.push(stats.clone());
+        stats
+    }
+
+    /// Write accumulated results as JSON under `results/bench_<name>.json`.
+    pub fn write_json(&self, bench_name: &str) -> anyhow::Result<()> {
+        use crate::util::json::{arr, num, obj, s, Json};
+        std::fs::create_dir_all("results")?;
+        let rows: Vec<Json> = self
+            .results
+            .iter()
+            .map(|r| {
+                obj(vec![
+                    ("name", s(&r.name)),
+                    ("iters", num(r.iters as f64)),
+                    ("median_ns", num(r.median_ns)),
+                    ("p10_ns", num(r.p10_ns)),
+                    ("p90_ns", num(r.p90_ns)),
+                    ("mean_ns", num(r.mean_ns)),
+                ])
+            })
+            .collect();
+        let out = obj(vec![("bench", s(bench_name)), ("rows", arr(rows))]);
+        std::fs::write(
+            format!("results/bench_{bench_name}.json"),
+            out.to_string_pretty(),
+        )?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_stats() {
+        let mut b = Bencher {
+            min_time: 0.01,
+            max_iters: 50,
+            warmup_iters: 1,
+            results: Vec::new(),
+        };
+        let mut acc = 0u64;
+        let st = b.bench("spin", || {
+            for i in 0..1000 {
+                acc = acc.wrapping_add(i);
+            }
+            std::hint::black_box(acc);
+        });
+        assert!(st.iters > 0);
+        assert!(st.median_ns > 0.0);
+        assert!(st.p10_ns <= st.median_ns && st.median_ns <= st.p90_ns);
+        assert_eq!(b.results.len(), 1);
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(1500.0), "1.50 µs");
+        assert_eq!(fmt_ns(2.5e6), "2.50 ms");
+        assert_eq!(fmt_ns(3.2e9), "3.200 s");
+    }
+}

@@ -1,0 +1,165 @@
+//! Tiny CLI argument parser (no clap offline): `--key value`, `--flag`,
+//! positional subcommands.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    /// Option keys consumed via get_* (for unknown-option detection).
+    seen: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an explicit arg list (first element = first real arg).
+    pub fn parse_from<I: IntoIterator<Item = String>>(
+        iter: I,
+        known_flags: &[&str],
+    ) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = iter.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if known_flags.contains(&key) {
+                    args.flags.push(key.to_string());
+                } else if it
+                    .peek()
+                    .map_or(false, |n| !n.starts_with("--"))
+                {
+                    args.options
+                        .insert(key.to_string(), it.next().unwrap());
+                } else {
+                    // Trailing --key without a value: treat as flag.
+                    args.flags.push(key.to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn parse(known_flags: &[&str]) -> Result<Args> {
+        Self::parse_from(std::env::args().skip(1), known_flags)
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.seen.borrow_mut().push(key.to_string());
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{key} '{v}': {e}")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{key} '{v}': {e}")),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{key} '{v}': {e}")),
+        }
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Error on options that were never consumed (typo protection).
+    pub fn reject_unknown(&self) -> Result<()> {
+        let seen = self.seen.borrow();
+        for k in self.options.keys() {
+            if !seen.contains(k) {
+                bail!("unknown option --{k}");
+            }
+        }
+        Ok(())
+    }
+
+    /// Comma-separated list option.
+    pub fn get_list(&self, key: &str) -> Option<Vec<String>> {
+        self.get(key).map(|v| {
+            v.split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect()
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse_from(v.iter().map(|s| s.to_string()), &["force", "v"])
+            .unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&["schedule", "--model", "resnet20_easy",
+                        "--athr=0.05", "--force"]);
+        assert_eq!(a.subcommand(), Some("schedule"));
+        assert_eq!(a.get("model"), Some("resnet20_easy"));
+        assert_eq!(a.get_f64("athr", 0.0).unwrap(), 0.05);
+        assert!(a.has_flag("force"));
+    }
+
+    #[test]
+    fn defaults_and_numbers() {
+        let a = parse(&["x", "--n", "12"]);
+        assert_eq!(a.get_usize("n", 0).unwrap(), 12);
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+        assert!(a.get_f64("n", 0.0).unwrap() == 12.0);
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = parse(&["x", "--n", "abc"]);
+        assert!(a.get_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let a = parse(&["x", "--typo", "1"]);
+        let _ = a.get("other");
+        assert!(a.reject_unknown().is_err());
+        let b = parse(&["x", "--n", "1"]);
+        let _ = b.get("n");
+        assert!(b.reject_unknown().is_ok());
+    }
+
+    #[test]
+    fn list_option() {
+        let a = parse(&["x", "--models", "a, b,c"]);
+        assert_eq!(a.get_list("models").unwrap(), vec!["a", "b", "c"]);
+    }
+}

@@ -1,0 +1,448 @@
+//! Minimal JSON parser/emitter.
+//!
+//! The offline build environment only vendors the `xla` crate's dependency
+//! tree (no serde), so the manifest/config/results plumbing uses this
+//! self-contained implementation. It supports the full JSON grammar except
+//! `\u` surrogate pairs outside the BMP (sufficient for our ASCII
+//! manifests) and preserves object insertion order.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// A JSON value. Numbers are stored as f64 (manifest shapes fit exactly).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().map(|n| n as usize)
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        self.as_f64().map(|n| n as i64)
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    /// Required-field helpers: error messages name the missing key.
+    pub fn req(&self, key: &str) -> anyhow::Result<&Json> {
+        self.get(key)
+            .ok_or_else(|| anyhow::anyhow!("missing JSON key '{key}'"))
+    }
+
+    pub fn req_str(&self, key: &str) -> anyhow::Result<&str> {
+        self.req(key)?
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("JSON key '{key}' not a string"))
+    }
+
+    pub fn req_usize(&self, key: &str) -> anyhow::Result<usize> {
+        self.req(key)?
+            .as_usize()
+            .ok_or_else(|| anyhow::anyhow!("JSON key '{key}' not a number"))
+    }
+
+    pub fn req_f64(&self, key: &str) -> anyhow::Result<f64> {
+        self.req(key)?
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("JSON key '{key}' not a number"))
+    }
+
+    pub fn req_arr(&self, key: &str) -> anyhow::Result<&[Json]> {
+        self.req(key)?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("JSON key '{key}' not an array"))
+    }
+
+    /// Shape helper: `[2, 3]` -> `vec![2, 3]`.
+    pub fn shape(&self) -> anyhow::Result<Vec<usize>> {
+        self.as_arr()
+            .ok_or_else(|| anyhow::anyhow!("shape not an array"))?
+            .iter()
+            .map(|d| {
+                d.as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("shape dim not a number"))
+            })
+            .collect()
+    }
+
+    pub fn to_string_pretty(&self) -> String {
+        let mut s = String::new();
+        self.emit(&mut s, 0, true);
+        s
+    }
+
+    fn emit(&self, out: &mut String, indent: usize, pretty: bool) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                if n.fract() == 0.0 && n.abs() < 9e15 {
+                    let _ = write!(out, "{}", *n as i64);
+                } else {
+                    let _ = write!(out, "{n}");
+                }
+            }
+            Json::Str(s) => emit_str(out, s),
+            Json::Arr(a) => {
+                out.push('[');
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                        if pretty {
+                            out.push(' ');
+                        }
+                    }
+                    v.emit(out, indent, pretty);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    if pretty {
+                        out.push('\n');
+                        for _ in 0..indent + 1 {
+                            out.push(' ');
+                        }
+                    }
+                    emit_str(out, k);
+                    out.push(':');
+                    if pretty {
+                        out.push(' ');
+                    }
+                    v.emit(out, indent + 1, pretty);
+                }
+                if pretty && !m.is_empty() {
+                    out.push('\n');
+                    for _ in 0..indent {
+                        out.push(' ');
+                    }
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn emit_str(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Convenience constructors.
+pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+pub fn num(n: f64) -> Json {
+    Json::Num(n)
+}
+
+pub fn s(v: &str) -> Json {
+    Json::Str(v.to_string())
+}
+
+pub fn arr(v: Vec<Json>) -> Json {
+    Json::Arr(v)
+}
+
+pub fn parse(input: &str) -> anyhow::Result<Json> {
+    let mut p = Parser {
+        b: input.as_bytes(),
+        i: 0,
+    };
+    p.skip_ws();
+    let v = p.value()?;
+    p.skip_ws();
+    if p.i != p.b.len() {
+        anyhow::bail!("trailing garbage at byte {}", p.i);
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r')
+        {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> anyhow::Result<u8> {
+        self.b
+            .get(self.i)
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("unexpected end of JSON"))
+    }
+
+    fn value(&mut self) -> anyhow::Result<Json> {
+        match self.peek()? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b't' => self.lit("true", Json::Bool(true)),
+            b'f' => self.lit("false", Json::Bool(false)),
+            b'n' => self.lit("null", Json::Null),
+            _ => self.number(),
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: Json) -> anyhow::Result<Json> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            anyhow::bail!("bad literal at byte {}", self.i)
+        }
+    }
+
+    fn number(&mut self) -> anyhow::Result<Json> {
+        let start = self.i;
+        while self.i < self.b.len()
+            && matches!(self.b[self.i],
+                b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9')
+        {
+            self.i += 1;
+        }
+        let txt = std::str::from_utf8(&self.b[start..self.i])?;
+        Ok(Json::Num(txt.parse::<f64>().map_err(|e| {
+            anyhow::anyhow!("bad number '{txt}' at byte {start}: {e}")
+        })?))
+    }
+
+    fn string(&mut self) -> anyhow::Result<String> {
+        if self.peek()? != b'"' {
+            anyhow::bail!("expected string at byte {}", self.i);
+        }
+        self.i += 1;
+        let mut out = String::new();
+        loop {
+            let c = self.peek()?;
+            self.i += 1;
+            match c {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let e = self.peek()?;
+                    self.i += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b't' => out.push('\t'),
+                        b'r' => out.push('\r'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'u' => {
+                            if self.i + 4 > self.b.len() {
+                                anyhow::bail!("truncated \\u escape");
+                            }
+                            let hex = std::str::from_utf8(
+                                &self.b[self.i..self.i + 4],
+                            )?;
+                            let cp = u32::from_str_radix(hex, 16)?;
+                            self.i += 4;
+                            out.push(
+                                char::from_u32(cp).unwrap_or('\u{fffd}'),
+                            );
+                        }
+                        _ => anyhow::bail!("bad escape at byte {}", self.i),
+                    }
+                }
+                c => {
+                    // Re-decode UTF-8 multi-byte sequences.
+                    if c < 0x80 {
+                        out.push(c as char);
+                    } else {
+                        let start = self.i - 1;
+                        let len = utf8_len(c);
+                        let end = start + len;
+                        if end > self.b.len() {
+                            anyhow::bail!("truncated UTF-8");
+                        }
+                        out.push_str(std::str::from_utf8(
+                            &self.b[start..end],
+                        )?);
+                        self.i = end;
+                    }
+                }
+            }
+        }
+    }
+
+    fn object(&mut self) -> anyhow::Result<Json> {
+        self.i += 1; // '{'
+        let mut m = BTreeMap::new();
+        self.skip_ws();
+        if self.peek()? == b'}' {
+            self.i += 1;
+            return Ok(Json::Obj(m));
+        }
+        loop {
+            self.skip_ws();
+            let k = self.string()?;
+            self.skip_ws();
+            if self.peek()? != b':' {
+                anyhow::bail!("expected ':' at byte {}", self.i);
+            }
+            self.i += 1;
+            self.skip_ws();
+            let v = self.value()?;
+            m.insert(k, v);
+            self.skip_ws();
+            match self.peek()? {
+                b',' => self.i += 1,
+                b'}' => {
+                    self.i += 1;
+                    return Ok(Json::Obj(m));
+                }
+                _ => anyhow::bail!("expected ',' or '}}' at byte {}", self.i),
+            }
+        }
+    }
+
+    fn array(&mut self) -> anyhow::Result<Json> {
+        self.i += 1; // '['
+        let mut a = Vec::new();
+        self.skip_ws();
+        if self.peek()? == b']' {
+            self.i += 1;
+            return Ok(Json::Arr(a));
+        }
+        loop {
+            self.skip_ws();
+            a.push(self.value()?);
+            self.skip_ws();
+            match self.peek()? {
+                b',' => self.i += 1,
+                b']' => {
+                    self.i += 1;
+                    return Ok(Json::Arr(a));
+                }
+                _ => anyhow::bail!("expected ',' or ']' at byte {}", self.i),
+            }
+        }
+    }
+}
+
+fn utf8_len(first: u8) -> usize {
+    match first {
+        0xc0..=0xdf => 2,
+        0xe0..=0xef => 3,
+        _ => 4,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_manifest_like() {
+        let text = r#"{"model": "resnet20_easy", "classes": 10,
+            "layers": [{"name": "stem", "cin": 3}],
+            "ok": true, "none": null, "f": -1.5e3}"#;
+        let v = parse(text).unwrap();
+        assert_eq!(v.req_str("model").unwrap(), "resnet20_easy");
+        assert_eq!(v.req_usize("classes").unwrap(), 10);
+        assert_eq!(
+            v.req_arr("layers").unwrap()[0].req_str("name").unwrap(),
+            "stem"
+        );
+        assert_eq!(v.get("f").unwrap().as_f64().unwrap(), -1500.0);
+        let re = parse(&v.to_string_pretty()).unwrap();
+        assert_eq!(re, v);
+    }
+
+    #[test]
+    fn parses_escapes_and_unicode() {
+        let v = parse(r#"{"s": "a\nb\t\"c\" A µS"}"#).unwrap();
+        assert_eq!(v.req_str("s").unwrap(), "a\nb\t\"c\" A µS");
+        let re = parse(&v.to_string_pretty()).unwrap();
+        assert_eq!(re, v);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("{").is_err());
+        assert!(parse("[1,]").is_err());
+        assert!(parse("{\"a\": 1} x").is_err());
+        assert!(parse("nul").is_err());
+    }
+
+    #[test]
+    fn shape_helper() {
+        let v = parse(r#"{"shape": [64, 3, 3, 8]}"#).unwrap();
+        assert_eq!(v.req("shape").unwrap().shape().unwrap(), vec![64, 3, 3, 8]);
+    }
+
+    #[test]
+    fn integers_emit_without_decimal_point() {
+        let v = obj(vec![("n", num(256.0))]);
+        assert!(v.to_string_pretty().contains("256"));
+        assert!(!v.to_string_pretty().contains("256.0"));
+    }
+}

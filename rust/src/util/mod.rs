@@ -1,0 +1,10 @@
+//! Support substrates built in-repo (the offline environment only vendors
+//! the `xla` crate's dependency tree): JSON, RNG, tensors, CLI parsing,
+//! bench timing and a property-testing harness.
+
+pub mod bencher;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod tensor;

@@ -1,0 +1,103 @@
+//! Property-testing harness (proptest is unavailable offline).
+//!
+//! Seeded generators + a `forall` runner that reports the failing case and
+//! its seed. Used by the coordinator invariants suite
+//! (`rust/tests/coordinator_props.rs`) and module unit tests.
+
+use crate::util::rng::Pcg64;
+
+/// Number of cases per property (override with env `PROP_CASES`).
+pub fn default_cases() -> usize {
+    std::env::var("PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `prop` on `cases` generated inputs; panics with the seed and case
+/// index on the first failure so it can be replayed deterministically.
+pub fn forall<T, G, P>(name: &str, seed: u64, cases: usize, mut gen: G,
+                       mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Pcg64) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let mut root = Pcg64::new(seed);
+    for case in 0..cases {
+        let mut rng = root.split(case as u64);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed}):\n  \
+                 input: {input:?}\n  {msg}"
+            );
+        }
+    }
+}
+
+/// Generator helpers.
+pub struct Gen;
+
+impl Gen {
+    pub fn usize_in(rng: &mut Pcg64, lo: usize, hi: usize) -> usize {
+        lo + rng.below(hi - lo + 1)
+    }
+
+    pub fn f64_in(rng: &mut Pcg64, lo: f64, hi: f64) -> f64 {
+        rng.uniform_in(lo, hi)
+    }
+
+    pub fn vec_f32(rng: &mut Pcg64, n: usize, scale: f64) -> Vec<f32> {
+        (0..n).map(|_| (rng.normal() * scale) as f32).collect()
+    }
+
+    /// Log-uniform drift time between 1 s and 10 y.
+    pub fn drift_time(rng: &mut Pcg64) -> f64 {
+        let ln_max = (10.0 * crate::rram::drift::YEAR).ln();
+        rng.uniform_in(0.0, ln_max).exp()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall(
+            "square_nonneg",
+            1,
+            64,
+            |rng| rng.normal(),
+            |x| {
+                if x * x >= 0.0 {
+                    Ok(())
+                } else {
+                    Err("negative square".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always_fails'")]
+    fn forall_reports_failure() {
+        forall(
+            "always_fails",
+            2,
+            8,
+            |rng| rng.below(10),
+            |_| Err("nope".into()),
+        );
+    }
+
+    #[test]
+    fn drift_time_in_range() {
+        let mut rng = Pcg64::new(3);
+        for _ in 0..100 {
+            let t = Gen::drift_time(&mut rng);
+            assert!(t >= 1.0 && t <= 10.0 * crate::rram::drift::YEAR);
+        }
+    }
+}

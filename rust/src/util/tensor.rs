@@ -1,0 +1,381 @@
+//! Host tensors: the typed buffers marshalled between the simulator and
+//! the PJRT runtime, plus a compact binary tensor-set format ("VPTS") used
+//! for checkpoints, compensation-set images and array-state snapshots.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    I8,
+}
+
+impl DType {
+    pub fn size(&self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::I8 => 1,
+        }
+    }
+
+    pub fn from_name(name: &str) -> Result<DType> {
+        Ok(match name {
+            "f32" => DType::F32,
+            "i32" => DType::I32,
+            "i8" => DType::I8,
+            other => bail!("unknown dtype '{other}'"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::I32 => "i32",
+            DType::I8 => "i8",
+        }
+    }
+
+    fn code(&self) -> u8 {
+        match self {
+            DType::F32 => 0,
+            DType::I32 => 1,
+            DType::I8 => 2,
+        }
+    }
+
+    fn from_code(c: u8) -> Result<DType> {
+        Ok(match c {
+            0 => DType::F32,
+            1 => DType::I32,
+            2 => DType::I8,
+            _ => bail!("bad dtype code {c}"),
+        })
+    }
+}
+
+/// A host tensor: shape + dtype + raw little-endian bytes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    data: Vec<u8>,
+}
+
+impl Tensor {
+    pub fn zeros(dtype: DType, shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor {
+            dtype,
+            shape: shape.to_vec(),
+            data: vec![0u8; n * dtype.size()],
+        }
+    }
+
+    pub fn from_f32(shape: &[usize], vals: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), vals.len());
+        let mut data = Vec::with_capacity(vals.len() * 4);
+        for v in &vals {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Tensor {
+            dtype: DType::F32,
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn from_i32(shape: &[usize], vals: Vec<i32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), vals.len());
+        let mut data = Vec::with_capacity(vals.len() * 4);
+        for v in &vals {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Tensor {
+            dtype: DType::I32,
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn from_i8(shape: &[usize], vals: Vec<i8>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), vals.len());
+        Tensor {
+            dtype: DType::I8,
+            shape: shape.to_vec(),
+            data: vals.into_iter().map(|v| v as u8).collect(),
+        }
+    }
+
+    pub fn scalar_f32(v: f32) -> Tensor {
+        Tensor::from_f32(&[], vec![v])
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn bytes(&self) -> &[u8] {
+        &self.data
+    }
+
+    /// f32 view. Safe on all platforms we target (LE); asserts dtype.
+    pub fn as_f32(&self) -> &[f32] {
+        assert_eq!(self.dtype, DType::F32, "tensor is not f32");
+        unsafe {
+            std::slice::from_raw_parts(
+                self.data.as_ptr() as *const f32,
+                self.len(),
+            )
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> &mut [f32] {
+        assert_eq!(self.dtype, DType::F32, "tensor is not f32");
+        let n = self.len();
+        unsafe {
+            std::slice::from_raw_parts_mut(
+                self.data.as_mut_ptr() as *mut f32,
+                n,
+            )
+        }
+    }
+
+    pub fn as_i32(&self) -> &[i32] {
+        assert_eq!(self.dtype, DType::I32, "tensor is not i32");
+        unsafe {
+            std::slice::from_raw_parts(
+                self.data.as_ptr() as *const i32,
+                self.len(),
+            )
+        }
+    }
+
+    pub fn as_i32_mut(&mut self) -> &mut [i32] {
+        assert_eq!(self.dtype, DType::I32, "tensor is not i32");
+        let n = self.len();
+        unsafe {
+            std::slice::from_raw_parts_mut(
+                self.data.as_mut_ptr() as *mut i32,
+                n,
+            )
+        }
+    }
+
+    pub fn as_i8(&self) -> &[i8] {
+        assert_eq!(self.dtype, DType::I8, "tensor is not i8");
+        unsafe {
+            std::slice::from_raw_parts(
+                self.data.as_ptr() as *const i8,
+                self.len(),
+            )
+        }
+    }
+
+    /// Convert to an `xla::Literal` for PJRT execution (untyped-data path:
+    /// works for every dtype including i8, scalars included).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let ty = match self.dtype {
+            DType::F32 => xla::ElementType::F32,
+            DType::I32 => xla::ElementType::S32,
+            DType::I8 => xla::ElementType::S8,
+        };
+        Ok(xla::Literal::create_from_shape_and_untyped_data(
+            ty,
+            &self.shape,
+            &self.data,
+        )?)
+    }
+
+    /// Build from an `xla::Literal` (execution output).
+    pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> =
+            shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => {
+                let v: Vec<f32> = lit.to_vec()?;
+                Ok(Tensor::from_f32(&dims, v))
+            }
+            xla::ElementType::S32 => {
+                let v: Vec<i32> = lit.to_vec()?;
+                Ok(Tensor::from_i32(&dims, v))
+            }
+            xla::ElementType::S8 => {
+                let v: Vec<i8> = lit.to_vec()?;
+                Ok(Tensor::from_i8(&dims, v))
+            }
+            other => bail!("unsupported literal element type {other:?}"),
+        }
+    }
+}
+
+/// An ordered named tensor collection.
+pub type TensorMap = BTreeMap<String, Tensor>;
+
+const VPTS_MAGIC: &[u8; 4] = b"VPTS";
+const VPTS_VERSION: u32 = 1;
+
+/// Serialize a tensor map to the VPTS binary format.
+///
+/// Layout: magic, version u32, count u32, then per tensor:
+/// name_len u16, name, dtype u8, ndim u8, dims u32×ndim, data bytes.
+/// A trailing FNV-1a checksum (u64) guards against truncation.
+pub fn write_vpts(path: &Path, map: &TensorMap) -> Result<()> {
+    let mut buf: Vec<u8> = Vec::new();
+    buf.extend_from_slice(VPTS_MAGIC);
+    buf.extend_from_slice(&VPTS_VERSION.to_le_bytes());
+    buf.extend_from_slice(&(map.len() as u32).to_le_bytes());
+    for (name, t) in map {
+        let nb = name.as_bytes();
+        buf.extend_from_slice(&(nb.len() as u16).to_le_bytes());
+        buf.extend_from_slice(nb);
+        buf.push(t.dtype.code());
+        buf.push(t.shape.len() as u8);
+        for &d in &t.shape {
+            buf.extend_from_slice(&(d as u32).to_le_bytes());
+        }
+        buf.extend_from_slice(&t.data);
+    }
+    let sum = fnv1a(&buf);
+    buf.extend_from_slice(&sum.to_le_bytes());
+    let tmp = path.with_extension("tmp");
+    std::fs::File::create(&tmp)
+        .with_context(|| format!("create {}", tmp.display()))?
+        .write_all(&buf)?;
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+pub fn read_vpts(path: &Path) -> Result<TensorMap> {
+    let mut buf = Vec::new();
+    std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?
+        .read_to_end(&mut buf)?;
+    if buf.len() < 20 || &buf[..4] != VPTS_MAGIC {
+        bail!("{}: not a VPTS file", path.display());
+    }
+    let body = &buf[..buf.len() - 8];
+    let stored =
+        u64::from_le_bytes(buf[buf.len() - 8..].try_into().unwrap());
+    if fnv1a(body) != stored {
+        bail!("{}: checksum mismatch (truncated?)", path.display());
+    }
+    let mut i = 4;
+    let ver = u32::from_le_bytes(body[i..i + 4].try_into().unwrap());
+    i += 4;
+    if ver != VPTS_VERSION {
+        bail!("unsupported VPTS version {ver}");
+    }
+    let count = u32::from_le_bytes(body[i..i + 4].try_into().unwrap());
+    i += 4;
+    let mut map = TensorMap::new();
+    for _ in 0..count {
+        let nlen =
+            u16::from_le_bytes(body[i..i + 2].try_into().unwrap()) as usize;
+        i += 2;
+        let name = String::from_utf8(body[i..i + nlen].to_vec())?;
+        i += nlen;
+        let dtype = DType::from_code(body[i])?;
+        let ndim = body[i + 1] as usize;
+        i += 2;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(
+                u32::from_le_bytes(body[i..i + 4].try_into().unwrap())
+                    as usize,
+            );
+            i += 4;
+        }
+        let nbytes = shape.iter().product::<usize>() * dtype.size();
+        if i + nbytes > body.len() {
+            bail!("VPTS truncated in tensor '{name}'");
+        }
+        map.insert(
+            name,
+            Tensor {
+                dtype,
+                shape,
+                data: body[i..i + nbytes].to_vec(),
+            },
+        );
+        i += nbytes;
+    }
+    Ok(map)
+}
+
+fn fnv1a(data: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in data {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip_view() {
+        let t = Tensor::from_f32(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(t.as_f32()[4], 5.0);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.byte_len(), 24);
+    }
+
+    #[test]
+    fn zeros_and_mutation() {
+        let mut t = Tensor::zeros(DType::F32, &[4]);
+        t.as_f32_mut()[2] = 7.5;
+        assert_eq!(t.as_f32(), &[0.0, 0.0, 7.5, 0.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "not f32")]
+    fn dtype_mismatch_panics() {
+        Tensor::from_i32(&[1], vec![1]).as_f32();
+    }
+
+    #[test]
+    fn vpts_roundtrip() {
+        let dir = std::env::temp_dir().join("vpts_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("a.vpts");
+        let mut m = TensorMap::new();
+        m.insert("w".into(), Tensor::from_f32(&[2, 2], vec![1., 2., 3., 4.]));
+        m.insert("codes".into(), Tensor::from_i8(&[3], vec![-7, 0, 7]));
+        m.insert("y".into(), Tensor::from_i32(&[2], vec![5, -5]));
+        m.insert("s".into(), Tensor::scalar_f32(0.25));
+        write_vpts(&path, &m).unwrap();
+        let back = read_vpts(&path).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn vpts_detects_corruption() {
+        let dir = std::env::temp_dir().join("vpts_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("b.vpts");
+        let mut m = TensorMap::new();
+        m.insert("w".into(), Tensor::from_f32(&[4], vec![1., 2., 3., 4.]));
+        write_vpts(&path, &m).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xff;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(read_vpts(&path).is_err());
+    }
+}

@@ -1,0 +1,445 @@
+//! Property-based tests on coordinator + substrate invariants (in-repo
+//! prop harness; proptest is unavailable offline).
+//!
+//! These cover the pure (no-PJRT) logic: set-store routing, batching
+//! arithmetic, drift-model monotonicity, mapping round-trips, quantizer
+//! invariants, JSON round-trips, clock/workload behavior.
+
+use vera_plus::compensation::{CompSet, SetStore};
+use vera_plus::coordinator::eval::{accuracy_of, Stats};
+use vera_plus::coordinator::serve::{LifetimeClock, Workload};
+use vera_plus::rram::{
+    quantize_tensor, ConductanceGrid, DriftModel, FabDrift, IbmDrift,
+    MeasuredDrift, WEEK, YEAR,
+};
+use vera_plus::util::prop::{forall, Gen};
+use vera_plus::util::rng::Pcg64;
+use vera_plus::util::tensor::{Tensor, TensorMap};
+
+fn mk_set(t: f64) -> CompSet {
+    let mut m = TensorMap::new();
+    m.insert("l.d".into(), Tensor::from_f32(&[1], vec![t as f32]));
+    CompSet {
+        t_start: t,
+        trainables: m,
+        train_loss: 0.0,
+        accuracy: 0.9,
+    }
+}
+
+#[test]
+fn prop_store_select_is_last_at_or_before_t() {
+    forall(
+        "store_select",
+        1,
+        128,
+        |rng| {
+            let n = Gen::usize_in(rng, 1, 12);
+            let mut ts: Vec<f64> =
+                (0..n).map(|_| Gen::drift_time(rng)).collect();
+            ts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            ts.dedup();
+            let q = Gen::drift_time(rng);
+            (ts, q)
+        },
+        |(ts, q)| {
+            let mut store = SetStore::new("m", "veraplus", 1, 0);
+            for &t in ts {
+                store.insert(mk_set(t));
+            }
+            let sel = store.select(*q).unwrap().t_start;
+            // Reference implementation: linear scan.
+            let want = ts
+                .iter()
+                .copied()
+                .filter(|&t| t <= *q)
+                .fold(f64::NAN, f64::max);
+            let want = if want.is_nan() { ts[0] } else { want };
+            if (sel - want).abs() > 1e-12 {
+                return Err(format!("select({q}) = {sel}, want {want}"));
+            }
+            // Index agrees with the set reference.
+            let idx = store.select_index(*q).unwrap();
+            if store.sets[idx].t_start != sel {
+                return Err("select_index mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_store_insert_keeps_sorted_unique_times() {
+    forall(
+        "store_sorted",
+        2,
+        64,
+        |rng| {
+            let n = Gen::usize_in(rng, 1, 20);
+            (0..n).map(|_| Gen::drift_time(rng)).collect::<Vec<f64>>()
+        },
+        |ts| {
+            let mut store = SetStore::new("m", "veraplus", 1, 0);
+            for &t in ts {
+                store.insert(mk_set(t));
+            }
+            for w in store.sets.windows(2) {
+                if w[0].t_start > w[1].t_start {
+                    return Err("store not sorted".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_drift_mean_monotone_in_time() {
+    let ibm = IbmDrift::default();
+    let fab = FabDrift::default();
+    forall(
+        "drift_monotone",
+        3,
+        128,
+        |rng| {
+            let g = Gen::f64_in(rng, 5.0, 40.0);
+            let t1 = Gen::drift_time(rng);
+            let t2 = t1 * Gen::f64_in(rng, 1.1, 100.0);
+            (g, t1, t2)
+        },
+        |(g, t1, t2)| {
+            for m in [&ibm as &dyn DriftModel, &fab] {
+                if m.mean(*g, *t1) > m.mean(*g, *t2) + 1e-12 {
+                    return Err(format!(
+                        "{}: mean not monotone at g={g}",
+                        m.name()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_measured_drift_interpolation_bounded() {
+    let grid = ConductanceGrid::default();
+    let fab = FabDrift::default();
+    let mut rng = Pcg64::new(5);
+    let stats =
+        vera_plus::rram::characterize(&grid, &fab, 500, WEEK, &mut rng);
+    let model = vera_plus::rram::fit_measured_model(&stats, WEEK);
+    let lo = stats.iter().map(|s| s.mu).fold(f64::INFINITY, f64::min);
+    let hi = stats.iter().map(|s| s.mu).fold(f64::NEG_INFINITY, f64::max);
+    forall(
+        "measured_interp",
+        4,
+        128,
+        |rng| Gen::f64_in(rng, 0.0, 50.0),
+        |g| {
+            let (mu, sigma) = model.stats_at(*g, WEEK);
+            if mu < lo - 1e-9 || mu > hi + 1e-9 {
+                return Err(format!("µ({g}) = {mu} outside [{lo}, {hi}]"));
+            }
+            if sigma <= 0.0 {
+                return Err("σ must be positive".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_quantizer_error_within_half_step() {
+    forall(
+        "quant_halfstep",
+        5,
+        128,
+        |rng| {
+            let n = Gen::usize_in(rng, 1, 300);
+            let scale = Gen::f64_in(rng, 0.01, 3.0);
+            Gen::vec_f32(rng, n, scale)
+        },
+        |w| {
+            let (codes, scale) = quantize_tensor(w, 4);
+            for (v, &c) in w.iter().zip(&codes) {
+                if c.abs() > 7 {
+                    return Err(format!("code {c} off grid"));
+                }
+                let deq = scale * c as f32;
+                // Interior values round within half a step; clipped
+                // values are at the grid edge by construction of the
+                // abs-max scale (so no clipping actually occurs).
+                if (v - deq).abs() > scale / 2.0 + 1e-6 {
+                    return Err(format!(
+                        "|{v} - {deq}| > {}",
+                        scale / 2.0
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_conductance_pair_roundtrip_with_drift_free_read() {
+    let grid = ConductanceGrid::default();
+    forall(
+        "pair_roundtrip",
+        6,
+        64,
+        |rng| (Gen::usize_in(rng, 0, 14) as i8) - 7,
+        |&code| {
+            let (gp, gm) = grid.code_to_pair(code);
+            let w = grid.pair_to_weight(gp, gm);
+            if (w - code as f64).abs() > 1e-9 {
+                return Err(format!("code {code} -> {w}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_accuracy_bounds_and_stats() {
+    forall(
+        "accuracy_bounds",
+        7,
+        64,
+        |rng| {
+            let n = Gen::usize_in(rng, 1, 64);
+            let c = Gen::usize_in(rng, 2, 10);
+            let logits = Gen::vec_f32(rng, n * c, 1.0);
+            let labels: Vec<i32> =
+                (0..n).map(|_| rng.below(c) as i32).collect();
+            (n, c, logits, labels)
+        },
+        |(n, c, logits, labels)| {
+            let t = Tensor::from_f32(&[*n, *c], logits.clone());
+            let acc = accuracy_of(&t, labels);
+            if !(0.0..=1.0).contains(&acc) {
+                return Err(format!("accuracy {acc} out of bounds"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_stats_lower_bound_below_mean() {
+    forall(
+        "stats_lower",
+        8,
+        64,
+        |rng| {
+            let n = Gen::usize_in(rng, 2, 50);
+            (0..n)
+                .map(|_| Gen::f64_in(rng, 0.0, 1.0))
+                .collect::<Vec<f64>>()
+        },
+        |samples| {
+            let st = Stats::from_samples(samples);
+            if st.lower_3sigma() > st.mean + 1e-12 {
+                return Err("µ-3σ above µ".into());
+            }
+            if st.std < 0.0 {
+                return Err("negative std".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_clock_age_monotone() {
+    forall(
+        "clock_monotone",
+        9,
+        64,
+        |rng| {
+            let steps = Gen::usize_in(rng, 1, 50);
+            (0..steps)
+                .map(|_| Gen::f64_in(rng, 0.0, 10.0))
+                .collect::<Vec<f64>>()
+        },
+        |steps| {
+            let mut clock = LifetimeClock::new(1.0, 1e5);
+            let mut last = clock.device_age();
+            for &dt in steps {
+                clock.advance(dt);
+                let age = clock.device_age();
+                if age < last {
+                    return Err("device age went backwards".into());
+                }
+                last = age;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_workload_arrivals_ordered_unique_in_window() {
+    forall(
+        "workload_ordered",
+        10,
+        32,
+        |rng| {
+            (
+                Gen::f64_in(rng, 1.0, 500.0),
+                Gen::f64_in(rng, 0.1, 5.0),
+                rng.next_u64(),
+            )
+        },
+        |(rate, dt, seed)| {
+            let mut w = Workload::new(*rate, *seed);
+            let clock = LifetimeClock::new(1.0, 1.0);
+            let a = w.arrivals(*dt, &clock, 128);
+            let b = w.arrivals(*dt, &clock, 128);
+            let mut prev = f64::NEG_INFINITY;
+            for r in a.iter().chain(&b) {
+                if r.arrival_wall < prev {
+                    return Err("arrivals not ordered".into());
+                }
+                prev = r.arrival_wall;
+            }
+            // Ids strictly increasing across windows.
+            for pair in a.iter().chain(&b).collect::<Vec<_>>().windows(2) {
+                if pair[0].id >= pair[1].id {
+                    return Err("ids not increasing".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_vpts_roundtrip_arbitrary_maps() {
+    let dir = std::env::temp_dir().join("vpts_prop");
+    std::fs::create_dir_all(&dir).unwrap();
+    forall(
+        "vpts_roundtrip",
+        11,
+        32,
+        |rng| {
+            let n_tensors = Gen::usize_in(rng, 0, 6);
+            let mut m = TensorMap::new();
+            for i in 0..n_tensors {
+                let len = Gen::usize_in(rng, 0, 50);
+                m.insert(
+                    format!("t{i}.µ"),
+                    Tensor::from_f32(&[len], Gen::vec_f32(rng, len, 1.0)),
+                );
+            }
+            (m, rng.next_u64())
+        },
+        |(m, tag)| {
+            let path = dir.join(format!("{tag}.vpts"));
+            vera_plus::util::tensor::write_vpts(&path, m)
+                .map_err(|e| e.to_string())?;
+            let back = vera_plus::util::tensor::read_vpts(&path)
+                .map_err(|e| e.to_string())?;
+            if &back != m {
+                return Err("roundtrip mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_json_roundtrip_numbers_strings() {
+    use vera_plus::util::json::{arr, num, obj, parse, s};
+    forall(
+        "json_roundtrip",
+        12,
+        64,
+        |rng| {
+            (
+                rng.normal() * 1e6,
+                format!("k{}", rng.next_u64()),
+                Gen::usize_in(rng, 0, 40),
+            )
+        },
+        |(x, key, n)| {
+            let v = obj(vec![
+                (key.as_str(), num(*x)),
+                ("arr", arr((0..*n).map(|i| num(i as f64)).collect())),
+                ("s", s("µS ± σ\n\"quoted\"")),
+            ]);
+            let text = v.to_string_pretty();
+            let back = parse(&text).map_err(|e| e.to_string())?;
+            if back != v {
+                return Err(format!("roundtrip mismatch:\n{text}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_ibm_drift_sample_statistics_match_model() {
+    let model = IbmDrift::default();
+    forall(
+        "ibm_stats",
+        13,
+        8,
+        |rng| (Gen::f64_in(rng, 5.0, 40.0), Gen::drift_time(rng),
+               rng.next_u64()),
+        |(g, t, seed)| {
+            let mut rng = Pcg64::new(*seed);
+            let n = 20_000;
+            let mut sum = 0.0;
+            for _ in 0..n {
+                sum += model.sample(*g, *t, &mut rng);
+            }
+            let mean = sum / n as f64;
+            let want = model.mean(*g, *t);
+            let sigma = model.sigma_drift(*t)
+                + want.abs() * model.dev_var;
+            if (mean - want).abs() > 4.0 * sigma / (n as f64).sqrt() + 0.02
+            {
+                return Err(format!(
+                    "g={g} t={t}: sample mean {mean} vs model {want}"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_measured_model_log_time_scaling() {
+    forall(
+        "measured_scaling",
+        14,
+        32,
+        |rng| {
+            (
+                Gen::f64_in(rng, 0.1, 1.0),
+                Gen::f64_in(rng, 0.1, 0.5),
+                Gen::f64_in(rng, 5.0, 40.0),
+            )
+        },
+        |(mu, sigma, g)| {
+            let m = MeasuredDrift::new(
+                vec![5.0, 40.0],
+                vec![*mu, *mu],
+                vec![*sigma, *sigma],
+                WEEK,
+            );
+            let (mu_w, _) = m.stats_at(*g, WEEK);
+            let (mu_y, _) = m.stats_at(*g, 10.0 * YEAR);
+            let k = (10.0 * YEAR).ln() / WEEK.ln();
+            if (mu_w - mu).abs() > 1e-9 {
+                return Err("µ at t_meas must be the fitted µ".into());
+            }
+            if (mu_y - mu * k).abs() > 1e-9 {
+                return Err("log-time scaling violated".into());
+            }
+            Ok(())
+        },
+    );
+}

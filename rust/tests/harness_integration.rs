@@ -1,0 +1,118 @@
+//! Harness integration: the cheap experiments run end-to-end and their
+//! JSON outputs are well-formed. (The training-heavy experiments are
+//! exercised by `cargo bench` and examples; this keeps `cargo test`
+//! minutes-scale.)
+
+use vera_plus::costmodel::{cost_method, paper_resnet20_layers, Method};
+use vera_plus::harness::{self, Budget, Ctx};
+use vera_plus::util::json::parse;
+
+fn ctx() -> Option<Ctx> {
+    let dir = vera_plus::find_artifacts();
+    if !dir.join("index.json").exists() {
+        eprintln!("artifacts missing; run `make artifacts`");
+        return None;
+    }
+    Some(Ctx::new(Budget::quick()).unwrap())
+}
+
+#[test]
+fn table3_runs_and_emits_json() {
+    let Some(ctx) = ctx() else { return };
+    harness::run(&ctx, "table3").unwrap();
+    let j = parse(
+        &std::fs::read_to_string(ctx.results_dir.join("table3.json"))
+            .unwrap(),
+    )
+    .unwrap();
+    let rows = j.req_arr("rows").unwrap();
+    // 3 methods × 2 geometries.
+    assert_eq!(rows.len(), 6);
+    // Paper-geometry VeRA+ row within 35% of the published 3.5%/1.9%.
+    let vp = rows
+        .iter()
+        .find(|r| {
+            r.req_str("method").unwrap() == "VeRA+"
+                && r.req_str("geometry").unwrap() == "paper_resnet20"
+        })
+        .unwrap();
+    let p = vp.req_f64("params_overhead").unwrap();
+    let o = vp.req_f64("ops_overhead").unwrap();
+    assert!((p / 0.035 - 1.0).abs() < 0.35, "params {p}");
+    assert!((o / 0.019 - 1.0).abs() < 0.45, "ops {o}");
+}
+
+#[test]
+fn table4_cost_columns_reproduce_paper_rows() {
+    // The analytic half of Table IV, no training needed.
+    let layers = paper_resnet20_layers(10);
+    // (paper area mm², paper energy nJ, paper storage KB)
+    let rows = [
+        (Method::VeraPlus, 1, 0.444, 219.6, 5.15),
+        (Method::VeraPlus, 6, 0.464, 250.9, 6.45),
+        (Method::Vera, 1, 0.463, 267.6, 16.50),
+        (Method::Lora, 1, 0.582, 266.8, 66.52),
+    ];
+    for (m, r, p_area, p_energy, p_store) in rows {
+        let c = cost_method(&layers, 64, 64, m, r, 11);
+        let area = c.total_area_mm2();
+        let energy = c.energy_nj();
+        let store = c.storage_kb();
+        assert!(
+            (area / p_area - 1.0).abs() < 0.25,
+            "{:?} r{r}: area {area} vs paper {p_area}",
+            m
+        );
+        assert!(
+            (energy / p_energy - 1.0).abs() < 0.35,
+            "{:?} r{r}: energy {energy} vs paper {p_energy}",
+            m
+        );
+        assert!(
+            (store / p_store - 1.0).abs() < 0.45,
+            "{:?} r{r}: storage {store} vs paper {p_store}",
+            m
+        );
+    }
+    // Ordering claims: VeRA+ ≥5× cheaper than VeRA, ≥10× than LoRA
+    // in storage (paper abstract / §IV-E).
+    let vp = cost_method(&layers, 64, 64, Method::VeraPlus, 1, 11);
+    let ve = cost_method(&layers, 64, 64, Method::Vera, 1, 11);
+    let lo = cost_method(&layers, 64, 64, Method::Lora, 1, 11);
+    assert!(ve.storage_kb() / vp.storage_kb() > 2.5);
+    assert!(lo.storage_kb() / vp.storage_kb() > 10.0);
+}
+
+#[test]
+fn fig6_characterization_half_is_deterministic_and_sane() {
+    use vera_plus::rram::{characterize, ConductanceGrid, FabDrift,
+                          WEEK};
+    use vera_plus::util::rng::Pcg64;
+    let grid = ConductanceGrid::default();
+    let fab = FabDrift::default();
+    let s1 = characterize(&grid, &fab, 200, WEEK, &mut Pcg64::new(1));
+    let s2 = characterize(&grid, &fab, 200, WEEK, &mut Pcg64::new(1));
+    assert_eq!(s1.len(), 8);
+    for (a, b) in s1.iter().zip(&s2) {
+        assert_eq!(a.mu, b.mu);
+    }
+    // State dependence: the low state drifts up more than the high one.
+    assert!(s1[0].mu > s1[7].mu);
+}
+
+#[test]
+fn bn_storage_vs_veraplus_is_three_orders() {
+    use vera_plus::costmodel::BnCalibCost;
+    let layers = paper_resnet20_layers(10);
+    let bn = BnCalibCost::for_cifar_like(&layers, 50_000, 3072);
+    let vp = cost_method(&layers, 64, 64, Method::VeraPlus, 1, 11);
+    let reduction = bn.storage_mb() * 1024.0 / vp.storage_kb();
+    // Paper: >1000×.
+    assert!(reduction > 1000.0, "reduction {reduction}");
+}
+
+#[test]
+fn experiment_registry_rejects_unknown() {
+    let Some(ctx) = ctx() else { return };
+    assert!(harness::run(&ctx, "fig99").is_err());
+}

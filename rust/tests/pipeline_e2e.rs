@@ -1,0 +1,157 @@
+//! End-to-end pipeline: QAT-train a backbone → fold BN → program RRAM →
+//! run Algorithm 1 scheduling → serve over an accelerated lifetime.
+//!
+//! Uses a deliberately small budget (few steps, few instances) — the full
+//! runs live in examples/ and the harness; this test proves all layers
+//! compose. Requires artifacts (skips otherwise).
+
+use std::sync::Arc;
+use vera_plus::coordinator::scheduler::{schedule, ScheduleCfg};
+use vera_plus::coordinator::serve::{
+    BatchPolicy, LifetimeClock, Server, Workload,
+};
+use vera_plus::coordinator::trainer::{
+    train_backbone, BackboneTrainCfg, CompTrainCfg,
+};
+use vera_plus::coordinator::{deploy, eval};
+use vera_plus::rram::{ConductanceGrid, IbmDrift, YEAR};
+use vera_plus::runtime::Runtime;
+
+fn runtime() -> Option<Arc<Runtime>> {
+    let dir = vera_plus::find_artifacts();
+    if !dir.join("resnet20_easy.manifest.json").exists() {
+        eprintln!("artifacts missing; run `make artifacts`");
+        return None;
+    }
+    Some(Arc::new(Runtime::cpu(dir).unwrap()))
+}
+
+#[test]
+fn full_pipeline_backbone_schedule_serve() {
+    let Some(rt) = runtime() else { return };
+    let model = "resnet20_easy";
+
+    // 1. Backbone QAT (short budget: enough to beat chance clearly).
+    let cfg = BackboneTrainCfg {
+        steps: 120,
+        eval_every: 60,
+        ..Default::default()
+    };
+    let (params, trace) = train_backbone(&rt, model, &cfg).unwrap();
+    let final_acc = trace.last().unwrap().2;
+    assert!(
+        final_acc > 0.3,
+        "backbone must beat 10-class chance clearly, got {final_acc}"
+    );
+
+    // 2. Deploy: fold BN, quantize, program simulated arrays.
+    let dep = deploy(
+        rt.clone(),
+        model,
+        &params,
+        "veraplus",
+        1,
+        Box::new(IbmDrift::default()),
+        ConductanceGrid::default(),
+        7,
+    )
+    .unwrap();
+    assert!(dep.net.n_tiles() >= 1);
+    assert_eq!(dep.net.devices(), dep.manifest.rram_params() as usize * 2);
+
+    // 3. Drift hurts accuracy at 10 years (no compensation).
+    let mut rng = vera_plus::util::rng::Pcg64::new(3);
+    let ideal = dep.net.read_ideal();
+    let empty = vera_plus::util::tensor::TensorMap::new();
+    let acc_ideal = eval::eval_accuracy(
+        &dep, &ideal, &empty, eval::EvalMode::Plain, 256,
+    )
+    .unwrap();
+    let drifted = dep.drifted_weights(10.0 * YEAR, &mut rng);
+    let acc_drifted = eval::eval_accuracy(
+        &dep, &drifted, &empty, eval::EvalMode::Plain, 256,
+    )
+    .unwrap();
+    assert!(
+        acc_drifted < acc_ideal,
+        "10y drift should reduce accuracy: {acc_drifted} vs {acc_ideal}"
+    );
+
+    // 4. Algorithm 1 scheduling with a tiny budget.
+    let scfg = ScheduleCfg {
+        norm_floor: 0.90,
+        n_instances: 2,
+        max_samples: 256,
+        t_max: 10.0 * YEAR,
+        train: CompTrainCfg {
+            epochs: 1,
+            max_train: 512,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let result = schedule(&dep, &scfg).unwrap();
+    assert!(!result.store.is_empty());
+    assert!(result.drift_free_acc > 0.3);
+    // Decision log covers the exponential ladder up to 10 y.
+    assert!(result.decisions.len() > 40);
+    let t_last = result.decisions.last().unwrap().t;
+    assert!(t_last >= 10.0 * YEAR);
+    // Sets are time-ordered and start at t = 1 s.
+    assert_eq!(result.store.sets[0].t_start, 1.0);
+    for w in result.store.sets.windows(2) {
+        assert!(w[0].t_start < w[1].t_start);
+    }
+
+    // 5. Compensated accuracy at 10 y beats uncompensated.
+    let set = result.store.select(10.0 * YEAR).unwrap();
+    let acc_comp = eval::eval_accuracy(
+        &dep,
+        &drifted,
+        &set.trainables,
+        eval::EvalMode::Compensated,
+        256,
+    )
+    .unwrap();
+    assert!(
+        acc_comp > acc_drifted,
+        "compensation must recover accuracy: {acc_comp} vs {acc_drifted}"
+    );
+
+    // 6. Serve an accelerated lifetime with dynamic batching.
+    let clock = LifetimeClock::new(1.0, 3.15e7); // 10 s wall ≈ 10 y
+    let mut server = Server::new(
+        &dep,
+        &result.store,
+        clock,
+        BatchPolicy {
+            max_batch: 32,
+            max_wait: 0.01,
+        },
+        11,
+    );
+    let mut workload = Workload::new(200.0, 5);
+    let mut wall = 0.0;
+    while wall < 10.0 {
+        let reqs = workload.arrivals(
+            0.5,
+            &server.clock,
+            dep.dataset.test_len(),
+        );
+        for r in reqs {
+            server.submit(r);
+        }
+        server.drain(0.02).unwrap();
+        wall += 0.5;
+    }
+    let m = &server.metrics;
+    assert!(m.served > 500, "served {}", m.served);
+    assert!(
+        m.set_switches >= result.store.len().min(2),
+        "server should switch sets across the lifetime: {} switches",
+        m.set_switches
+    );
+    assert!(m.accuracy() > 0.2, "serve accuracy {}", m.accuracy());
+    assert!(m.mean_occupancy() > 0.2);
+    assert!(m.latency_percentile(0.5) >= 0.0);
+}

@@ -1,0 +1,163 @@
+//! Integration: load real AOT artifacts, compile on the PJRT CPU client,
+//! execute, and check numerics against host-side reference math.
+//!
+//! Requires `make artifacts` to have run (skips otherwise).
+
+use vera_plus::nn::init;
+use vera_plus::runtime::Runtime;
+use vera_plus::util::rng::Pcg64;
+use vera_plus::util::tensor::{Tensor, TensorMap};
+
+fn runtime() -> Option<Runtime> {
+    let dir = vera_plus::find_artifacts();
+    if !dir.join("kernels.manifest.json").exists() {
+        eprintln!("artifacts missing; run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::cpu(dir).expect("PJRT client"))
+}
+
+/// Reference VeRA+ math on the host: y = b ⊙ (B (d ⊙ (A x))).
+fn vera_ref(
+    x: &[f32], a: &[f32], b: &[f32], d: &[f32], bv: &[f32],
+    n: usize, cin: usize, cout: usize, r: usize,
+) -> Vec<f32> {
+    let mut y = vec![0f32; n * cout];
+    let mut t = vec![0f32; r];
+    for i in 0..n {
+        for q in 0..r {
+            let mut acc = 0f32;
+            for c in 0..cin {
+                acc += x[i * cin + c] * a[q * cin + c];
+            }
+            t[q] = acc * d[q];
+        }
+        for o in 0..cout {
+            let mut acc = 0f32;
+            for q in 0..r {
+                acc += t[q] * b[o * r + q];
+            }
+            y[i * cout + o] = acc * bv[o];
+        }
+    }
+    y
+}
+
+#[test]
+fn kernel_vera_small_matches_host_reference() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.kernel_executable("kernel_vera_small").unwrap();
+    // Signature: x[256,32], A[4,32], B[64,4], d[4], b[64].
+    let (n, cin, cout, r) = (256usize, 32usize, 64usize, 4usize);
+    let mut rng = Pcg64::new(1);
+    let mk = |len: usize, rng: &mut Pcg64| -> Vec<f32> {
+        let mut v = vec![0f32; len];
+        rng.fill_normal_f32(&mut v, 0.0, 1.0);
+        v
+    };
+    let x = mk(n * cin, &mut rng);
+    let a = mk(r * cin, &mut rng);
+    let b = mk(cout * r, &mut rng);
+    let d = mk(r, &mut rng);
+    let bv = mk(cout, &mut rng);
+    let outs = exe
+        .run(&[
+            &Tensor::from_f32(&[n, cin], x.clone()),
+            &Tensor::from_f32(&[r, cin], a.clone()),
+            &Tensor::from_f32(&[cout, r], b.clone()),
+            &Tensor::from_f32(&[r], d.clone()),
+            &Tensor::from_f32(&[cout], bv.clone()),
+        ])
+        .unwrap();
+    assert_eq!(outs.len(), 1);
+    assert_eq!(outs[0].shape, vec![n, cout]);
+    let want = vera_ref(&x, &a, &b, &d, &bv, n, cin, cout, r);
+    let got = outs[0].as_f32();
+    let mut max_err = 0f32;
+    for (g, w) in got.iter().zip(&want) {
+        max_err = max_err.max((g - w).abs());
+    }
+    assert!(max_err < 1e-3, "max err {max_err}");
+}
+
+#[test]
+fn kernel_crossbar_executes_and_quantizes() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.kernel_executable("kernel_crossbar").unwrap();
+    // Signature: x[128,256] i8, w[256,512] i8, scales f32.
+    let mut rng = Pcg64::new(2);
+    let xi: Vec<i8> = (0..128 * 256)
+        .map(|_| (rng.below(15) as i8) - 7)
+        .collect();
+    let wi: Vec<i8> = (0..256 * 512)
+        .map(|_| (rng.below(15) as i8) - 7)
+        .collect();
+    let outs = exe
+        .run(&[
+            &Tensor::from_i8(&[128, 256], xi.clone()),
+            &Tensor::from_i8(&[256, 512], wi.clone()),
+            &Tensor::scalar_f32(0.1),
+            &Tensor::scalar_f32(0.02),
+        ])
+        .unwrap();
+    assert_eq!(outs[0].shape, vec![128, 512]);
+    // Spot-check one output against exact int math + ADC quantization.
+    let exact: i64 = (0..256)
+        .map(|k| xi[k] as i64 * wi[k * 512] as i64)
+        .sum();
+    let lim = 127f64; // 8-bit ADC
+    let lsb = (256 * 49) as f64 / lim;
+    let code = ((exact as f64 / lsb).round()).clamp(-lim, lim);
+    let want = (code * lsb * 0.1 * 0.02) as f32;
+    let got = outs[0].as_f32()[0];
+    assert!(
+        (got - want).abs() < 1e-3,
+        "crossbar[0,0]: got {got}, want {want}"
+    );
+}
+
+#[test]
+fn model_fwd_runs_with_initialized_weights() {
+    let Some(rt) = runtime() else { return };
+    let man = rt.manifest("resnet20_easy").unwrap();
+    let exe = rt.executable("resnet20_easy", "fwd_b1").unwrap();
+    // Build deploy weights from train init + BN folding.
+    let train = init::init_train_params(&man, 7);
+    let deploy = vera_plus::rram::fold_bn(&man, &train).unwrap();
+    let mut maps = TensorMap::new();
+    let mut rng = Pcg64::new(3);
+    let mut x = vec![0f32; 16 * 16 * 3];
+    rng.fill_normal_f32(&mut x, 0.0, 1.0);
+    maps.insert("x".into(), Tensor::from_f32(&[1, 16, 16, 3], x));
+    let outs = exe.run_named(&[&deploy, &maps]).unwrap();
+    let logits = outs.get("logits").unwrap();
+    assert_eq!(logits.shape, vec![1, 10]);
+    assert!(logits.as_f32().iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn executable_rejects_bad_shapes() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.kernel_executable("kernel_vera_small").unwrap();
+    let bad = Tensor::from_f32(&[2, 2], vec![0.0; 4]);
+    let zeros: Vec<Tensor> = exe
+        .sig
+        .inputs
+        .iter()
+        .map(|s| Tensor::zeros(s.dtype, &s.shape))
+        .collect();
+    let mut args: Vec<&Tensor> = zeros.iter().collect();
+    args[0] = &bad;
+    assert!(exe.run(&args).is_err());
+    // Wrong arity:
+    assert!(exe.run(&args[..3]).is_err());
+}
+
+#[test]
+fn compile_cache_reuses_executable() {
+    let Some(rt) = runtime() else { return };
+    let a = rt.kernel_executable("kernel_vera_small").unwrap();
+    let b = rt.kernel_executable("kernel_vera_small").unwrap();
+    assert!(std::sync::Arc::ptr_eq(&a, &b));
+    assert_eq!(rt.compiled_count(), 1);
+}
