@@ -1,0 +1,94 @@
+//! `cargo bench --bench fleet_scale`: fleet throughput scaling.
+//!
+//! Saturates 1-, 4- and 16-chip fleets with the same offered load
+//! (60 k req/s, well above any single chip's 3.2 k req/s capacity at
+//! 16-deep batches / 5 ms per execution) and reports
+//!
+//!  - simulated aggregate throughput (requests served per serving
+//!    second) — must grow with chip count, since each added chip adds
+//!    capacity the router can actually reach;
+//!  - host wall time per simulated run (the event-loop overhead the
+//!    fleet layer adds per request).
+//!
+//! Artifact-free: uses the analytic chip engine.
+
+use vera_plus::coordinator::serve::BatchPolicy;
+use vera_plus::coordinator::serve::Workload;
+use vera_plus::fleet::{
+    analytic_fleet, AccuracyProfile, BalancePolicy, FleetConfig,
+};
+use vera_plus::rram::YEAR;
+use vera_plus::util::bencher::Bencher;
+
+const OFFERED_RATE: f64 = 60_000.0; // fleet-wide req/s
+const SECONDS: f64 = 2.0;
+const TICK: f64 = 0.1;
+
+fn config(n_chips: usize) -> FleetConfig {
+    FleetConfig {
+        n_chips,
+        t0: 30.0 * 86_400.0,
+        stagger: 0.5 * YEAR,
+        accel: 1e6,
+        policy: BalancePolicy::DriftAware,
+        batch: BatchPolicy {
+            max_batch: 16,
+            max_wait: 0.01,
+        },
+        // Per-chip capacity: 16 / 0.005 = 3 200 req/s.
+        exec_seconds_per_batch: 0.005,
+        seed: 0xbe7c4,
+    }
+}
+
+/// One saturated serving run; returns requests served in-window (no
+/// final flush — throughput under overload is capacity-bound, and the
+/// backlog is precisely what should NOT count).
+fn simulate(n_chips: usize, profile: &AccuracyProfile) -> usize {
+    let mut fleet = analytic_fleet(&config(n_chips), profile);
+    let mut workload = Workload::new(OFFERED_RATE, 42);
+    fleet
+        .run(SECONDS, TICK, &mut workload, 512)
+        .expect("analytic fleet cannot fail");
+    fleet.metrics.served
+}
+
+fn main() -> anyhow::Result<()> {
+    let profile =
+        AccuracyProfile::synthetic(11, 10.0 * YEAR, 0.92, 0.02, 0.5);
+    let mut bench = Bencher::quick();
+
+    let mut throughputs = Vec::new();
+    for &n in &[1usize, 4, 16] {
+        let served = simulate(n, &profile);
+        let sim_tput = served as f64 / SECONDS;
+        println!(
+            "chips={n:<3} served {served:>7} in {SECONDS}s sim -> \
+             aggregate {sim_tput:>9.0} req/s \
+             (per-chip cap 3200 req/s, offered {OFFERED_RATE:.0})"
+        );
+        throughputs.push((n, sim_tput));
+        bench.bench(&format!("fleet_event_loop/{n}_chips"), || {
+            std::hint::black_box(simulate(n, &profile));
+        });
+    }
+
+    // Scaling must be visible: each 4x in chips buys >2x throughput
+    // until the offered load itself saturates.
+    for pair in throughputs.windows(2) {
+        let ((n0, t0), (n1, t1)) = (pair[0], pair[1]);
+        assert!(
+            t1 > t0 * 2.0,
+            "throughput must scale with chips: {n0} chips -> {t0:.0}, \
+             {n1} chips -> {t1:.0}"
+        );
+    }
+    println!(
+        "aggregate throughput scales {:.0} -> {:.0} -> {:.0} req/s \
+         across 1 -> 4 -> 16 chips",
+        throughputs[0].1, throughputs[1].1, throughputs[2].1
+    );
+
+    bench.write_json("fleet_scale")?;
+    Ok(())
+}

@@ -118,14 +118,25 @@ impl ServeMetrics {
     }
 
     pub fn latency_percentile(&self, p: f64) -> f64 {
-        if self.latencies.is_empty() {
-            return 0.0;
-        }
-        let mut v = self.latencies.clone();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let idx = ((v.len() as f64 - 1.0) * p).round() as usize;
-        v[idx]
+        percentile(&self.latencies, p)
     }
+}
+
+/// Percentile over unsorted samples (shared by serve and fleet
+/// metrics). Returns 0 for an empty slice.
+pub fn percentile(samples: &[f64], p: f64) -> f64 {
+    let mut v = samples.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&v, p)
+}
+
+/// Percentile over already-sorted samples (one sort, many quantiles).
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+    sorted[idx]
 }
 
 /// The serving loop. Owns a queue, the clock, the set store and a single
@@ -143,6 +154,12 @@ pub struct Server<'a> {
     weights: TensorMap,
     /// SRAM slot: the currently loaded trainables.
     sram: TensorMap,
+    /// Batch sizes with a lowered compensated graph, ascending. Partial
+    /// batches run on the smallest graph that fits; configurations whose
+    /// only lowered graph is larger than `policy.max_batch` (e.g. the
+    /// b256-only vera/lora lowerings) pad up to that graph instead of
+    /// failing on a nonexistent `max_batch` key.
+    graph_batches: Vec<usize>,
     rng: Pcg64,
     wall: f64,
 }
@@ -157,6 +174,21 @@ impl<'a> Server<'a> {
     ) -> Server<'a> {
         let mut rng = Pcg64::with_stream(seed, 0x5e12e);
         let weights = dep.drifted_weights(clock.device_age(), &mut rng);
+        // Derive the lowered-graph key prefix from the canonical key
+        // builder so the two formats can never drift apart.
+        let key0 = dep.comp_key(0);
+        let comp_prefix = key0
+            .strip_suffix('0')
+            .expect("comp_key ends in its batch size");
+        let mut graph_batches: Vec<usize> = dep
+            .manifest
+            .graphs
+            .keys()
+            .filter_map(|k| k.strip_prefix(&comp_prefix))
+            .filter_map(|suffix| suffix.parse::<usize>().ok())
+            .collect();
+        graph_batches.sort_unstable();
+        graph_batches.dedup();
         Server {
             dep,
             store,
@@ -167,9 +199,30 @@ impl<'a> Server<'a> {
             active_set: None,
             weights,
             sram: TensorMap::new(),
+            graph_batches,
             rng,
             wall: 0.0,
         }
+    }
+
+    /// Requests waiting to be batched.
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Serving wall clock (seconds since server start).
+    pub fn wall(&self) -> f64 {
+        self.wall
+    }
+
+    /// The scheduler's accuracy estimate for the set covering the current
+    /// device age (recorded by Alg. 1 when the set was trained). The
+    /// fleet's drift-aware balancer weights chips by this.
+    pub fn predicted_accuracy(&self) -> f64 {
+        self.store
+            .select(self.clock.device_age())
+            .map(|s| s.accuracy)
+            .unwrap_or(0.0)
     }
 
     pub fn submit(&mut self, req: Request) {
@@ -198,32 +251,38 @@ impl<'a> Server<'a> {
         idx
     }
 
-    /// Serve queued requests in batches until the queue is drained.
-    /// `wall_per_exec` advances the clock per executed batch (models the
-    /// execution time at the accelerated timescale).
-    pub fn drain(&mut self, wall_per_exec: f64) -> Result<()> {
+    /// Serve queued requests in batches until the queue is drained,
+    /// returning every per-request outcome. `wall_per_exec` advances the
+    /// clock per executed batch (models the execution time at the
+    /// accelerated timescale). Capacity-capped draining lives on
+    /// [`ChipEngine`](crate::fleet::chip::ChipEngine) — the fleet loop
+    /// uses it to model finite per-tick chip throughput.
+    pub fn drain(&mut self, wall_per_exec: f64) -> Result<Vec<Completion>> {
+        let mut out = Vec::new();
         while !self.queue.is_empty() {
-            self.step(wall_per_exec)?;
+            out.extend(self.step(wall_per_exec)?);
         }
-        Ok(())
+        Ok(out)
     }
 
-    /// Execute one batch: honors `max_batch` and `max_wait`.
-    pub fn step(&mut self, wall_per_exec: f64) -> Result<()> {
+    /// Execute one batch (up to `max_batch` requests, oldest first) and
+    /// return its [`Completion`]s.
+    pub fn step(&mut self, wall_per_exec: f64) -> Result<Vec<Completion>> {
         if self.queue.is_empty() {
-            return Ok(());
+            return Ok(Vec::new());
         }
         let set_index = self.route();
         // Take up to max_batch requests (oldest first).
         let take = self.queue.len().min(self.policy.max_batch);
         let batch: Vec<Request> =
             self.queue.drain(..take).collect();
-        // Pick the graph: full-batch graph when full, else batch-1 loop.
-        let (exec_batch, pad) = if batch.len() == self.policy.max_batch {
-            (self.policy.max_batch, 0)
-        } else {
-            (self.policy.max_batch, self.policy.max_batch - batch.len())
-        };
+        // Pick the smallest lowered graph that fits this batch and pad
+        // the remainder; a partial batch no longer pays for a full
+        // `max_batch` invocation.
+        let exec_batch =
+            pick_exec_batch(&self.graph_batches, batch.len(),
+                            self.policy.max_batch);
+        let pad = exec_batch - batch.len();
         let indices: Vec<usize> = batch
             .iter()
             .map(|r| r.sample)
@@ -248,6 +307,7 @@ impl<'a> Server<'a> {
         // Score the real (non-padded) rows.
         let labels = data.y.as_i32();
         let per_row = row_correct(logits, labels);
+        let mut completions = Vec::with_capacity(batch.len());
         for (i, req) in batch.iter().enumerate() {
             let latency = self.wall - req.arrival_wall;
             self.metrics.served += 1;
@@ -255,19 +315,37 @@ impl<'a> Server<'a> {
                 self.metrics.correct += 1;
             }
             self.metrics.latencies.push(latency.max(0.0));
-            let _ = Completion {
+            completions.push(Completion {
                 id: req.id,
                 correct: per_row[i],
-                latency,
+                latency: latency.max(0.0),
                 batch_size: batch.len(),
                 set_index,
-            };
+            });
         }
         self.metrics.batches += 1;
         self.metrics.occupancy_sum +=
             batch.len() as f64 / exec_batch as f64;
-        Ok(())
+        Ok(completions)
     }
+}
+
+/// Pick the lowered graph batch for a request batch of `len`:
+/// the smallest available graph that fits and respects `max_batch`;
+/// else the smallest available graph that fits at all (some
+/// configurations only lower one large graph — padding to it beats
+/// failing on a nonexistent `max_batch` key); else `max_batch`.
+pub(crate) fn pick_exec_batch(
+    available: &[usize],
+    len: usize,
+    max_batch: usize,
+) -> usize {
+    available
+        .iter()
+        .copied()
+        .find(|&b| b >= len && b <= max_batch)
+        .or_else(|| available.iter().copied().find(|&b| b >= len))
+        .unwrap_or(max_batch)
 }
 
 fn row_correct(logits: &Tensor, labels: &[i32]) -> Vec<bool> {
@@ -366,6 +444,26 @@ mod tests {
         assert!(reqs
             .windows(2)
             .all(|w| w[0].arrival_wall <= w[1].arrival_wall));
+    }
+
+    #[test]
+    fn exec_batch_prefers_smallest_fitting_graph() {
+        let avail = [1, 32, 256];
+        assert_eq!(pick_exec_batch(&avail, 1, 256), 1);
+        assert_eq!(pick_exec_batch(&avail, 2, 256), 32);
+        assert_eq!(pick_exec_batch(&avail, 32, 256), 32);
+        assert_eq!(pick_exec_batch(&avail, 33, 256), 256);
+        assert_eq!(pick_exec_batch(&avail, 256, 256), 256);
+        // Respect max_batch when a fitting graph exists under it.
+        assert_eq!(pick_exec_batch(&avail, 2, 32), 32);
+        // Only an oversized graph exists (b256-only lowerings): pad up
+        // to it rather than fail on a nonexistent max_batch key.
+        assert_eq!(pick_exec_batch(&[256], 5, 32), 256);
+        assert_eq!(pick_exec_batch(&avail, 33, 64), 256);
+        // No lowered graphs known: fall back to the policy batch.
+        assert_eq!(pick_exec_batch(&[], 5, 32), 32);
+        // Nothing large enough: fall back to the policy batch.
+        assert_eq!(pick_exec_batch(&[1, 8], 9, 16), 16);
     }
 
     #[test]

@@ -267,6 +267,73 @@ impl BnCalibCost {
     }
 }
 
+/// Fleet-level cost roll-up: the per-chip compensation overheads of
+/// Tables III–V multiplied across `n_chips`, against the BN-calibration
+/// baseline [7]. Per-chip the paper's storage gap is ~3 orders of
+/// magnitude (KB vs MB); a fleet multiplies the *absolute* gap by N —
+/// a 16-chip fleet stores ~82 KB of VeRA+ sets where BN calibration
+/// would ship ~120 MB of calibration images.
+#[derive(Debug, Clone)]
+pub struct FleetCost {
+    pub n_chips: usize,
+    pub per_chip: MethodCost,
+    pub bn_baseline: BnCalibCost,
+}
+
+impl FleetCost {
+    pub fn new(
+        n_chips: usize,
+        per_chip: MethodCost,
+        bn_baseline: BnCalibCost,
+    ) -> FleetCost {
+        assert!(n_chips >= 1);
+        FleetCost {
+            n_chips,
+            per_chip,
+            bn_baseline,
+        }
+    }
+
+    /// Compensation storage across the fleet (KB): every chip carries
+    /// its own full lifetime set ladder (chips are programmed at
+    /// different times, so sets are per-chip state).
+    pub fn total_storage_kb(&self) -> f64 {
+        self.per_chip.storage_kb() * self.n_chips as f64
+    }
+
+    /// BN-calibration baseline storage across the fleet (KB).
+    pub fn bn_total_storage_kb(&self) -> f64 {
+        self.bn_baseline.storage_mb() * 1e3 * self.n_chips as f64
+    }
+
+    /// Storage advantage factor (same per chip and fleet-wide, but the
+    /// absolute KB gap grows with every chip added).
+    pub fn storage_advantage(&self) -> f64 {
+        self.bn_total_storage_kb() / self.total_storage_kb()
+    }
+
+    /// SRAM-IMC compensation area across the fleet (mm²).
+    pub fn total_sram_area_mm2(&self) -> f64 {
+        self.per_chip.sram_area_mm2() * self.n_chips as f64
+    }
+
+    /// Fleet serving power (W) at an aggregate request rate, Eq. 10 per
+    /// inference: backbone on RRAM-IMC + compensation branch on
+    /// SRAM-IMC.
+    pub fn serving_power_w(&self, fleet_rate_req_s: f64) -> f64 {
+        self.per_chip.energy_nj() * 1e-9 * fleet_rate_req_s
+    }
+
+    /// Extra serving power (W) the BN baseline's unfolded BN ops would
+    /// cost at the same rate (its ops run on the SRAM-IMC side).
+    pub fn bn_extra_power_w(&self, fleet_rate_req_s: f64) -> f64 {
+        let bn_nj = self.bn_baseline.bn_ops as f64
+            / constants::SRAM_TOPS_W
+            / 1e3;
+        bn_nj * 1e-9 * fleet_rate_req_s
+    }
+}
+
 /// The paper's *real* ResNet-20 (CIFAR) geometry: widths 16/32/64,
 /// 32×32 input, 3 stages × 3 blocks, used to regenerate Tables III–V at
 /// paper scale without needing executable artifacts.
@@ -421,6 +488,36 @@ mod tests {
         assert!((lo.storage_kb() - 66.5).abs() < 25.0, "{}", lo.storage_kb());
         // >1000× below the BN baseline's 7.5 MB.
         assert!(vp.storage_kb() * 1000.0 < 7500.0 * 1.1);
+    }
+
+    #[test]
+    fn fleet_cost_scales_linearly_and_keeps_advantage() {
+        let layers = paper20();
+        let vp = cost_method(&layers, 64, 64, Method::VeraPlus, 1, 11);
+        let bn = BnCalibCost::for_cifar_like(&layers, 50_000, 3072);
+        let f1 = FleetCost::new(1, vp.clone(), bn.clone());
+        let f16 = FleetCost::new(16, vp, bn);
+        // Storage scales linearly with chip count.
+        assert!(
+            (f16.total_storage_kb() / f1.total_storage_kb() - 16.0)
+                .abs()
+                < 1e-9
+        );
+        // The paper's three-orders-of-magnitude storage claim holds per
+        // chip and fleet-wide.
+        assert!(f1.storage_advantage() > 1000.0);
+        assert!(
+            (f16.storage_advantage() - f1.storage_advantage()).abs()
+                < 1e-6
+        );
+        // Absolute gap grows with the fleet: 16 chips of BN baggage is
+        // >100 MB.
+        assert!(f16.bn_total_storage_kb() > 100_000.0);
+        assert!(f16.total_storage_kb() < 200.0);
+        // Power model sane: 1M req/s fleet-wide at ~220 nJ ≈ 0.22 W.
+        let p = f16.serving_power_w(1e6);
+        assert!(p > 0.1 && p < 1.0, "power {p}");
+        assert!(f16.bn_extra_power_w(1e6) > 0.0);
     }
 
     #[test]

@@ -1,0 +1,295 @@
+//! Chip engines: what one shard of the fleet does with the requests the
+//! router hands it.
+//!
+//! [`ChipEngine`] is the minimal serving surface the fleet event loop
+//! needs — submit, budgeted drain, lifetime-clock access, queue depth
+//! and the scheduler's accuracy prediction. Two implementations:
+//!
+//! - [`coordinator::serve::Server`](crate::coordinator::serve::Server)
+//!   — the real path: PJRT executables over programmed RRAM arrays with
+//!   drift-level routing. Requires compiled artifacts.
+//! - [`AnalyticEngine`] — artifact-free simulation driven by an
+//!   [`AccuracyProfile`]: request outcomes are Bernoulli draws at the
+//!   profile's predicted accuracy for the chip's current age, with the
+//!   same queueing, batching, era-switch and latency accounting as the
+//!   real server (occupancy is the one exception: with no lowered
+//!   graph inventory it is measured against `max_batch`, where the
+//!   real server divides by the smallest graph that fits the batch).
+//!   This keeps fleet-scale experiments (16+ chips,
+//!   hundreds of thousands of requests) tractable and lets the fleet
+//!   subsystem run in environments without the PJRT runtime.
+
+use crate::coordinator::serve::{
+    BatchPolicy, Completion, LifetimeClock, Request, ServeMetrics, Server,
+};
+use crate::fleet::profile::AccuracyProfile;
+use crate::util::rng::Pcg64;
+use anyhow::Result;
+use std::collections::VecDeque;
+
+/// One fleet shard's serving surface.
+pub trait ChipEngine {
+    /// Enqueue a routed request.
+    fn submit(&mut self, req: Request);
+
+    /// Requests currently queued.
+    fn queue_len(&self) -> usize;
+
+    /// Device age (seconds since this chip was programmed).
+    fn device_age(&self) -> f64;
+
+    /// Scheduler-predicted accuracy at the current device age (the
+    /// drift-aware balancer's routing weight).
+    fn predicted_accuracy(&self) -> f64;
+
+    /// Age the chip without executing (idle wall time still drifts the
+    /// RRAM devices).
+    fn advance_idle(&mut self, wall_seconds: f64);
+
+    /// Execute one batch (no-op on an empty queue), returning its
+    /// [`Completion`]s.
+    fn step(&mut self, wall_per_exec: f64) -> Result<Vec<Completion>>;
+
+    /// Execute up to `max_batches` batches, returning their
+    /// [`Completion`]s; leftover requests stay queued.
+    fn drain_budgeted(
+        &mut self,
+        max_batches: usize,
+        wall_per_exec: f64,
+    ) -> Result<Vec<Completion>> {
+        let mut out = Vec::new();
+        let mut executed = 0usize;
+        while self.queue_len() > 0 && executed < max_batches {
+            out.extend(self.step(wall_per_exec)?);
+            executed += 1;
+        }
+        Ok(out)
+    }
+
+    /// Cumulative serving metrics.
+    fn metrics(&self) -> &ServeMetrics;
+}
+
+impl ChipEngine for Server<'_> {
+    fn submit(&mut self, req: Request) {
+        Server::submit(self, req);
+    }
+
+    fn queue_len(&self) -> usize {
+        Server::queue_len(self)
+    }
+
+    fn device_age(&self) -> f64 {
+        self.clock.device_age()
+    }
+
+    fn predicted_accuracy(&self) -> f64 {
+        Server::predicted_accuracy(self)
+    }
+
+    fn advance_idle(&mut self, wall_seconds: f64) {
+        self.clock.advance(wall_seconds);
+    }
+
+    fn step(&mut self, wall_per_exec: f64) -> Result<Vec<Completion>> {
+        Server::step(self, wall_per_exec)
+    }
+
+    fn metrics(&self) -> &ServeMetrics {
+        &self.metrics
+    }
+}
+
+/// Artifact-free chip: profile-driven outcomes, server-identical
+/// queueing/batching/era accounting.
+pub struct AnalyticEngine {
+    pub clock: LifetimeClock,
+    pub policy: BatchPolicy,
+    pub metrics: ServeMetrics,
+    profile: AccuracyProfile,
+    queue: VecDeque<Request>,
+    active_segment: Option<usize>,
+    rng: Pcg64,
+    wall: f64,
+}
+
+impl AnalyticEngine {
+    pub fn new(
+        profile: AccuracyProfile,
+        clock: LifetimeClock,
+        policy: BatchPolicy,
+        seed: u64,
+    ) -> AnalyticEngine {
+        AnalyticEngine {
+            clock,
+            policy,
+            metrics: ServeMetrics::default(),
+            profile,
+            queue: VecDeque::new(),
+            active_segment: None,
+            rng: Pcg64::with_stream(seed, 0xf1ee7),
+            wall: 0.0,
+        }
+    }
+
+    /// Execute one batch. Mirrors `Server::step`: route (era lookup +
+    /// switch accounting), dequeue oldest-first, advance wall/lifetime
+    /// clocks, then score each request — here a Bernoulli draw at the
+    /// profile's predicted accuracy instead of a PJRT invocation.
+    fn step(&mut self, wall_per_exec: f64) -> Vec<Completion> {
+        if self.queue.is_empty() {
+            return Vec::new();
+        }
+        let age = self.clock.device_age();
+        let segment = self.profile.segment_index(age);
+        if self.active_segment != Some(segment) {
+            self.metrics.set_switches += 1;
+            self.active_segment = Some(segment);
+        }
+        let p = self.profile.predict(age);
+        let take = self.queue.len().min(self.policy.max_batch);
+        let batch: Vec<Request> = self.queue.drain(..take).collect();
+        self.wall += wall_per_exec;
+        self.clock.advance(wall_per_exec);
+        let mut out = Vec::with_capacity(batch.len());
+        for req in &batch {
+            let correct = self.rng.uniform() < p;
+            let latency = (self.wall - req.arrival_wall).max(0.0);
+            self.metrics.served += 1;
+            if correct {
+                self.metrics.correct += 1;
+            }
+            self.metrics.latencies.push(latency);
+            out.push(Completion {
+                id: req.id,
+                correct,
+                latency,
+                batch_size: batch.len(),
+                set_index: segment,
+            });
+        }
+        self.metrics.batches += 1;
+        // No graph inventory here: occupancy is relative to max_batch
+        // (the real server divides by its selected graph batch).
+        self.metrics.occupancy_sum +=
+            batch.len() as f64 / self.policy.max_batch as f64;
+        out
+    }
+}
+
+impl ChipEngine for AnalyticEngine {
+    fn submit(&mut self, req: Request) {
+        // Align the serving wall with the arrival timeline (as the real
+        // server does) so latency = queueing + execution.
+        if req.arrival_wall > self.wall {
+            self.wall = req.arrival_wall;
+        }
+        self.queue.push_back(req);
+    }
+
+    fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    fn device_age(&self) -> f64 {
+        self.clock.device_age()
+    }
+
+    fn predicted_accuracy(&self) -> f64 {
+        self.profile.predict(self.clock.device_age())
+    }
+
+    fn advance_idle(&mut self, wall_seconds: f64) {
+        self.clock.advance(wall_seconds);
+    }
+
+    fn step(&mut self, wall_per_exec: f64) -> Result<Vec<Completion>> {
+        Ok(AnalyticEngine::step(self, wall_per_exec))
+    }
+
+    fn metrics(&self) -> &ServeMetrics {
+        &self.metrics
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, arrival_wall: f64) -> Request {
+        Request {
+            id,
+            sample: 0,
+            arrival_age: 0.0,
+            arrival_wall,
+        }
+    }
+
+    fn engine(p: f64) -> AnalyticEngine {
+        AnalyticEngine::new(
+            AccuracyProfile::uncompensated(p, 0.0, 0.0),
+            LifetimeClock::new(1.0, 1e6),
+            BatchPolicy {
+                max_batch: 8,
+                max_wait: 0.01,
+            },
+            7,
+        )
+    }
+
+    #[test]
+    fn serves_all_queued_requests_in_batches() {
+        let mut e = engine(1.0);
+        for i in 0..20 {
+            ChipEngine::submit(&mut e, req(i, 0.0));
+        }
+        let comps = e.drain_budgeted(usize::MAX, 0.001).unwrap();
+        assert_eq!(comps.len(), 20);
+        // 8 + 8 + 4 → 3 batches; flat profile ⇒ all correct.
+        assert_eq!(e.metrics.batches, 3);
+        assert!(comps.iter().all(|c| c.correct));
+        assert_eq!(ChipEngine::queue_len(&e), 0);
+        // One era only ⇒ exactly one "switch" (initial SRAM load).
+        assert_eq!(e.metrics.set_switches, 1);
+    }
+
+    #[test]
+    fn budget_caps_batches_and_keeps_leftovers() {
+        let mut e = engine(1.0);
+        for i in 0..20 {
+            ChipEngine::submit(&mut e, req(i, 0.0));
+        }
+        let comps = e.drain_budgeted(1, 0.001).unwrap();
+        assert_eq!(comps.len(), 8);
+        assert_eq!(ChipEngine::queue_len(&e), 12);
+        // Oldest-first: ids 0..8 completed.
+        assert!(comps.iter().map(|c| c.id).eq(0..8));
+    }
+
+    #[test]
+    fn accuracy_tracks_profile_probability() {
+        let mut e = engine(0.7);
+        for i in 0..4000 {
+            ChipEngine::submit(&mut e, req(i, 0.0));
+        }
+        e.drain_budgeted(usize::MAX, 1e-6).unwrap();
+        let acc = e.metrics.accuracy();
+        // Bernoulli(0.7) over 4000 draws: σ ≈ 0.0072.
+        assert!((acc - 0.7).abs() < 0.04, "acc {acc}");
+    }
+
+    #[test]
+    fn latency_counts_queueing_delay() {
+        let mut e = engine(1.0);
+        ChipEngine::submit(&mut e, req(0, 1.0));
+        ChipEngine::submit(&mut e, req(1, 1.5));
+        let comps = e.drain_budgeted(usize::MAX, 0.25).unwrap();
+        // Wall aligned to 1.5 at submit; one batch at +0.25.
+        assert!((comps[0].latency - 0.75).abs() < 1e-9);
+        assert!((comps[1].latency - 0.25).abs() < 1e-9);
+        // Idle aging moves the lifetime clock.
+        let before = ChipEngine::device_age(&e);
+        ChipEngine::advance_idle(&mut e, 2.0);
+        assert!(ChipEngine::device_age(&e) - before > 1.9e6);
+    }
+}

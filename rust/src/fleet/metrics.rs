@@ -1,0 +1,277 @@
+//! Fleet-level metrics: routing counts, queue-depth tracking, and
+//! aggregation of per-chip serving metrics into fleet-wide accuracy,
+//! latency percentiles and throughput.
+
+use crate::coordinator::serve::{percentile_sorted, Completion};
+use crate::fleet::chip::ChipEngine;
+
+/// Per-chip load/outcome counters maintained by the fleet loop.
+#[derive(Debug, Clone, Default)]
+pub struct ChipLoad {
+    /// Requests the router assigned to this chip.
+    pub routed: usize,
+    /// Requests completed (equals `routed` once queues flush).
+    pub served: usize,
+    pub correct: usize,
+    /// Queue depth sampled at the end of each tick.
+    pub queue_depth_sum: f64,
+    pub queue_samples: usize,
+    pub max_queue_depth: usize,
+}
+
+impl ChipLoad {
+    pub fn accuracy(&self) -> f64 {
+        if self.served == 0 {
+            0.0
+        } else {
+            self.correct as f64 / self.served as f64
+        }
+    }
+
+    pub fn mean_queue_depth(&self) -> f64 {
+        if self.queue_samples == 0 {
+            0.0
+        } else {
+            self.queue_depth_sum / self.queue_samples as f64
+        }
+    }
+}
+
+/// Fleet-wide counters, filled in by [`Fleet::tick`](super::Fleet::tick).
+/// Latency samples are NOT duplicated here — each chip's
+/// `ServeMetrics.latencies` already holds them; [`FleetSummary::collect`]
+/// merges those for fleet-wide percentiles.
+#[derive(Debug, Clone, Default)]
+pub struct FleetMetrics {
+    pub per_chip: Vec<ChipLoad>,
+    pub served: usize,
+    pub correct: usize,
+    pub ticks: usize,
+    /// Serving wall time covered by the ticks so far (seconds).
+    pub wall: f64,
+}
+
+impl FleetMetrics {
+    pub fn new(n_chips: usize) -> FleetMetrics {
+        FleetMetrics {
+            per_chip: vec![ChipLoad::default(); n_chips],
+            ..Default::default()
+        }
+    }
+
+    pub fn record_routed(&mut self, chip: usize) {
+        self.per_chip[chip].routed += 1;
+    }
+
+    pub fn record_completions(&mut self, chip: usize, comps: &[Completion]) {
+        let load = &mut self.per_chip[chip];
+        for c in comps {
+            load.served += 1;
+            self.served += 1;
+            if c.correct {
+                load.correct += 1;
+                self.correct += 1;
+            }
+        }
+    }
+
+    pub fn observe_queue(&mut self, chip: usize, depth: usize) {
+        let load = &mut self.per_chip[chip];
+        load.queue_depth_sum += depth as f64;
+        load.queue_samples += 1;
+        load.max_queue_depth = load.max_queue_depth.max(depth);
+    }
+
+    pub fn end_tick(&mut self, dt: f64) {
+        self.ticks += 1;
+        self.wall += dt;
+    }
+
+    /// Account serving wall time without counting a tick (flush
+    /// windows: the backlog costs time but isn't steady-state).
+    pub fn add_wall(&mut self, dt: f64) {
+        self.wall += dt;
+    }
+
+    pub fn total_routed(&self) -> usize {
+        self.per_chip.iter().map(|c| c.routed).sum()
+    }
+
+    pub fn routed_share(&self, chip: usize) -> f64 {
+        let total = self.total_routed();
+        if total == 0 {
+            0.0
+        } else {
+            self.per_chip[chip].routed as f64 / total as f64
+        }
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        if self.served == 0 {
+            0.0
+        } else {
+            self.correct as f64 / self.served as f64
+        }
+    }
+
+    /// Aggregate fleet throughput over the serving wall (requests/s).
+    pub fn throughput(&self) -> f64 {
+        if self.wall <= 0.0 {
+            0.0
+        } else {
+            self.served as f64 / self.wall
+        }
+    }
+}
+
+/// One chip's row in a [`FleetSummary`].
+#[derive(Debug, Clone)]
+pub struct ChipSummary {
+    pub chip: usize,
+    pub device_age: f64,
+    pub predicted_acc: f64,
+    pub routed: usize,
+    pub served: usize,
+    pub accuracy: f64,
+    pub set_switches: usize,
+    pub mean_queue_depth: f64,
+    pub max_queue_depth: usize,
+    pub mean_occupancy: f64,
+}
+
+/// Snapshot combining fleet counters with each engine's own metrics.
+#[derive(Debug, Clone)]
+pub struct FleetSummary {
+    pub chips: Vec<ChipSummary>,
+    pub served: usize,
+    pub accuracy: f64,
+    pub p50_latency: f64,
+    pub p99_latency: f64,
+    pub throughput: f64,
+    pub set_switches: usize,
+    pub wall: f64,
+}
+
+impl FleetSummary {
+    pub fn collect<E: ChipEngine>(
+        chips: &[E],
+        fm: &FleetMetrics,
+    ) -> FleetSummary {
+        let rows: Vec<ChipSummary> = chips
+            .iter()
+            .enumerate()
+            .map(|(i, chip)| {
+                let sm = chip.metrics();
+                let load = &fm.per_chip[i];
+                ChipSummary {
+                    chip: i,
+                    device_age: chip.device_age(),
+                    predicted_acc: chip.predicted_accuracy(),
+                    routed: load.routed,
+                    served: load.served,
+                    accuracy: load.accuracy(),
+                    set_switches: sm.set_switches,
+                    mean_queue_depth: load.mean_queue_depth(),
+                    max_queue_depth: load.max_queue_depth,
+                    mean_occupancy: sm.mean_occupancy(),
+                }
+            })
+            .collect();
+        // Merge per-chip latency samples; one sort serves both
+        // quantiles.
+        let mut sorted: Vec<f64> = chips
+            .iter()
+            .flat_map(|c| c.metrics().latencies.iter().copied())
+            .collect();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        FleetSummary {
+            set_switches: rows.iter().map(|r| r.set_switches).sum(),
+            served: fm.served,
+            accuracy: fm.accuracy(),
+            p50_latency: percentile_sorted(&sorted, 0.5),
+            p99_latency: percentile_sorted(&sorted, 0.99),
+            throughput: fm.throughput(),
+            wall: fm.wall,
+            chips: rows,
+        }
+    }
+
+    /// Fixed-width table for the CLI and examples.
+    pub fn print(&self) {
+        println!(
+            "chip {:>10} {:>8} {:>8} {:>8} {:>8} {:>8} {:>7} {:>7}",
+            "age", "pred", "routed", "served", "acc", "queue", "maxq",
+            "switch"
+        );
+        for r in &self.chips {
+            println!(
+                "{:>4} {:>10} {:>7.2}% {:>8} {:>8} {:>7.2}% {:>8.1} \
+                 {:>7} {:>7}",
+                r.chip,
+                crate::rram::fmt_time(r.device_age),
+                100.0 * r.predicted_acc,
+                r.routed,
+                r.served,
+                100.0 * r.accuracy,
+                r.mean_queue_depth,
+                r.max_queue_depth,
+                r.set_switches,
+            );
+        }
+        println!(
+            "fleet: served {} | acc {:.2}% | p50 {:.1} ms | p99 {:.1} ms \
+             | {:.0} req/s | {} set switches",
+            self.served,
+            100.0 * self.accuracy,
+            1e3 * self.p50_latency,
+            1e3 * self.p99_latency,
+            self.throughput,
+            self.set_switches,
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn comp(id: u64, correct: bool, latency: f64) -> Completion {
+        Completion {
+            id,
+            correct,
+            latency,
+            batch_size: 1,
+            set_index: 0,
+        }
+    }
+
+    #[test]
+    fn aggregation_counts_and_ratios() {
+        let mut m = FleetMetrics::new(2);
+        m.record_routed(0);
+        m.record_routed(0);
+        m.record_routed(1);
+        m.record_completions(
+            0,
+            &[comp(0, true, 0.1), comp(1, false, 0.3)],
+        );
+        m.record_completions(1, &[comp(2, true, 0.2)]);
+        m.observe_queue(0, 4);
+        m.observe_queue(0, 2);
+        m.end_tick(0.5);
+        m.end_tick(0.5);
+        assert_eq!(m.served, 3);
+        assert_eq!(m.ticks, 2);
+        assert_eq!(m.total_routed(), 3);
+        assert!((m.accuracy() - 2.0 / 3.0).abs() < 1e-12);
+        assert!((m.per_chip[0].mean_queue_depth() - 3.0).abs() < 1e-12);
+        assert_eq!(m.per_chip[0].max_queue_depth, 4);
+        assert!((m.routed_share(0) - 2.0 / 3.0).abs() < 1e-12);
+        assert!((m.throughput() - 3.0).abs() < 1e-12);
+        assert!((m.per_chip[0].accuracy() - 0.5).abs() < 1e-12);
+        // Flush windows add wall time but not ticks.
+        m.add_wall(0.5);
+        assert_eq!(m.ticks, 2);
+        assert!((m.throughput() - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,379 @@
+//! Fleet serving: multi-chip sharded routing with drift-aware load
+//! balancing.
+//!
+//! VeRA+'s pitch is that drift compensation is cheap enough (two int4
+//! vectors per drift level, no on-chip retraining) to deploy at scale.
+//! This subsystem simulates that scale: **N chips programmed at
+//! staggered times**, so at any serving instant the fleet spans
+//! heterogeneous drift ages — a chip programmed last week sits next to
+//! one four years into its log-time decay, each with a different active
+//! compensation set. A shard [`router`] assigns every request to one
+//! chip under a pluggable [`BalancePolicy`]; the fleet event loop
+//! advances all chips' lifetime clocks together, caps each chip's
+//! per-tick execution to model finite throughput, and aggregates
+//! per-chip and fleet-wide [`metrics`].
+//!
+//! Layers:
+//! - [`chip`] — the [`ChipEngine`] trait: the real PJRT-backed
+//!   [`Server`](crate::coordinator::serve::Server) or the artifact-free
+//!   [`AnalyticEngine`].
+//! - [`router`] — round-robin / least-queue / drift-aware balancing.
+//! - [`profile`] — accuracy-vs-age model backing drift-aware routing
+//!   and analytic simulation.
+//! - [`metrics`] — per-chip loads, fleet accuracy, latency percentiles,
+//!   throughput, and printable summaries.
+//!
+//! Fleet-level cost accounting (compensation storage/energy multiplied
+//! across chips, vs the BN-calibration baseline) lives in
+//! [`crate::costmodel::FleetCost`].
+
+pub mod chip;
+pub mod metrics;
+pub mod profile;
+pub mod router;
+
+pub use chip::{AnalyticEngine, ChipEngine};
+pub use metrics::{ChipLoad, ChipSummary, FleetMetrics, FleetSummary};
+pub use profile::{AccuracyProfile, Segment};
+pub use router::{BalancePolicy, ChipView, Router};
+
+use crate::coordinator::serve::{
+    BatchPolicy, Completion, LifetimeClock, Workload,
+};
+use anyhow::Result;
+
+/// Fleet assembly parameters.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    pub n_chips: usize,
+    /// Device age of the youngest chip at fleet start (seconds).
+    pub t0: f64,
+    /// Programming stagger between consecutive chips (seconds of device
+    /// age): chip `i` is `i * stagger` older than chip 0.
+    pub stagger: f64,
+    /// Lifetime acceleration (virtual seconds per serving wall second).
+    pub accel: f64,
+    pub policy: BalancePolicy,
+    pub batch: BatchPolicy,
+    /// Wall seconds one batch execution occupies a chip — the per-chip
+    /// capacity model (max throughput = max_batch / exec_seconds).
+    pub exec_seconds_per_batch: f64,
+    pub seed: u64,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            n_chips: 4,
+            t0: 30.0 * 86_400.0,
+            stagger: crate::rram::YEAR,
+            accel: 1e6,
+            policy: BalancePolicy::DriftAware,
+            batch: BatchPolicy::default(),
+            exec_seconds_per_batch: 0.002,
+            seed: 0xf1ee7,
+        }
+    }
+}
+
+impl FleetConfig {
+    /// Device age of chip `i` at fleet start (chips indexed youngest
+    /// first).
+    pub fn chip_age(&self, i: usize) -> f64 {
+        self.t0 + i as f64 * self.stagger
+    }
+
+    /// Mean device age across the fleet at start.
+    pub fn mean_age(&self) -> f64 {
+        self.t0 + (self.n_chips as f64 - 1.0) / 2.0 * self.stagger
+    }
+}
+
+/// A completion tagged with the chip that served it.
+#[derive(Debug, Clone)]
+pub struct FleetCompletion {
+    pub chip: usize,
+    pub completion: Completion,
+}
+
+/// The fleet: N chip engines behind one router.
+pub struct Fleet<E: ChipEngine> {
+    pub chips: Vec<E>,
+    pub router: Router,
+    pub metrics: FleetMetrics,
+    exec_seconds_per_batch: f64,
+    /// Per-chip unexercised capacity (seconds). Lets a chip whose
+    /// batch time exceeds the tick accumulate capacity across ticks
+    /// instead of being granted a free batch every tick.
+    exec_credit: Vec<f64>,
+    /// Per-chip over-aging (seconds) from a batch that ran past its
+    /// window; repaid by shortening subsequent idle advances so all
+    /// lifetime clocks stay in lockstep.
+    age_debt: Vec<f64>,
+    /// Reference clock handed to the workload generator; request
+    /// arrival ages are re-stamped with the routed chip's age.
+    ref_clock: LifetimeClock,
+}
+
+impl<E: ChipEngine> Fleet<E> {
+    pub fn new(
+        chips: Vec<E>,
+        policy: BalancePolicy,
+        exec_seconds_per_batch: f64,
+    ) -> Fleet<E> {
+        assert!(!chips.is_empty(), "fleet needs at least one chip");
+        assert!(exec_seconds_per_batch > 0.0);
+        let n = chips.len();
+        Fleet {
+            chips,
+            router: Router::new(policy),
+            metrics: FleetMetrics::new(n),
+            exec_seconds_per_batch,
+            exec_credit: vec![0.0; n],
+            age_debt: vec![0.0; n],
+            ref_clock: LifetimeClock::new(0.0, 0.0),
+        }
+    }
+
+    pub fn n_chips(&self) -> usize {
+        self.chips.len()
+    }
+
+    pub fn mean_device_age(&self) -> f64 {
+        self.chips.iter().map(|c| c.device_age()).sum::<f64>()
+            / self.chips.len() as f64
+    }
+
+    /// One event-loop tick of `dt` serving wall seconds:
+    ///
+    /// 1. draw Poisson arrivals for the window and route each request
+    ///    to a chip (the router sees live queue depths — earlier
+    ///    routings within the burst update the view);
+    /// 2. every chip executes up to its capacity for the window
+    ///    (`dt / exec_seconds_per_batch` batches, with fractional
+    ///    capacity carried across ticks), leftovers stay queued;
+    /// 3. all lifetime clocks advance together — busy chips age through
+    ///    execution, idle chips through [`ChipEngine::advance_idle`],
+    ///    and any batch that overran its window is repaid from the next
+    ///    idle advance — so drift ages stay in lockstep (bounded skew
+    ///    of one batch time).
+    pub fn tick(
+        &mut self,
+        dt: f64,
+        workload: &mut Workload,
+        test_len: usize,
+    ) -> Result<Vec<FleetCompletion>> {
+        let reqs = workload.arrivals(dt, &self.ref_clock, test_len);
+        let mut views: Vec<ChipView> = self
+            .chips
+            .iter()
+            .map(|c| ChipView {
+                queue_len: c.queue_len(),
+                predicted_acc: c.predicted_accuracy(),
+            })
+            .collect();
+        for mut req in reqs {
+            let i = self.router.route(&views);
+            views[i].queue_len += 1;
+            req.arrival_age = self.chips[i].device_age();
+            self.metrics.record_routed(i);
+            self.chips[i].submit(req);
+        }
+        self.service_window(dt, true)
+    }
+
+    /// Steps 2–3 of a tick: capacity-capped drains + lockstep aging
+    /// over a `dt`-second window with no new arrivals. Shared by
+    /// [`tick`](Fleet::tick) and [`flush`](Fleet::flush) so wall time
+    /// and device ages stay consistent everywhere. `sample` gates the
+    /// per-tick statistics (tick count, queue-depth samples) so flush
+    /// windows contribute wall time without polluting steady-state
+    /// serving stats.
+    fn service_window(
+        &mut self,
+        dt: f64,
+        sample: bool,
+    ) -> Result<Vec<FleetCompletion>> {
+        let exec = self.exec_seconds_per_batch;
+        let mut out = Vec::new();
+        for (i, chip) in self.chips.iter_mut().enumerate() {
+            let credit = self.exec_credit[i] + dt;
+            let budget = (credit / exec).floor() as usize;
+            let batches_before = chip.metrics().batches;
+            let comps = chip.drain_budgeted(budget, exec)?;
+            let executed = chip.metrics().batches - batches_before;
+            let spent = executed as f64 * exec;
+            // Bank at most one batch of unused capacity: a starved
+            // chip may need several short ticks to afford one
+            // execution, but an idle chip must not stockpile.
+            self.exec_credit[i] = (credit - spent).min(exec);
+            let idle =
+                (dt - spent - self.age_debt[i]).max(0.0);
+            chip.advance_idle(idle);
+            self.age_debt[i] += spent + idle - dt;
+            self.metrics.record_completions(i, &comps);
+            if sample {
+                self.metrics.observe_queue(i, chip.queue_len());
+            }
+            out.extend(comps.into_iter().map(|completion| {
+                FleetCompletion {
+                    chip: i,
+                    completion,
+                }
+            }));
+        }
+        self.ref_clock.advance(dt);
+        if sample {
+            self.metrics.end_tick(dt);
+        } else {
+            self.metrics.add_wall(dt);
+        }
+        Ok(out)
+    }
+
+    /// Run the event loop for `seconds` of serving wall time.
+    pub fn run(
+        &mut self,
+        seconds: f64,
+        tick: f64,
+        workload: &mut Workload,
+        test_len: usize,
+    ) -> Result<()> {
+        let mut wall = 0.0;
+        while wall < seconds {
+            self.tick(tick, workload, test_len)?;
+            wall += tick;
+        }
+        Ok(())
+    }
+
+    /// Serve everything still queued (end-of-run flush so conservation
+    /// holds: every routed request completes). Runs arrival-free
+    /// service windows until all queues drain, so the backlog costs
+    /// real wall time and lockstep aging — reported throughput stays
+    /// capacity-bound instead of being inflated by a free backlog
+    /// dump.
+    pub fn flush(&mut self) -> Result<Vec<FleetCompletion>> {
+        let mut out = Vec::new();
+        while self.chips.iter().any(|c| c.queue_len() > 0) {
+            out.extend(
+                self.service_window(self.exec_seconds_per_batch,
+                                    false)?,
+            );
+        }
+        Ok(out)
+    }
+
+    /// Snapshot combining fleet counters with per-engine metrics.
+    pub fn summary(&self) -> FleetSummary {
+        FleetSummary::collect(&self.chips, &self.metrics)
+    }
+}
+
+/// Build an artifact-free fleet: `n_chips` analytic engines sharing one
+/// accuracy profile, with staggered programming ages and decorrelated
+/// outcome streams.
+pub fn analytic_fleet(
+    cfg: &FleetConfig,
+    profile: &AccuracyProfile,
+) -> Fleet<AnalyticEngine> {
+    let chips = (0..cfg.n_chips)
+        .map(|i| {
+            AnalyticEngine::new(
+                profile.clone(),
+                LifetimeClock::new(cfg.chip_age(i), cfg.accel),
+                cfg.batch.clone(),
+                cfg.seed ^ 0x9e37_79b9_7f4a_7c15u64
+                    .wrapping_mul(i as u64 + 1),
+            )
+        })
+        .collect();
+    Fleet::new(chips, cfg.policy, cfg.exec_seconds_per_batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rram::YEAR;
+
+    fn small_cfg(policy: BalancePolicy) -> FleetConfig {
+        FleetConfig {
+            n_chips: 3,
+            t0: 1.0,
+            stagger: YEAR,
+            accel: 1e5,
+            policy,
+            exec_seconds_per_batch: 0.001,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn staggered_ages_and_mean() {
+        let cfg = small_cfg(BalancePolicy::RoundRobin);
+        assert_eq!(cfg.chip_age(0), 1.0);
+        assert_eq!(cfg.chip_age(2), 1.0 + 2.0 * YEAR);
+        assert!((cfg.mean_age() - (1.0 + YEAR)).abs() < 1e-6);
+        let profile =
+            AccuracyProfile::uncompensated(0.9, 0.02, 0.5);
+        let fleet = analytic_fleet(&cfg, &profile);
+        assert_eq!(fleet.n_chips(), 3);
+        assert!((fleet.mean_device_age() - cfg.mean_age()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn tick_routes_serves_and_ages_in_lockstep() {
+        let cfg = small_cfg(BalancePolicy::LeastQueue);
+        let profile =
+            AccuracyProfile::uncompensated(1.0, 0.0, 0.5);
+        let mut fleet = analytic_fleet(&cfg, &profile);
+        let ages0: Vec<f64> =
+            fleet.chips.iter().map(|c| c.device_age()).collect();
+        let mut wl = Workload::new(300.0, 9);
+        let mut comps = Vec::new();
+        for _ in 0..10 {
+            comps.extend(fleet.tick(0.1, &mut wl, 64).unwrap());
+        }
+        comps.extend(fleet.flush().unwrap());
+        // Conservation: routed == served == arrivals, fleet-wide.
+        assert_eq!(fleet.metrics.total_routed(), comps.len());
+        assert_eq!(fleet.metrics.served, comps.len());
+        assert!(comps.len() > 150, "arrivals {}", comps.len());
+        // All chips aged together by ≈ 1 s of wall × accel (execution
+        // time counts toward the same window, so ages stay lockstep).
+        for (c, a0) in fleet.chips.iter().zip(&ages0) {
+            let aged = c.device_age() - a0;
+            assert!(
+                (aged - 1.0 * cfg.accel).abs() < 0.2 * cfg.accel,
+                "aged {aged}"
+            );
+        }
+        // Flat profile ⇒ everything correct.
+        assert!((fleet.metrics.accuracy() - 1.0).abs() < 1e-12);
+        let s = fleet.summary();
+        assert_eq!(s.served, comps.len());
+        assert!(s.throughput > 0.0);
+    }
+
+    #[test]
+    fn capacity_cap_leaves_backlog_for_next_tick() {
+        let mut cfg = small_cfg(BalancePolicy::RoundRobin);
+        cfg.n_chips = 1;
+        // 1 batch (32 reqs) per tick of 0.1 s.
+        cfg.exec_seconds_per_batch = 0.1;
+        let profile =
+            AccuracyProfile::uncompensated(1.0, 0.0, 0.5);
+        let mut fleet = analytic_fleet(&cfg, &profile);
+        let mut wl = Workload::new(2000.0, 3);
+        fleet.tick(0.1, &mut wl, 64).unwrap();
+        // ~200 arrivals, 32 served, rest queued.
+        assert!(fleet.metrics.per_chip[0].max_queue_depth > 100);
+        assert!(fleet.metrics.served <= 32);
+        let comps = fleet.flush().unwrap();
+        assert_eq!(
+            fleet.metrics.served,
+            fleet.metrics.total_routed()
+        );
+        assert!(!comps.is_empty());
+    }
+}

@@ -1,0 +1,214 @@
+//! Accuracy-versus-age profiles.
+//!
+//! The drift-aware balancer and the analytic chip engine both need a
+//! cheap answer to "what accuracy does the scheduler predict for a chip
+//! of age `t`?". A profile is the piecewise view of a compensation-set
+//! ladder: within the interval a set covers (`[t_k, t_{k+1})`, paper
+//! Eq. 9), accuracy starts at the set's trained estimate and decays
+//! linearly in `log10(t / t_k)` — matching the log-time drift kinetics
+//! the scheduler itself assumes (Alg. 1 advances `t` exponentially for
+//! exactly this reason). Profiles are either derived from a scheduled
+//! [`SetStore`] (each set carries its EVALSTATS accuracy) or built
+//! synthetically for artifact-free simulation.
+
+use crate::compensation::SetStore;
+
+/// One compensation era: the set programmed at `t_start` with its
+/// scheduler-estimated accuracy at that age.
+#[derive(Debug, Clone, Copy)]
+pub struct Segment {
+    pub t_start: f64,
+    pub accuracy: f64,
+}
+
+/// Piecewise log-time accuracy model over a device lifetime.
+#[derive(Debug, Clone)]
+pub struct AccuracyProfile {
+    /// Eras ordered by ascending `t_start`; never empty.
+    segments: Vec<Segment>,
+    /// Relative accuracy lost per decade of age within one era.
+    decay_per_decade: f64,
+    /// Accuracy never predicted below this (chance-level plateau).
+    floor: f64,
+}
+
+impl AccuracyProfile {
+    pub fn new(
+        mut segments: Vec<Segment>,
+        decay_per_decade: f64,
+        floor: f64,
+    ) -> AccuracyProfile {
+        assert!(!segments.is_empty(), "profile needs >= 1 segment");
+        assert!(decay_per_decade >= 0.0, "decay must be non-negative");
+        segments.sort_by(|a, b| a.t_start.partial_cmp(&b.t_start).unwrap());
+        AccuracyProfile {
+            segments,
+            decay_per_decade,
+            floor,
+        }
+    }
+
+    /// A never-recompensated device: one era starting at `t = 1 s`.
+    pub fn uncompensated(
+        a0: f64,
+        decay_per_decade: f64,
+        floor: f64,
+    ) -> AccuracyProfile {
+        AccuracyProfile::new(
+            vec![Segment {
+                t_start: 1.0,
+                accuracy: a0,
+            }],
+            decay_per_decade,
+            floor,
+        )
+    }
+
+    /// Derive from a scheduled store: one segment per compensation set,
+    /// using the accuracy estimate Alg. 1 recorded when it trained the
+    /// set.
+    pub fn from_store(
+        store: &SetStore,
+        decay_per_decade: f64,
+        floor: f64,
+    ) -> AccuracyProfile {
+        assert!(!store.is_empty(), "store has no sets");
+        AccuracyProfile::new(
+            store
+                .sets
+                .iter()
+                .map(|s| Segment {
+                    t_start: s.t_start,
+                    accuracy: s.accuracy,
+                })
+                .collect(),
+            decay_per_decade,
+            floor,
+        )
+    }
+
+    /// Synthetic ladder for artifact-free simulation: `n_sets` eras
+    /// log-spaced from 1 s to `t_max`, each recovering to `a0` minus a
+    /// small cumulative residual (later sets compensate slightly less
+    /// perfectly, as in the paper's measured tail).
+    pub fn synthetic(
+        n_sets: usize,
+        t_max: f64,
+        a0: f64,
+        decay_per_decade: f64,
+        floor: f64,
+    ) -> AccuracyProfile {
+        assert!(n_sets >= 1);
+        let ratio = if n_sets > 1 {
+            t_max.powf(1.0 / (n_sets as f64 - 1.0))
+        } else {
+            1.0
+        };
+        let segments = (0..n_sets)
+            .map(|k| Segment {
+                t_start: ratio.powi(k as i32),
+                accuracy: a0 - 0.002 * k as f64,
+            })
+            .collect();
+        AccuracyProfile::new(segments, decay_per_decade, floor)
+    }
+
+    /// Era covering age `t` (same selection rule as
+    /// [`SetStore::select_index`]: last era with `t_start <= t`).
+    pub fn segment_index(&self, t: f64) -> usize {
+        let pos = self
+            .segments
+            .partition_point(|seg| seg.t_start <= t);
+        pos.saturating_sub(1)
+    }
+
+    /// Predicted accuracy at device age `t`.
+    pub fn predict(&self, t: f64) -> f64 {
+        let seg = self.segments[self.segment_index(t)];
+        let decades = if t > seg.t_start {
+            (t / seg.t_start).log10()
+        } else {
+            0.0
+        };
+        (seg.accuracy - self.decay_per_decade * decades)
+            .clamp(self.floor, 1.0)
+    }
+
+    pub fn n_sets(&self) -> usize {
+        self.segments.len()
+    }
+
+    pub fn segments(&self) -> &[Segment] {
+        &self.segments
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compensation::CompSet;
+    use crate::rram::YEAR;
+    use crate::util::tensor::TensorMap;
+
+    #[test]
+    fn uncompensated_decays_per_decade_to_floor() {
+        let p = AccuracyProfile::uncompensated(0.9, 0.05, 0.1);
+        assert!((p.predict(1.0) - 0.9).abs() < 1e-12);
+        assert!((p.predict(10.0) - 0.85).abs() < 1e-12);
+        assert!((p.predict(100.0) - 0.80).abs() < 1e-12);
+        // Ages before the first era clamp to the era start.
+        assert!((p.predict(0.01) - 0.9).abs() < 1e-12);
+        // Deep time hits the floor.
+        assert!((p.predict(1e30) - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn compensation_resets_the_decay() {
+        let p = AccuracyProfile::new(
+            vec![
+                Segment { t_start: 1.0, accuracy: 0.9 },
+                Segment { t_start: 1e4, accuracy: 0.9 },
+            ],
+            0.05,
+            0.1,
+        );
+        // Just before the second era: four decades of decay.
+        assert!(p.predict(9.9e3) < 0.75);
+        // Right at the second era: recovered.
+        assert!((p.predict(1e4) - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn synthetic_ladder_spans_lifetime() {
+        let p = AccuracyProfile::synthetic(11, 10.0 * YEAR, 0.92, 0.02, 0.5);
+        assert_eq!(p.n_sets(), 11);
+        assert!((p.segments()[0].t_start - 1.0).abs() < 1e-9);
+        let last = p.segments()[10].t_start;
+        assert!((last / (10.0 * YEAR) - 1.0).abs() < 1e-6);
+        // Monotone era starts.
+        for w in p.segments().windows(2) {
+            assert!(w[0].t_start < w[1].t_start);
+        }
+        // Compensated accuracy stays near a0 across the whole lifetime.
+        for &t in &[1.0, 3600.0, 86_400.0, YEAR, 10.0 * YEAR] {
+            assert!(p.predict(t) > 0.85, "t={t}: {}", p.predict(t));
+        }
+    }
+
+    #[test]
+    fn from_store_uses_recorded_accuracies() {
+        let mut store = SetStore::new("m", "veraplus", 1, 7);
+        for (t, acc) in [(1.0, 0.91), (1e5, 0.88)] {
+            store.insert(CompSet {
+                t_start: t,
+                trainables: TensorMap::new(),
+                train_loss: 0.1,
+                accuracy: acc,
+            });
+        }
+        let p = AccuracyProfile::from_store(&store, 0.0, 0.1);
+        assert!((p.predict(2.0) - 0.91).abs() < 1e-12);
+        assert!((p.predict(2e5) - 0.88).abs() < 1e-12);
+        assert_eq!(p.segment_index(2e5), 1);
+    }
+}

@@ -1,0 +1,170 @@
+//! Shard router: assigns each arriving request to one chip.
+//!
+//! Three pluggable balancing policies:
+//!
+//! - **round-robin** — cyclic assignment, ignores chip state.
+//! - **least-queue** — the chip with the shortest queue (ties break to
+//!   the lowest index), classic join-shortest-queue.
+//! - **drift-aware** — the fleet-level use of the paper's scheduler
+//!   output: each chip is scored by the scheduler's *predicted accuracy
+//!   at its current device age* minus a queue-depth penalty, so traffic
+//!   prefers recently-programmed (or freshly recompensated) chips while
+//!   still spreading under load.
+//!
+//! Routing works on [`ChipView`] snapshots so the router never borrows
+//! the chips themselves; the fleet loop increments the routed chip's
+//! queue count between requests, which keeps all three policies
+//! well-behaved within a single arrival burst.
+
+use anyhow::{bail, Result};
+
+/// Balancing policy selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BalancePolicy {
+    RoundRobin,
+    LeastQueue,
+    DriftAware,
+}
+
+impl BalancePolicy {
+    pub const ALL: [BalancePolicy; 3] = [
+        BalancePolicy::RoundRobin,
+        BalancePolicy::LeastQueue,
+        BalancePolicy::DriftAware,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BalancePolicy::RoundRobin => "round-robin",
+            BalancePolicy::LeastQueue => "least-queue",
+            BalancePolicy::DriftAware => "drift-aware",
+        }
+    }
+
+    pub fn parse(name: &str) -> Result<BalancePolicy> {
+        match name {
+            "round-robin" | "rr" => Ok(BalancePolicy::RoundRobin),
+            "least-queue" | "lq" => Ok(BalancePolicy::LeastQueue),
+            "drift-aware" | "da" => Ok(BalancePolicy::DriftAware),
+            other => bail!(
+                "unknown balance policy '{other}' \
+                 (round-robin | least-queue | drift-aware)"
+            ),
+        }
+    }
+}
+
+/// Per-chip state snapshot the router scores against.
+#[derive(Debug, Clone, Copy)]
+pub struct ChipView {
+    pub queue_len: usize,
+    /// Scheduler-predicted accuracy at the chip's current device age.
+    pub predicted_acc: f64,
+}
+
+/// The shard router.
+#[derive(Debug, Clone)]
+pub struct Router {
+    pub policy: BalancePolicy,
+    /// Drift-aware score = predicted_acc − queue_penalty · queue_len;
+    /// the default trades ~5 queued requests against 1% of accuracy.
+    pub queue_penalty: f64,
+    rr_next: usize,
+}
+
+impl Router {
+    pub fn new(policy: BalancePolicy) -> Router {
+        Router {
+            policy,
+            queue_penalty: 0.002,
+            rr_next: 0,
+        }
+    }
+
+    /// Pick the chip for the next request. Ties break to the lowest
+    /// chip index, which keeps routing deterministic.
+    pub fn route(&mut self, chips: &[ChipView]) -> usize {
+        assert!(!chips.is_empty(), "routing needs >= 1 chip");
+        match self.policy {
+            BalancePolicy::RoundRobin => {
+                let i = self.rr_next % chips.len();
+                self.rr_next = self.rr_next.wrapping_add(1);
+                i
+            }
+            BalancePolicy::LeastQueue => {
+                let mut best = 0usize;
+                for (i, c) in chips.iter().enumerate().skip(1) {
+                    if c.queue_len < chips[best].queue_len {
+                        best = i;
+                    }
+                }
+                best
+            }
+            BalancePolicy::DriftAware => {
+                let score = |c: &ChipView| {
+                    c.predicted_acc
+                        - self.queue_penalty * c.queue_len as f64
+                };
+                let mut best = 0usize;
+                for (i, c) in chips.iter().enumerate().skip(1) {
+                    if score(c) > score(&chips[best]) {
+                        best = i;
+                    }
+                }
+                best
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn views(specs: &[(usize, f64)]) -> Vec<ChipView> {
+        specs
+            .iter()
+            .map(|&(queue_len, predicted_acc)| ChipView {
+                queue_len,
+                predicted_acc,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut r = Router::new(BalancePolicy::RoundRobin);
+        let v = views(&[(0, 0.9), (0, 0.9), (0, 0.9)]);
+        let picks: Vec<usize> = (0..6).map(|_| r.route(&v)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn least_queue_picks_shortest_with_low_index_ties() {
+        let mut r = Router::new(BalancePolicy::LeastQueue);
+        assert_eq!(r.route(&views(&[(4, 0.9), (1, 0.9), (3, 0.9)])), 1);
+        assert_eq!(r.route(&views(&[(2, 0.9), (2, 0.9), (5, 0.9)])), 0);
+    }
+
+    #[test]
+    fn drift_aware_prefers_accuracy_then_balances_by_queue() {
+        let mut r = Router::new(BalancePolicy::DriftAware);
+        // Equal load: highest predicted accuracy wins.
+        assert_eq!(r.route(&views(&[(0, 0.85), (0, 0.91), (0, 0.88)])), 1);
+        // The 1%-better chip loses once it is >5 requests deeper.
+        assert_eq!(r.route(&views(&[(0, 0.90), (6, 0.91)])), 0);
+        assert_eq!(r.route(&views(&[(0, 0.90), (4, 0.91)])), 1);
+    }
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for p in BalancePolicy::ALL {
+            assert_eq!(BalancePolicy::parse(p.name()).unwrap(), p);
+        }
+        assert_eq!(
+            BalancePolicy::parse("rr").unwrap(),
+            BalancePolicy::RoundRobin
+        );
+        assert!(BalancePolicy::parse("nope").is_err());
+    }
+}

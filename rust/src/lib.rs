@@ -10,9 +10,12 @@
 //! - `rram`         — 1T1R device/array simulator + drift models.
 //! - `coordinator`  — the paper's contribution: drift-aware scheduling
 //!   (Alg. 1), compensation training, set management, serving.
+//! - `fleet`        — multi-chip sharded serving: staggered programming
+//!   ages, round-robin/least-queue/drift-aware routing, fleet metrics.
 //! - `compensation` — VeRA+/VeRA/LoRA/BN-calibration parameter containers,
 //!   storage accounting, external-memory image format.
-//! - `costmodel`    — 22 nm area/energy/storage estimates (Tables I,III–V).
+//! - `costmodel`    — 22 nm area/energy/storage estimates (Tables I,III–V)
+//!   plus fleet-level totals.
 //! - `data`         — synthetic image/token tasks (dataset substitutions).
 //! - `harness`      — regenerates every paper table and figure.
 
@@ -20,6 +23,7 @@ pub mod compensation;
 pub mod coordinator;
 pub mod costmodel;
 pub mod data;
+pub mod fleet;
 pub mod harness;
 pub mod nn;
 pub mod rram;

@@ -6,6 +6,7 @@
 //! vera-plus train-backbone --model resnet20_easy [--steps 600]
 //! vera-plus schedule       --model resnet20_easy [--drop 0.05] [...]
 //! vera-plus serve          --model resnet20_easy --store results/...
+//! vera-plus fleet          --chips 8 --policy drift-aware [...]
 //! vera-plus experiment     --id fig3|fig4|fig5|fig6|table2..5|all
 //! vera-plus report         [--table 1]
 //! vera-plus info
@@ -45,6 +46,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("train-backbone") => cmd_train_backbone(args),
         Some("schedule") => cmd_schedule(args),
         Some("serve") => cmd_serve(args),
+        Some("fleet") => cmd_fleet(args),
         Some("experiment") => cmd_experiment(args),
         Some("report") => cmd_report(args),
         Some("info") => cmd_info(),
@@ -65,6 +67,10 @@ fn print_help() {
          \u{20}                (--model, --drop, --instances, --epochs, --out)\n  \
          serve           Serve an accelerated lifetime against a store\n  \
          \u{20}                (--model, --store, --rate, --seconds, --batch)\n  \
+         fleet           Multi-chip sharded serving with staggered drift\n  \
+         \u{20}                ages (--chips, --stagger-years, --policy\n  \
+         \u{20}                 round-robin|least-queue|drift-aware, --rate,\n  \
+         \u{20}                 --seconds, --engine analytic|pjrt, --store)\n  \
          experiment      Regenerate a paper table/figure\n  \
          \u{20}                (--id fig3|fig4|fig5|fig6|table2..table5|all,\n  \
          \u{20}                 --quick | --full)\n  \
@@ -228,6 +234,166 @@ fn cmd_serve(args: &Args) -> Result<()> {
         m.set_switches,
         1e3 * m.latency_percentile(0.5),
         1e3 * m.latency_percentile(0.99),
+    );
+    Ok(())
+}
+
+/// Multi-chip fleet serving. The analytic engine (default) needs no
+/// artifacts: chip outcomes follow an accuracy-vs-age profile, loaded
+/// from a scheduled store when `--store` exists, synthetic otherwise.
+/// `--engine pjrt` runs real `Server` chips against compiled artifacts.
+fn cmd_fleet(args: &Args) -> Result<()> {
+    use vera_plus::costmodel::{
+        cost_method, paper_resnet20_layers, BnCalibCost, FleetCost,
+        Method,
+    };
+    use vera_plus::fleet::{
+        analytic_fleet, AccuracyProfile, BalancePolicy, Fleet,
+        FleetConfig,
+    };
+
+    let n_chips = args.get_usize("chips", 8)?;
+    anyhow::ensure!(n_chips >= 1, "--chips must be at least 1");
+    let method = args.get_or("method", "veraplus");
+    let rank = args.get_usize("rank", 1)?;
+    let cost_kind = match method.as_str() {
+        "veraplus" => Method::VeraPlus,
+        "vera" => Method::Vera,
+        "lora" => Method::Lora,
+        other => {
+            anyhow::bail!("unknown method '{other}' (veraplus|vera|lora)")
+        }
+    };
+    // Sets per chip for the cost roll-up; overwritten by the actual
+    // ladder length when a scheduled store is loaded.
+    let mut cost_sets = args.get_usize("sets", 11)?;
+    let seconds = args.get_f64("seconds", 10.0)?;
+    let tick = args.get_f64("tick", 0.25)?;
+    let rate = args.get_f64("rate", 2000.0)?;
+    let policy = BalancePolicy::parse(&args.get_or("policy",
+                                                   "drift-aware"))?;
+    let cfg = FleetConfig {
+        n_chips,
+        t0: args.get_f64("t0-days", 30.0)? * 86_400.0,
+        stagger: args.get_f64("stagger-years", 1.0)? * YEAR,
+        accel: args.get_f64("accel", 1e6)?,
+        policy,
+        batch: BatchPolicy {
+            max_batch: args.get_usize("batch", 32)?,
+            max_wait: 0.01,
+        },
+        exec_seconds_per_batch: args.get_f64("exec-ms", 2.0)? * 1e-3,
+        seed: args.get_u64("seed", 0xf1ee7)?,
+    };
+    println!(
+        "fleet: {} chips, ages {} .. {}, policy {}, {} req/s for {}s",
+        n_chips,
+        fmt_time(cfg.chip_age(0)),
+        fmt_time(cfg.chip_age(n_chips.saturating_sub(1))),
+        policy.name(),
+        rate,
+        seconds
+    );
+
+    let engine = args.get_or("engine", "analytic");
+    let mut workload = Workload::new(rate, cfg.seed ^ 0x57a6);
+    let summary = match engine.as_str() {
+        "analytic" => {
+            let profile = match args.get("store") {
+                Some(stem) => {
+                    let store = vera_plus::compensation::SetStore::load(
+                        std::path::Path::new(stem),
+                    )?;
+                    anyhow::ensure!(
+                        !store.is_empty(),
+                        "store {stem} has no compensation sets"
+                    );
+                    println!(
+                        "profile: {} scheduled sets from {stem}",
+                        store.len()
+                    );
+                    cost_sets = store.len();
+                    AccuracyProfile::from_store(&store, 0.02, 0.5)
+                }
+                None => AccuracyProfile::synthetic(
+                    cost_sets,
+                    10.0 * YEAR,
+                    0.92,
+                    0.02,
+                    0.5,
+                ),
+            };
+            let mut fleet = analytic_fleet(&cfg, &profile);
+            fleet.run(seconds, tick, &mut workload, 512)?;
+            fleet.flush()?;
+            fleet.summary()
+        }
+        "pjrt" => {
+            let model = args.get_or("model", "resnet20_easy");
+            let store_path = args.get_or(
+                "store",
+                &format!("results/store_{model}_{method}_r{rank}"),
+            );
+            let store = vera_plus::compensation::SetStore::load(
+                std::path::Path::new(&store_path),
+            )?;
+            anyhow::ensure!(
+                !store.is_empty(),
+                "store {store_path} has no compensation sets"
+            );
+            cost_sets = store.len();
+            let ctx = Ctx::new(budget(args))?;
+            let dep = ctx.deployment(
+                &model,
+                &method,
+                rank,
+                Box::new(IbmDrift::default()),
+            )?;
+            let chips: Vec<Server> = (0..n_chips)
+                .map(|i| {
+                    Server::new(
+                        &dep,
+                        &store,
+                        LifetimeClock::new(cfg.chip_age(i), cfg.accel),
+                        cfg.batch.clone(),
+                        cfg.seed ^ (i as u64 + 1),
+                    )
+                })
+                .collect();
+            let mut fleet =
+                Fleet::new(chips, policy, cfg.exec_seconds_per_batch);
+            fleet.run(
+                seconds,
+                tick,
+                &mut workload,
+                dep.dataset.test_len(),
+            )?;
+            fleet.flush()?;
+            fleet.summary()
+        }
+        other => anyhow::bail!("unknown engine '{other}' (analytic|pjrt)"),
+    };
+    summary.print();
+
+    // Fleet-level cost roll-up at the served method/rank/set-count
+    // (always costed on the paper's ResNet-20 geometry, Tables IV/V).
+    let layers = paper_resnet20_layers(10);
+    let per_chip =
+        cost_method(&layers, 64, 64, cost_kind, rank, cost_sets);
+    let bn = BnCalibCost::for_cifar_like(&layers, 50_000, 3072);
+    let fc = FleetCost::new(n_chips, per_chip, bn);
+    println!(
+        "\nfleet cost ({} chips, {} r={rank}, {cost_sets} sets): \
+         sets {:.1} KB total vs BN-calibration {:.0} KB ({:.0}x); \
+         comp SRAM {:.3} mm2; serving power @{:.0} req/s: {:.3} W",
+        n_chips,
+        cost_kind.name(),
+        fc.total_storage_kb(),
+        fc.bn_total_storage_kb(),
+        fc.storage_advantage(),
+        fc.total_sram_area_mm2(),
+        rate,
+        fc.serving_power_w(rate),
     );
     Ok(())
 }

@@ -1,0 +1,300 @@
+//! Property tests for the fleet subsystem (pure logic, no PJRT):
+//! routing conservation, policy behavior, capacity scaling, and the
+//! analytic engine's statistical fidelity.
+
+use vera_plus::coordinator::serve::{BatchPolicy, Workload};
+use vera_plus::fleet::{
+    analytic_fleet, AccuracyProfile, BalancePolicy, FleetConfig,
+};
+use vera_plus::rram::YEAR;
+use vera_plus::util::prop::{forall, Gen};
+
+fn cfg(
+    n_chips: usize,
+    policy: BalancePolicy,
+    seed: u64,
+) -> FleetConfig {
+    FleetConfig {
+        n_chips,
+        t0: 30.0 * 86_400.0,
+        stagger: YEAR,
+        accel: 1e5,
+        policy,
+        batch: BatchPolicy {
+            max_batch: 8,
+            max_wait: 0.01,
+        },
+        exec_seconds_per_batch: 0.001,
+        seed,
+    }
+}
+
+/// Every submitted request is served exactly once, across chips, under
+/// every balancing policy: completion ids are exactly {0, …, N−1} with
+/// no duplicates and no drops, and per-chip served counts sum to the
+/// fleet total.
+#[test]
+fn prop_every_request_served_exactly_once_per_policy() {
+    forall(
+        "fleet_exactly_once",
+        21,
+        24,
+        |rng| {
+            (
+                Gen::usize_in(rng, 1, 5),
+                Gen::f64_in(rng, 50.0, 800.0),
+                Gen::usize_in(rng, 2, 12),
+                rng.next_u64(),
+            )
+        },
+        |&(n_chips, rate, ticks, seed)| {
+            for policy in BalancePolicy::ALL {
+                let profile =
+                    AccuracyProfile::synthetic(5, 10.0 * YEAR, 0.9,
+                                               0.02, 0.5);
+                let mut fleet =
+                    analytic_fleet(&cfg(n_chips, policy, seed),
+                                   &profile);
+                let mut wl = Workload::new(rate, seed ^ 0xa11);
+                let mut ids: Vec<u64> = Vec::new();
+                for _ in 0..ticks {
+                    for fc in fleet
+                        .tick(0.1, &mut wl, 64)
+                        .map_err(|e| e.to_string())?
+                    {
+                        ids.push(fc.completion.id);
+                    }
+                }
+                for fc in fleet.flush().map_err(|e| e.to_string())? {
+                    ids.push(fc.completion.id);
+                }
+                let routed = fleet.metrics.total_routed();
+                if ids.len() != routed {
+                    return Err(format!(
+                        "{}: {} completions vs {} routed",
+                        policy.name(),
+                        ids.len(),
+                        routed
+                    ));
+                }
+                ids.sort_unstable();
+                for (want, &got) in (0..routed as u64).zip(&ids) {
+                    if got != want {
+                        return Err(format!(
+                            "{}: id {want} missing or duplicated \
+                             (saw {got})",
+                            policy.name()
+                        ));
+                    }
+                }
+                let per_chip: usize = fleet
+                    .metrics
+                    .per_chip
+                    .iter()
+                    .map(|c| c.served)
+                    .sum();
+                if per_chip != fleet.metrics.served {
+                    return Err(format!(
+                        "{}: per-chip served {} != fleet {}",
+                        policy.name(),
+                        per_chip,
+                        fleet.metrics.served
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Under equal (drained) load, drift-aware routing sends traffic to the
+/// youngest chip — the one whose predicted accuracy is highest on a
+/// monotonically decaying (uncompensated) profile.
+#[test]
+fn prop_drift_aware_prefers_younger_chips_under_equal_load() {
+    forall(
+        "fleet_drift_aware_youngest",
+        22,
+        32,
+        |rng| {
+            (
+                Gen::usize_in(rng, 2, 5),
+                Gen::f64_in(rng, 1.0, 3.0),
+                rng.next_u64(),
+            )
+        },
+        |&(n_chips, stagger_years, seed)| {
+            // Strictly decaying accuracy, far from the floor.
+            let profile =
+                AccuracyProfile::uncompensated(0.9, 0.08, 0.01);
+            let mut c =
+                cfg(n_chips, BalancePolicy::DriftAware, seed);
+            c.stagger = stagger_years * YEAR;
+            let mut fleet = analytic_fleet(&c, &profile);
+            // Low rate + fast chips: queues fully drain every tick, so
+            // the queue penalty never overcomes the accuracy gap and
+            // every request should land on chip 0 (the youngest).
+            let mut wl = Workload::new(30.0, seed ^ 0x70);
+            for _ in 0..10 {
+                fleet.tick(0.2, &mut wl, 64).map_err(|e| e.to_string())?;
+            }
+            let routed: Vec<usize> = fleet
+                .metrics
+                .per_chip
+                .iter()
+                .map(|c| c.routed)
+                .collect();
+            let total: usize = routed.iter().sum();
+            if total == 0 {
+                return Err("no arrivals generated".into());
+            }
+            if routed[0] != total {
+                return Err(format!(
+                    "youngest chip should take all equal-load traffic: \
+                     routed {routed:?}"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Round-robin spreads a burst uniformly: after any single tick the
+/// per-chip routed counts differ by at most one.
+#[test]
+fn prop_round_robin_is_uniform_within_a_tick() {
+    forall(
+        "fleet_round_robin_uniform",
+        23,
+        32,
+        |rng| {
+            (
+                Gen::usize_in(rng, 2, 6),
+                Gen::f64_in(rng, 200.0, 2000.0),
+                rng.next_u64(),
+            )
+        },
+        |&(n_chips, rate, seed)| {
+            let profile =
+                AccuracyProfile::uncompensated(0.9, 0.08, 0.01);
+            let mut fleet = analytic_fleet(
+                &cfg(n_chips, BalancePolicy::RoundRobin, seed),
+                &profile,
+            );
+            let mut wl = Workload::new(rate, seed ^ 0x33);
+            fleet.tick(0.5, &mut wl, 64).map_err(|e| e.to_string())?;
+            let routed: Vec<usize> = fleet
+                .metrics
+                .per_chip
+                .iter()
+                .map(|c| c.routed)
+                .collect();
+            let (lo, hi) = (
+                *routed.iter().min().unwrap(),
+                *routed.iter().max().unwrap(),
+            );
+            if hi - lo > 1 {
+                return Err(format!("uneven round-robin: {routed:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Least-queue balances a burst arriving into empty queues: counts
+/// differ by at most one after one tick's routing.
+#[test]
+fn prop_least_queue_balances_a_burst() {
+    forall(
+        "fleet_least_queue_balance",
+        24,
+        32,
+        |rng| {
+            (
+                Gen::usize_in(rng, 2, 6),
+                Gen::f64_in(rng, 200.0, 2000.0),
+                rng.next_u64(),
+            )
+        },
+        |&(n_chips, rate, seed)| {
+            let profile =
+                AccuracyProfile::uncompensated(0.9, 0.08, 0.01);
+            let mut fleet = analytic_fleet(
+                &cfg(n_chips, BalancePolicy::LeastQueue, seed),
+                &profile,
+            );
+            let mut wl = Workload::new(rate, seed ^ 0x44);
+            fleet.tick(0.5, &mut wl, 64).map_err(|e| e.to_string())?;
+            let routed: Vec<usize> = fleet
+                .metrics
+                .per_chip
+                .iter()
+                .map(|c| c.routed)
+                .collect();
+            let (lo, hi) = (
+                *routed.iter().min().unwrap(),
+                *routed.iter().max().unwrap(),
+            );
+            if hi - lo > 1 {
+                return Err(format!("uneven least-queue: {routed:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Fleet-wide accuracy converges to the profile's predicted accuracy
+/// (flat profile ⇒ exact Bernoulli rate, CLT tolerance).
+#[test]
+fn prop_fleet_accuracy_tracks_profile() {
+    forall(
+        "fleet_accuracy_tracks_profile",
+        25,
+        12,
+        |rng| (Gen::f64_in(rng, 0.55, 0.95), rng.next_u64()),
+        |&(p, seed)| {
+            let profile = AccuracyProfile::uncompensated(p, 0.0, 0.1);
+            let mut fleet = analytic_fleet(
+                &cfg(4, BalancePolicy::RoundRobin, seed),
+                &profile,
+            );
+            let mut wl = Workload::new(1500.0, seed ^ 0x99);
+            for _ in 0..20 {
+                fleet.tick(0.2, &mut wl, 64).map_err(|e| e.to_string())?;
+            }
+            fleet.flush().map_err(|e| e.to_string())?;
+            // ~6000 draws: σ ≈ 0.0065 at worst; 5σ ≈ 0.033.
+            let acc = fleet.metrics.accuracy();
+            if (acc - p).abs() > 0.04 {
+                return Err(format!("accuracy {acc} vs p {p}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Adding chips adds reachable capacity: under saturating load a
+/// 3-chip fleet serves at least twice what a single chip serves in the
+/// same serving window.
+#[test]
+fn throughput_scales_with_chip_count() {
+    let profile = AccuracyProfile::synthetic(5, 10.0 * YEAR, 0.9, 0.02,
+                                             0.5);
+    let served = |n_chips: usize| -> usize {
+        let mut c = cfg(n_chips, BalancePolicy::LeastQueue, 7);
+        // Capacity 8/0.05 = 160 req/s per chip; offer 2 000 req/s.
+        c.exec_seconds_per_batch = 0.05;
+        let mut fleet = analytic_fleet(&c, &profile);
+        let mut wl = Workload::new(2000.0, 11);
+        fleet
+            .run(2.0, 0.1, &mut wl, 64)
+            .expect("analytic fleet cannot fail");
+        fleet.metrics.served
+    };
+    let one = served(1);
+    let three = served(3);
+    assert!(
+        three >= 2 * one,
+        "3 chips served {three} vs 1 chip {one}"
+    );
+}

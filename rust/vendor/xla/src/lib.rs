@@ -1,0 +1,261 @@
+//! Vendored, offline stub of the `xla` (xla-rs) PJRT bindings.
+//!
+//! The build environment has neither crates.io access nor the PJRT C
+//! library, so this path crate provides the exact API surface
+//! `vera_plus::runtime` compiles against. Host-side literal plumbing
+//! ([`Literal`] construction, shape inspection, typed extraction) is
+//! fully functional; everything that would require the native PJRT
+//! runtime ([`PjRtClient::cpu`], compilation, execution) returns a
+//! descriptive [`Error`] instead. All integration tests and examples
+//! already skip when artifacts/PJRT are unavailable, so the crate
+//! degrades to the pure-simulation paths. Swapping the real xla-rs
+//! bindings back in is a one-line `Cargo.toml` change; see DESIGN.md
+//! §Runtime.
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error: carries the reason PJRT functionality is unavailable.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what} unavailable: built against the offline xla stub \
+         (swap in xla-rs to enable PJRT execution; see DESIGN.md)"
+    ))
+}
+
+/// XLA element types (subset + padding variants so caller-side `match`
+/// statements keep a meaningful wildcard arm).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S8,
+    S32,
+    S64,
+    U8,
+    U32,
+    F16,
+    F32,
+    F64,
+}
+
+impl ElementType {
+    /// Bytes per element.
+    pub fn size(&self) -> usize {
+        match self {
+            ElementType::Pred | ElementType::S8 | ElementType::U8 => 1,
+            ElementType::F16 => 2,
+            ElementType::S32 | ElementType::U32 | ElementType::F32 => 4,
+            ElementType::S64 | ElementType::F64 => 8,
+        }
+    }
+}
+
+/// Array shape: element type + dimensions.
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    ty: ElementType,
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Host types that can be extracted from a [`Literal`].
+pub trait NativeType: Copy {
+    const TY: ElementType;
+    fn from_le(bytes: &[u8]) -> Self;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn from_le(b: &[u8]) -> f32 {
+        f32::from_le_bytes([b[0], b[1], b[2], b[3]])
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn from_le(b: &[u8]) -> i32 {
+        i32::from_le_bytes([b[0], b[1], b[2], b[3]])
+    }
+}
+
+impl NativeType for i8 {
+    const TY: ElementType = ElementType::S8;
+    fn from_le(b: &[u8]) -> i8 {
+        i8::from_le_bytes([b[0]])
+    }
+}
+
+/// A host-resident literal (dense array of one element type).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<i64>,
+    data: Vec<u8>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let numel: usize = dims.iter().product();
+        if numel * ty.size() != data.len() {
+            return Err(Error(format!(
+                "literal data length {} != shape {dims:?} × {} bytes",
+                data.len(),
+                ty.size()
+            )));
+        }
+        Ok(Literal {
+            ty,
+            dims: dims.iter().map(|&d| d as i64).collect(),
+            data: data.to_vec(),
+        })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(ArrayShape {
+            ty: self.ty,
+            dims: self.dims.clone(),
+        })
+    }
+
+    /// Extract the data as a typed host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if self.ty != T::TY {
+            return Err(Error(format!(
+                "literal is {:?}, requested {:?}",
+                self.ty,
+                T::TY
+            )));
+        }
+        Ok(self
+            .data
+            .chunks_exact(self.ty.size())
+            .map(T::from_le)
+            .collect())
+    }
+
+    /// Decompose a tuple literal. The stub never produces tuples (they
+    /// only come back from PJRT execution), so this is unreachable in
+    /// practice.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(unavailable("tuple literal decomposition"))
+    }
+}
+
+/// Parsed HLO module (stub: loading requires the native parser).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        Err(unavailable("HLO text parsing"))
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device buffer handle (stub).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("device-to-host transfer"))
+    }
+}
+
+/// Compiled executable handle (stub).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PJRT execution"))
+    }
+}
+
+/// PJRT client handle (stub: construction always fails, which routes
+/// every caller onto its artifacts-missing skip path).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PJRT CPU client"))
+    }
+
+    pub fn compile(
+        &self,
+        _comp: &XlaComputation,
+    ) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("XLA compilation"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let data: Vec<u8> = [1.0f32, -2.5, 3.25]
+            .iter()
+            .flat_map(|v| v.to_le_bytes())
+            .collect();
+        let lit = Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &[3],
+            &data,
+        )
+        .unwrap();
+        let shape = lit.array_shape().unwrap();
+        assert_eq!(shape.ty(), ElementType::F32);
+        assert_eq!(shape.dims(), &[3]);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, -2.5, 3.25]);
+        assert!(lit.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn literal_rejects_bad_length() {
+        assert!(Literal::create_from_shape_and_untyped_data(
+            ElementType::S32,
+            &[2, 2],
+            &[0u8; 3],
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn client_reports_stub() {
+        let err = PjRtClient::cpu().err().unwrap();
+        assert!(err.to_string().contains("offline xla stub"));
+    }
+}
