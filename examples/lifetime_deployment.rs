@@ -163,11 +163,12 @@ fn main() -> anyhow::Result<()> {
         m.set_switches,
         m.served as f64 / real
     );
+    let lat = m.latency_percentiles(&[0.5, 0.9, 0.99]);
     println!(
         "latency p50 {:.1} ms  p90 {:.1} ms  p99 {:.1} ms (virtual)",
-        1e3 * m.latency_percentile(0.5),
-        1e3 * m.latency_percentile(0.9),
-        1e3 * m.latency_percentile(0.99)
+        1e3 * lat[0],
+        1e3 * lat[1],
+        1e3 * lat[2]
     );
     Ok(())
 }

@@ -93,6 +93,7 @@ fn main() -> anyhow::Result<()> {
             wall += 0.25;
         }
         let m = &server.metrics;
+        let lat = m.latency_percentiles(&[0.5, 0.99]);
         println!(
             "rate {rate:>6.0} req/s | served {:>6} | acc {:.2}% | \
              occupancy {:.2} | switches {:>2} | p50 {:.1} ms p99 {:.1} ms",
@@ -100,8 +101,8 @@ fn main() -> anyhow::Result<()> {
             100.0 * m.accuracy(),
             m.mean_occupancy(),
             m.set_switches,
-            1e3 * m.latency_percentile(0.5),
-            1e3 * m.latency_percentile(0.99)
+            1e3 * lat[0],
+            1e3 * lat[1]
         );
     }
     Ok(())

@@ -89,6 +89,22 @@ fn main() -> anyhow::Result<()> {
         throughputs[0].1, throughputs[1].1, throughputs[2].1
     );
 
+    // Host-side event-loop cost: the same saturated 16-chip run with
+    // the chip-service fan-out pinned to one thread vs the machine
+    // default. Simulated results are bit-identical either way; only
+    // host wall time differs.
+    std::env::set_var("VERA_THREADS", "1");
+    let serial = bench.bench("fleet_event_loop/16_chips/1_thread", || {
+        std::hint::black_box(simulate(16, &profile));
+    });
+    std::env::remove_var("VERA_THREADS");
+    if let Some(par) = bench.find("fleet_event_loop/16_chips") {
+        println!(
+            "event-loop thread fan-out speedup at 16 chips: {:.2}x",
+            serial.median_ns / par.median_ns
+        );
+    }
+
     bench.write_json("fleet_scale")?;
     Ok(())
 }

@@ -120,14 +120,32 @@ impl ServeMetrics {
     pub fn latency_percentile(&self, p: f64) -> f64 {
         percentile(&self.latencies, p)
     }
+
+    /// Several latency quantiles from one sorted scratch copy —
+    /// metrics readers asking for p50/p90/p99 together pay for one
+    /// sort instead of one clone-and-select per quantile.
+    pub fn latency_percentiles(&self, ps: &[f64]) -> Vec<f64> {
+        let mut v = self.latencies.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        ps.iter().map(|&p| percentile_sorted(&v, p)).collect()
+    }
 }
 
 /// Percentile over unsorted samples (shared by serve and fleet
-/// metrics). Returns 0 for an empty slice.
+/// metrics). Returns 0 for an empty slice. O(n) selection, not a full
+/// sort — for several quantiles of the same samples, sort once and use
+/// [`percentile_sorted`] instead.
 pub fn percentile(samples: &[f64], p: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
     let mut v = samples.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    percentile_sorted(&v, p)
+    let idx = (((v.len() as f64 - 1.0) * p).round() as usize)
+        .min(v.len() - 1);
+    let (_, x, _) = v.select_nth_unstable_by(idx, |a, b| {
+        a.partial_cmp(b).unwrap()
+    });
+    *x
 }
 
 /// Percentile over already-sorted samples (one sort, many quantiles).
@@ -472,6 +490,29 @@ mod tests {
         m.latencies = vec![0.1, 0.2, 0.3, 0.4, 1.0];
         assert!((m.latency_percentile(0.5) - 0.3).abs() < 1e-9);
         assert!((m.latency_percentile(1.0) - 1.0).abs() < 1e-9);
+        assert_eq!(
+            m.latency_percentiles(&[0.5, 1.0]),
+            vec![0.3, 1.0]
+        );
+    }
+
+    #[test]
+    fn percentile_selection_matches_full_sort() {
+        // The select_nth_unstable path must agree with sort-then-index
+        // for every quantile, unsorted input, duplicates included.
+        let samples =
+            vec![5.0, 1.0, 3.0, 3.0, 2.0, 9.0, 0.5, 7.0, 7.0, 4.0];
+        let mut sorted = samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for p in [0.0, 0.1, 0.25, 0.5, 0.77, 0.9, 0.99, 1.0] {
+            assert_eq!(
+                percentile(&samples, p),
+                percentile_sorted(&sorted, p),
+                "p = {p}"
+            );
+        }
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        assert_eq!(percentile(&[2.5], 0.99), 2.5);
     }
 
     #[test]

@@ -26,9 +26,14 @@ use crate::fleet::profile::AccuracyProfile;
 use crate::util::rng::Pcg64;
 use anyhow::Result;
 use std::collections::VecDeque;
+use std::sync::Arc;
 
 /// One fleet shard's serving surface.
-pub trait ChipEngine {
+///
+/// `Send` so the fleet event loop can fan the per-chip service windows
+/// over worker threads (each chip is owned by exactly one thread per
+/// window; chips never share mutable state).
+pub trait ChipEngine: Send {
     /// Enqueue a routed request.
     fn submit(&mut self, req: Request);
 
@@ -101,12 +106,14 @@ impl ChipEngine for Server<'_> {
 }
 
 /// Artifact-free chip: profile-driven outcomes, server-identical
-/// queueing/batching/era accounting.
+/// queueing/batching/era accounting. The accuracy profile is shared
+/// across the fleet via `Arc` — one ladder, N chips reading it —
+/// instead of one deep clone per chip.
 pub struct AnalyticEngine {
     pub clock: LifetimeClock,
     pub policy: BatchPolicy,
     pub metrics: ServeMetrics,
-    profile: AccuracyProfile,
+    profile: Arc<AccuracyProfile>,
     queue: VecDeque<Request>,
     active_segment: Option<usize>,
     rng: Pcg64,
@@ -115,7 +122,7 @@ pub struct AnalyticEngine {
 
 impl AnalyticEngine {
     pub fn new(
-        profile: AccuracyProfile,
+        profile: Arc<AccuracyProfile>,
         clock: LifetimeClock,
         policy: BatchPolicy,
         seed: u64,
@@ -227,7 +234,7 @@ mod tests {
 
     fn engine(p: f64) -> AnalyticEngine {
         AnalyticEngine::new(
-            AccuracyProfile::uncompensated(p, 0.0, 0.0),
+            Arc::new(AccuracyProfile::uncompensated(p, 0.0, 0.0)),
             LifetimeClock::new(1.0, 1e6),
             BatchPolicy {
                 max_batch: 8,

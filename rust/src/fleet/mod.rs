@@ -40,7 +40,15 @@ pub use router::{BalancePolicy, ChipView, Router};
 use crate::coordinator::serve::{
     BatchPolicy, Completion, LifetimeClock, Workload,
 };
+use crate::util::parallel;
 use anyhow::Result;
+use std::sync::Arc;
+
+/// Fleet-wide queued requests below which a service window stays on
+/// the serial path: fanning a handful of cheap analytic drains over
+/// threads costs more than it saves. Results are identical either way
+/// (chips are independent); only wall time differs.
+const PARALLEL_QUEUE_MIN: usize = 512;
 
 /// Fleet assembly parameters.
 #[derive(Debug, Clone)]
@@ -110,6 +118,12 @@ pub struct Fleet<E: ChipEngine> {
     /// window; repaid by shortening subsequent idle advances so all
     /// lifetime clocks stay in lockstep.
     age_debt: Vec<f64>,
+    /// Completions produced in a service window that ended in an
+    /// error: the healthy chips had already drained (their requests
+    /// left the queues), so these are held here and delivered at the
+    /// front of the next successful window instead of being dropped —
+    /// exactly-once delivery survives a failed tick.
+    pending: Vec<FleetCompletion>,
     /// Reference clock handed to the workload generator; request
     /// arrival ages are re-stamped with the routed chip's age.
     ref_clock: LifetimeClock,
@@ -131,6 +145,7 @@ impl<E: ChipEngine> Fleet<E> {
             exec_seconds_per_batch,
             exec_credit: vec![0.0; n],
             age_debt: vec![0.0; n],
+            pending: Vec::new(),
             ref_clock: LifetimeClock::new(0.0, 0.0),
         }
     }
@@ -195,25 +210,64 @@ impl<E: ChipEngine> Fleet<E> {
         sample: bool,
     ) -> Result<Vec<FleetCompletion>> {
         let exec = self.exec_seconds_per_batch;
-        let mut out = Vec::new();
-        for (i, chip) in self.chips.iter_mut().enumerate() {
-            let credit = self.exec_credit[i] + dt;
-            let budget = (credit / exec).floor() as usize;
-            let batches_before = chip.metrics().batches;
-            let comps = chip.drain_budgeted(budget, exec)?;
-            let executed = chip.metrics().batches - batches_before;
-            let spent = executed as f64 * exec;
+        // Chips are mutually independent within a window (routing
+        // already happened), so their drains fan out over worker
+        // threads when there is enough queued work to amortize the
+        // spawn cost; metrics aggregation stays serial, in chip order,
+        // so results and stats are identical to the serial path.
+        let queued: usize =
+            self.chips.iter().map(|c| c.queue_len()).sum();
+        let threads = if queued >= PARALLEL_QUEUE_MIN {
+            parallel::max_threads().min(self.chips.len())
+        } else {
+            1
+        };
+        let credits: &[f64] = &self.exec_credit;
+        let debts: &[f64] = &self.age_debt;
+        let results = parallel::map_mut(
+            threads,
+            &mut self.chips,
+            |i, chip| -> Result<(Vec<Completion>, f64)> {
+                let credit = credits[i] + dt;
+                let budget = (credit / exec).floor() as usize;
+                let batches_before = chip.metrics().batches;
+                let comps = chip.drain_budgeted(budget, exec)?;
+                let executed = chip.metrics().batches - batches_before;
+                let spent = executed as f64 * exec;
+                let idle = (dt - spent - debts[i]).max(0.0);
+                chip.advance_idle(idle);
+                Ok((comps, spent))
+            },
+        );
+        // Record every successful chip's accounting before surfacing
+        // an error: by the time the workers return, those chips HAVE
+        // drained and aged, so bailing early would drop completions
+        // and double-credit their spent capacity on a retried tick.
+        // The failing chip itself is left untouched, as in the serial
+        // path. Starting from `pending` re-delivers completions a
+        // previous failed window could not return.
+        let mut out = std::mem::take(&mut self.pending);
+        let mut first_err = None;
+        for (i, result) in results.into_iter().enumerate() {
+            let (comps, spent) = match result {
+                Ok(v) => v,
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                    continue;
+                }
+            };
             // Bank at most one batch of unused capacity: a starved
             // chip may need several short ticks to afford one
             // execution, but an idle chip must not stockpile.
-            self.exec_credit[i] = (credit - spent).min(exec);
-            let idle =
-                (dt - spent - self.age_debt[i]).max(0.0);
-            chip.advance_idle(idle);
+            self.exec_credit[i] =
+                (self.exec_credit[i] + dt - spent).min(exec);
+            let idle = (dt - spent - self.age_debt[i]).max(0.0);
             self.age_debt[i] += spent + idle - dt;
             self.metrics.record_completions(i, &comps);
             if sample {
-                self.metrics.observe_queue(i, chip.queue_len());
+                self.metrics.observe_queue(i, self.chips[i].queue_len());
             }
             out.extend(comps.into_iter().map(|completion| {
                 FleetCompletion {
@@ -221,6 +275,12 @@ impl<E: ChipEngine> Fleet<E> {
                     completion,
                 }
             }));
+        }
+        if let Some(e) = first_err {
+            // Can't hand `out` back alongside the error: park the
+            // already-drained completions for the next window.
+            self.pending = out;
+            return Err(e);
         }
         self.ref_clock.advance(dt);
         if sample {
@@ -271,16 +331,17 @@ impl<E: ChipEngine> Fleet<E> {
 }
 
 /// Build an artifact-free fleet: `n_chips` analytic engines sharing one
-/// accuracy profile, with staggered programming ages and decorrelated
-/// outcome streams.
+/// accuracy profile (a single `Arc`, not one deep clone per chip), with
+/// staggered programming ages and decorrelated outcome streams.
 pub fn analytic_fleet(
     cfg: &FleetConfig,
     profile: &AccuracyProfile,
 ) -> Fleet<AnalyticEngine> {
+    let shared = Arc::new(profile.clone());
     let chips = (0..cfg.n_chips)
         .map(|i| {
             AnalyticEngine::new(
-                profile.clone(),
+                Arc::clone(&shared),
                 LifetimeClock::new(cfg.chip_age(i), cfg.accel),
                 cfg.batch.clone(),
                 cfg.seed ^ 0x9e37_79b9_7f4a_7c15u64

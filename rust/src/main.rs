@@ -227,13 +227,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         m.batches,
         m.mean_occupancy()
     );
+    let lat = m.latency_percentiles(&[0.5, 0.99]);
     println!(
         "accuracy {:.2}%  set switches {}  p50 latency {:.1} ms  \
          p99 {:.1} ms",
         100.0 * m.accuracy(),
         m.set_switches,
-        1e3 * m.latency_percentile(0.5),
-        1e3 * m.latency_percentile(0.99),
+        1e3 * lat[0],
+        1e3 * lat[1],
     );
     Ok(())
 }

@@ -8,8 +8,9 @@
 //! core constraint: no RRAM rewrite).
 
 use crate::rram::device::ConductanceGrid;
-use crate::rram::drift::DriftModel;
+use crate::rram::drift::{DriftModel, LevelInterp};
 use crate::util::rng::Pcg64;
+use std::sync::OnceLock;
 
 /// Paper §IV-G array geometry.
 pub const TILE_ROWS: usize = 256;
@@ -25,6 +26,13 @@ pub struct Tile {
     pub g_target: Vec<f32>,
     /// Number of cells actually allocated to weights.
     pub used: usize,
+    /// Lazily built level-index/fraction table for level-tabulated
+    /// drift models (§Perf): targets never change after deployment, so
+    /// the interpolation search runs once per tile, not once per
+    /// readout. Covers cells `0..used` at build time; reset by
+    /// [`program`](Tile::program), bypassed when a read arrives under
+    /// a model with a different level grid.
+    interp: OnceLock<LevelInterp>,
 }
 
 impl Tile {
@@ -34,6 +42,7 @@ impl Tile {
             cols,
             g_target: vec![0.0; rows * cols],
             used: 0,
+            interp: OnceLock::new(),
         }
     }
 
@@ -58,10 +67,16 @@ impl Tile {
             self.g_target[start + i] = grid.program(t, rng) as f32;
         }
         self.used += targets.len();
+        // Targets changed: drop any cached interpolation table.
+        let _ = self.interp.take();
         start..self.used
     }
 
     /// Sample drifted conductances for a cell range at time `t`.
+    ///
+    /// Dispatches one block-sampling call per range (§Perf) instead of
+    /// one virtual call per device; level-tabulated models additionally
+    /// reuse the tile's cached index/fraction table.
     pub fn read_drifted(
         &self,
         range: std::ops::Range<usize>,
@@ -71,8 +86,40 @@ impl Tile {
         out: &mut [f32],
     ) {
         debug_assert_eq!(out.len(), range.len());
-        for (o, &g) in out.iter_mut().zip(&self.g_target[range]) {
-            *o = model.sample(g as f64, t, rng).max(0.0) as f32;
+        let g = &self.g_target[range.clone()];
+        match model.interp_levels() {
+            Some(levels) => {
+                let table = self.interp.get_or_init(|| {
+                    LevelInterp::build(
+                        levels,
+                        &self.g_target[..self.used],
+                    )
+                });
+                if table.grid_fp == LevelInterp::fingerprint(levels)
+                    && range.end <= table.idx.len()
+                {
+                    model.sample_block_interp(
+                        &table.idx[range.clone()],
+                        &table.frac[range],
+                        g,
+                        t,
+                        rng,
+                        out,
+                    );
+                } else {
+                    // Cache built for another model's grid (or a
+                    // stale fill level): fall back to the uncached
+                    // block path.
+                    model.sample_block(g, t, rng, out);
+                }
+            }
+            None => model.sample_block(g, t, rng, out),
+        }
+        // Physical floor: conductance cannot go negative.
+        for o in out.iter_mut() {
+            if *o < 0.0 {
+                *o = 0.0;
+            }
         }
     }
 }
@@ -126,18 +173,38 @@ impl ArrayBank {
         rng: &mut Pcg64,
         out: &mut Vec<f32>,
     ) {
+        let total: usize =
+            segs.iter().map(|(_, r)| r.len()).sum();
         out.clear();
+        out.resize(total, 0.0);
+        self.read_drifted_slice(segs, t, model, rng, out);
+    }
+
+    /// Slice variant of [`read_drifted`](Self::read_drifted): writes
+    /// straight into a caller-owned buffer of exactly the total
+    /// segment length (the weight-conversion hot path reads the
+    /// positive lines directly into the output tensor — §Perf).
+    pub fn read_drifted_slice(
+        &self,
+        segs: &[(usize, std::ops::Range<usize>)],
+        t: f64,
+        model: &dyn DriftModel,
+        rng: &mut Pcg64,
+        out: &mut [f32],
+    ) {
+        let mut off = 0;
         for (ti, range) in segs {
-            let start = out.len();
-            out.resize(start + range.len(), 0.0);
+            let n = range.len();
             self.tiles[*ti].read_drifted(
                 range.clone(),
                 t,
                 model,
                 rng,
-                &mut out[start..],
+                &mut out[off..off + n],
             );
+            off += n;
         }
+        debug_assert_eq!(off, out.len());
     }
 }
 
@@ -209,6 +276,93 @@ mod tests {
             &mut out,
         );
         assert!(out.iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn measured_reads_identical_with_and_without_tile_cache() {
+        use crate::rram::drift::MeasuredDrift;
+        use crate::rram::WEEK;
+        let model = MeasuredDrift::new(
+            vec![5.0, 10.0, 20.0, 40.0],
+            vec![0.2, 0.3, 0.5, 0.6],
+            vec![0.1, 0.1, 0.2, 0.3],
+            WEEK,
+        );
+        let g = grid();
+        let targets: Vec<f64> =
+            (0..4000).map(|i| 4.0 + 0.01 * i as f64).collect();
+        let mut bank = ArrayBank::default();
+        let segs = bank.program(&targets, &g, &mut Pcg64::new(1));
+        // First read populates the per-tile cache, second reuses it;
+        // a fresh (uncached) bank with the same seed must agree.
+        let mut cached = Vec::new();
+        bank.read_drifted(&segs, WEEK, &model, &mut Pcg64::new(8),
+                          &mut cached);
+        let mut cached2 = Vec::new();
+        bank.read_drifted(&segs, WEEK, &model, &mut Pcg64::new(8),
+                          &mut cached2);
+        assert_eq!(cached, cached2);
+        let mut fresh_bank = ArrayBank::default();
+        let fresh_segs =
+            fresh_bank.program(&targets, &g, &mut Pcg64::new(1));
+        let mut fresh = Vec::new();
+        fresh_bank.read_drifted(&fresh_segs, WEEK, &model,
+                                &mut Pcg64::new(8), &mut fresh);
+        assert_eq!(cached, fresh);
+    }
+
+    #[test]
+    fn tile_cache_survives_model_grid_change() {
+        use crate::rram::drift::MeasuredDrift;
+        use crate::rram::WEEK;
+        let g = grid();
+        let mut bank = ArrayBank::default();
+        let segs =
+            bank.program(&vec![7.5; 100], &g, &mut Pcg64::new(2));
+        let m1 = MeasuredDrift::new(vec![5.0, 10.0], vec![0.2, 0.6],
+                                    vec![0.1, 0.3], WEEK);
+        // A second model with a different grid after the cache was
+        // built for m1: the read must use m2's own statistics (the
+        // stale table is bypassed, not misapplied).
+        let mut m2 = MeasuredDrift::new(vec![4.0, 8.0, 12.0],
+                                        vec![5.0, 5.0, 5.0],
+                                        vec![1e-9, 1e-9, 1e-9], WEEK);
+        m2.dev_var = 0.0;
+        let mut out1 = Vec::new();
+        bank.read_drifted(&segs, WEEK, &m1, &mut Pcg64::new(3),
+                          &mut out1);
+        let mut out2 = Vec::new();
+        bank.read_drifted(&segs, WEEK, &m2, &mut Pcg64::new(3),
+                          &mut out2);
+        // m2 drifts every device by ≈ +5 µS with ~zero noise.
+        for &v in &out2 {
+            assert!((v - 12.5).abs() < 1.0, "got {v}");
+        }
+        assert_ne!(out1, out2);
+    }
+
+    #[test]
+    fn programming_after_read_invalidates_tile_cache() {
+        use crate::rram::drift::MeasuredDrift;
+        use crate::rram::WEEK;
+        let mut model = MeasuredDrift::new(vec![5.0, 10.0], vec![1.0, 2.0],
+                                           vec![1e-9, 1e-9], WEEK);
+        model.dev_var = 0.0;
+        let g = grid();
+        let mut bank = ArrayBank::default();
+        let segs_a = bank.program(&vec![5.0; 10], &g, &mut Pcg64::new(4));
+        let mut out = Vec::new();
+        bank.read_drifted(&segs_a, WEEK, &model, &mut Pcg64::new(5),
+                          &mut out);
+        // Program more cells into the same tile, then read them: the
+        // cache from the first read no longer covers the new range and
+        // must be rebuilt, not sliced out of bounds.
+        let segs_b = bank.program(&vec![10.0; 10], &g, &mut Pcg64::new(6));
+        bank.read_drifted(&segs_b, WEEK, &model, &mut Pcg64::new(7),
+                          &mut out);
+        for &v in &out {
+            assert!((v - 12.0).abs() < 0.5, "got {v}");
+        }
     }
 
     #[test]

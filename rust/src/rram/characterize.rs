@@ -66,6 +66,27 @@ impl DriftModel for FabDrift {
         (g_target + d) * (1.0 + eps)
     }
 
+    /// µ/σ stay state-dependent, but `ln t` is a per-block constant —
+    /// hoisted out of the inner loop along with the virtual dispatch.
+    fn sample_block(
+        &self,
+        g_targets: &[f32],
+        t: f64,
+        rng: &mut Pcg64,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(g_targets.len(), out.len());
+        let lnt = t.max(1.0).ln();
+        for (o, &gt) in out.iter_mut().zip(g_targets) {
+            let g = (gt as f64).abs();
+            let mu = (self.a0 + self.a1 * (self.g_ref - g).max(0.0)) * lnt;
+            let sigma = self.s0 + self.s1 * g + self.s2 * lnt;
+            let (z1, z2) = rng.normal_pair();
+            let d = mu + sigma * z1;
+            *o = ((gt as f64 + d) * (1.0 + self.dev_var * z2)) as f32;
+        }
+    }
+
     fn mean(&self, g_target: f64, t: f64) -> f64 {
         g_target + self.mu(g_target.abs(), t)
     }
@@ -185,6 +206,23 @@ mod tests {
         let lo = stats[0].mu.min(stats[1].mu);
         let hi = stats[0].mu.max(stats[1].mu);
         assert!(mu_mid >= lo - 1e-9 && mu_mid <= hi + 1e-9);
+    }
+
+    #[test]
+    fn fab_block_matches_scalar_exactly() {
+        // Same normal pair per device, same expression with ln t
+        // hoisted: bit-identical to the scalar path at a fixed seed.
+        let f = FabDrift::default();
+        let g: Vec<f32> = (0..4096).map(|i| 5.0 + (i % 36) as f32).collect();
+        let mut scalar_rng = Pcg64::new(19);
+        let scalar: Vec<f32> = g
+            .iter()
+            .map(|&gt| f.sample(gt as f64, WEEK, &mut scalar_rng) as f32)
+            .collect();
+        let mut block_rng = Pcg64::new(19);
+        let mut block = vec![0f32; g.len()];
+        f.sample_block(&g, WEEK, &mut block_rng, &mut block);
+        assert_eq!(scalar, block);
     }
 
     #[test]

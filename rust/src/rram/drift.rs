@@ -62,12 +62,119 @@ pub trait DriftModel: Send + Sync {
     /// `g_target` µS after `t` seconds. `rng` carries the instance noise.
     fn sample(&self, g_target: f64, t: f64, rng: &mut Pcg64) -> f64;
 
+    /// Block sampling: one drifted sample per `g_targets[i]` into
+    /// `out[i]`, all at the same `t`. The default delegates to
+    /// [`sample`](Self::sample) per scalar, so external models keep
+    /// compiling unchanged; the in-repo models override it to hoist
+    /// every `t`-dependent constant out of the inner loop and draw one
+    /// [`Pcg64::normal_pair`] per device (§Perf). Overrides must
+    /// consume the same per-device RNG stream as the scalar path so
+    /// block and scalar readouts stay statistically interchangeable at
+    /// a fixed seed.
+    fn sample_block(
+        &self,
+        g_targets: &[f32],
+        t: f64,
+        rng: &mut Pcg64,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(g_targets.len(), out.len());
+        for (o, &g) in out.iter_mut().zip(g_targets) {
+            *o = self.sample(g as f64, t, rng) as f32;
+        }
+    }
+
+    /// The per-level interpolation grid, for models whose statistics
+    /// are tabulated per programmed conductance level (enables the
+    /// per-[`Tile`](crate::rram::array::Tile) index/fraction cache).
+    /// `None` for models analytic in `g`.
+    fn interp_levels(&self) -> Option<&[f64]> {
+        None
+    }
+
+    /// [`sample_block`](Self::sample_block) with a precomputed
+    /// level-index/fraction table: `idx[i]`/`frac[i]` were built by
+    /// [`LevelInterp::build`] against [`interp_levels`] for exactly
+    /// these `g_targets`. The default ignores the table.
+    fn sample_block_interp(
+        &self,
+        idx: &[u32],
+        frac: &[f32],
+        g_targets: &[f32],
+        t: f64,
+        rng: &mut Pcg64,
+        out: &mut [f32],
+    ) {
+        let _ = (idx, frac);
+        self.sample_block(g_targets, t, rng, out);
+    }
+
     /// Mean drifted conductance (no sampling) — used by deterministic
     /// compensation baselines and cost analyses.
     fn mean(&self, g_target: f64, t: f64) -> f64;
 
     /// Name for manifests/logs.
     fn name(&self) -> &str;
+}
+
+/// Precomputed linear-interpolation table mapping each device's target
+/// conductance onto a model's level grid: `idx[i]` is the lower level
+/// index, `frac[i]` the fraction toward level `idx[i] + 1` (so a value
+/// clamped to the grid edges stores `(0, 0.0)` or `(n − 2, 1.0)`, and
+/// `idx[i] + 1` always indexes the grid). Targets never change after
+/// programming, so a tile builds this once and reuses it across every
+/// drifted readout of its lifetime (§Perf).
+#[derive(Debug, Clone)]
+pub struct LevelInterp {
+    pub idx: Vec<u32>,
+    pub frac: Vec<f32>,
+    /// Fingerprint of the level grid the table was built against —
+    /// guards a cached table against reads under a different model.
+    pub grid_fp: u64,
+}
+
+impl LevelInterp {
+    /// FNV-1a over the raw level bits.
+    pub fn fingerprint(levels: &[f64]) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for &l in levels {
+            for b in l.to_bits().to_le_bytes() {
+                h = (h ^ b as u64).wrapping_mul(0x100_0000_01b3);
+            }
+        }
+        h
+    }
+
+    /// Build for `g_targets` against `levels` (ascending, length ≥ 2),
+    /// with the same clamp/search semantics as
+    /// [`MeasuredDrift::stats_at`].
+    pub fn build(levels: &[f64], g_targets: &[f32]) -> LevelInterp {
+        assert!(levels.len() >= 2, "need at least two levels");
+        let n = levels.len();
+        let mut idx = Vec::with_capacity(g_targets.len());
+        let mut frac = Vec::with_capacity(g_targets.len());
+        for &gt in g_targets {
+            let g = (gt as f64).abs();
+            let (i, w) = if g <= levels[0] {
+                (0usize, 0.0f64)
+            } else if g >= levels[n - 1] {
+                (n - 2, 1.0)
+            } else {
+                // First index with levels[i] >= g; the lower neighbour
+                // is one before it (levels[0] < g < levels[n-1] here).
+                let hi = levels.partition_point(|&l| l < g);
+                let lo = hi - 1;
+                (lo, (g - levels[lo]) / (levels[hi] - levels[lo]))
+            };
+            idx.push(i as u32);
+            frac.push(w as f32);
+        }
+        LevelInterp {
+            idx,
+            frac,
+            grid_fp: LevelInterp::fingerprint(levels),
+        }
+    }
 }
 
 /// IBM Analog-AI-Kit statistical drift (paper Eqs. 1–4).
@@ -114,6 +221,27 @@ impl DriftModel for IbmDrift {
         (g_target + g_drift) * (1.0 + eps)
     }
 
+    /// Hoists `ln t` (µ and σ are per-`t` constants, not per-device)
+    /// and draws one normal pair per device — bit-compatible with the
+    /// scalar path from a spare-free generator.
+    fn sample_block(
+        &self,
+        g_targets: &[f32],
+        t: f64,
+        rng: &mut Pcg64,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(g_targets.len(), out.len());
+        let mu = self.mu_drift(t);
+        let sigma = self.sigma_drift(t);
+        for (o, &g) in out.iter_mut().zip(g_targets) {
+            let (z1, z2) = rng.normal_pair();
+            let g_drift = mu + sigma * z1;
+            let eps = self.dev_var * z2;
+            *o = ((g as f64 + g_drift) * (1.0 + eps)) as f32;
+        }
+    }
+
     fn mean(&self, g_target: f64, t: f64) -> f64 {
         g_target + self.mu_drift(t)
     }
@@ -152,6 +280,25 @@ impl MeasuredDrift {
         MeasuredDrift { levels, mu, sigma, t_meas, dev_var: 0.05 }
     }
 
+    /// Log-time rescale factor from the measurement interval to `t`
+    /// (Eqs. 2–3 kinetics); constant across devices at a fixed `t`.
+    fn time_scale(&self, t: f64) -> f64 {
+        t.max(1.0).ln() / self.t_meas.max(std::f64::consts::E).ln()
+    }
+
+    /// Per-level (µ, σ) rescaled to time `t` — the hoisted constants
+    /// the block sampler interpolates between (§Perf). σ entries carry
+    /// the `√k` scaling but not the 1e-6 floor; the floor applies after
+    /// interpolation, matching [`stats_at`](Self::stats_at).
+    pub fn level_stats_at(&self, t: f64) -> (Vec<f64>, Vec<f64>) {
+        let k = self.time_scale(t);
+        let ks = k.sqrt();
+        (
+            self.mu.iter().map(|&m| m * k).collect(),
+            self.sigma.iter().map(|&s| s * ks).collect(),
+        )
+    }
+
     /// Interpolated (µ, σ) for an arbitrary target conductance at `t`.
     pub fn stats_at(&self, g_target: f64, t: f64) -> (f64, f64) {
         let g = g_target.abs();
@@ -171,7 +318,7 @@ impl MeasuredDrift {
         let mu = self.mu[i0] * (1.0 - w) + self.mu[i1] * w;
         let sigma = self.sigma[i0] * (1.0 - w) + self.sigma[i1] * w;
         // Log-time rescale from the measurement interval to t.
-        let k = t.max(1.0).ln() / self.t_meas.max(std::f64::consts::E).ln();
+        let k = self.time_scale(t);
         (mu * k, (sigma * k.sqrt()).max(1e-6))
     }
 }
@@ -182,6 +329,56 @@ impl DriftModel for MeasuredDrift {
         let g_drift = rng.normal_with(mu, sigma);
         let eps = rng.normal_with(0.0, self.dev_var);
         (g_target + g_drift) * (1.0 + eps)
+    }
+
+    /// Builds the index/fraction table ad hoc; readers that hold a
+    /// cached table (tiles) call
+    /// [`sample_block_interp`](DriftModel::sample_block_interp)
+    /// directly and skip the per-readout level search entirely.
+    fn sample_block(
+        &self,
+        g_targets: &[f32],
+        t: f64,
+        rng: &mut Pcg64,
+        out: &mut [f32],
+    ) {
+        let interp = LevelInterp::build(&self.levels, g_targets);
+        self.sample_block_interp(&interp.idx, &interp.frac, g_targets, t,
+                                 rng, out);
+    }
+
+    fn interp_levels(&self) -> Option<&[f64]> {
+        Some(&self.levels)
+    }
+
+    /// Per-level (µ, σ) at `t` are computed once for the whole block;
+    /// the inner loop is two fused interpolations and one normal pair
+    /// per device.
+    fn sample_block_interp(
+        &self,
+        idx: &[u32],
+        frac: &[f32],
+        g_targets: &[f32],
+        t: f64,
+        rng: &mut Pcg64,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(g_targets.len(), out.len());
+        debug_assert_eq!(g_targets.len(), idx.len());
+        debug_assert_eq!(g_targets.len(), frac.len());
+        let (mu_t, sigma_t) = self.level_stats_at(t);
+        for (((o, &gt), &i0), &w) in
+            out.iter_mut().zip(g_targets).zip(idx).zip(frac)
+        {
+            let (i0, w) = (i0 as usize, w as f64);
+            let mu = mu_t[i0] * (1.0 - w) + mu_t[i0 + 1] * w;
+            let sigma =
+                (sigma_t[i0] * (1.0 - w) + sigma_t[i0 + 1] * w).max(1e-6);
+            let (z1, z2) = rng.normal_pair();
+            let g_drift = mu + sigma * z1;
+            *o = ((gt as f64 + g_drift)
+                * (1.0 + self.dev_var * z2)) as f32;
+        }
     }
 
     fn mean(&self, g_target: f64, t: f64) -> f64 {
@@ -200,6 +397,17 @@ pub struct NoDrift;
 impl DriftModel for NoDrift {
     fn sample(&self, g_target: f64, _t: f64, _rng: &mut Pcg64) -> f64 {
         g_target
+    }
+
+    /// Identity block: no RNG consumption, same as the scalar path.
+    fn sample_block(
+        &self,
+        g_targets: &[f32],
+        _t: f64,
+        _rng: &mut Pcg64,
+        out: &mut [f32],
+    ) {
+        out.copy_from_slice(g_targets);
     }
 
     fn mean(&self, g_target: f64, _t: f64) -> f64 {
@@ -298,6 +506,159 @@ mod tests {
     fn no_drift_is_identity() {
         let mut rng = Pcg64::new(0);
         assert_eq!(NoDrift.sample(17.0, 1e9, &mut rng), 17.0);
+    }
+
+    fn scalar_block(
+        model: &dyn DriftModel,
+        g: &[f32],
+        t: f64,
+        seed: u64,
+    ) -> Vec<f32> {
+        // The pre-PR path: the default trait impl, per-scalar `sample`.
+        let mut rng = Pcg64::new(seed);
+        g.iter()
+            .map(|&gt| model.sample(gt as f64, t, &mut rng) as f32)
+            .collect()
+    }
+
+    fn block(
+        model: &dyn DriftModel,
+        g: &[f32],
+        t: f64,
+        seed: u64,
+    ) -> Vec<f32> {
+        let mut rng = Pcg64::new(seed);
+        let mut out = vec![0f32; g.len()];
+        model.sample_block(g, t, &mut rng, &mut out);
+        out
+    }
+
+    fn bench_targets(n: usize) -> Vec<f32> {
+        (0..n).map(|i| 5.0 + 5.0 * (i % 8) as f32).collect()
+    }
+
+    #[test]
+    fn ibm_block_matches_scalar_exactly() {
+        // The block sampler draws the same normal pair per device as
+        // the scalar path and evaluates the same expression, so from a
+        // fresh generator the two are bit-identical.
+        let m = IbmDrift::default();
+        let g = bench_targets(4096);
+        let a = scalar_block(&m, &g, DAY, 42);
+        let b = block(&m, &g, DAY, 42);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn measured_block_matches_scalar_within_tolerance() {
+        // Level (µ, σ) are pre-scaled by k before interpolation in the
+        // block path (the scalar path interpolates first, scales
+        // after) — algebraically identical, different float rounding.
+        let m = MeasuredDrift::new(
+            (0..8).map(|i| 5.0 + 5.0 * i as f64).collect(),
+            (0..8).map(|i| 0.1 + 0.05 * i as f64).collect(),
+            (0..8).map(|i| 0.2 + 0.02 * i as f64).collect(),
+            WEEK,
+        );
+        // Off-grid targets exercise real interpolation weights.
+        let g: Vec<f32> =
+            (0..20_000).map(|i| 4.0 + 0.0019 * i as f32).collect();
+        let t = 10.0 * YEAR;
+        let a = scalar_block(&m, &g, t, 7);
+        let b = block(&m, &g, t, 7);
+        let mut max_abs = 0f32;
+        for (x, y) in a.iter().zip(&b) {
+            max_abs = max_abs.max((x - y).abs());
+        }
+        assert!(max_abs < 1e-3, "per-sample divergence {max_abs}");
+        let stats = |v: &[f32]| {
+            let n = v.len() as f64;
+            let mean = v.iter().map(|&x| x as f64).sum::<f64>() / n;
+            let var = v
+                .iter()
+                .map(|&x| (x as f64 - mean).powi(2))
+                .sum::<f64>()
+                / n;
+            (mean, var.sqrt())
+        };
+        let (ma, sa) = stats(&a);
+        let (mb, sb) = stats(&b);
+        assert!((ma - mb).abs() < 1e-3, "means {ma} vs {mb}");
+        assert!((sa / sb - 1.0).abs() < 1e-3, "stds {sa} vs {sb}");
+    }
+
+    #[test]
+    fn measured_block_interp_cache_matches_uncached() {
+        let m = MeasuredDrift::new(
+            vec![5.0, 10.0, 20.0, 40.0],
+            vec![0.2, 0.3, 0.5, 0.6],
+            vec![0.1, 0.1, 0.2, 0.3],
+            WEEK,
+        );
+        let g: Vec<f32> = (0..5000).map(|i| 3.0 + 0.009 * i as f32).collect();
+        let interp = LevelInterp::build(&m.levels, &g);
+        assert_eq!(interp.grid_fp, LevelInterp::fingerprint(&m.levels));
+        let mut rng_a = Pcg64::new(9);
+        let mut rng_b = Pcg64::new(9);
+        let mut a = vec![0f32; g.len()];
+        let mut b = vec![0f32; g.len()];
+        m.sample_block(&g, MONTH, &mut rng_a, &mut a);
+        m.sample_block_interp(&interp.idx, &interp.frac, &g, MONTH,
+                              &mut rng_b, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn level_interp_edges_reproduce_clamps() {
+        let levels = vec![5.0, 10.0, 40.0];
+        let g = [1.0f32, 5.0, 7.5, 40.0, 90.0, -7.5];
+        let interp = LevelInterp::build(&levels, &g);
+        // Below/at the low edge: (0, 0).
+        assert_eq!((interp.idx[0], interp.frac[0]), (0, 0.0));
+        assert_eq!((interp.idx[1], interp.frac[1]), (0, 0.0));
+        // Interior: halfway between 5 and 10.
+        assert_eq!((interp.idx[2], interp.frac[2]), (0, 0.5));
+        // At/above the high edge: (n-2, 1) so idx+1 stays in-grid.
+        assert_eq!((interp.idx[3], interp.frac[3]), (1, 1.0));
+        assert_eq!((interp.idx[4], interp.frac[4]), (1, 1.0));
+        // Negative targets interpolate on |g| like stats_at.
+        assert_eq!((interp.idx[5], interp.frac[5]), (0, 0.5));
+    }
+
+    #[test]
+    fn nodrift_block_is_identity_without_rng() {
+        let g = bench_targets(100);
+        let mut rng = Pcg64::new(3);
+        let before = rng.clone();
+        let mut out = vec![0f32; g.len()];
+        NoDrift.sample_block(&g, 1e9, &mut rng, &mut out);
+        assert_eq!(out, g);
+        // No RNG consumption, matching the scalar path.
+        assert_eq!(rng.next_u64(), before.clone().next_u64());
+    }
+
+    #[test]
+    fn ibm_block_sample_statistics() {
+        // Same moment test as ibm_sample_statistics, over the block
+        // path: N(g0 + µ(t), σ(t)² + ((g0+µ)·dev_var)²).
+        let m = IbmDrift::default();
+        let mut rng = Pcg64::new(1);
+        let t = DAY;
+        let g = vec![20.0f32; 40_000];
+        let mut out = vec![0f32; g.len()];
+        m.sample_block(&g, t, &mut rng, &mut out);
+        let n = out.len() as f64;
+        let mean = out.iter().map(|&v| v as f64).sum::<f64>() / n;
+        let var = out
+            .iter()
+            .map(|&v| (v as f64 - mean).powi(2))
+            .sum::<f64>()
+            / n;
+        let want_mean = 20.0 + m.mu_drift(t);
+        let want_var = m.sigma_drift(t).powi(2)
+            + (want_mean * m.dev_var).powi(2);
+        assert!((mean - want_mean).abs() < 0.05, "{mean} vs {want_mean}");
+        assert!((var / want_var - 1.0).abs() < 0.1, "{var} vs {want_var}");
     }
 
     #[test]

@@ -221,8 +221,10 @@ impl ProgrammedNetwork {
     }
 
     /// Buffer-reusing variant: refreshes `out` in place. On repeat calls
-    /// (the EVALSTATS / drift-inject-training hot path) no allocation or
-    /// digital-tensor cloning happens — §Perf L3 optimization.
+    /// (the EVALSTATS / drift-inject-training hot path) the tensor
+    /// buffers and digital clones are reused — §Perf L3 optimization.
+    /// Fans the per-tensor readouts over [`crate::util::parallel`]
+    /// worker threads.
     pub fn read_drifted_into(
         &self,
         t: f64,
@@ -230,31 +232,80 @@ impl ProgrammedNetwork {
         rng: &mut Pcg64,
         out: &mut TensorMap,
     ) {
+        self.read_drifted_into_threads(
+            t,
+            model,
+            rng,
+            out,
+            crate::util::parallel::max_threads(),
+        );
+    }
+
+    /// Explicit-thread variant of
+    /// [`read_drifted_into`](Self::read_drifted_into). Every tensor
+    /// gets its own RNG stream, split from `rng` serially *before* the
+    /// fan-out, so the readout is bit-identical for every `threads`
+    /// value (the reproducibility tests pin 1 vs N).
+    pub fn read_drifted_into_threads(
+        &self,
+        t: f64,
+        model: &dyn DriftModel,
+        rng: &mut Pcg64,
+        out: &mut TensorMap,
+        threads: usize,
+    ) {
         let step = self.grid.step() as f32;
         for (k, v) in &self.digital {
             if !out.contains_key(k) {
                 out.insert(k.clone(), v.clone());
             }
         }
-        let mut gp = Vec::new();
-        let mut gm = Vec::new();
         for pt in &self.tensors {
-            self.bank.read_drifted(&pt.plus_segs, t, model, rng, &mut gp);
-            self.bank
-                .read_drifted(&pt.minus_segs, t, model, rng, &mut gm);
-            let dst = out
-                .entry(pt.name.clone())
-                .or_insert_with(|| {
+            if !out.contains_key(&pt.name) {
+                out.insert(
+                    pt.name.clone(),
                     Tensor::zeros(
                         crate::util::tensor::DType::F32,
                         &pt.shape,
-                    )
-                });
-            let w = dst.as_f32_mut();
-            for (i, (&p, &m)) in gp.iter().zip(&gm).enumerate() {
-                w[i] = pt.scales[i % pt.cout] * (p - m) / step;
+                    ),
+                );
             }
         }
+        // Pair every programmed tensor with its output buffer and its
+        // own deterministic RNG stream.
+        let mut slots: std::collections::BTreeMap<&str, &mut Tensor> =
+            out.iter_mut().map(|(k, v)| (k.as_str(), v)).collect();
+        let mut work: Vec<(&ProgrammedTensor, &mut Tensor, Pcg64)> = self
+            .tensors
+            .iter()
+            .enumerate()
+            .map(|(i, pt)| {
+                let slot = slots
+                    .remove(pt.name.as_str())
+                    .expect("output slot inserted above");
+                (pt, slot, rng.split(i as u64))
+            })
+            .collect();
+        drop(slots);
+        crate::util::parallel::for_each_mut(
+            threads,
+            &mut work,
+            |_, (pt, dst, stream)| {
+                // Positive lines land straight in the output tensor;
+                // only the negative lines need scratch.
+                let w = dst.as_f32_mut();
+                self.bank
+                    .read_drifted_slice(&pt.plus_segs, t, model, stream,
+                                        w);
+                let mut gm = vec![0f32; w.len()];
+                self.bank
+                    .read_drifted_slice(&pt.minus_segs, t, model, stream,
+                                        &mut gm);
+                for (i, (wv, &m)) in w.iter_mut().zip(&gm).enumerate() {
+                    *wv = pt.scales[i % pt.cout] * (*wv - m) / step;
+                }
+            },
+        );
     }
 
     /// Ideal (quantized, drift-free) readout — the t=0 deploy weights.

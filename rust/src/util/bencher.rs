@@ -15,11 +15,23 @@ pub struct BenchStats {
     pub p10_ns: f64,
     pub p90_ns: f64,
     pub mean_ns: f64,
+    /// Work items processed per iteration (devices, samples, requests);
+    /// 0 when the stage has no natural item count.
+    pub items_per_iter: f64,
 }
 
 impl BenchStats {
     pub fn throughput(&self, items_per_iter: f64) -> f64 {
         items_per_iter / (self.median_ns / 1e9)
+    }
+
+    /// Median cost per item (ns); 0 when no item count was recorded.
+    pub fn ns_per_item(&self) -> f64 {
+        if self.items_per_iter > 0.0 {
+            self.median_ns / self.items_per_iter
+        } else {
+            0.0
+        }
     }
 
     pub fn human(&self) -> String {
@@ -77,7 +89,19 @@ impl Bencher {
     }
 
     /// Time `f` repeatedly; returns and records the stats.
-    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> BenchStats {
+    pub fn bench<F: FnMut()>(&mut self, name: &str, f: F) -> BenchStats {
+        self.bench_items(name, 0.0, f)
+    }
+
+    /// [`bench`](Self::bench) with a work-item count per iteration, so
+    /// the recorded stats carry ns/item and items/s for the perf
+    /// trajectory (`BENCH_*.json`).
+    pub fn bench_items<F: FnMut()>(
+        &mut self,
+        name: &str,
+        items_per_iter: f64,
+        mut f: F,
+    ) -> BenchStats {
         for _ in 0..self.warmup_iters {
             f();
         }
@@ -99,10 +123,16 @@ impl Bencher {
             p10_ns: samples[n / 10],
             p90_ns: samples[(n * 9) / 10],
             mean_ns: samples.iter().sum::<f64>() / n as f64,
+            items_per_iter,
         };
         println!("{}", stats.human());
         self.results.push(stats.clone());
         stats
+    }
+
+    /// Recorded stats for a stage, by exact name.
+    pub fn find(&self, name: &str) -> Option<&BenchStats> {
+        self.results.iter().find(|r| r.name == name)
     }
 
     /// Write accumulated results as JSON under `results/bench_<name>.json`.
@@ -130,6 +160,63 @@ impl Bencher {
         )?;
         Ok(())
     }
+
+    /// Write a machine-readable perf-trajectory point to an explicit
+    /// path (the repo-root `BENCH_hotpath.json`): per-stage ns/op plus
+    /// ns/item and items/s where recorded, and speedup ratios for the
+    /// given `(stage, baseline)` pairs resolved against the recorded
+    /// medians. Pairs whose stages were not run (e.g. skipped PJRT
+    /// sections) are omitted rather than erroring.
+    pub fn write_perf_json(
+        &self,
+        path: &str,
+        bench_name: &str,
+        speedup_pairs: &[(&str, &str)],
+    ) -> anyhow::Result<()> {
+        use crate::util::json::{arr, num, obj, s, Json};
+        let rows: Vec<Json> = self
+            .results
+            .iter()
+            .map(|r| {
+                let mut fields = vec![
+                    ("name", s(&r.name)),
+                    ("iters", num(r.iters as f64)),
+                    ("median_ns", num(r.median_ns)),
+                    ("mean_ns", num(r.mean_ns)),
+                    ("p10_ns", num(r.p10_ns)),
+                    ("p90_ns", num(r.p90_ns)),
+                ];
+                if r.items_per_iter > 0.0 {
+                    fields.push(("items_per_iter", num(r.items_per_iter)));
+                    fields.push(("ns_per_item", num(r.ns_per_item())));
+                    fields.push((
+                        "items_per_s",
+                        num(r.throughput(r.items_per_iter)),
+                    ));
+                }
+                obj(fields)
+            })
+            .collect();
+        let speedups: Vec<Json> = speedup_pairs
+            .iter()
+            .filter_map(|&(stage, baseline)| {
+                let fast = self.find(stage)?;
+                let base = self.find(baseline)?;
+                Some(obj(vec![
+                    ("stage", s(stage)),
+                    ("baseline", s(baseline)),
+                    ("speedup", num(base.median_ns / fast.median_ns)),
+                ]))
+            })
+            .collect();
+        let out = obj(vec![
+            ("bench", s(bench_name)),
+            ("rows", arr(rows)),
+            ("speedups", arr(speedups)),
+        ]);
+        std::fs::write(path, out.to_string_pretty())?;
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -155,6 +242,48 @@ mod tests {
         assert!(st.median_ns > 0.0);
         assert!(st.p10_ns <= st.median_ns && st.median_ns <= st.p90_ns);
         assert_eq!(b.results.len(), 1);
+    }
+
+    #[test]
+    fn bench_items_and_perf_json() {
+        let mut b = Bencher {
+            min_time: 0.01,
+            max_iters: 20,
+            warmup_iters: 0,
+            results: Vec::new(),
+        };
+        b.bench_items("fast", 1000.0, || {
+            std::hint::black_box(0u64);
+        });
+        b.bench_items("slow", 1000.0, || {
+            let mut acc = 0u64;
+            for i in 0..50_000u64 {
+                acc = acc.wrapping_add(i);
+            }
+            std::hint::black_box(acc);
+        });
+        let fast = b.find("fast").unwrap();
+        assert!(fast.ns_per_item() > 0.0);
+        assert!(fast.throughput(fast.items_per_iter) > 0.0);
+        assert!(b.find("missing").is_none());
+
+        let path = std::env::temp_dir().join("vera_perf_test.json");
+        b.write_perf_json(
+            path.to_str().unwrap(),
+            "t",
+            &[("fast", "slow"), ("fast", "missing")],
+        )
+        .unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let j = crate::util::json::parse(&text).unwrap();
+        assert_eq!(j.get("rows").unwrap().as_arr().unwrap().len(), 2);
+        // The pair with an unknown stage is omitted, not an error.
+        let speedups = j.get("speedups").unwrap().as_arr().unwrap();
+        assert_eq!(speedups.len(), 1);
+        let ratio =
+            speedups[0].get("speedup").unwrap().as_f64().unwrap();
+        assert!(ratio > 1.0, "speedup {ratio}");
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -5,6 +5,8 @@
 pub mod bencher;
 pub mod cli;
 pub mod json;
+pub mod parallel;
 pub mod prop;
 pub mod rng;
 pub mod tensor;
+pub mod testkit;

@@ -1,0 +1,140 @@
+//! Scoped-thread fan-out (std-only; no rayon in the offline build).
+//!
+//! Deterministic parallelism for the drift hot path: callers pre-split
+//! work into self-contained items — each with its own RNG stream when
+//! randomness is involved — and [`for_each_mut`] / [`map_mut`] fan the
+//! items over up to `threads` OS threads in a fixed contiguous-chunk
+//! partition. Because every item's result depends only on its
+//! `(index, item)` pair and never on which thread ran it, outputs are
+//! bit-identical for every thread count, including the serial path.
+//!
+//! Threads come from `std::thread::scope`, so borrows of the caller's
+//! stack (the item slice, captured references) work without `Arc` or
+//! `'static` bounds.
+
+use std::thread;
+
+/// Worker-thread budget: the `VERA_THREADS` env override when set to a
+/// positive integer, else the OS-reported available parallelism, else 1.
+pub fn max_threads() -> usize {
+    if let Ok(s) = std::env::var("VERA_THREADS") {
+        if let Ok(n) = s.trim().parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `f(index, &mut item)` for every item, fanned over up to
+/// `threads` threads in contiguous chunks. One thread (or one item)
+/// degenerates to the plain serial loop; either way `f` observes the
+/// same `(index, item)` pairs, so results do not depend on the thread
+/// count.
+pub fn for_each_mut<T, F>(threads: usize, items: &mut [T], f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut T) + Sync,
+{
+    let n = items.len();
+    let threads = threads.min(n).max(1);
+    if threads == 1 {
+        for (i, item) in items.iter_mut().enumerate() {
+            f(i, item);
+        }
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    let f = &f;
+    thread::scope(|s| {
+        for (ci, part) in items.chunks_mut(chunk).enumerate() {
+            s.spawn(move || {
+                for (j, item) in part.iter_mut().enumerate() {
+                    f(ci * chunk + j, item);
+                }
+            });
+        }
+    });
+}
+
+/// [`for_each_mut`] that collects `f`'s return values in item order.
+pub fn map_mut<T, R, F>(threads: usize, items: &mut [T], f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, &mut T) -> R + Sync,
+{
+    let mut out: Vec<Option<R>> = Vec::new();
+    out.resize_with(items.len(), || None);
+    let mut pairs: Vec<(&mut T, &mut Option<R>)> =
+        items.iter_mut().zip(out.iter_mut()).collect();
+    for_each_mut(threads, &mut pairs, |i, (item, slot)| {
+        **slot = Some(f(i, &mut **item));
+    });
+    out.into_iter()
+        .map(|r| r.expect("every item visited exactly once"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn for_each_visits_every_index_once() {
+        for threads in [1usize, 2, 3, 16] {
+            let mut items = vec![0usize; 37];
+            for_each_mut(threads, &mut items, |i, v| *v = i + 1);
+            for (i, v) in items.iter().enumerate() {
+                assert_eq!(*v, i + 1, "threads {threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn map_preserves_item_order() {
+        for threads in [1usize, 4, 9] {
+            let mut items: Vec<u64> = (0..23).collect();
+            let out = map_mut(threads, &mut items, |i, v| {
+                *v += 1;
+                (i as u64) * 100 + *v
+            });
+            let want: Vec<u64> =
+                (0..23).map(|i| i * 100 + i + 1).collect();
+            assert_eq!(out, want, "threads {threads}");
+        }
+    }
+
+    #[test]
+    fn results_are_thread_count_invariant() {
+        let run = |threads| {
+            let mut items: Vec<u64> = (0..100).map(|i| i * 7 + 3).collect();
+            map_mut(threads, &mut items, |i, v| {
+                // Item-local pseudo-work: depends only on (i, v).
+                v.wrapping_mul(0x9e3779b97f4a7c15).rotate_left(i as u32)
+            })
+        };
+        let serial = run(1);
+        for threads in [2usize, 5, 32] {
+            assert_eq!(run(threads), serial);
+        }
+    }
+
+    #[test]
+    fn empty_and_oversubscribed_inputs_are_fine() {
+        let mut empty: Vec<u8> = Vec::new();
+        for_each_mut(8, &mut empty, |_, _| panic!("no items"));
+        assert!(map_mut(8, &mut empty, |_, _| 0u8).is_empty());
+        let count = AtomicUsize::new(0);
+        let mut one = vec![5u8];
+        for_each_mut(64, &mut one, |_, _| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn max_threads_is_positive() {
+        assert!(max_threads() >= 1);
+    }
+}

@@ -96,15 +96,72 @@ impl Pcg64 {
         }
     }
 
+    /// One standard-normal pair from a single polar Box–Muller round —
+    /// the block-sampling primitive (§Perf): no spare caching, no
+    /// per-call branch. Consumes exactly the uniforms a generate+spare
+    /// `normal()` pair would, so block samplers that draw one pair per
+    /// device stay stream-compatible with the scalar path when the
+    /// generator holds no spare.
+    #[inline]
+    pub fn normal_pair(&mut self) -> (f64, f64) {
+        loop {
+            let u = 2.0 * self.uniform() - 1.0;
+            let v = 2.0 * self.uniform() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                let m = (-2.0 * s.ln() / s).sqrt();
+                return (u * m, v * m);
+            }
+        }
+    }
+
     #[inline]
     pub fn normal_with(&mut self, mu: f64, sigma: f64) -> f64 {
         mu + sigma * self.normal()
     }
 
-    /// Fill a slice with N(mu, sigma) f32 samples (drift hot path).
+    /// Fill a slice with N(mu, sigma) f64 samples pair-at-a-time: the
+    /// spare branch runs once up front, never in the loop. Produces the
+    /// same stream as repeated `normal_with` calls.
+    pub fn fill_normal_f64(&mut self, out: &mut [f64], mu: f64, sigma: f64) {
+        if out.is_empty() {
+            return;
+        }
+        let mut start = 0;
+        if let Some(v) = self.spare.take() {
+            out[0] = mu + sigma * v;
+            start = 1;
+        }
+        let mut pairs = out[start..].chunks_exact_mut(2);
+        for pair in &mut pairs {
+            let (a, b) = self.normal_pair();
+            pair[0] = mu + sigma * a;
+            pair[1] = mu + sigma * b;
+        }
+        for last in pairs.into_remainder() {
+            *last = self.normal_with(mu, sigma);
+        }
+    }
+
+    /// Fill a slice with N(mu, sigma) f32 samples (drift hot path);
+    /// pair-at-a-time like [`fill_normal_f64`](Self::fill_normal_f64).
     pub fn fill_normal_f32(&mut self, out: &mut [f32], mu: f64, sigma: f64) {
-        for v in out.iter_mut() {
-            *v = self.normal_with(mu, sigma) as f32;
+        if out.is_empty() {
+            return;
+        }
+        let mut start = 0;
+        if let Some(v) = self.spare.take() {
+            out[0] = (mu + sigma * v) as f32;
+            start = 1;
+        }
+        let mut pairs = out[start..].chunks_exact_mut(2);
+        for pair in &mut pairs {
+            let (a, b) = self.normal_pair();
+            pair[0] = (mu + sigma * a) as f32;
+            pair[1] = (mu + sigma * b) as f32;
+        }
+        for last in pairs.into_remainder() {
+            *last = self.normal_with(mu, sigma) as f32;
         }
     }
 
@@ -185,6 +242,51 @@ mod tests {
             seen[v] = true;
         }
         assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn normal_pair_matches_scalar_stream() {
+        // From a spare-free generator, normal_pair() consumes the same
+        // uniforms as a normal(), normal() pair — the contract block
+        // drift samplers rely on for scalar/block stream compatibility.
+        let mut a = Pcg64::new(21);
+        let mut b = Pcg64::new(21);
+        for _ in 0..100 {
+            let (x, y) = a.normal_pair();
+            assert_eq!(x, b.normal());
+            assert_eq!(y, b.normal());
+        }
+    }
+
+    #[test]
+    fn fill_normal_f64_matches_scalar_calls() {
+        // Same stream as repeated normal_with, including across a
+        // pending spare and odd lengths.
+        for len in [0usize, 1, 2, 5, 8, 33] {
+            let mut a = Pcg64::new(13);
+            let mut b = Pcg64::new(13);
+            let _ = a.normal(); // leave a spare pending in both
+            let _ = b.normal();
+            let mut bulk = vec![0f64; len];
+            a.fill_normal_f64(&mut bulk, 1.5, 0.25);
+            for (i, &v) in bulk.iter().enumerate() {
+                assert_eq!(v, b.normal_with(1.5, 0.25), "len {len} idx {i}");
+            }
+            // Generator states converge again afterwards.
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn fill_normal_f64_moments() {
+        let mut r = Pcg64::new(17);
+        let mut v = vec![0f64; 60_000];
+        r.fill_normal_f64(&mut v, 2.0, 3.0);
+        let n = v.len() as f64;
+        let mean = v.iter().sum::<f64>() / n;
+        let var = v.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+        assert!((mean - 2.0).abs() < 0.05, "mean {mean}");
+        assert!((var - 9.0).abs() < 0.3, "var {var}");
     }
 
     #[test]

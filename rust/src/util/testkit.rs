@@ -1,0 +1,104 @@
+//! Shared fixtures for the perf benches and equivalence tests
+//! (`benches/hotpath.rs`, `tests/perf_props.rs`): the pre-PR scalar
+//! drift path and synthetic programmed networks. Library code never
+//! uses these; they live here so the bench baseline and the
+//! correctness tests cannot drift apart.
+
+#![doc(hidden)]
+
+use crate::nn::manifest::ModelManifest;
+use crate::rram::mapping::ProgrammedNetwork;
+use crate::rram::{ConductanceGrid, DriftModel, MeasuredDrift, WEEK};
+use crate::util::json::parse;
+use crate::util::rng::Pcg64;
+use crate::util::tensor::{Tensor, TensorMap};
+
+/// Forces the pre-PR scalar path: forwards `sample` only (and hides
+/// `interp_levels`), so the trait's default per-scalar `sample_block`
+/// loop — one virtual call per device, all `t`-math recomputed per
+/// cell — runs underneath. This is the baseline every block-sampling
+/// speedup and equivalence claim is measured against.
+pub struct ScalarPath<M: DriftModel>(pub M);
+
+impl<M: DriftModel> DriftModel for ScalarPath<M> {
+    fn sample(&self, g: f64, t: f64, rng: &mut Pcg64) -> f64 {
+        self.0.sample(g, t, rng)
+    }
+
+    fn mean(&self, g: f64, t: f64) -> f64 {
+        self.0.mean(g, t)
+    }
+
+    fn name(&self) -> &str {
+        "scalar-path"
+    }
+}
+
+/// An 8-level measured-drift model over the paper's 5–40 µS grid.
+pub fn measured_model() -> MeasuredDrift {
+    MeasuredDrift::new(
+        (0..8).map(|i| 5.0 + 5.0 * i as f64).collect(),
+        (0..8).map(|i| 0.1 + 0.05 * i as f64).collect(),
+        (0..8).map(|i| 0.2 + 0.02 * i as f64).collect(),
+        WEEK,
+    )
+}
+
+/// A synthetic programmed network of `n_tensors` square rram tensors
+/// of side `side` (2·n_tensors·side² devices), exactly programmed —
+/// real multi-tensor fan-out for the parallel readout path without
+/// needing trained artifacts.
+pub fn synthetic_network(n_tensors: usize, side: usize)
+                         -> ProgrammedNetwork {
+    let weights: Vec<String> = (0..n_tensors)
+        .map(|i| {
+            format!(
+                "{{\"name\": \"t{i}.w\", \"shape\": [{side}, {side}], \
+                 \"rram\": true}}"
+            )
+        })
+        .collect();
+    let j = parse(&format!(
+        "{{\"model\": \"synthetic\", \"kind\": \"resnet\", \
+         \"classes\": 8, \"image\": 8, \"w_bits\": 4, \"a_bits\": 4, \
+         \"d_in_max\": 8, \"d_out_max\": 8, \"layers\": [], \
+         \"train_weights\": [], \"graphs\": {{}}, \
+         \"deploy_weights\": [{}]}}",
+        weights.join(", ")
+    ))
+    .expect("fixture manifest JSON is well-formed");
+    let manifest =
+        ModelManifest::from_json(&j, std::path::Path::new("."))
+            .expect("fixture manifest parses");
+    let mut deploy = TensorMap::new();
+    let mut rng = Pcg64::new(23);
+    for i in 0..n_tensors {
+        let mut w = vec![0f32; side * side];
+        rng.fill_normal_f32(&mut w, 0.0, 0.3);
+        deploy
+            .insert(format!("t{i}.w"), Tensor::from_f32(&[side, side], w));
+    }
+    let mut grid = ConductanceGrid::default();
+    grid.prog_sigma = 0.0;
+    ProgrammedNetwork::program(&manifest, &deploy, grid, &mut rng)
+        .expect("fixture network programs")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_network_has_expected_fanout() {
+        let net = synthetic_network(3, 16);
+        assert_eq!(net.tensors.len(), 3);
+        assert_eq!(net.devices(), 2 * 3 * 16 * 16);
+    }
+
+    #[test]
+    fn scalar_path_hides_block_hooks() {
+        let m = ScalarPath(measured_model());
+        assert!(m.interp_levels().is_none());
+        assert_eq!(m.name(), "scalar-path");
+    }
+}
