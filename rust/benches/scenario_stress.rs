@@ -1,0 +1,121 @@
+//! `cargo bench --bench scenario_stress`: scenario-engine overhead.
+//!
+//! Measures what the scenario layer costs on top of the plain fleet
+//! event loop, artifact-free:
+//!
+//! - a plain constant-rate fleet run (baseline);
+//! - the same run through `run_scenario` with a flat timeline (no
+//!   events) — the per-phase accounting overhead;
+//! - the chaos timeline (failure + refresh + retirement mid-burst) —
+//!   lifecycle events and redelivery included;
+//! - a faulted-bank drift readout vs a healthy bank — the per-segment
+//!   fault-override cost on the device hot path.
+//!
+//! `VERA_BENCH_QUICK=1` shrinks the measurement budget for CI.
+
+use vera_plus::coordinator::serve::{BatchPolicy, Workload};
+use vera_plus::fleet::{
+    analytic_fleet, AccuracyProfile, BalancePolicy, FleetConfig,
+};
+use vera_plus::rram::{ArrayBank, ConductanceGrid, IbmDrift, YEAR};
+use vera_plus::scenario::{
+    inject_faults, run_scenario, FaultSpec, ScenarioConfig, TrafficShape,
+};
+use vera_plus::util::bencher::Bencher;
+use vera_plus::util::rng::Pcg64;
+
+const CHIPS: usize = 6;
+const SECONDS: f64 = 4.0;
+
+fn fleet_cfg() -> FleetConfig {
+    FleetConfig {
+        n_chips: CHIPS,
+        t0: 30.0 * 86_400.0,
+        stagger: YEAR,
+        accel: 1e6,
+        policy: BalancePolicy::DriftAware,
+        batch: BatchPolicy {
+            max_batch: 32,
+            max_wait: 0.01,
+        },
+        exec_seconds_per_batch: 0.004,
+        seed: 0xbe5c,
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("VERA_BENCH_QUICK").is_ok();
+    let mut bench = if quick {
+        Bencher::quick()
+    } else {
+        Bencher::default()
+    };
+    let profile =
+        AccuracyProfile::synthetic(11, 10.0 * YEAR, 0.92, 0.02, 0.5);
+    let rate = 260.0 * CHIPS as f64;
+    let reqs_per_run = rate * SECONDS;
+
+    bench.bench_items("fleet/plain-loop", reqs_per_run, || {
+        let mut fleet = analytic_fleet(&fleet_cfg(), &profile);
+        let mut wl = Workload::new(rate, 11);
+        fleet
+            .run(SECONDS, SECONDS / 48.0, &mut wl, 512)
+            .expect("analytic fleet cannot fail");
+        fleet.flush().expect("flush cannot fail");
+        std::hint::black_box(fleet.metrics.served);
+    });
+
+    let flat = ScenarioConfig::new(
+        SECONDS,
+        SECONDS / 48.0,
+        TrafficShape::Constant { rate },
+        Vec::new(),
+    );
+    bench.bench_items("scenario/flat-timeline", reqs_per_run, || {
+        let mut fleet = analytic_fleet(&fleet_cfg(), &profile);
+        let mut wl = Workload::new(0.0, 11);
+        let out = run_scenario(&mut fleet, &flat, &mut wl, 512)
+            .expect("flat scenario cannot fail");
+        std::hint::black_box(out.summary.served);
+    });
+
+    let chaos = ScenarioConfig::chaos(CHIPS, SECONDS);
+    let chaos_reqs =
+        chaos.traffic.mean_rate(SECONDS, chaos.tick) * SECONDS;
+    bench.bench_items("scenario/chaos-timeline", chaos_reqs, || {
+        let mut fleet = analytic_fleet(&fleet_cfg(), &profile);
+        let mut wl = Workload::new(0.0, 11);
+        let out = run_scenario(&mut fleet, &chaos, &mut wl, 512)
+            .expect("chaos scenario cannot fail");
+        std::hint::black_box(out.summary.served);
+    });
+
+    // Device hot path: faulted vs healthy bank readout.
+    let n_cells = if quick { 65_536 } else { 262_144 };
+    let mut grid = ConductanceGrid::default();
+    grid.prog_sigma = 0.0;
+    let targets: Vec<f64> =
+        (0..n_cells).map(|i| 5.0 + 5.0 * (i % 8) as f64).collect();
+    let mut healthy = ArrayBank::default();
+    let segs = healthy.program(&targets, &grid, &mut Pcg64::new(1));
+    let mut faulted = ArrayBank::default();
+    let fsegs = faulted.program(&targets, &grid, &mut Pcg64::new(1));
+    inject_faults(&mut faulted, &FaultSpec::uniform(0.01), 7)?;
+    let model = IbmDrift::default();
+    let mut out = vec![0f32; n_cells];
+    bench.bench_items("rram/readout-healthy", n_cells as f64, || {
+        let mut rng = Pcg64::new(5);
+        healthy.read_drifted_slice(&segs, YEAR, &model, &mut rng,
+                                   &mut out);
+        std::hint::black_box(out[0]);
+    });
+    bench.bench_items("rram/readout-faulted-1pct", n_cells as f64, || {
+        let mut rng = Pcg64::new(5);
+        faulted.read_drifted_slice(&fsegs, YEAR, &model, &mut rng,
+                                   &mut out);
+        std::hint::black_box(out[0]);
+    });
+
+    bench.write_json("scenario_stress")?;
+    Ok(())
+}

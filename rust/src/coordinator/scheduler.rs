@@ -5,12 +5,21 @@
 //! EVALSTATS, and allocates + trains a new compensation set only when the
 //! 99.7% lower confidence bound `µ − 3σ` falls below the accuracy floor.
 //! Output is a [`SetStore`] plus a full decision log for the harness.
+//!
+//! The decision procedure itself is pure control flow over an
+//! evaluate/train surface, so it is factored behind [`CompOracle`]:
+//! [`schedule`] wires the oracle to the real PJRT-backed [`Deployment`]
+//! ([`DeploymentOracle`]), while the property suite
+//! (`rust/tests/scheduler_props.rs`) drives [`schedule_with`] through a
+//! closed-form analytic oracle — Algorithm 1's invariants are testable
+//! without artifacts or training runs.
 
 use crate::compensation::{CompSet, SetStore};
-use crate::coordinator::eval::{self, EvalMode};
+use crate::coordinator::eval::{self, EvalMode, Stats};
 use crate::coordinator::trainer::{self, CompTrainCfg};
 use crate::coordinator::Deployment;
 use crate::util::rng::Pcg64;
+use crate::util::tensor::TensorMap;
 use anyhow::Result;
 
 /// Scheduler configuration (paper Alg. 1 inputs).
@@ -65,53 +74,144 @@ pub struct ScheduleResult {
     pub decisions: Vec<Decision>,
 }
 
+/// The evaluate/train surface Algorithm 1 drives. One implementation
+/// ([`DeploymentOracle`]) runs the real pipeline — PJRT executables,
+/// drift-injected EVALSTATS, compensation training; tests substitute a
+/// closed-form oracle to check the algorithm's decision invariants in
+/// isolation.
+pub trait CompOracle {
+    /// Drift-free reference accuracy (t = 0 readout, plain forward).
+    fn drift_free(&mut self) -> Result<f64>;
+
+    /// EVALSTATS at device age `t` under compensation `trainables`
+    /// (paper Alg. 1 line 4).
+    fn eval(&mut self, trainables: &TensorMap, t: f64) -> Result<Stats>;
+
+    /// Fresh compensation initialization ("Initialize b(t), d(t)").
+    fn fresh_init(&mut self, tag: u64) -> TensorMap;
+
+    /// Train a compensation set for drift level `t` from `init`;
+    /// returns (trainables, final loss).
+    fn train(
+        &mut self,
+        t: f64,
+        init: TensorMap,
+    ) -> Result<(TensorMap, f64)>;
+
+    /// (model, method, rank, projection_seed) stamped onto the emitted
+    /// [`SetStore`].
+    fn store_meta(&self) -> (String, String, usize, u64) {
+        ("oracle".to_string(), "veraplus".to_string(), 1, 0)
+    }
+}
+
+/// [`CompOracle`] over a real [`Deployment`]: the production path.
+pub struct DeploymentOracle<'a> {
+    dep: &'a Deployment,
+    n_instances: usize,
+    max_samples: usize,
+    train: CompTrainCfg,
+    rng: Pcg64,
+}
+
+impl<'a> DeploymentOracle<'a> {
+    pub fn new(dep: &'a Deployment, cfg: &ScheduleCfg)
+               -> DeploymentOracle<'a> {
+        DeploymentOracle {
+            dep,
+            n_instances: cfg.n_instances,
+            max_samples: cfg.max_samples,
+            train: cfg.train.clone(),
+            rng: Pcg64::with_stream(cfg.seed, 0xa160),
+        }
+    }
+}
+
+impl CompOracle for DeploymentOracle<'_> {
+    fn drift_free(&mut self) -> Result<f64> {
+        let ideal = self.dep.net.read_ideal();
+        let empty = TensorMap::new();
+        eval::eval_accuracy(
+            self.dep,
+            &ideal,
+            &empty,
+            EvalMode::Plain,
+            self.max_samples,
+        )
+    }
+
+    fn eval(&mut self, trainables: &TensorMap, t: f64) -> Result<Stats> {
+        eval::eval_stats(
+            self.dep,
+            trainables,
+            EvalMode::Compensated,
+            t,
+            self.n_instances,
+            self.max_samples,
+            &mut self.rng,
+        )
+    }
+
+    fn fresh_init(&mut self, tag: u64) -> TensorMap {
+        self.dep.fresh_trainables(tag)
+    }
+
+    fn train(
+        &mut self,
+        t: f64,
+        init: TensorMap,
+    ) -> Result<(TensorMap, f64)> {
+        let result = trainer::train_comp_at(
+            self.dep,
+            t,
+            init,
+            &self.train,
+            &mut self.rng,
+        )?;
+        Ok((result.trainables, result.final_loss))
+    }
+
+    fn store_meta(&self) -> (String, String, usize, u64) {
+        (
+            self.dep.manifest.model.clone(),
+            self.dep.method.clone(),
+            self.dep.rank,
+            self.dep.projection_seed,
+        )
+    }
+}
+
 /// Run Algorithm 1 against a deployment.
 pub fn schedule(dep: &Deployment, cfg: &ScheduleCfg)
                 -> Result<ScheduleResult> {
-    let mut rng = Pcg64::with_stream(cfg.seed, 0xa160);
-    // Drift-free reference accuracy (t = 0 readout, plain forward).
-    let ideal = dep.net.read_ideal();
-    let empty = crate::util::tensor::TensorMap::new();
-    let drift_free_acc = eval::eval_accuracy(
-        dep,
-        &ideal,
-        &empty,
-        EvalMode::Plain,
-        cfg.max_samples,
-    )?;
+    let mut oracle = DeploymentOracle::new(dep, cfg);
+    schedule_with(&mut oracle, cfg)
+}
+
+/// Algorithm 1 over any [`CompOracle`] — the paper's decision
+/// procedure, line-for-line, independent of how accuracy is estimated
+/// or sets are trained.
+pub fn schedule_with(
+    oracle: &mut dyn CompOracle,
+    cfg: &ScheduleCfg,
+) -> Result<ScheduleResult> {
+    let drift_free_acc = oracle.drift_free()?;
     let floor_acc = cfg.norm_floor * drift_free_acc;
 
-    let mut store = SetStore::new(
-        &dep.manifest.model,
-        &dep.method,
-        dep.rank,
-        dep.projection_seed,
-    );
+    let (model, method, rank, projection_seed) = oracle.store_meta();
+    let mut store = SetStore::new(&model, &method, rank, projection_seed);
     let mut decisions = Vec::new();
 
     // Line 1: t ← 1; the initial set is trained at t = 1 s so deployment
     // always has a set to select.
     let mut t = 1.0f64;
-    let first = trainer::train_comp_at(
-        dep,
-        t,
-        dep.fresh_trainables(cfg.seed),
-        &cfg.train,
-        &mut rng,
-    )?;
-    let first_stats = eval::eval_stats(
-        dep,
-        &first.trainables,
-        EvalMode::Compensated,
-        t,
-        cfg.n_instances,
-        cfg.max_samples,
-        &mut rng,
-    )?;
+    let init = oracle.fresh_init(cfg.seed);
+    let (first_trainables, first_loss) = oracle.train(t, init)?;
+    let first_stats = oracle.eval(&first_trainables, t)?;
     store.insert(CompSet {
         t_start: t,
-        trainables: first.trainables,
-        train_loss: first.final_loss,
+        trainables: first_trainables,
+        train_loss: first_loss,
         accuracy: first_stats.mean,
     });
     decisions.push(Decision {
@@ -132,15 +232,7 @@ pub fn schedule(dep: &Deployment, cfg: &ScheduleCfg)
             .trainables
             .clone();
         // Line 4: EVALSTATS over drift instances with the active set.
-        let stats = eval::eval_stats(
-            dep,
-            &active,
-            EvalMode::Compensated,
-            t,
-            cfg.n_instances,
-            cfg.max_samples,
-            &mut rng,
-        )?;
+        let stats = oracle.eval(&active, t)?;
         let needs_new = stats.lower_3sigma() < floor_acc; // line 5
         let mut trained = false;
         if needs_new {
@@ -149,38 +241,22 @@ pub fn schedule(dep: &Deployment, cfg: &ScheduleCfg)
             // the active set at this drift level (protects the store
             // against an occasional diverged training run); the warm
             // start is retried from a fresh init when it fails.
-            let mut best: Option<(crate::util::tensor::TensorMap, f64,
-                                  f64)> = None;
-            let inits: Vec<crate::util::tensor::TensorMap> =
-                if cfg.train.warm_start {
-                    vec![
-                        active.clone(),
-                        dep.fresh_trainables(cfg.seed ^ t.to_bits()),
-                    ]
-                } else {
-                    vec![dep.fresh_trainables(cfg.seed ^ t.to_bits())]
-                };
+            let mut best: Option<(TensorMap, f64, f64)> = None;
+            let inits: Vec<TensorMap> = if cfg.train.warm_start {
+                vec![
+                    active.clone(),
+                    oracle.fresh_init(cfg.seed ^ t.to_bits()),
+                ]
+            } else {
+                vec![oracle.fresh_init(cfg.seed ^ t.to_bits())]
+            };
             for init in inits {
-                let result = trainer::train_comp_at(
-                    dep, t, init, &cfg.train, &mut rng,
-                )?;
-                let post = eval::eval_stats(
-                    dep,
-                    &result.trainables,
-                    EvalMode::Compensated,
-                    t,
-                    cfg.n_instances,
-                    cfg.max_samples,
-                    &mut rng,
-                )?;
+                let (trainables, loss) = oracle.train(t, init)?;
+                let post = oracle.eval(&trainables, t)?;
                 if best.as_ref().map_or(true, |(_, _, acc)| {
                     post.mean > *acc
                 }) {
-                    best = Some((
-                        result.trainables,
-                        result.final_loss,
-                        post.mean,
-                    ));
+                    best = Some((trainables, loss, post.mean));
                 }
                 // Good enough: stop after the first candidate that
                 // clears the floor.

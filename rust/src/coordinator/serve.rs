@@ -252,6 +252,22 @@ impl<'a> Server<'a> {
         self.queue.push_back(req);
     }
 
+    /// Remove and return every queued request (oldest first) without
+    /// executing — the fleet failover path redelivers them elsewhere.
+    pub fn take_queue(&mut self) -> Vec<Request> {
+        self.queue.drain(..).collect()
+    }
+
+    /// Reprogramming/refresh campaign: the RRAM arrays are rewritten at
+    /// device age `t0`, so the drift clock restarts and the next batch
+    /// re-selects from the bottom of the compensation ladder. The
+    /// drifted-weight view is refreshed on that next `route()` (the
+    /// era is cleared here), sampling at the young age.
+    pub fn refresh(&mut self, t0: f64) {
+        self.clock = LifetimeClock::new(t0, self.clock.accel);
+        self.active_set = None;
+    }
+
     /// Route: pick the set for the current age; reload SRAM + refresh the
     /// drifted weight view when the era changes.
     fn route(&mut self) -> usize {

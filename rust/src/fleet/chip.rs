@@ -51,6 +51,18 @@ pub trait ChipEngine: Send {
     /// RRAM devices).
     fn advance_idle(&mut self, wall_seconds: f64);
 
+    /// Remove and return every queued (not yet executed) request. The
+    /// fleet failover path hands these back to the router so a dead
+    /// chip's backlog is redelivered exactly once.
+    fn take_queue(&mut self) -> Vec<Request>;
+
+    /// Reprogramming/refresh campaign: the arrays are rewritten, which
+    /// resets the programming-age clock to `t0` (the drift clock the
+    /// scheduler keys on restarts) and drops the active compensation
+    /// era, so serving re-enters the set ladder at set 0 on the next
+    /// batch.
+    fn refresh(&mut self, t0: f64);
+
     /// Execute one batch (no-op on an empty queue), returning its
     /// [`Completion`]s.
     fn step(&mut self, wall_per_exec: f64) -> Result<Vec<Completion>>;
@@ -94,6 +106,14 @@ impl ChipEngine for Server<'_> {
 
     fn advance_idle(&mut self, wall_seconds: f64) {
         self.clock.advance(wall_seconds);
+    }
+
+    fn take_queue(&mut self) -> Vec<Request> {
+        Server::take_queue(self)
+    }
+
+    fn refresh(&mut self, t0: f64) {
+        Server::refresh(self, t0);
     }
 
     fn step(&mut self, wall_per_exec: f64) -> Result<Vec<Completion>> {
@@ -182,6 +202,12 @@ impl AnalyticEngine {
             batch.len() as f64 / self.policy.max_batch as f64;
         out
     }
+
+    /// The compensation era the last executed batch ran under (`None`
+    /// before the first batch and right after a refresh).
+    pub fn active_segment(&self) -> Option<usize> {
+        self.active_segment
+    }
 }
 
 impl ChipEngine for AnalyticEngine {
@@ -208,6 +234,15 @@ impl ChipEngine for AnalyticEngine {
 
     fn advance_idle(&mut self, wall_seconds: f64) {
         self.clock.advance(wall_seconds);
+    }
+
+    fn take_queue(&mut self) -> Vec<Request> {
+        self.queue.drain(..).collect()
+    }
+
+    fn refresh(&mut self, t0: f64) {
+        self.clock = LifetimeClock::new(t0, self.clock.accel);
+        self.active_segment = None;
     }
 
     fn step(&mut self, wall_per_exec: f64) -> Result<Vec<Completion>> {
@@ -283,6 +318,43 @@ mod tests {
         let acc = e.metrics.accuracy();
         // Bernoulli(0.7) over 4000 draws: σ ≈ 0.0072.
         assert!((acc - 0.7).abs() < 0.04, "acc {acc}");
+    }
+
+    #[test]
+    fn refresh_resets_age_and_active_set() {
+        // Two-era profile: refresh must walk serving back to set 0.
+        let profile = AccuracyProfile::new(
+            vec![
+                crate::fleet::Segment { t_start: 1.0, accuracy: 0.95 },
+                crate::fleet::Segment { t_start: 1e6, accuracy: 0.9 },
+            ],
+            0.0,
+            0.5,
+        );
+        let mut e = AnalyticEngine::new(
+            Arc::new(profile),
+            LifetimeClock::new(5e6, 1e6),
+            BatchPolicy { max_batch: 8, max_wait: 0.01 },
+            3,
+        );
+        ChipEngine::submit(&mut e, req(0, 0.0));
+        let old = e.drain_budgeted(1, 0.001).unwrap();
+        assert_eq!(old[0].set_index, 1);
+        ChipEngine::refresh(&mut e, 1.0);
+        assert!(ChipEngine::device_age(&e) < 2.0);
+        assert_eq!(e.active_segment(), None);
+        // Queued work survives a refresh; the next batch runs on set 0.
+        ChipEngine::submit(&mut e, req(1, 0.0));
+        let fresh = e.drain_budgeted(1, 0.001).unwrap();
+        assert_eq!(fresh[0].set_index, 0);
+        assert!((ChipEngine::predicted_accuracy(&e) - 0.95).abs() < 1e-9);
+        // take_queue drains without serving.
+        ChipEngine::submit(&mut e, req(2, 0.0));
+        ChipEngine::submit(&mut e, req(3, 0.0));
+        let taken = ChipEngine::take_queue(&mut e);
+        assert_eq!(taken.iter().map(|r| r.id).collect::<Vec<_>>(),
+                   vec![2, 3]);
+        assert_eq!(ChipEngine::queue_len(&e), 0);
     }
 
     #[test]

@@ -8,11 +8,17 @@ use crate::fleet::chip::ChipEngine;
 /// Per-chip load/outcome counters maintained by the fleet loop.
 #[derive(Debug, Clone, Default)]
 pub struct ChipLoad {
-    /// Requests the router assigned to this chip.
+    /// Requests the router assigned to this chip (first routing only:
+    /// a request redelivered off a failed chip stays counted here, so
+    /// `total_routed` equals unique requests and conservation checks
+    /// stay exact across failures).
     pub routed: usize,
-    /// Requests completed (equals `routed` once queues flush).
+    /// Requests completed (equals `routed` once queues flush, except
+    /// for requests requeued to another chip by a failure).
     pub served: usize,
     pub correct: usize,
+    /// Requests moved OFF this chip by a failure event.
+    pub requeued: usize,
     /// Queue depth sampled at the end of each tick.
     pub queue_depth_sum: f64,
     pub queue_samples: usize,
@@ -49,6 +55,11 @@ pub struct FleetMetrics {
     pub ticks: usize,
     /// Serving wall time covered by the ticks so far (seconds).
     pub wall: f64,
+    /// Requests redelivered off failed chips (fleet-wide).
+    pub requeues: usize,
+    /// Sum over sampled ticks of the live-chip count — availability is
+    /// `alive_chip_ticks / (ticks · n_chips)`.
+    pub alive_chip_ticks: usize,
 }
 
 impl FleetMetrics {
@@ -82,9 +93,29 @@ impl FleetMetrics {
         load.max_queue_depth = load.max_queue_depth.max(depth);
     }
 
-    pub fn end_tick(&mut self, dt: f64) {
+    /// Record a failure redelivery: the request leaves `from`'s queue.
+    /// The destination's `routed` is NOT incremented — `routed` counts
+    /// unique requests (first routing), so conservation stays exact.
+    pub fn record_requeue(&mut self, from: usize, n: usize) {
+        self.per_chip[from].requeued += n;
+        self.requeues += n;
+    }
+
+    pub fn end_tick(&mut self, dt: f64, alive_chips: usize) {
         self.ticks += 1;
         self.wall += dt;
+        self.alive_chip_ticks += alive_chips;
+    }
+
+    /// Mean fraction of chips in the `Alive` state over sampled ticks
+    /// (1.0 until the first lifecycle event).
+    pub fn availability(&self) -> f64 {
+        if self.ticks == 0 || self.per_chip.is_empty() {
+            1.0
+        } else {
+            self.alive_chip_ticks as f64
+                / (self.ticks * self.per_chip.len()) as f64
+        }
     }
 
     /// Account serving wall time without counting a tick (flush
@@ -139,6 +170,45 @@ pub struct ChipSummary {
     pub mean_occupancy: f64,
 }
 
+/// One scenario phase's slice of a fleet run: the interval between two
+/// timeline events. Filled in by the scenario engine
+/// ([`crate::scenario`]) from the completions delivered while the phase
+/// was active.
+#[derive(Debug, Clone)]
+pub struct PhaseSummary {
+    pub name: String,
+    /// Phase interval on the serving wall axis (seconds).
+    pub start: f64,
+    pub end: f64,
+    pub served: usize,
+    pub accuracy: f64,
+    pub p50_latency: f64,
+    pub p99_latency: f64,
+    /// Mean fraction of chips alive over the phase's ticks.
+    pub availability: f64,
+    /// Requests redelivered off failed chips during the phase.
+    pub requeued: usize,
+}
+
+impl PhaseSummary {
+    pub fn print(&self) {
+        println!(
+            "phase {:<18} [{:>6.1}s..{:>6.1}s] served {:>7} \
+             acc {:>6.2}% p50 {:>7.1} ms p99 {:>7.1} ms \
+             avail {:>5.1}% requeued {}",
+            self.name,
+            self.start,
+            self.end,
+            self.served,
+            100.0 * self.accuracy,
+            1e3 * self.p50_latency,
+            1e3 * self.p99_latency,
+            100.0 * self.availability,
+            self.requeued,
+        );
+    }
+}
+
 /// Snapshot combining fleet counters with each engine's own metrics.
 #[derive(Debug, Clone)]
 pub struct FleetSummary {
@@ -150,6 +220,13 @@ pub struct FleetSummary {
     pub throughput: f64,
     pub set_switches: usize,
     pub wall: f64,
+    /// Mean live-chip fraction over sampled ticks.
+    pub availability: f64,
+    /// Failure redeliveries across the run.
+    pub requeues: usize,
+    /// Per-phase breakdown when the run came from the scenario engine
+    /// (empty for plain fleet runs).
+    pub phases: Vec<PhaseSummary>,
 }
 
 impl FleetSummary {
@@ -192,6 +269,9 @@ impl FleetSummary {
             p99_latency: percentile_sorted(&sorted, 0.99),
             throughput: fm.throughput(),
             wall: fm.wall,
+            availability: fm.availability(),
+            requeues: fm.requeues,
+            phases: Vec::new(),
             chips: rows,
         }
     }
@@ -220,14 +300,23 @@ impl FleetSummary {
         }
         println!(
             "fleet: served {} | acc {:.2}% | p50 {:.1} ms | p99 {:.1} ms \
-             | {:.0} req/s | {} set switches",
+             | {:.0} req/s | {} set switches | avail {:.1}%{}",
             self.served,
             100.0 * self.accuracy,
             1e3 * self.p50_latency,
             1e3 * self.p99_latency,
             self.throughput,
             self.set_switches,
+            100.0 * self.availability,
+            if self.requeues > 0 {
+                format!(" | {} requeued", self.requeues)
+            } else {
+                String::new()
+            },
         );
+        for p in &self.phases {
+            p.print();
+        }
     }
 }
 
@@ -258,10 +347,16 @@ mod tests {
         m.record_completions(1, &[comp(2, true, 0.2)]);
         m.observe_queue(0, 4);
         m.observe_queue(0, 2);
-        m.end_tick(0.5);
-        m.end_tick(0.5);
+        m.end_tick(0.5, 2);
+        m.end_tick(0.5, 1);
         assert_eq!(m.served, 3);
         assert_eq!(m.ticks, 2);
+        // 2-of-2 then 1-of-2 alive → 75% availability.
+        assert!((m.availability() - 0.75).abs() < 1e-12);
+        m.record_requeue(1, 3);
+        assert_eq!(m.requeues, 3);
+        assert_eq!(m.per_chip[1].requeued, 3);
+        // Requeues never touch routed: conservation counts stay exact.
         assert_eq!(m.total_routed(), 3);
         assert!((m.accuracy() - 2.0 / 3.0).abs() < 1e-12);
         assert!((m.per_chip[0].mean_queue_depth() - 3.0).abs() < 1e-12);

@@ -33,7 +33,9 @@ pub mod profile;
 pub mod router;
 
 pub use chip::{AnalyticEngine, ChipEngine};
-pub use metrics::{ChipLoad, ChipSummary, FleetMetrics, FleetSummary};
+pub use metrics::{
+    ChipLoad, ChipSummary, FleetMetrics, FleetSummary, PhaseSummary,
+};
 pub use profile::{AccuracyProfile, Segment};
 pub use router::{BalancePolicy, ChipView, Router};
 
@@ -41,8 +43,22 @@ use crate::coordinator::serve::{
     BatchPolicy, Completion, LifetimeClock, Workload,
 };
 use crate::util::parallel;
-use anyhow::Result;
+use anyhow::{bail, Result};
 use std::sync::Arc;
+
+/// Lifecycle state of one fleet shard (scenario engine events move
+/// chips between states; a plain fleet run stays `Alive` throughout).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChipState {
+    /// Routable and serving.
+    Alive,
+    /// Planned removal: takes no new traffic but keeps draining its
+    /// backlog (graceful retirement).
+    Retired,
+    /// Crashed: takes no traffic and executes nothing; its queue was
+    /// redelivered to the survivors when it failed.
+    Failed,
+}
 
 /// Fleet-wide queued requests below which a service window stays on
 /// the serial path: fanning a handful of cheap analytic drains over
@@ -124,6 +140,8 @@ pub struct Fleet<E: ChipEngine> {
     /// front of the next successful window instead of being dropped —
     /// exactly-once delivery survives a failed tick.
     pending: Vec<FleetCompletion>,
+    /// Per-chip lifecycle state (all `Alive` until a scenario event).
+    state: Vec<ChipState>,
     /// Reference clock handed to the workload generator; request
     /// arrival ages are re-stamped with the routed chip's age.
     ref_clock: LifetimeClock,
@@ -146,12 +164,101 @@ impl<E: ChipEngine> Fleet<E> {
             exec_credit: vec![0.0; n],
             age_debt: vec![0.0; n],
             pending: Vec::new(),
+            state: vec![ChipState::Alive; n],
             ref_clock: LifetimeClock::new(0.0, 0.0),
         }
     }
 
     pub fn n_chips(&self) -> usize {
         self.chips.len()
+    }
+
+    pub fn chip_state(&self, chip: usize) -> ChipState {
+        self.state[chip]
+    }
+
+    /// Chips currently in the `Alive` (routable) state.
+    pub fn n_alive(&self) -> usize {
+        self.state
+            .iter()
+            .filter(|&&s| s == ChipState::Alive)
+            .count()
+    }
+
+    /// Crash chip `chip`: evict it from the router and redeliver its
+    /// queued requests to the surviving chips, exactly once (their
+    /// first-routing counts are untouched; `metrics.requeues` records
+    /// the redelivery). Idempotent on an already-failed chip. Refuses
+    /// to kill the last routable chip — the backlog would be stranded.
+    /// Returns the number of redelivered requests.
+    pub fn fail_chip(&mut self, chip: usize) -> Result<usize> {
+        if chip >= self.chips.len() {
+            bail!("no chip {chip} in a {}-chip fleet", self.chips.len());
+        }
+        if self.state[chip] == ChipState::Failed {
+            return Ok(0);
+        }
+        let was = self.state[chip];
+        self.state[chip] = ChipState::Failed;
+        if self.n_alive() == 0 {
+            self.state[chip] = was;
+            bail!("cannot fail chip {chip}: no live chip would remain");
+        }
+        let orphans = self.chips[chip].take_queue();
+        let n = orphans.len();
+        let mut views = self.views();
+        for mut req in orphans {
+            let i = self.router.route(&views);
+            views[i].queue_len += 1;
+            req.arrival_age = self.chips[i].device_age();
+            self.chips[i].submit(req);
+        }
+        self.metrics.record_requeue(chip, n);
+        Ok(n)
+    }
+
+    /// Gracefully retire chip `chip`: it takes no new traffic but keeps
+    /// draining its backlog. Refuses to retire the last routable chip.
+    pub fn retire_chip(&mut self, chip: usize) -> Result<()> {
+        if chip >= self.chips.len() {
+            bail!("no chip {chip} in a {}-chip fleet", self.chips.len());
+        }
+        if self.state[chip] != ChipState::Alive {
+            return Ok(());
+        }
+        self.state[chip] = ChipState::Retired;
+        if self.n_alive() == 0 {
+            self.state[chip] = ChipState::Alive;
+            bail!("cannot retire chip {chip}: no live chip would remain");
+        }
+        Ok(())
+    }
+
+    /// Reprogramming/refresh campaign on chip `chip`: the arrays are
+    /// rewritten, the programming-age clock restarts at `t0`, serving
+    /// re-enters the compensation ladder at set 0, and the chip rejoins
+    /// the routable pool (this is also the replacement path — a swapped
+    /// chip is a refresh to a fresh programming age).
+    pub fn refresh_chip(&mut self, chip: usize, t0: f64) -> Result<()> {
+        if chip >= self.chips.len() {
+            bail!("no chip {chip} in a {}-chip fleet", self.chips.len());
+        }
+        self.chips[chip].refresh(t0);
+        self.state[chip] = ChipState::Alive;
+        Ok(())
+    }
+
+    /// Router-facing snapshots of every chip (queue, prediction, alive).
+    fn views(&self) -> Vec<ChipView> {
+        self.chips
+            .iter()
+            .zip(&self.state)
+            .map(|(c, &s)| ChipView {
+                queue_len: c.queue_len(),
+                predicted_acc: c.predicted_accuracy(),
+                alive: s == ChipState::Alive,
+            })
+            .collect()
     }
 
     pub fn mean_device_age(&self) -> f64 {
@@ -179,14 +286,7 @@ impl<E: ChipEngine> Fleet<E> {
         test_len: usize,
     ) -> Result<Vec<FleetCompletion>> {
         let reqs = workload.arrivals(dt, &self.ref_clock, test_len);
-        let mut views: Vec<ChipView> = self
-            .chips
-            .iter()
-            .map(|c| ChipView {
-                queue_len: c.queue_len(),
-                predicted_acc: c.predicted_accuracy(),
-            })
-            .collect();
+        let mut views = self.views();
         for mut req in reqs {
             let i = self.router.route(&views);
             views[i].queue_len += 1;
@@ -224,12 +324,19 @@ impl<E: ChipEngine> Fleet<E> {
         };
         let credits: &[f64] = &self.exec_credit;
         let debts: &[f64] = &self.age_debt;
+        let states: &[ChipState] = &self.state;
         let results = parallel::map_mut(
             threads,
             &mut self.chips,
             |i, chip| -> Result<(Vec<Completion>, f64)> {
                 let credit = credits[i] + dt;
-                let budget = (credit / exec).floor() as usize;
+                // A failed chip executes nothing; its devices keep
+                // drifting through the idle advance below.
+                let budget = if states[i] == ChipState::Failed {
+                    0
+                } else {
+                    (credit / exec).floor() as usize
+                };
                 let batches_before = chip.metrics().batches;
                 let comps = chip.drain_budgeted(budget, exec)?;
                 let executed = chip.metrics().batches - batches_before;
@@ -284,7 +391,8 @@ impl<E: ChipEngine> Fleet<E> {
         }
         self.ref_clock.advance(dt);
         if sample {
-            self.metrics.end_tick(dt);
+            let alive = self.n_alive();
+            self.metrics.end_tick(dt, alive);
         } else {
             self.metrics.add_wall(dt);
         }
@@ -315,7 +423,16 @@ impl<E: ChipEngine> Fleet<E> {
     /// dump.
     pub fn flush(&mut self) -> Result<Vec<FleetCompletion>> {
         let mut out = Vec::new();
-        while self.chips.iter().any(|c| c.queue_len() > 0) {
+        // Failed chips never execute, so their (empty-by-invariant)
+        // queues must not gate the loop.
+        while self
+            .chips
+            .iter()
+            .zip(&self.state)
+            .any(|(c, &s)| {
+                s != ChipState::Failed && c.queue_len() > 0
+            })
+        {
             out.extend(
                 self.service_window(self.exec_seconds_per_batch,
                                     false)?,
@@ -414,6 +531,101 @@ mod tests {
         let s = fleet.summary();
         assert_eq!(s.served, comps.len());
         assert!(s.throughput > 0.0);
+    }
+
+    #[test]
+    fn chip_failure_requeues_backlog_and_conserves_requests() {
+        let mut cfg = small_cfg(BalancePolicy::RoundRobin);
+        // Slow chips (2 batches of 32 per 0.1 s tick = 64 req/chip)
+        // under ~100 req/chip/tick: failure finds a real backlog.
+        cfg.exec_seconds_per_batch = 0.05;
+        let profile = AccuracyProfile::uncompensated(1.0, 0.0, 0.5);
+        let mut fleet = analytic_fleet(&cfg, &profile);
+        let mut wl = Workload::new(3000.0, 17);
+        let mut comps = Vec::new();
+        for _ in 0..3 {
+            comps.extend(fleet.tick(0.1, &mut wl, 64).unwrap());
+        }
+        assert!(fleet.chips[1].queue_len() > 0, "need a backlog");
+        let requeued = fleet.fail_chip(1).unwrap();
+        assert!(requeued > 0);
+        assert_eq!(fleet.chips[1].queue_len(), 0);
+        assert_eq!(fleet.chip_state(1), ChipState::Failed);
+        assert_eq!(fleet.n_alive(), 2);
+        assert_eq!(fleet.metrics.requeues, requeued);
+        // Idempotent re-fail.
+        assert_eq!(fleet.fail_chip(1).unwrap(), 0);
+        let dead_served = fleet.metrics.per_chip[1].served;
+        for _ in 0..3 {
+            comps.extend(fleet.tick(0.1, &mut wl, 64).unwrap());
+        }
+        comps.extend(fleet.flush().unwrap());
+        // Exactly-once across the failure: ids are 0..routed with no
+        // gaps or duplicates, and the dead chip served nothing more.
+        let mut ids: Vec<u64> =
+            comps.iter().map(|c| c.completion.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids.len(), fleet.metrics.total_routed());
+        for (want, &got) in (0..ids.len() as u64).zip(&ids) {
+            assert_eq!(got, want, "id {want} lost or duplicated");
+        }
+        assert_eq!(fleet.metrics.per_chip[1].served, dead_served);
+        // Availability dipped below 1 once the failure was sampled.
+        assert!(fleet.metrics.availability() < 1.0);
+    }
+
+    #[test]
+    fn refresh_revives_and_rejuvenates_a_chip() {
+        let mut cfg = small_cfg(BalancePolicy::DriftAware);
+        // Youngest chip one month old, so a refresh to age 1 s makes
+        // the refreshed chip strictly the best prediction in the fleet.
+        cfg.t0 = 30.0 * 86_400.0;
+        // Strong uncompensated decay: old chips predict much worse.
+        let profile = AccuracyProfile::uncompensated(0.95, 0.08, 0.1);
+        let mut fleet = analytic_fleet(&cfg, &profile);
+        let old_age = fleet.chips[2].device_age();
+        assert!(old_age > YEAR);
+        fleet.fail_chip(2).unwrap();
+        fleet.refresh_chip(2, 1.0).unwrap();
+        assert_eq!(fleet.chip_state(2), ChipState::Alive);
+        assert!(fleet.chips[2].device_age() < 2.0);
+        // Freshly programmed ⇒ best predicted accuracy in the fleet ⇒
+        // drift-aware routing sends the next burst to it.
+        let mut wl = Workload::new(100.0, 3);
+        fleet.tick(0.2, &mut wl, 64).unwrap();
+        let routed: Vec<usize> = fleet
+            .metrics
+            .per_chip
+            .iter()
+            .map(|c| c.routed)
+            .collect();
+        assert!(routed[2] > 0, "refreshed chip got no traffic: {routed:?}");
+        assert!(routed[0] == 0 && routed[1] == 0,
+                "older chips should lose equal-load traffic: {routed:?}");
+    }
+
+    #[test]
+    fn lifecycle_guards_protect_the_last_live_chip() {
+        let mut cfg = small_cfg(BalancePolicy::LeastQueue);
+        cfg.n_chips = 2;
+        let profile = AccuracyProfile::uncompensated(0.9, 0.0, 0.5);
+        let mut fleet = analytic_fleet(&cfg, &profile);
+        fleet.fail_chip(0).unwrap();
+        assert!(fleet.fail_chip(1).is_err());
+        assert!(fleet.retire_chip(1).is_err());
+        assert_eq!(fleet.chip_state(1), ChipState::Alive);
+        assert!(fleet.fail_chip(9).is_err());
+        // Retired chip drains its backlog but takes no new traffic.
+        let mut wl = Workload::new(400.0, 5);
+        fleet.tick(0.2, &mut wl, 64).unwrap();
+        fleet.refresh_chip(0, 1.0).unwrap();
+        fleet.retire_chip(1).unwrap();
+        let before = fleet.metrics.per_chip[1].routed;
+        fleet.tick(0.2, &mut wl, 64).unwrap();
+        assert_eq!(fleet.metrics.per_chip[1].routed, before);
+        fleet.flush().unwrap();
+        assert_eq!(fleet.chips[1].queue_len(), 0);
+        assert_eq!(fleet.metrics.served, fleet.metrics.total_routed());
     }
 
     #[test]

@@ -60,6 +60,20 @@ pub struct ChipView {
     pub queue_len: usize,
     /// Scheduler-predicted accuracy at the chip's current device age.
     pub predicted_acc: f64,
+    /// Routable: failed/retired chips are skipped by every policy.
+    pub alive: bool,
+}
+
+impl ChipView {
+    /// A healthy chip view (the common case in tests and call sites
+    /// that predate chip-lifecycle events).
+    pub fn healthy(queue_len: usize, predicted_acc: f64) -> ChipView {
+        ChipView {
+            queue_len,
+            predicted_acc,
+            alive: true,
+        }
+    }
 }
 
 /// The shard router.
@@ -81,37 +95,64 @@ impl Router {
         }
     }
 
-    /// Pick the chip for the next request. Ties break to the lowest
-    /// chip index, which keeps routing deterministic.
+    /// Pick the chip for the next request, considering only live chips.
+    /// Ties break to the lowest chip index, which keeps routing
+    /// deterministic. Panics if no chip is alive — the fleet lifecycle
+    /// API refuses to kill the last chip, so a fully-dead view is a
+    /// caller bug.
     pub fn route(&mut self, chips: &[ChipView]) -> usize {
         assert!(!chips.is_empty(), "routing needs >= 1 chip");
+        assert!(
+            chips.iter().any(|c| c.alive),
+            "routing needs >= 1 live chip"
+        );
         match self.policy {
             BalancePolicy::RoundRobin => {
-                let i = self.rr_next % chips.len();
-                self.rr_next = self.rr_next.wrapping_add(1);
-                i
-            }
-            BalancePolicy::LeastQueue => {
-                let mut best = 0usize;
-                for (i, c) in chips.iter().enumerate().skip(1) {
-                    if c.queue_len < chips[best].queue_len {
-                        best = i;
+                // Advance the cursor past dead chips (bounded: at
+                // least one chip is alive).
+                loop {
+                    let i = self.rr_next % chips.len();
+                    self.rr_next = self.rr_next.wrapping_add(1);
+                    if chips[i].alive {
+                        return i;
                     }
                 }
-                best
+            }
+            BalancePolicy::LeastQueue => {
+                let mut best = None;
+                for (i, c) in chips.iter().enumerate() {
+                    if !c.alive {
+                        continue;
+                    }
+                    match best {
+                        None => best = Some(i),
+                        Some(b) if c.queue_len < chips[b].queue_len => {
+                            best = Some(i)
+                        }
+                        _ => {}
+                    }
+                }
+                best.expect("checked above: >= 1 live chip")
             }
             BalancePolicy::DriftAware => {
                 let score = |c: &ChipView| {
                     c.predicted_acc
                         - self.queue_penalty * c.queue_len as f64
                 };
-                let mut best = 0usize;
-                for (i, c) in chips.iter().enumerate().skip(1) {
-                    if score(c) > score(&chips[best]) {
-                        best = i;
+                let mut best = None;
+                for (i, c) in chips.iter().enumerate() {
+                    if !c.alive {
+                        continue;
+                    }
+                    match best {
+                        None => best = Some(i),
+                        Some(b) if score(c) > score(&chips[b]) => {
+                            best = Some(i)
+                        }
+                        _ => {}
                     }
                 }
-                best
+                best.expect("checked above: >= 1 live chip")
             }
         }
     }
@@ -124,9 +165,8 @@ mod tests {
     fn views(specs: &[(usize, f64)]) -> Vec<ChipView> {
         specs
             .iter()
-            .map(|&(queue_len, predicted_acc)| ChipView {
-                queue_len,
-                predicted_acc,
+            .map(|&(queue_len, predicted_acc)| {
+                ChipView::healthy(queue_len, predicted_acc)
             })
             .collect()
     }
@@ -154,6 +194,35 @@ mod tests {
         // The 1%-better chip loses once it is >5 requests deeper.
         assert_eq!(r.route(&views(&[(0, 0.90), (6, 0.91)])), 0);
         assert_eq!(r.route(&views(&[(0, 0.90), (4, 0.91)])), 1);
+    }
+
+    #[test]
+    fn every_policy_skips_dead_chips() {
+        for policy in BalancePolicy::ALL {
+            let mut r = Router::new(policy);
+            let mut v = views(&[(0, 0.99), (5, 0.80), (1, 0.90)]);
+            v[0].alive = false; // best under every policy — now dead
+            for _ in 0..6 {
+                let i = r.route(&v);
+                assert_ne!(i, 0, "{}: routed to a dead chip",
+                           policy.name());
+            }
+        }
+        // Round-robin keeps cycling over the survivors.
+        let mut r = Router::new(BalancePolicy::RoundRobin);
+        let mut v = views(&[(0, 0.9), (0, 0.9), (0, 0.9)]);
+        v[1].alive = false;
+        let picks: Vec<usize> = (0..4).map(|_| r.route(&v)).collect();
+        assert_eq!(picks, vec![0, 2, 0, 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "live chip")]
+    fn routing_with_no_live_chip_panics() {
+        let mut r = Router::new(BalancePolicy::LeastQueue);
+        let mut v = views(&[(0, 0.9)]);
+        v[0].alive = false;
+        r.route(&v);
     }
 
     #[test]

@@ -11,7 +11,11 @@
 //! - `coordinator`  — the paper's contribution: drift-aware scheduling
 //!   (Alg. 1), compensation training, set management, serving.
 //! - `fleet`        — multi-chip sharded serving: staggered programming
-//!   ages, round-robin/least-queue/drift-aware routing, fleet metrics.
+//!   ages, round-robin/least-queue/drift-aware routing, chip lifecycle
+//!   states, fleet metrics.
+//! - `scenario`     — seeded stress timelines: device-fault injection,
+//!   chip failure/refresh/retirement events, traffic shapes, per-phase
+//!   reporting.
 //! - `compensation` — VeRA+/VeRA/LoRA/BN-calibration parameter containers,
 //!   storage accounting, external-memory image format.
 //! - `costmodel`    — 22 nm area/energy/storage estimates (Tables I,III–V)
@@ -28,6 +32,7 @@ pub mod harness;
 pub mod nn;
 pub mod rram;
 pub mod runtime;
+pub mod scenario;
 pub mod util;
 
 /// Default artifact directory (relative to the repo root).

@@ -47,6 +47,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("schedule") => cmd_schedule(args),
         Some("serve") => cmd_serve(args),
         Some("fleet") => cmd_fleet(args),
+        Some("scenario") => cmd_scenario(args),
         Some("experiment") => cmd_experiment(args),
         Some("report") => cmd_report(args),
         Some("info") => cmd_info(),
@@ -71,6 +72,11 @@ fn print_help() {
          \u{20}                ages (--chips, --stagger-years, --policy\n  \
          \u{20}                 round-robin|least-queue|drift-aware, --rate,\n  \
          \u{20}                 --seconds, --engine analytic|pjrt, --store)\n  \
+         scenario        Scripted stress timeline on the analytic fleet:\n  \
+         \u{20}                chip failures, refresh campaigns, traffic\n  \
+         \u{20}                shapes, per-phase report (--chips, --seconds,\n  \
+         \u{20}                 --preset chaos|diurnal | --script FILE.json,\n  \
+         \u{20}                 --policy, --seed, --store)\n  \
          experiment      Regenerate a paper table/figure\n  \
          \u{20}                (--id fig3|fig4|fig5|fig6|table2..table5|all,\n  \
          \u{20}                 --quick | --full)\n  \
@@ -395,6 +401,106 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         fc.total_sram_area_mm2(),
         rate,
         fc.serving_power_w(rate),
+    );
+    Ok(())
+}
+
+/// Scripted stress timeline on the analytic fleet: chip failures,
+/// reprogramming campaigns, retirement and shaped traffic, reported
+/// per scenario phase. Artifact-free.
+fn cmd_scenario(args: &Args) -> Result<()> {
+    use vera_plus::costmodel::{
+        cost_method, paper_resnet20_layers, Method, RefreshCost,
+    };
+    use vera_plus::fleet::{analytic_fleet, AccuracyProfile, FleetConfig};
+    use vera_plus::scenario::{run_scenario, Action, ScenarioConfig};
+
+    let n_chips = args.get_usize("chips", 6)?;
+    anyhow::ensure!(n_chips >= 2, "--chips must be at least 2");
+    let seconds = args.get_f64("seconds", 12.0)?;
+    let policy = vera_plus::fleet::BalancePolicy::parse(
+        &args.get_or("policy", "drift-aware"),
+    )?;
+    let seed = args.get_u64("seed", 0x5ce0a)?;
+    let cfg = match args.get("script") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)?;
+            ScenarioConfig::from_json(&vera_plus::util::json::parse(
+                &text,
+            )?)?
+        }
+        None => ScenarioConfig::preset(
+            &args.get_or("preset", "chaos"),
+            n_chips,
+            seconds,
+        )?,
+    };
+    let mut sets = args.get_usize("sets", 11)?;
+    let profile = match args.get("store") {
+        Some(stem) => {
+            let store = vera_plus::compensation::SetStore::load(
+                std::path::Path::new(stem),
+            )?;
+            anyhow::ensure!(
+                !store.is_empty(),
+                "store {stem} has no compensation sets"
+            );
+            sets = store.len();
+            AccuracyProfile::from_store(&store, 0.02, 0.5)
+        }
+        None => AccuracyProfile::synthetic(sets, 10.0 * YEAR, 0.92,
+                                           0.02, 0.5),
+    };
+    let fleet_cfg = FleetConfig {
+        n_chips,
+        t0: args.get_f64("t0-days", 30.0)? * 86_400.0,
+        stagger: args.get_f64("stagger-years", 1.0)? * YEAR,
+        accel: args.get_f64("accel", 1e6)?,
+        policy,
+        batch: BatchPolicy {
+            max_batch: args.get_usize("batch", 32)?,
+            max_wait: 0.01,
+        },
+        exec_seconds_per_batch: args.get_f64("exec-ms", 2.0)? * 1e-3,
+        seed,
+    };
+    println!(
+        "scenario: {} chips, {} events over {}s, traffic {} \
+         (mean {:.0} req/s), policy {}",
+        n_chips,
+        cfg.events.len(),
+        cfg.seconds,
+        cfg.traffic.name(),
+        cfg.traffic.mean_rate(cfg.seconds, cfg.tick),
+        policy.name(),
+    );
+    for e in &cfg.events {
+        println!("  t={:>6.2}s  {}", e.at, e.label);
+    }
+    let mut fleet = analytic_fleet(&fleet_cfg, &profile);
+    let mut workload = Workload::new(0.0, seed ^ 0x57a6);
+    let outcome = run_scenario(&mut fleet, &cfg, &mut workload, 512)?;
+    println!();
+    outcome.summary.print();
+
+    // Cost the timeline's refresh campaigns against VeRA+'s no-rewrite
+    // serving (paper Table III comparison, now with refresh energy).
+    let refreshes = cfg
+        .events
+        .iter()
+        .filter(|e| matches!(e.action, Action::Refresh { .. }))
+        .count();
+    let layers = paper_resnet20_layers(10);
+    let vp = cost_method(&layers, 64, 64, Method::VeraPlus, 1, sets);
+    let refresh = RefreshCost::for_backbone(&vp);
+    println!(
+        "\nrefresh accounting: {refreshes} campaign(s) x {:.1} uJ = \
+         {:.1} uJ (one campaign = {:.0} inferences; {:.0}x a VeRA+ \
+         set load)",
+        refresh.energy_per_refresh_uj(),
+        refresh.campaign_energy_uj(refreshes),
+        refresh.equivalent_inferences(vp.energy_nj()),
+        refresh.vs_set_load(&vp),
     );
     Ok(())
 }

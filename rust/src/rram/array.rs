@@ -10,11 +10,65 @@
 use crate::rram::device::ConductanceGrid;
 use crate::rram::drift::{DriftModel, LevelInterp};
 use crate::util::rng::Pcg64;
+use std::collections::BTreeMap;
 use std::sync::OnceLock;
 
 /// Paper §IV-G array geometry.
 pub const TILE_ROWS: usize = 256;
 pub const TILE_COLS: usize = 512;
+
+/// A persistent device-level fault on one programmed cell (scenario
+/// engine fault taxonomy; cf. Ensan et al. on stuck-at/retention
+/// resiliency of RRAM-IMC). Faults live on the [`ArrayBank`] and are
+/// applied after drift sampling in
+/// [`read_drifted_slice`](ArrayBank::read_drifted_slice), so every
+/// existing readout path — tile reads, network readouts, EVALSTATS —
+/// picks them up without consuming any extra RNG (a faulted and a
+/// healthy bank read the same stream, which keeps fault injection
+/// composable with the bit-reproducibility guarantees).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum CellFault {
+    /// Cell pinned at a fixed conductance regardless of programming or
+    /// drift: stuck-at-LRS pins near the top of the grid, stuck-at-HRS
+    /// near zero.
+    StuckAt(f32),
+    /// Retention failure at device age `t_fail` (seconds): from then on
+    /// the state relaxes toward `g_rest` following the same log-time
+    /// kinetics as drift, fully relaxed after `ln_tau` ln-seconds:
+    /// `w = clamp(ln(t/t_fail)/ln_tau, 0, 1)`,
+    /// `g = (1-w)·g_drifted + w·g_rest`.
+    Retention {
+        t_fail: f64,
+        g_rest: f64,
+        ln_tau: f64,
+    },
+}
+
+impl CellFault {
+    /// Post-drift readout override for a faulted cell at device age `t`.
+    pub fn apply(&self, g_drifted: f32, t: f64) -> f32 {
+        match *self {
+            CellFault::StuckAt(g) => g,
+            CellFault::Retention {
+                t_fail,
+                g_rest,
+                ln_tau,
+            } => {
+                if t <= t_fail {
+                    return g_drifted;
+                }
+                let w = ((t / t_fail).ln() / ln_tau).clamp(0.0, 1.0);
+                ((1.0 - w) * g_drifted as f64 + w * g_rest) as f32
+            }
+        }
+    }
+
+    /// Hard defects survive a reprogramming campaign; soft (retention)
+    /// failures are cleared by rewriting the cell.
+    pub fn is_hard(&self) -> bool {
+        matches!(self, CellFault::StuckAt(_))
+    }
+}
 
 /// One programmed crossbar tile.
 #[derive(Debug, Clone)]
@@ -128,6 +182,11 @@ impl Tile {
 #[derive(Debug, Clone, Default)]
 pub struct ArrayBank {
     pub tiles: Vec<Tile>,
+    /// Injected device faults keyed by (tile index, cell index).
+    /// Applied by [`read_drifted_slice`](ArrayBank::read_drifted_slice)
+    /// after drift sampling; empty for a healthy bank (zero overhead on
+    /// the hot path beyond one `is_empty` check per segment).
+    faults: BTreeMap<(usize, usize), CellFault>,
 }
 
 impl ArrayBank {
@@ -162,6 +221,49 @@ impl ArrayBank {
 
     pub fn n_tiles(&self) -> usize {
         self.tiles.len()
+    }
+
+    /// Inject a persistent fault on one cell. Panics on an out-of-range
+    /// address (fault injection addresses programmed hardware, so a bad
+    /// address is a bug in the injector, not a runtime condition).
+    pub fn inject_fault(
+        &mut self,
+        tile: usize,
+        cell: usize,
+        fault: CellFault,
+    ) {
+        assert!(tile < self.tiles.len(), "tile {tile} out of range");
+        assert!(
+            cell < self.tiles[tile].used,
+            "cell {cell} beyond programmed range"
+        );
+        self.faults.insert((tile, cell), fault);
+    }
+
+    /// Injected fault count.
+    pub fn n_faults(&self) -> usize {
+        self.faults.len()
+    }
+
+    /// Iterate injected faults as ((tile, cell), fault).
+    pub fn faults(
+        &self,
+    ) -> impl Iterator<Item = (&(usize, usize), &CellFault)> {
+        self.faults.iter()
+    }
+
+    /// Remove every fault (test/reset hook).
+    pub fn clear_faults(&mut self) {
+        self.faults.clear();
+    }
+
+    /// A reprogramming campaign rewrites every cell: soft (retention)
+    /// failures are healed by the rewrite, hard stuck-at defects
+    /// persist. Returns the number of healed cells.
+    pub fn heal_soft_faults(&mut self) -> usize {
+        let before = self.faults.len();
+        self.faults.retain(|_, f| f.is_hard());
+        before - self.faults.len()
     }
 
     /// Read a programmed segment list back with drift at time `t`.
@@ -202,6 +304,18 @@ impl ArrayBank {
                 rng,
                 &mut out[off..off + n],
             );
+            if !self.faults.is_empty() {
+                // Override faulted cells in this segment. Applied after
+                // sampling, so the RNG stream is identical with and
+                // without faults.
+                for (&(_, cell), fault) in self
+                    .faults
+                    .range((*ti, range.start)..(*ti, range.end))
+                {
+                    let o = &mut out[off + cell - range.start];
+                    *o = fault.apply(*o, t).max(0.0);
+                }
+            }
             off += n;
         }
         debug_assert_eq!(off, out.len());
@@ -363,6 +477,78 @@ mod tests {
         for &v in &out {
             assert!((v - 12.0).abs() < 0.5, "got {v}");
         }
+    }
+
+    #[test]
+    fn stuck_at_faults_pin_cells_and_leave_stream_unchanged() {
+        let mut bank = ArrayBank::default();
+        let g = grid();
+        let mut rng = Pcg64::new(9);
+        let segs = bank.program(&vec![20.0; 100], &g, &mut rng);
+        let model = IbmDrift::default();
+        let mut healthy = Vec::new();
+        bank.read_drifted(&segs, 86_400.0, &model, &mut Pcg64::new(4),
+                          &mut healthy);
+        bank.inject_fault(0, 3, CellFault::StuckAt(40.0));
+        bank.inject_fault(0, 7, CellFault::StuckAt(0.0));
+        assert_eq!(bank.n_faults(), 2);
+        let mut faulty = Vec::new();
+        bank.read_drifted(&segs, 86_400.0, &model, &mut Pcg64::new(4),
+                          &mut faulty);
+        assert_eq!(faulty[3], 40.0);
+        assert_eq!(faulty[7], 0.0);
+        // Every other cell reads exactly as the healthy bank: fault
+        // application consumes no RNG.
+        for (i, (a, b)) in healthy.iter().zip(&faulty).enumerate() {
+            if i != 3 && i != 7 {
+                assert_eq!(a, b, "cell {i} perturbed by unrelated fault");
+            }
+        }
+    }
+
+    #[test]
+    fn retention_fault_relaxes_toward_rest_after_t_fail() {
+        let mut bank = ArrayBank::default();
+        let g = grid();
+        let mut rng = Pcg64::new(2);
+        let segs = bank.program(&vec![30.0; 10], &g, &mut rng);
+        let fault = CellFault::Retention {
+            t_fail: 1_000.0,
+            g_rest: 5.0,
+            ln_tau: 4.0,
+        };
+        bank.inject_fault(0, 0, fault);
+        let read_at = |bank: &ArrayBank, t: f64| {
+            let mut out = Vec::new();
+            bank.read_drifted(&segs, t, &NoDrift, &mut Pcg64::new(1),
+                              &mut out);
+            out[0]
+        };
+        // Before failure: untouched.
+        assert_eq!(read_at(&bank, 100.0), 30.0);
+        // Partially relaxed at t_fail·e² (w = 0.5).
+        let mid = read_at(&bank, 1_000.0 * (2.0f64).exp());
+        assert!((mid - 17.5).abs() < 1e-3, "got {mid}");
+        // Fully relaxed once ln(t/t_fail) ≥ ln_tau.
+        let late = read_at(&bank, 1_000.0 * (6.0f64).exp());
+        assert!((late - 5.0).abs() < 1e-6, "got {late}");
+        // Monotone toward rest between those points.
+        assert!(read_at(&bank, 1_000.0 * (3.0f64).exp()) < mid);
+        // Reprogramming heals retention but not stuck-at defects.
+        bank.inject_fault(0, 1, CellFault::StuckAt(40.0));
+        assert_eq!(bank.heal_soft_faults(), 1);
+        assert_eq!(bank.n_faults(), 1);
+        assert!(bank.faults().all(|(_, f)| f.is_hard()));
+        assert_eq!(read_at(&bank, 1e9), 30.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "beyond programmed range")]
+    fn fault_injection_rejects_unprogrammed_cells() {
+        let mut bank = ArrayBank::default();
+        let g = grid();
+        bank.program(&vec![5.0; 4], &g, &mut Pcg64::new(1));
+        bank.inject_fault(0, 10, CellFault::StuckAt(0.0));
     }
 
     #[test]

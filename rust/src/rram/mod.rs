@@ -7,7 +7,7 @@ pub mod device;
 pub mod drift;
 pub mod mapping;
 
-pub use array::{ArrayBank, Tile, TILE_COLS, TILE_ROWS};
+pub use array::{ArrayBank, CellFault, Tile, TILE_COLS, TILE_ROWS};
 pub use characterize::{characterize, fit_measured_model, FabDrift};
 pub use device::ConductanceGrid;
 pub use drift::{

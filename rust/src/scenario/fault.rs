@@ -1,0 +1,366 @@
+//! Device-fault injection: seeded samplers over the [`ArrayBank`] fault
+//! layer plus a composable read-noise-burst [`DriftModel`] wrapper.
+//!
+//! The fault taxonomy follows the RRAM resiliency literature (Ensan et
+//! al.): **stuck-at-LRS/HRS** cells whose conductance is pinned by a
+//! forming/endurance defect, **retention failures** whose state relaxes
+//! toward HRS after a failure time, and **read-noise bursts** — a
+//! transient sensing-noise elevation affecting every device during a
+//! window (supply droop, temperature excursion). Stuck-at and retention
+//! faults are positional and persistent, so they live on the bank
+//! ([`CellFault`]); read noise is global and transient, so it composes
+//! as a [`DriftModel`] wrapper that any readout path accepts.
+
+use crate::rram::drift::DriftModel;
+use crate::rram::{ArrayBank, CellFault};
+use crate::util::rng::Pcg64;
+use anyhow::{ensure, Result};
+
+/// Fractional fault rates for a seeded injection campaign.
+#[derive(Debug, Clone)]
+pub struct FaultSpec {
+    /// Fraction of programmed cells stuck at low-resistance (pinned at
+    /// `g_lrs`).
+    pub stuck_lrs: f64,
+    /// Fraction stuck at high-resistance (pinned at `g_hrs`).
+    pub stuck_hrs: f64,
+    /// Fraction suffering retention failure at `t_fail`.
+    pub retention: f64,
+    /// Device age at which retention-failed cells begin relaxing (s).
+    pub t_fail: f64,
+    /// ln-seconds for a retention-failed cell to fully relax.
+    pub ln_tau: f64,
+    /// Pinned conductance for stuck-at-LRS cells (µS).
+    pub g_lrs: f64,
+    /// Pinned conductance for stuck-at-HRS cells (µS).
+    pub g_hrs: f64,
+}
+
+impl Default for FaultSpec {
+    /// Paper-grid defaults: LRS pins at the 40 µS top level, HRS at
+    /// ~0, retention failures start at one day and relax over ~e⁴ of
+    /// log-time.
+    fn default() -> Self {
+        FaultSpec {
+            stuck_lrs: 0.0,
+            stuck_hrs: 0.0,
+            retention: 0.0,
+            t_fail: 86_400.0,
+            ln_tau: 4.0,
+            g_lrs: 40.0,
+            g_hrs: 0.0,
+        }
+    }
+}
+
+impl FaultSpec {
+    /// A uniform-rate campaign: `rate/3` of cells in each category.
+    pub fn uniform(rate: f64) -> FaultSpec {
+        FaultSpec {
+            stuck_lrs: rate / 3.0,
+            stuck_hrs: rate / 3.0,
+            retention: rate / 3.0,
+            ..FaultSpec::default()
+        }
+    }
+
+    pub fn total_rate(&self) -> f64 {
+        self.stuck_lrs + self.stuck_hrs + self.retention
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        for (name, v) in [
+            ("stuck_lrs", self.stuck_lrs),
+            ("stuck_hrs", self.stuck_hrs),
+            ("retention", self.retention),
+        ] {
+            ensure!(
+                (0.0..=1.0).contains(&v),
+                "fault rate '{name}' must be in [0, 1], got {v}"
+            );
+        }
+        ensure!(
+            self.total_rate() <= 1.0,
+            "total fault rate {} exceeds 1",
+            self.total_rate()
+        );
+        ensure!(self.t_fail >= 1.0, "t_fail must be >= 1 s");
+        ensure!(self.ln_tau > 0.0, "ln_tau must be > 0");
+        Ok(())
+    }
+}
+
+/// Outcome of one injection campaign.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultReport {
+    pub stuck_lrs: usize,
+    pub stuck_hrs: usize,
+    pub retention: usize,
+}
+
+impl FaultReport {
+    pub fn total(&self) -> usize {
+        self.stuck_lrs + self.stuck_hrs + self.retention
+    }
+}
+
+/// Seeded fault injection over every *programmed* cell of a bank: each
+/// cell draws one uniform from a per-tile child stream and falls into a
+/// fault category by the spec's rate thresholds. Deterministic in
+/// `(bank fill, spec, seed)` — and independent of any reads performed
+/// before or after, because the injector owns its RNG.
+pub fn inject_faults(
+    bank: &mut ArrayBank,
+    spec: &FaultSpec,
+    seed: u64,
+) -> Result<FaultReport> {
+    spec.validate()?;
+    let mut report = FaultReport::default();
+    let cut_lrs = spec.stuck_lrs;
+    let cut_hrs = cut_lrs + spec.stuck_hrs;
+    let cut_ret = cut_hrs + spec.retention;
+    let used: Vec<usize> =
+        bank.tiles.iter().map(|t| t.used).collect();
+    for (ti, &used) in used.iter().enumerate() {
+        // One independent stream per tile keeps the draw for cell
+        // (ti, ci) stable even if other tiles change fill level.
+        let mut rng = Pcg64::with_stream(
+            seed ^ (ti as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15),
+            0xfau64 << 8 | ti as u64 & 0xff,
+        );
+        for ci in 0..used {
+            let u = rng.uniform();
+            let fault = if u < cut_lrs {
+                report.stuck_lrs += 1;
+                CellFault::StuckAt(spec.g_lrs as f32)
+            } else if u < cut_hrs {
+                report.stuck_hrs += 1;
+                CellFault::StuckAt(spec.g_hrs as f32)
+            } else if u < cut_ret {
+                report.retention += 1;
+                CellFault::Retention {
+                    t_fail: spec.t_fail,
+                    g_rest: spec.g_hrs,
+                    ln_tau: spec.ln_tau,
+                }
+            } else {
+                continue;
+            };
+            bank.inject_fault(ti, ci, fault);
+        }
+    }
+    Ok(report)
+}
+
+/// Transient read-noise burst: delegates to the wrapped drift model and
+/// adds zero-mean Gaussian sensing noise of `sigma` µS to every sample
+/// whose readout time falls in `[from, until)`. Composes over any
+/// [`DriftModel`], so `Deployment`-level readouts, tile reads and
+/// EVALSTATS all pick it up by swapping the model handle.
+///
+/// Outside the window the wrapper is RNG-transparent (it draws nothing
+/// extra), so a burst model and its inner model produce bit-identical
+/// streams whenever the burst is inactive.
+pub struct ReadNoiseBurst<M: DriftModel> {
+    pub inner: M,
+    pub sigma: f64,
+    pub from: f64,
+    pub until: f64,
+    name: String,
+}
+
+impl<M: DriftModel> ReadNoiseBurst<M> {
+    pub fn new(inner: M, sigma: f64, from: f64, until: f64)
+               -> ReadNoiseBurst<M> {
+        assert!(sigma >= 0.0, "burst sigma must be >= 0");
+        assert!(until >= from, "burst window must be ordered");
+        let name = format!("burst({})", inner.name());
+        ReadNoiseBurst {
+            inner,
+            sigma,
+            from,
+            until,
+            name,
+        }
+    }
+
+    #[inline]
+    fn active(&self, t: f64) -> bool {
+        t >= self.from && t < self.until
+    }
+}
+
+impl<M: DriftModel> DriftModel for ReadNoiseBurst<M> {
+    fn sample(&self, g_target: f64, t: f64, rng: &mut Pcg64) -> f64 {
+        let g = self.inner.sample(g_target, t, rng);
+        if self.active(t) {
+            g + rng.normal_with(0.0, self.sigma)
+        } else {
+            g
+        }
+    }
+
+    fn sample_block(
+        &self,
+        g_targets: &[f32],
+        t: f64,
+        rng: &mut Pcg64,
+        out: &mut [f32],
+    ) {
+        self.inner.sample_block(g_targets, t, rng, out);
+        if self.active(t) {
+            for o in out.iter_mut() {
+                *o += rng.normal_with(0.0, self.sigma) as f32;
+            }
+        }
+    }
+
+    fn interp_levels(&self) -> Option<&[f64]> {
+        self.inner.interp_levels()
+    }
+
+    fn sample_block_interp(
+        &self,
+        idx: &[u32],
+        frac: &[f32],
+        g_targets: &[f32],
+        t: f64,
+        rng: &mut Pcg64,
+        out: &mut [f32],
+    ) {
+        self.inner
+            .sample_block_interp(idx, frac, g_targets, t, rng, out);
+        if self.active(t) {
+            for o in out.iter_mut() {
+                *o += rng.normal_with(0.0, self.sigma) as f32;
+            }
+        }
+    }
+
+    /// The burst is zero-mean: the deterministic mean is the inner
+    /// model's.
+    fn mean(&self, g_target: f64, t: f64) -> f64 {
+        self.inner.mean(g_target, t)
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rram::{ConductanceGrid, IbmDrift, NoDrift};
+
+    fn bank(n: usize) -> (ArrayBank, Vec<(usize, std::ops::Range<usize>)>)
+    {
+        let mut grid = ConductanceGrid::default();
+        grid.prog_sigma = 0.0;
+        let targets: Vec<f64> =
+            (0..n).map(|i| 5.0 + 5.0 * (i % 8) as f64).collect();
+        let mut b = ArrayBank::default();
+        let segs = b.program(&targets, &grid, &mut Pcg64::new(3));
+        (b, segs)
+    }
+
+    #[test]
+    fn injection_is_deterministic_and_rate_accurate() {
+        let spec = FaultSpec::uniform(0.03);
+        let (mut a, _) = bank(200_000);
+        let (mut b, _) = bank(200_000);
+        let ra = inject_faults(&mut a, &spec, 77).unwrap();
+        let rb = inject_faults(&mut b, &spec, 77).unwrap();
+        assert_eq!(ra, rb);
+        let same = a
+            .faults()
+            .zip(b.faults())
+            .all(|((ka, fa), (kb, fb))| ka == kb && fa == fb);
+        assert!(same, "fault maps differ at equal seed");
+        // Binomial(200k, 0.01) per category: σ ≈ 45, use 5σ bounds.
+        for (got, want) in [
+            (ra.stuck_lrs, 2000.0),
+            (ra.stuck_hrs, 2000.0),
+            (ra.retention, 2000.0),
+        ] {
+            assert!(
+                (got as f64 - want).abs() < 250.0,
+                "category count {got} far from {want}"
+            );
+        }
+        // Different seed ⇒ different fault positions.
+        let (mut c, _) = bank(200_000);
+        inject_faults(&mut c, &spec, 78).unwrap();
+        let keys_a: Vec<(usize, usize)> =
+            a.faults().take(50).map(|(k, _)| *k).collect();
+        let keys_c: Vec<(usize, usize)> =
+            c.faults().take(50).map(|(k, _)| *k).collect();
+        assert_ne!(keys_a, keys_c, "seed must move fault positions");
+    }
+
+    #[test]
+    fn injection_rejects_bad_specs() {
+        let (mut b, _) = bank(100);
+        let mut spec = FaultSpec::uniform(0.1);
+        spec.stuck_lrs = 1.5;
+        assert!(inject_faults(&mut b, &spec, 1).is_err());
+        let mut spec = FaultSpec::uniform(0.1);
+        spec.ln_tau = 0.0;
+        assert!(inject_faults(&mut b, &spec, 1).is_err());
+        assert_eq!(b.n_faults(), 0, "failed injection must not partially \
+                                     apply");
+    }
+
+    #[test]
+    fn stuck_cells_read_pinned_values() {
+        let spec = FaultSpec {
+            stuck_lrs: 0.5,
+            stuck_hrs: 0.5,
+            ..FaultSpec::default()
+        };
+        let (mut b, segs) = bank(1000);
+        inject_faults(&mut b, &spec, 9).unwrap();
+        assert_eq!(b.n_faults(), 1000);
+        let mut out = Vec::new();
+        b.read_drifted(&segs, 1e6, &NoDrift, &mut Pcg64::new(1), &mut out);
+        assert!(out.iter().all(|&v| v == 40.0 || v == 0.0));
+    }
+
+    #[test]
+    fn burst_noise_only_inside_window() {
+        let model = ReadNoiseBurst::new(IbmDrift::default(), 2.0, 100.0,
+                                        1000.0);
+        assert_eq!(model.name(), "burst(ibm)");
+        let g = vec![20.0f32; 4096];
+        let mut inner_out = vec![0f32; g.len()];
+        let mut burst_out = vec![0f32; g.len()];
+        // Outside the window: bit-identical to the inner model.
+        IbmDrift::default().sample_block(&g, 50.0, &mut Pcg64::new(5),
+                                         &mut inner_out);
+        model.sample_block(&g, 50.0, &mut Pcg64::new(5), &mut burst_out);
+        assert_eq!(inner_out, burst_out);
+        // Inside: same mean (zero-mean burst), larger spread.
+        let stats = |v: &[f32]| {
+            let n = v.len() as f64;
+            let mean = v.iter().map(|&x| x as f64).sum::<f64>() / n;
+            let var = v
+                .iter()
+                .map(|&x| (x as f64 - mean).powi(2))
+                .sum::<f64>()
+                / n;
+            (mean, var)
+        };
+        IbmDrift::default().sample_block(&g, 500.0, &mut Pcg64::new(6),
+                                         &mut inner_out);
+        model.sample_block(&g, 500.0, &mut Pcg64::new(6), &mut burst_out);
+        let (mi, vi) = stats(&inner_out);
+        let (mb, vb) = stats(&burst_out);
+        assert!((mi - mb).abs() < 0.2, "means {mi} vs {mb}");
+        // Var grows by ≈ sigma² = 4.
+        assert!(vb > vi + 2.0, "burst variance {vb} vs inner {vi}");
+        assert!((model.mean(20.0, 500.0)
+            - IbmDrift::default().mean(20.0, 500.0))
+            .abs()
+            < 1e-12);
+    }
+}

@@ -1,0 +1,622 @@
+//! Scenario engine: seeded, deterministic stress timelines for the
+//! fleet — device faults, chip lifecycle events and traffic shapes.
+//!
+//! The ROADMAP's north star asks for "as many scenarios as you can
+//! imagine"; before this module the fleet only ever saw healthy chips,
+//! stationary Poisson traffic and pure log-time drift. A scenario is a
+//! scripted **event timeline** executed against the fleet event loop:
+//!
+//! - [`fault`] — device-level injection: stuck-at-LRS/HRS cells and
+//!   retention failures land on the [`ArrayBank`](crate::rram::ArrayBank)
+//!   fault layer (picked up by every readout path), read-noise bursts
+//!   compose as a [`DriftModel`](crate::rram::DriftModel) wrapper.
+//! - [`traffic`] — time-varying arrival rates (diurnal sinusoid,
+//!   flash-crowd burst, ramp) replacing the single hard-coded Poisson
+//!   rate.
+//! - Chip lifecycle [`Action`]s — failure (router eviction with
+//!   exactly-once backlog redelivery), reprogramming/refresh campaigns
+//!   (drift clock resets, serving re-enters the compensation ladder at
+//!   set 0), graceful retirement.
+//!
+//! [`run_scenario`] drives any [`Fleet`] through a [`ScenarioConfig`]
+//! and reports per-phase accuracy/availability/latency via the
+//! [`PhaseSummary`] extension of [`FleetSummary`]. Timelines come from
+//! presets ([`ScenarioConfig::chaos`]), the `vera-plus scenario` CLI
+//! subcommand, or a JSON script ([`ScenarioConfig::from_json`]).
+//!
+//! Everything is deterministic at a fixed seed: fault positions, event
+//! application order, traffic rates and the workload stream.
+
+pub mod fault;
+pub mod traffic;
+
+pub use fault::{inject_faults, FaultReport, FaultSpec, ReadNoiseBurst};
+pub use traffic::TrafficShape;
+
+use crate::coordinator::serve::{percentile_sorted, Workload};
+use crate::fleet::{
+    ChipEngine, Fleet, FleetCompletion, FleetSummary, PhaseSummary,
+};
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+
+/// One lifecycle/traffic action on the timeline.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Action {
+    /// Crash a chip: router eviction + exactly-once backlog redelivery.
+    Fail { chip: usize },
+    /// Reprogramming/refresh campaign: programming age restarts at
+    /// `t0`, the compensation ladder re-enters at set 0, the chip
+    /// rejoins the routable pool (also the replacement path).
+    Refresh { chip: usize, t0: f64 },
+    /// Graceful retirement: no new traffic, backlog drains.
+    Retire { chip: usize },
+    /// Switch the workload's traffic shape from this point on.
+    Traffic { shape: TrafficShape },
+}
+
+impl Action {
+    fn default_label(&self) -> String {
+        match self {
+            Action::Fail { chip } => format!("fail{chip}"),
+            Action::Refresh { chip, .. } => format!("refresh{chip}"),
+            Action::Retire { chip } => format!("retire{chip}"),
+            Action::Traffic { shape } => {
+                format!("traffic-{}", shape.name())
+            }
+        }
+    }
+}
+
+/// A timestamped action; `at` is serving wall time (seconds since
+/// scenario start). Events open a new reporting phase named `label`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Event {
+    pub at: f64,
+    pub action: Action,
+    pub label: String,
+}
+
+impl Event {
+    pub fn new(at: f64, action: Action) -> Event {
+        let label = action.default_label();
+        Event { at, action, label }
+    }
+}
+
+/// A scripted scenario: run length, tick, initial traffic shape and
+/// the event timeline.
+#[derive(Debug, Clone)]
+pub struct ScenarioConfig {
+    pub seconds: f64,
+    pub tick: f64,
+    pub traffic: TrafficShape,
+    pub events: Vec<Event>,
+}
+
+impl ScenarioConfig {
+    pub fn new(
+        seconds: f64,
+        tick: f64,
+        traffic: TrafficShape,
+        mut events: Vec<Event>,
+    ) -> ScenarioConfig {
+        events.sort_by(|a, b| a.at.partial_cmp(&b.at).unwrap());
+        ScenarioConfig {
+            seconds,
+            tick,
+            traffic,
+            events,
+        }
+    }
+
+    /// The acceptance-criteria chaos timeline for an `n_chips` fleet:
+    /// a flash-crowd burst rises early, chip 1 crashes **mid-burst**
+    /// (so its backlog redelivery is actually exercised), gets a
+    /// reprogramming campaign after the crowd passes, and the oldest
+    /// chip is gracefully retired near the end. Rates scale with the
+    /// chip count so every fleet size sees the same per-chip pressure.
+    pub fn chaos(n_chips: usize, seconds: f64) -> ScenarioConfig {
+        assert!(n_chips >= 2, "chaos scenario needs >= 2 chips");
+        let per_chip = 260.0;
+        let traffic = TrafficShape::Burst {
+            base: per_chip * n_chips as f64,
+            peak: 3.0 * per_chip * n_chips as f64,
+            start: 0.2 * seconds,
+            duration: 0.3 * seconds,
+        };
+        ScenarioConfig::new(
+            seconds,
+            seconds / 48.0,
+            traffic,
+            vec![
+                Event::new(
+                    0.35 * seconds,
+                    Action::Fail { chip: 1 },
+                ),
+                Event::new(
+                    0.65 * seconds,
+                    Action::Refresh { chip: 1, t0: 1.0 },
+                ),
+                Event::new(
+                    0.85 * seconds,
+                    Action::Retire {
+                        chip: n_chips - 1,
+                    },
+                ),
+            ],
+        )
+    }
+
+    /// A steady diurnal day with no lifecycle events (regression
+    /// baseline).
+    pub fn diurnal(n_chips: usize, seconds: f64) -> ScenarioConfig {
+        let base = 260.0 * n_chips as f64;
+        ScenarioConfig::new(
+            seconds,
+            seconds / 48.0,
+            TrafficShape::Diurnal {
+                base,
+                amplitude: 0.6 * base,
+                period: seconds / 2.0,
+                phase: 0.0,
+            },
+            Vec::new(),
+        )
+    }
+
+    /// Look up a named preset (`chaos` | `diurnal`).
+    pub fn preset(
+        name: &str,
+        n_chips: usize,
+        seconds: f64,
+    ) -> Result<ScenarioConfig> {
+        match name {
+            "chaos" => Ok(ScenarioConfig::chaos(n_chips, seconds)),
+            "diurnal" => Ok(ScenarioConfig::diurnal(n_chips, seconds)),
+            other => bail!("unknown preset '{other}' (chaos | diurnal)"),
+        }
+    }
+
+    /// Parse a scenario script, e.g.:
+    ///
+    /// ```json
+    /// {
+    ///   "seconds": 12, "tick": 0.25,
+    ///   "traffic": {"shape": "constant", "rate": 1800},
+    ///   "events": [
+    ///     {"at": 3, "action": "fail", "chip": 1},
+    ///     {"at": 6, "action": "refresh", "chip": 1, "t0": 1.0},
+    ///     {"at": 8, "action": "traffic",
+    ///      "traffic": {"shape": "burst", "base": 800, "peak": 4000,
+    ///                  "start": 8, "duration": 2}},
+    ///     {"at": 10, "action": "retire", "chip": 0}
+    ///   ]
+    /// }
+    /// ```
+    pub fn from_json(j: &Json) -> Result<ScenarioConfig> {
+        let seconds = j.req_f64("seconds")?;
+        let tick = j.req_f64("tick")?;
+        if !(seconds > 0.0 && tick > 0.0 && tick <= seconds) {
+            bail!("need 0 < tick <= seconds (got tick {tick}, \
+                   seconds {seconds})");
+        }
+        let traffic = TrafficShape::from_json(
+            j.req("traffic").context("scenario needs a traffic shape")?,
+        )?;
+        let mut events = Vec::new();
+        if let Some(evs) = j.get("events") {
+            for (i, ev) in evs
+                .as_arr()
+                .context("'events' must be an array")?
+                .iter()
+                .enumerate()
+            {
+                let at = ev.req_f64("at")?;
+                if !(0.0..=seconds).contains(&at) {
+                    bail!("event {i}: 'at' {at} outside [0, {seconds}]");
+                }
+                let action = match ev.req_str("action")? {
+                    "fail" => Action::Fail {
+                        chip: ev.req_usize("chip")?,
+                    },
+                    "refresh" => Action::Refresh {
+                        chip: ev.req_usize("chip")?,
+                        t0: match ev.get("t0") {
+                            None => 1.0,
+                            Some(v) => v.as_f64().context("bad t0")?,
+                        },
+                    },
+                    "retire" => Action::Retire {
+                        chip: ev.req_usize("chip")?,
+                    },
+                    "traffic" => Action::Traffic {
+                        shape: TrafficShape::from_json(
+                            ev.req("traffic")?,
+                        )?,
+                    },
+                    other => bail!(
+                        "event {i}: unknown action '{other}' \
+                         (fail | refresh | retire | traffic)"
+                    ),
+                };
+                let label = match ev.get("label") {
+                    Some(l) => l
+                        .as_str()
+                        .context("label must be a string")?
+                        .to_string(),
+                    None => action.default_label(),
+                };
+                events.push(Event { at, action, label });
+            }
+        }
+        Ok(ScenarioConfig::new(seconds, tick, traffic, events))
+    }
+}
+
+/// Everything a scenario run produced: the fleet summary (with the
+/// per-phase breakdown filled in) and the raw tagged completions, which
+/// integration tests use for conservation checks.
+pub struct ScenarioOutcome {
+    pub summary: FleetSummary,
+    pub completions: Vec<FleetCompletion>,
+}
+
+/// Per-phase accumulator (internal).
+struct PhaseAcc {
+    name: String,
+    start: f64,
+    served: usize,
+    correct: usize,
+    latencies: Vec<f64>,
+    alive_chip_ticks: usize,
+    ticks: usize,
+    requeued_at_start: usize,
+    requeued_at_end: usize,
+}
+
+impl PhaseAcc {
+    fn new(name: &str, start: f64, requeues: usize) -> PhaseAcc {
+        PhaseAcc {
+            name: name.to_string(),
+            start,
+            served: 0,
+            correct: 0,
+            latencies: Vec::new(),
+            alive_chip_ticks: 0,
+            ticks: 0,
+            requeued_at_start: requeues,
+            requeued_at_end: requeues,
+        }
+    }
+
+    fn absorb(&mut self, comps: &[FleetCompletion]) {
+        for c in comps {
+            self.served += 1;
+            if c.completion.correct {
+                self.correct += 1;
+            }
+            self.latencies.push(c.completion.latency);
+        }
+    }
+
+    fn close(self, end: f64, n_chips: usize) -> PhaseSummary {
+        let accuracy = if self.served == 0 {
+            0.0
+        } else {
+            self.correct as f64 / self.served as f64
+        };
+        let availability = if self.ticks == 0 {
+            1.0
+        } else {
+            self.alive_chip_ticks as f64
+                / (self.ticks * n_chips) as f64
+        };
+        // One in-place sort serves both quantiles (the accumulator
+        // owns its samples, so no clone-and-select per quantile).
+        let mut lat = self.latencies;
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        PhaseSummary {
+            name: self.name,
+            start: self.start,
+            end,
+            served: self.served,
+            accuracy,
+            p50_latency: percentile_sorted(&lat, 0.5),
+            p99_latency: percentile_sorted(&lat, 0.99),
+            availability,
+            requeued: self.requeued_at_end - self.requeued_at_start,
+        }
+    }
+}
+
+/// Apply one timeline action to the fleet; returns the new traffic
+/// shape when the action switches it.
+fn apply<E: ChipEngine>(
+    fleet: &mut Fleet<E>,
+    action: &Action,
+) -> Result<Option<TrafficShape>> {
+    match action {
+        Action::Fail { chip } => {
+            fleet.fail_chip(*chip)?;
+            Ok(None)
+        }
+        Action::Refresh { chip, t0 } => {
+            fleet.refresh_chip(*chip, *t0)?;
+            Ok(None)
+        }
+        Action::Retire { chip } => {
+            fleet.retire_chip(*chip)?;
+            Ok(None)
+        }
+        Action::Traffic { shape } => {
+            shape.validate()?;
+            Ok(Some(shape.clone()))
+        }
+    }
+}
+
+/// Drive `fleet` through the scenario: tick loop with the timeline
+/// applied at event times, per-phase stat segmentation, and a final
+/// flush (attributed to the last phase) so conservation holds — every
+/// routed request completes exactly once even across chip failures.
+pub fn run_scenario<E: ChipEngine>(
+    fleet: &mut Fleet<E>,
+    cfg: &ScenarioConfig,
+    workload: &mut Workload,
+    test_len: usize,
+) -> Result<ScenarioOutcome> {
+    let n_chips = fleet.n_chips();
+    let mut traffic = cfg.traffic.clone();
+    traffic.validate()?;
+    let mut events = cfg.events.clone();
+    events.sort_by(|a, b| a.at.partial_cmp(&b.at).unwrap());
+    let mut next_event = 0usize;
+    let mut phases: Vec<PhaseSummary> = Vec::new();
+    let mut acc = PhaseAcc::new("start", 0.0, fleet.metrics.requeues);
+    let mut completions: Vec<FleetCompletion> = Vec::new();
+    let mut wall = 0.0f64;
+    loop {
+        // Apply every event due at or before this point on the wall;
+        // each closes the running phase and opens one named after it.
+        // The cutoff is re-checked after the final tick (with wall ≈
+        // seconds), so an event scheduled in the last partial window —
+        // including `at == seconds`, which the script format accepts —
+        // executes before the flush instead of being silently dropped.
+        let cutoff = if wall >= cfg.seconds - 1e-9 {
+            cfg.seconds
+        } else {
+            wall
+        };
+        while next_event < events.len()
+            && events[next_event].at <= cutoff + 1e-9
+        {
+            let ev = &events[next_event];
+            // Close the running phase first, so redeliveries caused by
+            // this event are charged to the phase it opens.
+            acc.requeued_at_end = fleet.metrics.requeues;
+            phases.push(acc.close(wall, n_chips));
+            acc = PhaseAcc::new(&ev.label, wall,
+                                fleet.metrics.requeues);
+            if let Some(shape) = apply(fleet, &ev.action)
+                .with_context(|| {
+                    format!("event '{}' at t={}", ev.label, ev.at)
+                })?
+            {
+                traffic = shape;
+            }
+            next_event += 1;
+        }
+        if wall >= cfg.seconds - 1e-9 {
+            break;
+        }
+        workload.rate = traffic.rate_at(wall);
+        let comps = fleet.tick(cfg.tick, workload, test_len)?;
+        acc.absorb(&comps);
+        acc.ticks += 1;
+        acc.alive_chip_ticks += fleet.n_alive();
+        completions.extend(comps);
+        wall += cfg.tick;
+    }
+    // Drain the backlog; flushed completions belong to the last phase.
+    let tail = fleet.flush()?;
+    acc.absorb(&tail);
+    completions.extend(tail);
+    acc.requeued_at_end = fleet.metrics.requeues;
+    phases.push(acc.close(fleet.metrics.wall, n_chips));
+    let mut summary = fleet.summary();
+    summary.phases = phases;
+    Ok(ScenarioOutcome {
+        summary,
+        completions,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::serve::BatchPolicy;
+    use crate::fleet::{
+        analytic_fleet, AccuracyProfile, BalancePolicy, ChipState,
+        FleetConfig,
+    };
+    use crate::rram::YEAR;
+    use crate::util::json::parse;
+
+    fn fleet_cfg(n: usize) -> FleetConfig {
+        FleetConfig {
+            n_chips: n,
+            t0: 30.0 * 86_400.0,
+            stagger: YEAR,
+            accel: 1e5,
+            policy: BalancePolicy::LeastQueue,
+            batch: BatchPolicy {
+                max_batch: 16,
+                max_wait: 0.01,
+            },
+            exec_seconds_per_batch: 0.002,
+            seed: 0x5ce0,
+        }
+    }
+
+    #[test]
+    fn chaos_preset_is_well_formed() {
+        let cfg = ScenarioConfig::chaos(6, 12.0);
+        assert_eq!(cfg.events.len(), 3);
+        // Sorted timeline, all within the run.
+        for w in cfg.events.windows(2) {
+            assert!(w[0].at <= w[1].at);
+        }
+        assert!(cfg.events.iter().all(|e| e.at < cfg.seconds));
+        assert!(matches!(cfg.traffic, TrafficShape::Burst { .. }));
+        assert!(ScenarioConfig::preset("chaos", 4, 10.0).is_ok());
+        assert!(ScenarioConfig::preset("nope", 4, 10.0).is_err());
+    }
+
+    #[test]
+    fn scenario_run_segments_phases_and_conserves_requests() {
+        let cfg = ScenarioConfig::chaos(3, 6.0);
+        let profile = AccuracyProfile::synthetic(
+            11, 10.0 * YEAR, 0.92, 0.02, 0.5,
+        );
+        let mut fleet = analytic_fleet(&fleet_cfg(3), &profile);
+        let mut wl = Workload::new(0.0, 0x11ad);
+        let out =
+            run_scenario(&mut fleet, &cfg, &mut wl, 64).unwrap();
+        // One phase per event plus the start phase.
+        assert_eq!(out.summary.phases.len(), 4);
+        assert_eq!(out.summary.phases[0].name, "start");
+        assert_eq!(out.summary.phases[1].name, "fail1");
+        assert_eq!(out.summary.phases[2].name, "refresh1");
+        assert_eq!(out.summary.phases[3].name, "retire2");
+        // Phases tile the wall axis.
+        for w in out.summary.phases.windows(2) {
+            assert!((w[0].end - w[1].start).abs() < 1e-9);
+        }
+        // Conservation: every routed request completed exactly once.
+        let mut ids: Vec<u64> = out
+            .completions
+            .iter()
+            .map(|c| c.completion.id)
+            .collect();
+        ids.sort_unstable();
+        assert_eq!(ids.len(), fleet.metrics.total_routed());
+        for (want, &got) in (0..ids.len() as u64).zip(&ids) {
+            assert_eq!(got, want);
+        }
+        assert_eq!(out.summary.served, ids.len());
+        // The failure phase dips availability; the refresh recovers it.
+        assert!(out.summary.phases[1].availability < 1.0);
+        assert!(
+            out.summary.phases[2].availability
+                > out.summary.phases[1].availability
+        );
+        assert_eq!(fleet.chip_state(1), ChipState::Alive);
+        assert_eq!(fleet.chip_state(2), ChipState::Retired);
+        // Phase served counts sum to the fleet total.
+        let phase_served: usize =
+            out.summary.phases.iter().map(|p| p.served).sum();
+        assert_eq!(phase_served, out.summary.served);
+    }
+
+    #[test]
+    fn traffic_event_switches_the_shape_mid_run() {
+        let cfg = ScenarioConfig::new(
+            4.0,
+            0.1,
+            TrafficShape::Constant { rate: 100.0 },
+            vec![Event::new(
+                2.0,
+                Action::Traffic {
+                    shape: TrafficShape::Constant { rate: 2000.0 },
+                },
+            )],
+        );
+        let profile = AccuracyProfile::uncompensated(1.0, 0.0, 0.5);
+        let mut fleet = analytic_fleet(&fleet_cfg(2), &profile);
+        let mut wl = Workload::new(0.0, 7);
+        let out =
+            run_scenario(&mut fleet, &cfg, &mut wl, 64).unwrap();
+        assert_eq!(out.summary.phases.len(), 2);
+        let quiet = &out.summary.phases[0];
+        let loud = &out.summary.phases[1];
+        // ~200 vs ~4000 expected arrivals; 3x is a conservative gap.
+        assert!(
+            loud.served as f64 > 3.0 * quiet.served as f64,
+            "quiet {} vs loud {}",
+            quiet.served,
+            loud.served
+        );
+    }
+
+    #[test]
+    fn script_parses_and_rejects_malformed_timelines() {
+        let j = parse(
+            r#"{"seconds": 10, "tick": 0.5,
+                "traffic": {"shape": "constant", "rate": 500},
+                "events": [
+                  {"at": 2, "action": "fail", "chip": 1},
+                  {"at": 4, "action": "refresh", "chip": 1},
+                  {"at": 6, "action": "traffic", "label": "crowd",
+                   "traffic": {"shape": "burst", "base": 100,
+                               "peak": 900, "start": 6,
+                               "duration": 2}},
+                  {"at": 8, "action": "retire", "chip": 0}
+                ]}"#,
+        )
+        .unwrap();
+        let cfg = ScenarioConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.events.len(), 4);
+        assert_eq!(cfg.events[0].label, "fail1");
+        assert_eq!(cfg.events[2].label, "crowd");
+        assert!(matches!(
+            cfg.events[1].action,
+            Action::Refresh { chip: 1, t0 } if t0 == 1.0
+        ));
+        // Malformed: event beyond the run.
+        let bad = parse(
+            r#"{"seconds": 5, "tick": 0.5,
+                "traffic": {"shape": "constant", "rate": 1},
+                "events": [{"at": 9, "action": "fail", "chip": 0}]}"#,
+        )
+        .unwrap();
+        assert!(ScenarioConfig::from_json(&bad).is_err());
+        // Malformed: unknown action.
+        let bad = parse(
+            r#"{"seconds": 5, "tick": 0.5,
+                "traffic": {"shape": "constant", "rate": 1},
+                "events": [{"at": 1, "action": "explode", "chip": 0}]}"#,
+        )
+        .unwrap();
+        assert!(ScenarioConfig::from_json(&bad).is_err());
+        // Malformed: tick > seconds.
+        let bad = parse(
+            r#"{"seconds": 1, "tick": 2,
+                "traffic": {"shape": "constant", "rate": 1}}"#,
+        )
+        .unwrap();
+        assert!(ScenarioConfig::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn bad_event_surfaces_its_label_in_the_error() {
+        // Failing the only live chip is refused; the error names the
+        // event so script authors can find it.
+        let cfg = ScenarioConfig::new(
+            2.0,
+            0.5,
+            TrafficShape::Constant { rate: 10.0 },
+            vec![
+                Event::new(0.5, Action::Fail { chip: 0 }),
+                Event::new(1.0, Action::Fail { chip: 1 }),
+            ],
+        );
+        let profile = AccuracyProfile::uncompensated(0.9, 0.0, 0.5);
+        let mut fleet = analytic_fleet(&fleet_cfg(2), &profile);
+        let mut wl = Workload::new(0.0, 3);
+        let err = run_scenario(&mut fleet, &cfg, &mut wl, 64)
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("fail1"), "error lost event context: {msg}");
+    }
+}

@@ -1,0 +1,313 @@
+//! Traffic shapes: time-varying arrival rates for the fleet workload.
+//!
+//! The fleet's Poisson [`Workload`](crate::coordinator::serve::Workload)
+//! draws arrivals at a single rate; a production service sees nothing
+//! so stationary. A [`TrafficShape`] maps serving wall time to an
+//! instantaneous rate, and the scenario runner re-pins `workload.rate`
+//! at every tick, giving a piecewise-constant approximation of the
+//! shape at tick resolution (exact for `Constant` and `Burst` whose
+//! edges land on tick boundaries).
+
+use anyhow::{bail, Result};
+
+/// A deterministic rate-versus-time curve (requests per wall second).
+#[derive(Debug, Clone, PartialEq)]
+pub enum TrafficShape {
+    /// Stationary Poisson traffic (the pre-scenario behavior).
+    Constant { rate: f64 },
+    /// Diurnal sinusoid: `base + amplitude · sin(2π·(t + phase)/period)`,
+    /// clamped at 0 — the day/night cycle every user-facing service
+    /// rides.
+    Diurnal {
+        base: f64,
+        amplitude: f64,
+        period: f64,
+        phase: f64,
+    },
+    /// Flash crowd: `peak` during `[start, start + duration)`, `base`
+    /// outside it.
+    Burst {
+        base: f64,
+        peak: f64,
+        start: f64,
+        duration: f64,
+    },
+    /// Linear ramp from `from` to `to` over `duration` seconds, holding
+    /// `to` afterwards (launch/rollout growth).
+    Ramp { from: f64, to: f64, duration: f64 },
+}
+
+impl TrafficShape {
+    /// Instantaneous arrival rate at serving wall time `t` (≥ 0).
+    pub fn rate_at(&self, t: f64) -> f64 {
+        match *self {
+            TrafficShape::Constant { rate } => rate,
+            TrafficShape::Diurnal {
+                base,
+                amplitude,
+                period,
+                phase,
+            } => {
+                let w = 2.0 * std::f64::consts::PI * (t + phase) / period;
+                (base + amplitude * w.sin()).max(0.0)
+            }
+            TrafficShape::Burst {
+                base,
+                peak,
+                start,
+                duration,
+            } => {
+                if t >= start && t < start + duration {
+                    peak
+                } else {
+                    base
+                }
+            }
+            TrafficShape::Ramp { from, to, duration } => {
+                if duration <= 0.0 || t >= duration {
+                    to
+                } else {
+                    from + (to - from) * (t / duration).max(0.0)
+                }
+            }
+        }
+    }
+
+    /// Mean rate over `[0, seconds)` by tick-resolution quadrature —
+    /// used for capacity sanity checks and reporting.
+    pub fn mean_rate(&self, seconds: f64, tick: f64) -> f64 {
+        let mut t = 0.0;
+        let mut sum = 0.0;
+        let mut n = 0usize;
+        while t < seconds {
+            sum += self.rate_at(t);
+            n += 1;
+            t += tick;
+        }
+        if n == 0 {
+            0.0
+        } else {
+            sum / n as f64
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TrafficShape::Constant { .. } => "constant",
+            TrafficShape::Diurnal { .. } => "diurnal",
+            TrafficShape::Burst { .. } => "burst",
+            TrafficShape::Ramp { .. } => "ramp",
+        }
+    }
+
+    /// Parse from a scenario-script JSON object, e.g.
+    /// `{"shape": "burst", "base": 800, "peak": 4000, "start": 4,
+    ///   "duration": 2}`. Unknown shapes and non-finite or negative
+    /// parameters are rejected.
+    pub fn from_json(j: &crate::util::json::Json) -> Result<TrafficShape> {
+        let kind = j.req_str("shape")?;
+        let get = |key: &str, default: f64| -> Result<f64> {
+            match j.get(key) {
+                None => Ok(default),
+                Some(v) => v.as_f64().ok_or_else(|| {
+                    anyhow::anyhow!("traffic field '{key}' must be a number")
+                }),
+            }
+        };
+        let shape = match kind {
+            "constant" => TrafficShape::Constant {
+                rate: j.req_f64("rate")?,
+            },
+            "diurnal" => TrafficShape::Diurnal {
+                base: j.req_f64("base")?,
+                amplitude: j.req_f64("amplitude")?,
+                period: j.req_f64("period")?,
+                phase: get("phase", 0.0)?,
+            },
+            "burst" => TrafficShape::Burst {
+                base: j.req_f64("base")?,
+                peak: j.req_f64("peak")?,
+                start: j.req_f64("start")?,
+                duration: j.req_f64("duration")?,
+            },
+            "ramp" => TrafficShape::Ramp {
+                from: j.req_f64("from")?,
+                to: j.req_f64("to")?,
+                duration: j.req_f64("duration")?,
+            },
+            other => bail!(
+                "unknown traffic shape '{other}' \
+                 (constant | diurnal | burst | ramp)"
+            ),
+        };
+        shape.validate()?;
+        Ok(shape)
+    }
+
+    /// Reject shapes that could drive the Poisson generator negative or
+    /// spin it forever.
+    pub fn validate(&self) -> Result<()> {
+        let fields: Vec<(&str, f64)> = match *self {
+            TrafficShape::Constant { rate } => vec![("rate", rate)],
+            TrafficShape::Diurnal {
+                base,
+                amplitude,
+                period,
+                phase,
+            } => vec![
+                ("base", base),
+                ("amplitude", amplitude),
+                ("period", period),
+                ("phase", phase),
+            ],
+            TrafficShape::Burst {
+                base,
+                peak,
+                start,
+                duration,
+            } => vec![
+                ("base", base),
+                ("peak", peak),
+                ("start", start),
+                ("duration", duration),
+            ],
+            TrafficShape::Ramp { from, to, duration } => {
+                vec![("from", from), ("to", to), ("duration", duration)]
+            }
+        };
+        for (name, v) in &fields {
+            if !v.is_finite() {
+                bail!("traffic field '{name}' must be finite, got {v}");
+            }
+        }
+        let nonneg = |name: &str, v: f64| -> Result<()> {
+            if v < 0.0 {
+                bail!("traffic field '{name}' must be >= 0, got {v}");
+            }
+            Ok(())
+        };
+        match *self {
+            TrafficShape::Constant { rate } => nonneg("rate", rate)?,
+            TrafficShape::Diurnal {
+                base,
+                amplitude,
+                period,
+                ..
+            } => {
+                nonneg("base", base)?;
+                nonneg("amplitude", amplitude)?;
+                if period <= 0.0 {
+                    bail!("diurnal period must be > 0, got {period}");
+                }
+            }
+            TrafficShape::Burst {
+                base,
+                peak,
+                start,
+                duration,
+            } => {
+                nonneg("base", base)?;
+                nonneg("peak", peak)?;
+                nonneg("start", start)?;
+                nonneg("duration", duration)?;
+            }
+            TrafficShape::Ramp { from, to, duration } => {
+                nonneg("from", from)?;
+                nonneg("to", to)?;
+                nonneg("duration", duration)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    #[test]
+    fn constant_is_flat() {
+        let s = TrafficShape::Constant { rate: 300.0 };
+        for t in [0.0, 1.0, 1e6] {
+            assert_eq!(s.rate_at(t), 300.0);
+        }
+        assert_eq!(s.mean_rate(10.0, 0.5), 300.0);
+    }
+
+    #[test]
+    fn diurnal_cycles_and_never_goes_negative() {
+        let s = TrafficShape::Diurnal {
+            base: 100.0,
+            amplitude: 150.0, // deliberately > base: clamp kicks in
+            period: 8.0,
+            phase: 0.0,
+        };
+        assert_eq!(s.rate_at(0.0), 100.0);
+        assert!((s.rate_at(2.0) - 250.0).abs() < 1e-9); // crest
+        assert_eq!(s.rate_at(6.0), 0.0); // trough clamped
+        // One full period later: same value.
+        assert!((s.rate_at(2.0) - s.rate_at(10.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn burst_is_a_rectangle() {
+        let s = TrafficShape::Burst {
+            base: 200.0,
+            peak: 4000.0,
+            start: 4.0,
+            duration: 2.0,
+        };
+        assert_eq!(s.rate_at(3.999), 200.0);
+        assert_eq!(s.rate_at(4.0), 4000.0);
+        assert_eq!(s.rate_at(5.999), 4000.0);
+        assert_eq!(s.rate_at(6.0), 200.0);
+    }
+
+    #[test]
+    fn ramp_interpolates_then_holds() {
+        let s = TrafficShape::Ramp {
+            from: 100.0,
+            to: 500.0,
+            duration: 4.0,
+        };
+        assert_eq!(s.rate_at(0.0), 100.0);
+        assert!((s.rate_at(2.0) - 300.0).abs() < 1e-9);
+        assert_eq!(s.rate_at(4.0), 500.0);
+        assert_eq!(s.rate_at(100.0), 500.0);
+    }
+
+    #[test]
+    fn json_roundtrip_and_validation() {
+        let j = parse(
+            r#"{"shape": "burst", "base": 800, "peak": 4000,
+                "start": 4, "duration": 2}"#,
+        )
+        .unwrap();
+        let s = TrafficShape::from_json(&j).unwrap();
+        assert_eq!(s.name(), "burst");
+        assert_eq!(s.rate_at(5.0), 4000.0);
+        let d = parse(
+            r#"{"shape": "diurnal", "base": 100, "amplitude": 50,
+                "period": 10}"#,
+        )
+        .unwrap();
+        assert_eq!(TrafficShape::from_json(&d).unwrap().rate_at(0.0), 100.0);
+        assert!(TrafficShape::from_json(
+            &parse(r#"{"shape": "square"}"#).unwrap()
+        )
+        .is_err());
+        assert!(TrafficShape::from_json(
+            &parse(r#"{"shape": "constant", "rate": -5}"#).unwrap()
+        )
+        .is_err());
+        assert!(TrafficShape::from_json(
+            &parse(
+                r#"{"shape": "diurnal", "base": 1, "amplitude": 1,
+                    "period": 0}"#
+            )
+            .unwrap()
+        )
+        .is_err());
+    }
+}

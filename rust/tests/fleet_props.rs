@@ -4,7 +4,8 @@
 
 use vera_plus::coordinator::serve::{BatchPolicy, Workload};
 use vera_plus::fleet::{
-    analytic_fleet, AccuracyProfile, BalancePolicy, FleetConfig,
+    analytic_fleet, AccuracyProfile, BalancePolicy, ChipEngine,
+    ChipState, FleetConfig,
 };
 use vera_plus::rram::YEAR;
 use vera_plus::util::prop::{forall, Gen};
@@ -267,6 +268,174 @@ fn prop_fleet_accuracy_tracks_profile() {
             let acc = fleet.metrics.accuracy();
             if (acc - p).abs() > 0.04 {
                 return Err(format!("accuracy {acc} vs p {p}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Exactly-once completion conservation survives a mid-run chip
+/// failure under every balancing policy: a random chip crashes after a
+/// random number of ticks (with whatever backlog it has), its queue is
+/// redelivered, and the final completion id set is still exactly
+/// {0, …, routed−1}.
+#[test]
+fn prop_chip_failure_preserves_exactly_once_conservation() {
+    forall(
+        "fleet_failure_exactly_once",
+        26,
+        18,
+        |rng| {
+            (
+                Gen::usize_in(rng, 2, 5),
+                Gen::f64_in(rng, 200.0, 1200.0),
+                Gen::usize_in(rng, 1, 6),
+                Gen::usize_in(rng, 1, 6),
+                rng.next_u64(),
+            )
+        },
+        |&(n_chips, rate, ticks_before, ticks_after, seed)| {
+            for policy in BalancePolicy::ALL {
+                let profile = AccuracyProfile::synthetic(
+                    5, 10.0 * YEAR, 0.9, 0.02, 0.5,
+                );
+                let mut c = cfg(n_chips, policy, seed);
+                // Tight capacity so failures catch real backlogs.
+                c.exec_seconds_per_batch = 0.01;
+                let mut fleet = analytic_fleet(&c, &profile);
+                let mut wl = Workload::new(rate, seed ^ 0xdead);
+                let mut ids: Vec<u64> = Vec::new();
+                for _ in 0..ticks_before {
+                    for fc in fleet
+                        .tick(0.1, &mut wl, 64)
+                        .map_err(|e| e.to_string())?
+                    {
+                        ids.push(fc.completion.id);
+                    }
+                }
+                let victim = (seed as usize) % n_chips;
+                fleet.fail_chip(victim).map_err(|e| e.to_string())?;
+                let dead_served =
+                    fleet.metrics.per_chip[victim].served;
+                for _ in 0..ticks_after {
+                    for fc in fleet
+                        .tick(0.1, &mut wl, 64)
+                        .map_err(|e| e.to_string())?
+                    {
+                        ids.push(fc.completion.id);
+                    }
+                }
+                for fc in fleet.flush().map_err(|e| e.to_string())? {
+                    ids.push(fc.completion.id);
+                }
+                let routed = fleet.metrics.total_routed();
+                if ids.len() != routed {
+                    return Err(format!(
+                        "{}: {} completions vs {} routed after \
+                         failing chip {victim}",
+                        policy.name(),
+                        ids.len(),
+                        routed
+                    ));
+                }
+                ids.sort_unstable();
+                for (want, &got) in (0..routed as u64).zip(&ids) {
+                    if got != want {
+                        return Err(format!(
+                            "{}: id {want} lost or duplicated \
+                             across the failure (saw {got})",
+                            policy.name()
+                        ));
+                    }
+                }
+                if fleet.metrics.per_chip[victim].served
+                    != dead_served
+                {
+                    return Err(format!(
+                        "{}: dead chip {victim} served after failing",
+                        policy.name()
+                    ));
+                }
+                if fleet.chip_state(victim) != ChipState::Failed {
+                    return Err("victim not marked failed".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Reprogramming resets the drift clock and the active compensation
+/// set: after `refresh_chip`, the chip's device age restarts at `t0`,
+/// its next completions carry set 0, and its predicted accuracy
+/// returns to the ladder's first era.
+#[test]
+fn prop_refresh_resets_age_and_active_set() {
+    forall(
+        "fleet_refresh_resets",
+        27,
+        24,
+        |rng| {
+            (
+                Gen::usize_in(rng, 2, 5),
+                Gen::f64_in(rng, 1.0, 4.0),
+                rng.next_u64(),
+            )
+        },
+        |&(n_chips, stagger_years, seed)| {
+            // Multi-era ladder with visible in-era decay.
+            let profile = AccuracyProfile::synthetic(
+                8, 10.0 * YEAR, 0.9, 0.05, 0.3,
+            );
+            let mut c = cfg(n_chips, BalancePolicy::RoundRobin, seed);
+            c.t0 = YEAR; // every chip starts deep in the ladder
+            c.stagger = stagger_years * YEAR;
+            // Wall-speed aging: the refreshed chip must stay inside
+            // era 0 (first ~16 device-seconds) for the rest of the
+            // run, which accelerated clocks would blow through in
+            // microseconds of wall time.
+            c.accel = 1.0;
+            let mut fleet = analytic_fleet(&c, &profile);
+            let mut wl = Workload::new(300.0, seed ^ 0x5e7);
+            for _ in 0..3 {
+                fleet.tick(0.1, &mut wl, 64).map_err(|e| e.to_string())?;
+            }
+            fleet.flush().map_err(|e| e.to_string())?;
+            let victim = (seed as usize) % n_chips;
+            fleet
+                .refresh_chip(victim, 1.0)
+                .map_err(|e| e.to_string())?;
+            let age = fleet.chips[victim].device_age();
+            if age != 1.0 {
+                return Err(format!(
+                    "device age after refresh: {age}, want 1.0"
+                ));
+            }
+            if fleet.chips[victim].active_segment().is_some() {
+                return Err("active set not cleared by refresh".into());
+            }
+            let pred = fleet.chips[victim].predicted_accuracy();
+            if (pred - 0.9).abs() > 1e-9 {
+                return Err(format!(
+                    "predicted accuracy after refresh: {pred}, want \
+                     the set-0 value 0.9"
+                ));
+            }
+            // The next served batch on the victim runs on set 0.
+            for _ in 0..5 {
+                for fc in fleet
+                    .tick(0.1, &mut wl, 64)
+                    .map_err(|e| e.to_string())?
+                {
+                    if fc.chip == victim
+                        && fc.completion.set_index != 0
+                    {
+                        return Err(format!(
+                            "post-refresh completion on set {}",
+                            fc.completion.set_index
+                        ));
+                    }
+                }
             }
             Ok(())
         },

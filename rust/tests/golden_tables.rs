@@ -1,0 +1,211 @@
+//! Golden regression tests for the quick-budget harness: fixed-seed
+//! `table2`/`table3` outputs are snapshotted under `tests/golden/` and
+//! compared with tolerances, so paper-number drift is caught in CI
+//! rather than by eye.
+//!
+//! Snapshot policy:
+//! - `table3.json` — pure cost-model arithmetic, checked in, compared
+//!   at `1e-9` relative tolerance (any change is an intentional model
+//!   change and must update the snapshot).
+//! - `table2.json` — requires compiled artifacts + training, so it
+//!   cannot be pre-generated offline; the test is artifact-gated and
+//!   **bootstraps** its snapshot on the first toolchain run (commit the
+//!   written file to arm the regression check). Subsequent runs compare
+//!   accuracy means at ±2.5 points absolute — wide enough for benign
+//!   float/backend drift, tight enough to flag a broken pipeline.
+//!
+//! Refresh a stale snapshot intentionally with
+//! `VERA_UPDATE_GOLDEN=1 cargo test -q --test golden_tables`.
+
+use vera_plus::costmodel::{cost_method, paper_resnet20_layers, Method};
+use vera_plus::harness::{self, Budget, Ctx};
+use vera_plus::util::json::{arr, num, obj, parse, s, Json};
+use std::path::{Path, PathBuf};
+
+fn golden_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/golden")
+}
+
+fn update_requested() -> bool {
+    std::env::var("VERA_UPDATE_GOLDEN").is_ok()
+}
+
+fn rel_close(got: f64, want: f64, tol: f64) -> bool {
+    if want == 0.0 {
+        got.abs() <= tol
+    } else {
+        (got / want - 1.0).abs() <= tol
+    }
+}
+
+/// Regenerate the table3 analytic rows exactly as the harness computes
+/// them (paper ResNet-20 geometry, r = 1, 11 sets).
+fn table3_rows() -> Json {
+    let layers = paper_resnet20_layers(10);
+    let rows: Vec<Json> = [
+        (Method::Lora, "LoRA"),
+        (Method::Vera, "VeRA"),
+        (Method::VeraPlus, "VeRA+"),
+    ]
+    .iter()
+    .map(|&(m, name)| {
+        let c = cost_method(&layers, 64, 64, m, 1, 11);
+        obj(vec![
+            ("method", s(name)),
+            ("params_overhead", num(c.params_overhead())),
+            ("ops_overhead", num(c.ops_overhead())),
+            ("storage_kb", num(c.storage_kb())),
+            ("total_area_mm2", num(c.total_area_mm2())),
+            ("energy_nj", num(c.energy_nj())),
+        ])
+    })
+    .collect();
+    obj(vec![
+        ("geometry", s("paper_resnet20")),
+        ("rank", num(1.0)),
+        ("n_sets", num(11.0)),
+        ("rows", arr(rows)),
+    ])
+}
+
+#[test]
+fn golden_table3_cost_model_is_frozen() {
+    let path = golden_dir().join("table3.json");
+    let fresh = table3_rows();
+    if update_requested() {
+        std::fs::write(&path, fresh.to_string_pretty()).unwrap();
+        eprintln!("[golden] rewrote {}", path.display());
+        return;
+    }
+    let golden = parse(
+        &std::fs::read_to_string(&path).unwrap_or_else(|e| {
+            panic!("golden snapshot {} missing: {e}", path.display())
+        }),
+    )
+    .unwrap();
+    let want = golden.req_arr("rows").unwrap();
+    let got = fresh.req_arr("rows").unwrap();
+    assert_eq!(want.len(), got.len(), "row count changed");
+    for (w, g) in want.iter().zip(got) {
+        let method = w.req_str("method").unwrap();
+        assert_eq!(method, g.req_str("method").unwrap());
+        for key in [
+            "params_overhead",
+            "ops_overhead",
+            "storage_kb",
+            "total_area_mm2",
+            "energy_nj",
+        ] {
+            let wv = w.req_f64(key).unwrap();
+            let gv = g.req_f64(key).unwrap();
+            assert!(
+                rel_close(gv, wv, 1e-9),
+                "{method}.{key} drifted: golden {wv}, got {gv} — if \
+                 intentional, rerun with VERA_UPDATE_GOLDEN=1 and \
+                 commit the snapshot"
+            );
+        }
+    }
+}
+
+/// Cross-check the snapshot against the paper's published Table III
+/// numbers, so the frozen values themselves cannot silently wander
+/// from the reproduction target.
+#[test]
+fn golden_table3_snapshot_stays_near_paper() {
+    let path = golden_dir().join("table3.json");
+    let golden =
+        parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    // (method, paper params overhead, paper ops overhead), Table III
+    // @ r=1, 11 sets.
+    let paper = [
+        ("LoRA", 0.470, 0.115),
+        ("VeRA", 0.119, 0.125),
+        ("VeRA+", 0.035, 0.019),
+    ];
+    for (name, p_params, p_ops) in paper {
+        let row = golden
+            .req_arr("rows")
+            .unwrap()
+            .iter()
+            .find(|r| r.req_str("method").unwrap() == name)
+            .unwrap_or_else(|| panic!("snapshot lost row {name}"));
+        let params = row.req_f64("params_overhead").unwrap();
+        let ops = row.req_f64("ops_overhead").unwrap();
+        assert!(
+            rel_close(params, p_params, 0.45),
+            "{name} snapshot params_overhead {params} far from paper \
+             {p_params}"
+        );
+        assert!(
+            rel_close(ops, p_ops, 0.45),
+            "{name} snapshot ops_overhead {ops} far from paper {p_ops}"
+        );
+    }
+}
+
+/// Artifact-gated table2 golden: runs the quick-budget harness
+/// end-to-end (fixed seed) and compares accuracy means against the
+/// snapshot; bootstraps the snapshot on the first toolchain run.
+#[test]
+fn golden_table2_quick_budget_accuracies() {
+    let dir = vera_plus::find_artifacts();
+    if !dir.join("index.json").exists() {
+        eprintln!("artifacts missing; run `make artifacts` — skipping \
+                   table2 golden");
+        return;
+    }
+    let ctx = Ctx::new(Budget::quick()).unwrap();
+    harness::run(&ctx, "table2").unwrap();
+    let fresh = parse(
+        &std::fs::read_to_string(
+            ctx.results_dir.join("table2.json"),
+        )
+        .unwrap(),
+    )
+    .unwrap();
+    let path = golden_dir().join("table2.json");
+    if update_requested() || !path.exists() {
+        std::fs::create_dir_all(golden_dir()).unwrap();
+        std::fs::write(&path, fresh.to_string_pretty()).unwrap();
+        eprintln!(
+            "[golden] wrote {} — commit it to arm the table2 \
+             regression check",
+            path.display()
+        );
+        return;
+    }
+    let golden =
+        parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    let wrows = golden.req_arr("rows").unwrap();
+    let grows = fresh.req_arr("rows").unwrap();
+    assert_eq!(wrows.len(), grows.len(), "table2 model set changed — \
+               rerun with VERA_UPDATE_GOLDEN=1");
+    const TOL: f64 = 0.025; // ±2.5 accuracy points absolute
+    for (w, g) in wrows.iter().zip(grows) {
+        let model = w.req_str("model").unwrap();
+        assert_eq!(model, g.req_str("model").unwrap());
+        let wf = w.req_f64("drift_free").unwrap();
+        let gf = g.req_f64("drift_free").unwrap();
+        assert!(
+            (wf - gf).abs() <= TOL,
+            "{model} drift_free drifted: golden {wf}, got {gf}"
+        );
+        for key in ["uncompensated", "compensated"] {
+            let wpts = w.req_arr(key).unwrap();
+            let gpts = g.req_arr(key).unwrap();
+            assert_eq!(wpts.len(), gpts.len(), "{model}.{key} columns");
+            for (wp, gp) in wpts.iter().zip(gpts) {
+                let label = wp.req_str("label").unwrap();
+                let wm = wp.req_f64("mean").unwrap();
+                let gm = gp.req_f64("mean").unwrap();
+                assert!(
+                    (wm - gm).abs() <= TOL,
+                    "{model}.{key}[{label}] drifted: golden {wm}, \
+                     got {gm} — if intentional, rerun with \
+                     VERA_UPDATE_GOLDEN=1 and commit"
+                );
+            }
+        }
+    }
+}

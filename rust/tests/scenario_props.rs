@@ -1,0 +1,244 @@
+//! Scenario/fault properties at the network readout level: injected
+//! device faults flow through every existing readout path
+//! (`ProgrammedNetwork::read_drifted*`), stay deterministic at a fixed
+//! seed, compose with the thread-count bit-reproducibility guarantee,
+//! and leave healthy devices' RNG streams untouched.
+
+use vera_plus::rram::{CellFault, DriftModel, IbmDrift, NoDrift, YEAR};
+use vera_plus::scenario::{
+    inject_faults, FaultSpec, ReadNoiseBurst, TrafficShape,
+};
+use vera_plus::util::prop::{forall, Gen};
+use vera_plus::util::rng::Pcg64;
+use vera_plus::util::tensor::TensorMap;
+use vera_plus::util::testkit::synthetic_network;
+
+fn readout(
+    net: &vera_plus::rram::mapping::ProgrammedNetwork,
+    model: &dyn DriftModel,
+    seed: u64,
+    threads: usize,
+) -> Vec<(String, Vec<f32>)> {
+    let mut rng = Pcg64::new(seed);
+    let mut out = TensorMap::new();
+    net.read_drifted_into_threads(YEAR, model, &mut rng, &mut out,
+                                  threads);
+    out.iter()
+        .map(|(k, v)| (k.clone(), v.as_f32().to_vec()))
+        .collect()
+}
+
+/// Faults are picked up by the network readout path (not just raw bank
+/// reads), deterministically: same seed ⇒ identical faulted weights,
+/// and the faulted readout differs from the healthy one.
+#[test]
+fn network_readout_sees_injected_faults_deterministically() {
+    let model = IbmDrift::default();
+    let healthy = synthetic_network(4, 32);
+    let mut faulted = synthetic_network(4, 32);
+    let report = inject_faults(
+        &mut faulted.bank,
+        &FaultSpec {
+            stuck_lrs: 0.02,
+            stuck_hrs: 0.02,
+            ..FaultSpec::default()
+        },
+        0xfa17,
+    )
+    .unwrap();
+    assert!(report.total() > 100, "fault campaign too small");
+    let h = readout(&healthy, &model, 3, 1);
+    let f1 = readout(&faulted, &model, 3, 1);
+    let f2 = readout(&faulted, &model, 3, 1);
+    assert_eq!(f1, f2, "faulted readout not deterministic");
+    assert_ne!(h, f1, "faults invisible to the network readout");
+    // Fault application consumes no RNG: most weights are identical
+    // between healthy and faulted readouts (only positions touching a
+    // faulted device differ).
+    let (mut same, mut total) = (0usize, 0usize);
+    for ((_, hv), (_, fv)) in h.iter().zip(&f1) {
+        for (a, b) in hv.iter().zip(fv) {
+            total += 1;
+            if a == b {
+                same += 1;
+            }
+        }
+    }
+    // ~4% of devices faulted ⇒ ≲8% of differential weights touched.
+    assert!(
+        same as f64 > 0.85 * total as f64,
+        "fault injection perturbed {}/{} weights — RNG stream shifted",
+        total - same,
+        total
+    );
+}
+
+/// Faulted readouts stay bit-identical across thread counts — fault
+/// injection composes with the PR 2 parallel-readout guarantee.
+#[test]
+fn faulted_readout_is_bit_reproducible_across_thread_counts() {
+    let model = IbmDrift::default();
+    let mut net = synthetic_network(6, 32);
+    inject_faults(&mut net.bank, &FaultSpec::uniform(0.05), 21)
+        .unwrap();
+    let serial = readout(&net, &model, 11, 1);
+    for threads in [2usize, 4, 8] {
+        assert_eq!(
+            readout(&net, &model, 11, threads),
+            serial,
+            "thread count {threads} changed the faulted readout"
+        );
+    }
+}
+
+/// Stuck-at faults pin the *effective weight* contribution: with
+/// drift-free reads, stuck-at-HRS on every device collapses every
+/// differential pair — and therefore every weight — to zero.
+#[test]
+fn stuck_at_hrs_everywhere_zeroes_weights_under_no_drift() {
+    let mut net = synthetic_network(2, 16);
+    let (tiles, used): (usize, Vec<usize>) = (
+        net.bank.n_tiles(),
+        net.bank.tiles.iter().map(|t| t.used).collect(),
+    );
+    for ti in 0..tiles {
+        for ci in 0..used[ti] {
+            net.bank.inject_fault(ti, ci, CellFault::StuckAt(0.0));
+        }
+    }
+    let out = readout(&net, &NoDrift, 1, 1);
+    for (name, w) in out {
+        assert!(
+            w.iter().all(|&v| v == 0.0),
+            "{name}: stuck-at-HRS everywhere must zero all weights"
+        );
+    }
+}
+
+/// Retention failures are time-gated at the network level: before
+/// `t_fail` the faulted readout matches the healthy one bit-for-bit;
+/// deep past `t_fail` the faulted weights have relaxed.
+#[test]
+fn retention_faults_gate_on_device_age() {
+    let model = NoDrift;
+    let healthy = synthetic_network(3, 24);
+    let mut faulted = synthetic_network(3, 24);
+    inject_faults(
+        &mut faulted.bank,
+        &FaultSpec {
+            retention: 0.2,
+            t_fail: 1_000.0,
+            ln_tau: 2.0,
+            ..FaultSpec::default()
+        },
+        5,
+    )
+    .unwrap();
+    let read_at = |net: &_, t: f64| -> Vec<(String, Vec<f32>)> {
+        let mut rng = Pcg64::new(9);
+        let mut out = TensorMap::new();
+        net.read_drifted_into_threads(t, &model, &mut rng, &mut out, 1);
+        out.iter()
+            .map(|(k, v)| (k.clone(), v.as_f32().to_vec()))
+            .collect()
+    };
+    assert_eq!(
+        read_at(&healthy, 100.0),
+        read_at(&faulted, 100.0),
+        "retention faults fired before t_fail"
+    );
+    assert_ne!(
+        read_at(&healthy, 1e9),
+        read_at(&faulted, 1e9),
+        "retention faults never fired"
+    );
+}
+
+/// Property: traffic shapes never produce a negative or non-finite
+/// rate anywhere on their domain.
+#[test]
+fn prop_traffic_rates_are_finite_and_nonnegative() {
+    forall(
+        "traffic_rate_bounds",
+        41,
+        64,
+        |rng| {
+            let kind = Gen::usize_in(rng, 0, 3);
+            let a = Gen::f64_in(rng, 0.0, 5000.0);
+            let b = Gen::f64_in(rng, 0.0, 5000.0);
+            let c = Gen::f64_in(rng, 0.1, 500.0);
+            let t = Gen::f64_in(rng, 0.0, 1000.0);
+            (kind, a, b, c, t)
+        },
+        |&(kind, a, b, c, t)| {
+            let shape = match kind {
+                0 => TrafficShape::Constant { rate: a },
+                1 => TrafficShape::Diurnal {
+                    base: a,
+                    amplitude: b,
+                    period: c,
+                    phase: 0.0,
+                },
+                2 => TrafficShape::Burst {
+                    base: a,
+                    peak: b,
+                    start: c,
+                    duration: c,
+                },
+                _ => TrafficShape::Ramp {
+                    from: a,
+                    to: b,
+                    duration: c,
+                },
+            };
+            shape.validate().map_err(|e| e.to_string())?;
+            let r = shape.rate_at(t);
+            if !r.is_finite() || r < 0.0 {
+                return Err(format!(
+                    "{}: rate_at({t}) = {r}",
+                    shape.name()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// A burst-noise model composed over the tile-cache (`MeasuredDrift`)
+/// path keeps the cache valid: its `interp_levels` forwards to the
+/// inner grid, so cached and uncached reads agree.
+#[test]
+fn burst_wrapper_preserves_tile_interp_cache_equivalence() {
+    use vera_plus::rram::{ArrayBank, ConductanceGrid};
+    use vera_plus::util::testkit::measured_model;
+    let mut grid = ConductanceGrid::default();
+    grid.prog_sigma = 0.0;
+    let targets: Vec<f64> =
+        (0..4000).map(|i| 4.0 + 0.009 * i as f64).collect();
+    let mut bank = ArrayBank::default();
+    let segs = bank.program(&targets, &grid, &mut Pcg64::new(2));
+    let burst =
+        ReadNoiseBurst::new(measured_model(), 1.5, 0.0, f64::MAX);
+    assert!(burst.interp_levels().is_some());
+    // First read populates the tile cache; second reuses it — both in
+    // the active window, identical streams.
+    let mut a = Vec::new();
+    bank.read_drifted(&segs, YEAR, &burst, &mut Pcg64::new(4), &mut a);
+    let mut b = Vec::new();
+    bank.read_drifted(&segs, YEAR, &burst, &mut Pcg64::new(4), &mut b);
+    assert_eq!(a, b);
+    // And the noise is really there: variance larger than the inner
+    // model alone.
+    let mut inner = Vec::new();
+    bank.read_drifted(&segs, YEAR, &measured_model(),
+                      &mut Pcg64::new(4), &mut inner);
+    let var = |v: &Vec<f32>| {
+        let n = v.len() as f64;
+        let mean = v.iter().map(|&x| x as f64).sum::<f64>() / n;
+        v.iter()
+            .map(|&x| (x as f64 - mean).powi(2))
+            .sum::<f64>()
+            / n
+    };
+    assert!(var(&a) > var(&inner));
+}
