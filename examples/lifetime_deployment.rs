@@ -47,7 +47,7 @@ fn main() -> anyhow::Result<()> {
 
     // ---- 2. Deploy ---------------------------------------------------------
     println!("\n=== [2] deploy: fold BN, quantize W4, program arrays ===");
-    let dep = deploy(
+    let dep = Arc::new(deploy(
         rt.clone(),
         model,
         &params,
@@ -56,7 +56,7 @@ fn main() -> anyhow::Result<()> {
         Box::new(IbmDrift::default()),
         ConductanceGrid::default(),
         7,
-    )?;
+    )?);
     println!(
         "{} RRAM weights -> {} devices on {} tiles",
         dep.manifest.rram_params(),
@@ -107,17 +107,17 @@ fn main() -> anyhow::Result<()> {
     result
         .store
         .save(std::path::Path::new("results/lifetime_store"))?;
-    let store = SetStore::load(std::path::Path::new(
+    let store = Arc::new(SetStore::load(std::path::Path::new(
         "results/lifetime_store",
-    ))?;
+    ))?);
 
     // ---- 4. 10-year accelerated serve ---------------------------------------
     println!("\n=== [4] serving a 10-year lifetime (accelerated) ===");
     let serve_wall = if full { 40.0 } else { 15.0 };
     let accel = 10.0 * YEAR / serve_wall;
     let mut server = Server::new(
-        &dep,
-        &store,
+        Arc::clone(&dep),
+        store,
         LifetimeClock::new(1.0, accel),
         BatchPolicy { max_batch: 32, max_wait: 0.01 },
         11,

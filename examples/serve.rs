@@ -29,7 +29,7 @@ fn main() -> anyhow::Result<()> {
         &BackboneTrainCfg { steps: 300, eval_every: 0,
                             ..Default::default() },
     )?;
-    let dep = deploy(
+    let dep = Arc::new(deploy(
         rt,
         model,
         &params,
@@ -38,11 +38,14 @@ fn main() -> anyhow::Result<()> {
         Box::new(IbmDrift::default()),
         ConductanceGrid::default(),
         7,
-    )?;
+    )?);
 
     // Reuse a previously scheduled store if present, else schedule one.
     let stem = std::path::Path::new("results/serve_store");
-    let store = if stem.with_extension("json").exists() {
+    let store: Arc<SetStore> = Arc::new(if stem
+        .with_extension("json")
+        .exists()
+    {
         println!("loading existing store {}", stem.display());
         SetStore::load(stem)?
     } else {
@@ -61,7 +64,7 @@ fn main() -> anyhow::Result<()> {
         std::fs::create_dir_all("results")?;
         result.store.save(stem)?;
         result.store
-    };
+    });
     println!("store: {} sets at t = {:?}\n",
              store.len(),
              store
@@ -72,8 +75,8 @@ fn main() -> anyhow::Result<()> {
 
     for rate in [50.0, 400.0, 2000.0] {
         let mut server = Server::new(
-            &dep,
-            &store,
+            Arc::clone(&dep),
+            Arc::clone(&store),
             LifetimeClock::new(1.0, 10.0 * YEAR / 10.0),
             BatchPolicy { max_batch: 32, max_wait: 0.01 },
             11,

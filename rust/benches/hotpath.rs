@@ -1,29 +1,38 @@
 //! `cargo bench --bench hotpath`: microbenchmarks of the serving hot path
 //! (the §Perf targets in DESIGN.md).
 //!
-//! Two sections:
+//! Three sections:
 //!
-//! 1. **Artifact-free** (always runs — this is what CI measures): the
-//!    drift-readout engine scalar vs block vs parallel, bulk Gaussian
-//!    generation, percentile selection and SetStore routing. Emits the
-//!    repo-root `BENCH_hotpath.json` perf-trajectory point with
-//!    per-stage ns/op, throughput and speedup-vs-scalar ratios.
-//! 2. **PJRT-backed** (skipped when no artifacts/client): fwd /
+//! 1. **Drift engine** (artifact-free, always runs): scalar vs block vs
+//!    parallel readout, bulk Gaussian generation, percentile selection
+//!    and SetStore routing.
+//! 2. **Native execution backend** (artifact-free, always runs):
+//!    `forward/*` — naive vs blocked vs parallel GEMM, fused vs
+//!    unfused VeRA+ compensation epilogue, end-to-end native forward
+//!    executables — and `evalstats/*` — the batched EVALSTATS path at
+//!    1 worker vs the pool.
+//! 3. **PJRT-backed** (needs artifacts + real xla bindings): fwd /
 //!    compensated / train-step executables and the standalone VeRA+
 //!    kernel.
 //!
+//! Emits the repo-root `BENCH_hotpath.json` perf-trajectory point with
+//! per-stage ns/op, throughput, and speedup entries
+//! (naive→blocked→parallel, fused-vs-unfused, evalstats pool).
 //! Quick mode for CI: set `VERA_BENCH_QUICK=1`.
 
 use std::sync::Arc;
 use vera_plus::compensation::{CompSet, SetStore};
+use vera_plus::coordinator::eval::{eval_stats_workers, EvalMode};
 use vera_plus::rram::{ArrayBank, ConductanceGrid, IbmDrift, YEAR};
+use vera_plus::runtime::native::gemm;
 use vera_plus::runtime::Runtime;
 use vera_plus::util::bencher::Bencher;
 use vera_plus::util::parallel;
 use vera_plus::util::rng::Pcg64;
 use vera_plus::util::tensor::{DType, Tensor, TensorMap};
 use vera_plus::util::testkit::{
-    measured_model, synthetic_network, ScalarPath,
+    measured_model, native_deployment, synthetic_network, ScalarPath,
+    NATIVE_EVAL_BATCH, NATIVE_MODEL, NATIVE_TEST_LEN,
 };
 
 /// Devices in the bank-level microbench (two full 256×512 tiles —
@@ -153,6 +162,187 @@ fn drift_stages(bench: &mut Bencher) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Native execution backend: GEMM ladder, fusion, end-to-end forward
+/// executables and the batched EVALSTATS path. Artifact-free.
+fn native_stages(bench: &mut Bencher) -> anyhow::Result<()> {
+    let randn = |len: usize, rng: &mut Pcg64| {
+        let mut v = vec![0f32; len];
+        rng.fill_normal_f32(&mut v, 0.0, 1.0);
+        v
+    };
+
+    // --- GEMM ladder: naive triple loop → blocked → parallel ---------
+    let (m, n, k) = (256usize, 256usize, 256usize);
+    let mut rng = Pcg64::new(5);
+    let a = randn(m * k, &mut rng);
+    let b = randn(k * n, &mut rng);
+    let mut c = vec![0f32; m * n];
+    let macs = (m * n * k) as f64;
+    bench.bench_items("forward/gemm_256/naive", macs, || {
+        gemm::gemm_naive(m, n, k, &a, &b, &mut c);
+        std::hint::black_box(c[0]);
+    });
+    bench.bench_items("forward/gemm_256/blocked", macs, || {
+        gemm::gemm_threads(1, m, n, k, &a, &b, &mut c);
+        std::hint::black_box(c[0]);
+    });
+    let threads = parallel::max_threads();
+    println!("(parallel GEMM / evalstats pool: {threads} threads)");
+    bench.bench_items("forward/gemm_256/parallel", macs, || {
+        gemm::gemm_threads(threads, m, n, k, &a, &b, &mut c);
+        std::hint::black_box(c[0]);
+    });
+
+    // --- fused vs unfused VeRA+ compensation epilogue ----------------
+    // Layer-shaped: 4096 activation rows, 64→128 channels, rank 8.
+    let (rows, cin, cout, r) = (4096usize, 64usize, 128usize, 8usize);
+    let xq = randn(rows * cin, &mut rng);
+    let w = randn(cin * cout, &mut rng);
+    let bias = randn(cout, &mut rng);
+    let a_sl = randn(r * cin, &mut rng);
+    let b_sl = randn(cout * r, &mut rng);
+    let d_vec = randn(r, &mut rng);
+    let b_vec = randn(cout, &mut rng);
+    // Per-set rank-r panel, built once per compensation set (not per
+    // batch) — amortized outside the timed loop.
+    let mut bd = vec![0f32; cout * r];
+    for o in 0..cout {
+        for q in 0..r {
+            bd[o * r + q] = b_sl[o * r + q] * d_vec[q] * b_vec[o];
+        }
+    }
+    let mut s = vec![0f32; rows * r];
+    let mut y = vec![0f32; rows * cout];
+    let comp_items = (rows * cout * cin) as f64;
+    bench.bench_items("forward/comp_epilogue/fused", comp_items, || {
+        gemm::gemm_nt_threads(1, rows, r, cin, &xq, &a_sl, &mut s);
+        gemm::gemm_fused_threads(
+            1,
+            rows,
+            cout,
+            cin,
+            &xq,
+            &w,
+            &gemm::Epilogue {
+                bias: Some(&bias),
+                relu: true,
+                comp: Some((&s, r, &bd)),
+            },
+            &mut y,
+        );
+        std::hint::black_box(y[0]);
+    });
+    let mut t_buf = vec![0f32; rows * r];
+    let mut u = vec![0f32; rows * cout];
+    bench.bench_items(
+        "forward/comp_epilogue/unfused",
+        comp_items,
+        || {
+            // Separate ops: main GEMM, shared projection, diag scale,
+            // up-projection, materialized comp add + b-scale, bias,
+            // relu.
+            gemm::gemm_threads(1, rows, cout, cin, &xq, &w, &mut y);
+            gemm::gemm_nt_threads(1, rows, r, cin, &xq, &a_sl, &mut s);
+            for i in 0..rows {
+                for q in 0..r {
+                    t_buf[i * r + q] = s[i * r + q] * d_vec[q];
+                }
+            }
+            gemm::gemm_nt_threads(1, rows, cout, r, &t_buf, &b_sl,
+                                  &mut u);
+            for i in 0..rows {
+                for o in 0..cout {
+                    let v = y[i * cout + o]
+                        + u[i * cout + o] * b_vec[o]
+                        + bias[o];
+                    y[i * cout + o] = v.max(0.0);
+                }
+            }
+            std::hint::black_box(y[0]);
+        },
+    );
+
+    // --- end-to-end native executables over the testkit network ------
+    let dep = native_deployment(1, 7, Box::new(IbmDrift::default()));
+    let weights = dep.net.read_ideal();
+    let trainables = dep.fresh_trainables(3);
+    let indices: Vec<usize> = (0..NATIVE_EVAL_BATCH).collect();
+    let data = dep.dataset.test_batch(&indices);
+    let mut inputs = TensorMap::new();
+    inputs.insert("x".into(), data.x);
+    let fwd = dep
+        .rt
+        .executable(NATIVE_MODEL, &format!("fwd_b{NATIVE_EVAL_BATCH}"))?;
+    bench.bench_items(
+        "forward/native_fwd_b256",
+        NATIVE_EVAL_BATCH as f64,
+        || {
+            let o = fwd.run_named(&[&weights, &inputs]).unwrap();
+            std::hint::black_box(o.len());
+        },
+    );
+    let comp = dep.rt.executable(
+        NATIVE_MODEL,
+        &format!("comp_veraplus_r1_b{NATIVE_EVAL_BATCH}"),
+    )?;
+    bench.bench_items(
+        "forward/native_comp_fwd_b256",
+        NATIVE_EVAL_BATCH as f64,
+        || {
+            let o = comp
+                .run_named(&[&weights, &dep.frozen, &trainables,
+                             &inputs])
+                .unwrap();
+            std::hint::black_box(o.len());
+        },
+    );
+
+    // --- batched EVALSTATS: 1 worker vs the pool ---------------------
+    let t10y = 10.0 * YEAR;
+    let instances = 8usize;
+    let empty = TensorMap::new();
+    let items = (instances * NATIVE_TEST_LEN) as f64;
+    let mut rng = Pcg64::new(2);
+    bench.bench_items("evalstats/1_worker", items, || {
+        let st = eval_stats_workers(
+            &dep,
+            &empty,
+            EvalMode::Plain,
+            t10y,
+            instances,
+            NATIVE_TEST_LEN,
+            &mut rng,
+            1,
+        )
+        .unwrap();
+        std::hint::black_box(st.mean);
+    });
+    let mut rng = Pcg64::new(2);
+    bench.bench_items("evalstats/pool", items, || {
+        let st = eval_stats_workers(
+            &dep,
+            &empty,
+            EvalMode::Plain,
+            t10y,
+            instances,
+            NATIVE_TEST_LEN,
+            &mut rng,
+            threads,
+        )
+        .unwrap();
+        std::hint::black_box(st.mean);
+    });
+
+    // Per-graph execution counts (the surfaced executions counter).
+    let counts = dep.rt.execution_counts();
+    let rendered: Vec<String> = counts
+        .iter()
+        .map(|(m, g, n)| format!("{m}/{g}={n}"))
+        .collect();
+    println!("native executions: {}", rendered.join(" "));
+    Ok(())
+}
+
 /// PJRT-backed stages: executables + kernel. Needs compiled artifacts
 /// (`make artifacts`) and a real xla client.
 fn pjrt_stages(rt: Arc<Runtime>, bench: &mut Bencher)
@@ -273,17 +463,27 @@ fn main() -> anyhow::Result<()> {
     };
 
     drift_stages(&mut bench)?;
+    native_stages(&mut bench)?;
 
-    match Runtime::cpu(vera_plus::find_artifacts()) {
-        Ok(rt) => pjrt_stages(Arc::new(rt), &mut bench)?,
-        Err(e) => println!(
-            "skipping PJRT stages (no artifacts / client): {e:#}"
-        ),
+    let artifacts = vera_plus::find_artifacts();
+    if artifacts.join("index.json").exists() {
+        let rt = Runtime::cpu(&artifacts)?;
+        if rt.backend_name() == "pjrt" {
+            pjrt_stages(Arc::new(rt), &mut bench)?;
+        } else {
+            println!(
+                "skipping PJRT stages (native backend selected; \
+                 train graphs need real xla bindings)"
+            );
+        }
+    } else {
+        println!("skipping PJRT stages (no artifacts)");
     }
 
     // Perf trajectory point at the repo root (stage → ns/op +
-    // speedups vs the pre-PR scalar path), plus the usual results/
-    // copy.
+    // speedups: drift engine vs the pre-PR scalar path, GEMM
+    // naive→blocked→parallel, fused-vs-unfused compensation, and the
+    // EVALSTATS pool), plus the usual results/ copy.
     let threads = parallel::max_threads();
     let parallel_stage = format!("net_readout/{threads}_threads");
     let pairs: Vec<(&str, &str)> = vec![
@@ -294,6 +494,13 @@ fn main() -> anyhow::Result<()> {
         ),
         ("net_readout/1_thread", "net_readout/pre_pr_scalar"),
         (&parallel_stage, "net_readout/pre_pr_scalar"),
+        ("forward/gemm_256/blocked", "forward/gemm_256/naive"),
+        ("forward/gemm_256/parallel", "forward/gemm_256/blocked"),
+        (
+            "forward/comp_epilogue/fused",
+            "forward/comp_epilogue/unfused",
+        ),
+        ("evalstats/pool", "evalstats/1_worker"),
     ];
     let root_json = concat!(
         env!("CARGO_MANIFEST_DIR"),

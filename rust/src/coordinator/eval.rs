@@ -5,15 +5,41 @@
 //! EVALSTATS (Alg. 1 line 4): it samples `n_instances` independent drift
 //! readouts at time `t` and reports the accuracy mean and standard
 //! deviation, which the scheduler compares as `µ − 3σ` against the floor.
+//!
+//! §Perf (batched EVALSTATS): the executable is resolved once, the test
+//! activations are packed into padded batches once and reused across
+//! every drift instance, each instance gets its own RNG stream split
+//! serially up front, and the instances fan out over the worker pool
+//! ([`crate::util::parallel`], `VERA_THREADS`) with one reusable
+//! weight-readout buffer per worker. Results are bit-identical for
+//! every thread count. NOTE: the per-instance stream split changes the
+//! RNG stream of EVALSTATS relative to the pre-native-backend serial
+//! draw — accuracy assertions on this path are qualitative
+//! (ordering/recovery), not seed-calibrated (see the PR 3 ROADMAP
+//! note), so no thresholds needed recalibration.
+//!
+//! A test split (or `max_samples` cap) smaller than the lowered batch
+//! no longer errors: the final partial batch is padded to the graph's
+//! static batch and scored on its real rows only, weighted by actual
+//! length.
 
 use crate::coordinator::Deployment;
+use crate::runtime::Executable;
+use crate::util::parallel;
 use crate::util::rng::Pcg64;
 use crate::util::tensor::{Tensor, TensorMap};
-use anyhow::Result;
+use anyhow::{ensure, Result};
+use std::sync::Arc;
 
-/// Argmax accuracy of logits against labels.
+/// Argmax accuracy of logits against labels (scores the first
+/// `labels.len()` rows, so padded batches are scored on real rows
+/// only).
 pub fn accuracy_of(logits: &Tensor, labels: &[i32]) -> f64 {
-    let n = labels.len();
+    correct_rows(logits, labels) as f64 / labels.len() as f64
+}
+
+/// Count of rows whose argmax matches the label.
+fn correct_rows(logits: &Tensor, labels: &[i32]) -> usize {
     let classes = logits.shape[1];
     let v = logits.as_f32();
     let mut correct = 0usize;
@@ -29,7 +55,7 @@ pub fn accuracy_of(logits: &Tensor, labels: &[i32]) -> f64 {
             correct += 1;
         }
     }
-    correct as f64 / n as f64
+    correct
 }
 
 /// Evaluation mode: plain backbone or backbone + compensation branch.
@@ -39,10 +65,91 @@ pub enum EvalMode {
     Compensated,
 }
 
+/// Test activations packed once for repeated evaluation: each batch is
+/// padded to the graph's static batch dimension and carries the labels
+/// of its real (non-padding) rows.
+struct EvalBatches {
+    batches: Vec<(TensorMap, Vec<i32>)>,
+    total: usize,
+}
+
+fn pack_eval_batches(
+    dep: &Deployment,
+    batch: usize,
+    max_samples: usize,
+) -> Result<EvalBatches> {
+    let n_test = dep.dataset.test_len().min(max_samples);
+    ensure!(batch > 0, "graph has a zero batch dimension");
+    ensure!(n_test > 0, "empty test split");
+    let mut batches = Vec::with_capacity(n_test.div_ceil(batch));
+    let mut idx = 0usize;
+    while idx < n_test {
+        let take = batch.min(n_test - idx);
+        // Pad the tail with sample 0; padded rows are never scored.
+        let indices: Vec<usize> = (idx..idx + take)
+            .chain(std::iter::repeat(0).take(batch - take))
+            .collect();
+        let b = dep.dataset.test_batch(&indices);
+        let labels = b.y.as_i32()[..take].to_vec();
+        let mut inputs = TensorMap::new();
+        inputs.insert("x".into(), b.x);
+        batches.push((inputs, labels));
+        idx += take;
+    }
+    Ok(EvalBatches {
+        batches,
+        total: n_test,
+    })
+}
+
+/// The graph's static batch dimension (the `x` input's leading axis).
+fn graph_batch(exe: &Executable) -> Result<usize> {
+    let spec = exe
+        .sig
+        .inputs
+        .iter()
+        .find(|s| s.name == "x")
+        .ok_or_else(|| {
+            anyhow::anyhow!("graph {} has no 'x' input", exe.sig.key)
+        })?;
+    Ok(*spec.shape.first().unwrap_or(&0))
+}
+
+/// Run the packed batches under one drifted readout; returns accuracy
+/// weighted by real row counts.
+#[allow(clippy::too_many_arguments)]
+fn eval_packed(
+    dep: &Deployment,
+    exe: &Executable,
+    weights: &TensorMap,
+    trainables: &TensorMap,
+    mode: EvalMode,
+    batches: &EvalBatches,
+    threads: Option<usize>,
+) -> Result<f64> {
+    let mut correct = 0usize;
+    for (inputs, labels) in &batches.batches {
+        let outs = match mode {
+            EvalMode::Plain => {
+                exe.run_named_threads(&[weights, inputs], threads)?
+            }
+            EvalMode::Compensated => exe.run_named_threads(
+                &[weights, &dep.frozen, trainables, inputs],
+                threads,
+            )?,
+        };
+        let logits = outs.get("logits").expect("graph emits logits");
+        correct += correct_rows(logits, labels);
+    }
+    Ok(correct as f64 / batches.total as f64)
+}
+
 /// Evaluate test-split accuracy for one drifted readout.
 ///
 /// `trainables` must hold the active compensation set for
 /// `EvalMode::Compensated` and may be empty for `EvalMode::Plain`.
+/// Supports a partial final batch: `min(test_len, max_samples)` may be
+/// smaller than (or not a multiple of) the lowered batch size.
 pub fn eval_accuracy(
     dep: &Deployment,
     weights: &TensorMap,
@@ -55,33 +162,9 @@ pub fn eval_accuracy(
         EvalMode::Compensated => dep.comp_key(256),
     };
     let exe = dep.rt.executable(&dep.manifest.model, &key)?;
-    let batch = 256usize;
-    let n_test = dep.dataset.test_len().min(max_samples);
-    let mut correct_weighted = 0.0;
-    let mut total = 0usize;
-    let mut idx = 0usize;
-    while idx + batch <= n_test {
-        let indices: Vec<usize> = (idx..idx + batch).collect();
-        let b = dep.dataset.test_batch(&indices);
-        let mut inputs = TensorMap::new();
-        inputs.insert("x".into(), b.x);
-        let outs = match mode {
-            EvalMode::Plain => exe.run_named(&[weights, &inputs])?,
-            EvalMode::Compensated => exe.run_named(&[
-                weights,
-                &dep.frozen,
-                trainables,
-                &inputs,
-            ])?,
-        };
-        let logits = outs.get("logits").expect("graph emits logits");
-        correct_weighted +=
-            accuracy_of(logits, b.y.as_i32()) * batch as f64;
-        total += batch;
-        idx += batch;
-    }
-    anyhow::ensure!(total > 0, "test set smaller than one batch");
-    Ok(correct_weighted / total as f64)
+    let batches =
+        pack_eval_batches(dep, graph_batch(&exe)?, max_samples)?;
+    eval_packed(dep, &exe, weights, trainables, mode, &batches, None)
 }
 
 /// EVALSTATS result.
@@ -115,7 +198,9 @@ impl Stats {
 }
 
 /// Paper Alg. 1 EVALSTATS: accuracy statistics over `n_instances`
-/// independent drift readouts at device age `t`.
+/// independent drift readouts at device age `t`. Fans the instances
+/// over the worker pool; see the module docs for the batching/stream
+/// layout.
 pub fn eval_stats(
     dep: &Deployment,
     trainables: &TensorMap,
@@ -125,17 +210,117 @@ pub fn eval_stats(
     max_samples: usize,
     rng: &mut Pcg64,
 ) -> Result<Stats> {
+    eval_stats_workers(
+        dep,
+        trainables,
+        mode,
+        t,
+        n_instances,
+        max_samples,
+        rng,
+        parallel::max_threads(),
+    )
+}
+
+/// One EVALSTATS worker: a contiguous chunk of instances with its own
+/// pre-split streams and a reusable readout buffer.
+struct InstanceChunk {
+    streams: Vec<Pcg64>,
+    weights: TensorMap,
+    samples: Vec<f64>,
+    err: Option<anyhow::Error>,
+}
+
+/// [`eval_stats`] with an explicit worker count (bench / repro tests;
+/// results are bit-identical for every `workers` value).
+#[allow(clippy::too_many_arguments)]
+pub fn eval_stats_workers(
+    dep: &Deployment,
+    trainables: &TensorMap,
+    mode: EvalMode,
+    t: f64,
+    n_instances: usize,
+    max_samples: usize,
+    rng: &mut Pcg64,
+    workers: usize,
+) -> Result<Stats> {
+    ensure!(n_instances > 0, "EVALSTATS needs at least one instance");
+    let key = match mode {
+        EvalMode::Plain => dep.fwd_key(256),
+        EvalMode::Compensated => dep.comp_key(256),
+    };
+    // Resolve the executable and pack the activations ONCE; both are
+    // shared read-only across every instance.
+    let exe: Arc<Executable> =
+        dep.rt.executable(&dep.manifest.model, &key)?;
+    let batches =
+        pack_eval_batches(dep, graph_batch(&exe)?, max_samples)?;
+    // One RNG stream per instance, split serially up front — the
+    // readout is deterministic in (seed, instance index), independent
+    // of the worker count.
+    let mut streams: Vec<Pcg64> = (0..n_instances)
+        .map(|i| rng.split(i as u64))
+        .collect();
+    let workers = workers.max(1).min(n_instances);
+    let per = n_instances.div_ceil(workers);
+    let mut chunks: Vec<InstanceChunk> = Vec::with_capacity(workers);
+    while !streams.is_empty() {
+        let rest = streams.split_off(per.min(streams.len()));
+        chunks.push(InstanceChunk {
+            streams,
+            weights: TensorMap::new(),
+            samples: Vec::new(),
+            err: None,
+        });
+        streams = rest;
+    }
+    // Nested parallelism discipline: split the pool between the
+    // instance fan-out and the per-instance GEMM/readout threads, so
+    // few instances on many cores still use the whole pool (e.g. 4
+    // instances on 16 cores -> 4 workers × 4 inner threads). A lone
+    // worker keeps the full inner fan-out. Results are bit-identical
+    // for every split (both layers are thread-count invariant).
+    let pool = parallel::max_threads();
+    let (inner, read_threads) = if chunks.len() > 1 {
+        let per_worker = (pool / chunks.len()).max(1);
+        (Some(per_worker), per_worker)
+    } else {
+        (None, pool)
+    };
+    let exe_ref = &exe;
+    let batches_ref = &batches;
+    parallel::for_each_mut(workers, &mut chunks, |_, chunk| {
+        for stream in &mut chunk.streams {
+            dep.net.read_drifted_into_threads(
+                t,
+                dep.drift.as_ref(),
+                stream,
+                &mut chunk.weights,
+                read_threads,
+            );
+            match eval_packed(
+                dep,
+                exe_ref,
+                &chunk.weights,
+                trainables,
+                mode,
+                batches_ref,
+                inner,
+            ) {
+                Ok(acc) => chunk.samples.push(acc),
+                Err(e) => {
+                    chunk.err = Some(e);
+                    return;
+                }
+            }
+        }
+    });
     let mut samples = Vec::with_capacity(n_instances);
-    let mut weights = TensorMap::new(); // reused readout buffers (§Perf)
-    for _ in 0..n_instances {
-        dep.drifted_weights_into(t, rng, &mut weights);
-        samples.push(eval_accuracy(
-            dep,
-            &weights,
-            trainables,
-            mode,
-            max_samples,
-        )?);
+    for chunk in chunks {
+        if let Some(e) = chunk.err {
+            return Err(e);
+        }
+        samples.extend(chunk.samples);
     }
     Ok(Stats::from_samples(&samples))
 }
@@ -153,6 +338,17 @@ mod tests {
         assert!((accuracy_of(&logits, &[0, 1, 1]) - 2.0 / 3.0).abs() < 1e-9);
         assert_eq!(accuracy_of(&logits, &[0, 1, 0]), 1.0);
         assert_eq!(accuracy_of(&logits, &[1, 0, 1]), 0.0);
+    }
+
+    #[test]
+    fn padded_rows_are_not_scored() {
+        // 3 logit rows but only 2 labels: the third row is padding.
+        let logits = Tensor::from_f32(
+            &[3, 2],
+            vec![0.9, 0.1, 0.2, 0.8, 0.6, 0.4],
+        );
+        assert_eq!(correct_rows(&logits, &[0, 1]), 2);
+        assert_eq!(accuracy_of(&logits, &[0, 0]), 0.5);
     }
 
     #[test]

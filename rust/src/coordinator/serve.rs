@@ -14,7 +14,8 @@ use crate::coordinator::Deployment;
 use crate::util::rng::Pcg64;
 use crate::util::tensor::{Tensor, TensorMap};
 use anyhow::Result;
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::Arc;
 
 /// Simulated lifetime clock: maps serving progress onto device age.
 /// `accel` compresses years into a test run (e.g. 1e7 ⇒ 31 s wall ≈ 10 y).
@@ -98,6 +99,11 @@ pub struct ServeMetrics {
     pub set_switches: usize,
     pub latencies: Vec<f64>,
     pub occupancy_sum: f64,
+    /// Executions per graph key (`Executable::executions`, surfaced):
+    /// how many forward passes each lowered/native graph actually ran.
+    /// The analytic engine records its simulated batches under
+    /// `"analytic"`.
+    pub graph_execs: BTreeMap<String, usize>,
 }
 
 impl ServeMetrics {
@@ -161,9 +167,9 @@ pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
 /// drifted-weight view per drift "era" (the weight readout is refreshed
 /// whenever the active set changes — a conservative proxy for continuous
 /// drift that keeps the simulation cheap).
-pub struct Server<'a> {
-    pub dep: &'a Deployment,
-    pub store: &'a SetStore,
+pub struct Server {
+    pub dep: Arc<Deployment>,
+    pub store: Arc<SetStore>,
     pub clock: LifetimeClock,
     pub policy: BatchPolicy,
     pub metrics: ServeMetrics,
@@ -182,14 +188,17 @@ pub struct Server<'a> {
     wall: f64,
 }
 
-impl<'a> Server<'a> {
+impl Server {
+    /// Assemble a server over shared deployment state. `Arc`-owned (no
+    /// borrow lifetime), so a `Server` can live inside an owned fleet
+    /// shard — see [`crate::fleet::NativeEngine`].
     pub fn new(
-        dep: &'a Deployment,
-        store: &'a SetStore,
+        dep: Arc<Deployment>,
+        store: Arc<SetStore>,
         clock: LifetimeClock,
         policy: BatchPolicy,
         seed: u64,
-    ) -> Server<'a> {
+    ) -> Server {
         let mut rng = Pcg64::with_stream(seed, 0x5e12e);
         let weights = dep.drifted_weights(clock.device_age(), &mut rng);
         // Derive the lowered-graph key prefix from the canonical key
@@ -323,10 +332,11 @@ impl<'a> Server<'a> {
             .chain(std::iter::repeat(0).take(pad))
             .collect();
         let data = self.dep.dataset.test_batch(&indices);
-        let exe = self.dep.rt.executable(
-            &self.dep.manifest.model,
-            &self.dep.comp_key(exec_batch),
-        )?;
+        let graph_key = self.dep.comp_key(exec_batch);
+        let exe = self
+            .dep
+            .rt
+            .executable(&self.dep.manifest.model, &graph_key)?;
         let mut inputs = TensorMap::new();
         inputs.insert("x".into(), data.x);
         let outs = exe.run_named(&[
@@ -360,6 +370,7 @@ impl<'a> Server<'a> {
         self.metrics.batches += 1;
         self.metrics.occupancy_sum +=
             batch.len() as f64 / exec_batch as f64;
+        *self.metrics.graph_execs.entry(graph_key).or_insert(0) += 1;
         Ok(completions)
     }
 }

@@ -225,22 +225,25 @@ pub fn eval_backbone(
     let exe = rt.executable(model, "train_fwd_b256")?;
     let batch = 256usize;
     let n = dataset.test_len().min(max_samples);
+    anyhow::ensure!(n > 0, "empty test split");
     let mut acc = 0.0;
-    let mut total = 0;
     let mut idx = 0;
-    while idx + batch <= n {
-        let indices: Vec<usize> = (idx..idx + batch).collect();
+    // Partial final batch: pad to the static batch dimension and score
+    // only the real rows, weighted by actual length.
+    while idx < n {
+        let take = batch.min(n - idx);
+        let indices: Vec<usize> = (idx..idx + take)
+            .chain(std::iter::repeat(0).take(batch - take))
+            .collect();
         let b = dataset.test_batch(&indices);
         let mut inputs = TensorMap::new();
         inputs.insert("x".into(), b.x);
         let outs = exe.run_named(&[params, &inputs])?;
         acc += eval::accuracy_of(
             outs.get("logits").unwrap(),
-            b.y.as_i32(),
-        ) * batch as f64;
-        total += batch;
-        idx += batch;
+            &b.y.as_i32()[..take],
+        ) * take as f64;
+        idx += take;
     }
-    anyhow::ensure!(total > 0, "test set smaller than one batch");
-    Ok(acc / total as f64)
+    Ok(acc / n as f64)
 }

@@ -87,7 +87,29 @@ pub trait ChipEngine: Send {
     fn metrics(&self) -> &ServeMetrics;
 }
 
-impl ChipEngine for Server<'_> {
+/// The real-execution fleet shard: an owned [`Server`] over a shared
+/// (`Arc`) deployment + scheduled set store. With the native runtime
+/// backend this runs genuine forward passes — drifted readouts through
+/// the blocked-GEMM interpreter — with **no PJRT and no artifacts**,
+/// which makes real-forward fleets practical for small models
+/// (testkit-scale) where the analytic Bernoulli approximation is too
+/// coarse. Build via [`native_engine`]; contrast with
+/// [`AnalyticEngine`].
+pub type NativeEngine = Server;
+
+/// Assemble a [`NativeEngine`] fleet shard: one owned serving loop per
+/// chip, all sharing the deployment and set ladder through `Arc`s.
+pub fn native_engine(
+    dep: &Arc<crate::coordinator::Deployment>,
+    store: &Arc<crate::compensation::SetStore>,
+    clock: LifetimeClock,
+    policy: BatchPolicy,
+    seed: u64,
+) -> NativeEngine {
+    Server::new(Arc::clone(dep), Arc::clone(store), clock, policy, seed)
+}
+
+impl ChipEngine for Server {
     fn submit(&mut self, req: Request) {
         Server::submit(self, req);
     }
@@ -197,9 +219,15 @@ impl AnalyticEngine {
         }
         self.metrics.batches += 1;
         // No graph inventory here: occupancy is relative to max_batch
-        // (the real server divides by its selected graph batch).
+        // (the real server divides by its selected graph batch), and
+        // simulated executions are booked under one "analytic" key.
         self.metrics.occupancy_sum +=
             batch.len() as f64 / self.policy.max_batch as f64;
+        *self
+            .metrics
+            .graph_execs
+            .entry("analytic".into())
+            .or_insert(0) += 1;
         out
     }
 

@@ -227,6 +227,11 @@ pub struct FleetSummary {
     /// Per-phase breakdown when the run came from the scenario engine
     /// (empty for plain fleet runs).
     pub phases: Vec<PhaseSummary>,
+    /// Executions per graph key summed across chips (the previously
+    /// dead `Executable::executions` counter, surfaced): real engines
+    /// report their lowered/native graph keys, analytic engines report
+    /// `"analytic"`.
+    pub graph_execs: std::collections::BTreeMap<String, usize>,
 }
 
 impl FleetSummary {
@@ -261,7 +266,14 @@ impl FleetSummary {
             .flat_map(|c| c.metrics().latencies.iter().copied())
             .collect();
         sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut graph_execs = std::collections::BTreeMap::new();
+        for chip in chips {
+            for (key, n) in &chip.metrics().graph_execs {
+                *graph_execs.entry(key.clone()).or_insert(0) += n;
+            }
+        }
         FleetSummary {
+            graph_execs,
             set_switches: rows.iter().map(|r| r.set_switches).sum(),
             served: fm.served,
             accuracy: fm.accuracy(),
@@ -314,6 +326,14 @@ impl FleetSummary {
                 String::new()
             },
         );
+        if !self.graph_execs.is_empty() {
+            let execs: Vec<String> = self
+                .graph_execs
+                .iter()
+                .map(|(k, n)| format!("{k}={n}"))
+                .collect();
+            println!("executions: {}", execs.join(" "));
+        }
         for p in &self.phases {
             p.print();
         }

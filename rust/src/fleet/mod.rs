@@ -32,7 +32,7 @@ pub mod metrics;
 pub mod profile;
 pub mod router;
 
-pub use chip::{AnalyticEngine, ChipEngine};
+pub use chip::{native_engine, AnalyticEngine, ChipEngine, NativeEngine};
 pub use metrics::{
     ChipLoad, ChipSummary, FleetMetrics, FleetSummary, PhaseSummary,
 };

@@ -6,7 +6,10 @@
 //! EXPERIMENTS.md for paper-vs-measured results.
 //!
 //! Layer map:
-//! - `runtime`      — PJRT CPU client loading AOT HLO-text artifacts.
+//! - `runtime`      — pluggable execution backend: native in-process
+//!   graph interpreter (blocked parallel GEMM, fused VeRA+ branch) by
+//!   default, PJRT CPU client over AOT HLO-text artifacts when real
+//!   bindings exist.
 //! - `rram`         — 1T1R device/array simulator + drift models.
 //! - `coordinator`  — the paper's contribution: drift-aware scheduling
 //!   (Alg. 1), compensation training, set management, serving.

@@ -187,23 +187,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "store",
         &format!("results/store_{model}_{method}_r{rank}"),
     );
-    let store = vera_plus::compensation::SetStore::load(
+    let store = Arc::new(vera_plus::compensation::SetStore::load(
         std::path::Path::new(&store_path),
-    )?;
+    )?);
     let ctx = Ctx::new(budget(args))?;
-    let dep = ctx.deployment(
+    let dep = Arc::new(ctx.deployment(
         &model,
         &method,
         rank,
         Box::new(IbmDrift::default()),
-    )?;
+    )?);
     let seconds = args.get_f64("seconds", 20.0)?;
     let accel = args.get_f64("accel", 10.0 * YEAR / 20.0)?;
     let rate = args.get_f64("rate", 500.0)?;
     let clock = LifetimeClock::new(1.0, accel);
     let mut server = Server::new(
-        &dep,
-        &store,
+        Arc::clone(&dep),
+        store,
         clock,
         BatchPolicy {
             max_batch: args.get_usize("batch", 32)?,
@@ -341,24 +341,24 @@ fn cmd_fleet(args: &Args) -> Result<()> {
                 "store",
                 &format!("results/store_{model}_{method}_r{rank}"),
             );
-            let store = vera_plus::compensation::SetStore::load(
+            let store = Arc::new(vera_plus::compensation::SetStore::load(
                 std::path::Path::new(&store_path),
-            )?;
+            )?);
             anyhow::ensure!(
                 !store.is_empty(),
                 "store {store_path} has no compensation sets"
             );
             cost_sets = store.len();
             let ctx = Ctx::new(budget(args))?;
-            let dep = ctx.deployment(
+            let dep = Arc::new(ctx.deployment(
                 &model,
                 &method,
                 rank,
                 Box::new(IbmDrift::default()),
-            )?;
+            )?);
             let chips: Vec<Server> = (0..n_chips)
                 .map(|i| {
-                    Server::new(
+                    vera_plus::fleet::native_engine(
                         &dep,
                         &store,
                         LifetimeClock::new(cfg.chip_age(i), cfg.accel),
@@ -545,6 +545,7 @@ fn cmd_info() -> Result<()> {
     let dir = vera_plus::find_artifacts();
     println!("artifact dir: {}", dir.display());
     let rt = Runtime::cpu(&dir)?;
+    println!("execution backend: {}", rt.backend_name());
     let index = std::fs::read_to_string(dir.join("index.json"))?;
     let j = vera_plus::util::json::parse(&index)?;
     for model in j.req_arr("models")? {

@@ -1,37 +1,69 @@
-//! A loaded + compiled graph with typed marshalling against its manifest
-//! signature.
+//! A compiled graph with typed marshalling against its manifest
+//! signature. The execution engine behind it is either a PJRT loaded
+//! executable (HLO artifacts + real xla bindings) or a [`NativeGraph`]
+//! (in-process interpreter over blocked GEMM kernels) — callers of
+//! [`Executable::run`] / [`Executable::run_named`] cannot tell the
+//! difference.
 
 use crate::nn::manifest::GraphSig;
+use crate::runtime::native::NativeGraph;
 use crate::util::tensor::{Tensor, TensorMap};
 use anyhow::{bail, Context, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
+
+/// The execution engine of one compiled graph.
+pub enum Engine {
+    Pjrt(xla::PjRtLoadedExecutable),
+    Native(NativeGraph),
+}
 
 /// One compiled executable bound to its IO signature.
 pub struct Executable {
     pub sig: GraphSig,
-    exe: xla::PjRtLoadedExecutable,
-    /// Cumulative execution count (metrics).
-    pub executions: std::sync::atomic::AtomicU64,
+    engine: Engine,
+    /// Cumulative execution count (surfaced through
+    /// [`Runtime::execution_counts`](crate::runtime::Runtime::execution_counts)
+    /// and the serve/fleet metrics).
+    pub executions: AtomicU64,
 }
 
 impl Executable {
-    pub fn compile(client: &xla::PjRtClient, sig: &GraphSig)
-                   -> Result<Arc<Executable>> {
-        let proto = xla::HloModuleProto::from_text_file(&sig.file)
-            .with_context(|| format!("load HLO {}", sig.file.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client
-            .compile(&comp)
-            .with_context(|| format!("compile {}", sig.key))?;
-        Ok(Arc::new(Executable {
-            sig: sig.clone(),
-            exe,
-            executions: std::sync::atomic::AtomicU64::new(0),
-        }))
+    pub(crate) fn new(sig: GraphSig, engine: Engine) -> Arc<Executable> {
+        Arc::new(Executable {
+            sig,
+            engine,
+            executions: AtomicU64::new(0),
+        })
+    }
+
+    /// Which engine runs this graph: `"pjrt"` or `"native"`.
+    pub fn backend(&self) -> &'static str {
+        match self.engine {
+            Engine::Pjrt(_) => "pjrt",
+            Engine::Native(_) => "native",
+        }
+    }
+
+    /// Forward passes executed so far.
+    pub fn executions(&self) -> u64 {
+        self.executions.load(Ordering::Relaxed)
     }
 
     /// Execute with positional tensors (must match the signature order).
     pub fn run(&self, args: &[&Tensor]) -> Result<Vec<Tensor>> {
+        self.run_threads(args, None)
+    }
+
+    /// [`run`](Self::run) with an explicit native worker-thread
+    /// override (`None` = `VERA_THREADS` / available parallelism).
+    /// Native outputs are bit-identical for every thread count; the
+    /// PJRT engine ignores the override.
+    pub fn run_threads(
+        &self,
+        args: &[&Tensor],
+        threads: Option<usize>,
+    ) -> Result<Vec<Tensor>> {
         if args.len() != self.sig.inputs.len() {
             bail!(
                 "graph {}: got {} args, signature has {}",
@@ -60,42 +92,66 @@ impl Executable {
                 );
             }
         }
-        let literals: Vec<xla::Literal> = args
-            .iter()
-            .map(|t| t.to_literal())
-            .collect::<Result<_>>()?;
-        let result = self.exe.execute::<xla::Literal>(&literals)?;
-        self.executions
-            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        // aot.py lowers with return_tuple=True: one tuple output.
-        let tuple = result[0][0].to_literal_sync()?;
-        let elems = tuple.to_tuple()?;
-        if elems.len() != self.sig.outputs.len() {
+        let outs = match &self.engine {
+            Engine::Native(graph) => {
+                graph.run(&self.sig, args, threads)?
+            }
+            Engine::Pjrt(exe) => {
+                let literals: Vec<xla::Literal> = args
+                    .iter()
+                    .map(|t| t.to_literal())
+                    .collect::<Result<_>>()?;
+                let result = exe.execute::<xla::Literal>(&literals)?;
+                // aot.py lowers with return_tuple=True: one tuple
+                // output.
+                let tuple = result[0][0].to_literal_sync()?;
+                let elems = tuple.to_tuple()?;
+                elems
+                    .iter()
+                    .map(Tensor::from_literal)
+                    .collect::<Result<Vec<_>>>()?
+            }
+        };
+        if outs.len() != self.sig.outputs.len() {
             bail!(
                 "graph {}: {} outputs, signature has {}",
                 self.sig.key,
-                elems.len(),
+                outs.len(),
                 self.sig.outputs.len()
             );
         }
-        elems.iter().map(Tensor::from_literal).collect()
+        self.executions.fetch_add(1, Ordering::Relaxed);
+        Ok(outs)
     }
 
-    /// Execute with named tensors gathered from `maps` (first match wins),
-    /// returning outputs as a named map.
+    /// Execute with named tensors gathered from `maps` (first match
+    /// wins), returning outputs as a named map.
     pub fn run_named(&self, maps: &[&TensorMap]) -> Result<TensorMap> {
-        let mut args: Vec<&Tensor> = Vec::with_capacity(self.sig.inputs.len());
+        self.run_named_threads(maps, None)
+    }
+
+    /// [`run_named`](Self::run_named) with an explicit native
+    /// worker-thread override (see [`run_threads`](Self::run_threads)).
+    pub fn run_named_threads(
+        &self,
+        maps: &[&TensorMap],
+        threads: Option<usize>,
+    ) -> Result<TensorMap> {
+        let mut args: Vec<&Tensor> =
+            Vec::with_capacity(self.sig.inputs.len());
         for spec in &self.sig.inputs {
             let t = maps
                 .iter()
                 .find_map(|m| m.get(&spec.name))
                 .with_context(|| {
-                    format!("graph {}: missing input '{}'",
-                            self.sig.key, spec.name)
+                    format!(
+                        "graph {}: missing input '{}'",
+                        self.sig.key, spec.name
+                    )
                 })?;
             args.push(t);
         }
-        let outs = self.run(&args)?;
+        let outs = self.run_threads(&args, threads)?;
         Ok(self
             .sig
             .outputs

@@ -1,13 +1,95 @@
-//! PJRT runtime: loads HLO-text artifacts produced by `python/compile/aot.py`
-//! and executes them on the CPU PJRT client from the request path.
+//! Execution runtime: one [`Runtime`] registry of compile-once
+//! executables keyed by (model, graph), over a pluggable [`Backend`].
 //!
-//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `client.compile` → `execute`. HLO
-//! *text* is the interchange format (jax ≥ 0.5 emits 64-bit instruction
-//! ids that xla_extension 0.5.1 rejects in proto form).
+//! Two backends implement the same `Executable` surface, so every
+//! `run_named` caller (`coordinator::eval`, `trainer`, `serve`, the
+//! harness, the fleet) is backend-agnostic:
+//!
+//! - [`NativeBackend`] — the default: an in-process interpreter over
+//!   the manifest's layer inventory with cache-blocked parallel GEMM
+//!   kernels ([`native`]). No PJRT, no HLO files; forward /
+//!   compensated-forward graphs for `mlp` and `resnet` manifests plus
+//!   the mlp compensation train step.
+//! - [`PjrtBackend`] — the full-fidelity path when real artifacts and
+//!   xla bindings exist: `PjRtClient::cpu()` →
+//!   `HloModuleProto::from_text_file` → `client.compile` → `execute`
+//!   (pattern follows /opt/xla-example/load_hlo; HLO *text* is the
+//!   interchange format because jax ≥ 0.5 emits 64-bit instruction ids
+//!   that xla_extension 0.5.1 rejects in proto form).
+//!
+//! [`Runtime::cpu`] selects PJRT when the client comes up and falls
+//! back to native otherwise (the vendored offline `xla` stub always
+//! falls back). [`Runtime::with_manifest`] builds an artifact-free
+//! native runtime around an in-memory manifest — the testkit /
+//! EVALSTATS end-to-end path.
 
 pub mod executor;
+pub mod native;
 pub mod registry;
 
-pub use executor::Executable;
+use crate::nn::manifest::{GraphSig, ModelManifest};
+use anyhow::{Context, Result};
+use std::sync::Arc;
+
+pub use executor::{Engine, Executable};
 pub use registry::Runtime;
+
+/// A graph compiler: turns one manifest graph signature into an
+/// execution [`Engine`]. Selected once at [`Runtime`] construction.
+pub trait Backend: Send + Sync {
+    /// `"pjrt"` or `"native"` (logs, metrics, test gates).
+    fn name(&self) -> &'static str;
+
+    /// Compile `sig` (a graph of `manifest`) into an engine.
+    fn compile(
+        &self,
+        manifest: &Arc<ModelManifest>,
+        sig: &GraphSig,
+    ) -> Result<Engine>;
+}
+
+/// PJRT-backed compilation over AOT HLO-text artifacts.
+pub struct PjrtBackend {
+    pub client: xla::PjRtClient,
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn compile(
+        &self,
+        _manifest: &Arc<ModelManifest>,
+        sig: &GraphSig,
+    ) -> Result<Engine> {
+        let proto = xla::HloModuleProto::from_text_file(&sig.file)
+            .with_context(|| {
+                format!("load HLO {}", sig.file.display())
+            })?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {}", sig.key))?;
+        Ok(Engine::Pjrt(exe))
+    }
+}
+
+/// In-process interpretation of manifest graphs (no artifacts needed
+/// beyond the manifest itself).
+pub struct NativeBackend;
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn compile(
+        &self,
+        manifest: &Arc<ModelManifest>,
+        sig: &GraphSig,
+    ) -> Result<Engine> {
+        Ok(Engine::Native(native::compile(manifest, sig)?))
+    }
+}

@@ -1,0 +1,431 @@
+//! Cache-blocked f32 GEMM for the native execution backend (§Perf).
+//!
+//! Layouts are row-major throughout: `a` is m×k, `b` is k×n, `c` is m×n.
+//! The blocked kernel packs `b` into NR-column panels once (weight
+//! panels are reused by every row block), then walks the output in
+//! MR×NR register tiles with the k loop innermost, so the microkernel
+//! accumulates each output element in a fixed k order. Parallelism is
+//! over disjoint row chunks ([`crate::util::parallel`], `VERA_THREADS`
+//! respected): because every `c[i][j]` is produced by exactly one
+//! thread with the same per-element accumulation order regardless of
+//! the chunk partition, blocked results are **bit-identical across
+//! thread counts** — the property the logits-reproducibility tests pin.
+//!
+//! [`Epilogue`] fuses bias add, ReLU, and the VeRA+ compensation branch
+//! into the output tile while it is still hot: the shared down
+//! projection `s = x_q A_Rᵀ` is computed once per batch by the caller
+//! and the per-set vectors enter as a precomputed `bd[o][q] =
+//! b[o]·d[q]·B_R[o][q]` rank-r panel, so no corrected weight matrix is
+//! ever materialized.
+
+use crate::util::parallel;
+
+/// Microkernel register tile: rows per block.
+pub const MR: usize = 4;
+/// Microkernel register tile: columns per block (one packed B panel).
+pub const NR: usize = 8;
+
+/// Reference triple loop (i → j → k, no blocking, no packing): the
+/// bench baseline and the oracle the property tests compare against.
+pub fn gemm_naive(
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+) {
+    assert_eq!(a.len(), m * k, "a is m×k");
+    assert_eq!(b.len(), k * n, "b is k×n");
+    assert_eq!(c.len(), m * n, "c is m×n");
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0f32;
+            for p in 0..k {
+                acc += a[i * k + p] * b[p * n + j];
+            }
+            c[i * n + j] = acc;
+        }
+    }
+}
+
+/// Fused per-tile epilogue applied while the output block is register-
+/// resident.
+#[derive(Default)]
+pub struct Epilogue<'a> {
+    /// Per-column bias (`[n]`), added after accumulation.
+    pub bias: Option<&'a [f32]>,
+    /// Apply `max(0, ·)` last.
+    pub relu: bool,
+    /// VeRA+ compensation branch `(s, r, bd)`: adds `s @ bdᵀ` where
+    /// `s` is the shared projection `x_q A_Rᵀ` (`[m, r]`, computed once
+    /// per batch) and `bd` is the per-set rank-r panel
+    /// `bd[o][q] = b[o]·d[q]·B_R[o][q]` (`[n, r]`).
+    pub comp: Option<(&'a [f32], usize, &'a [f32])>,
+}
+
+/// Pack `b` (k×n row-major) into NR-column panels: panel `jp` holds
+/// columns `jp·NR ..`, laid out k-major so the microkernel streams it
+/// sequentially. Ragged final panels are zero-padded.
+fn pack_b(n: usize, k: usize, b: &[f32]) -> Vec<f32> {
+    let panels = n.div_ceil(NR);
+    let mut packed = vec![0f32; panels * k * NR];
+    for jp in 0..panels {
+        let j0 = jp * NR;
+        let jw = NR.min(n - j0);
+        let dst = &mut packed[jp * k * NR..(jp + 1) * k * NR];
+        for p in 0..k {
+            for jj in 0..jw {
+                dst[p * NR + jj] = b[p * n + j0 + jj];
+            }
+        }
+    }
+    packed
+}
+
+/// Compute rows `[row0, row0 + rows.len()/n)` of `c = a·b` (+ epilogue)
+/// against pre-packed B panels. Per-element accumulation order is the
+/// plain ascending k loop — independent of how callers chunk the rows.
+fn gemm_rows(
+    row0: usize,
+    rows: &mut [f32],
+    n: usize,
+    k: usize,
+    a: &[f32],
+    packed_b: &[f32],
+    epi: &Epilogue,
+) {
+    let m_rows = rows.len() / n;
+    let panels = n.div_ceil(NR);
+    let mut i0 = 0usize;
+    while i0 < m_rows {
+        let mr = MR.min(m_rows - i0);
+        for jp in 0..panels {
+            let j0 = jp * NR;
+            let jw = NR.min(n - j0);
+            let bp = &packed_b[jp * k * NR..(jp + 1) * k * NR];
+            let mut acc = [[0f32; NR]; MR];
+            for p in 0..k {
+                let brow = &bp[p * NR..p * NR + NR];
+                for ir in 0..mr {
+                    let av = a[(row0 + i0 + ir) * k + p];
+                    for jr in 0..NR {
+                        acc[ir][jr] += av * brow[jr];
+                    }
+                }
+            }
+            // Epilogue on the hot tile: comp, bias, relu, store.
+            if let Some((s, r, bd)) = epi.comp {
+                for ir in 0..mr {
+                    let srow = &s[(row0 + i0 + ir) * r..][..r];
+                    for jr in 0..jw {
+                        let bdrow = &bd[(j0 + jr) * r..][..r];
+                        let mut add = 0f32;
+                        for q in 0..r {
+                            add += srow[q] * bdrow[q];
+                        }
+                        acc[ir][jr] += add;
+                    }
+                }
+            }
+            for ir in 0..mr {
+                for jr in 0..jw {
+                    let mut v = acc[ir][jr];
+                    if let Some(bias) = epi.bias {
+                        v += bias[j0 + jr];
+                    }
+                    if epi.relu {
+                        v = v.max(0.0);
+                    }
+                    rows[(i0 + ir) * n + j0 + jr] = v;
+                }
+            }
+        }
+        i0 += mr;
+    }
+}
+
+/// Blocked `c = a·b` with a fused epilogue, fanned over up to `threads`
+/// row chunks. `threads == 1` is the serial blocked path; results are
+/// bit-identical for every thread count.
+pub fn gemm_fused_threads(
+    threads: usize,
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    b: &[f32],
+    epi: &Epilogue,
+    c: &mut [f32],
+) {
+    assert_eq!(a.len(), m * k, "a is m×k");
+    assert_eq!(b.len(), k * n, "b is k×n");
+    assert_eq!(c.len(), m * n, "c is m×n");
+    if let Some(bias) = epi.bias {
+        assert_eq!(bias.len(), n, "bias is [n]");
+    }
+    if let Some((s, r, bd)) = epi.comp {
+        assert_eq!(s.len(), m * r, "s is [m, r]");
+        assert_eq!(bd.len(), n * r, "bd is [n, r]");
+    }
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        // Degenerate contraction: epilogue over a zero accumulator.
+        for i in 0..m {
+            for j in 0..n {
+                let mut v = 0f32;
+                if let Some((s, r, bd)) = epi.comp {
+                    for q in 0..r {
+                        v += s[i * r + q] * bd[j * r + q];
+                    }
+                }
+                if let Some(bias) = epi.bias {
+                    v += bias[j];
+                }
+                c[i * n + j] = if epi.relu { v.max(0.0) } else { v };
+            }
+        }
+        return;
+    }
+    let packed = pack_b(n, k, b);
+    let threads = threads.max(1).min(m);
+    if threads == 1 {
+        gemm_rows(0, c, n, k, a, &packed, epi);
+        return;
+    }
+    let rpc = m.div_ceil(threads);
+    let mut chunks: Vec<(usize, &mut [f32])> = c
+        .chunks_mut(rpc * n)
+        .enumerate()
+        .map(|(ci, ch)| (ci * rpc, ch))
+        .collect();
+    let packed = &packed;
+    parallel::for_each_mut(threads, &mut chunks, |_, item| {
+        let (row0, rows) = item;
+        gemm_rows(*row0, rows, n, k, a, packed, epi);
+    });
+}
+
+/// Blocked `c = a·b`, serial (equals `gemm_fused_threads` at 1 thread
+/// with an empty epilogue).
+pub fn gemm_blocked(
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+) {
+    gemm_fused_threads(1, m, n, k, a, b, &Epilogue::default(), c);
+}
+
+/// Blocked parallel `c = a·b` (no epilogue).
+pub fn gemm_threads(
+    threads: usize,
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+) {
+    gemm_fused_threads(threads, m, n, k, a, b, &Epilogue::default(), c);
+}
+
+/// `c = a · btᵀ` where `bt` is stored n×k row-major (i.e. the transpose
+/// of the logical k×n right operand): `c[i][j] = Σ_p a[i][p]·bt[j][p]`.
+/// This is the rank-r projection primitive (`s = x_q A_Rᵀ`, `u = t B_Rᵀ`
+/// and the `g Wᵀ` backward products); k-ascending dot products, row
+/// parallel, bit-identical across thread counts.
+pub fn gemm_nt_threads(
+    threads: usize,
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    bt: &[f32],
+    c: &mut [f32],
+) {
+    assert_eq!(a.len(), m * k, "a is m×k");
+    assert_eq!(bt.len(), n * k, "bt is n×k");
+    assert_eq!(c.len(), m * n, "c is m×n");
+    if m == 0 || n == 0 {
+        return;
+    }
+    let threads = threads.max(1).min(m);
+    let rpc = m.div_ceil(threads);
+    let mut chunks: Vec<(usize, &mut [f32])> = c
+        .chunks_mut(rpc * n)
+        .enumerate()
+        .map(|(ci, ch)| (ci * rpc, ch))
+        .collect();
+    parallel::for_each_mut(threads, &mut chunks, |_, item| {
+        let (row0, rows) = item;
+        let m_rows = rows.len() / n;
+        for i in 0..m_rows {
+            let arow = &a[(*row0 + i) * k..][..k];
+            for j in 0..n {
+                let brow = &bt[j * k..][..k];
+                let mut acc = 0f32;
+                for p in 0..k {
+                    acc += arow[p] * brow[p];
+                }
+                rows[i * n + j] = acc;
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn randn(rng: &mut Pcg64, len: usize) -> Vec<f32> {
+        let mut v = vec![0f32; len];
+        rng.fill_normal_f32(&mut v, 0.0, 1.0);
+        v
+    }
+
+    fn assert_close(got: &[f32], want: &[f32], tol: f32, tag: &str) {
+        assert_eq!(got.len(), want.len(), "{tag}: length");
+        for (i, (g, w)) in got.iter().zip(want).enumerate() {
+            let scale = w.abs().max(1.0);
+            assert!(
+                (g - w).abs() <= tol * scale,
+                "{tag}[{i}]: got {g}, want {w}"
+            );
+        }
+    }
+
+    #[test]
+    fn blocked_matches_naive_on_ragged_shapes() {
+        let mut rng = Pcg64::new(1);
+        for &(m, n, k) in &[
+            (1usize, 1usize, 1usize),
+            (3, 5, 7),
+            (4, 8, 16),
+            (5, 9, 3),
+            (17, 23, 31),
+            (32, 7, 40),
+            (2, 64, 1),
+        ] {
+            let a = randn(&mut rng, m * k);
+            let b = randn(&mut rng, k * n);
+            let mut want = vec![0f32; m * n];
+            gemm_naive(m, n, k, &a, &b, &mut want);
+            let mut got = vec![0f32; m * n];
+            gemm_blocked(m, n, k, &a, &b, &mut got);
+            assert_close(&got, &want, 1e-5, &format!("{m}x{n}x{k}"));
+        }
+    }
+
+    #[test]
+    fn threads_are_bit_identical() {
+        let mut rng = Pcg64::new(2);
+        let (m, n, k) = (37, 19, 29);
+        let a = randn(&mut rng, m * k);
+        let b = randn(&mut rng, k * n);
+        let bias = randn(&mut rng, n);
+        let s = randn(&mut rng, m * 3);
+        let bd = randn(&mut rng, n * 3);
+        let run = |threads: usize| {
+            let mut c = vec![0f32; m * n];
+            let epi = Epilogue {
+                bias: Some(&bias),
+                relu: true,
+                comp: Some((&s, 3, &bd)),
+            };
+            gemm_fused_threads(threads, m, n, k, &a, &b, &epi, &mut c);
+            c
+        };
+        let serial = run(1);
+        for t in [2usize, 4, 9, 64] {
+            assert_eq!(run(t), serial, "threads {t}");
+        }
+    }
+
+    #[test]
+    fn fused_epilogue_matches_unfused_ops() {
+        let mut rng = Pcg64::new(3);
+        let (m, n, k, r) = (11, 13, 17, 4);
+        let a = randn(&mut rng, m * k);
+        let b = randn(&mut rng, k * n);
+        let bias = randn(&mut rng, n);
+        let s = randn(&mut rng, m * r);
+        let bd = randn(&mut rng, n * r);
+        let mut fused = vec![0f32; m * n];
+        gemm_fused_threads(
+            2,
+            m,
+            n,
+            k,
+            &a,
+            &b,
+            &Epilogue {
+                bias: Some(&bias),
+                relu: true,
+                comp: Some((&s, r, &bd)),
+            },
+            &mut fused,
+        );
+        // Unfused: naive gemm, then comp as a second gemm, then bias,
+        // then relu.
+        let mut want = vec![0f32; m * n];
+        gemm_naive(m, n, k, &a, &b, &mut want);
+        let mut comp = vec![0f32; m * n];
+        gemm_nt_threads(1, m, n, r, &s, &bd, &mut comp);
+        for i in 0..m {
+            for j in 0..n {
+                let v = want[i * n + j] + comp[i * n + j] + bias[j];
+                want[i * n + j] = v.max(0.0);
+            }
+        }
+        assert_close(&fused, &want, 1e-4, "fused-vs-unfused");
+    }
+
+    #[test]
+    fn gemm_nt_matches_explicit_transpose() {
+        let mut rng = Pcg64::new(4);
+        let (m, n, k) = (9, 6, 21);
+        let a = randn(&mut rng, m * k);
+        let bt = randn(&mut rng, n * k);
+        // Materialize b = btᵀ (k×n) and use the naive reference.
+        let mut b = vec![0f32; k * n];
+        for j in 0..n {
+            for p in 0..k {
+                b[p * n + j] = bt[j * k + p];
+            }
+        }
+        let mut want = vec![0f32; m * n];
+        gemm_naive(m, n, k, &a, &b, &mut want);
+        for t in [1usize, 3] {
+            let mut got = vec![0f32; m * n];
+            gemm_nt_threads(t, m, n, k, &a, &bt, &mut got);
+            assert_close(&got, &want, 1e-5, &format!("nt t={t}"));
+        }
+    }
+
+    #[test]
+    fn zero_k_runs_pure_epilogue() {
+        let bias = vec![1.0f32, -2.0];
+        let mut c = vec![9f32; 2 * 2];
+        gemm_fused_threads(
+            1,
+            2,
+            2,
+            0,
+            &[],
+            &[],
+            &Epilogue {
+                bias: Some(&bias),
+                relu: true,
+                comp: None,
+            },
+            &mut c,
+        );
+        assert_eq!(c, vec![1.0, 0.0, 1.0, 0.0]);
+    }
+}

@@ -1,0 +1,1287 @@
+//! Native graph interpreter: reconstructs a model's forward pass from
+//! its [`ModelManifest`] layer inventory and executes it with the
+//! blocked GEMM kernels in [`super::gemm`].
+//!
+//! Two topologies are understood:
+//!
+//! - **`mlp`** — a chain of `linear` layers (quant → linear+bias →
+//!   ReLU between layers, raw logits last). This is the testkit /
+//!   small-model shape; it additionally supports the Alg. 1 inner-loop
+//!   compensation **train step** (hand-derived VJP, backbone frozen).
+//! - **`resnet`** — the paper's CIFAR-style 6n+2 family, reconstructed
+//!   from the `stem` / `s{s}b{b}.conv{1,2}[, .down]` / `fc` naming
+//!   contract shared with `python/compile/resnet.py`. Forward only.
+//!
+//! Numerics mirror the lowered JAX graphs: per-sample abs-max
+//! activation quantization (`quant.act_quant`), SAME-padded NHWC/HWIO
+//! convolution via im2col + GEMM, and the VeRA+ branch
+//! `y += b ⊙ (B_R (d ⊙ (A_R x_q)))` applied to each layer's quantized
+//! input (1×1 scheme for convs: spatial positions corrected
+//! independently on the stride-subsampled input). The shared projection
+//! `s = x_q A_Rᵀ` is computed once per batch and the per-set vectors
+//! enter the fused GEMM epilogue as a `b⊙d`-scaled rank-r panel — the
+//! corrected weight matrix is never materialized.
+
+use crate::nn::manifest::{LayerGeom, ModelManifest};
+use crate::runtime::native::gemm::{self, Epilogue};
+use crate::util::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// Name → tensor view over one execution's positional arguments.
+pub(crate) type Named<'a> = BTreeMap<&'a str, &'a Tensor>;
+
+/// One residual block (indices into `Topo::layers`).
+#[derive(Debug, Clone)]
+pub(crate) struct Block {
+    pub conv1: usize,
+    pub conv2: usize,
+    pub down: Option<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub(crate) enum TopoKind {
+    /// All-linear chain in manifest order.
+    Mlp,
+    /// `stem` + blocks + `fc` (layer 0 and the last layer are implied).
+    Resnet { blocks: Vec<Block> },
+}
+
+/// Interpreted topology, validated once at graph "compilation".
+#[derive(Debug, Clone)]
+pub(crate) struct Topo {
+    pub kind: TopoKind,
+    pub layers: Vec<LayerGeom>,
+    pub a_bits: usize,
+    pub classes: usize,
+    pub d_in_max: usize,
+    pub d_out_max: usize,
+}
+
+pub(crate) fn build_topo(man: &ModelManifest) -> Result<Topo> {
+    if man.layers.is_empty() {
+        bail!("model {}: no layers to interpret", man.model);
+    }
+    let kind = match man.kind.as_str() {
+        "mlp" => {
+            for l in &man.layers {
+                if l.kind != "linear" {
+                    bail!(
+                        "mlp model {}: layer {} is '{}', expected linear",
+                        man.model,
+                        l.name,
+                        l.kind
+                    );
+                }
+            }
+            // Chain must be dimension-consistent.
+            for w in man.layers.windows(2) {
+                if w[0].cout != w[1].cin {
+                    bail!(
+                        "mlp model {}: {}.cout={} != {}.cin={}",
+                        man.model,
+                        w[0].name,
+                        w[0].cout,
+                        w[1].name,
+                        w[1].cin
+                    );
+                }
+            }
+            TopoKind::Mlp
+        }
+        "resnet" => {
+            let n = man.layers.len();
+            if n < 2 || man.layers[0].name != "stem"
+                || man.layers[n - 1].name != "fc"
+            {
+                bail!(
+                    "resnet model {}: expected stem .. fc layer list",
+                    man.model
+                );
+            }
+            let mut blocks = Vec::new();
+            let mut i = 1usize;
+            while i < n - 1 {
+                let name = &man.layers[i].name;
+                let pre = name
+                    .strip_suffix(".conv1")
+                    .with_context(|| {
+                        format!(
+                            "resnet model {}: unexpected layer '{name}' \
+                             (want <block>.conv1)",
+                            man.model
+                        )
+                    })?
+                    .to_string();
+                let conv1 = i;
+                i += 1;
+                if i >= n - 1
+                    || man.layers[i].name != format!("{pre}.conv2")
+                {
+                    bail!(
+                        "resnet model {}: block {pre} missing conv2",
+                        man.model
+                    );
+                }
+                let conv2 = i;
+                i += 1;
+                let down = if i < n - 1
+                    && man.layers[i].name == format!("{pre}.down")
+                {
+                    i += 1;
+                    Some(i - 1)
+                } else {
+                    None
+                };
+                blocks.push(Block { conv1, conv2, down });
+            }
+            TopoKind::Resnet { blocks }
+        }
+        other => {
+            bail!(
+                "native backend cannot interpret model kind '{other}' \
+                 (model {})",
+                man.model
+            )
+        }
+    };
+    // a_bits < 2 would make the DAC limit (2^(bits-1) - 1) zero and
+    // act_quant would silently emit NaN everywhere — reject instead.
+    if man.a_bits < 2 {
+        bail!(
+            "model {}: a_bits={} is not interpretable (need >= 2)",
+            man.model,
+            man.a_bits
+        );
+    }
+    Ok(Topo {
+        kind,
+        layers: man.layers.clone(),
+        a_bits: man.a_bits,
+        classes: man.classes,
+        d_in_max: man.d_in_max,
+        d_out_max: man.d_out_max,
+    })
+}
+
+/// Fetch a named f32 input with an element-count check.
+pub(crate) fn req_f32<'a>(
+    named: &Named<'a>,
+    name: &str,
+    numel: usize,
+) -> Result<&'a [f32]> {
+    let t = named
+        .get(name)
+        .copied()
+        .with_context(|| format!("native: missing input '{name}'"))?;
+    let v = t.as_f32();
+    if v.len() != numel {
+        bail!(
+            "native: input '{name}' has {} elements, expected {numel}",
+            v.len()
+        );
+    }
+    Ok(v)
+}
+
+/// VeRA+ compensation inputs for one execution: the frozen shared
+/// projections plus each layer's `(d, b)` vectors, in layer order.
+pub(crate) struct CompInputs<'a> {
+    pub rank: usize,
+    /// `A_max` `[rank, d_in_max]`.
+    pub a_max: &'a [f32],
+    /// `B_max` `[d_out_max, rank]`.
+    pub b_max: &'a [f32],
+    pub d: Vec<&'a [f32]>,
+    pub b: Vec<&'a [f32]>,
+}
+
+impl<'a> CompInputs<'a> {
+    pub fn gather(
+        topo: &Topo,
+        named: &Named<'a>,
+        rank: usize,
+    ) -> Result<CompInputs<'a>> {
+        let a_max = req_f32(named, "A_max", rank * topo.d_in_max)?;
+        let b_max = req_f32(named, "B_max", topo.d_out_max * rank)?;
+        let mut d = Vec::with_capacity(topo.layers.len());
+        let mut b = Vec::with_capacity(topo.layers.len());
+        for l in &topo.layers {
+            d.push(req_f32(named, &format!("{}.d", l.name), rank)?);
+            b.push(req_f32(named, &format!("{}.b", l.name), l.cout)?);
+        }
+        Ok(CompInputs {
+            rank,
+            a_max,
+            b_max,
+            d,
+            b,
+        })
+    }
+
+    /// Per-layer `A_R` slice `[rank, cin]` (prefix of each `A_max` row).
+    fn a_slice(&self, topo: &Topo, cin: usize) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.rank * cin);
+        for q in 0..self.rank {
+            let row = &self.a_max[q * topo.d_in_max..][..cin];
+            out.extend_from_slice(row);
+        }
+        out
+    }
+
+    /// Per-layer `B_R` slice `[cout, rank]` — the first `cout` rows of
+    /// `B_max` are contiguous.
+    fn b_slice(&self, cout: usize) -> &'a [f32] {
+        &self.b_max[..cout * self.rank]
+    }
+
+    /// The fused-epilogue panel `bd[o][q] = b[o]·d[q]·B_R[o][q]`.
+    fn bd_panel(&self, li: usize, cout: usize) -> Vec<f32> {
+        let r = self.rank;
+        let b_sl = self.b_slice(cout);
+        let (d, b) = (self.d[li], self.b[li]);
+        let mut bd = vec![0f32; cout * r];
+        for o in 0..cout {
+            for q in 0..r {
+                bd[o * r + q] = b_sl[o * r + q] * d[q] * b[o];
+            }
+        }
+        bd
+    }
+}
+
+/// Per-sample abs-max fake quantization (`quant.act_quant`): each of
+/// the `n` samples ranges its own DAC over all non-batch elements.
+pub(crate) fn act_quant(x: &[f32], n: usize, bits: usize) -> Vec<f32> {
+    assert!(n > 0 && x.len() % n == 0, "quant rows must divide input");
+    let row = x.len() / n;
+    let lim = ((1i64 << (bits - 1)) - 1) as f32;
+    let mut out = vec![0f32; x.len()];
+    for i in 0..n {
+        let src = &x[i * row..(i + 1) * row];
+        let amax = src.iter().fold(0f32, |a, &v| a.max(v.abs()));
+        let scale = amax.max(1e-8) / lim;
+        for (o, &v) in out[i * row..(i + 1) * row].iter_mut().zip(src) {
+            *o = (v / scale).round().clamp(-lim, lim) * scale;
+        }
+    }
+    out
+}
+
+/// SAME-padding geometry: output side + low-edge padding.
+fn same_pad(h: usize, k: usize, stride: usize) -> (usize, usize) {
+    let ho = h.div_ceil(stride);
+    let total = ((ho - 1) * stride + k).saturating_sub(h);
+    (ho, total / 2)
+}
+
+/// NHWC im2col: rows ordered `(n, oh, ow)`, columns `(kh, kw, cin)` —
+/// matching flattened HWIO weights as the `[k·k·cin, cout]` GEMM right
+/// operand.
+fn im2col(
+    x: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    k: usize,
+    stride: usize,
+) -> (Vec<f32>, usize, usize) {
+    let (ho, pad_h) = same_pad(h, k, stride);
+    let (wo, pad_w) = same_pad(w, k, stride);
+    let kdim = k * k * cin;
+    let mut out = vec![0f32; n * ho * wo * kdim];
+    for ni in 0..n {
+        for oh in 0..ho {
+            for ow in 0..wo {
+                let dst = &mut out[((ni * ho + oh) * wo + ow) * kdim..]
+                    [..kdim];
+                for ki in 0..k {
+                    let ih = (oh * stride + ki) as isize - pad_h as isize;
+                    if ih < 0 || ih >= h as isize {
+                        continue; // stays zero (SAME padding)
+                    }
+                    for kj in 0..k {
+                        let iw =
+                            (ow * stride + kj) as isize - pad_w as isize;
+                        if iw < 0 || iw >= w as isize {
+                            continue;
+                        }
+                        let src = &x[(((ni * h + ih as usize) * w)
+                            + iw as usize)
+                            * cin..][..cin];
+                        dst[(ki * k + kj) * cin..][..cin]
+                            .copy_from_slice(src);
+                    }
+                }
+            }
+        }
+    }
+    (out, ho, wo)
+}
+
+/// `x[:, ::stride, ::stride, :]` flattened to rows — the 1×1-scheme
+/// compensation input for a strided conv (row order matches the conv
+/// output's `(n, oh, ow)` order).
+fn subsample_rows(
+    x: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    stride: usize,
+) -> Vec<f32> {
+    if stride == 1 {
+        return x.to_vec();
+    }
+    let ho = h.div_ceil(stride);
+    let wo = w.div_ceil(stride);
+    let mut out = vec![0f32; n * ho * wo * cin];
+    for ni in 0..n {
+        for (oi, ih) in (0..h).step_by(stride).enumerate() {
+            for (oj, iw) in (0..w).step_by(stride).enumerate() {
+                let src =
+                    &x[((ni * h + ih) * w + iw) * cin..][..cin];
+                out[((ni * ho + oi) * wo + oj) * cin..][..cin]
+                    .copy_from_slice(src);
+            }
+        }
+    }
+    out
+}
+
+/// Forward options: worker threads + whether the compensation branch
+/// goes through the fused GEMM epilogue (the production path) or
+/// separate reference ops (bench baseline / equivalence oracle).
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct FwdOpts {
+    pub threads: usize,
+    pub fused: bool,
+}
+
+/// Shared projection for one layer: `s = x_q A_Rᵀ` (`[rows, r]`).
+fn shared_projection(
+    xq: &[f32],
+    rows: usize,
+    cin: usize,
+    a_sl: &[f32],
+    r: usize,
+    threads: usize,
+) -> Vec<f32> {
+    let mut s = vec![0f32; rows * r];
+    gemm::gemm_nt_threads(threads, rows, r, cin, xq, a_sl, &mut s);
+    s
+}
+
+/// Unfused reference compensation: `b ⊙ ((s ⊙ d) B_Rᵀ)` added into `y`.
+fn add_comp_reference(
+    y: &mut [f32],
+    s: &[f32],
+    rows: usize,
+    comp: &CompInputs,
+    li: usize,
+    cout: usize,
+    threads: usize,
+) {
+    let r = comp.rank;
+    let d = comp.d[li];
+    let b = comp.b[li];
+    let mut t = vec![0f32; rows * r];
+    for i in 0..rows {
+        for q in 0..r {
+            t[i * r + q] = s[i * r + q] * d[q];
+        }
+    }
+    let mut u = vec![0f32; rows * cout];
+    gemm::gemm_nt_threads(
+        threads,
+        rows,
+        cout,
+        r,
+        &t,
+        comp.b_slice(cout),
+        &mut u,
+    );
+    for i in 0..rows {
+        for o in 0..cout {
+            y[i * cout + o] += u[i * cout + o] * b[o];
+        }
+    }
+}
+
+/// One linear/conv-as-GEMM layer on pre-quantized input rows.
+#[allow(clippy::too_many_arguments)]
+fn layer_rows(
+    topo: &Topo,
+    li: usize,
+    named: &Named,
+    xq: &[f32],
+    comp_rows: Option<&[f32]>,
+    rows: usize,
+    kdim: usize,
+    comp: Option<&CompInputs>,
+    relu: bool,
+    opts: FwdOpts,
+) -> Result<Vec<f32>> {
+    let layer = &topo.layers[li];
+    let cout = layer.cout;
+    let w = req_f32(named, &format!("{}.w", layer.name), kdim * cout)?;
+    let bias = req_f32(named, &format!("{}.bias", layer.name), cout)?;
+    let mut y = vec![0f32; rows * cout];
+    let comp_data = match comp {
+        Some(c) => {
+            let cin = layer.cin;
+            let crows = comp_rows.unwrap_or(xq);
+            debug_assert_eq!(crows.len(), rows * cin);
+            let a_sl = c.a_slice(topo, cin);
+            let s = shared_projection(
+                crows, rows, cin, &a_sl, c.rank, opts.threads,
+            );
+            Some(s)
+        }
+        None => None,
+    };
+    if opts.fused || comp.is_none() {
+        let bd;
+        let epi = Epilogue {
+            bias: Some(bias),
+            relu,
+            comp: match (comp, &comp_data) {
+                (Some(c), Some(s)) => {
+                    bd = c.bd_panel(li, cout);
+                    Some((s.as_slice(), c.rank, bd.as_slice()))
+                }
+                _ => None,
+            },
+        };
+        gemm::gemm_fused_threads(
+            opts.threads,
+            rows,
+            cout,
+            kdim,
+            xq,
+            w,
+            &epi,
+            &mut y,
+        );
+    } else {
+        // Reference path: separate blocked GEMM + comp + bias + relu.
+        gemm::gemm_threads(opts.threads, rows, cout, kdim, xq, w, &mut y);
+        if let (Some(c), Some(s)) = (comp, &comp_data) {
+            add_comp_reference(
+                &mut y,
+                s,
+                rows,
+                c,
+                li,
+                cout,
+                opts.threads,
+            );
+        }
+        for i in 0..rows {
+            for o in 0..cout {
+                let v = y[i * cout + o] + bias[o];
+                y[i * cout + o] = if relu { v.max(0.0) } else { v };
+            }
+        }
+    }
+    Ok(y)
+}
+
+/// Full forward pass → logits `[n, classes]`.
+pub(crate) fn forward(
+    topo: &Topo,
+    named: &Named,
+    x: &Tensor,
+    comp: Option<&CompInputs>,
+    opts: FwdOpts,
+) -> Result<Vec<f32>> {
+    match &topo.kind {
+        TopoKind::Mlp => forward_mlp(topo, named, x, comp, opts, None),
+        TopoKind::Resnet { blocks } => {
+            forward_resnet(topo, blocks, named, x, comp, opts)
+        }
+    }
+}
+
+/// Per-layer forward cache for the MLP train step. The quantized
+/// input itself is not retained: the backbone is frozen, so the
+/// backward pass only needs the comp intermediates and the ReLU mask.
+pub(crate) struct LayerCache {
+    /// Shared projection `[n, r]`.
+    s: Vec<f32>,
+    /// Comp pre-`b` output `u = (s⊙d) B_Rᵀ` `[n, cout]`.
+    u: Vec<f32>,
+    /// Pre-ReLU layer output `[n, cout]`.
+    y: Vec<f32>,
+}
+
+fn forward_mlp(
+    topo: &Topo,
+    named: &Named,
+    x: &Tensor,
+    comp: Option<&CompInputs>,
+    opts: FwdOpts,
+    mut cache: Option<&mut Vec<LayerCache>>,
+) -> Result<Vec<f32>> {
+    let n = *x.shape.first().context("mlp input needs a batch axis")?;
+    let mut h = x.as_f32().to_vec();
+    let n_layers = topo.layers.len();
+    for li in 0..n_layers {
+        let layer = &topo.layers[li];
+        let last = li + 1 == n_layers;
+        if h.len() != n * layer.cin {
+            bail!(
+                "mlp layer {}: input has {} features, expected {}",
+                layer.name,
+                h.len() / n.max(1),
+                layer.cin
+            );
+        }
+        let xq = act_quant(&h, n, topo.a_bits);
+        if let Some(cache) = cache.as_mut() {
+            // Train path: unfused, with intermediates retained.
+            let c = comp.context("train forward requires comp inputs")?;
+            let cin = layer.cin;
+            let cout = layer.cout;
+            let a_sl = c.a_slice(topo, cin);
+            let s = shared_projection(
+                &xq, n, cin, &a_sl, c.rank, opts.threads,
+            );
+            let mut t = vec![0f32; n * c.rank];
+            for i in 0..n {
+                for q in 0..c.rank {
+                    t[i * c.rank + q] =
+                        s[i * c.rank + q] * c.d[li][q];
+                }
+            }
+            let mut u = vec![0f32; n * cout];
+            gemm::gemm_nt_threads(
+                opts.threads,
+                n,
+                cout,
+                c.rank,
+                &t,
+                c.b_slice(cout),
+                &mut u,
+            );
+            let w = req_f32(
+                named,
+                &format!("{}.w", layer.name),
+                cin * cout,
+            )?;
+            let bias =
+                req_f32(named, &format!("{}.bias", layer.name), cout)?;
+            let mut y = vec![0f32; n * cout];
+            gemm::gemm_threads(opts.threads, n, cout, cin, &xq, w,
+                               &mut y);
+            for i in 0..n {
+                for o in 0..cout {
+                    y[i * cout + o] +=
+                        bias[o] + u[i * cout + o] * c.b[li][o];
+                }
+            }
+            let h_next = if last {
+                y.clone()
+            } else {
+                y.iter().map(|&v| v.max(0.0)).collect()
+            };
+            cache.push(LayerCache { s, u, y });
+            h = h_next;
+        } else {
+            h = layer_rows(
+                topo,
+                li,
+                named,
+                &xq,
+                None,
+                n,
+                layer.cin,
+                comp,
+                !last,
+                opts,
+            )?;
+        }
+    }
+    if h.len() != n * topo.classes {
+        bail!(
+            "mlp logits: got {} values, expected {}x{}",
+            h.len(),
+            n,
+            topo.classes
+        );
+    }
+    Ok(h)
+}
+
+fn forward_resnet(
+    topo: &Topo,
+    blocks: &[Block],
+    named: &Named,
+    x: &Tensor,
+    comp: Option<&CompInputs>,
+    opts: FwdOpts,
+) -> Result<Vec<f32>> {
+    if x.shape.len() != 4 {
+        bail!("resnet input must be NHWC, got {:?}", x.shape);
+    }
+    let (n, mut h_side, mut w_side) =
+        (x.shape[0], x.shape[1], x.shape[2]);
+    let mut chans = x.shape[3];
+    let mut h = x.as_f32().to_vec();
+
+    // One conv layer: quant → im2col → fused GEMM (+bias, +comp, ±relu).
+    let conv = |li: usize,
+                input: &[f32],
+                hs: usize,
+                ws: usize,
+                cin: usize,
+                relu: bool|
+     -> Result<(Vec<f32>, usize, usize)> {
+        let layer = &topo.layers[li];
+        if layer.cin != cin || layer.kind != "conv" {
+            bail!(
+                "resnet layer {}: geometry mismatch (cin {} vs {})",
+                layer.name,
+                layer.cin,
+                cin
+            );
+        }
+        let xq = act_quant(input, n, topo.a_bits);
+        let (patches, ho, wo) =
+            im2col(&xq, n, hs, ws, cin, layer.k, layer.stride);
+        let rows = n * ho * wo;
+        let kdim = layer.k * layer.k * cin;
+        // Compensation input: the quantized activation rows; only a
+        // strided conv needs the materialized subsample — stride 1
+        // borrows `xq` directly (its row count already matches).
+        let comp_sub = match comp {
+            Some(_) if layer.stride > 1 => Some(subsample_rows(
+                &xq,
+                n,
+                hs,
+                ws,
+                cin,
+                layer.stride,
+            )),
+            _ => None,
+        };
+        let comp_rows: Option<&[f32]> = if comp.is_some() {
+            Some(comp_sub.as_deref().unwrap_or(&xq))
+        } else {
+            None
+        };
+        let y = layer_rows(
+            topo,
+            li,
+            named,
+            &patches,
+            comp_rows,
+            rows,
+            kdim,
+            comp,
+            relu,
+            opts,
+        )?;
+        Ok((y, ho, wo))
+    };
+
+    // Stem.
+    let (mut out, ho, wo) = conv(0, &h, h_side, w_side, chans, true)?;
+    h = out;
+    h_side = ho;
+    w_side = wo;
+    chans = topo.layers[0].cout;
+
+    for block in blocks {
+        let (y1, h1, w1) =
+            conv(block.conv1, &h, h_side, w_side, chans, true)?;
+        let c1 = topo.layers[block.conv1].cout;
+        let (y2, h2, w2) = conv(block.conv2, &y1, h1, w1, c1, false)?;
+        let c2 = topo.layers[block.conv2].cout;
+        // Residual add + ReLU; the identity shortcut borrows `h`
+        // directly (no activation copy).
+        let down = match block.down {
+            Some(di) => {
+                let (s, hs, ws) =
+                    conv(di, &h, h_side, w_side, chans, false)?;
+                debug_assert!(hs == h2 && ws == w2);
+                Some(s)
+            }
+            None => None,
+        };
+        let sc: &[f32] = down.as_deref().unwrap_or(&h);
+        if sc.len() != y2.len() {
+            bail!("resnet block: shortcut/output size mismatch");
+        }
+        out = y2
+            .iter()
+            .zip(sc)
+            .map(|(&a, &b)| (a + b).max(0.0))
+            .collect();
+        h = out;
+        h_side = h2;
+        w_side = w2;
+        chans = c2;
+    }
+
+    // Global average pool → [n, chans].
+    let spatial = (h_side * w_side) as f32;
+    let mut pooled = vec![0f32; n * chans];
+    for ni in 0..n {
+        for c in 0..chans {
+            let mut acc = 0f32;
+            for p in 0..h_side * w_side {
+                acc += h[(ni * h_side * w_side + p) * chans + c];
+            }
+            pooled[ni * chans + c] = acc / spatial;
+        }
+    }
+
+    // fc (linear, with comp, no relu).
+    let fc = topo.layers.len() - 1;
+    let layer = &topo.layers[fc];
+    if layer.kind != "linear" || layer.cin != chans {
+        bail!("resnet fc geometry mismatch");
+    }
+    let xq = act_quant(&pooled, n, topo.a_bits);
+    let logits = layer_rows(
+        topo,
+        fc,
+        named,
+        &xq,
+        None,
+        n,
+        chans,
+        comp,
+        false,
+        opts,
+    )?;
+    Ok(logits)
+}
+
+/// Standalone VeRA+ kernel (`kernel_vera*` graphs):
+/// `y = b ⊙ ((x A_Rᵀ ⊙ d) B_Rᵀ)`.
+pub(crate) fn kernel_vera(
+    x: &[f32],
+    a: &[f32],
+    bmat: &[f32],
+    d: &[f32],
+    bv: &[f32],
+    n: usize,
+    cin: usize,
+    cout: usize,
+    r: usize,
+    threads: usize,
+) -> Vec<f32> {
+    let mut s = vec![0f32; n * r];
+    gemm::gemm_nt_threads(threads, n, r, cin, x, a, &mut s);
+    for i in 0..n {
+        for q in 0..r {
+            s[i * r + q] *= d[q];
+        }
+    }
+    let mut y = vec![0f32; n * cout];
+    gemm::gemm_nt_threads(threads, n, cout, r, &s, bmat, &mut y);
+    for i in 0..n {
+        for o in 0..cout {
+            y[i * cout + o] *= bv[o];
+        }
+    }
+    y
+}
+
+/// Numerically stable per-row log-softmax + mean cross-entropy.
+/// Returns `(loss, dlogits)` with `dlogits = (softmax − onehot)/n`.
+fn ce_loss_grad(
+    logits: &[f32],
+    labels: &[i32],
+    n: usize,
+    classes: usize,
+) -> (f32, Vec<f32>) {
+    let mut loss = 0f64;
+    let mut grad = vec![0f32; n * classes];
+    for i in 0..n {
+        let row = &logits[i * classes..(i + 1) * classes];
+        let maxv = row.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+        let mut denom = 0f64;
+        for &v in row {
+            denom += ((v - maxv) as f64).exp();
+        }
+        let log_denom = denom.ln();
+        let label = labels[i].clamp(0, classes as i32 - 1) as usize;
+        loss += log_denom - (row[label] - maxv) as f64;
+        for c in 0..classes {
+            let p = (((row[c] - maxv) as f64).exp() / denom) as f32;
+            grad[i * classes + c] =
+                (p - if c == label { 1.0 } else { 0.0 })
+                    / n as f32;
+        }
+    }
+    ((loss / n as f64) as f32, grad)
+}
+
+/// Result of one native compensation train step.
+pub(crate) struct TrainStep {
+    /// `{layer}.d` / `{layer}.b` → updated tensor.
+    pub trainables: BTreeMap<String, Tensor>,
+    /// `m:{layer}.d` / `m:{layer}.b` → updated momentum.
+    pub momenta: BTreeMap<String, Tensor>,
+    pub loss: f32,
+}
+
+/// One SGD-momentum step on the VeRA+ `(d, b)` vectors with the
+/// (drifted) backbone frozen — the native `train_veraplus_r{r}` graph
+/// (MLP topology only). Mirrors `python/compile/model.py
+/// build_train_comp`: CE loss, global-norm clip to 1, momentum 0.9.
+pub(crate) fn train_step_mlp(
+    topo: &Topo,
+    named: &Named,
+    rank: usize,
+    x: &Tensor,
+    labels: &[i32],
+    lr: f32,
+    threads: usize,
+) -> Result<TrainStep> {
+    if !matches!(topo.kind, TopoKind::Mlp) {
+        bail!("native comp training supports mlp topologies only");
+    }
+    let comp = CompInputs::gather(topo, named, rank)?;
+    let n = *x.shape.first().context("train batch axis")?;
+    if labels.len() != n {
+        bail!("train labels: {} for batch {n}", labels.len());
+    }
+    let opts = FwdOpts {
+        threads,
+        fused: false,
+    };
+    let mut cache: Vec<LayerCache> = Vec::with_capacity(topo.layers.len());
+    let logits =
+        forward_mlp(topo, named, x, Some(&comp), opts, Some(&mut cache))?;
+    let (loss, dlogits) = ce_loss_grad(&logits, labels, n, topo.classes);
+
+    // Backward (backbone frozen; only (d, b) and the data path).
+    let n_layers = topo.layers.len();
+    let r = rank;
+    let mut dd: Vec<Vec<f32>> = topo
+        .layers
+        .iter()
+        .map(|_| vec![0f32; r])
+        .collect();
+    let mut db: Vec<Vec<f32>> = topo
+        .layers
+        .iter()
+        .map(|l| vec![0f32; l.cout])
+        .collect();
+    // `upstream` starts as dL/dlogits; for earlier layers it is the
+    // gradient w.r.t. the layer's post-ReLU output.
+    let mut upstream = dlogits;
+    for li in (0..n_layers).rev() {
+        let layer = &topo.layers[li];
+        let (cin, cout) = (layer.cin, layer.cout);
+        let lc = &cache[li];
+        // Gradient w.r.t. the pre-ReLU output y.
+        let g: Vec<f32> = if li + 1 == n_layers {
+            upstream
+        } else {
+            upstream
+                .iter()
+                .zip(&lc.y)
+                .map(|(&gv, &yv)| if yv > 0.0 { gv } else { 0.0 })
+                .collect()
+        };
+        // db[o] = Σ_i g[i,o]·u[i,o]   (y_comp = u ⊙ b).
+        for i in 0..n {
+            for o in 0..cout {
+                db[li][o] += g[i * cout + o] * lc.u[i * cout + o];
+            }
+        }
+        // dt = (g ⊙ b) B_R   [n, r].
+        let mut gb = vec![0f32; n * cout];
+        for i in 0..n {
+            for o in 0..cout {
+                gb[i * cout + o] = g[i * cout + o] * comp.b[li][o];
+            }
+        }
+        let mut dt = vec![0f32; n * r];
+        gemm::gemm_threads(
+            threads,
+            n,
+            r,
+            cout,
+            &gb,
+            comp.b_slice(cout),
+            &mut dt,
+        );
+        // dd[q] = Σ_i dt[i,q]·s[i,q].
+        for i in 0..n {
+            for q in 0..r {
+                dd[li][q] += dt[i * r + q] * lc.s[i * r + q];
+            }
+        }
+        if li > 0 {
+            // dx = g Wᵀ + (dt ⊙ d) A_R, passed up through the quant STE
+            // (identity) and the previous layer's ReLU.
+            let w = req_f32(
+                named,
+                &format!("{}.w", layer.name),
+                cin * cout,
+            )?;
+            let mut dx = vec![0f32; n * cin];
+            gemm::gemm_nt_threads(threads, n, cin, cout, &g, w, &mut dx);
+            let mut ds = vec![0f32; n * r];
+            for i in 0..n {
+                for q in 0..r {
+                    ds[i * r + q] = dt[i * r + q] * comp.d[li][q];
+                }
+            }
+            let a_sl = comp.a_slice(topo, cin);
+            let mut dx_comp = vec![0f32; n * cin];
+            gemm::gemm_threads(
+                threads, n, cin, r, &ds, &a_sl, &mut dx_comp,
+            );
+            for (v, &c) in dx.iter_mut().zip(&dx_comp) {
+                *v += c;
+            }
+            upstream = dx;
+        } else {
+            upstream = Vec::new();
+        }
+    }
+
+    // Global-norm clip to 1 (matches the lowered train graph).
+    let mut sq = 0f64;
+    for li in 0..n_layers {
+        sq += dd[li].iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>();
+        sq += db[li].iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>();
+    }
+    let gnorm = (sq + 1e-12).sqrt() as f32;
+    let clip = 1f32.min(1.0 / gnorm);
+
+    // SGD momentum 0.9 on each trainable.
+    let mut trainables = BTreeMap::new();
+    let mut momenta = BTreeMap::new();
+    for li in 0..n_layers {
+        let layer = &topo.layers[li];
+        for (suffix, grad, cur, len) in [
+            ("d", &dd[li], comp.d[li], r),
+            ("b", &db[li], comp.b[li], layer.cout),
+        ] {
+            let name = format!("{}.{suffix}", layer.name);
+            let mom0 = req_f32(named, &format!("m:{name}"), len)?;
+            let mut mom = vec![0f32; len];
+            let mut val = vec![0f32; len];
+            for j in 0..len {
+                mom[j] = 0.9 * mom0[j] + grad[j] * clip;
+                val[j] = cur[j] - lr * mom[j];
+            }
+            momenta.insert(
+                format!("m:{name}"),
+                Tensor::from_f32(&[len], mom),
+            );
+            trainables.insert(name, Tensor::from_f32(&[len], val));
+        }
+    }
+    Ok(TrainStep {
+        trainables,
+        momenta,
+        loss,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+    use crate::util::rng::Pcg64;
+    use std::path::Path;
+
+    fn mlp_manifest() -> ModelManifest {
+        let j = parse(
+            r#"{
+            "model": "tkit", "kind": "mlp", "classes": 3, "seq": 6,
+            "w_bits": 4, "a_bits": 8, "d_in_max": 8, "d_out_max": 8,
+            "layers": [
+              {"name": "l0", "kind": "linear", "cin": 6, "cout": 8,
+               "k": 1, "stride": 1, "hw_in": 1, "hw_out": 1},
+              {"name": "fc", "kind": "linear", "cin": 8, "cout": 3,
+               "k": 1, "stride": 1, "hw_in": 1, "hw_out": 1}
+            ],
+            "deploy_weights": [], "train_weights": [], "graphs": {}}"#,
+        )
+        .unwrap();
+        ModelManifest::from_json(&j, Path::new(".")).unwrap()
+    }
+
+    fn tensor(rng: &mut Pcg64, shape: &[usize]) -> Tensor {
+        let mut v = vec![0f32; shape.iter().product()];
+        rng.fill_normal_f32(&mut v, 0.0, 0.5);
+        Tensor::from_f32(shape, v)
+    }
+
+    #[test]
+    fn act_quant_is_on_grid_and_preserves_argmax_scale() {
+        let x = vec![0.5f32, -1.0, 0.25, 2.0, 1.0, -2.0];
+        let q = act_quant(&x, 2, 4);
+        // Per-row scale: row0 amax 1.0 → scale 1/7; row1 amax 2.0.
+        assert!((q[1] + 1.0).abs() < 1e-6);
+        assert!((q[3] - 2.0).abs() < 1e-6);
+        for (qq, xx) in q.iter().zip(&x) {
+            assert!((qq - xx).abs() <= 2.0 / 7.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn same_pad_matches_jax_geometry() {
+        assert_eq!(same_pad(16, 3, 1), (16, 1));
+        assert_eq!(same_pad(16, 3, 2), (8, 0));
+        assert_eq!(same_pad(15, 3, 2), (8, 1));
+        assert_eq!(same_pad(16, 1, 1), (16, 0));
+        assert_eq!(same_pad(16, 1, 2), (8, 0));
+    }
+
+    #[test]
+    fn im2col_identity_kernel() {
+        // k=1 stride=1 im2col is the identity row layout.
+        let x: Vec<f32> = (0..2 * 2 * 2 * 3).map(|v| v as f32).collect();
+        let (p, ho, wo) = im2col(&x, 2, 2, 2, 3, 1, 1);
+        assert_eq!((ho, wo), (2, 2));
+        assert_eq!(p, x);
+    }
+
+    #[test]
+    fn subsample_matches_strided_view() {
+        let x: Vec<f32> = (0..1 * 4 * 4 * 2).map(|v| v as f32).collect();
+        let s = subsample_rows(&x, 1, 4, 4, 2, 2);
+        // Rows (0,0), (0,2), (2,0), (2,2).
+        let pick = |ih: usize, iw: usize| {
+            &x[((ih * 4) + iw) * 2..((ih * 4) + iw) * 2 + 2]
+        };
+        let want: Vec<f32> = [pick(0, 0), pick(0, 2), pick(2, 0),
+                              pick(2, 2)]
+            .concat();
+        assert_eq!(s, want);
+    }
+
+    #[test]
+    fn mlp_forward_fused_matches_reference() {
+        let man = mlp_manifest();
+        let topo = build_topo(&man).unwrap();
+        let mut rng = Pcg64::new(5);
+        let w0 = tensor(&mut rng, &[6, 8]);
+        let b0 = tensor(&mut rng, &[8]);
+        let w1 = tensor(&mut rng, &[8, 3]);
+        let b1 = tensor(&mut rng, &[3]);
+        let amax = tensor(&mut rng, &[2, 8]);
+        let bmax = tensor(&mut rng, &[8, 2]);
+        let d0 = tensor(&mut rng, &[2]);
+        let bb0 = tensor(&mut rng, &[8]);
+        let d1 = tensor(&mut rng, &[2]);
+        let bb1 = tensor(&mut rng, &[3]);
+        let x = tensor(&mut rng, &[5, 6]);
+        let mut named: Named = BTreeMap::new();
+        for (k, v) in [
+            ("l0.w", &w0),
+            ("l0.bias", &b0),
+            ("fc.w", &w1),
+            ("fc.bias", &b1),
+            ("A_max", &amax),
+            ("B_max", &bmax),
+            ("l0.d", &d0),
+            ("l0.b", &bb0),
+            ("fc.d", &d1),
+            ("fc.b", &bb1),
+        ] {
+            named.insert(k, v);
+        }
+        let comp = CompInputs::gather(&topo, &named, 2).unwrap();
+        let fused = forward(
+            &topo,
+            &named,
+            &x,
+            Some(&comp),
+            FwdOpts { threads: 2, fused: true },
+        )
+        .unwrap();
+        let unfused = forward(
+            &topo,
+            &named,
+            &x,
+            Some(&comp),
+            FwdOpts { threads: 1, fused: false },
+        )
+        .unwrap();
+        assert_eq!(fused.len(), 15);
+        for (f, u) in fused.iter().zip(&unfused) {
+            assert!(
+                (f - u).abs() <= 1e-4 * u.abs().max(1.0),
+                "fused {f} vs unfused {u}"
+            );
+        }
+    }
+
+    #[test]
+    fn train_step_reduces_loss_on_repeated_batches() {
+        let man = mlp_manifest();
+        let topo = build_topo(&man).unwrap();
+        let mut rng = Pcg64::new(9);
+        let w0 = tensor(&mut rng, &[6, 8]);
+        let b0 = tensor(&mut rng, &[8]);
+        let w1 = tensor(&mut rng, &[8, 3]);
+        let b1 = tensor(&mut rng, &[3]);
+        let amax = tensor(&mut rng, &[2, 8]);
+        let bmax = tensor(&mut rng, &[8, 2]);
+        let x = tensor(&mut rng, &[16, 6]);
+        let labels: Vec<i32> = (0..16).map(|i| (i % 3) as i32).collect();
+        let mut d0 = Tensor::from_f32(&[2], vec![0.1, 0.1]);
+        let mut bb0 = Tensor::from_f32(&[8], vec![0.0; 8]);
+        let mut d1 = Tensor::from_f32(&[2], vec![0.1, 0.1]);
+        let mut bb1 = Tensor::from_f32(&[3], vec![0.0; 3]);
+        let mut md0 = Tensor::from_f32(&[2], vec![0.0; 2]);
+        let mut mb0 = Tensor::from_f32(&[8], vec![0.0; 8]);
+        let mut md1 = Tensor::from_f32(&[2], vec![0.0; 2]);
+        let mut mb1 = Tensor::from_f32(&[3], vec![0.0; 3]);
+        let mut losses = Vec::new();
+        for _ in 0..30 {
+            let mut named: Named = BTreeMap::new();
+            for (k, v) in [
+                ("l0.w", &w0),
+                ("l0.bias", &b0),
+                ("fc.w", &w1),
+                ("fc.bias", &b1),
+                ("A_max", &amax),
+                ("B_max", &bmax),
+                ("l0.d", &d0),
+                ("l0.b", &bb0),
+                ("fc.d", &d1),
+                ("fc.b", &bb1),
+                ("m:l0.d", &md0),
+                ("m:l0.b", &mb0),
+                ("m:fc.d", &md1),
+                ("m:fc.b", &mb1),
+            ] {
+                named.insert(k, v);
+            }
+            let step = train_step_mlp(
+                &topo, &named, 2, &x, &labels, 0.2, 1,
+            )
+            .unwrap();
+            losses.push(step.loss);
+            d0 = step.trainables.get("l0.d").unwrap().clone();
+            bb0 = step.trainables.get("l0.b").unwrap().clone();
+            d1 = step.trainables.get("fc.d").unwrap().clone();
+            bb1 = step.trainables.get("fc.b").unwrap().clone();
+            md0 = step.momenta.get("m:l0.d").unwrap().clone();
+            mb0 = step.momenta.get("m:l0.b").unwrap().clone();
+            md1 = step.momenta.get("m:fc.d").unwrap().clone();
+            mb1 = step.momenta.get("m:fc.b").unwrap().clone();
+        }
+        assert!(losses.iter().all(|l| l.is_finite()));
+        assert!(
+            *losses.last().unwrap() < losses[0],
+            "training must reduce loss: {:?} -> {:?}",
+            losses[0],
+            losses.last().unwrap()
+        );
+    }
+
+    #[test]
+    fn resnet_topo_parses_blocks() {
+        let j = parse(
+            r#"{
+            "model": "r", "kind": "resnet", "classes": 4, "image": 8,
+            "w_bits": 4, "a_bits": 4, "d_in_max": 8, "d_out_max": 8,
+            "layers": [
+              {"name": "stem", "kind": "conv", "cin": 3, "cout": 4,
+               "k": 3, "stride": 1, "hw_in": 8, "hw_out": 8},
+              {"name": "s0b0.conv1", "kind": "conv", "cin": 4,
+               "cout": 4, "k": 3, "stride": 1, "hw_in": 8, "hw_out": 8},
+              {"name": "s0b0.conv2", "kind": "conv", "cin": 4,
+               "cout": 4, "k": 3, "stride": 1, "hw_in": 8, "hw_out": 8},
+              {"name": "s1b0.conv1", "kind": "conv", "cin": 4,
+               "cout": 8, "k": 3, "stride": 2, "hw_in": 8, "hw_out": 4},
+              {"name": "s1b0.conv2", "kind": "conv", "cin": 8,
+               "cout": 8, "k": 3, "stride": 1, "hw_in": 4, "hw_out": 4},
+              {"name": "s1b0.down", "kind": "conv", "cin": 4,
+               "cout": 8, "k": 1, "stride": 2, "hw_in": 8, "hw_out": 4},
+              {"name": "fc", "kind": "linear", "cin": 8, "cout": 4,
+               "k": 1, "stride": 1, "hw_in": 1, "hw_out": 1}
+            ],
+            "deploy_weights": [], "train_weights": [], "graphs": {}}"#,
+        )
+        .unwrap();
+        let man = ModelManifest::from_json(&j, Path::new(".")).unwrap();
+        let topo = build_topo(&man).unwrap();
+        match &topo.kind {
+            TopoKind::Resnet { blocks } => {
+                assert_eq!(blocks.len(), 2);
+                assert!(blocks[0].down.is_none());
+                assert_eq!(blocks[1].down, Some(5));
+            }
+            _ => panic!("expected resnet topology"),
+        }
+    }
+
+    #[test]
+    fn resnet_forward_produces_finite_logits() {
+        let j = parse(
+            r#"{
+            "model": "r", "kind": "resnet", "classes": 4, "image": 8,
+            "w_bits": 4, "a_bits": 4, "d_in_max": 8, "d_out_max": 8,
+            "layers": [
+              {"name": "stem", "kind": "conv", "cin": 3, "cout": 4,
+               "k": 3, "stride": 1, "hw_in": 8, "hw_out": 8},
+              {"name": "s1b0.conv1", "kind": "conv", "cin": 4,
+               "cout": 8, "k": 3, "stride": 2, "hw_in": 8, "hw_out": 4},
+              {"name": "s1b0.conv2", "kind": "conv", "cin": 8,
+               "cout": 8, "k": 3, "stride": 1, "hw_in": 4, "hw_out": 4},
+              {"name": "s1b0.down", "kind": "conv", "cin": 4,
+               "cout": 8, "k": 1, "stride": 2, "hw_in": 8, "hw_out": 4},
+              {"name": "fc", "kind": "linear", "cin": 8, "cout": 4,
+               "k": 1, "stride": 1, "hw_in": 1, "hw_out": 1}
+            ],
+            "deploy_weights": [], "train_weights": [], "graphs": {}}"#,
+        )
+        .unwrap();
+        let man = ModelManifest::from_json(&j, Path::new(".")).unwrap();
+        let topo = build_topo(&man).unwrap();
+        let mut rng = Pcg64::new(7);
+        let ws: Vec<(String, Tensor)> = topo
+            .layers
+            .iter()
+            .map(|l| {
+                let shape: Vec<usize> = if l.kind == "conv" {
+                    vec![l.k, l.k, l.cin, l.cout]
+                } else {
+                    vec![l.cin, l.cout]
+                };
+                (format!("{}.w", l.name), tensor(&mut rng, &shape))
+            })
+            .collect();
+        let bs: Vec<(String, Tensor)> = topo
+            .layers
+            .iter()
+            .map(|l| {
+                (format!("{}.bias", l.name),
+                 tensor(&mut rng, &[l.cout]))
+            })
+            .collect();
+        let mut named: Named = BTreeMap::new();
+        for (k, v) in ws.iter().chain(bs.iter()) {
+            named.insert(k.as_str(), v);
+        }
+        let x = tensor(&mut rng, &[2, 8, 8, 3]);
+        for threads in [1usize, 3] {
+            let logits = forward(
+                &topo,
+                &named,
+                &x,
+                None,
+                FwdOpts { threads, fused: true },
+            )
+            .unwrap();
+            assert_eq!(logits.len(), 2 * 4);
+            assert!(logits.iter().all(|v| v.is_finite()));
+        }
+    }
+}

@@ -1,31 +1,101 @@
-//! Artifact registry: one PJRT client + lazily compiled executables,
+//! Executable registry: one backend + lazily compiled executables,
 //! keyed by (model, graph). Compilation happens once per graph; the
 //! request path only executes.
+//!
+//! Manifests come from `{artifact_dir}/{model}.manifest.json` or are
+//! registered in memory ([`Runtime::register_manifest`] /
+//! [`Runtime::with_manifest`]) — the artifact-free native path.
 
 use crate::nn::manifest::ModelManifest;
 use crate::runtime::executor::Executable;
+use crate::runtime::{Backend, NativeBackend, PjrtBackend};
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
 
 pub struct Runtime {
-    pub client: xla::PjRtClient,
+    backend: Box<dyn Backend>,
     pub artifact_dir: PathBuf,
     manifests: Mutex<BTreeMap<String, Arc<ModelManifest>>>,
     executables: Mutex<BTreeMap<(String, String), Arc<Executable>>>,
 }
 
 impl Runtime {
-    /// CPU PJRT client over the artifact directory.
-    pub fn cpu(artifact_dir: impl AsRef<Path>) -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().context("create PJRT client")?;
-        Ok(Runtime {
-            client,
+    fn with_backend(
+        backend: Box<dyn Backend>,
+        artifact_dir: impl AsRef<Path>,
+    ) -> Runtime {
+        Runtime {
+            backend,
             artifact_dir: artifact_dir.as_ref().to_path_buf(),
             manifests: Mutex::new(BTreeMap::new()),
             executables: Mutex::new(BTreeMap::new()),
-        })
+        }
+    }
+
+    /// Auto-selected runtime over the artifact directory: PJRT when
+    /// the CPU client comes up, the native interpreter otherwise
+    /// (always, with the vendored offline `xla` stub).
+    pub fn cpu(artifact_dir: impl AsRef<Path>) -> Result<Runtime> {
+        match xla::PjRtClient::cpu() {
+            Ok(client) => Ok(Self::with_backend(
+                Box::new(PjrtBackend { client }),
+                artifact_dir,
+            )),
+            Err(e) => {
+                eprintln!(
+                    "[runtime] PJRT unavailable ({e}); using the \
+                     native backend"
+                );
+                Ok(Self::native(artifact_dir))
+            }
+        }
+    }
+
+    /// Strict PJRT runtime (errors when the client cannot be built).
+    pub fn pjrt(artifact_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let client =
+            xla::PjRtClient::cpu().context("create PJRT client")?;
+        Ok(Self::with_backend(
+            Box::new(PjrtBackend { client }),
+            artifact_dir,
+        ))
+    }
+
+    /// Native-backend runtime over an artifact directory (manifests
+    /// load from JSON; graphs are interpreted, HLO files are never
+    /// read).
+    pub fn native(artifact_dir: impl AsRef<Path>) -> Runtime {
+        Self::with_backend(Box::new(NativeBackend), artifact_dir)
+    }
+
+    /// Artifact-free native runtime around an in-memory manifest
+    /// (testkit / synthetic models).
+    pub fn with_manifest(manifest: ModelManifest) -> Runtime {
+        let rt = Self::native(".");
+        rt.register_manifest(manifest);
+        rt
+    }
+
+    /// Register an in-memory manifest (overrides any file of the same
+    /// model name).
+    pub fn register_manifest(
+        &self,
+        manifest: ModelManifest,
+    ) -> Arc<ModelManifest> {
+        let m = Arc::new(manifest);
+        self.manifests
+            .lock()
+            .unwrap()
+            .insert(m.model.clone(), m.clone());
+        m
+    }
+
+    /// Which backend compiles this runtime's graphs: `"pjrt"` or
+    /// `"native"`.
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
     }
 
     /// Load (and cache) a model manifest.
@@ -51,7 +121,8 @@ impl Runtime {
         }
         let manifest = self.manifest(model)?;
         let sig = manifest.graph(graph)?;
-        let exe = Executable::compile(&self.client, sig)?;
+        let engine = self.backend.compile(&manifest, sig)?;
+        let exe = Executable::new(sig.clone(), engine);
         self.executables.lock().unwrap().insert(key, exe.clone());
         Ok(exe)
     }
@@ -64,5 +135,20 @@ impl Runtime {
     /// Graphs compiled so far (metrics / tests).
     pub fn compiled_count(&self) -> usize {
         self.executables.lock().unwrap().len()
+    }
+
+    /// Per-graph execution counts: `(model, graph, executions)` for
+    /// every compiled executable, in key order. Bench and scenario
+    /// reports use this to show how many forward passes each stage
+    /// actually ran.
+    pub fn execution_counts(&self) -> Vec<(String, String, u64)> {
+        self.executables
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|((model, graph), exe)| {
+                (model.clone(), graph.clone(), exe.executions())
+            })
+            .collect()
     }
 }

@@ -6,12 +6,25 @@
 
 #![doc(hidden)]
 
-use crate::nn::manifest::ModelManifest;
+use crate::coordinator::eval::{self, EvalMode};
+use crate::coordinator::trainer::{train_comp_at, CompTrainCfg};
+use crate::coordinator::Deployment;
+use crate::data::{Batch, Dataset};
+use crate::nn::manifest::{
+    GraphSig, LayerGeom, ModelManifest, TensorSpec, WeightSpec,
+};
 use crate::rram::mapping::ProgrammedNetwork;
-use crate::rram::{ConductanceGrid, DriftModel, MeasuredDrift, WEEK};
-use crate::util::json::parse;
+use crate::rram::{
+    ConductanceGrid, DriftModel, IbmDrift, MeasuredDrift, DAY, WEEK,
+    YEAR,
+};
+use crate::runtime::Runtime;
+use crate::util::json::{arr, num, obj, parse, s, Json};
 use crate::util::rng::Pcg64;
-use crate::util::tensor::{Tensor, TensorMap};
+use crate::util::tensor::{DType, Tensor, TensorMap};
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::sync::Arc;
 
 /// Forces the pre-PR scalar path: forwards `sample` only (and hides
 /// `interp_levels`), so the trait's default per-scalar `sample_block`
@@ -84,6 +97,411 @@ pub fn synthetic_network(n_tensors: usize, side: usize)
         .expect("fixture network programs")
 }
 
+// ---------------------------------------------------------------------
+// Native-backend fixtures: an artifact-free, fully-runnable deployment.
+// ---------------------------------------------------------------------
+
+/// Model name of the native testkit deployment.
+pub const NATIVE_MODEL: &str = "testkit_mlp";
+/// Input features / hidden width / classes of the testkit MLP.
+pub const NATIVE_D_IN: usize = 16;
+pub const NATIVE_HIDDEN: usize = 32;
+pub const NATIVE_CLASSES: usize = 4;
+/// Static batch of the lowered eval graphs (matches the real models).
+pub const NATIVE_EVAL_BATCH: usize = 256;
+/// Static batch of the compensation train graph.
+pub const NATIVE_TRAIN_BATCH: usize = 64;
+/// Test-split length: one full eval batch plus a 64-row tail, so every
+/// evaluation exercises the partial-final-batch path.
+pub const NATIVE_TEST_LEN: usize = 320;
+
+/// Gaussian-blob classification task: class `c` lives around a one-hot
+/// block center in a 16-d space. Deterministic per (seed, split,
+/// index) — no stored data, any index set reproduces exactly.
+pub struct BlobTask {
+    seed: u64,
+}
+
+impl BlobTask {
+    pub fn new(seed: u64) -> BlobTask {
+        BlobTask { seed }
+    }
+
+    fn sample(&self, split: u64, idx: usize) -> (Vec<f32>, i32) {
+        let label = (idx % NATIVE_CLASSES) as i32;
+        let mut rng = Pcg64::with_stream(
+            self.seed
+                ^ (idx as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15),
+            split,
+        );
+        let mut x = vec![0f32; NATIVE_D_IN];
+        rng.fill_normal_f32(&mut x, 0.0, 0.6);
+        for j in 0..4 {
+            x[label as usize * 4 + j] += 1.25;
+        }
+        (x, label)
+    }
+
+    fn batch(&self, split: u64, indices: &[usize]) -> Batch {
+        let n = indices.len();
+        let mut xs = Vec::with_capacity(n * NATIVE_D_IN);
+        let mut ys = Vec::with_capacity(n);
+        for &idx in indices {
+            let (x, y) = self.sample(split, idx);
+            xs.extend_from_slice(&x);
+            ys.push(y);
+        }
+        Batch {
+            x: Tensor::from_f32(&[n, NATIVE_D_IN], xs),
+            y: Tensor::from_i32(&[n], ys),
+        }
+    }
+}
+
+impl Dataset for BlobTask {
+    fn classes(&self) -> usize {
+        NATIVE_CLASSES
+    }
+
+    fn train_len(&self) -> usize {
+        512
+    }
+
+    fn test_len(&self) -> usize {
+        NATIVE_TEST_LEN
+    }
+
+    fn train_batch(&self, indices: &[usize]) -> Batch {
+        self.batch(0x7121, indices)
+    }
+
+    fn test_batch(&self, indices: &[usize]) -> Batch {
+        self.batch(0x7e57, indices)
+    }
+}
+
+fn f32_spec(name: &str, shape: &[usize]) -> TensorSpec {
+    TensorSpec {
+        name: name.to_string(),
+        shape: shape.to_vec(),
+        dtype: DType::F32,
+    }
+}
+
+fn i32_spec(name: &str, shape: &[usize]) -> TensorSpec {
+    TensorSpec {
+        name: name.to_string(),
+        shape: shape.to_vec(),
+        dtype: DType::I32,
+    }
+}
+
+fn graph(key: &str, inputs: Vec<TensorSpec>,
+         outputs: Vec<TensorSpec>) -> (String, GraphSig) {
+    (
+        key.to_string(),
+        GraphSig {
+            key: key.to_string(),
+            // Never read by the native backend.
+            file: std::path::PathBuf::from("native"),
+            inputs,
+            outputs,
+        },
+    )
+}
+
+/// In-memory manifest of the testkit MLP (`l0`: 16→32, `fc`: 32→4)
+/// with native-runnable `fwd_b256` / `comp_veraplus_r{rank}_b256` /
+/// `train_veraplus_r{rank}` graphs.
+pub fn native_manifest(rank: usize) -> ModelManifest {
+    let layers = vec![
+        LayerGeom {
+            name: "l0".into(),
+            kind: "linear".into(),
+            cin: NATIVE_D_IN,
+            cout: NATIVE_HIDDEN,
+            k: 1,
+            stride: 1,
+            hw_in: 1,
+            hw_out: 1,
+        },
+        LayerGeom {
+            name: "fc".into(),
+            kind: "linear".into(),
+            cin: NATIVE_HIDDEN,
+            cout: NATIVE_CLASSES,
+            k: 1,
+            stride: 1,
+            hw_in: 1,
+            hw_out: 1,
+        },
+    ];
+    let deploy_weights = vec![
+        WeightSpec {
+            name: "l0.w".into(),
+            shape: vec![NATIVE_D_IN, NATIVE_HIDDEN],
+            rram: true,
+            grad: false,
+            init: None,
+        },
+        WeightSpec {
+            name: "l0.bias".into(),
+            shape: vec![NATIVE_HIDDEN],
+            rram: false,
+            grad: false,
+            init: None,
+        },
+        WeightSpec {
+            name: "fc.w".into(),
+            shape: vec![NATIVE_HIDDEN, NATIVE_CLASSES],
+            rram: true,
+            grad: false,
+            init: None,
+        },
+        WeightSpec {
+            name: "fc.bias".into(),
+            shape: vec![NATIVE_CLASSES],
+            rram: false,
+            grad: false,
+            init: None,
+        },
+    ];
+    let d_max = NATIVE_HIDDEN; // max(cin) = max(cout) = 32
+    let deploy_specs = |v: &mut Vec<TensorSpec>| {
+        v.push(f32_spec("l0.w", &[NATIVE_D_IN, NATIVE_HIDDEN]));
+        v.push(f32_spec("l0.bias", &[NATIVE_HIDDEN]));
+        v.push(f32_spec("fc.w", &[NATIVE_HIDDEN, NATIVE_CLASSES]));
+        v.push(f32_spec("fc.bias", &[NATIVE_CLASSES]));
+    };
+    let comp_specs = |v: &mut Vec<TensorSpec>| {
+        v.push(f32_spec("A_max", &[rank, d_max]));
+        v.push(f32_spec("B_max", &[d_max, rank]));
+        v.push(f32_spec("l0.d", &[rank]));
+        v.push(f32_spec("l0.b", &[NATIVE_HIDDEN]));
+        v.push(f32_spec("fc.d", &[rank]));
+        v.push(f32_spec("fc.b", &[NATIVE_CLASSES]));
+    };
+
+    let mut graphs = BTreeMap::new();
+    // Plain forward.
+    let mut inputs = Vec::new();
+    deploy_specs(&mut inputs);
+    inputs.push(f32_spec("x", &[NATIVE_EVAL_BATCH, NATIVE_D_IN]));
+    let (k, g) = graph(
+        &format!("fwd_b{NATIVE_EVAL_BATCH}"),
+        inputs,
+        vec![f32_spec("logits", &[NATIVE_EVAL_BATCH, NATIVE_CLASSES])],
+    );
+    graphs.insert(k, g);
+    // Compensated forward.
+    let mut inputs = Vec::new();
+    deploy_specs(&mut inputs);
+    comp_specs(&mut inputs);
+    inputs.push(f32_spec("x", &[NATIVE_EVAL_BATCH, NATIVE_D_IN]));
+    let (k, g) = graph(
+        &format!("comp_veraplus_r{rank}_b{NATIVE_EVAL_BATCH}"),
+        inputs,
+        vec![f32_spec("logits", &[NATIVE_EVAL_BATCH, NATIVE_CLASSES])],
+    );
+    graphs.insert(k, g);
+    // Compensation train step.
+    let mut inputs = Vec::new();
+    deploy_specs(&mut inputs);
+    comp_specs(&mut inputs);
+    for (name, len) in [
+        ("m:l0.d", rank),
+        ("m:l0.b", NATIVE_HIDDEN),
+        ("m:fc.d", rank),
+        ("m:fc.b", NATIVE_CLASSES),
+    ] {
+        inputs.push(f32_spec(name, &[len]));
+    }
+    inputs.push(f32_spec("x", &[NATIVE_TRAIN_BATCH, NATIVE_D_IN]));
+    inputs.push(i32_spec("y", &[NATIVE_TRAIN_BATCH]));
+    inputs.push(f32_spec("lr", &[]));
+    let outputs = vec![
+        f32_spec("l0.d", &[rank]),
+        f32_spec("l0.b", &[NATIVE_HIDDEN]),
+        f32_spec("fc.d", &[rank]),
+        f32_spec("fc.b", &[NATIVE_CLASSES]),
+        f32_spec("m:l0.d", &[rank]),
+        f32_spec("m:l0.b", &[NATIVE_HIDDEN]),
+        f32_spec("m:fc.d", &[rank]),
+        f32_spec("m:fc.b", &[NATIVE_CLASSES]),
+        f32_spec("loss", &[]),
+    ];
+    let (k, g) =
+        graph(&format!("train_veraplus_r{rank}"), inputs, outputs);
+    graphs.insert(k, g);
+
+    ModelManifest {
+        model: NATIVE_MODEL.to_string(),
+        kind: "mlp".to_string(),
+        classes: NATIVE_CLASSES,
+        w_bits: 4,
+        a_bits: 8,
+        input_dim: NATIVE_D_IN,
+        vocab: 0,
+        d_in_max: d_max,
+        d_out_max: d_max,
+        layers,
+        deploy_weights,
+        train_weights: Vec::new(),
+        graphs,
+    }
+}
+
+/// Hand-crafted deploy weights that solve the blob task analytically:
+/// `l0`'s first 4 output channels sum the class blocks, `fc` picks
+/// them back out; the remaining channels carry small random features
+/// (something for drift to corrupt and compensation to repair).
+pub fn native_deploy_weights(seed: u64) -> TensorMap {
+    let mut rng = Pcg64::with_stream(seed, 0x7e5c);
+    let mut w0 = vec![0f32; NATIVE_D_IN * NATIVE_HIDDEN];
+    rng.fill_normal_f32(&mut w0, 0.0, 0.2);
+    for c in 0..NATIVE_CLASSES {
+        for j in 0..4 {
+            // Column c reads input block c (row-major [cin, cout]).
+            w0[(c * 4 + j) * NATIVE_HIDDEN + c] = 1.0;
+        }
+    }
+    let mut w1 = vec![0f32; NATIVE_HIDDEN * NATIVE_CLASSES];
+    rng.fill_normal_f32(&mut w1, 0.0, 0.1);
+    for c in 0..NATIVE_CLASSES {
+        w1[c * NATIVE_CLASSES + c] = 1.0;
+    }
+    let mut m = TensorMap::new();
+    m.insert(
+        "l0.w".into(),
+        Tensor::from_f32(&[NATIVE_D_IN, NATIVE_HIDDEN], w0),
+    );
+    m.insert(
+        "l0.bias".into(),
+        Tensor::zeros(DType::F32, &[NATIVE_HIDDEN]),
+    );
+    m.insert(
+        "fc.w".into(),
+        Tensor::from_f32(&[NATIVE_HIDDEN, NATIVE_CLASSES], w1),
+    );
+    m.insert(
+        "fc.bias".into(),
+        Tensor::zeros(DType::F32, &[NATIVE_CLASSES]),
+    );
+    m
+}
+
+/// A fully-runnable, artifact-free deployment over the native backend:
+/// in-memory manifest + exactly-programmed RRAM arrays + blob task.
+/// EVALSTATS, Algorithm 1 scheduling and serving all work end-to-end
+/// on it — no PJRT, no files.
+pub fn native_deployment(
+    rank: usize,
+    seed: u64,
+    drift: Box<dyn DriftModel>,
+) -> Deployment {
+    let rt = Arc::new(Runtime::with_manifest(native_manifest(rank)));
+    let manifest = rt
+        .manifest(NATIVE_MODEL)
+        .expect("registered manifest resolves");
+    let deploy = native_deploy_weights(seed);
+    let mut grid = ConductanceGrid::default();
+    grid.prog_sigma = 0.0; // exact programming: clean drift-free point
+    let mut rng = Pcg64::with_stream(seed, 0xdeb1);
+    let net =
+        ProgrammedNetwork::program(&manifest, &deploy, grid, &mut rng)
+            .expect("testkit network programs");
+    Deployment::new(
+        rt,
+        manifest,
+        net,
+        Box::new(BlobTask::new(0x7a5c_b10b)),
+        "veraplus",
+        rank,
+        drift,
+        seed,
+    )
+}
+
+/// Table II analog on the native testkit deployment (fixed seed):
+/// drift-free accuracy, uncompensated EVALSTATS at the paper's
+/// checkpoints, and r=1 compensation at 1 y / 10 y. Schema matches
+/// `results/table2.json` rows; snapshotted by
+/// `tests/golden_tables.rs::golden_table2_native_backend`.
+pub fn native_table2_rows() -> Result<Json> {
+    let seed = 0xbeefu64;
+    let dep =
+        native_deployment(1, seed, Box::new(IbmDrift::default()));
+    let mut rng = Pcg64::with_stream(seed, 0x7ab2e);
+    let empty = TensorMap::new();
+    let ideal = dep.net.read_ideal();
+    let drift_free = eval::eval_accuracy(
+        &dep,
+        &ideal,
+        &empty,
+        EvalMode::Plain,
+        NATIVE_TEST_LEN,
+    )?;
+    let instances = 4usize;
+    let mut jpoints = Vec::new();
+    for (label, t) in
+        [("1s", 1.0), ("1d", DAY), ("1y", YEAR), ("10y", 10.0 * YEAR)]
+    {
+        let st = eval::eval_stats(
+            &dep,
+            &empty,
+            EvalMode::Plain,
+            t,
+            instances,
+            NATIVE_TEST_LEN,
+            &mut rng,
+        )?;
+        jpoints.push(obj(vec![
+            ("label", s(label)),
+            ("mean", num(st.mean)),
+            ("std", num(st.std)),
+        ]));
+    }
+    let cfg = CompTrainCfg {
+        epochs: 2,
+        max_train: 256,
+        ..Default::default()
+    };
+    let mut jcomp = Vec::new();
+    for (label, t) in [("1y", YEAR), ("10y", 10.0 * YEAR)] {
+        let trained = train_comp_at(
+            &dep,
+            t,
+            dep.fresh_trainables(seed),
+            &cfg,
+            &mut rng,
+        )?;
+        let st = eval::eval_stats(
+            &dep,
+            &trained.trainables,
+            EvalMode::Compensated,
+            t,
+            instances,
+            NATIVE_TEST_LEN,
+            &mut rng,
+        )?;
+        jcomp.push(obj(vec![
+            ("label", s(label)),
+            ("mean", num(st.mean)),
+            ("std", num(st.std)),
+        ]));
+    }
+    let row = obj(vec![
+        ("model", s(NATIVE_MODEL)),
+        ("drift_free", num(drift_free)),
+        ("uncompensated", arr(jpoints)),
+        ("compensated", arr(jcomp)),
+    ]);
+    Ok(obj(vec![
+        ("backend", s("native")),
+        ("rows", arr(vec![row])),
+    ]))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -100,5 +518,61 @@ mod tests {
         let m = ScalarPath(measured_model());
         assert!(m.interp_levels().is_none());
         assert_eq!(m.name(), "scalar-path");
+    }
+
+    #[test]
+    fn blob_task_is_deterministic_and_separable() {
+        let task = BlobTask::new(3);
+        let a = task.test_batch(&[0, 1, 2, 7]);
+        let b = task.test_batch(&[0, 1, 2, 7]);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+        // Labels cycle through the classes.
+        assert_eq!(a.y.as_i32(), &[0, 1, 2, 3]);
+        // Train and test splits differ for the same index.
+        let t = task.train_batch(&[0]);
+        assert_ne!(t.x, task.test_batch(&[0]).x);
+        // The class block carries the signal.
+        let x = a.x.as_f32();
+        let row1 = &x[NATIVE_D_IN..2 * NATIVE_D_IN];
+        let block: f32 = row1[4..8].iter().sum();
+        let rest: f32 = row1[..4].iter().sum::<f32>()
+            + row1[8..].iter().sum::<f32>();
+        assert!(block > rest, "block {block} vs rest {rest}");
+    }
+
+    #[test]
+    fn native_manifest_graphs_are_consistent() {
+        let man = native_manifest(2);
+        assert_eq!(man.kind, "mlp");
+        assert_eq!(man.rram_params() as usize,
+                   16 * 32 + 32 * 4);
+        let fwd = man.graph("fwd_b256").unwrap();
+        assert_eq!(fwd.inputs.last().unwrap().name, "x");
+        assert_eq!(fwd.outputs[0].shape, vec![256, 4]);
+        let comp = man.graph("comp_veraplus_r2_b256").unwrap();
+        assert!(comp.inputs.iter().any(|t| t.name == "A_max"));
+        let train = man.graph("train_veraplus_r2").unwrap();
+        assert_eq!(train.outputs.last().unwrap().name, "loss");
+        assert_eq!(
+            train.inputs.iter().filter(|t| t.name.starts_with("m:"))
+                .count(),
+            4
+        );
+    }
+
+    #[test]
+    fn native_deployment_assembles() {
+        let dep = native_deployment(
+            1,
+            7,
+            Box::new(crate::rram::NoDrift),
+        );
+        assert_eq!(dep.net.tensors.len(), 2);
+        assert_eq!(dep.manifest.model, NATIVE_MODEL);
+        assert!(dep.frozen.contains_key("A_max"));
+        let tr = dep.fresh_trainables(1);
+        assert!(tr.contains_key("l0.d") && tr.contains_key("fc.b"));
+        assert_eq!(dep.rt.backend_name(), "native");
     }
 }

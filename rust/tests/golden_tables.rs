@@ -144,6 +144,64 @@ fn golden_table3_snapshot_stays_near_paper() {
     }
 }
 
+/// Native-backend table2 golden (the ROADMAP "first toolchain run"
+/// item): the Table II shape — drift-free accuracy, uncompensated
+/// EVALSTATS at the paper checkpoints, r=1 compensation at 1 y / 10 y —
+/// runs ARTIFACT-FREE through the native execution backend on the
+/// testkit deployment. Bootstraps `tests/golden/table2_native.json` on
+/// the first toolchain run (commit it to arm the regression check);
+/// refresh intentionally with `VERA_UPDATE_GOLDEN=1`. The full-model
+/// `table2.json` golden below remains artifact-gated (BERT models and
+/// backbone QAT still need PJRT).
+#[test]
+fn golden_table2_native_backend() {
+    let fresh = vera_plus::util::testkit::native_table2_rows().unwrap();
+    let path = golden_dir().join("table2_native.json");
+    if update_requested() || !path.exists() {
+        std::fs::create_dir_all(golden_dir()).unwrap();
+        std::fs::write(&path, fresh.to_string_pretty()).unwrap();
+        eprintln!(
+            "[golden] wrote {} — commit it to arm the native table2 \
+             regression check",
+            path.display()
+        );
+        return;
+    }
+    let golden =
+        parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    let wrows = golden.req_arr("rows").unwrap();
+    let grows = fresh.req_arr("rows").unwrap();
+    assert_eq!(wrows.len(), grows.len(), "native table2 row count");
+    const TOL: f64 = 0.025; // ±2.5 accuracy points absolute
+    for (w, g) in wrows.iter().zip(grows) {
+        let model = w.req_str("model").unwrap();
+        assert_eq!(model, g.req_str("model").unwrap());
+        let wf = w.req_f64("drift_free").unwrap();
+        let gf = g.req_f64("drift_free").unwrap();
+        assert!(
+            (wf - gf).abs() <= TOL,
+            "{model} drift_free drifted: golden {wf}, got {gf} — if \
+             intentional, rerun with VERA_UPDATE_GOLDEN=1 and commit"
+        );
+        for key in ["uncompensated", "compensated"] {
+            let wpts = w.req_arr(key).unwrap();
+            let gpts = g.req_arr(key).unwrap();
+            assert_eq!(wpts.len(), gpts.len(), "{model}.{key} columns");
+            for (wp, gp) in wpts.iter().zip(gpts) {
+                let label = wp.req_str("label").unwrap();
+                let wm = wp.req_f64("mean").unwrap();
+                let gm = gp.req_f64("mean").unwrap();
+                assert!(
+                    (wm - gm).abs() <= TOL,
+                    "{model}.{key}[{label}] drifted: golden {wm}, got \
+                     {gm} — if intentional, rerun with \
+                     VERA_UPDATE_GOLDEN=1 and commit"
+                );
+            }
+        }
+    }
+}
+
 /// Artifact-gated table2 golden: runs the quick-budget harness
 /// end-to-end (fixed seed) and compares accuracy means against the
 /// snapshot; bootstraps the snapshot on the first toolchain run.
@@ -156,6 +214,13 @@ fn golden_table2_quick_budget_accuracies() {
         return;
     }
     let ctx = Ctx::new(Budget::quick()).unwrap();
+    if ctx.rt.backend_name() != "pjrt" {
+        eprintln!(
+            "PJRT bindings unavailable; the full-model table2 needs \
+             backbone QAT — skipping (see golden_table2_native_backend)"
+        );
+        return;
+    }
     harness::run(&ctx, "table2").unwrap();
     let fresh = parse(
         &std::fs::read_to_string(

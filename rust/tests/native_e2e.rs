@@ -1,0 +1,228 @@
+//! End-to-end pipeline over the NATIVE backend — no PJRT, no
+//! artifacts: program the testkit network, run EVALSTATS (real forward
+//! passes through the blocked-GEMM interpreter), drive Algorithm 1
+//! scheduling off those statistics, and serve through a real-forward
+//! [`NativeEngine`] fleet.
+//!
+//! This is the artifact-free analog of `tests/pipeline_e2e.rs`.
+
+use std::sync::Arc;
+use vera_plus::compensation::{CompSet, SetStore};
+use vera_plus::coordinator::eval::{
+    eval_accuracy, eval_stats, eval_stats_workers, EvalMode,
+};
+use vera_plus::coordinator::scheduler::{schedule, ScheduleCfg};
+use vera_plus::coordinator::serve::{
+    BatchPolicy, LifetimeClock, Workload,
+};
+use vera_plus::coordinator::trainer::CompTrainCfg;
+use vera_plus::fleet::{native_engine, BalancePolicy, Fleet, NativeEngine};
+use vera_plus::rram::{IbmDrift, MONTH, YEAR};
+use vera_plus::util::rng::Pcg64;
+use vera_plus::util::tensor::TensorMap;
+use vera_plus::util::testkit::{
+    native_deployment, NATIVE_MODEL, NATIVE_TEST_LEN,
+};
+
+#[test]
+fn evalstats_runs_real_forward_passes_natively() {
+    let dep =
+        native_deployment(1, 0xbeef, Box::new(IbmDrift::default()));
+    assert_eq!(dep.rt.backend_name(), "native");
+    let empty = TensorMap::new();
+    let ideal = dep.net.read_ideal();
+
+    // Drift-free accuracy on 96 samples — BELOW the 256 lowered batch,
+    // so this also exercises the partial-final-batch fix (the old
+    // `while idx + batch <= n` loop hard-errored here).
+    let drift_free =
+        eval_accuracy(&dep, &ideal, &empty, EvalMode::Plain, 96)
+            .unwrap();
+    assert!(
+        drift_free > 0.5,
+        "crafted weights must beat 4-class chance clearly: \
+         {drift_free}"
+    );
+
+    // Full test split (320 = 256 + a 64-row tail batch).
+    let full = eval_accuracy(
+        &dep,
+        &ideal,
+        &empty,
+        EvalMode::Plain,
+        NATIVE_TEST_LEN,
+    )
+    .unwrap();
+    assert!(full > 0.5, "full-split accuracy {full}");
+
+    // EVALSTATS at 10 years: finite stats from real drifted forwards.
+    let mut rng = Pcg64::new(3);
+    let st = eval_stats(
+        &dep,
+        &empty,
+        EvalMode::Plain,
+        10.0 * YEAR,
+        4,
+        NATIVE_TEST_LEN,
+        &mut rng,
+    )
+    .unwrap();
+    assert_eq!(st.n, 4);
+    assert!(st.mean.is_finite() && st.std.is_finite());
+    assert!((0.0..=1.0).contains(&st.mean), "mean {}", st.mean);
+    assert!(st.std >= 0.0);
+    // A decade of drift cannot *improve* on the ideal readout.
+    assert!(
+        st.mean <= full + 0.05,
+        "10y drifted {} vs drift-free {}",
+        st.mean,
+        full
+    );
+}
+
+#[test]
+fn evalstats_is_bit_identical_across_worker_counts() {
+    let dep = native_deployment(1, 21, Box::new(IbmDrift::default()));
+    let empty = TensorMap::new();
+    let run = |workers: usize| {
+        let mut rng = Pcg64::new(9);
+        eval_stats_workers(
+            &dep,
+            &empty,
+            EvalMode::Plain,
+            YEAR,
+            5,
+            NATIVE_TEST_LEN,
+            &mut rng,
+            workers,
+        )
+        .unwrap()
+    };
+    let one = run(1);
+    for workers in [2usize, 4, 8] {
+        let multi = run(workers);
+        assert_eq!(one.mean.to_bits(), multi.mean.to_bits(),
+                   "workers {workers}: mean diverged");
+        assert_eq!(one.std.to_bits(), multi.std.to_bits(),
+                   "workers {workers}: std diverged");
+    }
+}
+
+#[test]
+fn scheduler_consumes_native_evalstats() {
+    let dep =
+        native_deployment(1, 0xbeef, Box::new(IbmDrift::default()));
+    let cfg = ScheduleCfg {
+        norm_floor: 0.90,
+        growth: 2.0,
+        t_max: MONTH,
+        n_instances: 2,
+        max_samples: 96,
+        train: CompTrainCfg {
+            epochs: 1,
+            max_train: 128,
+            ..Default::default()
+        },
+        seed: 0x5eed,
+    };
+    let result = schedule(&dep, &cfg).unwrap();
+    assert!(result.drift_free_acc > 0.5);
+    assert!(!result.store.is_empty());
+    assert_eq!(result.store.sets[0].t_start, 1.0);
+    for w in result.store.sets.windows(2) {
+        assert!(w[0].t_start < w[1].t_start);
+    }
+    // The decision log covers the exponential ladder to t_max, every
+    // entry backed by finite native EVALSTATS.
+    assert!(result.decisions.len() >= 20,
+            "{} decisions", result.decisions.len());
+    assert!(result.decisions.last().unwrap().t >= MONTH);
+    for d in &result.decisions {
+        assert!(d.mean.is_finite() && d.std.is_finite());
+        assert!((0.0..=1.0).contains(&d.mean), "mean {}", d.mean);
+        assert!(d.lower <= d.mean + 1e-12);
+        assert!((d.floor - cfg.norm_floor * result.drift_free_acc)
+            .abs() < 1e-12);
+    }
+    // Training actually ran through the native train graph.
+    let counts = dep.rt.execution_counts();
+    assert!(
+        counts.iter().any(|(m, g, n)| {
+            m == NATIVE_MODEL && g.starts_with("train_veraplus") && *n > 0
+        }),
+        "no native train executions recorded: {counts:?}"
+    );
+    assert!(
+        counts.iter().any(|(m, g, n)| {
+            m == NATIVE_MODEL && g.starts_with("comp_veraplus") && *n > 0
+        }),
+        "no compensated eval executions recorded: {counts:?}"
+    );
+}
+
+#[test]
+fn native_engine_fleet_serves_real_forwards() {
+    let dep = Arc::new(native_deployment(
+        1,
+        17,
+        Box::new(IbmDrift::default()),
+    ));
+    let mut store = SetStore::new(NATIVE_MODEL, "veraplus", 1, 17);
+    store.insert(CompSet {
+        t_start: 1.0,
+        trainables: dep.fresh_trainables(5),
+        train_loss: 0.0,
+        accuracy: 0.9,
+    });
+    let store = Arc::new(store);
+    let chips: Vec<NativeEngine> = (0..2)
+        .map(|i| {
+            native_engine(
+                &dep,
+                &store,
+                LifetimeClock::new(1.0 + i as f64 * YEAR, 1e5),
+                BatchPolicy {
+                    max_batch: 32,
+                    max_wait: 0.01,
+                },
+                7 + i as u64,
+            )
+        })
+        .collect();
+    let mut fleet = Fleet::new(chips, BalancePolicy::RoundRobin, 0.01);
+    let mut wl = Workload::new(300.0, 5);
+    let mut comps = Vec::new();
+    for _ in 0..5 {
+        comps.extend(fleet.tick(0.1, &mut wl, NATIVE_TEST_LEN).unwrap());
+    }
+    comps.extend(fleet.flush().unwrap());
+    let summary = fleet.summary();
+    // Conservation: every routed request completed exactly once.
+    assert_eq!(summary.served, comps.len());
+    assert_eq!(fleet.metrics.total_routed(), comps.len());
+    assert!(comps.len() > 50, "arrivals {}", comps.len());
+    // Real forwards on healthy (young) chips beat chance clearly.
+    assert!(
+        summary.accuracy > 0.4,
+        "fleet accuracy {}",
+        summary.accuracy
+    );
+    // The previously dead executions counter is surfaced end-to-end:
+    // per-graph counts appear in the fleet summary and on the runtime.
+    assert!(
+        summary
+            .graph_execs
+            .keys()
+            .any(|k| k.starts_with("comp_veraplus_r1_b")),
+        "summary missing graph execs: {:?}",
+        summary.graph_execs
+    );
+    let total_summary: usize = summary.graph_execs.values().sum();
+    let rt_total: u64 = dep
+        .rt
+        .execution_counts()
+        .iter()
+        .map(|(_, _, n)| *n)
+        .sum();
+    assert!(rt_total >= total_summary as u64);
+}
