@@ -23,6 +23,7 @@
 use std::sync::Arc;
 use vera_plus::compensation::{CompSet, SetStore};
 use vera_plus::coordinator::eval::{eval_stats_workers, EvalMode};
+use vera_plus::nn::init;
 use vera_plus::rram::{ArrayBank, ConductanceGrid, IbmDrift, YEAR};
 use vera_plus::runtime::native::gemm;
 use vera_plus::runtime::Runtime;
@@ -31,8 +32,10 @@ use vera_plus::util::parallel;
 use vera_plus::util::rng::Pcg64;
 use vera_plus::util::tensor::{DType, Tensor, TensorMap};
 use vera_plus::util::testkit::{
-    measured_model, native_deployment, synthetic_network, ScalarPath,
-    NATIVE_EVAL_BATCH, NATIVE_MODEL, NATIVE_TEST_LEN,
+    gradcheck_resnet_manifest, measured_model, native_bert_deployment,
+    native_deployment, synthetic_network, ScalarPath, BERT_EVAL_BATCH,
+    BERT_MODEL, BERT_TRAIN_BATCH, GRAD_BATCH, NATIVE_EVAL_BATCH,
+    NATIVE_MODEL, NATIVE_TEST_LEN, NATIVE_TRAIN_BATCH,
 };
 
 /// Devices in the bank-level microbench (two full 256×512 tiles —
@@ -332,6 +335,128 @@ fn native_stages(bench: &mut Bencher) -> anyhow::Result<()> {
         .unwrap();
         std::hint::black_box(st.mean);
     });
+
+    // --- BERT-analog forward: embedding + attention + fused comp ----
+    let bdep = native_bert_deployment(1, 9, Box::new(IbmDrift::default()));
+    let bweights = bdep.net.read_ideal();
+    let btrainables = bdep.fresh_trainables(3);
+    let bidx: Vec<usize> = (0..BERT_EVAL_BATCH).collect();
+    let bdata = bdep.dataset.test_batch(&bidx);
+    let mut binputs = TensorMap::new();
+    binputs.insert("x".into(), bdata.x);
+    let bfwd = bdep
+        .rt
+        .executable(BERT_MODEL, &format!("fwd_b{BERT_EVAL_BATCH}"))?;
+    bench.bench_items(
+        &format!("forward/bert_fwd_b{BERT_EVAL_BATCH}"),
+        BERT_EVAL_BATCH as f64,
+        || {
+            let o = bfwd.run_named(&[&bweights, &binputs]).unwrap();
+            std::hint::black_box(o.len());
+        },
+    );
+    let bcomp = bdep.rt.executable(
+        BERT_MODEL,
+        &format!("comp_veraplus_r1_b{BERT_EVAL_BATCH}"),
+    )?;
+    bench.bench_items(
+        &format!("forward/bert_comp_fwd_b{BERT_EVAL_BATCH}"),
+        BERT_EVAL_BATCH as f64,
+        || {
+            let o = bcomp
+                .run_named(&[
+                    &bweights,
+                    &bdep.frozen,
+                    &btrainables,
+                    &binputs,
+                ])
+                .unwrap();
+            std::hint::black_box(o.len());
+        },
+    );
+
+    // --- native backbone QAT train steps (mlp / bert / resnet) ------
+    // One fixed batch each; the step includes QAT weight fake-quant,
+    // forward with caches, hand-derived backward and SGD momentum.
+    {
+        let exe = dep.rt.executable(NATIVE_MODEL, "train_backbone")?;
+        let params = init::init_train_params(&dep.manifest, 5);
+        let momenta = init::zero_momenta(&dep.manifest.train_weights);
+        let idx: Vec<usize> = (0..NATIVE_TRAIN_BATCH).collect();
+        let tb = dep.dataset.train_batch(&idx);
+        let mut batch = TensorMap::new();
+        batch.insert("x".into(), tb.x);
+        batch.insert("y".into(), tb.y);
+        batch.insert("lr".into(), Tensor::scalar_f32(0.05));
+        bench.bench_items(
+            &format!("train_backbone/mlp_b{NATIVE_TRAIN_BATCH}"),
+            NATIVE_TRAIN_BATCH as f64,
+            || {
+                let o = exe
+                    .run_named(&[&params, &momenta, &batch])
+                    .unwrap();
+                std::hint::black_box(o.len());
+            },
+        );
+    }
+    {
+        let exe = bdep.rt.executable(BERT_MODEL, "train_backbone")?;
+        let params = init::init_train_params(&bdep.manifest, 5);
+        let momenta = init::zero_momenta(&bdep.manifest.train_weights);
+        let idx: Vec<usize> = (0..BERT_TRAIN_BATCH).collect();
+        let tb = bdep.dataset.train_batch(&idx);
+        let mut batch = TensorMap::new();
+        batch.insert("x".into(), tb.x);
+        batch.insert("y".into(), tb.y);
+        batch.insert("lr".into(), Tensor::scalar_f32(0.05));
+        bench.bench_items(
+            &format!("train_backbone/bert_b{BERT_TRAIN_BATCH}"),
+            BERT_TRAIN_BATCH as f64,
+            || {
+                let o = exe
+                    .run_named(&[&params, &momenta, &batch])
+                    .unwrap();
+                std::hint::black_box(o.len());
+            },
+        );
+    }
+    {
+        // Tiny strided-block resnet (the gradcheck geometry, but at
+        // the production W4A4 widths so the fake-quant path is in the
+        // measured step — the gradcheck fixture itself disables
+        // quantization for FD purposes).
+        let mut man = gradcheck_resnet_manifest();
+        man.w_bits = 4;
+        man.a_bits = 4;
+        let model = man.model.clone();
+        let params = init::init_train_params(&man, 5);
+        let momenta = init::zero_momenta(&man.train_weights);
+        let image = man.input_dim;
+        let rtc = Runtime::with_manifest(man);
+        let exe = rtc.executable(&model, "train_backbone")?;
+        let mut rngx = Pcg64::new(6);
+        let mut x = vec![0f32; GRAD_BATCH * image * image * 3];
+        rngx.fill_normal_f32(&mut x, 0.0, 0.8);
+        let y: Vec<i32> =
+            (0..GRAD_BATCH).map(|i| (i % 3) as i32).collect();
+        let mut batch = TensorMap::new();
+        batch.insert(
+            "x".into(),
+            Tensor::from_f32(&[GRAD_BATCH, image, image, 3], x),
+        );
+        batch.insert("y".into(), Tensor::from_i32(&[GRAD_BATCH], y));
+        batch.insert("lr".into(), Tensor::scalar_f32(0.05));
+        bench.bench_items(
+            &format!("train_backbone/resnet_b{GRAD_BATCH}"),
+            GRAD_BATCH as f64,
+            || {
+                let o = exe
+                    .run_named(&[&params, &momenta, &batch])
+                    .unwrap();
+                std::hint::black_box(o.len());
+            },
+        );
+    }
 
     // Per-graph execution counts (the surfaced executions counter).
     let counts = dep.rt.execution_counts();

@@ -102,6 +102,35 @@ fn pack_eval_batches(
     })
 }
 
+/// Resolve the evaluation graph key for a mode: the *largest* lowered
+/// batch of the mode's graph family. Historically this was hardcoded
+/// to `_b256`, which broke manifests that lower a different eval batch
+/// (the bert testkit lowers `_b32`); real models still resolve to
+/// their 256-batch graphs.
+fn eval_key(dep: &Deployment, mode: EvalMode) -> Result<String> {
+    let prefix = match mode {
+        EvalMode::Plain => "fwd_b".to_string(),
+        EvalMode::Compensated => {
+            let key0 = dep.comp_key(0);
+            key0.strip_suffix('0')
+                .expect("comp_key ends in its batch size")
+                .to_string()
+        }
+    };
+    let best = dep
+        .manifest
+        .lowered_batches(&prefix)
+        .last()
+        .copied()
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "model {}: no '{prefix}{{N}}' graph lowered",
+                dep.manifest.model
+            )
+        })?;
+    Ok(format!("{prefix}{best}"))
+}
+
 /// The graph's static batch dimension (the `x` input's leading axis).
 fn graph_batch(exe: &Executable) -> Result<usize> {
     let spec = exe
@@ -157,10 +186,7 @@ pub fn eval_accuracy(
     mode: EvalMode,
     max_samples: usize,
 ) -> Result<f64> {
-    let key = match mode {
-        EvalMode::Plain => dep.fwd_key(256),
-        EvalMode::Compensated => dep.comp_key(256),
-    };
+    let key = eval_key(dep, mode)?;
     let exe = dep.rt.executable(&dep.manifest.model, &key)?;
     let batches =
         pack_eval_batches(dep, graph_batch(&exe)?, max_samples)?;
@@ -245,10 +271,7 @@ pub fn eval_stats_workers(
     workers: usize,
 ) -> Result<Stats> {
     ensure!(n_instances > 0, "EVALSTATS needs at least one instance");
-    let key = match mode {
-        EvalMode::Plain => dep.fwd_key(256),
-        EvalMode::Compensated => dep.comp_key(256),
-    };
+    let key = eval_key(dep, mode)?;
     // Resolve the executable and pack the activations ONCE; both are
     // shared read-only across every instance.
     let exe: Arc<Executable> =

@@ -207,15 +207,7 @@ impl Server {
         let comp_prefix = key0
             .strip_suffix('0')
             .expect("comp_key ends in its batch size");
-        let mut graph_batches: Vec<usize> = dep
-            .manifest
-            .graphs
-            .keys()
-            .filter_map(|k| k.strip_prefix(&comp_prefix))
-            .filter_map(|suffix| suffix.parse::<usize>().ok())
-            .collect();
-        graph_batches.sort_unstable();
-        graph_batches.dedup();
+        let graph_batches = dep.manifest.lowered_batches(comp_prefix);
         Server {
             dep,
             store,

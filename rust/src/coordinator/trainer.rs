@@ -222,8 +222,17 @@ pub fn eval_backbone(
     dataset: &dyn crate::data::Dataset,
     max_samples: usize,
 ) -> Result<f64> {
-    let exe = rt.executable(model, "train_fwd_b256")?;
-    let batch = 256usize;
+    // Largest lowered train-form eval batch (historically hardcoded to
+    // 256; testkit manifests lower other batches).
+    let batch = rt
+        .manifest(model)?
+        .lowered_batches("train_fwd_b")
+        .last()
+        .copied()
+        .with_context(|| {
+            format!("model {model}: no 'train_fwd_b{{N}}' graph lowered")
+        })?;
+    let exe = rt.executable(model, &format!("train_fwd_b{batch}"))?;
     let n = dataset.test_len().min(max_samples);
     anyhow::ensure!(n > 0, "empty test split");
     let mut acc = 0.0;

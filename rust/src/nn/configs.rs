@@ -1,0 +1,751 @@
+//! Built-in model configurations: the Rust mirror of
+//! `python/compile/model.py`'s `CNN_CONFIGS` / `BERT_CONFIGS` plus the
+//! manifest synthesis `compile/aot.py` would have written to disk.
+//!
+//! The native execution backend interprets manifests — it never reads
+//! HLO files — so a synthesized in-memory manifest makes every known
+//! model runnable with **no artifacts at all**: `Runtime::manifest`
+//! falls back to [`builtin_manifest`] when
+//! `{artifact_dir}/{model}.manifest.json` is missing and the backend
+//! is native. The layer inventories, weight lists (names, shapes,
+//! rram/grad/init flags) and graph signatures must stay byte-for-byte
+//! compatible with what `aot.py` emits, because a later `make
+//! artifacts` run swaps the JSON file in transparently.
+//!
+//! Graph inventory per model mirrors `model.default_graphs`: every
+//! model gets `fwd_b256`, `train_backbone`, `train_fwd_b256`,
+//! `comp_veraplus_r1_b256` and `train_veraplus_r1`; `resnet20_easy` /
+//! `resnet20_hard` add the rank sweep (r ∈ {2,4,6,8}) plus the
+//! vera/lora baselines (whose graphs the native backend reports as
+//! PJRT-only at compile time, matching the lowered set); and
+//! `resnet20_easy` adds `bn_fwd_b256` and the small-batch serving
+//! graphs (`b1`, `b32`).
+
+use crate::nn::manifest::{
+    GraphSig, LayerGeom, ModelManifest, TensorSpec, WeightSpec,
+};
+use crate::util::tensor::DType;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+/// Compensation/backbone train batch (paper §III-D).
+pub const TRAIN_BATCH: usize = 64;
+/// Evaluation batch used by EVALSTATS.
+pub const EVAL_BATCH: usize = 256;
+
+/// The model names with a built-in configuration.
+pub const BUILTIN_MODELS: [&str; 9] = [
+    "resnet20_easy",
+    "resnet20_hard",
+    "resnet32_easy",
+    "resnet32_hard",
+    "resnet_large_vhard",
+    "bert_tiny_qqp",
+    "bert_tiny_sst",
+    "bert_small_qqp",
+    "bert_small_sst",
+];
+
+struct ResNetCfg {
+    depth: usize,
+    widths: [usize; 3],
+    image: usize,
+    classes: usize,
+}
+
+struct BertCfg {
+    layers_n: usize,
+    d_model: usize,
+    heads: usize,
+    seq: usize,
+    vocab: usize,
+    classes: usize,
+}
+
+enum Cfg {
+    Resnet(ResNetCfg),
+    Bert(BertCfg),
+}
+
+fn cfg_for(model: &str) -> Option<Cfg> {
+    let r = |depth, widths, classes| {
+        Cfg::Resnet(ResNetCfg {
+            depth,
+            widths,
+            image: 16,
+            classes,
+        })
+    };
+    let b = |layers_n, d_model, heads, classes| {
+        Cfg::Bert(BertCfg {
+            layers_n,
+            d_model,
+            heads,
+            seq: 32,
+            vocab: 512,
+            classes,
+        })
+    };
+    Some(match model {
+        "resnet20_easy" => r(20, [8, 16, 32], 10),
+        "resnet20_hard" => r(20, [8, 16, 32], 100),
+        "resnet32_easy" => r(32, [8, 16, 32], 10),
+        "resnet32_hard" => r(32, [8, 16, 32], 100),
+        "resnet_large_vhard" => r(20, [16, 32, 64], 100),
+        "bert_tiny_qqp" => b(2, 64, 2, 2),
+        "bert_tiny_sst" => b(2, 64, 2, 5),
+        "bert_small_qqp" => b(4, 96, 4, 2),
+        "bert_small_sst" => b(4, 96, 4, 5),
+        _ => return None,
+    })
+}
+
+fn f32s(name: &str, shape: &[usize]) -> TensorSpec {
+    TensorSpec {
+        name: name.to_string(),
+        shape: shape.to_vec(),
+        dtype: DType::F32,
+    }
+}
+
+fn i32s(name: &str, shape: &[usize]) -> TensorSpec {
+    TensorSpec {
+        name: name.to_string(),
+        shape: shape.to_vec(),
+        dtype: DType::I32,
+    }
+}
+
+fn wspec(
+    name: String,
+    shape: Vec<usize>,
+    rram: bool,
+    grad: bool,
+    init: Option<f64>,
+) -> WeightSpec {
+    WeightSpec {
+        name,
+        shape,
+        rram,
+        grad,
+        init,
+    }
+}
+
+impl ResNetCfg {
+    fn blocks_per_stage(&self) -> usize {
+        debug_assert_eq!((self.depth - 2) % 6, 0, "depth must be 6n+2");
+        (self.depth - 2) / 6
+    }
+
+    /// Ordered RRAM layer inventory (matches `resnet.ResNetCfg.layers`).
+    fn layers(&self) -> Vec<LayerGeom> {
+        let mut specs = vec![LayerGeom {
+            name: "stem".into(),
+            kind: "conv".into(),
+            cin: 3,
+            cout: self.widths[0],
+            k: 3,
+            stride: 1,
+            hw_in: self.image,
+            hw_out: self.image,
+        }];
+        let mut hw = self.image;
+        let mut cin = self.widths[0];
+        for (s, &width) in self.widths.iter().enumerate() {
+            for b in 0..self.blocks_per_stage() {
+                let stride = if s > 0 && b == 0 { 2 } else { 1 };
+                let hw_out = hw / stride;
+                let pre = format!("s{s}b{b}");
+                specs.push(LayerGeom {
+                    name: format!("{pre}.conv1"),
+                    kind: "conv".into(),
+                    cin,
+                    cout: width,
+                    k: 3,
+                    stride,
+                    hw_in: hw,
+                    hw_out,
+                });
+                specs.push(LayerGeom {
+                    name: format!("{pre}.conv2"),
+                    kind: "conv".into(),
+                    cin: width,
+                    cout: width,
+                    k: 3,
+                    stride: 1,
+                    hw_in: hw_out,
+                    hw_out,
+                });
+                if stride != 1 || cin != width {
+                    specs.push(LayerGeom {
+                        name: format!("{pre}.down"),
+                        kind: "conv".into(),
+                        cin,
+                        cout: width,
+                        k: 1,
+                        stride,
+                        hw_in: hw,
+                        hw_out,
+                    });
+                }
+                cin = width;
+                hw = hw_out;
+            }
+        }
+        specs.push(LayerGeom {
+            name: "fc".into(),
+            kind: "linear".into(),
+            cin: self.widths[2],
+            cout: self.classes,
+            k: 1,
+            stride: 1,
+            hw_in: 1,
+            hw_out: 1,
+        });
+        specs
+    }
+
+    fn deploy_weights(&self) -> Vec<WeightSpec> {
+        let mut out = Vec::new();
+        for l in self.layers() {
+            let shape = if l.kind == "conv" {
+                vec![l.k, l.k, l.cin, l.cout]
+            } else {
+                vec![l.cin, l.cout]
+            };
+            out.push(wspec(
+                format!("{}.w", l.name),
+                shape,
+                true,
+                true,
+                None,
+            ));
+            out.push(wspec(
+                format!("{}.bias", l.name),
+                vec![l.cout],
+                false,
+                true,
+                None,
+            ));
+        }
+        out
+    }
+
+    fn train_weights(&self) -> Vec<WeightSpec> {
+        let mut out = Vec::new();
+        for l in self.layers() {
+            if l.kind == "conv" {
+                out.push(wspec(
+                    format!("{}.w", l.name),
+                    vec![l.k, l.k, l.cin, l.cout],
+                    false,
+                    true,
+                    None,
+                ));
+                for (p, init) in [("gamma", 1.0), ("beta", 0.0)] {
+                    out.push(wspec(
+                        format!("{}.{p}", l.name),
+                        vec![l.cout],
+                        false,
+                        true,
+                        Some(init),
+                    ));
+                }
+                for (p, init) in [("mu", 0.0), ("var", 1.0)] {
+                    out.push(wspec(
+                        format!("{}.{p}", l.name),
+                        vec![l.cout],
+                        false,
+                        false,
+                        Some(init),
+                    ));
+                }
+            } else {
+                out.push(wspec(
+                    format!("{}.w", l.name),
+                    vec![l.cin, l.cout],
+                    false,
+                    true,
+                    None,
+                ));
+                out.push(wspec(
+                    format!("{}.bias", l.name),
+                    vec![l.cout],
+                    false,
+                    true,
+                    Some(0.0),
+                ));
+            }
+        }
+        out
+    }
+}
+
+impl BertCfg {
+    fn d_ff(&self) -> usize {
+        4 * self.d_model
+    }
+
+    /// Ordered RRAM linear-layer inventory (`bert.BertCfg
+    /// .linear_layers`).
+    fn layers(&self) -> Vec<LayerGeom> {
+        let mut out = Vec::new();
+        let lin = |name: String, cin: usize, cout: usize, hw: usize| {
+            LayerGeom {
+                name,
+                kind: "linear".into(),
+                cin,
+                cout,
+                k: 1,
+                stride: 1,
+                hw_in: hw,
+                hw_out: hw,
+            }
+        };
+        for i in 0..self.layers_n {
+            for nm in ["wq", "wk", "wv", "wo"] {
+                out.push(lin(
+                    format!("l{i}.{nm}"),
+                    self.d_model,
+                    self.d_model,
+                    self.seq,
+                ));
+            }
+            out.push(lin(
+                format!("l{i}.ff1"),
+                self.d_model,
+                self.d_ff(),
+                self.seq,
+            ));
+            out.push(lin(
+                format!("l{i}.ff2"),
+                self.d_ff(),
+                self.d_model,
+                self.seq,
+            ));
+        }
+        out.push(lin("cls".into(), self.d_model, self.classes, 1));
+        out
+    }
+
+    /// Deploy weights (== train weights: BERT analogs train in deploy
+    /// form, no BN to fold). RRAM-flagged tensors drift; embeddings,
+    /// LayerNorm parameters and biases are digital.
+    fn deploy_weights(&self) -> Vec<WeightSpec> {
+        let d = self.d_model;
+        let mut out = vec![
+            wspec(
+                "tok_emb".into(),
+                vec![self.vocab, d],
+                false,
+                true,
+                None,
+            ),
+            wspec("pos_emb".into(), vec![self.seq, d], false, true,
+                  None),
+        ];
+        for l in self.layers() {
+            out.push(wspec(
+                format!("{}.w", l.name),
+                vec![l.cin, l.cout],
+                true,
+                true,
+                None,
+            ));
+            out.push(wspec(
+                format!("{}.bias", l.name),
+                vec![l.cout],
+                false,
+                true,
+                None,
+            ));
+        }
+        for i in 0..self.layers_n {
+            for ln in ["ln1", "ln2"] {
+                out.push(wspec(
+                    format!("l{i}.{ln}.gamma"),
+                    vec![d],
+                    false,
+                    true,
+                    Some(1.0),
+                ));
+                out.push(wspec(
+                    format!("l{i}.{ln}.beta"),
+                    vec![d],
+                    false,
+                    true,
+                    Some(0.0),
+                ));
+            }
+        }
+        out.push(wspec("ln_f.gamma".into(), vec![d], false, true,
+                       Some(1.0)));
+        out.push(wspec("ln_f.beta".into(), vec![d], false, true,
+                       Some(0.0)));
+        out
+    }
+}
+
+impl Cfg {
+    fn layers(&self) -> Vec<LayerGeom> {
+        match self {
+            Cfg::Resnet(c) => c.layers(),
+            Cfg::Bert(c) => c.layers(),
+        }
+    }
+
+    fn deploy_weights(&self) -> Vec<WeightSpec> {
+        match self {
+            Cfg::Resnet(c) => c.deploy_weights(),
+            Cfg::Bert(c) => c.deploy_weights(),
+        }
+    }
+
+    fn train_weights(&self) -> Vec<WeightSpec> {
+        match self {
+            Cfg::Resnet(c) => c.train_weights(),
+            Cfg::Bert(c) => c.deploy_weights(),
+        }
+    }
+
+    fn classes(&self) -> usize {
+        match self {
+            Cfg::Resnet(c) => c.classes,
+            Cfg::Bert(c) => c.classes,
+        }
+    }
+
+    fn batch_input(&self, batch: usize) -> TensorSpec {
+        match self {
+            Cfg::Resnet(c) => {
+                f32s("x", &[batch, c.image, c.image, 3])
+            }
+            Cfg::Bert(c) => i32s("x", &[batch, c.seq]),
+        }
+    }
+
+    fn d_in_max(&self) -> usize {
+        self.layers().iter().map(|l| l.cin).max().unwrap_or(0)
+    }
+
+    fn d_out_max(&self) -> usize {
+        self.layers().iter().map(|l| l.cout).max().unwrap_or(0)
+    }
+
+    /// `(frozen, trainable)` compensation specs for a method/rank
+    /// (`resnet.comp_param_specs` / `bert.comp_param_specs`).
+    fn comp_specs(
+        &self,
+        method: &str,
+        rank: usize,
+    ) -> (Vec<TensorSpec>, Vec<TensorSpec>) {
+        let layers = self.layers();
+        match method {
+            "veraplus" | "vera" => {
+                let frozen = if method == "veraplus" {
+                    vec![
+                        f32s("A_max", &[rank, self.d_in_max()]),
+                        f32s("B_max", &[self.d_out_max(), rank]),
+                    ]
+                } else {
+                    vec![
+                        f32s("A_max", &[3, 3, self.d_in_max(), rank]),
+                        f32s("B_max", &[self.d_out_max(), rank]),
+                    ]
+                };
+                let mut tr = Vec::new();
+                for l in &layers {
+                    tr.push(f32s(&format!("{}.d", l.name), &[rank]));
+                    tr.push(f32s(&format!("{}.b", l.name), &[l.cout]));
+                }
+                (frozen, tr)
+            }
+            "lora" => {
+                let mut tr = Vec::new();
+                for l in &layers {
+                    tr.push(f32s(
+                        &format!("{}.A", l.name),
+                        &[l.k, l.k, l.cin, rank],
+                    ));
+                    tr.push(f32s(
+                        &format!("{}.B", l.name),
+                        &[l.cout, rank],
+                    ));
+                }
+                (Vec::new(), tr)
+            }
+            other => unreachable!("unknown method {other}"),
+        }
+    }
+}
+
+fn specs_of(weights: &[WeightSpec]) -> Vec<TensorSpec> {
+    weights
+        .iter()
+        .map(|w| f32s(&w.name, &w.shape))
+        .collect()
+}
+
+fn graph(
+    key: String,
+    inputs: Vec<TensorSpec>,
+    outputs: Vec<TensorSpec>,
+) -> (String, GraphSig) {
+    (
+        key.clone(),
+        GraphSig {
+            key,
+            // Never read by the native backend; a later `make
+            // artifacts` run replaces the whole manifest anyway.
+            file: PathBuf::from("native"),
+            inputs,
+            outputs,
+        },
+    )
+}
+
+fn build_graphs(cfg: &Cfg, model: &str) -> BTreeMap<String, GraphSig> {
+    let deploy = specs_of(&cfg.deploy_weights());
+    let train = specs_of(&cfg.train_weights());
+    let classes = cfg.classes();
+    let mut graphs = BTreeMap::new();
+
+    let add_fwd = |graphs: &mut BTreeMap<String, GraphSig>,
+                       batch: usize| {
+        let mut inputs = deploy.clone();
+        inputs.push(cfg.batch_input(batch));
+        let (k, g) = graph(
+            format!("fwd_b{batch}"),
+            inputs,
+            vec![f32s("logits", &[batch, classes])],
+        );
+        graphs.insert(k, g);
+    };
+    let add_comp = |graphs: &mut BTreeMap<String, GraphSig>,
+                        method: &str,
+                        rank: usize,
+                        batch: usize| {
+        let (frozen, tr) = cfg.comp_specs(method, rank);
+        let mut inputs = deploy.clone();
+        inputs.extend(frozen);
+        inputs.extend(tr);
+        inputs.push(cfg.batch_input(batch));
+        let (k, g) = graph(
+            format!("comp_{method}_r{rank}_b{batch}"),
+            inputs,
+            vec![f32s("logits", &[batch, classes])],
+        );
+        graphs.insert(k, g);
+    };
+    let add_train_comp = |graphs: &mut BTreeMap<String, GraphSig>,
+                              method: &str,
+                              rank: usize| {
+        let (frozen, tr) = cfg.comp_specs(method, rank);
+        let mut inputs = deploy.clone();
+        inputs.extend(frozen);
+        inputs.extend(tr.clone());
+        for t in &tr {
+            inputs.push(f32s(&format!("m:{}", t.name), &t.shape));
+        }
+        inputs.push(cfg.batch_input(TRAIN_BATCH));
+        inputs.push(i32s("y", &[TRAIN_BATCH]));
+        inputs.push(f32s("lr", &[]));
+        let mut outputs = tr.clone();
+        for t in &tr {
+            outputs.push(f32s(&format!("m:{}", t.name), &t.shape));
+        }
+        outputs.push(f32s("loss", &[]));
+        let (k, g) = graph(
+            format!("train_{method}_r{rank}"),
+            inputs,
+            outputs,
+        );
+        graphs.insert(k, g);
+    };
+
+    add_fwd(&mut graphs, EVAL_BATCH);
+    add_comp(&mut graphs, "veraplus", 1, EVAL_BATCH);
+    add_train_comp(&mut graphs, "veraplus", 1);
+
+    // train_backbone.
+    {
+        let grad_specs: Vec<TensorSpec> = cfg
+            .train_weights()
+            .iter()
+            .filter(|w| w.grad)
+            .map(|w| f32s(&format!("m:{}", w.name), &w.shape))
+            .collect();
+        let mut inputs = train.clone();
+        inputs.extend(grad_specs.clone());
+        inputs.push(cfg.batch_input(TRAIN_BATCH));
+        inputs.push(i32s("y", &[TRAIN_BATCH]));
+        inputs.push(f32s("lr", &[]));
+        let mut outputs = train.clone();
+        outputs.extend(grad_specs);
+        outputs.push(f32s("loss", &[]));
+        let (k, g) =
+            graph("train_backbone".to_string(), inputs, outputs);
+        graphs.insert(k, g);
+    }
+    // train_fwd.
+    {
+        let mut inputs = train.clone();
+        inputs.push(cfg.batch_input(EVAL_BATCH));
+        let (k, g) = graph(
+            format!("train_fwd_b{EVAL_BATCH}"),
+            inputs,
+            vec![f32s("logits", &[EVAL_BATCH, classes])],
+        );
+        graphs.insert(k, g);
+    }
+
+    if model == "resnet20_easy" || model == "resnet20_hard" {
+        for r in [2usize, 4, 6, 8] {
+            add_comp(&mut graphs, "veraplus", r, EVAL_BATCH);
+            add_train_comp(&mut graphs, "veraplus", r);
+        }
+        for method in ["vera", "lora"] {
+            for r in [1usize, 6] {
+                add_comp(&mut graphs, method, r, EVAL_BATCH);
+                add_train_comp(&mut graphs, method, r);
+            }
+        }
+    }
+    if model == "resnet20_easy" {
+        // BN-calibration baseline: train-form inputs, logits + per-conv
+        // batch statistics.
+        let mut inputs = train.clone();
+        inputs.push(cfg.batch_input(EVAL_BATCH));
+        let mut outputs = vec![f32s("logits", &[EVAL_BATCH, classes])];
+        for l in cfg.layers().iter().filter(|l| l.kind == "conv") {
+            outputs.push(f32s(&format!("{}.mean", l.name), &[l.cout]));
+            outputs.push(f32s(&format!("{}.var", l.name), &[l.cout]));
+        }
+        let (k, g) =
+            graph(format!("bn_fwd_b{EVAL_BATCH}"), inputs, outputs);
+        graphs.insert(k, g);
+        for b in [1usize, 32] {
+            add_fwd(&mut graphs, b);
+            add_comp(&mut graphs, "veraplus", 1, b);
+        }
+    }
+    graphs
+}
+
+/// Synthesize the manifest `aot.py` would write for `model`, graphs
+/// included. `None` for unknown model names.
+pub fn builtin_manifest(model: &str) -> Option<ModelManifest> {
+    let cfg = cfg_for(model)?;
+    let graphs = build_graphs(&cfg, model);
+    let (kind, w_bits, a_bits, input_dim, vocab, heads) = match &cfg {
+        Cfg::Resnet(c) => ("resnet", 4, 4, c.image, 0, 0),
+        Cfg::Bert(c) => ("bert", 4, 8, c.seq, c.vocab, c.heads),
+    };
+    Some(ModelManifest {
+        model: model.to_string(),
+        kind: kind.to_string(),
+        classes: cfg.classes(),
+        w_bits,
+        a_bits,
+        input_dim,
+        vocab,
+        heads,
+        d_in_max: cfg.d_in_max(),
+        d_out_max: cfg.d_out_max(),
+        layers: cfg.layers(),
+        deploy_weights: cfg.deploy_weights(),
+        train_weights: cfg.train_weights(),
+        graphs,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_builtin_model_synthesizes() {
+        for m in BUILTIN_MODELS {
+            let man = builtin_manifest(m).unwrap();
+            assert_eq!(man.model, m);
+            assert!(man.graphs.contains_key("fwd_b256"), "{m}");
+            assert!(man.graphs.contains_key("train_backbone"), "{m}");
+            assert!(man.graphs.contains_key("train_fwd_b256"), "{m}");
+            assert!(
+                man.graphs.contains_key("comp_veraplus_r1_b256"),
+                "{m}"
+            );
+            assert!(
+                man.graphs.contains_key("train_veraplus_r1"),
+                "{m}"
+            );
+            assert!(man.rram_params() > 0, "{m}");
+        }
+        assert!(builtin_manifest("nope").is_none());
+    }
+
+    #[test]
+    fn resnet20_matches_paper_geometry() {
+        let man = builtin_manifest("resnet20_easy").unwrap();
+        // 6n+2 with n=3: stem + 9 blocks (2 convs each) + 2 downsamples
+        // + fc = 1 + 18 + 2 + 1 = 22 layers.
+        assert_eq!(man.layers.len(), 22);
+        assert_eq!(man.kind, "resnet");
+        assert_eq!(man.classes, 10);
+        assert_eq!(man.d_in_max, 32);
+        assert_eq!(man.d_out_max, 32);
+        assert_eq!(man.input_dim, 16);
+        // Train weights: 21 convs × 5 + fc × 2 = 107.
+        assert_eq!(man.train_weights.len(), 21 * 5 + 2);
+        assert!(man.graphs.contains_key("bn_fwd_b256"));
+        assert!(man.graphs.contains_key("fwd_b1"));
+        assert!(man.graphs.contains_key("comp_vera_r6_b256"));
+        // hard variant widens d_out_max through its 100-class fc.
+        let hard = builtin_manifest("resnet20_hard").unwrap();
+        assert_eq!(hard.d_out_max, 100);
+        assert!(!hard.graphs.contains_key("bn_fwd_b256"));
+    }
+
+    #[test]
+    fn bert_tiny_matches_python_contract() {
+        let man = builtin_manifest("bert_tiny_qqp").unwrap();
+        assert_eq!(man.kind, "bert");
+        assert_eq!(man.heads, 2);
+        assert_eq!(man.vocab, 512);
+        assert_eq!(man.input_dim, 32);
+        // 2 layers × 6 linears + cls.
+        assert_eq!(man.layers.len(), 13);
+        assert_eq!(man.layers[0].name, "l0.wq");
+        assert_eq!(man.layers[4].name, "l0.ff1");
+        assert_eq!(man.layers[4].cout, 256);
+        assert_eq!(man.layers[12].name, "cls");
+        // Deploy weight order: embeddings first, LN params after the
+        // linears, ln_f last.
+        assert_eq!(man.deploy_weights[0].name, "tok_emb");
+        assert_eq!(man.deploy_weights[1].name, "pos_emb");
+        assert_eq!(
+            man.deploy_weights.last().unwrap().name,
+            "ln_f.beta"
+        );
+        // Every train weight carries a gradient (no BN running stats).
+        assert!(man.train_weights.iter().all(|w| w.grad));
+        // d_out_max = d_ff = 256.
+        assert_eq!(man.d_out_max, 256);
+        // x input of the forward graph is i32 [256, 32].
+        let fwd = man.graphs.get("fwd_b256").unwrap();
+        let x = fwd.inputs.last().unwrap();
+        assert_eq!(x.name, "x");
+        assert_eq!(x.shape, vec![256, 32]);
+        assert_eq!(x.dtype, crate::util::tensor::DType::I32);
+        // train_backbone declares a momentum input per train weight.
+        let tb = man.graphs.get("train_backbone").unwrap();
+        let m_count = tb
+            .inputs
+            .iter()
+            .filter(|s| s.name.starts_with("m:"))
+            .count();
+        assert_eq!(m_count, man.train_weights.len());
+        assert_eq!(tb.outputs.last().unwrap().name, "loss");
+    }
+}

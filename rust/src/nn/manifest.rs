@@ -5,7 +5,7 @@
 
 use crate::util::json::Json;
 use crate::util::tensor::DType;
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
@@ -104,11 +104,15 @@ impl GraphSig {
     }
 }
 
+/// Model kinds the toolchain understands (plus `"kernel"` for the
+/// graphs-only kernel manifest).
+pub const KNOWN_KINDS: [&str; 4] = ["mlp", "resnet", "bert", "kernel"];
+
 /// Full model manifest.
 #[derive(Debug, Clone)]
 pub struct ModelManifest {
     pub model: String,
-    pub kind: String, // "resnet" | "bert"
+    pub kind: String, // "mlp" | "resnet" | "bert" | "kernel"
     pub classes: usize,
     pub w_bits: usize,
     pub a_bits: usize,
@@ -116,6 +120,8 @@ pub struct ModelManifest {
     pub input_dim: usize,
     /// BERT vocabulary (0 for CNNs).
     pub vocab: usize,
+    /// BERT attention heads (0 for CNNs/MLPs).
+    pub heads: usize,
     pub d_in_max: usize,
     pub d_out_max: usize,
     pub layers: Vec<LayerGeom>,
@@ -136,12 +142,33 @@ impl ModelManifest {
 
     pub fn from_json(j: &Json, artifact_dir: &Path) -> Result<ModelManifest> {
         // Kernel-only manifests (kernels.manifest.json) carry just a
-        // graphs table; give everything else permissive defaults.
-        let kind = j
-            .get("kind")
-            .and_then(|v| v.as_str())
-            .unwrap_or("kernel")
-            .to_string();
+        // graphs table and default to kind "kernel". A *full-model*
+        // manifest (one that names a model or lists layers) must carry
+        // a known kind: silently defaulting used to surface much later
+        // as a baffling unsupported-graph error deep in the registry.
+        let kind = match j.get("kind").and_then(|v| v.as_str()) {
+            Some(k) if KNOWN_KINDS.contains(&k) => k.to_string(),
+            Some(k) => bail!(
+                "manifest for model '{}': unknown kind '{k}' \
+                 (expected one of {KNOWN_KINDS:?})",
+                j.get("model")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("<unnamed>"),
+            ),
+            None if j.get("model").is_some()
+                || j.get("layers").is_some() =>
+            {
+                bail!(
+                    "manifest for model '{}' is missing its 'kind' \
+                     field (expected one of {KNOWN_KINDS:?}); \
+                     graphs-only kernel manifests may omit it",
+                    j.get("model")
+                        .and_then(|v| v.as_str())
+                        .unwrap_or("<unnamed>"),
+                )
+            }
+            None => "kernel".to_string(),
+        };
         let layers = j
             .get("layers")
             .and_then(|v| v.as_arr())
@@ -207,6 +234,22 @@ impl ModelManifest {
         let opt_usize = |key: &str| -> usize {
             j.get(key).and_then(|v| v.as_usize()).unwrap_or(0)
         };
+        // Full-model manifests must carry sane quantization widths:
+        // a defaulted 0 would reach `2^(bits-1) - 1` arithmetic deep in
+        // the programming / fake-quant paths instead of erroring here.
+        if kind != "kernel"
+            && (opt_usize("w_bits") < 2 || opt_usize("a_bits") < 2)
+        {
+            bail!(
+                "manifest for model '{}' (kind {kind}): w_bits={} / \
+                 a_bits={} must both be >= 2",
+                j.get("model")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("<unnamed>"),
+                opt_usize("w_bits"),
+                opt_usize("a_bits"),
+            );
+        }
         Ok(ModelManifest {
             model: j
                 .get("model")
@@ -223,6 +266,7 @@ impl ModelManifest {
                 opt_usize("seq")
             },
             vocab: opt_usize("vocab"),
+            heads: opt_usize("heads"),
             d_in_max: opt_usize("d_in_max"),
             d_out_max: opt_usize("d_out_max"),
             layers,
@@ -230,6 +274,21 @@ impl ModelManifest {
             train_weights,
             graphs,
         })
+    }
+
+    /// Batches with a lowered graph of the given key prefix (e.g.
+    /// `"fwd_b"`, `"comp_veraplus_r1_b"`), ascending. The single
+    /// scan behind eval/serve/trainer graph-batch resolution, so the
+    /// `_b{N}` naming contract is decoded in one place.
+    pub fn lowered_batches(&self, prefix: &str) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .graphs
+            .keys()
+            .filter_map(|k| k.strip_prefix(prefix)?.parse().ok())
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
     }
 
     pub fn graph(&self, key: &str) -> Result<&GraphSig> {

@@ -1,6 +1,9 @@
-//! Model-side metadata: manifests (the aot.py contract) and host-side
-//! parameter initialization for backbone + compensation training.
+//! Model-side metadata: manifests (the aot.py contract), built-in
+//! model configurations (the artifact-free mirror of
+//! `python/compile/model.py`) and host-side parameter initialization
+//! for backbone + compensation training.
 
+pub mod configs;
 pub mod init;
 pub mod manifest;
 

@@ -7,9 +7,10 @@
 //!
 //! - [`NativeBackend`] — the default: an in-process interpreter over
 //!   the manifest's layer inventory with cache-blocked parallel GEMM
-//!   kernels ([`native`]). No PJRT, no HLO files; forward /
-//!   compensated-forward graphs for `mlp` and `resnet` manifests plus
-//!   the mlp compensation train step.
+//!   kernels ([`native`]). No PJRT, no HLO files; forward,
+//!   compensated forward, compensation training and backbone QAT for
+//!   `mlp`, `resnet` and `bert` manifests (plus the resnet `bn_fwd`
+//!   BN-calibration forward) — see the support matrix in [`native`].
 //! - [`PjrtBackend`] — the full-fidelity path when real artifacts and
 //!   xla bindings exist: `PjRtClient::cpu()` →
 //!   `HloModuleProto::from_text_file` → `client.compile` → `execute`

@@ -1,0 +1,716 @@
+//! Native BERT-analog interpreter: forward, compensated forward,
+//! compensation training and backbone QAT for `kind == "bert"`
+//! manifests, reconstructed from the `l{i}.{wq,wk,wv,wo,ff1,ff2}` /
+//! `cls` layer-naming contract shared with `python/compile/bert.py`.
+//!
+//! Topology per encoder layer (pre-LN):
+//!
+//! ```text
+//! h  = tok_emb[tokens] + pos_emb
+//! h += wo(attn(ln1(h)))          attn = softmax(QKᵀ/√d_h)·V per head
+//! h += ff2(gelu(ff1(ln2(h))))
+//! logits = cls(mean_t(ln_f(h)))
+//! ```
+//!
+//! Every linear consumes per-sample abs-max quantized activations
+//! (`quant.act_quant` over all non-batch axes) and carries an optional
+//! VeRA+ branch on its quantized rows; the production forward routes
+//! the branch through the fused GEMM epilogue exactly like the
+//! mlp/resnet paths ([`super::model::layer_rows`]), so the corrected
+//! weight matrix is never materialized. The RRAM-mapped tensors are the
+//! linear `.w` matrices only — embeddings, LayerNorm parameters and
+//! biases are digital, mirroring the `rram::mapping`
+//! train-form == deploy-form contract for BERT analogs.
+//!
+//! Training support:
+//! - [`comp_train_step`] — Alg. 1 inner loop on the frozen (drifted)
+//!   backbone: hand-derived VJPs through attention / LayerNorm / GELU
+//!   collect `(d, b)` gradients, then the shared clip + momentum
+//!   epilogue ([`super::model::comp_sgd_update`]).
+//! - [`backbone_grads`] — QAT backbone gradients (weights fake-quant
+//!   W4, straight-through): gradients for every train weight including
+//!   embeddings and LayerNorm parameters, consumed by the
+//!   `train_backbone` graph ([`super::train`]).
+//!
+//! Determinism: all GEMMs and the attention fan-out have fixed
+//! per-element accumulation order, so logits and losses are
+//! bit-identical across `VERA_THREADS` values.
+
+use super::gemm;
+use super::model::{
+    act_quant, add_into, ce_loss_grad, comp_bwd_su, comp_fwd_su,
+    comp_sgd_update, layer_rows, req_f32, resolve_w, BertMeta,
+    CompInputs, FwdOpts, Named, Topo, TrainStep, WeightOverrides,
+};
+use super::ops;
+use crate::util::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+/// `pooled[b] = mean_t h[b, t]` (`[n, d]`).
+fn mean_pool(h: &[f32], n: usize, t: usize, d: usize) -> Vec<f32> {
+    let mut pooled = vec![0f32; n * d];
+    for b in 0..n {
+        for ti in 0..t {
+            let src = &h[(b * t + ti) * d..][..d];
+            let dst = &mut pooled[b * d..][..d];
+            for j in 0..d {
+                dst[j] += src[j];
+            }
+        }
+    }
+    let inv = 1.0 / t as f32;
+    for v in pooled.iter_mut() {
+        *v *= inv;
+    }
+    pooled
+}
+
+/// Parse and validate the token input: i32 `[n, seq]`.
+fn token_batch<'a>(
+    meta: &BertMeta,
+    x: &'a Tensor,
+) -> Result<(&'a [i32], usize)> {
+    if x.shape.len() != 2 || x.shape[1] != meta.seq {
+        bail!(
+            "bert input must be i32 [n, {}], got shape {:?}",
+            meta.seq,
+            x.shape
+        );
+    }
+    Ok((x.as_i32(), x.shape[0]))
+}
+
+/// Fetch one LayerNorm parameter pair.
+fn ln_params<'a>(
+    named: &Named<'a>,
+    prefix: &str,
+    d: usize,
+) -> Result<(&'a [f32], &'a [f32])> {
+    Ok((
+        req_f32(named, &format!("{prefix}.gamma"), d)?,
+        req_f32(named, &format!("{prefix}.beta"), d)?,
+    ))
+}
+
+/// Production forward pass → logits `[n, classes]`. Routes every
+/// linear through [`layer_rows`], so `opts.fused` selects the fused
+/// VeRA+/bias GEMM epilogue (production) or the unfused reference ops
+/// (oracle baseline), exactly like the mlp/resnet topologies.
+pub(crate) fn forward(
+    topo: &Topo,
+    meta: &BertMeta,
+    named: &Named,
+    x: &Tensor,
+    comp: Option<&CompInputs>,
+    opts: FwdOpts,
+) -> Result<Vec<f32>> {
+    let (tokens, n) = token_batch(meta, x)?;
+    let (t, d) = (meta.seq, meta.d_model);
+    let rows = n * t;
+    let tok_emb = req_f32(named, "tok_emb", meta.vocab * d)?;
+    let pos_emb = req_f32(named, "pos_emb", t * d)?;
+    let mut h = ops::embedding_forward(
+        tokens, tok_emb, pos_emb, n, t, d, meta.vocab,
+    )?;
+    for i in 0..meta.layers_n {
+        // Attention half: h += wo(attn(ln1(h))).
+        let (g1, b1) = ln_params(named, &format!("l{i}.ln1"), d)?;
+        let (hn, _) = ops::layernorm_forward(&h, g1, b1, d);
+        let xq = act_quant(&hn, n, topo.a_bits);
+        let q = layer_rows(
+            topo, meta.lin(i, 0), named, &xq, None, rows, d, comp,
+            false, opts,
+        )?;
+        let k = layer_rows(
+            topo, meta.lin(i, 1), named, &xq, None, rows, d, comp,
+            false, opts,
+        )?;
+        let v = layer_rows(
+            topo, meta.lin(i, 2), named, &xq, None, rows, d, comp,
+            false, opts,
+        )?;
+        let ctx = ops::attention_forward(
+            &q, &k, &v, n, t, meta.heads, d, opts.threads, None,
+        );
+        let cq = act_quant(&ctx, n, topo.a_bits);
+        let attn = layer_rows(
+            topo, meta.lin(i, 3), named, &cq, None, rows, d, comp,
+            false, opts,
+        )?;
+        add_into(&mut h, &attn);
+        // FFN half: h += ff2(gelu(ff1(ln2(h)))).
+        let (g2, b2) = ln_params(named, &format!("l{i}.ln2"), d)?;
+        let (hn2, _) = ops::layernorm_forward(&h, g2, b2, d);
+        let xq2 = act_quant(&hn2, n, topo.a_bits);
+        let mut ff = layer_rows(
+            topo, meta.lin(i, 4), named, &xq2, None, rows, d, comp,
+            false, opts,
+        )?;
+        for v in ff.iter_mut() {
+            *v = ops::gelu(*v);
+        }
+        let fq = act_quant(&ff, n, topo.a_bits);
+        let ff2 = layer_rows(
+            topo, meta.lin(i, 5), named, &fq, None, rows, meta.d_ff,
+            comp, false, opts,
+        )?;
+        add_into(&mut h, &ff2);
+    }
+    let (gf, bf) = ln_params(named, "ln_f", d)?;
+    let (hf, _) = ops::layernorm_forward(&h, gf, bf, d);
+    let pooled = mean_pool(&hf, n, t, d);
+    let pq = act_quant(&pooled, n, topo.a_bits);
+    let logits = layer_rows(
+        topo,
+        meta.cls(),
+        named,
+        &pq,
+        None,
+        n,
+        d,
+        comp,
+        false,
+        opts,
+    )?;
+    if logits.len() != n * topo.classes {
+        bail!(
+            "bert logits: got {} values, expected {}x{}",
+            logits.len(),
+            n,
+            topo.classes
+        );
+    }
+    Ok(logits)
+}
+
+// ---------------------------------------------------------------------
+// Training: cached forward + hand-derived backward.
+// ---------------------------------------------------------------------
+
+/// Per-linear train cache: the quantized input rows (shared across
+/// the q/k/v projections, which consume the same rows) plus the comp
+/// intermediates when the branch is active.
+struct LinCache {
+    xq: Rc<Vec<f32>>,
+    /// Shared projection `s = x_q A_Rᵀ` `[rows, r]`.
+    s: Option<Vec<f32>>,
+    /// Comp pre-`b` output `u = (s⊙d) B_Rᵀ` `[rows, cout]`.
+    u: Option<Vec<f32>>,
+}
+
+/// One encoder layer's forward cache.
+struct LayerCacheB {
+    ln1_in: Vec<f32>,
+    ln1: ops::LnCache,
+    ln2_in: Vec<f32>,
+    ln2: ops::LnCache,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// Post-softmax attention probabilities `[heads, t, t]` per sample.
+    probs: Vec<f32>,
+    /// Pre-GELU ff1 output `[rows, d_ff]`.
+    ff_pre: Vec<f32>,
+    /// wq, wk, wv, wo, ff1, ff2.
+    lin: Vec<LinCache>,
+}
+
+/// Whole-model forward cache for the backward pass.
+struct BertCache {
+    layers: Vec<LayerCacheB>,
+    ln_f_in: Vec<f32>,
+    ln_f: ops::LnCache,
+    cls_in: LinCache,
+}
+
+/// Unfused linear with cache: `y = x_q W + bias (+ b ⊙ ((s⊙d) B_Rᵀ))`.
+fn linear_fwd(
+    topo: &Topo,
+    li: usize,
+    named: &Named,
+    wq: Option<&WeightOverrides>,
+    xq: Rc<Vec<f32>>,
+    rows: usize,
+    comp: Option<&CompInputs>,
+    threads: usize,
+) -> Result<(Vec<f32>, LinCache)> {
+    let layer = &topo.layers[li];
+    let (cin, cout) = (layer.cin, layer.cout);
+    debug_assert_eq!(xq.len(), rows * cin);
+    let w = resolve_w(named, wq, &format!("{}.w", layer.name),
+                      cin * cout)?;
+    let bias = req_f32(named, &format!("{}.bias", layer.name), cout)?;
+    let mut y = vec![0f32; rows * cout];
+    gemm::gemm_threads(threads, rows, cout, cin, &xq, w, &mut y);
+    let (s, u) = match comp {
+        Some(c) => {
+            let (s, u) = comp_fwd_su(
+                topo, li, c, &xq, rows, cin, cout, &mut y, threads,
+            );
+            (Some(s), Some(u))
+        }
+        None => (None, None),
+    };
+    for i in 0..rows {
+        for o in 0..cout {
+            y[i * cout + o] += bias[o];
+        }
+    }
+    Ok((y, LinCache { xq, s, u }))
+}
+
+/// Gradient accumulator for one backward pass.
+struct Sink {
+    /// `Some` ⇒ collect backbone weight gradients by train-weight name.
+    weights: Option<BTreeMap<String, Vec<f32>>>,
+    /// `Some` ⇒ collect per-layer `(d, b)` compensation gradients.
+    comp: Option<(Vec<Vec<f32>>, Vec<Vec<f32>>)>,
+}
+
+impl Sink {
+    fn new(topo: &Topo, want_weights: bool, want_comp: bool) -> Sink {
+        Sink {
+            weights: want_weights.then(BTreeMap::new),
+            comp: want_comp.then(|| {
+                (
+                    topo.layers
+                        .iter()
+                        .map(|_| vec![0f32; 0])
+                        .collect::<Vec<_>>(),
+                    topo.layers
+                        .iter()
+                        .map(|l| vec![0f32; l.cout])
+                        .collect::<Vec<_>>(),
+                )
+            }),
+        }
+    }
+
+    fn init_comp_rank(&mut self, rank: usize) {
+        if let Some((dd, _)) = self.comp.as_mut() {
+            for v in dd.iter_mut() {
+                v.resize(rank, 0.0);
+            }
+        }
+    }
+
+    fn put(&mut self, name: &str, grad: Vec<f32>) {
+        if let Some(map) = self.weights.as_mut() {
+            let prev = map.insert(name.to_string(), grad);
+            debug_assert!(prev.is_none(), "duplicate grad for {name}");
+        }
+    }
+}
+
+/// Unfused linear VJP. Returns the input-rows gradient (through the
+/// act-quant STE, i.e. directly usable as the gradient w.r.t. the
+/// unquantized input); weight/bias gradients go to `sink.weights`,
+/// `(d, b)` gradients to `sink.comp`.
+#[allow(clippy::too_many_arguments)]
+fn linear_bwd(
+    topo: &Topo,
+    li: usize,
+    named: &Named,
+    wq: Option<&WeightOverrides>,
+    g: &[f32],
+    rows: usize,
+    cache: &LinCache,
+    comp: Option<&CompInputs>,
+    sink: &mut Sink,
+    threads: usize,
+) -> Result<Vec<f32>> {
+    let layer = &topo.layers[li];
+    let (cin, cout) = (layer.cin, layer.cout);
+    debug_assert_eq!(g.len(), rows * cout);
+    let w = resolve_w(named, wq, &format!("{}.w", layer.name),
+                      cin * cout)?;
+    if sink.weights.is_some() {
+        // dW = x_qᵀ g (STE through the weight fake-quant), dbias = Σ g.
+        let mut dw = vec![0f32; cin * cout];
+        gemm::gemm_tn_threads(
+            threads, rows, cout, cin, &cache.xq, g, &mut dw,
+        );
+        let mut dbias = vec![0f32; cout];
+        for i in 0..rows {
+            for o in 0..cout {
+                dbias[o] += g[i * cout + o];
+            }
+        }
+        sink.put(&format!("{}.w", layer.name), dw);
+        sink.put(&format!("{}.bias", layer.name), dbias);
+    }
+    let mut dx = vec![0f32; rows * cin];
+    gemm::gemm_nt_threads(threads, rows, cin, cout, g, w, &mut dx);
+    if let Some(c) = comp {
+        let s = cache.s.as_ref().context("comp cache missing s")?;
+        let u = cache.u.as_ref().context("comp cache missing u")?;
+        let (dd, db) = sink
+            .comp
+            .as_mut()
+            .context("comp grads requested with an active branch")?;
+        let dxc = comp_bwd_su(
+            topo, li, c, g, rows, cin, cout, s, u, dd, db, threads,
+        );
+        add_into(&mut dx, &dxc);
+    }
+    Ok(dx)
+}
+
+/// Forward with every intermediate the backward pass needs retained.
+/// Unfused by construction (the train path); `wq` carries the QAT
+/// fake-quantized weights when backbone-training.
+fn forward_cached(
+    topo: &Topo,
+    meta: &BertMeta,
+    named: &Named,
+    wq: Option<&WeightOverrides>,
+    x: &Tensor,
+    comp: Option<&CompInputs>,
+    threads: usize,
+) -> Result<(Vec<f32>, BertCache)> {
+    let (tokens, n) = token_batch(meta, x)?;
+    let (t, d) = (meta.seq, meta.d_model);
+    let rows = n * t;
+    let tok_emb = req_f32(named, "tok_emb", meta.vocab * d)?;
+    let pos_emb = req_f32(named, "pos_emb", t * d)?;
+    let mut h = ops::embedding_forward(
+        tokens, tok_emb, pos_emb, n, t, d, meta.vocab,
+    )?;
+    let mut layers = Vec::with_capacity(meta.layers_n);
+    for i in 0..meta.layers_n {
+        let ln1_in = h.clone();
+        let (g1, b1) = ln_params(named, &format!("l{i}.ln1"), d)?;
+        let (hn, ln1) = ops::layernorm_forward(&h, g1, b1, d);
+        let xq = Rc::new(act_quant(&hn, n, topo.a_bits));
+        let (q, c_q) = linear_fwd(
+            topo, meta.lin(i, 0), named, wq, Rc::clone(&xq), rows,
+            comp, threads,
+        )?;
+        let (k, c_k) = linear_fwd(
+            topo, meta.lin(i, 1), named, wq, Rc::clone(&xq), rows,
+            comp, threads,
+        )?;
+        let (v, c_v) = linear_fwd(
+            topo, meta.lin(i, 2), named, wq, xq, rows, comp, threads,
+        )?;
+        let mut probs = Vec::new();
+        let ctx = ops::attention_forward(
+            &q,
+            &k,
+            &v,
+            n,
+            t,
+            meta.heads,
+            d,
+            threads,
+            Some(&mut probs),
+        );
+        let cq = Rc::new(act_quant(&ctx, n, topo.a_bits));
+        let (attn, c_o) = linear_fwd(
+            topo, meta.lin(i, 3), named, wq, cq, rows, comp, threads,
+        )?;
+        add_into(&mut h, &attn);
+        let ln2_in = h.clone();
+        let (g2, b2) = ln_params(named, &format!("l{i}.ln2"), d)?;
+        let (hn2, ln2) = ops::layernorm_forward(&h, g2, b2, d);
+        let xq2 = Rc::new(act_quant(&hn2, n, topo.a_bits));
+        let (ff_pre, c_f1) = linear_fwd(
+            topo, meta.lin(i, 4), named, wq, xq2, rows, comp, threads,
+        )?;
+        let gact: Vec<f32> = ff_pre.iter().map(|&v| ops::gelu(v))
+            .collect();
+        let fq = Rc::new(act_quant(&gact, n, topo.a_bits));
+        let (ff2, c_f2) = linear_fwd(
+            topo, meta.lin(i, 5), named, wq, fq, rows, comp, threads,
+        )?;
+        add_into(&mut h, &ff2);
+        layers.push(LayerCacheB {
+            ln1_in,
+            ln1,
+            ln2_in,
+            ln2,
+            q,
+            k,
+            v,
+            probs,
+            ff_pre,
+            lin: vec![c_q, c_k, c_v, c_o, c_f1, c_f2],
+        });
+    }
+    let ln_f_in = h.clone();
+    let (gf, bf) = ln_params(named, "ln_f", d)?;
+    let (hf, ln_f) = ops::layernorm_forward(&h, gf, bf, d);
+    let pooled = mean_pool(&hf, n, t, d);
+    let pq = Rc::new(act_quant(&pooled, n, topo.a_bits));
+    let (logits, cls_in) = linear_fwd(
+        topo,
+        meta.cls(),
+        named,
+        wq,
+        pq,
+        n,
+        comp,
+        threads,
+    )?;
+    Ok((
+        logits,
+        BertCache {
+            layers,
+            ln_f_in,
+            ln_f,
+            cls_in,
+        },
+    ))
+}
+
+/// Full backward pass from `dlogits`. `want_weights` collects backbone
+/// gradients (embeddings, LayerNorm γ/β, every `.w`/`.bias`); a
+/// present `comp` collects `(d, b)` gradients and routes the data-path
+/// gradient through the compensation branch either way.
+#[allow(clippy::too_many_arguments)]
+fn backward(
+    topo: &Topo,
+    meta: &BertMeta,
+    named: &Named,
+    wq: Option<&WeightOverrides>,
+    cache: &BertCache,
+    tokens: &[i32],
+    dlogits: &[f32],
+    n: usize,
+    comp: Option<&CompInputs>,
+    want_weights: bool,
+    threads: usize,
+) -> Result<Sink> {
+    let (t, d) = (meta.seq, meta.d_model);
+    let rows = n * t;
+    let mut sink = Sink::new(topo, want_weights, comp.is_some());
+    if let Some(c) = comp {
+        sink.init_comp_rank(c.rank);
+    }
+    // Classifier head (input: quantized pooled rows, STE).
+    let dpooled = linear_bwd(
+        topo,
+        meta.cls(),
+        named,
+        wq,
+        dlogits,
+        n,
+        &cache.cls_in,
+        comp,
+        &mut sink,
+        threads,
+    )?;
+    // Mean pool: dh[b, t] = dpooled[b] / t.
+    let inv_t = 1.0 / t as f32;
+    let mut dh = vec![0f32; rows * d];
+    for b in 0..n {
+        for ti in 0..t {
+            let dst = &mut dh[(b * t + ti) * d..][..d];
+            let src = &dpooled[b * d..][..d];
+            for j in 0..d {
+                dst[j] = src[j] * inv_t;
+            }
+        }
+    }
+    // Final LayerNorm.
+    let gf = req_f32(named, "ln_f.gamma", d)?;
+    let (dx, dgf, dbf) =
+        ops::layernorm_backward(&dh, &cache.ln_f_in, gf, &cache.ln_f, d);
+    sink.put("ln_f.gamma", dgf);
+    sink.put("ln_f.beta", dbf);
+    let mut dh = dx;
+    for i in (0..meta.layers_n).rev() {
+        let lc = &cache.layers[i];
+        // FFN half (reverse of h3 = h2 + ff2(gelu(ff1(ln2(h2))))):
+        // `dh` currently holds dL/dh3.
+        let dfq = linear_bwd(
+            topo,
+            meta.lin(i, 5),
+            named,
+            wq,
+            &dh,
+            rows,
+            &lc.lin[5],
+            comp,
+            &mut sink,
+            threads,
+        )?;
+        let mut dffpre = dfq;
+        for (g, &pre) in dffpre.iter_mut().zip(&lc.ff_pre) {
+            *g *= ops::gelu_grad(pre);
+        }
+        let dxq2 = linear_bwd(
+            topo,
+            meta.lin(i, 4),
+            named,
+            wq,
+            &dffpre,
+            rows,
+            &lc.lin[4],
+            comp,
+            &mut sink,
+            threads,
+        )?;
+        let g2 = req_f32(named, &format!("l{i}.ln2.gamma"), d)?;
+        let (dln2, dg2, db2) =
+            ops::layernorm_backward(&dxq2, &lc.ln2_in, g2, &lc.ln2, d);
+        sink.put(&format!("l{i}.ln2.gamma"), dg2);
+        sink.put(&format!("l{i}.ln2.beta"), db2);
+        // dh becomes dL/dh2 (residual + LN branch).
+        add_into(&mut dh, &dln2);
+        // Attention half (reverse of h2 = h1 + wo(attn(ln1(h1)))).
+        let dctx = linear_bwd(
+            topo,
+            meta.lin(i, 3),
+            named,
+            wq,
+            &dh,
+            rows,
+            &lc.lin[3],
+            comp,
+            &mut sink,
+            threads,
+        )?;
+        let (dq, dk, dv) = ops::attention_backward(
+            &dctx, &lc.q, &lc.k, &lc.v, &lc.probs, n, t, meta.heads, d,
+            threads,
+        );
+        let mut dln1_out = linear_bwd(
+            topo,
+            meta.lin(i, 0),
+            named,
+            wq,
+            &dq,
+            rows,
+            &lc.lin[0],
+            comp,
+            &mut sink,
+            threads,
+        )?;
+        let dk_in = linear_bwd(
+            topo,
+            meta.lin(i, 1),
+            named,
+            wq,
+            &dk,
+            rows,
+            &lc.lin[1],
+            comp,
+            &mut sink,
+            threads,
+        )?;
+        let dv_in = linear_bwd(
+            topo,
+            meta.lin(i, 2),
+            named,
+            wq,
+            &dv,
+            rows,
+            &lc.lin[2],
+            comp,
+            &mut sink,
+            threads,
+        )?;
+        add_into(&mut dln1_out, &dk_in);
+        add_into(&mut dln1_out, &dv_in);
+        let g1 = req_f32(named, &format!("l{i}.ln1.gamma"), d)?;
+        let (dln1, dg1, db1) = ops::layernorm_backward(
+            &dln1_out, &lc.ln1_in, g1, &lc.ln1, d,
+        );
+        sink.put(&format!("l{i}.ln1.gamma"), dg1);
+        sink.put(&format!("l{i}.ln1.beta"), db1);
+        // dh becomes dL/dh1.
+        add_into(&mut dh, &dln1);
+    }
+    if want_weights {
+        let (dtok, dpos) =
+            ops::embedding_backward(&dh, tokens, n, t, d, meta.vocab);
+        sink.put("tok_emb", dtok);
+        sink.put("pos_emb", dpos);
+    }
+    Ok(sink)
+}
+
+/// One Alg. 1 inner-loop SGD-momentum step on the VeRA+ `(d, b)`
+/// vectors with the (drifted) BERT backbone frozen — the native
+/// `train_veraplus_r{r}` graph for `bert` manifests.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn comp_train_step(
+    topo: &Topo,
+    meta: &BertMeta,
+    named: &Named,
+    rank: usize,
+    x: &Tensor,
+    labels: &[i32],
+    lr: f32,
+    threads: usize,
+) -> Result<TrainStep> {
+    let comp = CompInputs::gather(topo, named, rank)?;
+    let (tokens, n) = token_batch(meta, x)?;
+    if labels.len() != n {
+        bail!("train labels: {} for batch {n}", labels.len());
+    }
+    let (logits, cache) = forward_cached(
+        topo,
+        meta,
+        named,
+        None,
+        x,
+        Some(&comp),
+        threads,
+    )?;
+    let (loss, dlogits) = ce_loss_grad(&logits, labels, n, topo.classes);
+    let sink = backward(
+        topo,
+        meta,
+        named,
+        None,
+        &cache,
+        tokens,
+        &dlogits,
+        n,
+        Some(&comp),
+        false,
+        threads,
+    )?;
+    let (dd, db) = sink.comp.expect("comp grads requested");
+    comp_sgd_update(topo, &comp, &dd, &db, named, lr, loss)
+}
+
+/// QAT backbone loss + gradients for every train weight (embeddings,
+/// LayerNorm parameters, linear weights/biases): the heavy half of the
+/// native `train_backbone` graph ([`super::train`] owns the SGD
+/// bookkeeping). `wq` must carry the fake-quantized `.w` tensors.
+pub(crate) fn backbone_grads(
+    topo: &Topo,
+    meta: &BertMeta,
+    named: &Named,
+    wq: &WeightOverrides,
+    x: &Tensor,
+    labels: &[i32],
+    threads: usize,
+) -> Result<(f32, BTreeMap<String, Vec<f32>>)> {
+    let (tokens, n) = token_batch(meta, x)?;
+    if labels.len() != n {
+        bail!("train labels: {} for batch {n}", labels.len());
+    }
+    let (logits, cache) =
+        forward_cached(topo, meta, named, Some(wq), x, None, threads)?;
+    let (loss, dlogits) = ce_loss_grad(&logits, labels, n, topo.classes);
+    let sink = backward(
+        topo,
+        meta,
+        named,
+        Some(wq),
+        &cache,
+        tokens,
+        &dlogits,
+        n,
+        None,
+        true,
+        threads,
+    )?;
+    Ok((loss, sink.weights.expect("weight grads requested")))
+}

@@ -1,0 +1,1087 @@
+//! ResNet training paths for the native backend.
+//!
+//! Two parameterizations, mirroring `python/compile/resnet.py`:
+//!
+//! - **train form** (`forward_train`, [`backbone_grads`]) — conv
+//!   weights + BatchNorm(γ, β, running µ/σ²), QAT fake-quantized
+//!   weights, BN on *batch* statistics during training (running-stat
+//!   EMA emitted as non-grad outputs), on running statistics for
+//!   `train_fwd_b{N}` evaluation, and the unfolded
+//!   `bn_fwd_b{N}` BN-calibration baseline (no QAT, batch statistics
+//!   collected as extra outputs).
+//! - **deploy form** ([`comp_train_step`]) — folded (w, bias) with the
+//!   VeRA+ branch, used by the Alg. 1 inner-loop compensation train
+//!   step on the frozen (drifted) backbone.
+//!
+//! Backward passes are hand-derived VJPs: conv via im2col/col2im
+//! adjoints, batch-statistic BatchNorm, ReLU masks from the cached
+//! pre-activation values, global average pooling, and the act-quant /
+//! weight-quant straight-through estimators (identity). All reductions
+//! run in a fixed order and all GEMMs are the thread-invariant kernels
+//! from [`super::gemm`], so losses and gradients are bit-identical
+//! across `VERA_THREADS` values.
+
+use super::gemm;
+use super::model::{
+    act_quant, add_into, ce_loss_grad, col2im, comp_bwd_su, comp_fwd_su,
+    comp_sgd_update, im2col, req_f32, resolve_w, subsample_rows, Block,
+    CompInputs, Named, Topo, TrainStep, WeightOverrides,
+};
+use crate::rram::mapping::BN_EPS;
+use crate::util::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// Spatial geometry of one conv invocation.
+#[derive(Debug, Clone, Copy)]
+struct ConvGeom {
+    hs: usize,
+    ws: usize,
+    ho: usize,
+    wo: usize,
+}
+
+/// Validate the NHWC input tensor and return `(data, n, h, w, c)`.
+fn image_batch<'a>(
+    x: &'a Tensor,
+) -> Result<(&'a [f32], usize, usize, usize, usize)> {
+    if x.shape.len() != 4 {
+        bail!("resnet input must be NHWC, got {:?}", x.shape);
+    }
+    Ok((
+        x.as_f32(),
+        x.shape[0],
+        x.shape[1],
+        x.shape[2],
+        x.shape[3],
+    ))
+}
+
+/// Global average pool `[n, h·w, c] → [n, c]`.
+fn global_pool(
+    h: &[f32],
+    n: usize,
+    spatial: usize,
+    chans: usize,
+) -> Vec<f32> {
+    let mut pooled = vec![0f32; n * chans];
+    for ni in 0..n {
+        for p in 0..spatial {
+            let src = &h[(ni * spatial + p) * chans..][..chans];
+            let dst = &mut pooled[ni * chans..][..chans];
+            for c in 0..chans {
+                dst[c] += src[c];
+            }
+        }
+    }
+    let inv = 1.0 / spatial as f32;
+    for v in pooled.iter_mut() {
+        *v *= inv;
+    }
+    pooled
+}
+
+/// Adjoint of [`global_pool`].
+fn global_pool_grad(
+    dpooled: &[f32],
+    n: usize,
+    spatial: usize,
+    chans: usize,
+) -> Vec<f32> {
+    let inv = 1.0 / spatial as f32;
+    let mut dh = vec![0f32; n * spatial * chans];
+    for ni in 0..n {
+        for p in 0..spatial {
+            let dst = &mut dh[(ni * spatial + p) * chans..][..chans];
+            let src = &dpooled[ni * chans..][..chans];
+            for c in 0..chans {
+                dst[c] = src[c] * inv;
+            }
+        }
+    }
+    dh
+}
+
+/// Conv weight/input gradients from the output-rows gradient:
+/// `dW = patchesᵀ g` (recomputed im2col), `dx = col2im(g Wᵀ)`.
+#[allow(clippy::too_many_arguments)]
+fn conv_bwd(
+    topo: &Topo,
+    li: usize,
+    named: &Named,
+    wq: Option<&WeightOverrides>,
+    g: &[f32],
+    xq: &[f32],
+    geom: ConvGeom,
+    n: usize,
+    want_dw: bool,
+    threads: usize,
+) -> Result<(Vec<f32>, Option<Vec<f32>>)> {
+    let layer = &topo.layers[li];
+    let (cin, cout) = (layer.cin, layer.cout);
+    let kdim = layer.k * layer.k * cin;
+    let rows = n * geom.ho * geom.wo;
+    debug_assert_eq!(g.len(), rows * cout);
+    let w =
+        resolve_w(named, wq, &format!("{}.w", layer.name), kdim * cout)?;
+    let dw = if want_dw {
+        let (patches, _, _) = im2col(
+            xq, n, geom.hs, geom.ws, cin, layer.k, layer.stride,
+        );
+        let mut dw = vec![0f32; kdim * cout];
+        gemm::gemm_tn_threads(
+            threads, rows, cout, kdim, &patches, g, &mut dw,
+        );
+        Some(dw)
+    } else {
+        None
+    };
+    let mut dpatches = vec![0f32; rows * kdim];
+    gemm::gemm_nt_threads(threads, rows, kdim, cout, g, w,
+                          &mut dpatches);
+    let dx = col2im(
+        &dpatches, n, geom.hs, geom.ws, cin, layer.k, layer.stride,
+    );
+    Ok((dx, dw))
+}
+
+/// Scatter the comp branch's subsampled-rows gradient back onto the
+/// full activation grid (inverse of the 1×1-scheme stride subsample).
+fn scatter_comp_dx(
+    dx: &mut [f32],
+    dsub: &[f32],
+    n: usize,
+    hs: usize,
+    ws: usize,
+    cin: usize,
+    stride: usize,
+) {
+    if stride == 1 {
+        add_into(dx, dsub);
+        return;
+    }
+    let ho = hs.div_ceil(stride);
+    let wo = ws.div_ceil(stride);
+    for ni in 0..n {
+        for (oi, ih) in (0..hs).step_by(stride).enumerate() {
+            for (oj, iw) in (0..ws).step_by(stride).enumerate() {
+                let src =
+                    &dsub[((ni * ho + oi) * wo + oj) * cin..][..cin];
+                let dst = &mut dx[((ni * hs + ih) * ws + iw) * cin..]
+                    [..cin];
+                for c in 0..cin {
+                    dst[c] += src[c];
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Deploy form (folded w + bias): cached forward + comp train step.
+// ---------------------------------------------------------------------
+
+/// Per-layer deploy-form cache.
+struct DLayerCache {
+    /// Quantized input, full grid `[n, hs, ws, cin]` (fc: `[n, cin]`).
+    xq: Vec<f32>,
+    /// Pre-activation output rows `[rows, cout]` (bias + comp added).
+    y: Vec<f32>,
+    /// Comp shared projection / pre-`b` output on the branch rows.
+    s: Option<Vec<f32>>,
+    u: Option<Vec<f32>>,
+    geom: ConvGeom,
+}
+
+/// One deploy-form conv with caches retained (unfused train path).
+#[allow(clippy::too_many_arguments)]
+fn conv_fwd_cached(
+    topo: &Topo,
+    li: usize,
+    named: &Named,
+    input: &[f32],
+    n: usize,
+    hs: usize,
+    ws: usize,
+    cin: usize,
+    comp: Option<&CompInputs>,
+    threads: usize,
+) -> Result<(Vec<f32>, DLayerCache)> {
+    let layer = &topo.layers[li];
+    if layer.cin != cin || layer.kind != "conv" {
+        bail!(
+            "resnet layer {}: geometry mismatch (cin {} vs {cin})",
+            layer.name,
+            layer.cin
+        );
+    }
+    let cout = layer.cout;
+    let xq = act_quant(input, n, topo.a_bits);
+    let (patches, ho, wo) =
+        im2col(&xq, n, hs, ws, cin, layer.k, layer.stride);
+    let rows = n * ho * wo;
+    let kdim = layer.k * layer.k * cin;
+    let w = req_f32(named, &format!("{}.w", layer.name), kdim * cout)?;
+    let bias = req_f32(named, &format!("{}.bias", layer.name), cout)?;
+    let mut y = vec![0f32; rows * cout];
+    gemm::gemm_threads(threads, rows, cout, kdim, &patches, w, &mut y);
+    let (s, u) = match comp {
+        Some(c) => {
+            // 1x1 scheme: a strided conv corrects the subsampled rows.
+            let sub;
+            let crows: &[f32] = if layer.stride > 1 {
+                sub = subsample_rows(&xq, n, hs, ws, cin, layer.stride);
+                &sub
+            } else {
+                &xq
+            };
+            let (s, u) = comp_fwd_su(
+                topo, li, c, crows, rows, cin, cout, &mut y, threads,
+            );
+            (Some(s), Some(u))
+        }
+        None => (None, None),
+    };
+    for i in 0..rows {
+        for o in 0..cout {
+            y[i * cout + o] += bias[o];
+        }
+    }
+    let cache = DLayerCache {
+        xq,
+        y: y.clone(),
+        s,
+        u,
+        geom: ConvGeom { hs, ws, ho, wo },
+    };
+    Ok((y, cache))
+}
+
+/// Deploy-form forward with caches; returns logits and the per-layer /
+/// per-block caches the comp backward needs.
+struct DeployCache {
+    layers: Vec<Option<DLayerCache>>,
+    /// Per block: pre-ReLU residual sum `y2 + shortcut`.
+    block_z: Vec<Vec<f32>>,
+    /// Final feature-map spatial extent (`ho·wo`) and channel count.
+    spatial: usize,
+    chans: usize,
+}
+
+fn deploy_forward_cached(
+    topo: &Topo,
+    blocks: &[Block],
+    named: &Named,
+    x: &Tensor,
+    comp: &CompInputs,
+    threads: usize,
+) -> Result<(Vec<f32>, DeployCache)> {
+    let (xdata, n, mut hs, mut ws, mut chans) = image_batch(x)?;
+    let mut layers: Vec<Option<DLayerCache>> =
+        topo.layers.iter().map(|_| None).collect();
+    let mut block_z = Vec::with_capacity(blocks.len());
+
+    // Stem.
+    let (y0, c0) = conv_fwd_cached(
+        topo,
+        0,
+        named,
+        xdata,
+        n,
+        hs,
+        ws,
+        chans,
+        Some(comp),
+        threads,
+    )?;
+    hs = c0.geom.ho;
+    ws = c0.geom.wo;
+    chans = topo.layers[0].cout;
+    let mut h: Vec<f32> = y0.iter().map(|&v| v.max(0.0)).collect();
+    layers[0] = Some(c0);
+
+    for block in blocks {
+        let (y1, c1) = conv_fwd_cached(
+            topo,
+            block.conv1,
+            named,
+            &h,
+            n,
+            hs,
+            ws,
+            chans,
+            Some(comp),
+            threads,
+        )?;
+        let (h1, w1) = (c1.geom.ho, c1.geom.wo);
+        let cmid = topo.layers[block.conv1].cout;
+        let h1act: Vec<f32> = y1.iter().map(|&v| v.max(0.0)).collect();
+        let (y2, c2) = conv_fwd_cached(
+            topo,
+            block.conv2,
+            named,
+            &h1act,
+            n,
+            h1,
+            w1,
+            cmid,
+            Some(comp),
+            threads,
+        )?;
+        let cend = topo.layers[block.conv2].cout;
+        let sc: Vec<f32> = match block.down {
+            Some(di) => {
+                let (yd, cd) = conv_fwd_cached(
+                    topo,
+                    di,
+                    named,
+                    &h,
+                    n,
+                    hs,
+                    ws,
+                    chans,
+                    Some(comp),
+                    threads,
+                )?;
+                layers[di] = Some(cd);
+                yd
+            }
+            None => h.clone(),
+        };
+        if sc.len() != y2.len() {
+            bail!("resnet block: shortcut/output size mismatch");
+        }
+        let mut z = y2;
+        add_into(&mut z, &sc);
+        h = z.iter().map(|&v| v.max(0.0)).collect();
+        block_z.push(z);
+        layers[block.conv1] = Some(c1);
+        layers[block.conv2] = Some(c2);
+        hs = h1;
+        ws = w1;
+        chans = cend;
+    }
+
+    // Pool + fc.
+    let spatial = hs * ws;
+    let pooled = global_pool(&h, n, spatial, chans);
+    let fc = topo.layers.len() - 1;
+    let layer = &topo.layers[fc];
+    if layer.kind != "linear" || layer.cin != chans {
+        bail!("resnet fc geometry mismatch");
+    }
+    let xq = act_quant(&pooled, n, topo.a_bits);
+    let w = req_f32(named, &format!("{}.w", layer.name),
+                    chans * layer.cout)?;
+    let bias = req_f32(named, &format!("{}.bias", layer.name),
+                       layer.cout)?;
+    let cout = layer.cout;
+    let mut logits = vec![0f32; n * cout];
+    gemm::gemm_threads(threads, n, cout, chans, &xq, w, &mut logits);
+    let (s, u) = comp_fwd_su(
+        topo, fc, comp, &xq, n, chans, cout, &mut logits, threads,
+    );
+    for i in 0..n {
+        for o in 0..cout {
+            logits[i * cout + o] += bias[o];
+        }
+    }
+    layers[fc] = Some(DLayerCache {
+        xq,
+        y: logits.clone(),
+        s: Some(s),
+        u: Some(u),
+        geom: ConvGeom {
+            hs: 1,
+            ws: 1,
+            ho: 1,
+            wo: 1,
+        },
+    });
+    Ok((
+        logits,
+        DeployCache {
+            layers,
+            block_z,
+            spatial: hs * ws,
+            chans,
+        },
+    ))
+}
+
+/// One deploy-form conv backward including the comp branch: returns
+/// the gradient w.r.t. the layer's (unquantized, STE) input grid.
+#[allow(clippy::too_many_arguments)]
+fn deploy_conv_bwd(
+    topo: &Topo,
+    li: usize,
+    named: &Named,
+    g: &[f32],
+    cache: &DLayerCache,
+    n: usize,
+    comp: &CompInputs,
+    dd: &mut [Vec<f32>],
+    db: &mut [Vec<f32>],
+    threads: usize,
+) -> Result<Vec<f32>> {
+    let layer = &topo.layers[li];
+    let rows = n * cache.geom.ho * cache.geom.wo;
+    let (mut dx, _) = conv_bwd(
+        topo, li, named, None, g, &cache.xq, cache.geom, n, false,
+        threads,
+    )?;
+    let s = cache.s.as_ref().context("comp cache missing s")?;
+    let u = cache.u.as_ref().context("comp cache missing u")?;
+    let dsub = comp_bwd_su(
+        topo, li, comp, g, rows, layer.cin, layer.cout, s, u, dd, db,
+        threads,
+    );
+    scatter_comp_dx(
+        &mut dx,
+        &dsub,
+        n,
+        cache.geom.hs,
+        cache.geom.ws,
+        layer.cin,
+        layer.stride,
+    );
+    Ok(dx)
+}
+
+/// One Alg. 1 inner-loop SGD-momentum step on the VeRA+ `(d, b)`
+/// vectors with the (drifted) folded resnet backbone frozen — the
+/// native `train_veraplus_r{r}` graph for `resnet` manifests.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn comp_train_step(
+    topo: &Topo,
+    blocks: &[Block],
+    named: &Named,
+    rank: usize,
+    x: &Tensor,
+    labels: &[i32],
+    lr: f32,
+    threads: usize,
+) -> Result<TrainStep> {
+    let comp = CompInputs::gather(topo, named, rank)?;
+    let n = *x.shape.first().context("train batch axis")?;
+    if labels.len() != n {
+        bail!("train labels: {} for batch {n}", labels.len());
+    }
+    let (logits, cache) =
+        deploy_forward_cached(topo, blocks, named, x, &comp, threads)?;
+    let (loss, dlogits) = ce_loss_grad(&logits, labels, n, topo.classes);
+
+    let n_layers = topo.layers.len();
+    let mut dd: Vec<Vec<f32>> =
+        topo.layers.iter().map(|_| vec![0f32; rank]).collect();
+    let mut db: Vec<Vec<f32>> =
+        topo.layers.iter().map(|l| vec![0f32; l.cout]).collect();
+
+    // fc backward → pooled → feature-map gradient.
+    let fc = n_layers - 1;
+    let fcache = cache.layers[fc].as_ref().expect("fc cache");
+    let layer = &topo.layers[fc];
+    let (chans, cout) = (layer.cin, layer.cout);
+    let w = req_f32(named, &format!("{}.w", layer.name),
+                    chans * cout)?;
+    let mut dpooled = vec![0f32; n * chans];
+    gemm::gemm_nt_threads(
+        threads, n, chans, cout, &dlogits, w, &mut dpooled,
+    );
+    let dsub = comp_bwd_su(
+        topo,
+        fc,
+        &comp,
+        &dlogits,
+        n,
+        chans,
+        cout,
+        fcache.s.as_ref().unwrap(),
+        fcache.u.as_ref().unwrap(),
+        &mut dd,
+        &mut db,
+        threads,
+    );
+    add_into(&mut dpooled, &dsub);
+    let mut dh =
+        global_pool_grad(&dpooled, n, cache.spatial, cache.chans);
+
+    // Blocks in reverse.
+    for (bi, block) in blocks.iter().enumerate().rev() {
+        let z = &cache.block_z[bi];
+        debug_assert_eq!(dh.len(), z.len());
+        let dpre: Vec<f32> = dh
+            .iter()
+            .zip(z)
+            .map(|(&g, &zv)| if zv > 0.0 { g } else { 0.0 })
+            .collect();
+        // conv2 chain.
+        let c2 = cache.layers[block.conv2].as_ref().expect("conv2");
+        let dh1q = deploy_conv_bwd(
+            topo, block.conv2, named, &dpre, c2, n, &comp, &mut dd,
+            &mut db, threads,
+        )?;
+        let c1 = cache.layers[block.conv1].as_ref().expect("conv1");
+        // ReLU between conv1 and conv2 (mask from conv1's pre-act y).
+        let dy1: Vec<f32> = dh1q
+            .iter()
+            .zip(&c1.y)
+            .map(|(&g, &yv)| if yv > 0.0 { g } else { 0.0 })
+            .collect();
+        let mut din = deploy_conv_bwd(
+            topo, block.conv1, named, &dy1, c1, n, &comp, &mut dd,
+            &mut db, threads,
+        )?;
+        // Shortcut path.
+        match block.down {
+            Some(di) => {
+                let cd = cache.layers[di].as_ref().expect("down");
+                let dsc = deploy_conv_bwd(
+                    topo, di, named, &dpre, cd, n, &comp, &mut dd,
+                    &mut db, threads,
+                )?;
+                add_into(&mut din, &dsc);
+            }
+            None => add_into(&mut din, &dpre),
+        }
+        dh = din;
+    }
+
+    // Stem (ReLU mask from its pre-act output; input grad discarded).
+    let c0 = cache.layers[0].as_ref().expect("stem");
+    let dstem: Vec<f32> = dh
+        .iter()
+        .zip(&c0.y)
+        .map(|(&g, &yv)| if yv > 0.0 { g } else { 0.0 })
+        .collect();
+    let _ = deploy_conv_bwd(
+        topo, 0, named, &dstem, c0, n, &comp, &mut dd, &mut db,
+        threads,
+    )?;
+
+    comp_sgd_update(topo, &comp, &dd, &db, named, lr, loss)
+}
+
+// ---------------------------------------------------------------------
+// Train form (BN): forward (eval / bn_fwd / cached) + backbone grads.
+// ---------------------------------------------------------------------
+
+/// Per-conv train-form cache.
+struct TConvCache {
+    xq: Vec<f32>,
+    /// Pre-BN conv output rows `[rows, cout]`.
+    y_conv: Vec<f32>,
+    /// Normalization statistics actually used (batch stats while
+    /// training).
+    mu: Vec<f32>,
+    rstd: Vec<f32>,
+    geom: ConvGeom,
+}
+
+struct TrainCache {
+    layers: Vec<Option<TConvCache>>,
+    block_z: Vec<Vec<f32>>,
+    /// Quantized fc input.
+    fc_xq: Vec<f32>,
+    /// Final feature-map spatial extent (`ho·wo`).
+    spatial: usize,
+    chans: usize,
+}
+
+/// Everything a train-form forward produces besides the logits.
+pub(crate) struct TrainFwdOut {
+    pub logits: Vec<f32>,
+    /// `{name}.mu` / `{name}.var` → EMA-updated running stats
+    /// (`update_stats` mode only).
+    pub new_stats: BTreeMap<String, Vec<f32>>,
+    /// `(layer, batch mean, batch var)` per conv, in layer order
+    /// (`collect` mode only — the `bn_fwd` outputs).
+    pub collected: Vec<(String, Vec<f32>, Vec<f32>)>,
+}
+
+/// One train-form BN conv. `update_stats` selects batch statistics
+/// (+ EMA outputs); otherwise the running statistics normalize.
+#[allow(clippy::too_many_arguments)]
+fn bn_conv_fwd(
+    topo: &Topo,
+    li: usize,
+    named: &Named,
+    wq: Option<&WeightOverrides>,
+    input: &[f32],
+    n: usize,
+    hs: usize,
+    ws: usize,
+    cin: usize,
+    update_stats: bool,
+    collect: bool,
+    out: &mut TrainFwdOut,
+    caches: Option<&mut Vec<Option<TConvCache>>>,
+    threads: usize,
+) -> Result<(Vec<f32>, usize, usize)> {
+    let layer = &topo.layers[li];
+    if layer.cin != cin || layer.kind != "conv" {
+        bail!(
+            "resnet layer {}: geometry mismatch (cin {} vs {cin})",
+            layer.name,
+            layer.cin
+        );
+    }
+    let cout = layer.cout;
+    let name = &layer.name;
+    let xq = act_quant(input, n, topo.a_bits);
+    let (patches, ho, wo) =
+        im2col(&xq, n, hs, ws, cin, layer.k, layer.stride);
+    let rows = n * ho * wo;
+    let kdim = layer.k * layer.k * cin;
+    let w = resolve_w(named, wq, &format!("{name}.w"), kdim * cout)?;
+    let mut y = vec![0f32; rows * cout];
+    gemm::gemm_threads(threads, rows, cout, kdim, &patches, w, &mut y);
+    drop(patches);
+    // Batch statistics (when needed).
+    let need_batch = update_stats || collect;
+    let (mut bmu, mut bvar) = (Vec::new(), Vec::new());
+    if need_batch {
+        bmu = vec![0f32; cout];
+        bvar = vec![0f32; cout];
+        for i in 0..rows {
+            for c in 0..cout {
+                bmu[c] += y[i * cout + c];
+            }
+        }
+        for v in bmu.iter_mut() {
+            *v /= rows as f32;
+        }
+        for i in 0..rows {
+            for c in 0..cout {
+                let dv = y[i * cout + c] - bmu[c];
+                bvar[c] += dv * dv;
+            }
+        }
+        for v in bvar.iter_mut() {
+            *v /= rows as f32;
+        }
+    }
+    let (mu, var): (Vec<f32>, Vec<f32>) = if update_stats {
+        let mu_r = req_f32(named, &format!("{name}.mu"), cout)?;
+        let var_r = req_f32(named, &format!("{name}.var"), cout)?;
+        out.new_stats.insert(
+            format!("{name}.mu"),
+            mu_r.iter()
+                .zip(&bmu)
+                .map(|(&r, &b)| 0.9 * r + 0.1 * b)
+                .collect(),
+        );
+        out.new_stats.insert(
+            format!("{name}.var"),
+            var_r
+                .iter()
+                .zip(&bvar)
+                .map(|(&r, &b)| 0.9 * r + 0.1 * b)
+                .collect(),
+        );
+        (bmu.clone(), bvar.clone())
+    } else {
+        (
+            req_f32(named, &format!("{name}.mu"), cout)?.to_vec(),
+            req_f32(named, &format!("{name}.var"), cout)?.to_vec(),
+        )
+    };
+    if collect {
+        out.collected.push((name.clone(), bmu, bvar));
+    }
+    let gamma = req_f32(named, &format!("{name}.gamma"), cout)?;
+    let beta = req_f32(named, &format!("{name}.beta"), cout)?;
+    let rstd: Vec<f32> =
+        var.iter().map(|&v| 1.0 / (v + BN_EPS).sqrt()).collect();
+    let mut outv = vec![0f32; rows * cout];
+    for i in 0..rows {
+        for c in 0..cout {
+            outv[i * cout + c] = (y[i * cout + c] - mu[c]) * rstd[c]
+                * gamma[c]
+                + beta[c];
+        }
+    }
+    if let Some(caches) = caches {
+        caches[li] = Some(TConvCache {
+            xq,
+            y_conv: y,
+            mu,
+            rstd,
+            geom: ConvGeom { hs, ws, ho, wo },
+        });
+    }
+    Ok((outv, ho, wo))
+}
+
+/// Train-form forward (QAT weights via `wq`; BN per `update_stats` /
+/// `collect`). `caches` retains what the backbone backward needs.
+#[allow(clippy::too_many_arguments)]
+fn train_pass(
+    topo: &Topo,
+    blocks: &[Block],
+    named: &Named,
+    wq: Option<&WeightOverrides>,
+    x: &Tensor,
+    update_stats: bool,
+    collect: bool,
+    want_cache: bool,
+    threads: usize,
+) -> Result<(TrainFwdOut, Option<TrainCacheFull>)> {
+    let (xdata, n, mut hs, mut ws, mut chans) = image_batch(x)?;
+    let mut out = TrainFwdOut {
+        logits: Vec::new(),
+        new_stats: BTreeMap::new(),
+        collected: Vec::new(),
+    };
+    let mut caches: Option<Vec<Option<TConvCache>>> = want_cache
+        .then(|| topo.layers.iter().map(|_| None).collect());
+    let mut block_z: Vec<Vec<f32>> = Vec::with_capacity(blocks.len());
+
+    let (y0, ho, wo) = bn_conv_fwd(
+        topo,
+        0,
+        named,
+        wq,
+        xdata,
+        n,
+        hs,
+        ws,
+        chans,
+        update_stats,
+        collect,
+        &mut out,
+        caches.as_mut(),
+        threads,
+    )?;
+    hs = ho;
+    ws = wo;
+    chans = topo.layers[0].cout;
+    // The ReLU mask comes from the BN output (not the raw conv), so
+    // stash the pre-ReLU BN output in block_z slot usage for the stem
+    // via its own vec; the backward recomputes the mask from it.
+    let stem_pre = want_cache.then(|| y0.clone());
+    let mut h: Vec<f32> = y0.iter().map(|&v| v.max(0.0)).collect();
+
+    let mut block_mid: Vec<Vec<f32>> = Vec::with_capacity(blocks.len());
+    for block in blocks {
+        let (y1, h1, w1) = bn_conv_fwd(
+            topo,
+            block.conv1,
+            named,
+            wq,
+            &h,
+            n,
+            hs,
+            ws,
+            chans,
+            update_stats,
+            collect,
+            &mut out,
+            caches.as_mut(),
+            threads,
+        )?;
+        let cmid = topo.layers[block.conv1].cout;
+        let h1act: Vec<f32> = y1.iter().map(|&v| v.max(0.0)).collect();
+        let (y2, _, _) = bn_conv_fwd(
+            topo,
+            block.conv2,
+            named,
+            wq,
+            &h1act,
+            n,
+            h1,
+            w1,
+            cmid,
+            update_stats,
+            collect,
+            &mut out,
+            caches.as_mut(),
+            threads,
+        )?;
+        let sc: Vec<f32> = match block.down {
+            Some(di) => {
+                let (yd, _, _) = bn_conv_fwd(
+                    topo,
+                    di,
+                    named,
+                    wq,
+                    &h,
+                    n,
+                    hs,
+                    ws,
+                    chans,
+                    update_stats,
+                    collect,
+                    &mut out,
+                    caches.as_mut(),
+                    threads,
+                )?;
+                yd
+            }
+            None => h.clone(),
+        };
+        if sc.len() != y2.len() {
+            bail!("resnet block: shortcut/output size mismatch");
+        }
+        let mut z = y2;
+        add_into(&mut z, &sc);
+        h = z.iter().map(|&v| v.max(0.0)).collect();
+        if want_cache {
+            block_z.push(z);
+            block_mid.push(y1);
+        }
+        hs = h1;
+        ws = w1;
+        chans = topo.layers[block.conv2].cout;
+    }
+
+    let spatial = hs * ws;
+    let pooled = global_pool(&h, n, spatial, chans);
+    let fc = topo.layers.len() - 1;
+    let layer = &topo.layers[fc];
+    if layer.kind != "linear" || layer.cin != chans {
+        bail!("resnet fc geometry mismatch");
+    }
+    let cout = layer.cout;
+    let xq = act_quant(&pooled, n, topo.a_bits);
+    let w = resolve_w(named, wq, &format!("{}.w", layer.name),
+                      chans * cout)?;
+    let bias = req_f32(named, &format!("{}.bias", layer.name), cout)?;
+    let mut logits = vec![0f32; n * cout];
+    gemm::gemm_threads(threads, n, cout, chans, &xq, w, &mut logits);
+    for i in 0..n {
+        for o in 0..cout {
+            logits[i * cout + o] += bias[o];
+        }
+    }
+    out.logits = logits;
+    let cache = caches.map(|layer_caches| TrainCacheFull {
+        inner: TrainCache {
+            layers: layer_caches,
+            block_z,
+            fc_xq: xq,
+            spatial: hs * ws,
+            chans,
+        },
+        stem_pre: stem_pre.expect("cached with want_cache"),
+        block_mid,
+    });
+    Ok((out, cache))
+}
+
+/// Train cache plus the pre-ReLU activations the backward masks need.
+struct TrainCacheFull {
+    inner: TrainCache,
+    /// Stem's pre-ReLU BN output.
+    stem_pre: Vec<f32>,
+    /// Per block: conv1's pre-ReLU BN output.
+    block_mid: Vec<Vec<f32>>,
+}
+
+/// Public train-form forward: `train_fwd_b{N}` (QAT weights, running
+/// stats) and `bn_fwd_b{N}` (raw programmed weights, batch stats
+/// collected) both route here.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn forward_train(
+    topo: &Topo,
+    blocks: &[Block],
+    named: &Named,
+    wq: Option<&WeightOverrides>,
+    x: &Tensor,
+    update_stats: bool,
+    collect: bool,
+    threads: usize,
+) -> Result<TrainFwdOut> {
+    let (out, _) = train_pass(
+        topo,
+        blocks,
+        named,
+        wq,
+        x,
+        update_stats,
+        collect,
+        false,
+        threads,
+    )?;
+    Ok(out)
+}
+
+/// Batch-statistic BatchNorm VJP + conv VJP for one train-form layer.
+#[allow(clippy::too_many_arguments)]
+fn bn_conv_bwd(
+    topo: &Topo,
+    li: usize,
+    named: &Named,
+    wq: Option<&WeightOverrides>,
+    dy: &[f32],
+    cache: &TConvCache,
+    n: usize,
+    grads: &mut BTreeMap<String, Vec<f32>>,
+    threads: usize,
+) -> Result<Vec<f32>> {
+    let layer = &topo.layers[li];
+    let cout = layer.cout;
+    let rows = n * cache.geom.ho * cache.geom.wo;
+    debug_assert_eq!(dy.len(), rows * cout);
+    let gamma = req_f32(named, &format!("{}.gamma", layer.name), cout)?;
+    // Per-channel reductions (fixed order: ascending rows).
+    let mut dgamma = vec![0f32; cout];
+    let mut dbeta = vec![0f32; cout];
+    let mut mean_dy = vec![0f32; cout];
+    let mut mean_dyxhat = vec![0f32; cout];
+    for i in 0..rows {
+        for c in 0..cout {
+            let xhat = (cache.y_conv[i * cout + c] - cache.mu[c])
+                * cache.rstd[c];
+            let g = dy[i * cout + c];
+            dgamma[c] += g * xhat;
+            dbeta[c] += g;
+            mean_dy[c] += g;
+            mean_dyxhat[c] += g * xhat;
+        }
+    }
+    for c in 0..cout {
+        mean_dy[c] /= rows as f32;
+        mean_dyxhat[c] /= rows as f32;
+    }
+    // dL/dy_conv through the batch-statistic normalization.
+    let mut dyc = vec![0f32; rows * cout];
+    for i in 0..rows {
+        for c in 0..cout {
+            let xhat = (cache.y_conv[i * cout + c] - cache.mu[c])
+                * cache.rstd[c];
+            dyc[i * cout + c] = cache.rstd[c]
+                * gamma[c]
+                * (dy[i * cout + c]
+                    - mean_dy[c]
+                    - xhat * mean_dyxhat[c]);
+        }
+    }
+    grads.insert(format!("{}.gamma", layer.name), dgamma);
+    grads.insert(format!("{}.beta", layer.name), dbeta);
+    let (dx, dw) = conv_bwd(
+        topo, li, named, wq, &dyc, &cache.xq, cache.geom, n, true,
+        threads,
+    )?;
+    grads.insert(
+        format!("{}.w", layer.name),
+        dw.expect("dW requested"),
+    );
+    Ok(dx)
+}
+
+/// QAT backbone loss + gradients + EMA'd running stats — the heavy
+/// half of the native `train_backbone` graph for `resnet` manifests
+/// ([`super::train`] owns the SGD bookkeeping). `wq` must carry the
+/// fake-quantized `.w` tensors.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn backbone_grads(
+    topo: &Topo,
+    blocks: &[Block],
+    named: &Named,
+    wq: &WeightOverrides,
+    x: &Tensor,
+    labels: &[i32],
+    threads: usize,
+) -> Result<(
+    f32,
+    BTreeMap<String, Vec<f32>>,
+    BTreeMap<String, Vec<f32>>,
+)> {
+    let n = *x.shape.first().context("train batch axis")?;
+    if labels.len() != n {
+        bail!("train labels: {} for batch {n}", labels.len());
+    }
+    let (out, cache) = train_pass(
+        topo,
+        blocks,
+        named,
+        Some(wq),
+        x,
+        true,
+        false,
+        true,
+        threads,
+    )?;
+    let TrainCacheFull {
+        inner,
+        stem_pre,
+        block_mid,
+    } = cache.expect("train cache requested");
+    let (loss, dlogits) =
+        ce_loss_grad(&out.logits, labels, n, topo.classes);
+    let mut grads: BTreeMap<String, Vec<f32>> = BTreeMap::new();
+
+    // fc backward (quantized weight, STE).
+    let fcidx = topo.layers.len() - 1;
+    let layer = &topo.layers[fcidx];
+    let (chans, cout) = (layer.cin, layer.cout);
+    let w = resolve_w(named, Some(wq), &format!("{}.w", layer.name),
+                      chans * cout)?;
+    let mut dwfc = vec![0f32; chans * cout];
+    gemm::gemm_tn_threads(
+        threads, n, cout, chans, &inner.fc_xq, &dlogits, &mut dwfc,
+    );
+    let mut dbias = vec![0f32; cout];
+    for i in 0..n {
+        for o in 0..cout {
+            dbias[o] += dlogits[i * cout + o];
+        }
+    }
+    grads.insert(format!("{}.w", layer.name), dwfc);
+    grads.insert(format!("{}.bias", layer.name), dbias);
+    let mut dpooled = vec![0f32; n * chans];
+    gemm::gemm_nt_threads(
+        threads, n, chans, cout, &dlogits, w, &mut dpooled,
+    );
+    let mut dh =
+        global_pool_grad(&dpooled, n, inner.spatial, inner.chans);
+
+    for (bi, block) in blocks.iter().enumerate().rev() {
+        let z = &inner.block_z[bi];
+        let dpre: Vec<f32> = dh
+            .iter()
+            .zip(z)
+            .map(|(&g, &zv)| if zv > 0.0 { g } else { 0.0 })
+            .collect();
+        let c2 = inner.layers[block.conv2].as_ref().expect("conv2");
+        let dh1q = bn_conv_bwd(
+            topo, block.conv2, named, Some(wq), &dpre, c2, n,
+            &mut grads, threads,
+        )?;
+        let mid = &block_mid[bi];
+        let dy1: Vec<f32> = dh1q
+            .iter()
+            .zip(mid)
+            .map(|(&g, &yv)| if yv > 0.0 { g } else { 0.0 })
+            .collect();
+        let c1 = inner.layers[block.conv1].as_ref().expect("conv1");
+        let mut din = bn_conv_bwd(
+            topo, block.conv1, named, Some(wq), &dy1, c1, n,
+            &mut grads, threads,
+        )?;
+        match block.down {
+            Some(di) => {
+                let cd = inner.layers[di].as_ref().expect("down");
+                let dsc = bn_conv_bwd(
+                    topo, di, named, Some(wq), &dpre, cd, n,
+                    &mut grads, threads,
+                )?;
+                add_into(&mut din, &dsc);
+            }
+            None => add_into(&mut din, &dpre),
+        }
+        dh = din;
+    }
+
+    let dstem: Vec<f32> = dh
+        .iter()
+        .zip(&stem_pre)
+        .map(|(&g, &yv)| if yv > 0.0 { g } else { 0.0 })
+        .collect();
+    let c0 = inner.layers[0].as_ref().expect("stem");
+    let _ = bn_conv_bwd(
+        topo, 0, named, Some(wq), &dstem, c0, n, &mut grads, threads,
+    )?;
+    Ok((loss, grads, out.new_stats))
+}

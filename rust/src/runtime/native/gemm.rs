@@ -278,6 +278,60 @@ pub fn gemm_nt_threads(
     });
 }
 
+/// `c = aᵀ · b` where `a` is m×k and `b` is m×n (both row-major):
+/// `c[p][j] = Σ_i a[i][p]·b[i][j]`, `c` is k×n. This is the weight-
+/// gradient primitive of the native train steps (`dW = x_qᵀ g`,
+/// `dΓ`-style reductions): the contraction runs over the *row* axis in
+/// plain ascending order, parallelism is over disjoint output-row
+/// chunks, so results are bit-identical across thread counts like the
+/// other kernels in this module.
+pub fn gemm_tn_threads(
+    threads: usize,
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+) {
+    assert_eq!(a.len(), m * k, "a is m×k");
+    assert_eq!(b.len(), m * n, "b is m×n");
+    assert_eq!(c.len(), k * n, "c is k×n");
+    if k == 0 || n == 0 {
+        return;
+    }
+    if m == 0 {
+        c.fill(0.0);
+        return;
+    }
+    let threads = threads.max(1).min(k);
+    let rpc = k.div_ceil(threads);
+    let mut chunks: Vec<(usize, &mut [f32])> = c
+        .chunks_mut(rpc * n)
+        .enumerate()
+        .map(|(ci, ch)| (ci * rpc, ch))
+        .collect();
+    parallel::for_each_mut(threads, &mut chunks, |_, item| {
+        let (row0, rows) = item;
+        let k_rows = rows.len() / n;
+        for p in 0..k_rows {
+            let dst = &mut rows[p * n..(p + 1) * n];
+            dst.fill(0.0);
+            let col = *row0 + p;
+            for i in 0..m {
+                let av = a[i * k + col];
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b[i * n..(i + 1) * n];
+                for (d, &bv) in dst.iter_mut().zip(brow) {
+                    *d += av * bv;
+                }
+            }
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

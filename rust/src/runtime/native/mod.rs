@@ -5,27 +5,41 @@
 //! Supported graph inventory (selected by graph key, same naming
 //! contract as `python/compile/model.py`):
 //!
-//! | key                        | kinds          | notes |
-//! |----------------------------|----------------|-------|
-//! | `fwd_b{N}`                 | `mlp`, `resnet`| plain deploy forward |
-//! | `comp_veraplus_r{r}_b{N}`  | `mlp`, `resnet`| forward + fused VeRA+ branch |
-//! | `train_veraplus_r{r}`      | `mlp`          | Alg. 1 inner-loop SGD step |
-//! | `kernel_vera*`             | kernel manifest| standalone L1 kernel |
+//! | key                        | kinds                  | notes |
+//! |----------------------------|------------------------|-------|
+//! | `fwd_b{N}`                 | `mlp`, `resnet`, `bert`| plain deploy forward |
+//! | `comp_veraplus_r{r}_b{N}`  | `mlp`, `resnet`, `bert`| forward + fused VeRA+ branch |
+//! | `train_veraplus_r{r}`      | `mlp`, `resnet`, `bert`| Alg. 1 inner-loop SGD step |
+//! | `train_backbone`           | `mlp`, `resnet`, `bert`| QAT SGD-momentum step ([`train`]) |
+//! | `train_fwd_b{N}`           | `mlp`, `resnet`, `bert`| train-form eval forward |
+//! | `bn_fwd_b{N}`              | `resnet`               | BN-calibration forward + batch stats |
+//! | `kernel_vera*`             | kernel manifest        | standalone L1 kernel |
 //!
-//! Everything else (`train_backbone`, `bn_fwd`, vera/lora comp
-//! lowerings, BERT models) reports a descriptive unsupported error and
-//! stays on the PJRT path.
+//! The `bert` topology ([`bert`]) is reconstructed from the
+//! `l{i}.{wq,wk,wv,wo,ff1,ff2}` / `cls` layer-naming contract
+//! (embedding lookup on i32 `[n, seq]` inputs, pre-LN multi-head
+//! attention, GELU FFN, mean-pool + classifier); the training graphs
+//! run hand-derived VJPs through attention / LayerNorm / GELU / im2col
+//! ([`ops`], [`cnn`], [`train`]). Everything still missing (vera/lora
+//! comp lowerings, the int8 crossbar kernel) reports a descriptive
+//! unsupported error and stays on the PJRT path.
 //!
-//! **Determinism contract**: one execution's outputs are bit-identical
-//! for every worker-thread count (`VERA_THREADS` included) — the GEMM
-//! parallelizes over disjoint output row chunks with a fixed
-//! per-element accumulation order (see [`gemm`]). The fused
-//! compensation epilogue and the unfused reference ops agree to f32
-//! rounding (documented tolerance: ≤ 1e-4 relative on logits), not
-//! bit-exactly.
+//! **Determinism contract**: one execution's outputs — logits, train
+//! losses, gradients, updated parameters — are bit-identical for every
+//! worker-thread count (`VERA_THREADS` included): every GEMM variant
+//! parallelizes over disjoint output chunks with a fixed per-element
+//! accumulation order (see [`gemm`]), the attention fan-out is
+//! per-sample with fixed inner loops, and all other reductions are
+//! serial. The fused compensation epilogue and the unfused reference
+//! ops agree to f32 rounding (documented tolerance: ≤ 1e-4 relative on
+//! logits), not bit-exactly.
 
 pub mod gemm;
+pub mod ops;
+pub(crate) mod bert;
+pub(crate) mod cnn;
 pub(crate) mod model;
+pub(crate) mod train;
 
 use crate::nn::manifest::{GraphSig, ModelManifest};
 use crate::util::parallel;
@@ -36,11 +50,20 @@ use std::sync::Arc;
 
 /// What one compiled native graph executes.
 enum GraphKind {
-    /// `fwd_b{N}` / `comp_{method}_r{r}_b{N}`: `comp_rank` is `Some`
-    /// for the compensated variant.
-    Forward { comp_rank: Option<usize> },
-    /// `train_veraplus_r{r}` (mlp topologies only).
+    /// `fwd_b{N}` / `comp_{method}_r{r}_b{N}` / `train_fwd_b{N}`:
+    /// `comp_rank` is `Some` for the compensated variant, `train_form`
+    /// selects the QAT train-parameterization forward.
+    Forward {
+        comp_rank: Option<usize>,
+        train_form: bool,
+    },
+    /// `bn_fwd_b{N}`: unfolded BN-calibration forward (resnet only),
+    /// emitting logits + per-conv batch statistics.
+    BnFwd,
+    /// `train_veraplus_r{r}` (all three topologies).
     CompTrain { rank: usize },
+    /// `train_backbone`: one QAT SGD-momentum step ([`train`]).
+    BackboneTrain,
     /// `kernel_vera*`: shapes fixed by the signature.
     KernelVera {
         n: usize,
@@ -105,7 +128,45 @@ pub(crate) fn compile(
         })?;
         return Ok(NativeGraph {
             topo: Some(build_topo(manifest)?),
-            kind: GraphKind::Forward { comp_rank: None },
+            kind: GraphKind::Forward {
+                comp_rank: None,
+                train_form: false,
+            },
+        });
+    }
+    if let Some(batch) = key.strip_prefix("train_fwd_b") {
+        batch.parse::<usize>().ok().with_context(|| {
+            format!("native: bad train-forward key '{key}'")
+        })?;
+        return Ok(NativeGraph {
+            topo: Some(build_topo(manifest)?),
+            kind: GraphKind::Forward {
+                comp_rank: None,
+                train_form: true,
+            },
+        });
+    }
+    if let Some(batch) = key.strip_prefix("bn_fwd_b") {
+        batch.parse::<usize>().ok().with_context(|| {
+            format!("native: bad bn-forward key '{key}'")
+        })?;
+        let topo = build_topo(manifest)?;
+        if !matches!(topo.kind, model::TopoKind::Resnet { .. }) {
+            bail!(
+                "native BN-calibration forward supports resnet \
+                 topologies only; graph '{key}' on kind '{}' needs PJRT",
+                manifest.kind
+            );
+        }
+        return Ok(NativeGraph {
+            topo: Some(topo),
+            kind: GraphKind::BnFwd,
+        });
+    }
+    if key == "train_backbone" {
+        return Ok(NativeGraph {
+            topo: Some(build_topo(manifest)?),
+            kind: GraphKind::BackboneTrain,
         });
     }
     if let Some((method, rank, batch)) = parse_method_key(key, "comp_") {
@@ -122,6 +183,7 @@ pub(crate) fn compile(
             topo: Some(build_topo(manifest)?),
             kind: GraphKind::Forward {
                 comp_rank: Some(rank),
+                train_form: false,
             },
         });
     }
@@ -132,16 +194,8 @@ pub(crate) fn compile(
                  '{key}' needs PJRT"
             );
         }
-        let topo = build_topo(manifest)?;
-        if !matches!(topo.kind, model::TopoKind::Mlp) {
-            bail!(
-                "native comp training supports mlp topologies only; \
-                 graph '{key}' on kind '{}' needs PJRT",
-                manifest.kind
-            );
-        }
         return Ok(NativeGraph {
-            topo: Some(topo),
+            topo: Some(build_topo(manifest)?),
             kind: GraphKind::CompTrain { rank },
         });
     }
@@ -172,7 +226,10 @@ impl NativeGraph {
             .map(|(spec, t)| (spec.name.as_str(), *t))
             .collect();
         match &self.kind {
-            GraphKind::Forward { comp_rank } => {
+            GraphKind::Forward {
+                comp_rank,
+                train_form,
+            } => {
                 let topo = self.topo.as_ref().expect("forward has topo");
                 let x = *named
                     .get("x")
@@ -185,16 +242,71 @@ impl NativeGraph {
                     }
                     None => None,
                 };
-                let logits = model::forward(
-                    topo,
-                    &named,
-                    x,
-                    comp.as_ref(),
-                    FwdOpts {
-                        threads,
-                        fused: true,
-                    },
-                )?;
+                let opts = FwdOpts {
+                    threads,
+                    fused: true,
+                };
+                let logits = if *train_form {
+                    match &topo.kind {
+                        model::TopoKind::Resnet { blocks } => {
+                            // Train-form (BN on running stats, QAT
+                            // weights) evaluation forward.
+                            let wq = train::qat_weight_overrides(
+                                topo, &named,
+                            )?;
+                            cnn::forward_train(
+                                topo,
+                                blocks,
+                                &named,
+                                Some(&wq),
+                                x,
+                                false,
+                                false,
+                                threads,
+                            )?
+                            .logits
+                        }
+                        _ => {
+                            // mlp / bert train in deploy form: swap in
+                            // the fake-quantized weights and run the
+                            // plain forward.
+                            let wq = train::qat_weight_overrides(
+                                topo, &named,
+                            )?;
+                            let qstore: Vec<(String, Tensor)> = wq
+                                .into_iter()
+                                .map(|(name, vals)| {
+                                    let shape = named
+                                        .get(name.as_str())
+                                        .map(|t| t.shape.clone())
+                                        .unwrap_or_else(|| {
+                                            vec![vals.len()]
+                                        });
+                                    (
+                                        name,
+                                        Tensor::from_f32(
+                                            &shape, vals,
+                                        ),
+                                    )
+                                })
+                                .collect();
+                            let mut named_q: Named = named.clone();
+                            for (name, t) in &qstore {
+                                named_q.insert(name.as_str(), t);
+                            }
+                            model::forward(
+                                topo,
+                                &named_q,
+                                x,
+                                comp.as_ref(),
+                                opts,
+                            )?
+                        }
+                    }
+                } else {
+                    model::forward(topo, &named, x, comp.as_ref(),
+                                   opts)?
+                };
                 let spec = sig
                     .outputs
                     .first()
@@ -210,21 +322,95 @@ impl NativeGraph {
                 }
                 Ok(vec![Tensor::from_f32(&spec.shape, logits)])
             }
+            GraphKind::BnFwd => {
+                let topo = self.topo.as_ref().expect("bn_fwd has topo");
+                let model::TopoKind::Resnet { blocks } = &topo.kind
+                else {
+                    bail!("bn_fwd compiled on a non-resnet topology");
+                };
+                let x = *named.get("x").context("bn_fwd input 'x'")?;
+                let out = cnn::forward_train(
+                    topo, blocks, &named, None, x, false, true, threads,
+                )?;
+                let mut stats: std::collections::BTreeMap<
+                    String,
+                    Vec<f32>,
+                > = std::collections::BTreeMap::new();
+                for (name, mean, var) in out.collected {
+                    stats.insert(format!("{name}.mean"), mean);
+                    stats.insert(format!("{name}.var"), var);
+                }
+                sig.outputs
+                    .iter()
+                    .map(|spec| {
+                        let vals = if spec.name == "logits" {
+                            &out.logits
+                        } else {
+                            stats.get(&spec.name).with_context(|| {
+                                format!(
+                                    "graph {}: no native value for \
+                                     output '{}'",
+                                    sig.key, spec.name
+                                )
+                            })?
+                        };
+                        if vals.len() != spec.numel() {
+                            bail!(
+                                "graph {}: output '{}' numel mismatch",
+                                sig.key,
+                                spec.name
+                            );
+                        }
+                        Ok(Tensor::from_f32(&spec.shape, vals.clone()))
+                    })
+                    .collect()
+            }
+            GraphKind::BackboneTrain => {
+                let topo =
+                    self.topo.as_ref().expect("train_backbone has topo");
+                train::backbone_step(topo, sig, &named, threads)
+            }
             GraphKind::CompTrain { rank } => {
                 let topo = self.topo.as_ref().expect("train has topo");
                 let x = *named.get("x").context("train input 'x'")?;
                 let y = named.get("y").context("train input 'y'")?;
                 let lr_t = named.get("lr").context("train input 'lr'")?;
                 let lr = lr_t.as_f32()[0];
-                let mut step = model::train_step_mlp(
-                    topo,
-                    &named,
-                    *rank,
-                    x,
-                    y.as_i32(),
-                    lr,
-                    threads,
-                )?;
+                let mut step = match &topo.kind {
+                    model::TopoKind::Mlp => model::train_step_mlp(
+                        topo,
+                        &named,
+                        *rank,
+                        x,
+                        y.as_i32(),
+                        lr,
+                        threads,
+                    )?,
+                    model::TopoKind::Resnet { blocks } => {
+                        cnn::comp_train_step(
+                            topo,
+                            blocks,
+                            &named,
+                            *rank,
+                            x,
+                            y.as_i32(),
+                            lr,
+                            threads,
+                        )?
+                    }
+                    model::TopoKind::Bert { meta } => {
+                        bert::comp_train_step(
+                            topo,
+                            meta,
+                            &named,
+                            *rank,
+                            x,
+                            y.as_i32(),
+                            lr,
+                            threads,
+                        )?
+                    }
+                };
                 sig.outputs
                     .iter()
                     .map(|spec| {

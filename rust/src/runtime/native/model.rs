@@ -2,15 +2,23 @@
 //! its [`ModelManifest`] layer inventory and executes it with the
 //! blocked GEMM kernels in [`super::gemm`].
 //!
-//! Two topologies are understood:
+//! Three topologies are understood:
 //!
 //! - **`mlp`** — a chain of `linear` layers (quant → linear+bias →
 //!   ReLU between layers, raw logits last). This is the testkit /
 //!   small-model shape; it additionally supports the Alg. 1 inner-loop
-//!   compensation **train step** (hand-derived VJP, backbone frozen).
+//!   compensation **train step** (hand-derived VJP, backbone frozen)
+//!   and backbone QAT ([`super::train`]).
 //! - **`resnet`** — the paper's CIFAR-style 6n+2 family, reconstructed
 //!   from the `stem` / `s{s}b{b}.conv{1,2}[, .down]` / `fc` naming
-//!   contract shared with `python/compile/resnet.py`. Forward only.
+//!   contract shared with `python/compile/resnet.py`. Forward,
+//!   compensated forward, compensation training and backbone QAT
+//!   ([`super::cnn`]).
+//!
+//! - **`bert`** — the paper's transformer analog, reconstructed from
+//!   the `l{i}.{wq,wk,wv,wo,ff1,ff2}` / `cls` naming contract shared
+//!   with `python/compile/bert.py` (see [`super::bert`]). Forward,
+//!   compensated forward, compensation training and backbone QAT.
 //!
 //! Numerics mirror the lowered JAX graphs: per-sample abs-max
 //! activation quantization (`quant.act_quant`), SAME-padded NHWC/HWIO
@@ -39,12 +47,40 @@ pub(crate) struct Block {
     pub down: Option<usize>,
 }
 
+/// BERT-analog geometry, derived from the manifest layer inventory at
+/// topology-build time (see [`super::bert`] for the execution side).
+#[derive(Debug, Clone)]
+pub(crate) struct BertMeta {
+    pub layers_n: usize,
+    pub d_model: usize,
+    pub d_ff: usize,
+    pub heads: usize,
+    /// Sequence length (`manifest.seq`).
+    pub seq: usize,
+    pub vocab: usize,
+}
+
+impl BertMeta {
+    /// Index into `Topo::layers` of encoder-layer `i`'s `j`-th linear
+    /// (0 = wq, 1 = wk, 2 = wv, 3 = wo, 4 = ff1, 5 = ff2).
+    pub fn lin(&self, i: usize, j: usize) -> usize {
+        i * 6 + j
+    }
+
+    /// Index of the classifier head.
+    pub fn cls(&self) -> usize {
+        self.layers_n * 6
+    }
+}
+
 #[derive(Debug, Clone)]
 pub(crate) enum TopoKind {
     /// All-linear chain in manifest order.
     Mlp,
     /// `stem` + blocks + `fc` (layer 0 and the last layer are implied).
     Resnet { blocks: Vec<Block> },
+    /// `l{i}.{wq,wk,wv,wo,ff1,ff2}` + `cls` encoder stack.
+    Bert { meta: BertMeta },
 }
 
 /// Interpreted topology, validated once at graph "compilation".
@@ -53,6 +89,7 @@ pub(crate) struct Topo {
     pub kind: TopoKind,
     pub layers: Vec<LayerGeom>,
     pub a_bits: usize,
+    pub w_bits: usize,
     pub classes: usize,
     pub d_in_max: usize,
     pub d_out_max: usize,
@@ -137,6 +174,9 @@ pub(crate) fn build_topo(man: &ModelManifest) -> Result<Topo> {
             }
             TopoKind::Resnet { blocks }
         }
+        "bert" => TopoKind::Bert {
+            meta: build_bert_meta(man)?,
+        },
         other => {
             bail!(
                 "native backend cannot interpret model kind '{other}' \
@@ -158,10 +198,125 @@ pub(crate) fn build_topo(man: &ModelManifest) -> Result<Topo> {
         kind,
         layers: man.layers.clone(),
         a_bits: man.a_bits,
+        w_bits: man.w_bits,
         classes: man.classes,
         d_in_max: man.d_in_max,
         d_out_max: man.d_out_max,
     })
+}
+
+/// Validate the BERT layer naming contract (`python/compile/bert.py
+/// linear_layers()`: per encoder layer `l{i}.wq/.wk/.wv/.wo/.ff1/.ff2`,
+/// then `cls`) and derive the model geometry from it.
+fn build_bert_meta(man: &ModelManifest) -> Result<BertMeta> {
+    let n = man.layers.len();
+    if n < 7 || (n - 1) % 6 != 0 {
+        bail!(
+            "bert model {}: expected 6 linears per encoder layer plus \
+             'cls', got {n} layers",
+            man.model
+        );
+    }
+    let layers_n = (n - 1) / 6;
+    let d_model = man.layers[0].cin;
+    let d_ff = man.layers[4].cout;
+    for i in 0..layers_n {
+        for (j, (suffix, cin, cout)) in [
+            ("wq", d_model, d_model),
+            ("wk", d_model, d_model),
+            ("wv", d_model, d_model),
+            ("wo", d_model, d_model),
+            ("ff1", d_model, d_ff),
+            ("ff2", d_ff, d_model),
+        ]
+        .iter()
+        .enumerate()
+        {
+            let l = &man.layers[i * 6 + j];
+            let want = format!("l{i}.{suffix}");
+            if l.name != want || l.kind != "linear" {
+                bail!(
+                    "bert model {}: layer {} is '{}' ({}), expected \
+                     linear '{want}'",
+                    man.model,
+                    i * 6 + j,
+                    l.name,
+                    l.kind
+                );
+            }
+            if l.cin != *cin || l.cout != *cout {
+                bail!(
+                    "bert model {}: {want} is {}→{}, expected {cin}→\
+                     {cout}",
+                    man.model,
+                    l.cin,
+                    l.cout
+                );
+            }
+        }
+    }
+    let cls = &man.layers[n - 1];
+    if cls.name != "cls" || cls.kind != "linear" || cls.cin != d_model {
+        bail!(
+            "bert model {}: last layer must be linear 'cls' over \
+             d_model={d_model}, got '{}' ({}→{})",
+            man.model,
+            cls.name,
+            cls.cin,
+            cls.cout
+        );
+    }
+    if man.heads == 0 || d_model % man.heads != 0 {
+        bail!(
+            "bert model {}: heads={} must divide d_model={d_model} \
+             (is the manifest missing its 'heads' field?)",
+            man.model,
+            man.heads
+        );
+    }
+    if man.vocab == 0 || man.input_dim == 0 {
+        bail!(
+            "bert model {}: vocab={} / seq={} must be positive",
+            man.model,
+            man.vocab,
+            man.input_dim
+        );
+    }
+    Ok(BertMeta {
+        layers_n,
+        d_model,
+        d_ff,
+        heads: man.heads,
+        seq: man.input_dim,
+        vocab: man.vocab,
+    })
+}
+
+/// Optional fake-quantized weight overrides (the QAT train paths);
+/// lookups fall back to the named graph inputs.
+pub(crate) type WeightOverrides = BTreeMap<String, Vec<f32>>;
+
+/// Resolve a weight slice: the QAT override when present, else the
+/// named graph input.
+pub(crate) fn resolve_w<'a>(
+    named: &Named<'a>,
+    wq: Option<&'a WeightOverrides>,
+    name: &str,
+    numel: usize,
+) -> Result<&'a [f32]> {
+    if let Some(map) = wq {
+        if let Some(v) = map.get(name) {
+            if v.len() != numel {
+                bail!(
+                    "native: override '{name}' has {} elements, \
+                     expected {numel}",
+                    v.len()
+                );
+            }
+            return Ok(v.as_slice());
+        }
+    }
+    req_f32(named, name, numel)
 }
 
 /// Fetch a named f32 input with an element-count check.
@@ -220,7 +375,7 @@ impl<'a> CompInputs<'a> {
     }
 
     /// Per-layer `A_R` slice `[rank, cin]` (prefix of each `A_max` row).
-    fn a_slice(&self, topo: &Topo, cin: usize) -> Vec<f32> {
+    pub(crate) fn a_slice(&self, topo: &Topo, cin: usize) -> Vec<f32> {
         let mut out = Vec::with_capacity(self.rank * cin);
         for q in 0..self.rank {
             let row = &self.a_max[q * topo.d_in_max..][..cin];
@@ -231,12 +386,12 @@ impl<'a> CompInputs<'a> {
 
     /// Per-layer `B_R` slice `[cout, rank]` — the first `cout` rows of
     /// `B_max` are contiguous.
-    fn b_slice(&self, cout: usize) -> &'a [f32] {
+    pub(crate) fn b_slice(&self, cout: usize) -> &'a [f32] {
         &self.b_max[..cout * self.rank]
     }
 
     /// The fused-epilogue panel `bd[o][q] = b[o]·d[q]·B_R[o][q]`.
-    fn bd_panel(&self, li: usize, cout: usize) -> Vec<f32> {
+    pub(crate) fn bd_panel(&self, li: usize, cout: usize) -> Vec<f32> {
         let r = self.rank;
         let b_sl = self.b_slice(cout);
         let (d, b) = (self.d[li], self.b[li]);
@@ -252,8 +407,14 @@ impl<'a> CompInputs<'a> {
 
 /// Per-sample abs-max fake quantization (`quant.act_quant`): each of
 /// the `n` samples ranges its own DAC over all non-batch elements.
+/// `bits >= 24` is the identity (no DAC) — the gradient-check fixtures
+/// use it because the straight-through gradient of a rounding forward
+/// cannot agree with finite differences.
 pub(crate) fn act_quant(x: &[f32], n: usize, bits: usize) -> Vec<f32> {
     assert!(n > 0 && x.len() % n == 0, "quant rows must divide input");
+    if bits >= 24 {
+        return x.to_vec();
+    }
     let row = x.len() / n;
     let lim = ((1i64 << (bits - 1)) - 1) as f32;
     let mut out = vec![0f32; x.len()];
@@ -269,7 +430,7 @@ pub(crate) fn act_quant(x: &[f32], n: usize, bits: usize) -> Vec<f32> {
 }
 
 /// SAME-padding geometry: output side + low-edge padding.
-fn same_pad(h: usize, k: usize, stride: usize) -> (usize, usize) {
+pub(crate) fn same_pad(h: usize, k: usize, stride: usize) -> (usize, usize) {
     let ho = h.div_ceil(stride);
     let total = ((ho - 1) * stride + k).saturating_sub(h);
     (ho, total / 2)
@@ -278,7 +439,7 @@ fn same_pad(h: usize, k: usize, stride: usize) -> (usize, usize) {
 /// NHWC im2col: rows ordered `(n, oh, ow)`, columns `(kh, kw, cin)` —
 /// matching flattened HWIO weights as the `[k·k·cin, cout]` GEMM right
 /// operand.
-fn im2col(
+pub(crate) fn im2col(
     x: &[f32],
     n: usize,
     h: usize,
@@ -320,10 +481,59 @@ fn im2col(
     (out, ho, wo)
 }
 
+/// Adjoint of [`im2col`]: scatter-add patch-row gradients back onto
+/// the input grid (`dpatches` is `[n·ho·wo, k·k·cin]` in the same row
+/// and column order im2col produced). Serial loops with a fixed
+/// accumulation order — thread-count invariant by construction.
+pub(crate) fn col2im(
+    dpatches: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    k: usize,
+    stride: usize,
+) -> Vec<f32> {
+    let (ho, pad_h) = same_pad(h, k, stride);
+    let (wo, pad_w) = same_pad(w, k, stride);
+    let kdim = k * k * cin;
+    assert_eq!(dpatches.len(), n * ho * wo * kdim, "dpatches rows");
+    let mut dx = vec![0f32; n * h * w * cin];
+    for ni in 0..n {
+        for oh in 0..ho {
+            for ow in 0..wo {
+                let src = &dpatches[((ni * ho + oh) * wo + ow) * kdim..]
+                    [..kdim];
+                for ki in 0..k {
+                    let ih = (oh * stride + ki) as isize - pad_h as isize;
+                    if ih < 0 || ih >= h as isize {
+                        continue;
+                    }
+                    for kj in 0..k {
+                        let iw =
+                            (ow * stride + kj) as isize - pad_w as isize;
+                        if iw < 0 || iw >= w as isize {
+                            continue;
+                        }
+                        let dst = &mut dx[(((ni * h + ih as usize) * w)
+                            + iw as usize)
+                            * cin..][..cin];
+                        let s = &src[(ki * k + kj) * cin..][..cin];
+                        for (d, &v) in dst.iter_mut().zip(s) {
+                            *d += v;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    dx
+}
+
 /// `x[:, ::stride, ::stride, :]` flattened to rows — the 1×1-scheme
 /// compensation input for a strided conv (row order matches the conv
 /// output's `(n, oh, ow)` order).
-fn subsample_rows(
+pub(crate) fn subsample_rows(
     x: &[f32],
     n: usize,
     h: usize,
@@ -360,7 +570,7 @@ pub(crate) struct FwdOpts {
 }
 
 /// Shared projection for one layer: `s = x_q A_Rᵀ` (`[rows, r]`).
-fn shared_projection(
+pub(crate) fn shared_projection(
     xq: &[f32],
     rows: usize,
     cin: usize,
@@ -373,8 +583,122 @@ fn shared_projection(
     s
 }
 
+/// `dst += src`, elementwise.
+pub(crate) fn add_into(dst: &mut [f32], src: &[f32]) {
+    debug_assert_eq!(dst.len(), src.len());
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d += s;
+    }
+}
+
+/// Forward VeRA+ branch on pre-quantized rows for one layer: computes
+/// the shared projection `s = x_q A_Rᵀ` and the pre-`b` output
+/// `u = (s ⊙ d) B_Rᵀ`, adds `u ⊙ b` into `y`, and returns `(s, u)`
+/// for the backward cache. The ONE implementation behind every
+/// unfused train path (mlp / resnet / bert).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn comp_fwd_su(
+    topo: &Topo,
+    li: usize,
+    comp: &CompInputs,
+    crows: &[f32],
+    rows: usize,
+    cin: usize,
+    cout: usize,
+    y: &mut [f32],
+    threads: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let r = comp.rank;
+    debug_assert_eq!(crows.len(), rows * cin);
+    let a_sl = comp.a_slice(topo, cin);
+    let s = shared_projection(crows, rows, cin, &a_sl, r, threads);
+    let mut t = vec![0f32; rows * r];
+    for i in 0..rows {
+        for q in 0..r {
+            t[i * r + q] = s[i * r + q] * comp.d[li][q];
+        }
+    }
+    let mut u = vec![0f32; rows * cout];
+    gemm::gemm_nt_threads(
+        threads,
+        rows,
+        cout,
+        r,
+        &t,
+        comp.b_slice(cout),
+        &mut u,
+    );
+    for i in 0..rows {
+        for o in 0..cout {
+            y[i * cout + o] += u[i * cout + o] * comp.b[li][o];
+        }
+    }
+    (s, u)
+}
+
+/// VJP of [`comp_fwd_su`]: accumulates this layer's `(dd, db)` and
+/// returns the branch-input gradient `(dt ⊙ d) A_R` (on the branch's
+/// own rows). Shared by every unfused train path.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn comp_bwd_su(
+    topo: &Topo,
+    li: usize,
+    comp: &CompInputs,
+    g: &[f32],
+    rows: usize,
+    cin: usize,
+    cout: usize,
+    s: &[f32],
+    u: &[f32],
+    dd: &mut [Vec<f32>],
+    db: &mut [Vec<f32>],
+    threads: usize,
+) -> Vec<f32> {
+    let r = comp.rank;
+    // db[o] = Σ_i g[i,o]·u[i,o]   (y_comp = u ⊙ b).
+    for i in 0..rows {
+        for o in 0..cout {
+            db[li][o] += g[i * cout + o] * u[i * cout + o];
+        }
+    }
+    // dt = (g ⊙ b) B_R   [rows, r].
+    let mut gb = vec![0f32; rows * cout];
+    for i in 0..rows {
+        for o in 0..cout {
+            gb[i * cout + o] = g[i * cout + o] * comp.b[li][o];
+        }
+    }
+    let mut dt = vec![0f32; rows * r];
+    gemm::gemm_threads(
+        threads,
+        rows,
+        r,
+        cout,
+        &gb,
+        comp.b_slice(cout),
+        &mut dt,
+    );
+    // dd[q] = Σ_i dt[i,q]·s[i,q].
+    for i in 0..rows {
+        for q in 0..r {
+            dd[li][q] += dt[i * r + q] * s[i * r + q];
+        }
+    }
+    // Branch-input gradient: (dt ⊙ d) A_R.
+    let mut ds = vec![0f32; rows * r];
+    for i in 0..rows {
+        for q in 0..r {
+            ds[i * r + q] = dt[i * r + q] * comp.d[li][q];
+        }
+    }
+    let a_sl = comp.a_slice(topo, cin);
+    let mut dxc = vec![0f32; rows * cin];
+    gemm::gemm_threads(threads, rows, cin, r, &ds, &a_sl, &mut dxc);
+    dxc
+}
+
 /// Unfused reference compensation: `b ⊙ ((s ⊙ d) B_Rᵀ)` added into `y`.
-fn add_comp_reference(
+pub(crate) fn add_comp_reference(
     y: &mut [f32],
     s: &[f32],
     rows: usize,
@@ -411,7 +735,7 @@ fn add_comp_reference(
 
 /// One linear/conv-as-GEMM layer on pre-quantized input rows.
 #[allow(clippy::too_many_arguments)]
-fn layer_rows(
+pub(crate) fn layer_rows(
     topo: &Topo,
     li: usize,
     named: &Named,
@@ -501,6 +825,9 @@ pub(crate) fn forward(
         TopoKind::Resnet { blocks } => {
             forward_resnet(topo, blocks, named, x, comp, opts)
         }
+        TopoKind::Bert { meta } => {
+            super::bert::forward(topo, meta, named, x, comp, opts)
+        }
     }
 }
 
@@ -544,27 +871,6 @@ fn forward_mlp(
             let c = comp.context("train forward requires comp inputs")?;
             let cin = layer.cin;
             let cout = layer.cout;
-            let a_sl = c.a_slice(topo, cin);
-            let s = shared_projection(
-                &xq, n, cin, &a_sl, c.rank, opts.threads,
-            );
-            let mut t = vec![0f32; n * c.rank];
-            for i in 0..n {
-                for q in 0..c.rank {
-                    t[i * c.rank + q] =
-                        s[i * c.rank + q] * c.d[li][q];
-                }
-            }
-            let mut u = vec![0f32; n * cout];
-            gemm::gemm_nt_threads(
-                opts.threads,
-                n,
-                cout,
-                c.rank,
-                &t,
-                c.b_slice(cout),
-                &mut u,
-            );
             let w = req_f32(
                 named,
                 &format!("{}.w", layer.name),
@@ -575,10 +881,12 @@ fn forward_mlp(
             let mut y = vec![0f32; n * cout];
             gemm::gemm_threads(opts.threads, n, cout, cin, &xq, w,
                                &mut y);
+            let (s, u) = comp_fwd_su(
+                topo, li, c, &xq, n, cin, cout, &mut y, opts.threads,
+            );
             for i in 0..n {
                 for o in 0..cout {
-                    y[i * cout + o] +=
-                        bias[o] + u[i * cout + o] * c.b[li][o];
+                    y[i * cout + o] += bias[o];
                 }
             }
             let h_next = if last {
@@ -793,7 +1101,7 @@ pub(crate) fn kernel_vera(
 
 /// Numerically stable per-row log-softmax + mean cross-entropy.
 /// Returns `(loss, dlogits)` with `dlogits = (softmax − onehot)/n`.
-fn ce_loss_grad(
+pub(crate) fn ce_loss_grad(
     logits: &[f32],
     labels: &[i32],
     n: usize,
@@ -890,35 +1198,11 @@ pub(crate) fn train_step_mlp(
                 .map(|(&gv, &yv)| if yv > 0.0 { gv } else { 0.0 })
                 .collect()
         };
-        // db[o] = Σ_i g[i,o]·u[i,o]   (y_comp = u ⊙ b).
-        for i in 0..n {
-            for o in 0..cout {
-                db[li][o] += g[i * cout + o] * lc.u[i * cout + o];
-            }
-        }
-        // dt = (g ⊙ b) B_R   [n, r].
-        let mut gb = vec![0f32; n * cout];
-        for i in 0..n {
-            for o in 0..cout {
-                gb[i * cout + o] = g[i * cout + o] * comp.b[li][o];
-            }
-        }
-        let mut dt = vec![0f32; n * r];
-        gemm::gemm_threads(
-            threads,
-            n,
-            r,
-            cout,
-            &gb,
-            comp.b_slice(cout),
-            &mut dt,
+        // Comp-branch VJP: (dd, db) for this layer + branch-input grad.
+        let dxc = comp_bwd_su(
+            topo, li, &comp, &g, n, cin, cout, &lc.s, &lc.u, &mut dd,
+            &mut db, threads,
         );
-        // dd[q] = Σ_i dt[i,q]·s[i,q].
-        for i in 0..n {
-            for q in 0..r {
-                dd[li][q] += dt[i * r + q] * lc.s[i * r + q];
-            }
-        }
         if li > 0 {
             // dx = g Wᵀ + (dt ⊙ d) A_R, passed up through the quant STE
             // (identity) and the previous layer's ReLU.
@@ -929,26 +1213,30 @@ pub(crate) fn train_step_mlp(
             )?;
             let mut dx = vec![0f32; n * cin];
             gemm::gemm_nt_threads(threads, n, cin, cout, &g, w, &mut dx);
-            let mut ds = vec![0f32; n * r];
-            for i in 0..n {
-                for q in 0..r {
-                    ds[i * r + q] = dt[i * r + q] * comp.d[li][q];
-                }
-            }
-            let a_sl = comp.a_slice(topo, cin);
-            let mut dx_comp = vec![0f32; n * cin];
-            gemm::gemm_threads(
-                threads, n, cin, r, &ds, &a_sl, &mut dx_comp,
-            );
-            for (v, &c) in dx.iter_mut().zip(&dx_comp) {
-                *v += c;
-            }
+            add_into(&mut dx, &dxc);
             upstream = dx;
         } else {
             upstream = Vec::new();
         }
     }
 
+    comp_sgd_update(topo, &comp, &dd, &db, named, lr, loss)
+}
+
+/// Shared tail of every native compensation train step (mlp / resnet /
+/// bert): global-norm clip of the `(d, b)` gradients to 1, SGD momentum
+/// 0.9, parameter update — the lowered `build_train_comp` epilogue.
+pub(crate) fn comp_sgd_update(
+    topo: &Topo,
+    comp: &CompInputs,
+    dd: &[Vec<f32>],
+    db: &[Vec<f32>],
+    named: &Named,
+    lr: f32,
+    loss: f32,
+) -> Result<TrainStep> {
+    let n_layers = topo.layers.len();
+    let r = comp.rank;
     // Global-norm clip to 1 (matches the lowered train graph).
     let mut sq = 0f64;
     for li in 0..n_layers {
@@ -1047,6 +1335,40 @@ mod tests {
         let (p, ho, wo) = im2col(&x, 2, 2, 2, 3, 1, 1);
         assert_eq!((ho, wo), (2, 2));
         assert_eq!(p, x);
+    }
+
+    #[test]
+    fn col2im_is_im2col_adjoint() {
+        // <im2col(x), g> == <x, col2im(g)> for random x, g — the
+        // defining property of the adjoint pair used by the conv VJP.
+        let mut rng = Pcg64::new(31);
+        for &(n, h, w, cin, k, stride) in &[
+            (1usize, 4usize, 4usize, 2usize, 3usize, 1usize),
+            (2, 5, 5, 1, 3, 2),
+            (1, 4, 6, 2, 1, 2),
+        ] {
+            let mut x = vec![0f32; n * h * w * cin];
+            rng.fill_normal_f32(&mut x, 0.0, 1.0);
+            let (patches, ho, wo) = im2col(&x, n, h, w, cin, k, stride);
+            let mut g = vec![0f32; n * ho * wo * k * k * cin];
+            rng.fill_normal_f32(&mut g, 0.0, 1.0);
+            let dx = col2im(&g, n, h, w, cin, k, stride);
+            let lhs: f64 = patches
+                .iter()
+                .zip(&g)
+                .map(|(&a, &b)| (a * b) as f64)
+                .sum();
+            let rhs: f64 = x
+                .iter()
+                .zip(&dx)
+                .map(|(&a, &b)| (a * b) as f64)
+                .sum();
+            assert!(
+                (lhs - rhs).abs() < 1e-3 * lhs.abs().max(1.0),
+                "adjoint mismatch {lhs} vs {rhs} \
+                 (n={n} h={h} w={w} c={cin} k={k} s={stride})"
+            );
+        }
     }
 
     #[test]

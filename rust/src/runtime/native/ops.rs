@@ -1,0 +1,675 @@
+//! Elementwise / normalization / attention primitives for the native
+//! backend's BERT interpreter and the backbone train steps, plus their
+//! hand-derived VJPs.
+//!
+//! Everything here mirrors the lowered JAX graphs the PJRT path would
+//! run (`python/compile/bert.py`, `python/compile/quant.py`):
+//!
+//! - [`softmax_rows`] — numerically stable per-row softmax.
+//! - [`layernorm_forward`] / [`layernorm_backward`] — population-
+//!   variance LayerNorm over the last axis, `eps = 1e-5`.
+//! - [`gelu`] / [`gelu_grad`] — the tanh approximation
+//!   (`jax.nn.gelu` default), smooth everywhere (which is what makes
+//!   the finite-difference gradient checks on BERT meaningful).
+//! - [`attention_forward`] / [`attention_backward`] — multi-head
+//!   self-attention on row-major `[n·t, d_model]` Q/K/V with the
+//!   `softmax(QKᵀ/√d_h)` scaling, fanned over samples with a fixed
+//!   per-element accumulation order (bit-identical across thread
+//!   counts, like the GEMM kernels).
+//! - [`embedding_forward`] / [`embedding_backward`] — token + learned
+//!   positional embedding lookup and its scatter-add gradient.
+//! - [`weight_fake_quant`] — per-tensor symmetric STE fake-quant
+//!   (`quant.weight_quant`); `bits >= 24` is the identity, which the
+//!   gradient-check fixtures use because the STE gradient of a rounded
+//!   forward cannot match finite differences.
+//!
+//! The VJPs treat both fake-quant ops as straight-through identities,
+//! exactly like the lowered `stop_gradient` formulations.
+
+use crate::util::parallel;
+use anyhow::{bail, Result};
+
+/// LayerNorm epsilon (matches `python/compile/bert.py::LN_EPS`).
+pub const LN_EPS: f32 = 1e-5;
+
+/// In-place numerically stable softmax over each row of `x`
+/// (`x.len() % cols == 0`).
+pub fn softmax_rows(x: &mut [f32], cols: usize) {
+    assert!(cols > 0 && x.len() % cols == 0, "softmax rows divide input");
+    for row in x.chunks_mut(cols) {
+        let maxv = row.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+        let mut denom = 0f32;
+        for v in row.iter_mut() {
+            *v = (*v - maxv).exp();
+            denom += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= denom;
+        }
+    }
+}
+
+/// Softmax VJP for one row: `ds = p ⊙ (dp − Σ(dp ⊙ p))`, written into
+/// `ds` (may alias nothing).
+pub fn softmax_row_vjp(p: &[f32], dp: &[f32], ds: &mut [f32]) {
+    let mut dot = 0f32;
+    for (pv, dv) in p.iter().zip(dp) {
+        dot += pv * dv;
+    }
+    for ((d, pv), dv) in ds.iter_mut().zip(p).zip(dp) {
+        *d = pv * (dv - dot);
+    }
+}
+
+const GELU_C: f32 = 0.797_884_56; // sqrt(2/π)
+const GELU_A: f32 = 0.044_715;
+
+/// GELU, tanh approximation: `0.5·x·(1 + tanh(√(2/π)·(x + 0.044715·x³)))`.
+pub fn gelu(x: f32) -> f32 {
+    let u = GELU_C * (x + GELU_A * x * x * x);
+    0.5 * x * (1.0 + u.tanh())
+}
+
+/// d/dx of [`gelu`].
+pub fn gelu_grad(x: f32) -> f32 {
+    let u = GELU_C * (x + GELU_A * x * x * x);
+    let t = u.tanh();
+    let du = GELU_C * (1.0 + 3.0 * GELU_A * x * x);
+    0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * du
+}
+
+/// Per-row LayerNorm cache: the mean and reciprocal std of every row.
+pub struct LnCache {
+    pub mu: Vec<f32>,
+    pub rstd: Vec<f32>,
+}
+
+/// LayerNorm over the last axis: `y = (x − µ)/√(σ² + ε) · γ + β` with
+/// population variance per row. Returns the output and the cache the
+/// backward pass needs.
+pub fn layernorm_forward(
+    x: &[f32],
+    gamma: &[f32],
+    beta: &[f32],
+    d: usize,
+) -> (Vec<f32>, LnCache) {
+    assert!(d > 0 && x.len() % d == 0, "layernorm rows divide input");
+    assert_eq!(gamma.len(), d, "gamma is [d]");
+    assert_eq!(beta.len(), d, "beta is [d]");
+    let rows = x.len() / d;
+    let mut out = vec![0f32; x.len()];
+    let mut mu = vec![0f32; rows];
+    let mut rstd = vec![0f32; rows];
+    for i in 0..rows {
+        let src = &x[i * d..(i + 1) * d];
+        let m = src.iter().sum::<f32>() / d as f32;
+        let var = src.iter().map(|&v| (v - m) * (v - m)).sum::<f32>()
+            / d as f32;
+        let r = 1.0 / (var + LN_EPS).sqrt();
+        mu[i] = m;
+        rstd[i] = r;
+        for (o, &v) in out[i * d..(i + 1) * d].iter_mut().zip(src) {
+            *o = (v - m) * r;
+        }
+        for (o, (&g, &b)) in
+            out[i * d..(i + 1) * d].iter_mut().zip(gamma.iter().zip(beta))
+        {
+            *o = *o * g + b;
+        }
+    }
+    (out, LnCache { mu, rstd })
+}
+
+/// LayerNorm VJP: returns `(dx, dγ, dβ)` given the upstream gradient,
+/// the forward *input* and the forward cache. Standard batch-free
+/// derivation: with `g = dy ⊙ γ` per row,
+/// `dx = rstd · (g − mean(g) − x̂ · mean(g ⊙ x̂))`.
+pub fn layernorm_backward(
+    dy: &[f32],
+    x: &[f32],
+    gamma: &[f32],
+    cache: &LnCache,
+    d: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let rows = x.len() / d;
+    assert_eq!(dy.len(), x.len(), "dy matches x");
+    let mut dx = vec![0f32; x.len()];
+    let mut dgamma = vec![0f32; d];
+    let mut dbeta = vec![0f32; d];
+    for i in 0..rows {
+        let (m, r) = (cache.mu[i], cache.rstd[i]);
+        let xi = &x[i * d..(i + 1) * d];
+        let dyi = &dy[i * d..(i + 1) * d];
+        let mut mean_g = 0f32;
+        let mut mean_gx = 0f32;
+        for j in 0..d {
+            let xhat = (xi[j] - m) * r;
+            let g = dyi[j] * gamma[j];
+            dgamma[j] += dyi[j] * xhat;
+            dbeta[j] += dyi[j];
+            mean_g += g;
+            mean_gx += g * xhat;
+        }
+        mean_g /= d as f32;
+        mean_gx /= d as f32;
+        for j in 0..d {
+            let xhat = (xi[j] - m) * r;
+            let g = dyi[j] * gamma[j];
+            dx[i * d + j] = r * (g - mean_g - xhat * mean_gx);
+        }
+    }
+    (dx, dgamma, dbeta)
+}
+
+/// Multi-head self-attention forward.
+///
+/// `q`, `k`, `v` are row-major `[n·t, d_model]` (head `h` occupies
+/// columns `h·d_h .. (h+1)·d_h`). Returns `ctx` rows of the same
+/// layout; when `probs` is `Some`, the post-softmax attention
+/// probabilities are written there as `[n, heads, t, t]` (resized as
+/// needed) for the backward pass.
+///
+/// The per-sample work items fan over `threads` workers; every output
+/// element has a fixed accumulation order, so results are bit-identical
+/// for every thread count.
+#[allow(clippy::too_many_arguments)]
+pub fn attention_forward(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n: usize,
+    t: usize,
+    heads: usize,
+    d_model: usize,
+    threads: usize,
+    mut probs: Option<&mut Vec<f32>>,
+) -> Vec<f32> {
+    assert_eq!(q.len(), n * t * d_model, "q is [n·t, d]");
+    assert_eq!(k.len(), q.len(), "k matches q");
+    assert_eq!(v.len(), q.len(), "v matches q");
+    assert!(heads > 0 && d_model % heads == 0, "heads divide d_model");
+    let dh = d_model / heads;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut ctx = vec![0f32; n * t * d_model];
+    if let Some(p) = probs.as_mut() {
+        p.clear();
+        p.resize(n * heads * t * t, 0.0);
+    }
+    // One work item per sample: its ctx rows plus (optionally) its
+    // probability block.
+    let mut prob_chunks: Vec<Option<&mut [f32]>> = match probs {
+        Some(p) => p.chunks_mut(heads * t * t).map(Some).collect(),
+        None => (0..n).map(|_| None).collect(),
+    };
+    let mut items: Vec<(&mut [f32], Option<&mut [f32]>)> = ctx
+        .chunks_mut(t * d_model)
+        .zip(prob_chunks.drain(..))
+        .collect();
+    parallel::for_each_mut(threads, &mut items, |b, item| {
+        let (ctx_b, probs_b) = item;
+        let base = b * t * d_model;
+        let mut scores = vec![0f32; t * t];
+        for h in 0..heads {
+            let c0 = h * dh;
+            for qi in 0..t {
+                let qrow = &q[base + qi * d_model + c0..][..dh];
+                for ki in 0..t {
+                    let krow = &k[base + ki * d_model + c0..][..dh];
+                    let mut acc = 0f32;
+                    for x in 0..dh {
+                        acc += qrow[x] * krow[x];
+                    }
+                    scores[qi * t + ki] = acc * scale;
+                }
+            }
+            softmax_rows(&mut scores, t);
+            if let Some(pb) = probs_b.as_deref_mut() {
+                pb[h * t * t..(h + 1) * t * t]
+                    .copy_from_slice(&scores);
+            }
+            for qi in 0..t {
+                let dst = &mut ctx_b[qi * d_model + c0..][..dh];
+                for ki in 0..t {
+                    let p = scores[qi * t + ki];
+                    let vrow = &v[base + ki * d_model + c0..][..dh];
+                    for x in 0..dh {
+                        dst[x] += p * vrow[x];
+                    }
+                }
+            }
+        }
+    });
+    ctx
+}
+
+/// VJP of [`attention_forward`]: given `dctx` and the cached
+/// probabilities, returns `(dq, dk, dv)` in the same `[n·t, d_model]`
+/// layout. Bit-identical across thread counts (per-sample fan-out).
+#[allow(clippy::too_many_arguments)]
+pub fn attention_backward(
+    dctx: &[f32],
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    probs: &[f32],
+    n: usize,
+    t: usize,
+    heads: usize,
+    d_model: usize,
+    threads: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    assert_eq!(dctx.len(), n * t * d_model, "dctx is [n·t, d]");
+    assert_eq!(probs.len(), n * heads * t * t, "probs is [n,h,t,t]");
+    let dh = d_model / heads;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut dq = vec![0f32; n * t * d_model];
+    let mut dk = vec![0f32; n * t * d_model];
+    let mut dv = vec![0f32; n * t * d_model];
+    let mut items: Vec<(&mut [f32], (&mut [f32], &mut [f32]))> = dq
+        .chunks_mut(t * d_model)
+        .zip(
+            dk.chunks_mut(t * d_model)
+                .zip(dv.chunks_mut(t * d_model)),
+        )
+        .collect();
+    parallel::for_each_mut(
+        threads,
+        &mut items,
+        |b, item| {
+            let (dq_b, inner) = item;
+            let (dk_b, dv_b) = inner;
+            let base = b * t * d_model;
+            let mut dp = vec![0f32; t];
+            let mut ds = vec![0f32; t];
+            for h in 0..heads {
+                let c0 = h * dh;
+                let pblock = &probs[(b * heads + h) * t * t..][..t * t];
+                for qi in 0..t {
+                    let prow = &pblock[qi * t..(qi + 1) * t];
+                    let drow = &dctx[base + qi * d_model + c0..][..dh];
+                    // dv[ki] += p[qi][ki]·dctx[qi]; dp[ki] = dctx·v[ki].
+                    for ki in 0..t {
+                        let vrow = &v[base + ki * d_model + c0..][..dh];
+                        let mut acc = 0f32;
+                        for x in 0..dh {
+                            acc += drow[x] * vrow[x];
+                        }
+                        dp[ki] = acc;
+                        let p = prow[ki];
+                        let dvrow =
+                            &mut dv_b[ki * d_model + c0..][..dh];
+                        for x in 0..dh {
+                            dvrow[x] += p * drow[x];
+                        }
+                    }
+                    softmax_row_vjp(prow, &dp, &mut ds);
+                    // Scores were scaled by 1/√dh before softmax.
+                    for s in ds.iter_mut() {
+                        *s *= scale;
+                    }
+                    let dqrow = &mut dq_b[qi * d_model + c0..][..dh];
+                    for ki in 0..t {
+                        let s = ds[ki];
+                        let krow = &k[base + ki * d_model + c0..][..dh];
+                        let qrow = &q[base + qi * d_model + c0..][..dh];
+                        let dkrow =
+                            &mut dk_b[ki * d_model + c0..][..dh];
+                        for x in 0..dh {
+                            dqrow[x] += s * krow[x];
+                            dkrow[x] += s * qrow[x];
+                        }
+                    }
+                }
+            }
+        },
+    );
+    (dq, dk, dv)
+}
+
+/// Token + positional embedding lookup:
+/// `h[b, t, :] = tok_emb[tokens[b, t]] + pos_emb[t]`. Errors on
+/// out-of-range token ids (a data bug would otherwise read another
+/// row's embedding silently).
+pub fn embedding_forward(
+    tokens: &[i32],
+    tok_emb: &[f32],
+    pos_emb: &[f32],
+    n: usize,
+    t: usize,
+    d: usize,
+    vocab: usize,
+) -> Result<Vec<f32>> {
+    assert_eq!(tokens.len(), n * t, "tokens are [n, t]");
+    assert_eq!(tok_emb.len(), vocab * d, "tok_emb is [vocab, d]");
+    assert_eq!(pos_emb.len(), t * d, "pos_emb is [seq, d]");
+    let mut h = vec![0f32; n * t * d];
+    for b in 0..n {
+        for ti in 0..t {
+            let tok = tokens[b * t + ti];
+            if tok < 0 || tok as usize >= vocab {
+                bail!(
+                    "token id {tok} at [{b}, {ti}] outside the \
+                     vocabulary (0..{vocab})"
+                );
+            }
+            let dst = &mut h[(b * t + ti) * d..][..d];
+            let te = &tok_emb[tok as usize * d..][..d];
+            let pe = &pos_emb[ti * d..][..d];
+            for j in 0..d {
+                dst[j] = te[j] + pe[j];
+            }
+        }
+    }
+    Ok(h)
+}
+
+/// VJP of [`embedding_forward`]: scatter-adds `dh` into
+/// `(dtok_emb, dpos_emb)`. Serial by construction (gradient scatter
+/// order is fixed), so thread-count invariant trivially.
+pub fn embedding_backward(
+    dh: &[f32],
+    tokens: &[i32],
+    n: usize,
+    t: usize,
+    d: usize,
+    vocab: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let mut dtok = vec![0f32; vocab * d];
+    let mut dpos = vec![0f32; t * d];
+    for b in 0..n {
+        for ti in 0..t {
+            let src = &dh[(b * t + ti) * d..][..d];
+            let tok = tokens[b * t + ti] as usize;
+            let te = &mut dtok[tok * d..][..d];
+            for j in 0..d {
+                te[j] += src[j];
+            }
+            let pe = &mut dpos[ti * d..][..d];
+            for j in 0..d {
+                pe[j] += src[j];
+            }
+        }
+    }
+    (dtok, dpos)
+}
+
+/// Per-tensor symmetric fake-quantization (`quant.weight_quant`):
+/// `scale = max|w| / (2^{bits-1} − 1)`, `q = clip(round(w/scale))·scale`.
+/// `bits >= 24` returns the input unchanged — the no-quant mode the
+/// gradient-check fixtures use (the STE gradient of a rounding forward
+/// cannot agree with finite differences). Backward is the straight-
+/// through identity either way.
+pub fn weight_fake_quant(w: &[f32], bits: usize) -> Vec<f32> {
+    if bits >= 24 {
+        return w.to_vec();
+    }
+    let lim = ((1i64 << (bits - 1)) - 1) as f32;
+    let amax = w.iter().fold(0f32, |a, &v| a.max(v.abs()));
+    let scale = amax.max(1e-8) / lim;
+    w.iter()
+        .map(|&v| (v / scale).round().clamp(-lim, lim) * scale)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn randn(rng: &mut Pcg64, len: usize) -> Vec<f32> {
+        let mut v = vec![0f32; len];
+        rng.fill_normal_f32(&mut v, 0.0, 1.0);
+        v
+    }
+
+    #[test]
+    fn softmax_rows_are_distributions() {
+        let mut x = vec![1.0f32, 2.0, 3.0, -40.0, 0.0, 40.0];
+        softmax_rows(&mut x, 3);
+        for row in x.chunks(3) {
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-6, "sum {s}");
+            assert!(row.iter().all(|&p| (0.0..=1.0).contains(&p)));
+        }
+        // Large logits stay finite (stability shift).
+        assert!((x[5] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn softmax_vjp_matches_finite_difference() {
+        let logits = [0.3f32, -1.2, 0.7, 0.1];
+        let dp = [0.5f32, -0.25, 1.0, 0.0];
+        let f = |z: &[f32]| -> Vec<f32> {
+            let mut p = z.to_vec();
+            softmax_rows(&mut p, z.len());
+            p
+        };
+        let p = f(&logits);
+        let mut ds = vec![0f32; 4];
+        softmax_row_vjp(&p, &dp, &mut ds);
+        let h = 1e-3f32;
+        for j in 0..4 {
+            let mut lp = logits;
+            lp[j] += h;
+            let mut lm = logits;
+            lm[j] -= h;
+            let (pp, pm) = (f(&lp), f(&lm));
+            let fd: f32 = (0..4)
+                .map(|i| dp[i] * (pp[i] - pm[i]) / (2.0 * h))
+                .sum();
+            assert!(
+                (fd - ds[j]).abs() < 1e-3,
+                "ds[{j}]: analytic {} vs fd {fd}",
+                ds[j]
+            );
+        }
+    }
+
+    #[test]
+    fn gelu_matches_known_values_and_grad() {
+        assert_eq!(gelu(0.0), 0.0);
+        // gelu(1) ≈ 0.8412 for the tanh approximation.
+        assert!((gelu(1.0) - 0.8412).abs() < 1e-3);
+        assert!((gelu(-1.0) + 0.1588).abs() < 1e-3);
+        // Gradient vs central difference.
+        for &x in &[-2.0f32, -0.5, 0.0, 0.3, 1.7] {
+            let h = 1e-3f32;
+            let fd = (gelu(x + h) - gelu(x - h)) / (2.0 * h);
+            assert!(
+                (gelu_grad(x) - fd).abs() < 1e-3,
+                "gelu'({x}): {} vs {fd}",
+                gelu_grad(x)
+            );
+        }
+    }
+
+    #[test]
+    fn layernorm_normalizes_and_backward_matches_fd() {
+        let mut rng = Pcg64::new(5);
+        let d = 6usize;
+        let rows = 3usize;
+        let x = randn(&mut rng, rows * d);
+        let gamma = randn(&mut rng, d);
+        let beta = randn(&mut rng, d);
+        let (y, cache) = layernorm_forward(&x, &gamma, &beta, d);
+        // Each row of (y - beta)/gamma has ~zero mean, ~unit variance.
+        for i in 0..rows {
+            let xh: Vec<f32> = (0..d)
+                .map(|j| (y[i * d + j] - beta[j]) / gamma[j])
+                .collect();
+            let m: f32 = xh.iter().sum::<f32>() / d as f32;
+            let v: f32 =
+                xh.iter().map(|&a| (a - m) * (a - m)).sum::<f32>()
+                    / d as f32;
+            assert!(m.abs() < 1e-4, "row {i} mean {m}");
+            assert!((v - 1.0).abs() < 1e-3, "row {i} var {v}");
+        }
+        // dx against central differences of a scalar loss Σ dy⊙y.
+        let dy = randn(&mut rng, rows * d);
+        let (dx, dgamma, dbeta) =
+            layernorm_backward(&dy, &x, &gamma, &cache, d);
+        let loss = |x: &[f32], gamma: &[f32], beta: &[f32]| -> f64 {
+            let (y, _) = layernorm_forward(x, gamma, beta, d);
+            y.iter().zip(&dy).map(|(&a, &b)| (a * b) as f64).sum()
+        };
+        let h = 1e-3f32;
+        for j in 0..rows * d {
+            let mut xp = x.clone();
+            xp[j] += h;
+            let mut xm = x.clone();
+            xm[j] -= h;
+            let fd = ((loss(&xp, &gamma, &beta)
+                - loss(&xm, &gamma, &beta))
+                / (2.0 * h as f64)) as f32;
+            assert!(
+                (dx[j] - fd).abs() < 2e-3,
+                "dx[{j}]: {} vs {fd}",
+                dx[j]
+            );
+        }
+        for j in 0..d {
+            let mut gp = gamma.clone();
+            gp[j] += h;
+            let mut gm = gamma.clone();
+            gm[j] -= h;
+            let fd = ((loss(&x, &gp, &beta) - loss(&x, &gm, &beta))
+                / (2.0 * h as f64)) as f32;
+            assert!(
+                (dgamma[j] - fd).abs() < 2e-3,
+                "dgamma[{j}]: {} vs {fd}",
+                dgamma[j]
+            );
+            let mut bp = beta.clone();
+            bp[j] += h;
+            let mut bm = beta.clone();
+            bm[j] -= h;
+            let fd = ((loss(&x, &gamma, &bp) - loss(&x, &gamma, &bm))
+                / (2.0 * h as f64)) as f32;
+            assert!(
+                (dbeta[j] - fd).abs() < 2e-3,
+                "dbeta[{j}]: {} vs {fd}",
+                dbeta[j]
+            );
+        }
+    }
+
+    #[test]
+    fn attention_is_thread_invariant_and_rowstochastic() {
+        let mut rng = Pcg64::new(7);
+        let (n, t, heads, d) = (3usize, 5usize, 2usize, 8usize);
+        let q = randn(&mut rng, n * t * d);
+        let k = randn(&mut rng, n * t * d);
+        let v = randn(&mut rng, n * t * d);
+        let mut probs1 = Vec::new();
+        let c1 = attention_forward(
+            &q, &k, &v, n, t, heads, d, 1, Some(&mut probs1),
+        );
+        let mut probs4 = Vec::new();
+        let c4 = attention_forward(
+            &q, &k, &v, n, t, heads, d, 4, Some(&mut probs4),
+        );
+        assert_eq!(c1, c4, "attention diverged across thread counts");
+        assert_eq!(probs1, probs4);
+        for row in probs1.chunks(t) {
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn attention_backward_matches_finite_difference() {
+        let mut rng = Pcg64::new(9);
+        let (n, t, heads, d) = (2usize, 3usize, 2usize, 4usize);
+        let q = randn(&mut rng, n * t * d);
+        let k = randn(&mut rng, n * t * d);
+        let v = randn(&mut rng, n * t * d);
+        let dctx = randn(&mut rng, n * t * d);
+        let mut probs = Vec::new();
+        let _ = attention_forward(
+            &q, &k, &v, n, t, heads, d, 1, Some(&mut probs),
+        );
+        let (dq, dk, dv) = attention_backward(
+            &dctx, &q, &k, &v, &probs, n, t, heads, d, 1,
+        );
+        let loss = |q: &[f32], k: &[f32], v: &[f32]| -> f64 {
+            let c =
+                attention_forward(q, k, v, n, t, heads, d, 1, None);
+            c.iter().zip(&dctx).map(|(&a, &b)| (a * b) as f64).sum()
+        };
+        let h = 1e-3f32;
+        let check = |name: &str,
+                     grad: &[f32],
+                     which: usize| {
+            for j in 0..n * t * d {
+                let perturb = |delta: f32| -> f64 {
+                    let mut qq = q.clone();
+                    let mut kk = k.clone();
+                    let mut vv = v.clone();
+                    match which {
+                        0 => qq[j] += delta,
+                        1 => kk[j] += delta,
+                        _ => vv[j] += delta,
+                    }
+                    loss(&qq, &kk, &vv)
+                };
+                let fd =
+                    ((perturb(h) - perturb(-h)) / (2.0 * h as f64))
+                        as f32;
+                assert!(
+                    (grad[j] - fd).abs() < 2e-3,
+                    "{name}[{j}]: {} vs fd {fd}",
+                    grad[j]
+                );
+            }
+        };
+        check("dq", &dq, 0);
+        check("dk", &dk, 1);
+        check("dv", &dv, 2);
+    }
+
+    #[test]
+    fn embedding_roundtrip_and_bounds() {
+        let (n, t, d, vocab) = (2usize, 3usize, 4usize, 5usize);
+        let mut rng = Pcg64::new(11);
+        let tok_emb = randn(&mut rng, vocab * d);
+        let pos_emb = randn(&mut rng, t * d);
+        let tokens = vec![0i32, 4, 2, 1, 1, 3];
+        let h = embedding_forward(
+            &tokens, &tok_emb, &pos_emb, n, t, d, vocab,
+        )
+        .unwrap();
+        assert_eq!(h.len(), n * t * d);
+        // h[0,0] = tok_emb[0] + pos_emb[0].
+        for j in 0..d {
+            assert_eq!(h[j], tok_emb[j] + pos_emb[j]);
+        }
+        // Backward conserves mass: every dh element lands exactly once
+        // in dtok and once in dpos.
+        let dh = randn(&mut rng, n * t * d);
+        let (dtok, dpos) =
+            embedding_backward(&dh, &tokens, n, t, d, vocab);
+        let total: f32 = dh.iter().sum();
+        let s1: f32 = dtok.iter().sum();
+        let s2: f32 = dpos.iter().sum();
+        assert!((s1 - total).abs() < 1e-4);
+        assert!((s2 - total).abs() < 1e-4);
+        // Out-of-vocab token errors.
+        let bad = vec![0i32, 5, 0, 0, 0, 0];
+        assert!(embedding_forward(
+            &bad, &tok_emb, &pos_emb, n, t, d, vocab
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn fake_quant_grid_and_identity_mode() {
+        let w = vec![0.5f32, -1.0, 0.26, 1.0];
+        let q = weight_fake_quant(&w, 4);
+        // amax 1.0 → scale 1/7; everything lands on k/7.
+        for (qq, ww) in q.iter().zip(&w) {
+            assert!((qq * 7.0 - (qq * 7.0).round()).abs() < 1e-5);
+            assert!((qq - ww).abs() <= 0.5 / 7.0 + 1e-6);
+        }
+        assert_eq!(weight_fake_quant(&w, 32), w);
+    }
+}

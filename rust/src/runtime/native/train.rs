@@ -1,0 +1,258 @@
+//! Native `train_backbone`: one QAT SGD-momentum step for `mlp`,
+//! `resnet` and `bert` manifests, mirroring `python/compile/model.py
+//! build_train_backbone`.
+//!
+//! The step is assembled from per-kind loss/gradient halves
+//! ([`super::cnn::backbone_grads`], [`super::bert::backbone_grads`],
+//! the mlp chain here) plus shared SGD bookkeeping:
+//!
+//! - every layer weight is fake-quantized per tensor
+//!   (`quant.weight_quant`, straight-through) before the forward, so
+//!   train-form numerics match the lowered QAT graphs;
+//! - the gradient set is exactly the signature's `m:{name}` momentum
+//!   inputs (the manifest's grad-flagged train weights);
+//! - `new_mom = 0.9·mom + grad`, `new_param = param − lr·new_mom`
+//!   (no clipping — only the compensation train step clips);
+//! - resnet running BN statistics come back EMA-updated from the
+//!   forward pass; all other non-grad parameters pass through.
+//!
+//! Outputs are emitted in signature order, so
+//! [`super::NativeGraph::run`] can hand them straight to the
+//! executor. Losses and gradients are bit-identical across
+//! `VERA_THREADS` (see the module docs of [`super`]).
+
+use super::bert;
+use super::cnn;
+use super::gemm;
+use super::model::{
+    act_quant, ce_loss_grad, req_f32, resolve_w, Named, Topo, TopoKind,
+    WeightOverrides,
+};
+use super::ops;
+use crate::nn::manifest::GraphSig;
+use crate::util::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// Fake-quantize every layer weight (`{layer}.w`) on the manifest's
+/// `w_bits` grid — the QAT forward's weight view. `w_bits >= 24` keeps
+/// the weights untouched (gradient-check fixtures).
+pub(crate) fn qat_weight_overrides(
+    topo: &Topo,
+    named: &Named,
+) -> Result<WeightOverrides> {
+    let mut wq = WeightOverrides::new();
+    for l in &topo.layers {
+        let name = format!("{}.w", l.name);
+        let numel = l.k * l.k * l.cin * l.cout;
+        let w = req_f32(named, &name, numel)?;
+        wq.insert(name, ops::weight_fake_quant(w, topo.w_bits));
+    }
+    Ok(wq)
+}
+
+/// QAT loss + weight/bias gradients for the mlp chain (linear + bias,
+/// ReLU between layers, act/weight fake-quant STE).
+fn mlp_backbone_grads(
+    topo: &Topo,
+    named: &Named,
+    wq: &WeightOverrides,
+    x: &Tensor,
+    labels: &[i32],
+    threads: usize,
+) -> Result<(f32, BTreeMap<String, Vec<f32>>)> {
+    let n = *x.shape.first().context("train batch axis")?;
+    if labels.len() != n {
+        bail!("train labels: {} for batch {n}", labels.len());
+    }
+    let n_layers = topo.layers.len();
+    let mut h = x.as_f32().to_vec();
+    // Per layer: (quantized input, pre-activation output).
+    let mut caches: Vec<(Vec<f32>, Vec<f32>)> =
+        Vec::with_capacity(n_layers);
+    for li in 0..n_layers {
+        let layer = &topo.layers[li];
+        let last = li + 1 == n_layers;
+        let (cin, cout) = (layer.cin, layer.cout);
+        if h.len() != n * cin {
+            bail!(
+                "mlp layer {}: input has {} features, expected {cin}",
+                layer.name,
+                h.len() / n.max(1)
+            );
+        }
+        let xq = act_quant(&h, n, topo.a_bits);
+        let w = resolve_w(named, Some(wq), &format!("{}.w", layer.name),
+                          cin * cout)?;
+        let bias =
+            req_f32(named, &format!("{}.bias", layer.name), cout)?;
+        let mut y = vec![0f32; n * cout];
+        gemm::gemm_threads(threads, n, cout, cin, &xq, w, &mut y);
+        for i in 0..n {
+            for o in 0..cout {
+                y[i * cout + o] += bias[o];
+            }
+        }
+        h = if last {
+            y.clone()
+        } else {
+            y.iter().map(|&v| v.max(0.0)).collect()
+        };
+        caches.push((xq, y));
+    }
+    let (loss, dlogits) = ce_loss_grad(&h, labels, n, topo.classes);
+    let mut grads: BTreeMap<String, Vec<f32>> = BTreeMap::new();
+    let mut upstream = dlogits;
+    for li in (0..n_layers).rev() {
+        let layer = &topo.layers[li];
+        let (cin, cout) = (layer.cin, layer.cout);
+        let (xq, y) = &caches[li];
+        let g: Vec<f32> = if li + 1 == n_layers {
+            upstream
+        } else {
+            upstream
+                .iter()
+                .zip(y)
+                .map(|(&gv, &yv)| if yv > 0.0 { gv } else { 0.0 })
+                .collect()
+        };
+        let mut dw = vec![0f32; cin * cout];
+        gemm::gemm_tn_threads(threads, n, cout, cin, xq, &g, &mut dw);
+        let mut dbias = vec![0f32; cout];
+        for i in 0..n {
+            for o in 0..cout {
+                dbias[o] += g[i * cout + o];
+            }
+        }
+        grads.insert(format!("{}.w", layer.name), dw);
+        grads.insert(format!("{}.bias", layer.name), dbias);
+        if li > 0 {
+            let w = resolve_w(
+                named,
+                Some(wq),
+                &format!("{}.w", layer.name),
+                cin * cout,
+            )?;
+            let mut dx = vec![0f32; n * cin];
+            gemm::gemm_nt_threads(threads, n, cin, cout, &g, w,
+                                  &mut dx);
+            upstream = dx;
+        } else {
+            upstream = Vec::new();
+        }
+    }
+    Ok((loss, grads))
+}
+
+/// One native `train_backbone` step: dispatches the per-kind
+/// loss/gradient computation, then applies SGD momentum and emits the
+/// outputs in `sig` order.
+pub(crate) fn backbone_step(
+    topo: &Topo,
+    sig: &GraphSig,
+    named: &Named,
+    threads: usize,
+) -> Result<Vec<Tensor>> {
+    let x = *named.get("x").context("train input 'x'")?;
+    let labels_t = named.get("y").context("train input 'y'")?;
+    let labels = labels_t.as_i32();
+    let lr = named.get("lr").context("train input 'lr'")?.as_f32()[0];
+    let wq = qat_weight_overrides(topo, named)?;
+    let (loss, grads, new_stats) = match &topo.kind {
+        TopoKind::Mlp => {
+            let (loss, grads) =
+                mlp_backbone_grads(topo, named, &wq, x, labels,
+                                   threads)?;
+            (loss, grads, BTreeMap::new())
+        }
+        TopoKind::Resnet { blocks } => {
+            cnn::backbone_grads(topo, blocks, named, &wq, x, labels,
+                                threads)?
+        }
+        TopoKind::Bert { meta } => {
+            let (loss, grads) = bert::backbone_grads(
+                topo, meta, named, &wq, x, labels, threads,
+            )?;
+            (loss, grads, BTreeMap::new())
+        }
+    };
+    // The gradient set is defined by the signature's momentum inputs.
+    let mut new_mom: BTreeMap<String, Vec<f32>> = BTreeMap::new();
+    for spec in &sig.inputs {
+        if let Some(pname) = spec.name.strip_prefix("m:") {
+            let g = grads.get(pname).with_context(|| {
+                format!(
+                    "native train_backbone: no gradient for '{pname}' \
+                     (momentum input '{}')",
+                    spec.name
+                )
+            })?;
+            let mom0 = req_f32(named, &spec.name, g.len())?;
+            new_mom.insert(
+                pname.to_string(),
+                mom0.iter()
+                    .zip(g)
+                    .map(|(&m, &gr)| 0.9 * m + gr)
+                    .collect(),
+            );
+        }
+    }
+    sig.outputs
+        .iter()
+        .map(|spec| {
+            if spec.name == "loss" {
+                return Ok(Tensor::from_f32(&spec.shape, vec![loss]));
+            }
+            if let Some(pname) = spec.name.strip_prefix("m:") {
+                let m = new_mom.get(pname).with_context(|| {
+                    format!(
+                        "native train_backbone: no momentum for \
+                         output '{}'",
+                        spec.name
+                    )
+                })?;
+                if m.len() != spec.numel() {
+                    bail!(
+                        "train_backbone: momentum '{}' numel mismatch",
+                        spec.name
+                    );
+                }
+                return Ok(Tensor::from_f32(&spec.shape, m.clone()));
+            }
+            if let Some(m) = new_mom.get(&spec.name) {
+                // Grad-flagged parameter: SGD update.
+                let cur = req_f32(named, &spec.name, spec.numel())?;
+                let val: Vec<f32> = cur
+                    .iter()
+                    .zip(m)
+                    .map(|(&c, &mv)| c - lr * mv)
+                    .collect();
+                return Ok(Tensor::from_f32(&spec.shape, val));
+            }
+            if let Some(st) = new_stats.get(&spec.name) {
+                // EMA-updated running BN statistic.
+                if st.len() != spec.numel() {
+                    bail!(
+                        "train_backbone: stat '{}' numel mismatch",
+                        spec.name
+                    );
+                }
+                return Ok(Tensor::from_f32(&spec.shape, st.clone()));
+            }
+            // Non-grad, non-stat parameter: passthrough.
+            let t = named.get(spec.name.as_str()).with_context(|| {
+                format!(
+                    "native train_backbone: no value for output '{}'",
+                    spec.name
+                )
+            })?;
+            if t.len() != spec.numel() {
+                bail!(
+                    "train_backbone: output '{}' numel mismatch",
+                    spec.name
+                );
+            }
+            Ok((*t).clone())
+        })
+        .collect()
+}

@@ -98,13 +98,32 @@ impl Runtime {
         self.backend.name()
     }
 
-    /// Load (and cache) a model manifest.
+    /// Load (and cache) a model manifest. On the native backend a
+    /// missing manifest file falls back to the built-in model
+    /// configurations ([`crate::nn::configs`]) — the interpreter only
+    /// needs the manifest, so every known model runs with no artifacts
+    /// at all. PJRT keeps requiring the real file (its HLO artifacts
+    /// live next to it).
     pub fn manifest(&self, model: &str) -> Result<Arc<ModelManifest>> {
         if let Some(m) = self.manifests.lock().unwrap().get(model) {
             return Ok(m.clone());
         }
         let path = self.artifact_dir.join(format!("{model}.manifest.json"));
-        let m = Arc::new(ModelManifest::load(&path)?);
+        let manifest = if path.exists() || self.backend.name() != "native"
+        {
+            ModelManifest::load(&path)?
+        } else {
+            crate::nn::configs::builtin_manifest(model).with_context(
+                || {
+                    format!(
+                        "no manifest file {} and no built-in config \
+                         for model '{model}'",
+                        path.display()
+                    )
+                },
+            )?
+        };
+        let m = Arc::new(manifest);
         self.manifests
             .lock()
             .unwrap()

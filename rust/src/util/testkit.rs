@@ -210,9 +210,46 @@ fn graph(key: &str, inputs: Vec<TensorSpec>,
     )
 }
 
+/// Momentum input/output specs for a trainable list.
+fn momentum_specs(trainables: &[TensorSpec]) -> Vec<TensorSpec> {
+    trainables
+        .iter()
+        .map(|t| f32_spec(&format!("m:{}", t.name), &t.shape))
+        .collect()
+}
+
+/// Build the `train_backbone` graph signature over a train-weight
+/// list: weights + momenta + (x, y, lr) in; updated weights + momenta
+/// + loss out (same contract as `model.build_train_backbone`).
+fn backbone_graph(
+    train: &[WeightSpec],
+    x: TensorSpec,
+    batch: usize,
+) -> (String, GraphSig) {
+    let wspecs: Vec<TensorSpec> = train
+        .iter()
+        .map(|w| f32_spec(&w.name, &w.shape))
+        .collect();
+    let mspecs: Vec<TensorSpec> = train
+        .iter()
+        .filter(|w| w.grad)
+        .map(|w| f32_spec(&format!("m:{}", w.name), &w.shape))
+        .collect();
+    let mut inputs = wspecs.clone();
+    inputs.extend(mspecs.clone());
+    inputs.push(x);
+    inputs.push(i32_spec("y", &[batch]));
+    inputs.push(f32_spec("lr", &[]));
+    let mut outputs = wspecs;
+    outputs.extend(mspecs);
+    outputs.push(f32_spec("loss", &[]));
+    graph("train_backbone", inputs, outputs)
+}
+
 /// In-memory manifest of the testkit MLP (`l0`: 16→32, `fc`: 32→4)
 /// with native-runnable `fwd_b256` / `comp_veraplus_r{rank}_b256` /
-/// `train_veraplus_r{rank}` graphs.
+/// `train_veraplus_r{rank}` / `train_backbone` / `train_fwd_b256`
+/// graphs.
 pub fn native_manifest(rank: usize) -> ModelManifest {
     let layers = vec![
         LayerGeom {
@@ -333,6 +370,33 @@ pub fn native_manifest(rank: usize) -> ModelManifest {
     let (k, g) =
         graph(&format!("train_veraplus_r{rank}"), inputs, outputs);
     graphs.insert(k, g);
+    // Backbone QAT train step + train-form eval forward (the mlp
+    // trains in deploy form, so train weights mirror deploy).
+    let train_weights: Vec<WeightSpec> = deploy_weights
+        .iter()
+        .map(|w| WeightSpec {
+            rram: false,
+            grad: true,
+            ..w.clone()
+        })
+        .collect();
+    let (k, g) = backbone_graph(
+        &train_weights,
+        f32_spec("x", &[NATIVE_TRAIN_BATCH, NATIVE_D_IN]),
+        NATIVE_TRAIN_BATCH,
+    );
+    graphs.insert(k, g);
+    let mut inputs: Vec<TensorSpec> = train_weights
+        .iter()
+        .map(|w| f32_spec(&w.name, &w.shape))
+        .collect();
+    inputs.push(f32_spec("x", &[NATIVE_EVAL_BATCH, NATIVE_D_IN]));
+    let (k, g) = graph(
+        &format!("train_fwd_b{NATIVE_EVAL_BATCH}"),
+        inputs,
+        vec![f32_spec("logits", &[NATIVE_EVAL_BATCH, NATIVE_CLASSES])],
+    );
+    graphs.insert(k, g);
 
     ModelManifest {
         model: NATIVE_MODEL.to_string(),
@@ -342,11 +406,12 @@ pub fn native_manifest(rank: usize) -> ModelManifest {
         a_bits: 8,
         input_dim: NATIVE_D_IN,
         vocab: 0,
+        heads: 0,
         d_in_max: d_max,
         d_out_max: d_max,
         layers,
         deploy_weights,
-        train_weights: Vec::new(),
+        train_weights,
         graphs,
     }
 }
@@ -420,6 +485,594 @@ pub fn native_deployment(
         drift,
         seed,
     )
+}
+
+// ---------------------------------------------------------------------
+// BERT testkit: a runnable bert-kind manifest + token task.
+// ---------------------------------------------------------------------
+
+/// Model name of the native BERT testkit deployment.
+pub const BERT_MODEL: &str = "testkit_bert";
+pub const BERT_D: usize = 8;
+pub const BERT_HEADS: usize = 2;
+pub const BERT_SEQ: usize = 8;
+pub const BERT_VOCAB: usize = 32;
+pub const BERT_CLASSES: usize = 3;
+/// Eval-graph batch; the test split deliberately overhangs it so every
+/// evaluation exercises the padded tail-batch path.
+pub const BERT_EVAL_BATCH: usize = 32;
+pub const BERT_TRAIN_BATCH: usize = 16;
+pub const BERT_TEST_LEN: usize = 40;
+
+/// BERT layer inventory per the `python/compile/bert.py` naming
+/// contract (`l{i}.wq/.wk/.wv/.wo/.ff1/.ff2` … `cls`).
+fn bert_layer_geoms(
+    layers_n: usize,
+    d: usize,
+    d_ff: usize,
+    seq: usize,
+    classes: usize,
+) -> Vec<LayerGeom> {
+    let lin = |name: String, cin: usize, cout: usize, hw: usize| {
+        LayerGeom {
+            name,
+            kind: "linear".into(),
+            cin,
+            cout,
+            k: 1,
+            stride: 1,
+            hw_in: hw,
+            hw_out: hw,
+        }
+    };
+    let mut out = Vec::new();
+    for i in 0..layers_n {
+        for nm in ["wq", "wk", "wv", "wo"] {
+            out.push(lin(format!("l{i}.{nm}"), d, d, seq));
+        }
+        out.push(lin(format!("l{i}.ff1"), d, d_ff, seq));
+        out.push(lin(format!("l{i}.ff2"), d_ff, d, seq));
+    }
+    out.push(lin("cls".into(), d, classes, 1));
+    out
+}
+
+/// BERT deploy (== train) weight list: linear `.w` tensors drift,
+/// embeddings / LayerNorm parameters / biases are digital.
+fn bert_weight_specs(
+    layers: &[LayerGeom],
+    layers_n: usize,
+    d: usize,
+    seq: usize,
+    vocab: usize,
+) -> Vec<WeightSpec> {
+    let w = |name: String,
+             shape: Vec<usize>,
+             rram: bool,
+             init: Option<f64>| {
+        WeightSpec {
+            name,
+            shape,
+            rram,
+            grad: true,
+            init,
+        }
+    };
+    let mut out = vec![
+        w("tok_emb".into(), vec![vocab, d], false, None),
+        w("pos_emb".into(), vec![seq, d], false, None),
+    ];
+    for l in layers {
+        out.push(w(
+            format!("{}.w", l.name),
+            vec![l.cin, l.cout],
+            true,
+            None,
+        ));
+        out.push(w(format!("{}.bias", l.name), vec![l.cout], false,
+                   None));
+    }
+    for i in 0..layers_n {
+        for ln in ["ln1", "ln2"] {
+            out.push(w(
+                format!("l{i}.{ln}.gamma"),
+                vec![d],
+                false,
+                Some(1.0),
+            ));
+            out.push(w(
+                format!("l{i}.{ln}.beta"),
+                vec![d],
+                false,
+                Some(0.0),
+            ));
+        }
+    }
+    out.push(w("ln_f.gamma".into(), vec![d], false, Some(1.0)));
+    out.push(w("ln_f.beta".into(), vec![d], false, Some(0.0)));
+    out
+}
+
+/// Assemble a full bert-kind manifest with forward, compensated
+/// forward, comp-train, backbone-train and train-form-eval graphs.
+#[allow(clippy::too_many_arguments)]
+fn bert_manifest_with(
+    model: &str,
+    layers_n: usize,
+    d: usize,
+    heads: usize,
+    seq: usize,
+    vocab: usize,
+    classes: usize,
+    rank: usize,
+    eval_batch: usize,
+    train_batch: usize,
+    a_bits: usize,
+    w_bits: usize,
+) -> ModelManifest {
+    let d_ff = 4 * d;
+    let layers = bert_layer_geoms(layers_n, d, d_ff, seq, classes);
+    let weights =
+        bert_weight_specs(&layers, layers_n, d, seq, vocab);
+    let d_in_max = layers.iter().map(|l| l.cin).max().unwrap();
+    let d_out_max = layers.iter().map(|l| l.cout).max().unwrap();
+    let wspecs: Vec<TensorSpec> = weights
+        .iter()
+        .map(|w| f32_spec(&w.name, &w.shape))
+        .collect();
+    let comp_specs = |v: &mut Vec<TensorSpec>| {
+        v.push(f32_spec("A_max", &[rank, d_in_max]));
+        v.push(f32_spec("B_max", &[d_out_max, rank]));
+        for l in &layers {
+            v.push(f32_spec(&format!("{}.d", l.name), &[rank]));
+            v.push(f32_spec(&format!("{}.b", l.name), &[l.cout]));
+        }
+    };
+    let mut graphs = BTreeMap::new();
+    // Plain forward.
+    let mut inputs = wspecs.clone();
+    inputs.push(i32_spec("x", &[eval_batch, seq]));
+    let (k, g) = graph(
+        &format!("fwd_b{eval_batch}"),
+        inputs,
+        vec![f32_spec("logits", &[eval_batch, classes])],
+    );
+    graphs.insert(k, g);
+    // Compensated forward.
+    let mut inputs = wspecs.clone();
+    comp_specs(&mut inputs);
+    inputs.push(i32_spec("x", &[eval_batch, seq]));
+    let (k, g) = graph(
+        &format!("comp_veraplus_r{rank}_b{eval_batch}"),
+        inputs,
+        vec![f32_spec("logits", &[eval_batch, classes])],
+    );
+    graphs.insert(k, g);
+    // Compensation train step.
+    let mut inputs = wspecs.clone();
+    comp_specs(&mut inputs);
+    let mut trainables = Vec::new();
+    comp_specs(&mut trainables);
+    let trainables: Vec<TensorSpec> = trainables
+        .into_iter()
+        .filter(|t| t.name != "A_max" && t.name != "B_max")
+        .collect();
+    inputs.extend(momentum_specs(&trainables));
+    inputs.push(i32_spec("x", &[train_batch, seq]));
+    inputs.push(i32_spec("y", &[train_batch]));
+    inputs.push(f32_spec("lr", &[]));
+    let mut outputs = trainables.clone();
+    outputs.extend(momentum_specs(&trainables));
+    outputs.push(f32_spec("loss", &[]));
+    let (k, g) =
+        graph(&format!("train_veraplus_r{rank}"), inputs, outputs);
+    graphs.insert(k, g);
+    // Backbone QAT step + train-form eval forward.
+    let (k, g) = backbone_graph(
+        &weights,
+        i32_spec("x", &[train_batch, seq]),
+        train_batch,
+    );
+    graphs.insert(k, g);
+    let mut inputs = wspecs.clone();
+    inputs.push(i32_spec("x", &[eval_batch, seq]));
+    let (k, g) = graph(
+        &format!("train_fwd_b{eval_batch}"),
+        inputs,
+        vec![f32_spec("logits", &[eval_batch, classes])],
+    );
+    graphs.insert(k, g);
+
+    ModelManifest {
+        model: model.to_string(),
+        kind: "bert".to_string(),
+        classes,
+        w_bits,
+        a_bits,
+        input_dim: seq,
+        vocab,
+        heads,
+        d_in_max,
+        d_out_max,
+        layers,
+        deploy_weights: weights.clone(),
+        train_weights: weights,
+        graphs,
+    }
+}
+
+/// In-memory manifest of the testkit BERT analog: 1 encoder layer,
+/// `d_model` 8, 2 heads, seq 8, vocab 32, 3 classes — every graph in
+/// the native inventory, W4A8 like the real BERT configs.
+pub fn native_bert_manifest(rank: usize) -> ModelManifest {
+    bert_manifest_with(
+        BERT_MODEL,
+        1,
+        BERT_D,
+        BERT_HEADS,
+        BERT_SEQ,
+        BERT_VOCAB,
+        BERT_CLASSES,
+        rank,
+        BERT_EVAL_BATCH,
+        BERT_TRAIN_BATCH,
+        8,
+        4,
+    )
+}
+
+/// Tiny procedural token-classification task for the BERT testkit:
+/// class `c` draws most tokens from its own vocabulary band, so the
+/// sequence's dominant band determines the label. Deterministic per
+/// (seed, split, index).
+pub struct TokenBlobTask {
+    seed: u64,
+}
+
+impl TokenBlobTask {
+    pub fn new(seed: u64) -> TokenBlobTask {
+        TokenBlobTask { seed }
+    }
+
+    fn sample(&self, split: u64, idx: usize) -> (Vec<i32>, i32) {
+        let label = (idx % BERT_CLASSES) as i32;
+        let mut rng = Pcg64::with_stream(
+            self.seed
+                ^ (idx as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15),
+            split,
+        );
+        let band = BERT_VOCAB / BERT_CLASSES;
+        let lo = label as usize * band;
+        let seq: Vec<i32> = (0..BERT_SEQ)
+            .map(|_| {
+                if rng.uniform() < 0.75 {
+                    (lo + rng.below(band)) as i32
+                } else {
+                    rng.below(BERT_VOCAB) as i32
+                }
+            })
+            .collect();
+        (seq, label)
+    }
+
+    fn batch(&self, split: u64, indices: &[usize]) -> Batch {
+        let n = indices.len();
+        let mut xs = Vec::with_capacity(n * BERT_SEQ);
+        let mut ys = Vec::with_capacity(n);
+        for &idx in indices {
+            let (x, y) = self.sample(split, idx);
+            xs.extend_from_slice(&x);
+            ys.push(y);
+        }
+        Batch {
+            x: Tensor::from_i32(&[n, BERT_SEQ], xs),
+            y: Tensor::from_i32(&[n], ys),
+        }
+    }
+}
+
+impl Dataset for TokenBlobTask {
+    fn classes(&self) -> usize {
+        BERT_CLASSES
+    }
+
+    fn train_len(&self) -> usize {
+        256
+    }
+
+    fn test_len(&self) -> usize {
+        BERT_TEST_LEN
+    }
+
+    fn train_batch(&self, indices: &[usize]) -> Batch {
+        self.batch(0xb127, indices)
+    }
+
+    fn test_batch(&self, indices: &[usize]) -> Batch {
+        self.batch(0xbe57, indices)
+    }
+}
+
+/// A fully-runnable, artifact-free BERT deployment over the native
+/// backend: in-memory bert manifest + initialized/programmed weights +
+/// token task. EVALSTATS, compensation training and backbone QAT all
+/// run end-to-end on it — no PJRT, no files.
+pub fn native_bert_deployment(
+    rank: usize,
+    seed: u64,
+    drift: Box<dyn DriftModel>,
+) -> Deployment {
+    let rt = Arc::new(Runtime::with_manifest(native_bert_manifest(rank)));
+    let manifest = rt
+        .manifest(BERT_MODEL)
+        .expect("registered manifest resolves");
+    // Train form == deploy form for BERT analogs: initialize train
+    // parameters and program them directly.
+    let deploy = crate::nn::init::init_train_params(&manifest, seed);
+    let mut grid = ConductanceGrid::default();
+    grid.prog_sigma = 0.0;
+    let mut rng = Pcg64::with_stream(seed, 0xdeb7);
+    let net =
+        ProgrammedNetwork::program(&manifest, &deploy, grid, &mut rng)
+            .expect("testkit bert network programs");
+    Deployment::new(
+        rt,
+        manifest,
+        net,
+        Box::new(TokenBlobTask::new(0x70cb_10b5)),
+        "veraplus",
+        rank,
+        drift,
+        seed,
+    )
+}
+
+// ---------------------------------------------------------------------
+// Gradient-check fixtures: quantization-free tiny manifests.
+// ---------------------------------------------------------------------
+
+/// Batch size of every gradient-check train graph.
+pub const GRAD_BATCH: usize = 4;
+/// Rank of the gradient-check comp-train graphs.
+pub const GRAD_RANK: usize = 2;
+/// `a_bits`/`w_bits` sentinel that disables fake-quantization: the
+/// straight-through gradient of a rounding forward cannot agree with
+/// finite differences, so the FD checks run the smooth variant.
+pub const NO_QUANT_BITS: usize = 32;
+
+/// Quantization-free tiny mlp manifest (`l0`: 5→6, `fc`: 6→3) with
+/// `train_backbone` and `train_veraplus_r2` graphs.
+pub fn gradcheck_mlp_manifest() -> ModelManifest {
+    let mut man = native_manifest(GRAD_RANK);
+    // Shrink to FD scale and disable quantization.
+    let j = parse(&format!(
+        r#"{{
+        "model": "gradcheck_mlp", "kind": "mlp", "classes": 3,
+        "seq": 5, "w_bits": {NO_QUANT_BITS}, "a_bits": {NO_QUANT_BITS},
+        "d_in_max": 6, "d_out_max": 6,
+        "layers": [
+          {{"name": "l0", "kind": "linear", "cin": 5, "cout": 6,
+           "k": 1, "stride": 1, "hw_in": 1, "hw_out": 1}},
+          {{"name": "fc", "kind": "linear", "cin": 6, "cout": 3,
+           "k": 1, "stride": 1, "hw_in": 1, "hw_out": 1}}
+        ],
+        "deploy_weights": [], "train_weights": [], "graphs": {{}}}}"#
+    ))
+    .expect("gradcheck mlp json");
+    let skel = ModelManifest::from_json(&j, std::path::Path::new("."))
+        .expect("gradcheck mlp manifest");
+    man.model = skel.model;
+    man.kind = skel.kind;
+    man.classes = skel.classes;
+    man.w_bits = skel.w_bits;
+    man.a_bits = skel.a_bits;
+    man.input_dim = skel.input_dim;
+    man.d_in_max = skel.d_in_max;
+    man.d_out_max = skel.d_out_max;
+    man.layers = skel.layers;
+    let weights: Vec<WeightSpec> = [
+        ("l0.w", vec![5usize, 6]),
+        ("l0.bias", vec![6]),
+        ("fc.w", vec![6, 3]),
+        ("fc.bias", vec![3]),
+    ]
+    .into_iter()
+    .map(|(name, shape)| WeightSpec {
+        name: name.to_string(),
+        shape,
+        rram: name.ends_with(".w"),
+        grad: true,
+        init: None,
+    })
+    .collect();
+    man.deploy_weights = weights.clone();
+    man.train_weights = weights
+        .iter()
+        .map(|w| WeightSpec {
+            rram: false,
+            ..w.clone()
+        })
+        .collect();
+    man.graphs = gradcheck_graphs(
+        &man,
+        f32_spec("x", &[GRAD_BATCH, 5]),
+    );
+    man
+}
+
+/// Quantization-free tiny resnet manifest (stem + one strided block
+/// with downsample + fc) with `train_backbone` (BN train form) and
+/// `train_veraplus_r2` (folded deploy form) graphs.
+pub fn gradcheck_resnet_manifest() -> ModelManifest {
+    let j = parse(&format!(
+        r#"{{
+        "model": "gradcheck_resnet", "kind": "resnet", "classes": 3,
+        "image": 6, "w_bits": {NO_QUANT_BITS},
+        "a_bits": {NO_QUANT_BITS}, "d_in_max": 5, "d_out_max": 5,
+        "layers": [
+          {{"name": "stem", "kind": "conv", "cin": 3, "cout": 4,
+           "k": 3, "stride": 1, "hw_in": 6, "hw_out": 6}},
+          {{"name": "s1b0.conv1", "kind": "conv", "cin": 4, "cout": 5,
+           "k": 3, "stride": 2, "hw_in": 6, "hw_out": 3}},
+          {{"name": "s1b0.conv2", "kind": "conv", "cin": 5, "cout": 5,
+           "k": 3, "stride": 1, "hw_in": 3, "hw_out": 3}},
+          {{"name": "s1b0.down", "kind": "conv", "cin": 4, "cout": 5,
+           "k": 1, "stride": 2, "hw_in": 6, "hw_out": 3}},
+          {{"name": "fc", "kind": "linear", "cin": 5, "cout": 3,
+           "k": 1, "stride": 1, "hw_in": 1, "hw_out": 1}}
+        ],
+        "deploy_weights": [], "train_weights": [], "graphs": {{}}}}"#
+    ))
+    .expect("gradcheck resnet json");
+    let mut man =
+        ModelManifest::from_json(&j, std::path::Path::new("."))
+            .expect("gradcheck resnet manifest");
+    let mut deploy = Vec::new();
+    let mut train = Vec::new();
+    for l in &man.layers {
+        let wshape = if l.kind == "conv" {
+            vec![l.k, l.k, l.cin, l.cout]
+        } else {
+            vec![l.cin, l.cout]
+        };
+        deploy.push(WeightSpec {
+            name: format!("{}.w", l.name),
+            shape: wshape.clone(),
+            rram: true,
+            grad: true,
+            init: None,
+        });
+        deploy.push(WeightSpec {
+            name: format!("{}.bias", l.name),
+            shape: vec![l.cout],
+            rram: false,
+            grad: true,
+            init: None,
+        });
+        if l.kind == "conv" {
+            train.push(WeightSpec {
+                name: format!("{}.w", l.name),
+                shape: wshape,
+                rram: false,
+                grad: true,
+                init: None,
+            });
+            for (p, init, grad) in [
+                ("gamma", 1.0, true),
+                ("beta", 0.0, true),
+                ("mu", 0.0, false),
+                ("var", 1.0, false),
+            ] {
+                train.push(WeightSpec {
+                    name: format!("{}.{p}", l.name),
+                    shape: vec![l.cout],
+                    rram: false,
+                    grad,
+                    init: Some(init),
+                });
+            }
+        } else {
+            train.push(WeightSpec {
+                name: format!("{}.w", l.name),
+                shape: wshape,
+                rram: false,
+                grad: true,
+                init: None,
+            });
+            train.push(WeightSpec {
+                name: format!("{}.bias", l.name),
+                shape: vec![l.cout],
+                rram: false,
+                grad: true,
+                init: Some(0.0),
+            });
+        }
+    }
+    man.deploy_weights = deploy;
+    man.train_weights = train;
+    man.graphs = gradcheck_graphs(
+        &man,
+        f32_spec("x", &[GRAD_BATCH, 6, 6, 3]),
+    );
+    man
+}
+
+/// Quantization-free tiny bert manifest (1 layer, `d_model` 6, 2
+/// heads, seq 4, vocab 10) with `train_backbone` and
+/// `train_veraplus_r2` graphs.
+pub fn gradcheck_bert_manifest() -> ModelManifest {
+    bert_manifest_with(
+        "gradcheck_bert",
+        1,
+        6,
+        2,
+        4,
+        10,
+        3,
+        GRAD_RANK,
+        GRAD_BATCH,
+        GRAD_BATCH,
+        NO_QUANT_BITS,
+        NO_QUANT_BITS,
+    )
+}
+
+/// `train_backbone` + `train_veraplus_r{GRAD_RANK}` graphs for a
+/// gradient-check manifest (batch [`GRAD_BATCH`]).
+fn gradcheck_graphs(
+    man: &ModelManifest,
+    x: TensorSpec,
+) -> BTreeMap<String, GraphSig> {
+    let mut graphs = BTreeMap::new();
+    let (k, g) =
+        backbone_graph(&man.train_weights, x.clone(), GRAD_BATCH);
+    graphs.insert(k, g);
+    // Comp train over the deploy-form weights.
+    let mut inputs: Vec<TensorSpec> = man
+        .deploy_weights
+        .iter()
+        .map(|w| f32_spec(&w.name, &w.shape))
+        .collect();
+    inputs.push(f32_spec("A_max", &[GRAD_RANK, man.d_in_max]));
+    inputs.push(f32_spec("B_max", &[man.d_out_max, GRAD_RANK]));
+    let mut trainables = Vec::new();
+    for l in &man.layers {
+        trainables.push(f32_spec(&format!("{}.d", l.name),
+                                 &[GRAD_RANK]));
+        trainables.push(f32_spec(&format!("{}.b", l.name), &[l.cout]));
+    }
+    inputs.extend(trainables.clone());
+    inputs.extend(momentum_specs(&trainables));
+    inputs.push(x);
+    inputs.push(i32_spec("y", &[GRAD_BATCH]));
+    inputs.push(f32_spec("lr", &[]));
+    let mut outputs = trainables.clone();
+    outputs.extend(momentum_specs(&trainables));
+    outputs.push(f32_spec("loss", &[]));
+    let (k, g) =
+        graph(&format!("train_veraplus_r{GRAD_RANK}"), inputs, outputs);
+    graphs.insert(k, g);
+    graphs
+}
+
+/// Random f32 tensors for a weight-spec list (init hints respected):
+/// the gradient-check parameter sets.
+pub fn random_params(specs: &[WeightSpec], seed: u64) -> TensorMap {
+    let mut rng = Pcg64::with_stream(seed, 0x6bad);
+    let mut out = TensorMap::new();
+    for spec in specs {
+        let n: usize = spec.shape.iter().product();
+        let t = match spec.init {
+            Some(c) => Tensor::from_f32(&spec.shape, vec![c as f32; n]),
+            None => {
+                let mut v = vec![0f32; n];
+                rng.fill_normal_f32(&mut v, 0.0, 0.4);
+                Tensor::from_f32(&spec.shape, v)
+            }
+        };
+        out.insert(spec.name.clone(), t);
+    }
+    out
 }
 
 /// Table II analog on the native testkit deployment (fixed seed):

@@ -6,19 +6,28 @@
 //! - Bit-reproducibility of logits across worker-thread counts.
 //! - Backend parity: the `Runtime`-compiled `fwd_b256` graph against an
 //!   independent reference forward written in this test.
+//! - Differential oracles for the BERT ops: softmax / LayerNorm / GELU
+//!   / multi-head attention against independent naive f64 references
+//!   (≤ 1e-4, ragged sequence lengths included), plus whole-model BERT
+//!   parity (fused comp epilogue included) against a from-scratch f64
+//!   forward, and the padded tail-batch eval path on the BERT testkit
+//!   deployment.
 //!
-//! All artifact-free: the deployment comes from
-//! `util::testkit::native_deployment` (in-memory manifest, native
-//! backend).
+//! All artifact-free: deployments come from
+//! `util::testkit::{native_deployment, native_bert_deployment}`
+//! (in-memory manifests, native backend).
 
-use vera_plus::rram::NoDrift;
-use vera_plus::runtime::native::gemm;
+use vera_plus::coordinator::eval::{self, EvalMode};
+use vera_plus::rram::{IbmDrift, NoDrift};
+use vera_plus::runtime::native::{gemm, ops};
 use vera_plus::util::prop::{forall, Gen};
 use vera_plus::util::rng::Pcg64;
-use vera_plus::util::tensor::TensorMap;
+use vera_plus::util::tensor::{Tensor, TensorMap};
 use vera_plus::util::testkit::{
-    native_deployment, NATIVE_CLASSES, NATIVE_D_IN, NATIVE_EVAL_BATCH,
-    NATIVE_MODEL,
+    gradcheck_bert_manifest, native_bert_deployment,
+    native_deployment, random_params, BERT_MODEL, BERT_TEST_LEN,
+    GRAD_BATCH, GRAD_RANK, NATIVE_CLASSES, NATIVE_D_IN,
+    NATIVE_EVAL_BATCH, NATIVE_MODEL,
 };
 
 fn randn(rng: &mut Pcg64, len: usize) -> Vec<f32> {
@@ -249,11 +258,17 @@ fn logits_are_bit_identical_across_thread_counts() {
 #[test]
 fn unsupported_graphs_error_descriptively() {
     let dep = native_deployment(1, 5, Box::new(NoDrift));
-    // Absent graph: registry-level error.
+    // Absent graph: registry-level error (the mlp manifest lowers no
+    // BN-calibration forward).
+    assert!(dep
+        .rt
+        .executable(NATIVE_MODEL, "bn_fwd_b256")
+        .is_err());
+    // train_backbone is in the native inventory now.
     assert!(dep
         .rt
         .executable(NATIVE_MODEL, "train_backbone")
-        .is_err());
+        .is_ok());
     // Present-but-unsupported method: native compile error mentions
     // PJRT.
     let mut manifest =
@@ -264,10 +279,510 @@ fn unsupported_graphs_error_descriptively() {
     manifest
         .graphs
         .insert("comp_lora_r1_b256".to_string(), lora);
+    // A bn_fwd key on a non-resnet manifest: compile-level error that
+    // names the PJRT path.
+    let fwd = manifest.graphs.get("fwd_b256").unwrap();
+    let mut bn = fwd.clone();
+    bn.key = "bn_fwd_b256".to_string();
+    manifest.graphs.insert("bn_fwd_b256".to_string(), bn);
     let rt = vera_plus::runtime::Runtime::with_manifest(manifest);
     let err = rt
         .executable(NATIVE_MODEL, "comp_lora_r1_b256")
         .unwrap_err();
     let msg = format!("{err:#}");
     assert!(msg.contains("PJRT"), "unhelpful error: {msg}");
+    let err =
+        rt.executable(NATIVE_MODEL, "bn_fwd_b256").unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("PJRT") && msg.contains("resnet"),
+        "unhelpful error: {msg}"
+    );
+}
+
+// ---------------------------------------------------------------------
+// BERT differential oracles: naive f64 references, written from
+// scratch — they share no code with the backend under test.
+// ---------------------------------------------------------------------
+
+fn randn_seeded(len: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg64::new(seed);
+    let mut v = vec![0f32; len];
+    rng.fill_normal_f32(&mut v, 0.0, 1.0);
+    v
+}
+
+#[test]
+fn softmax_matches_f64_reference_on_ragged_rows() {
+    for (rows, cols, seed) in
+        [(1usize, 1usize, 1u64), (4, 3, 2), (5, 7, 3), (2, 33, 4)]
+    {
+        let x = randn_seeded(rows * cols, seed);
+        let mut got = x.clone();
+        ops::softmax_rows(&mut got, cols);
+        for i in 0..rows {
+            let row = &x[i * cols..(i + 1) * cols];
+            let maxv = row
+                .iter()
+                .fold(f64::NEG_INFINITY, |a, &v| a.max(v as f64));
+            let denom: f64 =
+                row.iter().map(|&v| ((v as f64) - maxv).exp()).sum();
+            for j in 0..cols {
+                let want = ((row[j] as f64) - maxv).exp() / denom;
+                let g = got[i * cols + j] as f64;
+                assert!(
+                    (g - want).abs() <= 1e-4 * want.max(1e-4),
+                    "softmax[{i},{j}]: {g} vs {want}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn layernorm_matches_f64_reference() {
+    for (rows, d, seed) in [(1usize, 2usize, 5u64), (6, 9, 6), (3, 32, 7)]
+    {
+        let x = randn_seeded(rows * d, seed);
+        let gamma = randn_seeded(d, seed ^ 0x11);
+        let beta = randn_seeded(d, seed ^ 0x22);
+        let (got, _) = ops::layernorm_forward(&x, &gamma, &beta, d);
+        for i in 0..rows {
+            let row: Vec<f64> = x[i * d..(i + 1) * d]
+                .iter()
+                .map(|&v| v as f64)
+                .collect();
+            let mu: f64 = row.iter().sum::<f64>() / d as f64;
+            let var: f64 = row
+                .iter()
+                .map(|&v| (v - mu) * (v - mu))
+                .sum::<f64>()
+                / d as f64;
+            let rstd = 1.0 / (var + 1e-5).sqrt();
+            for j in 0..d {
+                let want = (row[j] - mu) * rstd * gamma[j] as f64
+                    + beta[j] as f64;
+                let g = got[i * d + j] as f64;
+                assert!(
+                    (g - want).abs() <= 1e-4 * want.abs().max(1.0),
+                    "ln[{i},{j}]: {g} vs {want}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn gelu_matches_f64_tanh_reference() {
+    for &x in &[-4.0f32, -1.3, -0.1, 0.0, 0.37, 1.0, 2.9, 6.0] {
+        let xf = x as f64;
+        let u = (2.0f64 / std::f64::consts::PI).sqrt()
+            * (xf + 0.044715 * xf * xf * xf);
+        let want = 0.5 * xf * (1.0 + u.tanh());
+        let got = ops::gelu(x) as f64;
+        assert!(
+            (got - want).abs() <= 1e-4 * want.abs().max(1e-3),
+            "gelu({x}): {got} vs {want}"
+        );
+    }
+}
+
+/// Independent f64 multi-head attention: explicit einsum loops over
+/// `[n, t, heads, dh]` views, softmax over keys.
+fn ref_attention_f64(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n: usize,
+    t: usize,
+    heads: usize,
+    d: usize,
+) -> Vec<f64> {
+    let dh = d / heads;
+    let scale = 1.0 / (dh as f64).sqrt();
+    let at = |z: &[f32], b: usize, ti: usize, h: usize, x: usize| {
+        z[(b * t + ti) * d + h * dh + x] as f64
+    };
+    let mut ctx = vec![0f64; n * t * d];
+    for b in 0..n {
+        for h in 0..heads {
+            for qi in 0..t {
+                let scores: Vec<f64> = (0..t)
+                    .map(|ki| {
+                        (0..dh)
+                            .map(|x| {
+                                at(q, b, qi, h, x) * at(k, b, ki, h, x)
+                            })
+                            .sum::<f64>()
+                            * scale
+                    })
+                    .collect();
+                let maxv = scores
+                    .iter()
+                    .fold(f64::NEG_INFINITY, |a, &s| a.max(s));
+                let exps: Vec<f64> =
+                    scores.iter().map(|&s| (s - maxv).exp()).collect();
+                let denom: f64 = exps.iter().sum();
+                for x in 0..dh {
+                    let mut acc = 0.0;
+                    for ki in 0..t {
+                        acc += exps[ki] / denom * at(v, b, ki, h, x);
+                    }
+                    ctx[(b * t + qi) * d + h * dh + x] = acc;
+                }
+            }
+        }
+    }
+    ctx
+}
+
+#[test]
+fn attention_matches_f64_reference_on_ragged_seq_lengths() {
+    for (n, t, heads, d, seed) in [
+        (1usize, 1usize, 1usize, 4usize, 11u64),
+        (2, 3, 2, 8, 12),
+        (3, 5, 1, 6, 13),
+        (2, 7, 4, 8, 14),
+    ] {
+        let q = randn_seeded(n * t * d, seed);
+        let k = randn_seeded(n * t * d, seed ^ 0x1);
+        let v = randn_seeded(n * t * d, seed ^ 0x2);
+        for threads in [1usize, 3] {
+            let got = ops::attention_forward(
+                &q, &k, &v, n, t, heads, d, threads, None,
+            );
+            let want = ref_attention_f64(&q, &k, &v, n, t, heads, d);
+            for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert!(
+                    ((*g as f64) - w).abs() <= 1e-4 * w.abs().max(1.0),
+                    "attention[{i}] t={t} h={heads}: {g} vs {w}"
+                );
+            }
+        }
+    }
+}
+
+/// Independent f64 BERT forward over the quantization-free gradcheck
+/// manifest (embedding → pre-LN attention → GELU FFN → mean pool →
+/// classifier), with an optional VeRA+ branch on every linear.
+#[allow(clippy::too_many_arguments)]
+fn ref_bert_forward_f64(
+    weights: &TensorMap,
+    frozen: Option<&TensorMap>,
+    trainables: Option<&TensorMap>,
+    rank: usize,
+    tokens: &[i32],
+    n: usize,
+    t: usize,
+    d: usize,
+    heads: usize,
+    d_ff: usize,
+    classes: usize,
+    layers_n: usize,
+    d_in_max: usize,
+) -> Vec<f64> {
+    let f = |name: &str| -> Vec<f64> {
+        weights
+            .get(name)
+            .unwrap_or_else(|| panic!("missing weight {name}"))
+            .as_f32()
+            .iter()
+            .map(|&v| v as f64)
+            .collect()
+    };
+    let ln = |x: &[f64], gamma: &[f64], beta: &[f64], width: usize| {
+        let rows = x.len() / width;
+        let mut out = vec![0f64; x.len()];
+        for i in 0..rows {
+            let row = &x[i * width..(i + 1) * width];
+            let mu: f64 = row.iter().sum::<f64>() / width as f64;
+            let var: f64 = row
+                .iter()
+                .map(|&v| (v - mu) * (v - mu))
+                .sum::<f64>()
+                / width as f64;
+            let rstd = 1.0 / (var + 1e-5).sqrt();
+            for j in 0..width {
+                out[i * width + j] =
+                    (row[j] - mu) * rstd * gamma[j] + beta[j];
+            }
+        }
+        out
+    };
+    let linear = |name: &str, cin: usize, cout: usize, xin: &[f64]| {
+        let w = f(&format!("{name}.w"));
+        let bias = f(&format!("{name}.bias"));
+        let rows = xin.len() / cin;
+        let mut y = vec![0f64; rows * cout];
+        for i in 0..rows {
+            for o in 0..cout {
+                let mut acc = 0.0;
+                for c in 0..cin {
+                    acc += xin[i * cin + c] * w[c * cout + o];
+                }
+                y[i * cout + o] = acc + bias[o];
+            }
+        }
+        if let (Some(fr), Some(tr)) = (frozen, trainables) {
+            let a = fr.get("A_max").unwrap().as_f32();
+            let b = fr.get("B_max").unwrap().as_f32();
+            let dv = tr.get(&format!("{name}.d")).unwrap().as_f32();
+            let bv = tr.get(&format!("{name}.b")).unwrap().as_f32();
+            for i in 0..rows {
+                for o in 0..cout {
+                    let mut comp = 0.0f64;
+                    for q in 0..rank {
+                        let mut s = 0.0f64;
+                        for c in 0..cin {
+                            s += xin[i * cin + c]
+                                * a[q * d_in_max + c] as f64;
+                        }
+                        comp += s
+                            * dv[q] as f64
+                            * b[o * rank + q] as f64;
+                    }
+                    y[i * cout + o] += comp * bv[o] as f64;
+                }
+            }
+        }
+        y
+    };
+    let tok_emb = f("tok_emb");
+    let pos_emb = f("pos_emb");
+    let mut h = vec![0f64; n * t * d];
+    for b in 0..n {
+        for ti in 0..t {
+            let tok = tokens[b * t + ti] as usize;
+            for j in 0..d {
+                h[(b * t + ti) * d + j] =
+                    tok_emb[tok * d + j] + pos_emb[ti * d + j];
+            }
+        }
+    }
+    for i in 0..layers_n {
+        let hn = ln(
+            &h,
+            &f(&format!("l{i}.ln1.gamma")),
+            &f(&format!("l{i}.ln1.beta")),
+            d,
+        );
+        let q: Vec<f32> = linear(&format!("l{i}.wq"), d, d, &hn)
+            .iter()
+            .map(|&v| v as f32)
+            .collect();
+        let k: Vec<f32> = linear(&format!("l{i}.wk"), d, d, &hn)
+            .iter()
+            .map(|&v| v as f32)
+            .collect();
+        let v: Vec<f32> = linear(&format!("l{i}.wv"), d, d, &hn)
+            .iter()
+            .map(|&v| v as f32)
+            .collect();
+        let ctx = ref_attention_f64(&q, &k, &v, n, t, heads, d);
+        let attn = linear(&format!("l{i}.wo"), d, d, &ctx);
+        for (hv, av) in h.iter_mut().zip(&attn) {
+            *hv += av;
+        }
+        let hn2 = ln(
+            &h,
+            &f(&format!("l{i}.ln2.gamma")),
+            &f(&format!("l{i}.ln2.beta")),
+            d,
+        );
+        let mut ff = linear(&format!("l{i}.ff1"), d, d_ff, &hn2);
+        for v in ff.iter_mut() {
+            let u = (2.0f64 / std::f64::consts::PI).sqrt()
+                * (*v + 0.044715 * *v * *v * *v);
+            *v = 0.5 * *v * (1.0 + u.tanh());
+        }
+        let ff2 = linear(&format!("l{i}.ff2"), d_ff, d, &ff);
+        for (hv, av) in h.iter_mut().zip(&ff2) {
+            *hv += av;
+        }
+    }
+    let hf = ln(&h, &f("ln_f.gamma"), &f("ln_f.beta"), d);
+    let mut pooled = vec![0f64; n * d];
+    for b in 0..n {
+        for ti in 0..t {
+            for j in 0..d {
+                pooled[b * d + j] += hf[(b * t + ti) * d + j];
+            }
+        }
+    }
+    for v in pooled.iter_mut() {
+        *v /= t as f64;
+    }
+    linear("cls", d, classes, &pooled)
+}
+
+#[test]
+fn bert_forward_matches_f64_reference() {
+    // Quantization-free manifest: the f64 reference is an exact
+    // oracle (the quantized DAC path is pinned by the mlp parity test
+    // and the ops oracles above).
+    let man = gradcheck_bert_manifest();
+    let (t, d, heads, classes) =
+        (man.input_dim, 6usize, man.heads, man.classes);
+    let d_ff = 4 * d;
+    let weights = random_params(&man.deploy_weights, 0xb1);
+    let mut rng = Pcg64::new(0xb2);
+    let tokens: Vec<i32> = (0..GRAD_BATCH * t)
+        .map(|_| rng.below(man.vocab) as i32)
+        .collect();
+    let d_in_max = man.d_in_max;
+    let vocab = man.vocab;
+    assert!(vocab > 0);
+    let mut frozen = TensorMap::new();
+    let mut a = vec![0f32; GRAD_RANK * d_in_max];
+    rng.fill_normal_f32(&mut a, 0.0, 1.0);
+    frozen.insert(
+        "A_max".into(),
+        Tensor::from_f32(&[GRAD_RANK, d_in_max], a),
+    );
+    let mut b = vec![0f32; man.d_out_max * GRAD_RANK];
+    rng.fill_normal_f32(&mut b, 0.0, 1.0);
+    frozen.insert(
+        "B_max".into(),
+        Tensor::from_f32(&[man.d_out_max, GRAD_RANK], b),
+    );
+    let mut trainables = TensorMap::new();
+    for l in &man.layers {
+        let mut dvec = vec![0f32; GRAD_RANK];
+        rng.fill_normal_f32(&mut dvec, 0.0, 0.3);
+        trainables.insert(
+            format!("{}.d", l.name),
+            Tensor::from_f32(&[GRAD_RANK], dvec),
+        );
+        let mut bvec = vec![0f32; l.cout];
+        rng.fill_normal_f32(&mut bvec, 0.0, 0.3);
+        trainables.insert(
+            format!("{}.b", l.name),
+            Tensor::from_f32(&[l.cout], bvec),
+        );
+    }
+    let model = man.model.clone();
+    let rt = vera_plus::runtime::Runtime::with_manifest(man);
+    let mut inputs = TensorMap::new();
+    inputs.insert(
+        "x".into(),
+        Tensor::from_i32(&[GRAD_BATCH, t], tokens.clone()),
+    );
+
+    // Plain forward.
+    let exe = rt
+        .executable(&model, &format!("fwd_b{GRAD_BATCH}"))
+        .unwrap();
+    let got = exe.run_named(&[&weights, &inputs]).unwrap();
+    let got = got.get("logits").unwrap().as_f32();
+    let want = ref_bert_forward_f64(
+        &weights, None, None, GRAD_RANK, &tokens, GRAD_BATCH, t, d,
+        heads, d_ff, classes, 1, d_in_max,
+    );
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert!(
+            ((*g as f64) - w).abs() <= 1e-4 * w.abs().max(1.0),
+            "bert fwd[{i}]: {g} vs {w}"
+        );
+    }
+
+    // Compensated forward: exercises the fused VeRA+ epilogue on the
+    // BERT linears.
+    let exe = rt
+        .executable(
+            &model,
+            &format!("comp_veraplus_r{GRAD_RANK}_b{GRAD_BATCH}"),
+        )
+        .unwrap();
+    let got = exe
+        .run_named(&[&weights, &frozen, &trainables, &inputs])
+        .unwrap();
+    let got = got.get("logits").unwrap().as_f32();
+    let want = ref_bert_forward_f64(
+        &weights,
+        Some(&frozen),
+        Some(&trainables),
+        GRAD_RANK,
+        &tokens,
+        GRAD_BATCH,
+        t,
+        d,
+        heads,
+        d_ff,
+        classes,
+        1,
+        d_in_max,
+    );
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert!(
+            ((*g as f64) - w).abs() <= 1e-4 * w.abs().max(1.0),
+            "bert comp fwd[{i}]: {g} vs {w}"
+        );
+    }
+}
+
+#[test]
+fn bert_logits_bit_identical_across_thread_counts() {
+    let dep = native_bert_deployment(1, 21, Box::new(NoDrift));
+    let exe = dep
+        .rt
+        .executable(BERT_MODEL, "comp_veraplus_r1_b32")
+        .unwrap();
+    let weights = dep.net.read_ideal();
+    let trainables = dep.fresh_trainables(5);
+    let indices: Vec<usize> = (0..32).collect();
+    let batch = dep.dataset.test_batch(&indices);
+    let mut inputs = TensorMap::new();
+    inputs.insert("x".into(), batch.x);
+    let maps: [&TensorMap; 4] =
+        [&weights, &dep.frozen, &trainables, &inputs];
+    let one = exe.run_named_threads(&maps, Some(1)).unwrap();
+    for threads in [2usize, 4] {
+        let multi = exe.run_named_threads(&maps, Some(threads)).unwrap();
+        assert_eq!(
+            one.get("logits").unwrap().bytes(),
+            multi.get("logits").unwrap().bytes(),
+            "bert {threads} threads diverged bit-wise"
+        );
+    }
+}
+
+#[test]
+fn bert_eval_handles_padded_tail_batch() {
+    // Test split (40) overhangs the eval batch (32): the final batch
+    // is padded and scored on its real rows only (the PR 4 path, now
+    // on an i32-token input).
+    let dep = native_bert_deployment(1, 23, Box::new(IbmDrift::default()));
+    let ideal = dep.net.read_ideal();
+    let empty = TensorMap::new();
+    let acc = eval::eval_accuracy(
+        &dep,
+        &ideal,
+        &empty,
+        EvalMode::Plain,
+        BERT_TEST_LEN,
+    )
+    .unwrap();
+    assert!((0.0..=1.0).contains(&acc), "acc {acc}");
+    // A capped eval smaller than one batch also works.
+    let acc_small = eval::eval_accuracy(
+        &dep, &ideal, &empty, EvalMode::Plain, 10,
+    )
+    .unwrap();
+    assert!((0.0..=1.0).contains(&acc_small));
+    // EVALSTATS is bit-reproducible in the worker count on the bert
+    // path too.
+    let mut rng_a = Pcg64::new(9);
+    let a = eval::eval_stats_workers(
+        &dep, &empty, EvalMode::Plain, 3.15e7, 3, BERT_TEST_LEN,
+        &mut rng_a, 1,
+    )
+    .unwrap();
+    let mut rng_b = Pcg64::new(9);
+    let b = eval::eval_stats_workers(
+        &dep, &empty, EvalMode::Plain, 3.15e7, 3, BERT_TEST_LEN,
+        &mut rng_b, 4,
+    )
+    .unwrap();
+    assert_eq!(a.mean.to_bits(), b.mean.to_bits());
+    assert_eq!(a.std.to_bits(), b.std.to_bits());
 }

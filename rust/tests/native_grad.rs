@@ -1,0 +1,372 @@
+//! Finite-difference gradient checks for every native train-step VJP:
+//! the mlp chain, the resnet conv/im2col + batch-stat BatchNorm path,
+//! and the bert attention/LayerNorm/GELU/embedding path — for both
+//! `train_backbone` (backbone QAT) and `train_veraplus_r{r}` (Alg. 1
+//! compensation training).
+//!
+//! Method: central differences with Richardson extrapolation
+//! (`fd = (4·fd(h/2) − fd(h))/3`, h = 0.04) on the quantization-free
+//! testkit manifests (`a_bits = w_bits = 32` — the straight-through
+//! gradient of a rounding forward cannot agree with finite
+//! differences, so the FD pass runs the smooth variant; the quantized
+//! graphs share every VJP below the STE). Analytic gradients are read
+//! off the step's momentum outputs (initial momenta are zero, so
+//! `m_out = grad` for the backbone and `m_out = clip·grad` for the
+//! clipped comp step — the FD vector is clipped by its own global norm
+//! before comparing).
+//!
+//! Acceptance metric, per parameter: relative error
+//! `|g − fd| / max(|g|, |fd|, 0.05) ≤ 1e-3`. Parameters sitting on a
+//! ReLU kink (the two FD step sizes disagree by > 25%) are skipped and
+//! counted; at most 15% of a tensor's parameters may be skipped. The
+//! comp step's global-norm clip is handled regime-aware: an active
+//! clip leaves the analytic outputs at unit global norm exactly, in
+//! which case the FD vector is unit-normalized too (skipped entries
+//! fill in their analytic value for the norm, so skips cannot bias
+//! it); otherwise the comparison is direct and fully scale-sensitive.
+//!
+//! Thread independence: every check first asserts the forward loss is
+//! bit-identical at 1 and 4 worker threads (the CI matrix additionally
+//! runs the whole suite under `VERA_THREADS={1,4}`).
+
+use std::sync::Arc;
+use vera_plus::nn::init;
+use vera_plus::nn::manifest::ModelManifest;
+use vera_plus::runtime::{Executable, Runtime};
+use vera_plus::util::rng::Pcg64;
+use vera_plus::util::tensor::{DType, Tensor, TensorMap};
+use vera_plus::util::testkit::{
+    gradcheck_bert_manifest, gradcheck_mlp_manifest,
+    gradcheck_resnet_manifest, random_params, GRAD_BATCH, GRAD_RANK,
+};
+
+const H: f32 = 0.04;
+const TOL: f32 = 1e-3;
+const FLOOR: f32 = 0.05;
+/// FD(h) vs FD(h/2) disagreement that marks a non-smooth point.
+const KINK: f32 = 0.25;
+const MAX_SKIP_FRAC: f64 = 0.15;
+
+/// Deterministic input batch for a gradcheck manifest.
+fn batch_for(man: &ModelManifest, seed: u64) -> (Tensor, Tensor) {
+    let mut rng = Pcg64::with_stream(seed, 0xba7c);
+    let x = match man.kind.as_str() {
+        "resnet" => {
+            let shape =
+                [GRAD_BATCH, man.input_dim, man.input_dim, 3];
+            let mut v = vec![0f32; shape.iter().product()];
+            rng.fill_normal_f32(&mut v, 0.0, 0.8);
+            Tensor::from_f32(&shape, v)
+        }
+        "bert" => {
+            let toks: Vec<i32> = (0..GRAD_BATCH * man.input_dim)
+                .map(|_| rng.below(man.vocab) as i32)
+                .collect();
+            Tensor::from_i32(&[GRAD_BATCH, man.input_dim], toks)
+        }
+        _ => {
+            let d_in = man.layers[0].cin;
+            let mut v = vec![0f32; GRAD_BATCH * d_in];
+            rng.fill_normal_f32(&mut v, 0.0, 0.8);
+            Tensor::from_f32(&[GRAD_BATCH, d_in], v)
+        }
+    };
+    let y: Vec<i32> = (0..GRAD_BATCH)
+        .map(|i| (i % man.classes) as i32)
+        .collect();
+    (x, Tensor::from_i32(&[GRAD_BATCH], y))
+}
+
+fn loss_of(
+    exe: &Arc<Executable>,
+    maps: &[&TensorMap],
+    threads: Option<usize>,
+) -> f32 {
+    let outs = exe.run_named_threads(maps, threads).unwrap();
+    outs.get("loss").expect("train graph emits loss").as_f32()[0]
+}
+
+/// Per-tensor check report.
+struct Report {
+    checked: usize,
+    skipped: usize,
+    failures: Vec<String>,
+}
+
+/// Central-difference gradient of the loss w.r.t. every element of
+/// `params[name]`, Richardson-extrapolated; `None` marks non-smooth
+/// points.
+fn fd_gradient(
+    exe: &Arc<Executable>,
+    fixed: &[&TensorMap],
+    params: &TensorMap,
+    name: &str,
+) -> Vec<Option<f32>> {
+    let base = params.get(name).unwrap().clone();
+    let vals = base.as_f32().to_vec();
+    let mut out = Vec::with_capacity(vals.len());
+    let mut probe = params.clone();
+    for j in 0..vals.len() {
+        let mut eval = |delta: f32| -> f32 {
+            let mut v = vals.clone();
+            v[j] += delta;
+            probe.insert(
+                name.to_string(),
+                Tensor::from_f32(&base.shape, v),
+            );
+            let mut maps: Vec<&TensorMap> = vec![&probe];
+            maps.extend_from_slice(fixed);
+            loss_of(exe, &maps, None)
+        };
+        let fd1 = (eval(H) - eval(-H)) / (2.0 * H);
+        let h2 = H / 2.0;
+        let fd2 = (eval(h2) - eval(-h2)) / (2.0 * h2);
+        let fd_r = (4.0 * fd2 - fd1) / 3.0;
+        if (fd1 - fd2).abs() > KINK * fd_r.abs().max(FLOOR) {
+            out.push(None); // non-smooth (ReLU kink under the probe)
+        } else {
+            out.push(Some(fd_r));
+        }
+    }
+    // Restore.
+    probe.insert(name.to_string(), base);
+    out
+}
+
+fn compare(
+    name: &str,
+    analytic: &[f32],
+    fd: &[Option<f32>],
+    scale: f32,
+    report: &mut Report,
+) {
+    assert_eq!(analytic.len(), fd.len(), "{name}: length");
+    for (j, (&g, f)) in analytic.iter().zip(fd).enumerate() {
+        let Some(f) = f else {
+            report.skipped += 1;
+            continue;
+        };
+        let f = f * scale;
+        let rel = (g - f).abs() / g.abs().max(f.abs()).max(FLOOR);
+        report.checked += 1;
+        if rel > TOL {
+            report.failures.push(format!(
+                "{name}[{j}]: analytic {g} vs fd {f} (rel {rel:.2e})"
+            ));
+        }
+    }
+}
+
+fn finish(kind: &str, report: Report) {
+    assert!(
+        report.failures.is_empty(),
+        "{kind}: {} gradient mismatches (of {} checked):\n{}",
+        report.failures.len(),
+        report.checked,
+        report.failures.join("\n")
+    );
+    let total = (report.checked + report.skipped) as f64;
+    assert!(
+        report.checked > 0 && (report.skipped as f64) / total
+            <= MAX_SKIP_FRAC,
+        "{kind}: too many non-smooth skips ({} of {})",
+        report.skipped,
+        total
+    );
+}
+
+/// Backbone gradient check: analytic grads come from the zero-momentum
+/// step's `m:` outputs; FD perturbs each grad-flagged train weight.
+fn backbone_check(man: ModelManifest, seed: u64) {
+    let kind = man.kind.clone();
+    let model = man.model.clone();
+    let grad_names: Vec<String> = man
+        .train_weights
+        .iter()
+        .filter(|w| w.grad)
+        .map(|w| w.name.clone())
+        .collect();
+    let params = init::init_train_params(&man, seed);
+    let momenta = init::zero_momenta(&man.train_weights);
+    let (x, y) = batch_for(&man, seed);
+    let rt = Runtime::with_manifest(man);
+    let exe = rt.executable(&model, "train_backbone").unwrap();
+    let mut batch = TensorMap::new();
+    batch.insert("x".into(), x);
+    batch.insert("y".into(), y);
+    batch.insert("lr".into(), Tensor::scalar_f32(0.1));
+
+    // Bit-identical forward losses across worker-thread counts.
+    let maps: [&TensorMap; 3] = [&params, &momenta, &batch];
+    let l1 = loss_of(&exe, &maps, Some(1));
+    let l4 = loss_of(&exe, &maps, Some(4));
+    assert_eq!(
+        l1.to_bits(),
+        l4.to_bits(),
+        "{kind}: loss not bit-identical across thread counts"
+    );
+
+    let outs = exe.run_named(&maps).unwrap();
+    let mut report = Report {
+        checked: 0,
+        skipped: 0,
+        failures: Vec::new(),
+    };
+    let fixed: [&TensorMap; 2] = [&momenta, &batch];
+    for name in &grad_names {
+        let g = outs
+            .get(&format!("m:{name}"))
+            .unwrap_or_else(|| panic!("missing momentum m:{name}"))
+            .as_f32();
+        let fd = fd_gradient(&exe, &fixed, &params, name);
+        compare(name, g, &fd, 1.0, &mut report);
+    }
+    finish(&kind, report);
+}
+
+/// Comp-train gradient check: the step clips the gradient to unit
+/// global norm, so the FD vector is clipped by its own norm before the
+/// per-parameter comparison.
+fn comp_check(man: ModelManifest, seed: u64) {
+    let kind = man.kind.clone();
+    let model = man.model.clone();
+    let mut rng = Pcg64::with_stream(seed, 0xc09d);
+    let weights = random_params(&man.deploy_weights, seed);
+    let mut frozen = TensorMap::new();
+    let mut a = vec![0f32; GRAD_RANK * man.d_in_max];
+    rng.fill_normal_f32(&mut a, 0.0, 1.0);
+    frozen.insert(
+        "A_max".into(),
+        Tensor::from_f32(&[GRAD_RANK, man.d_in_max], a),
+    );
+    let mut b = vec![0f32; man.d_out_max * GRAD_RANK];
+    rng.fill_normal_f32(&mut b, 0.0, 1.0);
+    frozen.insert(
+        "B_max".into(),
+        Tensor::from_f32(&[man.d_out_max, GRAD_RANK], b),
+    );
+    let mut trainables = TensorMap::new();
+    let mut momenta = TensorMap::new();
+    for l in &man.layers {
+        trainables.insert(
+            format!("{}.d", l.name),
+            Tensor::from_f32(&[GRAD_RANK], vec![0.1; GRAD_RANK]),
+        );
+        let mut bv = vec![0f32; l.cout];
+        rng.fill_normal_f32(&mut bv, 0.0, 0.2);
+        trainables.insert(
+            format!("{}.b", l.name),
+            Tensor::from_f32(&[l.cout], bv),
+        );
+        momenta.insert(
+            format!("m:{}.d", l.name),
+            Tensor::zeros(DType::F32, &[GRAD_RANK]),
+        );
+        momenta.insert(
+            format!("m:{}.b", l.name),
+            Tensor::zeros(DType::F32, &[l.cout]),
+        );
+    }
+    let (x, y) = batch_for(&man, seed ^ 0x55);
+    let rt = Runtime::with_manifest(man);
+    let exe = rt
+        .executable(&model, &format!("train_veraplus_r{GRAD_RANK}"))
+        .unwrap();
+    let mut batch = TensorMap::new();
+    batch.insert("x".into(), x);
+    batch.insert("y".into(), y);
+    batch.insert("lr".into(), Tensor::scalar_f32(0.1));
+
+    let maps: [&TensorMap; 5] =
+        [&weights, &frozen, &trainables, &momenta, &batch];
+    let l1 = loss_of(&exe, &maps, Some(1));
+    let l4 = loss_of(&exe, &maps, Some(4));
+    assert_eq!(
+        l1.to_bits(),
+        l4.to_bits(),
+        "{kind} comp: loss not bit-identical across thread counts"
+    );
+    let outs = exe.run_named(&maps).unwrap();
+
+    // FD gradient for every trainable.
+    let fixed: [&TensorMap; 4] = [&weights, &frozen, &momenta, &batch];
+    let names: Vec<String> = trainables.keys().cloned().collect();
+    let mut fds: Vec<(String, Vec<Option<f32>>)> = Vec::new();
+    for name in &names {
+        fds.push((
+            name.clone(),
+            fd_gradient(&exe, &fixed, &trainables, name),
+        ));
+    }
+    // The step clips its gradient to unit global norm, so the analytic
+    // `m:` outputs are `min(1, 1/‖g‖)·g`. Detect the regime from the
+    // analytic side — an *active* clip leaves the outputs with global
+    // norm exactly 1 — and in that regime compare against the
+    // unit-normalized FD vector (`g̃ = g/‖g‖`). The FD norm uses the
+    // analytic value for kink-skipped entries, so skips cannot bias
+    // it. In the inactive regime the comparison is direct (full scale
+    // sensitivity).
+    let mut g_sq = 0f64;
+    let mut fd_sq = 0f64;
+    for (name, fd) in &fds {
+        let g = outs
+            .get(&format!("m:{name}"))
+            .unwrap_or_else(|| panic!("missing momentum m:{name}"))
+            .as_f32();
+        for (j, f) in fd.iter().enumerate() {
+            g_sq += (g[j] as f64) * (g[j] as f64);
+            let v = f.unwrap_or(g[j]) as f64;
+            fd_sq += v * v;
+        }
+    }
+    let clip_active = g_sq.sqrt() > 0.999;
+    let scale = if clip_active {
+        (1.0 / (fd_sq + 1e-12).sqrt()) as f32
+    } else {
+        1.0
+    };
+
+    let mut report = Report {
+        checked: 0,
+        skipped: 0,
+        failures: Vec::new(),
+    };
+    for (name, fd) in &fds {
+        let g = outs
+            .get(&format!("m:{name}"))
+            .unwrap_or_else(|| panic!("missing momentum m:{name}"))
+            .as_f32();
+        compare(name, g, fd, scale, &mut report);
+    }
+    finish(&format!("{kind} comp"), report);
+}
+
+#[test]
+fn mlp_backbone_gradients_match_finite_differences() {
+    backbone_check(gradcheck_mlp_manifest(), 0x6a1);
+}
+
+#[test]
+fn resnet_backbone_gradients_match_finite_differences() {
+    backbone_check(gradcheck_resnet_manifest(), 0x6a2);
+}
+
+#[test]
+fn bert_backbone_gradients_match_finite_differences() {
+    backbone_check(gradcheck_bert_manifest(), 0x6a3);
+}
+
+#[test]
+fn mlp_comp_gradients_match_finite_differences() {
+    comp_check(gradcheck_mlp_manifest(), 0x7b1);
+}
+
+#[test]
+fn resnet_comp_gradients_match_finite_differences() {
+    comp_check(gradcheck_resnet_manifest(), 0x7b2);
+}
+
+#[test]
+fn bert_comp_gradients_match_finite_differences() {
+    comp_check(gradcheck_bert_manifest(), 0x7b3);
+}

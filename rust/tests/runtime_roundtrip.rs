@@ -170,3 +170,55 @@ fn compile_cache_reuses_executable() {
     assert!(std::sync::Arc::ptr_eq(&a, &b));
     assert_eq!(rt.compiled_count(), 1);
 }
+
+/// Full-model manifests must carry a known `kind`: a silently
+/// defaulted `"kernel"` used to surface much later as a baffling
+/// unsupported-graph error deep in the registry. (No artifacts needed —
+/// this is a pure parse-level contract.)
+#[test]
+fn manifest_kind_is_validated() {
+    use vera_plus::nn::manifest::ModelManifest;
+    use vera_plus::util::json::parse;
+    let dir = std::path::Path::new(".");
+    // Unknown kind on a full-model manifest: descriptive parse error.
+    let j = parse(
+        r#"{"model": "m", "kind": "transformer", "classes": 2,
+            "layers": [], "graphs": {}}"#,
+    )
+    .unwrap();
+    let err = ModelManifest::from_json(&j, dir).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("unknown kind") && msg.contains("transformer"),
+        "unhelpful error: {msg}"
+    );
+    // Missing kind on something that names a model: also an error.
+    let j = parse(r#"{"model": "m", "graphs": {}}"#).unwrap();
+    let err = ModelManifest::from_json(&j, dir).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("missing its 'kind'"), "unhelpful: {msg}");
+    // ... and on one that lists layers.
+    let j = parse(
+        r#"{"layers": [{"name": "l0", "kind": "linear", "cin": 2,
+            "cout": 2, "k": 1, "stride": 1, "hw_in": 1,
+            "hw_out": 1}]}"#,
+    )
+    .unwrap();
+    assert!(ModelManifest::from_json(&j, dir).is_err());
+    // Full-model manifests must carry sane quantization widths: a
+    // silently-defaulted 0 used to hit `2^(bits-1) - 1` arithmetic
+    // deep in the fake-quant path.
+    let j = parse(
+        r#"{"model": "m", "kind": "mlp", "classes": 2,
+            "layers": [], "graphs": {}}"#,
+    )
+    .unwrap();
+    let err = ModelManifest::from_json(&j, dir).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("w_bits"), "unhelpful error: {msg}");
+    // Graphs-only kernel manifests still default to kind "kernel".
+    let j = parse(r#"{"graphs": {}}"#).unwrap();
+    let m = ModelManifest::from_json(&j, dir).unwrap();
+    assert_eq!(m.kind, "kernel");
+    assert_eq!(m.model, "kernels");
+}
