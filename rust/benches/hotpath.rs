@@ -468,6 +468,39 @@ fn native_stages(bench: &mut Bencher) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Observability overhead: the disabled span path must stay near zero
+/// (one relaxed atomic load, no clock/alloc/lock) and the enabled path
+/// cheap enough that traced runs stay within the <2% overhead budget
+/// at the instrumented granularity (per GEMM / tick / drain, never per
+/// element).
+fn obs_stages(bench: &mut Bencher) -> anyhow::Result<()> {
+    use vera_plus::obs;
+    obs::set_trace(false);
+    obs::set_metrics(false);
+    obs::reset();
+    bench.bench_items("obs/span_overhead_off", 1.0, || {
+        let s = obs::span("bench.span", "app");
+        std::hint::black_box(&s);
+    });
+    obs::set_trace(true);
+    // Bound sink growth: the recorded spans are drained every 8k
+    // iterations (amortized to ~0.1 ns/span, well under measurement
+    // noise).
+    let mut n = 0u32;
+    bench.bench_items("obs/span_overhead_on", 1.0, || {
+        let s = obs::span("bench.span", "app");
+        std::hint::black_box(&s);
+        drop(s);
+        n += 1;
+        if n % 8192 == 0 {
+            obs::reset();
+        }
+    });
+    obs::set_trace(false);
+    obs::reset();
+    Ok(())
+}
+
 /// PJRT-backed stages: executables + kernel. Needs compiled artifacts
 /// (`make artifacts`) and a real xla client.
 fn pjrt_stages(rt: Arc<Runtime>, bench: &mut Bencher)
@@ -589,6 +622,7 @@ fn main() -> anyhow::Result<()> {
 
     drift_stages(&mut bench)?;
     native_stages(&mut bench)?;
+    obs_stages(&mut bench)?;
 
     let artifacts = vera_plus::find_artifacts();
     if artifacts.join("index.json").exists() {
@@ -626,6 +660,8 @@ fn main() -> anyhow::Result<()> {
             "forward/comp_epilogue/unfused",
         ),
         ("evalstats/pool", "evalstats/1_worker"),
+        // Ratio = how many times cheaper the disabled span path is.
+        ("obs/span_overhead_off", "obs/span_overhead_on"),
     ];
     let root_json = concat!(
         env!("CARGO_MANIFEST_DIR"),

@@ -271,6 +271,12 @@ pub fn eval_stats_workers(
     workers: usize,
 ) -> Result<Stats> {
     ensure!(n_instances > 0, "EVALSTATS needs at least one instance");
+    let _span = crate::obs::span("eval.stats", "eval")
+        .arg("t_s", crate::util::json::num(t))
+        .arg("instances", crate::util::json::num(n_instances as f64))
+        .arg("threads", crate::util::json::num(workers as f64));
+    crate::obs::counter_add("eval.stats_calls", 1);
+    crate::obs::counter_add("eval.instances", n_instances as u64);
     let key = eval_key(dep, mode)?;
     // Resolve the executable and pack the activations ONCE; both are
     // shared read-only across every instance.

@@ -195,6 +195,7 @@ pub fn schedule_with(
     oracle: &mut dyn CompOracle,
     cfg: &ScheduleCfg,
 ) -> Result<ScheduleResult> {
+    let _span = crate::obs::span("sched.schedule", "sched");
     let drift_free_acc = oracle.drift_free()?;
     let floor_acc = cfg.norm_floor * drift_free_acc;
 
@@ -222,6 +223,7 @@ pub fn schedule_with(
         floor: floor_acc,
         trained_new_set: true,
     });
+    log_decision(decisions.last().unwrap(), 0);
 
     // Lines 2–14.
     while t < cfg.t_max {
@@ -283,6 +285,7 @@ pub fn schedule_with(
             floor: floor_acc,
             trained_new_set: trained,
         });
+        log_decision(decisions.last().unwrap(), store.sets.len() - 1);
     }
 
     Ok(ScheduleResult {
@@ -291,6 +294,34 @@ pub fn schedule_with(
         floor_acc,
         decisions,
     })
+}
+
+/// Drift telemetry for one Alg. 1 decision: an instant event on the
+/// `sched` track carrying the device age, the EVALSTATS prediction, the
+/// floor, and — when a set was trained — which set index it became.
+/// Single atomic load when obs is off.
+fn log_decision(d: &Decision, set_idx: usize) {
+    crate::obs::counter_add("sched.decisions", 1);
+    if d.trained_new_set {
+        crate::obs::counter_add("sched.sets_trained", 1);
+    }
+    let name = if d.trained_new_set {
+        "sched.new_set"
+    } else {
+        "sched.decision"
+    };
+    crate::obs::event(name, "sched", || {
+        use crate::util::json::num;
+        let mut args = vec![
+            ("age_s", num(d.t)),
+            ("pred_acc", num(d.mean)),
+            ("floor", num(d.floor)),
+        ];
+        if d.trained_new_set {
+            args.push(("set", num(set_idx as f64)));
+        }
+        args
+    });
 }
 
 /// The exponential time ladder Alg. 1 visits (useful for harness sweeps).

@@ -11,11 +11,13 @@
 use crate::compensation::SetStore;
 use crate::coordinator::eval::accuracy_of;
 use crate::coordinator::Deployment;
+use crate::obs;
+use crate::util::json::num;
 use crate::util::rng::Pcg64;
 use crate::util::tensor::{Tensor, TensorMap};
 use anyhow::Result;
 use std::collections::{BTreeMap, VecDeque};
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 /// Simulated lifetime clock: maps serving progress onto device age.
 /// `accel` compresses years into a test run (e.g. 1e7 ⇒ 31 s wall ≈ 10 y).
@@ -90,6 +92,106 @@ impl Default for BatchPolicy {
     }
 }
 
+/// Default latency-sample cap: the `VERA_LAT_SAMPLES` env override when
+/// set to a positive integer, else 8192 — far above what any tier-1
+/// test or golden records (so those see exact percentiles), far below
+/// the unbounded growth a million-request replay used to cause.
+pub fn default_latency_cap() -> usize {
+    static CAP: OnceLock<usize> = OnceLock::new();
+    *CAP.get_or_init(|| {
+        std::env::var("VERA_LAT_SAMPLES")
+            .ok()
+            .and_then(|s| s.trim().parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or(8192)
+    })
+}
+
+/// Bounded latency-sample store. Below the cap it retains every sample
+/// (percentiles are exact, bit-identical to the old unbounded `Vec`);
+/// past the cap it switches to reservoir sampling (Vitter's Algorithm R)
+/// with a self-contained splitmix64 stream, so memory is O(cap) for any
+/// replay length. The stream is seeded constantly and advanced once per
+/// overflow record, making the retained set a pure function of the
+/// insertion sequence — per-chip feeds are deterministic, so the
+/// reservoir is too, independent of `VERA_THREADS`.
+#[derive(Debug, Clone)]
+pub struct LatencyReservoir {
+    cap: usize,
+    seen: u64,
+    samples: Vec<f64>,
+    state: u64,
+}
+
+impl Default for LatencyReservoir {
+    fn default() -> Self {
+        LatencyReservoir::new(default_latency_cap())
+    }
+}
+
+impl From<Vec<f64>> for LatencyReservoir {
+    fn from(v: Vec<f64>) -> Self {
+        let mut r = LatencyReservoir::default();
+        for x in v {
+            r.record(x);
+        }
+        r
+    }
+}
+
+impl LatencyReservoir {
+    pub fn new(cap: usize) -> LatencyReservoir {
+        LatencyReservoir {
+            cap: cap.max(1),
+            seen: 0,
+            samples: Vec::new(),
+            state: 0x5eed_1a7e_ce5a_11e5,
+        }
+    }
+
+    fn next_u64(&mut self) -> u64 {
+        // splitmix64: tiny, full-period, deterministic.
+        self.state = self.state.wrapping_add(0x9e3779b97f4a7c15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+        z ^ (z >> 31)
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.seen += 1;
+        if self.samples.len() < self.cap {
+            self.samples.push(v);
+            return;
+        }
+        // Algorithm R: keep each of the `seen` samples with equal
+        // probability cap/seen.
+        let j = self.next_u64() % self.seen;
+        if (j as usize) < self.cap {
+            self.samples[j as usize] = v;
+        }
+    }
+
+    /// Total observations fed in (not the retained count).
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    /// Retained samples (all of them while under the cap).
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.seen == 0
+    }
+
+    /// Has the reservoir started down-sampling (percentiles approximate)?
+    pub fn saturated(&self) -> bool {
+        self.seen as usize > self.cap
+    }
+}
+
 /// Serving metrics.
 #[derive(Debug, Clone, Default)]
 pub struct ServeMetrics {
@@ -97,7 +199,7 @@ pub struct ServeMetrics {
     pub correct: usize,
     pub batches: usize,
     pub set_switches: usize,
-    pub latencies: Vec<f64>,
+    pub latencies: LatencyReservoir,
     pub occupancy_sum: f64,
     /// Executions per graph key (`Executable::executions`, surfaced):
     /// how many forward passes each lowered/native graph actually ran.
@@ -124,14 +226,15 @@ impl ServeMetrics {
     }
 
     pub fn latency_percentile(&self, p: f64) -> f64 {
-        percentile(&self.latencies, p)
+        percentile(self.latencies.samples(), p)
     }
 
     /// Several latency quantiles from one sorted scratch copy —
     /// metrics readers asking for p50/p90/p99 together pay for one
-    /// sort instead of one clone-and-select per quantile.
+    /// sort instead of one clone-and-select per quantile. The scratch
+    /// copy is bounded by the reservoir cap, not the replay length.
     pub fn latency_percentiles(&self, ps: &[f64]) -> Vec<f64> {
-        let mut v = self.latencies.clone();
+        let mut v = self.latencies.samples().to_vec();
         v.sort_by(|a, b| a.partial_cmp(b).unwrap());
         ps.iter().map(|&p| percentile_sorted(&v, p)).collect()
     }
@@ -282,6 +385,16 @@ impl Server {
             self.weights = self.dep.drifted_weights(age, &mut self.rng);
             self.metrics.set_switches += 1;
             self.active_set = Some(idx);
+            // Alg. 1 telemetry: the ladder reacting to drift is exactly
+            // what an operator wants on the trace timeline.
+            obs::event("serve.set_switch", "serve", || {
+                vec![
+                    ("set", num(idx as f64)),
+                    ("age_s", num(age)),
+                    ("pred_acc", num(self.store.sets[idx].accuracy)),
+                ]
+            });
+            obs::counter_add("serve.set_switches", 1);
         }
         idx
     }
@@ -306,6 +419,7 @@ impl Server {
         if self.queue.is_empty() {
             return Ok(Vec::new());
         }
+        let _span = obs::span("serve.step", "serve");
         let set_index = self.route();
         // Take up to max_batch requests (oldest first).
         let take = self.queue.len().min(self.policy.max_batch);
@@ -350,7 +464,8 @@ impl Server {
             if per_row[i] {
                 self.metrics.correct += 1;
             }
-            self.metrics.latencies.push(latency.max(0.0));
+            self.metrics.latencies.record(latency.max(0.0));
+            obs::hist_record("serve.latency_ms", latency.max(0.0) * 1e3);
             completions.push(Completion {
                 id: req.id,
                 correct: per_row[i],
@@ -363,6 +478,8 @@ impl Server {
         self.metrics.occupancy_sum +=
             batch.len() as f64 / exec_batch as f64;
         *self.metrics.graph_execs.entry(graph_key).or_insert(0) += 1;
+        obs::counter_add("serve.batches", 1);
+        obs::counter_add("serve.requests", batch.len() as u64);
         Ok(completions)
     }
 }
@@ -506,13 +623,54 @@ mod tests {
     #[test]
     fn metrics_percentiles() {
         let mut m = ServeMetrics::default();
-        m.latencies = vec![0.1, 0.2, 0.3, 0.4, 1.0];
+        m.latencies = LatencyReservoir::from(vec![0.1, 0.2, 0.3, 0.4, 1.0]);
         assert!((m.latency_percentile(0.5) - 0.3).abs() < 1e-9);
         assert!((m.latency_percentile(1.0) - 1.0).abs() < 1e-9);
         assert_eq!(
             m.latency_percentiles(&[0.5, 1.0]),
             vec![0.3, 1.0]
         );
+    }
+
+    #[test]
+    fn reservoir_exact_below_cap() {
+        let mut r = LatencyReservoir::new(100);
+        for i in 0..100 {
+            r.record(i as f64);
+        }
+        assert_eq!(r.seen(), 100);
+        assert!(!r.saturated());
+        // Every sample retained, in insertion order: identical to the
+        // old unbounded Vec, so percentiles are exact.
+        let want: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        assert_eq!(r.samples(), &want[..]);
+    }
+
+    #[test]
+    fn reservoir_bounds_memory_and_stays_representative() {
+        let mut r = LatencyReservoir::new(256);
+        for i in 0..100_000 {
+            r.record((i % 1000) as f64);
+        }
+        assert_eq!(r.seen(), 100_000);
+        assert!(r.saturated());
+        assert_eq!(r.samples().len(), 256);
+        // Uniform 0..1000 input: the retained median must sit near 500
+        // (binomial tail bound makes 250..750 astronomically safe).
+        let p50 = percentile(r.samples(), 0.5);
+        assert!((250.0..750.0).contains(&p50), "p50 {p50}");
+    }
+
+    #[test]
+    fn reservoir_is_deterministic_in_sequence() {
+        let run = || {
+            let mut r = LatencyReservoir::new(64);
+            for i in 0..5000u64 {
+                r.record((i.wrapping_mul(2654435761) % 997) as f64);
+            }
+            r.samples().to_vec()
+        };
+        assert_eq!(run(), run());
     }
 
     #[test]

@@ -191,11 +191,21 @@ impl AnalyticEngine {
         }
         let age = self.clock.device_age();
         let segment = self.profile.segment_index(age);
+        let p = self.profile.predict(age);
         if self.active_segment != Some(segment) {
             self.metrics.set_switches += 1;
             self.active_segment = Some(segment);
+            // Same drift telemetry the real server emits, so analytic
+            // and native fleets share one trace vocabulary.
+            crate::obs::event("serve.set_switch", "serve", || {
+                vec![
+                    ("set", crate::util::json::num(segment as f64)),
+                    ("age_s", crate::util::json::num(age)),
+                    ("pred_acc", crate::util::json::num(p)),
+                ]
+            });
+            crate::obs::counter_add("serve.set_switches", 1);
         }
-        let p = self.profile.predict(age);
         let take = self.queue.len().min(self.policy.max_batch);
         let batch: Vec<Request> = self.queue.drain(..take).collect();
         self.wall += wall_per_exec;
@@ -208,7 +218,7 @@ impl AnalyticEngine {
             if correct {
                 self.metrics.correct += 1;
             }
-            self.metrics.latencies.push(latency);
+            self.metrics.latencies.record(latency);
             out.push(Completion {
                 id: req.id,
                 correct,

@@ -188,14 +188,33 @@ pub struct PhaseSummary {
     pub availability: f64,
     /// Requests redelivered off failed chips during the phase.
     pub requeued: usize,
+    /// Served requests per phase wall-second (`served / (end - start)`).
+    pub throughput: f64,
+    /// Fraction of phase traffic shed to another chip by failures:
+    /// `requeued / (served + requeued)`, 0 when the phase saw nothing.
+    pub requeue_rate: f64,
 }
 
 impl PhaseSummary {
+    /// Direction-2 groundwork: per-phase throughput and shed rate from
+    /// the phase's own counters and wall interval.
+    pub fn rates(served: usize, requeued: usize, start: f64, end: f64)
+        -> (f64, f64)
+    {
+        let wall = end - start;
+        let throughput =
+            if wall > 0.0 { served as f64 / wall } else { 0.0 };
+        let total = served + requeued;
+        let requeue_rate =
+            if total > 0 { requeued as f64 / total as f64 } else { 0.0 };
+        (throughput, requeue_rate)
+    }
+
     pub fn print(&self) {
         println!(
             "phase {:<18} [{:>6.1}s..{:>6.1}s] served {:>7} \
              acc {:>6.2}% p50 {:>7.1} ms p99 {:>7.1} ms \
-             avail {:>5.1}% requeued {}",
+             avail {:>5.1}% {:>6.0} req/s shed {:>4.1}% requeued {}",
             self.name,
             self.start,
             self.end,
@@ -204,6 +223,8 @@ impl PhaseSummary {
             1e3 * self.p50_latency,
             1e3 * self.p99_latency,
             100.0 * self.availability,
+            self.throughput,
+            100.0 * self.requeue_rate,
             self.requeued,
         );
     }
@@ -260,10 +281,12 @@ impl FleetSummary {
             })
             .collect();
         // Merge per-chip latency samples; one sort serves both
-        // quantiles.
+        // quantiles. Each chip's reservoir is bounded (exact below its
+        // cap), so the scratch vector is O(cap · n_chips) no matter how
+        // long the replay ran.
         let mut sorted: Vec<f64> = chips
             .iter()
-            .flat_map(|c| c.metrics().latencies.iter().copied())
+            .flat_map(|c| c.metrics().latencies.samples().iter().copied())
             .collect();
         sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let mut graph_execs = std::collections::BTreeMap::new();

@@ -42,6 +42,8 @@ pub use router::{BalancePolicy, ChipView, Router};
 use crate::coordinator::serve::{
     BatchPolicy, Completion, LifetimeClock, Workload,
 };
+use crate::obs;
+use crate::util::json::num;
 use crate::util::parallel;
 use anyhow::{bail, Result};
 use std::sync::Arc;
@@ -214,6 +216,10 @@ impl<E: ChipEngine> Fleet<E> {
             self.chips[i].submit(req);
         }
         self.metrics.record_requeue(chip, n);
+        obs::event("fleet.fail_chip", "fleet", || {
+            vec![("chip", num(chip as f64)), ("count", num(n as f64))]
+        });
+        obs::counter_add("fleet.requeues", n as u64);
         Ok(n)
     }
 
@@ -231,6 +237,9 @@ impl<E: ChipEngine> Fleet<E> {
             self.state[chip] = ChipState::Alive;
             bail!("cannot retire chip {chip}: no live chip would remain");
         }
+        obs::event("fleet.retire_chip", "fleet", || {
+            vec![("chip", num(chip as f64))]
+        });
         Ok(())
     }
 
@@ -245,6 +254,9 @@ impl<E: ChipEngine> Fleet<E> {
         }
         self.chips[chip].refresh(t0);
         self.state[chip] = ChipState::Alive;
+        obs::event("fleet.refresh_chip", "fleet", || {
+            vec![("chip", num(chip as f64)), ("t_s", num(t0))]
+        });
         Ok(())
     }
 
@@ -285,7 +297,9 @@ impl<E: ChipEngine> Fleet<E> {
         workload: &mut Workload,
         test_len: usize,
     ) -> Result<Vec<FleetCompletion>> {
+        let _span = obs::span("fleet.tick", "fleet");
         let reqs = workload.arrivals(dt, &self.ref_clock, test_len);
+        obs::counter_add("fleet.arrivals", reqs.len() as u64);
         let mut views = self.views();
         for mut req in reqs {
             let i = self.router.route(&views);
@@ -322,6 +336,8 @@ impl<E: ChipEngine> Fleet<E> {
         } else {
             1
         };
+        let _span = obs::span("fleet.service_window", "fleet")
+            .arg("queue", num(queued as f64));
         let credits: &[f64] = &self.exec_credit;
         let debts: &[f64] = &self.age_debt;
         let states: &[ChipState] = &self.state;
@@ -329,6 +345,11 @@ impl<E: ChipEngine> Fleet<E> {
             threads,
             &mut self.chips,
             |i, chip| -> Result<(Vec<Completion>, f64)> {
+                // Per-chip drain span: recorded on whichever worker
+                // thread ran the chunk (per-thread buffers merge at
+                // export), one span per chip either way.
+                let _span = obs::span("fleet.chip_drain", "fleet")
+                    .arg("chip", num(i as f64));
                 let credit = credits[i] + dt;
                 // A failed chip executes nothing; its devices keep
                 // drifting through the idle advance below.
@@ -373,8 +394,19 @@ impl<E: ChipEngine> Fleet<E> {
             let idle = (dt - spent - self.age_debt[i]).max(0.0);
             self.age_debt[i] += spent + idle - dt;
             self.metrics.record_completions(i, &comps);
+            obs::counter_add("fleet.served", comps.len() as u64);
             if sample {
-                self.metrics.observe_queue(i, self.chips[i].queue_len());
+                let depth = self.chips[i].queue_len();
+                self.metrics.observe_queue(i, depth);
+                // Per-chip queue gauges; format only when metrics are
+                // actually on.
+                if obs::metrics_enabled() {
+                    obs::gauge_set(
+                        &format!("fleet.queue.chip{i}"),
+                        depth as f64,
+                    );
+                    obs::hist_record("fleet.queue_depth", depth as f64);
+                }
             }
             out.extend(comps.into_iter().map(|completion| {
                 FleetCompletion {

@@ -25,6 +25,10 @@
 //!   plus fleet-level totals.
 //! - `data`         — synthetic image/token tasks (dataset substitutions).
 //! - `harness`      — regenerates every paper table and figure.
+//! - `obs`          — std-only tracing/metrics: counters, gauges, P²
+//!   streaming-quantile histograms, hierarchical spans with Chrome-trace
+//!   export, drift/set-switch telemetry. Off by default; `VERA_TRACE` /
+//!   `VERA_METRICS` or the CLI flags enable it.
 
 pub mod compensation;
 pub mod coordinator;
@@ -33,6 +37,7 @@ pub mod data;
 pub mod fleet;
 pub mod harness;
 pub mod nn;
+pub mod obs;
 pub mod rram;
 pub mod runtime;
 pub mod scenario;

@@ -9,8 +9,12 @@
 //! vera-plus fleet          --chips 8 --policy drift-aware [...]
 //! vera-plus experiment     --id fig3|fig4|fig5|fig6|table2..5|all
 //! vera-plus report         [--table 1]
+//! vera-plus obs            [--preset chaos] [--trace out.trace.json]
 //! vera-plus info
 //! ```
+//!
+//! `fleet`/`scenario`/`obs` accept `--trace PATH` (Chrome trace-event
+//! JSON) and `--jsonl PATH`; see [`vera_plus::obs`] for the env knobs.
 
 use anyhow::Result;
 use std::sync::Arc;
@@ -50,6 +54,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("scenario") => cmd_scenario(args),
         Some("experiment") => cmd_experiment(args),
         Some("report") => cmd_report(args),
+        Some("obs") => cmd_obs(args),
         Some("info") => cmd_info(),
         _ => {
             print_help();
@@ -81,8 +86,79 @@ fn print_help() {
          \u{20}                (--id fig3|fig4|fig5|fig6|table2..table5|all,\n  \
          \u{20}                 --quick | --full)\n  \
          report          Print cost-model tables (--table 1|3|4|5)\n  \
-         info            Show artifact/manifest inventory\n"
+         obs             Traced chaos-scenario run + span/metric report\n  \
+         \u{20}                (--input TRACE.json to report on a saved\n  \
+         \u{20}                 trace; else takes every scenario option)\n  \
+         info            Show artifact/manifest inventory\n\n\
+         OBSERVABILITY:\n  \
+         fleet/scenario/obs accept --trace PATH to record the run as\n  \
+         Chrome trace-event JSON (load in chrome://tracing or Perfetto)\n  \
+         and --jsonl PATH for one-event-per-line JSON.\n\n\
+         ENVIRONMENT:\n  \
+         VERA_TRACE        enable span capture (a path value also names\n  \
+         \u{20}                  the default trace output file)\n  \
+         VERA_METRICS      enable counters/gauges/histograms\n  \
+         VERA_LAT_SAMPLES  serve-latency reservoir cap (default 8192)\n  \
+         VERA_THREADS      worker pool width (bit-identical results)\n"
     );
+}
+
+/// `--trace PATH` / `--jsonl PATH` (or a path-valued `VERA_TRACE`)
+/// switch the obs pipeline on for this run and name the output files.
+/// Returns `(chrome_path, jsonl_path)`.
+fn trace_arm(args: &Args) -> (Option<String>, Option<String>) {
+    let chrome = args
+        .get("trace")
+        .map(str::to_string)
+        .or_else(vera_plus::obs::env_trace_path);
+    let jsonl = args.get("jsonl").map(str::to_string);
+    if chrome.is_some() || jsonl.is_some() {
+        vera_plus::obs::set_trace(true);
+        vera_plus::obs::set_metrics(true);
+    }
+    (chrome, jsonl)
+}
+
+/// Write armed trace outputs from one drained event timeline.
+fn trace_write(
+    chrome: &Option<String>,
+    jsonl: &Option<String>,
+    events: &[vera_plus::obs::TraceEvent],
+) -> Result<()> {
+    if let Some(p) = chrome {
+        let doc = vera_plus::obs::chrome_trace_json(events);
+        std::fs::write(p, doc.to_string_compact())?;
+        println!("trace: {} events -> {p}", events.len());
+    }
+    if let Some(p) = jsonl {
+        std::fs::write(p, vera_plus::obs::jsonl(events))?;
+        println!("trace: {} events -> {p} (jsonl)", events.len());
+    }
+    Ok(())
+}
+
+/// Observability report. With `--input TRACE.json`, reconstruct the
+/// timeline from a saved Chrome trace and report on it; otherwise run
+/// the scripted scenario (default `--preset chaos`) fully instrumented
+/// and report on the live capture. `--trace`/`--jsonl` also save it.
+fn cmd_obs(args: &Args) -> Result<()> {
+    if let Some(input) = args.get("input") {
+        let text = std::fs::read_to_string(input)?;
+        let doc = vera_plus::util::json::parse(&text)?;
+        let events = vera_plus::obs::events_from_chrome(&doc)?;
+        println!("loaded {} events from {input}", events.len());
+        vera_plus::obs::print_report(&events);
+        return Ok(());
+    }
+    let (chrome, jsonl) = trace_arm(args);
+    vera_plus::obs::set_trace(true);
+    vera_plus::obs::set_metrics(true);
+    scenario_run(args)?;
+    let events = vera_plus::obs::take_events();
+    trace_write(&chrome, &jsonl, &events)?;
+    println!();
+    vera_plus::obs::print_report(&events);
+    Ok(())
 }
 
 fn budget(args: &Args) -> Budget {
@@ -259,6 +335,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         FleetConfig,
     };
 
+    let (chrome, jsonl) = trace_arm(args);
     let n_chips = args.get_usize("chips", 8)?;
     anyhow::ensure!(n_chips >= 1, "--chips must be at least 1");
     let method = args.get_or("method", "veraplus");
@@ -402,6 +479,10 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         rate,
         fc.serving_power_w(rate),
     );
+    if chrome.is_some() || jsonl.is_some() {
+        let events = vera_plus::obs::take_events();
+        trace_write(&chrome, &jsonl, &events)?;
+    }
     Ok(())
 }
 
@@ -409,6 +490,18 @@ fn cmd_fleet(args: &Args) -> Result<()> {
 /// reprogramming campaigns, retirement and shaped traffic, reported
 /// per scenario phase. Artifact-free.
 fn cmd_scenario(args: &Args) -> Result<()> {
+    let (chrome, jsonl) = trace_arm(args);
+    scenario_run(args)?;
+    if chrome.is_some() || jsonl.is_some() {
+        let events = vera_plus::obs::take_events();
+        trace_write(&chrome, &jsonl, &events)?;
+    }
+    Ok(())
+}
+
+/// The scenario body, shared by `scenario` and `obs` (which drains the
+/// timeline itself after the run).
+fn scenario_run(args: &Args) -> Result<()> {
     use vera_plus::costmodel::{
         cost_method, paper_resnet20_layers, Method, RefreshCost,
     };

@@ -1,0 +1,575 @@
+//! # obs — std-only tracing/metrics for the whole stack
+//!
+//! The serving roadmap (event-driven fleet metrics, online drift-age
+//! estimation) needs one place where runtime kernels, the coordinator,
+//! the fleet, and the scenario engine report what they are doing. This
+//! module is that place: a global registry of counters / gauges /
+//! bounded histograms (P² streaming quantiles, O(1) memory per metric)
+//! plus hierarchical spans and instant events recorded into per-thread
+//! buffers and exported as Chrome trace-event JSON or JSON-lines.
+//!
+//! ## Cost model
+//! Everything is gated on two atomic flags seeded from `VERA_TRACE` /
+//! `VERA_METRICS` (and settable programmatically for tests and the CLI).
+//! Disabled, every entry point is a single relaxed atomic load and an
+//! early return — no allocation, no lock, no clock read — so
+//! instrumented hot paths (GEMM, EVALSTATS, fleet ticks) cost ~nothing
+//! in the default configuration. Enabled, spans read the monotonic clock
+//! twice and push one buffered event; counters/gauges/hists take a short
+//! global mutex, so they are placed at batch/tick granularity, never
+//! per-element.
+//!
+//! ## Determinism contract
+//! Recording NEVER feeds back into computation: no RNG is consumed, no
+//! simulated-time state is touched, and disabling the registry changes
+//! no observable output (the bit-reproducibility suites run with it off
+//! and on). Counter totals, gauge last-writes from deterministic sites,
+//! the multiset of span/event names and their argument values are
+//! thread-count-invariant whenever the instrumented code is (the obs
+//! test suite pins `VERA_THREADS={1,4}`). Histogram quantile *estimates*
+//! are sequence-dependent (P² marker updates), so histograms fed from
+//! parallel paths are approximate and excluded from the bit-identity
+//! contract; their counts and sums remain exact.
+//!
+//! ## Env vars
+//! - `VERA_TRACE`  — `1`/`true` enables span+event recording; any other
+//!   non-empty, non-`0` value both enables it and names the default
+//!   Chrome-trace output path for CLI commands.
+//! - `VERA_METRICS` — `1`/`true` enables counters/gauges/histograms.
+
+pub mod quantile;
+pub mod trace;
+
+pub use quantile::{Hist, P2};
+pub use trace::{
+    chrome_trace_json, events_from_chrome, flush_thread, jsonl,
+    span_stats, Phase, SpanStat, TraceEvent,
+};
+
+use std::borrow::Cow;
+use std::cell::Cell;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, Once, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+// ---------------------------------------------------------------------
+// Enable flags: the only state hot paths touch when obs is off.
+
+static INIT: Once = Once::new();
+static TRACE_ON: AtomicBool = AtomicBool::new(false);
+static METRICS_ON: AtomicBool = AtomicBool::new(false);
+
+fn env_value(name: &str) -> Option<String> {
+    match std::env::var(name) {
+        Ok(v) if !v.trim().is_empty() => Some(v.trim().to_string()),
+        _ => None,
+    }
+}
+
+fn env_enables(v: &str) -> bool {
+    !matches!(v, "0" | "false" | "off")
+}
+
+#[inline]
+fn ensure_init() {
+    INIT.call_once(|| {
+        if env_value("VERA_TRACE").is_some_and(|v| env_enables(&v)) {
+            TRACE_ON.store(true, Ordering::Relaxed);
+        }
+        if env_value("VERA_METRICS").is_some_and(|v| env_enables(&v)) {
+            METRICS_ON.store(true, Ordering::Relaxed);
+        }
+    });
+}
+
+/// Is span/event recording on? One relaxed load after first use.
+#[inline]
+pub fn trace_enabled() -> bool {
+    ensure_init();
+    TRACE_ON.load(Ordering::Relaxed)
+}
+
+/// Are counters/gauges/histograms on?
+#[inline]
+pub fn metrics_enabled() -> bool {
+    ensure_init();
+    METRICS_ON.load(Ordering::Relaxed)
+}
+
+/// Programmatic override (CLI `--trace`, tests, benches).
+pub fn set_trace(on: bool) {
+    ensure_init();
+    TRACE_ON.store(on, Ordering::Relaxed);
+}
+
+pub fn set_metrics(on: bool) {
+    ensure_init();
+    METRICS_ON.store(on, Ordering::Relaxed);
+}
+
+/// If `VERA_TRACE` names a path (any value other than an on/off
+/// literal), that path is the default Chrome-trace output file for CLI
+/// commands that emit traces.
+pub fn env_trace_path() -> Option<String> {
+    let v = env_value("VERA_TRACE")?;
+    if matches!(v.as_str(), "0" | "1" | "true" | "false" | "on" | "off") {
+        None
+    } else {
+        Some(v)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Global registry.
+
+pub struct Registry {
+    epoch: Instant,
+    seq: AtomicU64,
+    next_tid: AtomicU64,
+    counters: Mutex<BTreeMap<String, u64>>,
+    gauges: Mutex<BTreeMap<String, f64>>,
+    hists: Mutex<BTreeMap<String, Hist>>,
+    events: Mutex<Vec<TraceEvent>>,
+}
+
+static REGISTRY: OnceLock<Registry> = OnceLock::new();
+
+pub(crate) fn global() -> &'static Registry {
+    REGISTRY.get_or_init(|| Registry {
+        epoch: Instant::now(),
+        seq: AtomicU64::new(0),
+        next_tid: AtomicU64::new(1),
+        counters: Mutex::new(BTreeMap::new()),
+        gauges: Mutex::new(BTreeMap::new()),
+        hists: Mutex::new(BTreeMap::new()),
+        events: Mutex::new(Vec::new()),
+    })
+}
+
+thread_local! {
+    static TID: Cell<u64> = const { Cell::new(0) };
+}
+
+fn thread_lane() -> u64 {
+    TID.with(|t| {
+        let v = t.get();
+        if v != 0 {
+            v
+        } else {
+            let v = global().next_tid.fetch_add(1, Ordering::Relaxed);
+            t.set(v);
+            v
+        }
+    })
+}
+
+impl Registry {
+    fn now_us(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64() * 1e6
+    }
+
+    fn next_seq(&self) -> u64 {
+        self.seq.fetch_add(1, Ordering::Relaxed)
+    }
+
+    pub(crate) fn sink_events(&self, mut buf: Vec<TraceEvent>) {
+        self.events.lock().unwrap().append(&mut buf);
+    }
+
+    fn counter_add(&self, name: &str, delta: u64) {
+        let mut m = self.counters.lock().unwrap();
+        match m.get_mut(name) {
+            Some(v) => *v += delta,
+            None => {
+                m.insert(name.to_string(), delta);
+            }
+        }
+    }
+
+    fn gauge_set(&self, name: &str, v: f64) {
+        let mut m = self.gauges.lock().unwrap();
+        match m.get_mut(name) {
+            Some(g) => *g = v,
+            None => {
+                m.insert(name.to_string(), v);
+            }
+        }
+    }
+
+    fn hist_record(&self, name: &str, v: f64) {
+        let mut m = self.hists.lock().unwrap();
+        match m.get_mut(name) {
+            Some(h) => h.record(v),
+            None => {
+                let mut h = Hist::default();
+                h.record(v);
+                m.insert(name.to_string(), h);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Spans and events.
+
+struct ActiveSpan {
+    name: Cow<'static, str>,
+    cat: &'static str,
+    start_us: f64,
+    args: Vec<(&'static str, Json)>,
+}
+
+/// RAII span guard: records one complete trace event on drop. When
+/// tracing is disabled the guard is inert (`active: None`) and costs
+/// nothing beyond its construction check.
+pub struct SpanGuard {
+    active: Option<ActiveSpan>,
+}
+
+impl SpanGuard {
+    /// Attach a key/value argument (builder style). No-op when inert.
+    pub fn arg(mut self, key: &'static str, value: Json) -> Self {
+        if let Some(a) = &mut self.active {
+            a.args.push((key, value));
+        }
+        self
+    }
+
+    /// Attach an argument to an already-bound guard.
+    pub fn push_arg(&mut self, key: &'static str, value: Json) {
+        if let Some(a) = &mut self.active {
+            a.args.push((key, value));
+        }
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some(a) = self.active.take() {
+            let g = global();
+            let end_us = g.now_us();
+            trace::record(TraceEvent {
+                name: a.name.into_owned(),
+                cat: a.cat,
+                ph: Phase::Complete {
+                    dur_us: end_us - a.start_us,
+                },
+                ts_us: a.start_us,
+                tid: thread_lane(),
+                seq: g.next_seq(),
+                args: a.args,
+            });
+        }
+    }
+}
+
+/// Open a span. `name` accepts `&'static str` or an owned `String` for
+/// dynamic names; prefer [`span_key`] for the latter so the format cost
+/// is skipped when tracing is off.
+pub fn span(name: impl Into<Cow<'static, str>>, cat: &'static str) -> SpanGuard {
+    if !trace_enabled() {
+        return SpanGuard { active: None };
+    }
+    SpanGuard {
+        active: Some(ActiveSpan {
+            name: name.into(),
+            cat,
+            start_us: global().now_us(),
+            args: Vec::new(),
+        }),
+    }
+}
+
+/// Open a span named `{prefix}{key}` without formatting when disabled.
+pub fn span_key(prefix: &str, key: &str, cat: &'static str) -> SpanGuard {
+    if !trace_enabled() {
+        return SpanGuard { active: None };
+    }
+    span(format!("{prefix}{key}"), cat)
+}
+
+/// Record an instant event (fault landed, set switched, chip retired).
+/// The argument closure only runs when tracing is enabled, so call
+/// sites pay nothing for building telemetry on the disabled path.
+pub fn event<F>(name: impl Into<Cow<'static, str>>, cat: &'static str, args: F)
+where
+    F: FnOnce() -> Vec<(&'static str, Json)>,
+{
+    if !trace_enabled() {
+        return;
+    }
+    let g = global();
+    trace::record(TraceEvent {
+        name: name.into().into_owned(),
+        cat,
+        ph: Phase::Instant,
+        ts_us: g.now_us(),
+        tid: thread_lane(),
+        seq: g.next_seq(),
+        args: args(),
+    });
+}
+
+/// `span!("fleet.tick")` / `span!("kernel.gemm", "kernel")` — guard-style
+/// span entry matching the tracing-crate idiom without the dependency.
+#[macro_export]
+macro_rules! span {
+    ($name:expr) => {
+        $crate::obs::span($name, "app")
+    };
+    ($name:expr, $cat:expr) => {
+        $crate::obs::span($name, $cat)
+    };
+}
+
+// ---------------------------------------------------------------------
+// Metrics entry points.
+
+/// Add to a named monotonic counter.
+pub fn counter_add(name: &str, delta: u64) {
+    if !metrics_enabled() {
+        return;
+    }
+    global().counter_add(name, delta);
+}
+
+/// Set a named gauge to its latest value.
+pub fn gauge_set(name: &str, v: f64) {
+    if !metrics_enabled() {
+        return;
+    }
+    global().gauge_set(name, v);
+}
+
+/// Record one observation into a named bounded histogram.
+pub fn hist_record(name: &str, v: f64) {
+    if !metrics_enabled() {
+        return;
+    }
+    global().hist_record(name, v);
+}
+
+// ---------------------------------------------------------------------
+// Snapshots and export.
+
+/// Point-in-time copy of one histogram's rollup.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistSnapshot {
+    pub count: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+}
+
+/// Point-in-time copy of every metric. Cheap to diff in tests.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MetricsSnapshot {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, f64>,
+    pub hists: BTreeMap<String, HistSnapshot>,
+}
+
+pub fn snapshot() -> MetricsSnapshot {
+    let g = global();
+    let counters = g.counters.lock().unwrap().clone();
+    let gauges = g.gauges.lock().unwrap().clone();
+    let hists = g
+        .hists
+        .lock()
+        .unwrap()
+        .iter()
+        .map(|(k, h)| {
+            (
+                k.clone(),
+                HistSnapshot {
+                    count: h.count,
+                    sum: h.sum,
+                    min: h.min,
+                    max: h.max,
+                    p50: h.p50(),
+                    p90: h.p90(),
+                    p99: h.p99(),
+                },
+            )
+        })
+        .collect();
+    MetricsSnapshot {
+        counters,
+        gauges,
+        hists,
+    }
+}
+
+/// Drain all recorded events (flushing this thread's buffer first) in
+/// deterministic `(ts, seq)` order. Worker threads spawned through
+/// `util::parallel` have already flushed on scope exit.
+pub fn take_events() -> Vec<TraceEvent> {
+    trace::flush_thread();
+    let mut events = std::mem::take(&mut *global().events.lock().unwrap());
+    trace::sort_events(&mut events);
+    events
+}
+
+/// Clear every counter/gauge/histogram and drop any recorded events.
+/// Tests and benches call this between phases.
+pub fn reset() {
+    trace::flush_thread();
+    let g = global();
+    g.counters.lock().unwrap().clear();
+    g.gauges.lock().unwrap().clear();
+    g.hists.lock().unwrap().clear();
+    g.events.lock().unwrap().clear();
+}
+
+/// Drain events and write a Chrome trace-event JSON file. Returns the
+/// number of events written.
+pub fn write_chrome_trace(path: &str) -> anyhow::Result<usize> {
+    let events = take_events();
+    let doc = chrome_trace_json(&events);
+    std::fs::write(path, doc.to_string_compact())?;
+    Ok(events.len())
+}
+
+/// Print the operator report: top spans by self-time, counters, gauges,
+/// and histogram rollups. Used by `vera-plus obs` and after traced runs.
+pub fn print_report(events: &[TraceEvent]) {
+    let stats = span_stats(events);
+    let mut rows: Vec<(&String, &SpanStat)> = stats.iter().collect();
+    rows.sort_by(|a, b| b.1.self_us.total_cmp(&a.1.self_us));
+    println!("top spans by self-time:");
+    println!(
+        "  {:<40} {:>8} {:>12} {:>12}",
+        "span", "count", "total_ms", "self_ms"
+    );
+    for (name, s) in rows.iter().take(20) {
+        println!(
+            "  {:<40} {:>8} {:>12.3} {:>12.3}",
+            name,
+            s.count,
+            s.total_us / 1e3,
+            s.self_us / 1e3
+        );
+    }
+    let instants = events
+        .iter()
+        .filter(|e| matches!(e.ph, Phase::Instant))
+        .count();
+    println!("  ({} spans, {} instant events)", events.len() - instants, instants);
+
+    let snap = snapshot();
+    if !snap.counters.is_empty() {
+        println!("counters:");
+        for (k, v) in &snap.counters {
+            println!("  {k:<52} {v:>12}");
+        }
+    }
+    if !snap.gauges.is_empty() {
+        println!("gauges:");
+        for (k, v) in &snap.gauges {
+            println!("  {k:<52} {v:>12.3}");
+        }
+    }
+    if !snap.hists.is_empty() {
+        println!("histograms (P2 streaming quantiles):");
+        println!(
+            "  {:<36} {:>8} {:>9} {:>9} {:>9} {:>9}",
+            "name", "count", "mean", "p50", "p90", "p99"
+        );
+        for (k, h) in &snap.hists {
+            let mean = if h.count == 0 { 0.0 } else { h.sum / h.count as f64 };
+            println!(
+                "  {:<36} {:>8} {:>9.3} {:>9.3} {:>9.3} {:>9.3}",
+                k, h.count, mean, h.p50, h.p90, h.p99
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The obs registry is process-global and the test harness runs on
+    // parallel threads, so these tests serialise on a lock and assert on
+    // keys only they write; the full determinism contract is pinned in
+    // tests/obs_props.rs (its own process).
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn disabled_paths_record_nothing() {
+        let _l = TEST_LOCK.lock().unwrap();
+        set_trace(false);
+        set_metrics(false);
+        reset();
+        {
+            let _g = span("noop", "test");
+            counter_add("noop.count", 3);
+            gauge_set("noop.gauge", 1.0);
+            hist_record("noop.hist", 2.0);
+            event("noop.event", "test", || vec![]);
+        }
+        let events = take_events();
+        assert!(events.iter().all(|e| !e.name.starts_with("noop")));
+        let snap = snapshot();
+        assert!(!snap.counters.contains_key("noop.count"));
+        assert!(!snap.gauges.contains_key("noop.gauge"));
+        assert!(!snap.hists.contains_key("noop.hist"));
+    }
+
+    #[test]
+    fn span_guard_records_complete_event() {
+        let _l = TEST_LOCK.lock().unwrap();
+        set_trace(true);
+        reset();
+        {
+            let _g = span("outer", "test")
+                .arg("k", crate::util::json::num(5.0));
+            let _inner = span("inner", "test");
+        }
+        event("marker", "test", || {
+            vec![("chip", crate::util::json::num(2.0))]
+        });
+        let events = take_events();
+        set_trace(false);
+        let names: Vec<&str> =
+            events.iter().map(|e| e.name.as_str()).collect();
+        assert!(names.contains(&"outer"));
+        assert!(names.contains(&"inner"));
+        assert!(names.contains(&"marker"));
+        let outer = events.iter().find(|e| e.name == "outer").unwrap();
+        assert_eq!(outer.args.len(), 1);
+        match outer.ph {
+            Phase::Complete { dur_us } => assert!(dur_us >= 0.0),
+            _ => panic!("span must be a complete event"),
+        }
+        let marker = events.iter().find(|e| e.name == "marker").unwrap();
+        assert!(matches!(marker.ph, Phase::Instant));
+    }
+
+    #[test]
+    fn metrics_aggregate() {
+        let _l = TEST_LOCK.lock().unwrap();
+        set_metrics(true);
+        reset();
+        counter_add("m.count", 2);
+        counter_add("m.count", 3);
+        gauge_set("m.gauge", 1.5);
+        gauge_set("m.gauge", 2.5);
+        for i in 1..=10 {
+            hist_record("m.hist", i as f64);
+        }
+        let snap = snapshot();
+        set_metrics(false);
+        reset();
+        assert_eq!(snap.counters["m.count"], 5);
+        assert_eq!(snap.gauges["m.gauge"], 2.5);
+        assert_eq!(snap.hists["m.hist"].count, 10);
+        assert_eq!(snap.hists["m.hist"].sum, 55.0);
+    }
+}

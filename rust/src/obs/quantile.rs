@@ -1,0 +1,297 @@
+//! P² (piecewise-parabolic) streaming quantile estimation.
+//!
+//! Jain & Chlamtac's P² algorithm tracks a single quantile of a stream
+//! with five markers — O(1) memory and O(1) update — which is what lets
+//! the observability layer keep latency percentiles on hot paths without
+//! the unbounded sample vectors the serve layer used to accumulate.
+//! Below five observations the estimator is exact (it just sorts what it
+//! has); from the sixth observation on, marker heights are adjusted with
+//! the parabolic prediction formula and the estimate converges to the
+//! true quantile for stationary streams.
+//!
+//! The update is fully deterministic in the observation sequence: no RNG,
+//! no time dependence, so any code path that feeds it in a
+//! thread-count-invariant order produces bit-identical estimates.
+
+/// Streaming estimator for one quantile `p` in (0, 1).
+#[derive(Debug, Clone)]
+pub struct P2 {
+    p: f64,
+    /// Marker heights q[0..5]: running estimates of min, the p/2, p,
+    /// (1+p)/2 quantiles, and max.
+    q: [f64; 5],
+    /// Actual marker positions (1-based observation ranks).
+    n: [f64; 5],
+    /// Desired marker positions.
+    np: [f64; 5],
+    /// Desired position increments per observation.
+    dn: [f64; 5],
+    count: u64,
+}
+
+impl P2 {
+    pub fn new(p: f64) -> Self {
+        assert!(p > 0.0 && p < 1.0, "quantile must be in (0,1)");
+        P2 {
+            p,
+            q: [0.0; 5],
+            n: [1.0, 2.0, 3.0, 4.0, 5.0],
+            np: [1.0, 1.0 + 2.0 * p, 1.0 + 4.0 * p, 3.0 + 2.0 * p, 5.0],
+            dn: [0.0, p / 2.0, p, (1.0 + p) / 2.0, 1.0],
+            count: 0,
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn quantile_p(&self) -> f64 {
+        self.p
+    }
+
+    /// Feed one observation.
+    pub fn record(&mut self, x: f64) {
+        if self.count < 5 {
+            // Initialisation phase: store and keep sorted.
+            self.q[self.count as usize] = x;
+            self.count += 1;
+            let k = self.count as usize;
+            self.q[..k].sort_by(|a, b| a.total_cmp(b));
+            return;
+        }
+        self.count += 1;
+
+        // Find the cell containing x and clamp the extreme markers.
+        let k = if x < self.q[0] {
+            self.q[0] = x;
+            0
+        } else if x < self.q[1] {
+            0
+        } else if x < self.q[2] {
+            1
+        } else if x < self.q[3] {
+            2
+        } else if x <= self.q[4] {
+            3
+        } else {
+            self.q[4] = x;
+            3
+        };
+
+        for i in (k + 1)..5 {
+            self.n[i] += 1.0;
+        }
+        for i in 0..5 {
+            self.np[i] += self.dn[i];
+        }
+
+        // Adjust the three interior markers toward their desired ranks.
+        for i in 1..4 {
+            let d = self.np[i] - self.n[i];
+            if (d >= 1.0 && self.n[i + 1] - self.n[i] > 1.0)
+                || (d <= -1.0 && self.n[i - 1] - self.n[i] < -1.0)
+            {
+                let d = d.signum();
+                let qp = self.parabolic(i, d);
+                self.q[i] = if self.q[i - 1] < qp && qp < self.q[i + 1] {
+                    qp
+                } else {
+                    self.linear(i, d)
+                };
+                self.n[i] += d;
+            }
+        }
+    }
+
+    fn parabolic(&self, i: usize, d: f64) -> f64 {
+        let q = &self.q;
+        let n = &self.n;
+        q[i] + d / (n[i + 1] - n[i - 1])
+            * ((n[i] - n[i - 1] + d) * (q[i + 1] - q[i])
+                / (n[i + 1] - n[i])
+                + (n[i + 1] - n[i] - d) * (q[i] - q[i - 1])
+                    / (n[i] - n[i - 1]))
+    }
+
+    fn linear(&self, i: usize, d: f64) -> f64 {
+        let j = if d > 0.0 { i + 1 } else { i - 1 };
+        self.q[i] + d * (self.q[j] - self.q[i]) / (self.n[j] - self.n[i])
+    }
+
+    /// Current estimate. Exact while fewer than six observations have
+    /// been seen (linear interpolation over the sorted prefix, matching
+    /// `serve::percentile` semantics); the P² marker height afterwards.
+    pub fn estimate(&self) -> f64 {
+        let k = self.count.min(5) as usize;
+        if k == 0 {
+            return 0.0;
+        }
+        if self.count <= 5 {
+            // Exact small-sample path over the sorted prefix.
+            let rank = self.p * (k as f64 - 1.0);
+            let lo = rank.floor() as usize;
+            let hi = rank.ceil() as usize;
+            let frac = rank - lo as f64;
+            return self.q[lo] * (1.0 - frac) + self.q[hi.min(k - 1)] * frac;
+        }
+        self.q[2]
+    }
+}
+
+/// A bounded histogram: count/sum/min/max plus P² markers for the
+/// standard latency quantiles. O(1) memory per metric name regardless of
+/// stream length.
+#[derive(Debug, Clone)]
+pub struct Hist {
+    pub count: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+    p50: P2,
+    p90: P2,
+    p99: P2,
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Hist {
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            p50: P2::new(0.5),
+            p90: P2::new(0.9),
+            p99: P2::new(0.99),
+        }
+    }
+}
+
+impl Hist {
+    pub fn record(&mut self, x: f64) {
+        self.count += 1;
+        self.sum += x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+        self.p50.record(x);
+        self.p90.record(x);
+        self.p99.record(x);
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.p50.estimate()
+    }
+
+    pub fn p90(&self) -> f64 {
+        self.p90.estimate()
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.p99.estimate()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic LCG so the test needs no external RNG.
+    fn lcg(state: &mut u64) -> f64 {
+        *state = state
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        ((*state >> 11) as f64) / ((1u64 << 53) as f64)
+    }
+
+    fn exact_percentile(sorted: &[f64], p: f64) -> f64 {
+        let rank = p * (sorted.len() as f64 - 1.0);
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        let frac = rank - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi.min(sorted.len() - 1)] * frac
+    }
+
+    #[test]
+    fn exact_below_six_samples() {
+        let mut p2 = P2::new(0.5);
+        for (i, x) in [5.0, 1.0, 3.0].iter().enumerate() {
+            p2.record(*x);
+            assert_eq!(p2.count(), i as u64 + 1);
+        }
+        // Sorted: [1,3,5] -> median 3.
+        assert_eq!(p2.estimate(), 3.0);
+    }
+
+    #[test]
+    fn converges_on_uniform_stream() {
+        let mut state = 0x5eed_u64;
+        let mut p2 = P2::new(0.9);
+        let mut all = Vec::new();
+        for _ in 0..20_000 {
+            let x = lcg(&mut state);
+            p2.record(x);
+            all.push(x);
+        }
+        all.sort_by(|a, b| a.total_cmp(b));
+        let exact = exact_percentile(&all, 0.9);
+        assert!(
+            (p2.estimate() - exact).abs() < 0.02,
+            "p90 estimate {} vs exact {}",
+            p2.estimate(),
+            exact
+        );
+    }
+
+    #[test]
+    fn converges_on_skewed_stream() {
+        // Latency-like: mostly small with a heavy tail.
+        let mut state = 0xcafe_u64;
+        let mut p2 = P2::new(0.99);
+        let mut all = Vec::new();
+        for _ in 0..50_000 {
+            let u = lcg(&mut state);
+            let x = if u > 0.98 { 100.0 + 400.0 * u } else { 1.0 + 5.0 * u };
+            p2.record(x);
+            all.push(x);
+        }
+        all.sort_by(|a, b| a.total_cmp(b));
+        let exact = exact_percentile(&all, 0.99);
+        let rel = (p2.estimate() - exact).abs() / exact;
+        assert!(rel < 0.15, "p99 {} vs exact {} (rel {})", p2.estimate(), exact, rel);
+    }
+
+    #[test]
+    fn deterministic_in_sequence() {
+        let run = || {
+            let mut p2 = P2::new(0.5);
+            let mut state = 7u64;
+            for _ in 0..1000 {
+                p2.record(lcg(&mut state));
+            }
+            p2.estimate()
+        };
+        assert_eq!(run().to_bits(), run().to_bits());
+    }
+
+    #[test]
+    fn hist_tracks_moments_and_tails() {
+        let mut h = Hist::default();
+        for i in 1..=100 {
+            h.record(i as f64);
+        }
+        assert_eq!(h.count, 100);
+        assert_eq!(h.min, 1.0);
+        assert_eq!(h.max, 100.0);
+        assert_eq!(h.mean(), 50.5);
+        assert!((h.p50() - 50.0).abs() < 5.0);
+        assert!(h.p99() > 90.0);
+    }
+}

@@ -1,0 +1,382 @@
+//! Span/event recording and Chrome trace-event export.
+//!
+//! Spans are RAII guards: entering pushes nothing, dropping records one
+//! *complete* ("X") trace event into a per-thread buffer. Buffers flush
+//! into the global sink when they reach [`TLS_FLUSH_LEN`] and — because
+//! `util::parallel` spawns scoped OS threads per call rather than keeping
+//! a pool — on thread exit via the buffer's `Drop`. The exporting thread
+//! calls [`flush_thread`] for its own buffer, so after any
+//! `thread::scope` has joined, the sink holds every event.
+//!
+//! The merge is deterministic: events carry a globally ordered `seq`
+//! (assigned at record time from one atomic) and exports sort by
+//! `(ts_us, seq)`, so the on-disk order is a pure function of the
+//! recorded set. Timestamps are wall-clock and therefore vary run to
+//! run, but the *set* of events (names, categories, counts, argument
+//! values) is thread-count-invariant whenever the instrumented code is —
+//! the property the obs test suite pins at `VERA_THREADS={1,4}`.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+
+use crate::util::json::{self, Json};
+
+/// Event flavour: a completed span with a duration, or a point-in-time
+/// instant event (faults, set switches, lifecycle transitions).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Phase {
+    /// Chrome "X": complete span with duration in microseconds.
+    Complete { dur_us: f64 },
+    /// Chrome "i": instant event.
+    Instant,
+}
+
+/// One recorded trace event. Argument values are `util::json::Json`
+/// so numeric telemetry (drift age, predicted accuracy, queue depth)
+/// and string telemetry (graph key, chip id) share one channel.
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    pub name: String,
+    /// Category: "kernel", "exec", "eval", "serve", "fleet", "sched",
+    /// "scenario". Chrome/Perfetto can filter on these.
+    pub cat: &'static str,
+    pub ph: Phase,
+    /// Microseconds since the registry epoch.
+    pub ts_us: f64,
+    /// Stable-within-run thread lane (assignment order is scheduling-
+    /// dependent; tests compare name/arg multisets, not lanes).
+    pub tid: u64,
+    /// Global record-order sequence number; export sort tiebreak.
+    pub seq: u64,
+    pub args: Vec<(&'static str, Json)>,
+}
+
+/// Per-thread buffer length that triggers a flush into the global sink.
+pub const TLS_FLUSH_LEN: usize = 256;
+
+struct TlsBuf {
+    buf: RefCell<Vec<TraceEvent>>,
+}
+
+impl Drop for TlsBuf {
+    fn drop(&mut self) {
+        let buf = std::mem::take(&mut *self.buf.borrow_mut());
+        if !buf.is_empty() {
+            super::global().sink_events(buf);
+        }
+    }
+}
+
+thread_local! {
+    static TLS: TlsBuf = TlsBuf { buf: RefCell::new(Vec::new()) };
+}
+
+/// Record one event into this thread's buffer, flushing to the global
+/// sink when the buffer is full. Called only on enabled paths.
+pub(super) fn record(ev: TraceEvent) {
+    let overflow = TLS.with(|t| {
+        let mut buf = t.buf.borrow_mut();
+        buf.push(ev);
+        if buf.len() >= TLS_FLUSH_LEN {
+            Some(std::mem::take(&mut *buf))
+        } else {
+            None
+        }
+    });
+    if let Some(buf) = overflow {
+        super::global().sink_events(buf);
+    }
+}
+
+/// Flush the calling thread's buffer into the global sink. Exports call
+/// this so the exporting thread's own events are visible; worker threads
+/// flush automatically on scope exit.
+pub fn flush_thread() {
+    TLS.with(|t| {
+        let buf = std::mem::take(&mut *t.buf.borrow_mut());
+        if !buf.is_empty() {
+            super::global().sink_events(buf);
+        }
+    });
+}
+
+/// Deterministic export order: start timestamp, then global record
+/// sequence (distinct per event, so the order is total).
+pub(super) fn sort_events(events: &mut [TraceEvent]) {
+    events.sort_by(|a, b| {
+        a.ts_us.total_cmp(&b.ts_us).then(a.seq.cmp(&b.seq))
+    });
+}
+
+/// Render events as a Chrome trace-event JSON document (the
+/// `{"traceEvents": [...]}` object form), loadable in `chrome://tracing`
+/// and Perfetto.
+pub fn chrome_trace_json(events: &[TraceEvent]) -> Json {
+    let mut out: Vec<Json> = Vec::with_capacity(events.len());
+    for ev in events {
+        let mut pairs = vec![
+            ("name", json::s(&ev.name)),
+            ("cat", json::s(ev.cat)),
+            ("pid", json::num(1.0)),
+            ("tid", json::num(ev.tid as f64)),
+            ("ts", json::num(ev.ts_us)),
+        ];
+        match &ev.ph {
+            Phase::Complete { dur_us } => {
+                pairs.push(("ph", json::s("X")));
+                pairs.push(("dur", json::num(*dur_us)));
+            }
+            Phase::Instant => {
+                pairs.push(("ph", json::s("i")));
+                // Instant scope: "t" (thread) keeps fault/set-switch
+                // markers attached to the lane that emitted them.
+                pairs.push(("s", json::s("t")));
+            }
+        }
+        if !ev.args.is_empty() {
+            let args: Vec<(&str, Json)> =
+                ev.args.iter().map(|(k, v)| (*k, v.clone())).collect();
+            pairs.push(("args", json::obj(args)));
+        }
+        out.push(json::obj(pairs));
+    }
+    json::obj(vec![
+        ("traceEvents", Json::Arr(out)),
+        ("displayTimeUnit", json::s("ms")),
+    ])
+}
+
+/// Known category strings, so parsed-back events can reuse the static
+/// names the guards record with.
+const CATS: &[&str] = &[
+    "kernel", "exec", "eval", "serve", "fleet", "sched", "scenario", "app",
+];
+
+fn intern_cat(c: &str) -> &'static str {
+    CATS.iter().find(|k| **k == c).copied().unwrap_or("app")
+}
+
+/// Parse a Chrome trace-event JSON document (the object form written by
+/// [`chrome_trace_json`]) back into events. Inverse of the export up to
+/// category interning, which is what the round-trip test pins.
+pub fn events_from_chrome(doc: &Json) -> anyhow::Result<Vec<TraceEvent>> {
+    let raw = doc.req_arr("traceEvents")?;
+    let mut out = Vec::with_capacity(raw.len());
+    for (i, e) in raw.iter().enumerate() {
+        let ph = match e.req_str("ph")? {
+            "X" => Phase::Complete {
+                dur_us: e.req_f64("dur")?,
+            },
+            "i" => Phase::Instant,
+            other => anyhow::bail!("unsupported trace phase '{other}'"),
+        };
+        let args = match e.get("args") {
+            Some(Json::Obj(m)) => m
+                .iter()
+                .map(|(k, v)| (intern_arg(k), v.clone()))
+                .collect(),
+            _ => Vec::new(),
+        };
+        out.push(TraceEvent {
+            name: e.req_str("name")?.to_string(),
+            cat: intern_cat(e.req_str("cat").unwrap_or("app")),
+            ph,
+            ts_us: e.req_f64("ts")?,
+            tid: e.req_f64("tid")? as u64,
+            seq: i as u64,
+            args,
+        });
+    }
+    Ok(out)
+}
+
+/// Known argument keys used by the in-tree instrumentation; unknown keys
+/// from hand-edited traces fall back to a leaked string (bounded by the
+/// distinct-key count of the file being loaded).
+fn intern_arg(k: &str) -> &'static str {
+    const KEYS: &[&str] = &[
+        "chip", "age_s", "pred_acc", "set", "queue", "key", "execs",
+        "rows", "cols", "batch", "reason", "t_s", "phase", "count",
+        "threads", "instances",
+    ];
+    KEYS.iter()
+        .find(|s| **s == k)
+        .copied()
+        .unwrap_or_else(|| Box::leak(k.to_string().into_boxed_str()))
+}
+
+/// Render events as JSON-lines: one structured object per line, in the
+/// same deterministic order as the Chrome export. Suited to `grep`/`jq`
+/// pipelines rather than a trace viewer.
+pub fn jsonl(events: &[TraceEvent]) -> String {
+    let mut out = String::new();
+    for ev in events {
+        let mut pairs = vec![
+            ("kind", json::s(match ev.ph {
+                Phase::Complete { .. } => "span",
+                Phase::Instant => "event",
+            })),
+            ("name", json::s(&ev.name)),
+            ("cat", json::s(ev.cat)),
+            ("ts_us", json::num(ev.ts_us)),
+            ("tid", json::num(ev.tid as f64)),
+        ];
+        if let Phase::Complete { dur_us } = ev.ph {
+            pairs.push(("dur_us", json::num(dur_us)));
+        }
+        if !ev.args.is_empty() {
+            let args: Vec<(&str, Json)> =
+                ev.args.iter().map(|(k, v)| (*k, v.clone())).collect();
+            pairs.push(("args", json::obj(args)));
+        }
+        out.push_str(&json::obj(pairs).to_string_compact());
+        out.push('\n');
+    }
+    out
+}
+
+/// Per-name span rollup for the `vera-plus obs` report.
+#[derive(Debug, Clone, Default)]
+pub struct SpanStat {
+    pub count: u64,
+    pub total_us: f64,
+    /// Total minus time spent in child spans on the same thread lane —
+    /// the "where is the time actually going" number.
+    pub self_us: f64,
+}
+
+/// Compute per-name count/total/self-time. Children are detected by
+/// nesting on the same `tid` (a span whose interval lies inside another
+/// span's interval on the same lane), which matches how the guards nest
+/// lexically.
+pub fn span_stats(events: &[TraceEvent]) -> BTreeMap<String, SpanStat> {
+    // Group complete spans per tid, sorted by (start asc, dur desc) so a
+    // parent precedes its children.
+    let mut by_tid: BTreeMap<u64, Vec<(f64, f64, &str)>> = BTreeMap::new();
+    for ev in events {
+        if let Phase::Complete { dur_us } = ev.ph {
+            by_tid
+                .entry(ev.tid)
+                .or_default()
+                .push((ev.ts_us, dur_us, ev.name.as_str()));
+        }
+    }
+    let mut stats: BTreeMap<String, SpanStat> = BTreeMap::new();
+    for (_, spans) in by_tid.iter_mut() {
+        spans.sort_by(|a, b| {
+            a.0.total_cmp(&b.0).then(b.1.total_cmp(&a.1))
+        });
+        // Stack of (end_ts, name) for open ancestors; child durations
+        // are subtracted from the innermost enclosing span's self-time.
+        let mut stack: Vec<(f64, &str)> = Vec::new();
+        for &(ts, dur, name) in spans.iter() {
+            while let Some(&(end, _)) = stack.last() {
+                if ts >= end {
+                    stack.pop();
+                } else {
+                    break;
+                }
+            }
+            if let Some(&(_, parent)) = stack.last() {
+                if let Some(p) = stats.get_mut(parent) {
+                    p.self_us -= dur;
+                }
+            }
+            let s = stats.entry(name.to_string()).or_default();
+            s.count += 1;
+            s.total_us += dur;
+            s.self_us += dur;
+            stack.push((ts + dur, name));
+        }
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(name: &str, tid: u64, ts: f64, dur: f64, seq: u64) -> TraceEvent {
+        TraceEvent {
+            name: name.to_string(),
+            cat: "test",
+            ph: Phase::Complete { dur_us: dur },
+            ts_us: ts,
+            tid,
+            seq,
+            args: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn self_time_subtracts_nested_children() {
+        // parent [0,100) with children [10,30) and [40,90); grandchild
+        // [50,60) inside the second child.
+        let events = vec![
+            span("parent", 1, 0.0, 100.0, 0),
+            span("child", 1, 10.0, 20.0, 1),
+            span("child", 1, 40.0, 50.0, 2),
+            span("grand", 1, 50.0, 10.0, 3),
+        ];
+        let stats = span_stats(&events);
+        assert_eq!(stats["parent"].count, 1);
+        assert_eq!(stats["parent"].total_us, 100.0);
+        assert_eq!(stats["parent"].self_us, 30.0);
+        assert_eq!(stats["child"].count, 2);
+        assert_eq!(stats["child"].self_us, 60.0);
+        assert_eq!(stats["grand"].self_us, 10.0);
+    }
+
+    #[test]
+    fn different_lanes_do_not_nest() {
+        let events = vec![
+            span("a", 1, 0.0, 100.0, 0),
+            span("b", 2, 10.0, 20.0, 1),
+        ];
+        let stats = span_stats(&events);
+        assert_eq!(stats["a"].self_us, 100.0);
+        assert_eq!(stats["b"].self_us, 20.0);
+    }
+
+    #[test]
+    fn chrome_export_shape() {
+        let mut ev = span("k", 3, 5.0, 2.5, 0);
+        ev.args.push(("m", crate::util::json::num(7.0)));
+        let doc = chrome_trace_json(&[ev]);
+        let events = doc.req_arr("traceEvents").unwrap();
+        assert_eq!(events.len(), 1);
+        let e = &events[0];
+        assert_eq!(e.req_str("ph").unwrap(), "X");
+        assert_eq!(e.req_str("name").unwrap(), "k");
+        assert_eq!(e.req_f64("dur").unwrap(), 2.5);
+        assert_eq!(e.req_f64("tid").unwrap(), 3.0);
+        assert_eq!(e.req("args").unwrap().req_f64("m").unwrap(), 7.0);
+    }
+
+    #[test]
+    fn jsonl_is_parseable_per_line() {
+        let events = vec![
+            span("a", 1, 0.0, 1.0, 0),
+            TraceEvent {
+                name: "fault".into(),
+                cat: "scenario",
+                ph: Phase::Instant,
+                ts_us: 2.0,
+                tid: 1,
+                seq: 1,
+                args: vec![("chip", crate::util::json::num(4.0))],
+            },
+        ];
+        let text = jsonl(&events);
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let first = crate::util::json::parse(lines[0]).unwrap();
+        assert_eq!(first.req_str("kind").unwrap(), "span");
+        let second = crate::util::json::parse(lines[1]).unwrap();
+        assert_eq!(second.req_str("kind").unwrap(), "event");
+        assert_eq!(
+            second.req("args").unwrap().req_f64("chip").unwrap(),
+            4.0
+        );
+    }
+}

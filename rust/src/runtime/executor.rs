@@ -92,6 +92,16 @@ impl Executable {
                 );
             }
         }
+        // Per-graph-key exec telemetry: a span on the trace timeline
+        // plus count/latency metrics for the `vera-plus obs` report.
+        // Both are single atomic-load no-ops when obs is off.
+        let _span =
+            crate::obs::span_key("exec.", &self.sig.key, "exec");
+        let timer = if crate::obs::metrics_enabled() {
+            Some(std::time::Instant::now())
+        } else {
+            None
+        };
         let outs = match &self.engine {
             Engine::Native(graph) => {
                 graph.run(&self.sig, args, threads)?
@@ -121,6 +131,17 @@ impl Executable {
             );
         }
         self.executions.fetch_add(1, Ordering::Relaxed);
+        if let Some(t0) = timer {
+            let us = t0.elapsed().as_secs_f64() * 1e6;
+            crate::obs::counter_add(
+                &format!("exec.{}.count", self.sig.key),
+                1,
+            );
+            crate::obs::hist_record(
+                &format!("exec.{}.us", self.sig.key),
+                us,
+            );
+        }
         Ok(outs)
     }
 

@@ -171,6 +171,20 @@ pub fn gemm_fused_threads(
     if m == 0 || n == 0 {
         return;
     }
+    // One span per GEMM call (layer granularity, never per element);
+    // the `comp` arg marks the fused VeRA+ epilogue so traces show
+    // which GEMMs carry the compensation branch.
+    let _span = crate::obs::span("kernel.gemm", "kernel")
+        .arg("rows", crate::util::json::num(m as f64))
+        .arg("cols", crate::util::json::num(n as f64))
+        .arg(
+            "comp",
+            crate::util::json::num(if epi.comp.is_some() {
+                1.0
+            } else {
+                0.0
+            }),
+        );
     if k == 0 {
         // Degenerate contraction: epilogue over a zero accumulator.
         for i in 0..m {
@@ -204,6 +218,13 @@ pub fn gemm_fused_threads(
     let packed = &packed;
     parallel::for_each_mut(threads, &mut chunks, |_, item| {
         let (row0, rows) = item;
+        // Panel span on the worker's own lane: the trace shows the row
+        // chunks running in parallel under the kernel.gemm span.
+        let _span = crate::obs::span("kernel.gemm.panel", "kernel")
+            .arg(
+                "rows",
+                crate::util::json::num((rows.len() / n) as f64),
+            );
         gemm_rows(*row0, rows, n, k, a, packed, epi);
     });
 }

@@ -451,6 +451,10 @@ pub(crate) fn im2col(
     let (ho, pad_h) = same_pad(h, k, stride);
     let (wo, pad_w) = same_pad(w, k, stride);
     let kdim = k * k * cin;
+    let _span = crate::obs::span("kernel.im2col", "kernel")
+        .arg("batch", crate::util::json::num(n as f64))
+        .arg("rows", crate::util::json::num((ho * wo) as f64))
+        .arg("cols", crate::util::json::num(kdim as f64));
     let mut out = vec![0f32; n * ho * wo * kdim];
     for ni in 0..n {
         for oh in 0..ho {

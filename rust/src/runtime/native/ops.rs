@@ -188,6 +188,9 @@ pub fn attention_forward(
     assert_eq!(k.len(), q.len(), "k matches q");
     assert_eq!(v.len(), q.len(), "v matches q");
     assert!(heads > 0 && d_model % heads == 0, "heads divide d_model");
+    let _span = crate::obs::span("kernel.attention", "kernel")
+        .arg("batch", crate::util::json::num(n as f64))
+        .arg("rows", crate::util::json::num(t as f64));
     let dh = d_model / heads;
     let scale = 1.0 / (dh as f32).sqrt();
     let mut ctx = vec![0f32; n * t * d_model];

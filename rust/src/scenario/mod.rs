@@ -37,7 +37,8 @@ use crate::coordinator::serve::{percentile_sorted, Workload};
 use crate::fleet::{
     ChipEngine, Fleet, FleetCompletion, FleetSummary, PhaseSummary,
 };
-use crate::util::json::Json;
+use crate::obs;
+use crate::util::json::{num, s, Json};
 use anyhow::{bail, Context, Result};
 
 /// One lifecycle/traffic action on the timeline.
@@ -316,6 +317,9 @@ impl PhaseAcc {
         // owns its samples, so no clone-and-select per quantile).
         let mut lat = self.latencies;
         lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let requeued = self.requeued_at_end - self.requeued_at_start;
+        let (throughput, requeue_rate) =
+            PhaseSummary::rates(self.served, requeued, self.start, end);
         PhaseSummary {
             name: self.name,
             start: self.start,
@@ -325,7 +329,9 @@ impl PhaseAcc {
             p50_latency: percentile_sorted(&lat, 0.5),
             p99_latency: percentile_sorted(&lat, 0.99),
             availability,
-            requeued: self.requeued_at_end - self.requeued_at_start,
+            requeued,
+            throughput,
+            requeue_rate,
         }
     }
 }
@@ -366,6 +372,7 @@ pub fn run_scenario<E: ChipEngine>(
     workload: &mut Workload,
     test_len: usize,
 ) -> Result<ScenarioOutcome> {
+    let _span = obs::span("scenario.run", "scenario");
     let n_chips = fleet.n_chips();
     let mut traffic = cfg.traffic.clone();
     traffic.validate()?;
@@ -398,6 +405,31 @@ pub fn run_scenario<E: ChipEngine>(
             phases.push(acc.close(wall, n_chips));
             acc = PhaseAcc::new(&ev.label, wall,
                                 fleet.metrics.requeues);
+            // Timeline telemetry: the lifecycle action lands on the
+            // same trace as kernel spans, fleet ticks and set switches,
+            // so one trace shows the fault and the reaction.
+            obs::event(
+                match ev.action {
+                    Action::Fail { .. } => "scenario.fail",
+                    Action::Refresh { .. } => "scenario.refresh",
+                    Action::Retire { .. } => "scenario.retire",
+                    Action::Traffic { .. } => "scenario.traffic",
+                },
+                "scenario",
+                || {
+                    let mut args =
+                        vec![("t_s", num(ev.at)), ("phase", s(&ev.label))];
+                    match ev.action {
+                        Action::Fail { chip }
+                        | Action::Retire { chip }
+                        | Action::Refresh { chip, .. } => {
+                            args.push(("chip", num(chip as f64)));
+                        }
+                        Action::Traffic { .. } => {}
+                    }
+                    args
+                },
+            );
             if let Some(shape) = apply(fleet, &ev.action)
                 .with_context(|| {
                     format!("event '{}' at t={}", ev.label, ev.at)

@@ -112,6 +112,15 @@ impl Json {
         s
     }
 
+    /// Single-line emission (no indentation or separators beyond commas).
+    /// Used for JSON-lines event streams and Chrome trace files, where a
+    /// pretty-printed megabyte trace would triple in size.
+    pub fn to_string_compact(&self) -> String {
+        let mut s = String::new();
+        self.emit(&mut s, 0, false);
+        s
+    }
+
     fn emit(&self, out: &mut String, indent: usize, pretty: bool) {
         match self {
             Json::Null => out.push_str("null"),
@@ -437,6 +446,15 @@ mod tests {
     fn shape_helper() {
         let v = parse(r#"{"shape": [64, 3, 3, 8]}"#).unwrap();
         assert_eq!(v.req("shape").unwrap().shape().unwrap(), vec![64, 3, 3, 8]);
+    }
+
+    #[test]
+    fn compact_emission_roundtrips_without_newlines() {
+        let v = parse(r#"{"a": [1, 2, {"b": "x y"}], "c": null}"#).unwrap();
+        let compact = v.to_string_compact();
+        assert!(!compact.contains('\n'));
+        assert!(!compact.contains(": "));
+        assert_eq!(parse(&compact).unwrap(), v);
     }
 
     #[test]

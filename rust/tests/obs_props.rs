@@ -1,0 +1,218 @@
+//! Observability properties: the obs registry is bit-deterministic
+//! where the instrumented code is, invisible when disabled, and its
+//! Chrome-trace export round-trips.
+//!
+//! The registry is process-global, so every test here serialises on one
+//! lock and resets the registry before driving its workload; asserting
+//! in this dedicated integration binary (rather than lib unit tests)
+//! keeps the rest of the suite free to run with obs off.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use vera_plus::coordinator::serve::{BatchPolicy, Workload};
+use vera_plus::fleet::{
+    analytic_fleet, AccuracyProfile, BalancePolicy, FleetConfig,
+};
+use vera_plus::obs::{self, Phase, TraceEvent};
+use vera_plus::rram::YEAR;
+use vera_plus::scenario::{run_scenario, ScenarioConfig};
+use vera_plus::util::json::num;
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn fleet_cfg(n_chips: usize, seed: u64) -> FleetConfig {
+    FleetConfig {
+        n_chips,
+        t0: 30.0 * 86_400.0,
+        stagger: YEAR,
+        accel: 1e6,
+        policy: BalancePolicy::DriftAware,
+        batch: BatchPolicy {
+            max_batch: 32,
+            max_wait: 0.01,
+        },
+        exec_seconds_per_batch: 2e-3,
+        seed,
+    }
+}
+
+/// Drive the scripted chaos scenario on the analytic fleet — the same
+/// workload `vera-plus obs` traces — and return what obs captured.
+fn run_chaos_traced() -> (Vec<TraceEvent>, obs::MetricsSnapshot) {
+    let cfg = fleet_cfg(6, 0x0b5_cafe);
+    let profile =
+        AccuracyProfile::synthetic(11, 10.0 * YEAR, 0.92, 0.02, 0.5);
+    let mut fleet = analytic_fleet(&cfg, &profile);
+    let scenario = ScenarioConfig::preset("chaos", 6, 8.0).unwrap();
+    let mut workload = Workload::new(0.0, 0x57a6);
+    run_scenario(&mut fleet, &scenario, &mut workload, 512).unwrap();
+    (obs::take_events(), obs::snapshot())
+}
+
+/// Multiset of event names, split by flavour (spans vs instants).
+fn name_counts(
+    events: &[TraceEvent],
+) -> (BTreeMap<String, usize>, BTreeMap<String, usize>) {
+    let mut spans = BTreeMap::new();
+    let mut instants = BTreeMap::new();
+    for ev in events {
+        let m = match ev.ph {
+            Phase::Complete { .. } => &mut spans,
+            Phase::Instant => &mut instants,
+        };
+        *m.entry(ev.name.clone()).or_insert(0usize) += 1;
+    }
+    (spans, instants)
+}
+
+/// Disabled obs is a no-op: the instrumented hot paths record nothing —
+/// no events, no counters, no gauges, no histograms.
+#[test]
+fn disabled_obs_records_nothing() {
+    let _g = lock();
+    obs::set_trace(false);
+    obs::set_metrics(false);
+    obs::reset();
+    let (events, snap) = run_chaos_traced();
+    assert!(events.is_empty(), "disabled trace recorded {} events",
+            events.len());
+    assert!(snap.counters.is_empty(), "counters: {:?}", snap.counters);
+    assert!(snap.gauges.is_empty(), "gauges: {:?}", snap.gauges);
+    assert!(snap.hists.is_empty(), "hists: {:?}", snap.hists);
+}
+
+/// Counters, gauges and the span/instant name multisets are
+/// bit-identical at `VERA_THREADS=1` and `VERA_THREADS=4` — tracing a
+/// parallel run observes the same aggregate facts as a serial one.
+/// (P² histogram *estimates* are sequence-dependent and excluded by
+/// the determinism contract; their counts still match.)
+#[test]
+fn aggregation_is_thread_count_invariant() {
+    let _g = lock();
+    let capture = |threads: &str| {
+        std::env::set_var("VERA_THREADS", threads);
+        obs::set_trace(true);
+        obs::set_metrics(true);
+        obs::reset();
+        let (events, snap) = run_chaos_traced();
+        obs::set_trace(false);
+        obs::set_metrics(false);
+        let (spans, instants) = name_counts(&events);
+        let hist_counts: BTreeMap<String, u64> = snap
+            .hists
+            .iter()
+            .map(|(k, h)| (k.clone(), h.count))
+            .collect();
+        (spans, instants, snap.counters, snap.gauges, hist_counts)
+    };
+    let serial = capture("1");
+    let parallel = capture("4");
+    std::env::remove_var("VERA_THREADS");
+    assert_eq!(serial.0, parallel.0, "span name multiset diverged");
+    assert_eq!(serial.1, parallel.1, "instant name multiset diverged");
+    assert_eq!(serial.2, parallel.2, "counters diverged");
+    assert_eq!(serial.3, parallel.3, "gauges diverged");
+    assert_eq!(serial.4, parallel.4, "histogram counts diverged");
+    assert!(
+        serial.0.contains_key("fleet.tick"),
+        "workload recorded no fleet.tick spans: {:?}",
+        serial.0
+    );
+    assert!(serial.2.contains_key("fleet.served"), "{:?}", serial.2);
+}
+
+/// Chrome trace-event JSON round-trips: export → emit → parse →
+/// reconstruct yields the same timeline (pinned via the jsonl
+/// rendering, which covers name/cat/flavour/ts/tid/dur/args).
+#[test]
+fn chrome_trace_round_trips() {
+    let _g = lock();
+    obs::set_trace(true);
+    obs::set_metrics(false);
+    obs::reset();
+    {
+        let _outer = obs::span("rt.outer", "fleet")
+            .arg("rows", num(3.0))
+            .arg("queue", num(17.0));
+        let _inner = obs::span("rt.inner", "kernel");
+        obs::event("rt.fault", "scenario", || {
+            vec![("chip", num(2.0)), ("t_s", num(1.25))]
+        });
+    }
+    let events = obs::take_events();
+    obs::set_trace(false);
+    assert_eq!(events.len(), 3);
+    let doc = obs::chrome_trace_json(&events);
+    let text = doc.to_string_compact();
+    let parsed = vera_plus::util::json::parse(&text).unwrap();
+    let back = obs::events_from_chrome(&parsed).unwrap();
+    assert_eq!(obs::jsonl(&events), obs::jsonl(&back));
+}
+
+/// The chaos preset produces one coherent timeline: fault instants,
+/// fleet tick spans, drift set-switch instants (with age + predicted
+/// accuracy telemetry) and kernel spans interleave in deterministic
+/// `(ts, seq)` export order.
+#[test]
+fn chaos_timeline_interleaves_faults_switches_and_kernels() {
+    let _g = lock();
+    obs::set_trace(true);
+    obs::set_metrics(true);
+    obs::reset();
+    // A native kernel call on the same timeline as the fleet run: the
+    // trace unifies device-level and fleet-level views.
+    let a = vec![1.0f32; 8 * 4];
+    let b = vec![0.5f32; 4 * 6];
+    let mut c = vec![0.0f32; 8 * 6];
+    vera_plus::runtime::native::gemm::gemm_fused_threads(
+        2,
+        8,
+        6,
+        4,
+        &a,
+        &b,
+        &vera_plus::runtime::native::gemm::Epilogue {
+            bias: None,
+            relu: false,
+            comp: None,
+        },
+        &mut c,
+    );
+    let (events, _snap) = run_chaos_traced();
+    obs::set_trace(false);
+    obs::set_metrics(false);
+
+    let (spans, instants) = name_counts(&events);
+    assert!(spans.contains_key("kernel.gemm"), "{:?}", spans);
+    assert!(spans.contains_key("fleet.tick"), "{:?}", spans);
+    assert!(spans.contains_key("scenario.run"), "{:?}", spans);
+    assert!(instants.contains_key("scenario.fail"), "{:?}", instants);
+    assert!(
+        instants.contains_key("serve.set_switch"),
+        "no drift set switches in an 8s accel=1e6 window: {:?}",
+        instants
+    );
+
+    // Export order is the deterministic (ts, seq) sort.
+    for w in events.windows(2) {
+        assert!(
+            (w[0].ts_us, w[0].seq) <= (w[1].ts_us, w[1].seq),
+            "events out of order"
+        );
+    }
+    // Set-switch telemetry carries the drift age and the predicted
+    // accuracy of the set being switched to.
+    let sw = events
+        .iter()
+        .find(|e| e.name == "serve.set_switch")
+        .unwrap();
+    let keys: Vec<&str> = sw.args.iter().map(|(k, _)| *k).collect();
+    assert!(keys.contains(&"age_s"), "{keys:?}");
+    assert!(keys.contains(&"pred_acc"), "{keys:?}");
+    assert!(keys.contains(&"set"), "{keys:?}");
+}
