@@ -47,6 +47,7 @@ fn main() -> anyhow::Result<()> {
         // latency cost.
         exec_seconds_per_batch: 0.05,
         seed: 0xc4a05,
+        ..FleetConfig::default()
     };
     let scenario = ScenarioConfig::chaos(CHIPS, SECONDS);
     println!(

@@ -55,6 +55,7 @@ fn main() -> anyhow::Result<()> {
         batch: BatchPolicy { max_batch: 32, max_wait: 0.01 },
         exec_seconds_per_batch: 0.002,
         seed: 0xf1ee7,
+        ..FleetConfig::default()
     };
     println!(
         "fleet: {CHIPS} chips, device ages {} .. {} (stagger {}), \

@@ -38,6 +38,7 @@ fn config(n_chips: usize) -> FleetConfig {
         // Per-chip capacity: 16 / 0.005 = 3 200 req/s.
         exec_seconds_per_batch: 0.005,
         seed: 0xbe7c4,
+        ..FleetConfig::default()
     }
 }
 

@@ -40,6 +40,7 @@ fn fleet_cfg() -> FleetConfig {
         },
         exec_seconds_per_batch: 0.004,
         seed: 0xbe5c,
+        ..FleetConfig::default()
     }
 }
 
@@ -87,6 +88,20 @@ fn main() -> anyhow::Result<()> {
         let mut wl = Workload::new(0.0, 11);
         let out = run_scenario(&mut fleet, &chaos, &mut wl, 512)
             .expect("chaos scenario cannot fail");
+        std::hint::black_box(out.summary.served);
+    });
+
+    // Mis-modeled drift with the closed-loop estimator flipping on and
+    // off: what the estimator arbitration + per-batch stale-era
+    // prediction cost on top of the chaos-style accounting.
+    let misdrift = ScenarioConfig::misdrift(CHIPS, SECONDS);
+    bench.bench_items("scenario/misdrift-timeline", reqs_per_run, || {
+        let mut cfg = fleet_cfg();
+        cfg.drift_skew = 1e3;
+        let mut fleet = analytic_fleet(&cfg, &profile);
+        let mut wl = Workload::new(0.0, 11);
+        let out = run_scenario(&mut fleet, &misdrift, &mut wl, 512)
+            .expect("misdrift scenario cannot fail");
         std::hint::black_box(out.summary.served);
     });
 

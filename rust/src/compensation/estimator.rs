@@ -1,0 +1,527 @@
+//! Closed-loop drift-age estimation (ROADMAP direction 3).
+//!
+//! Algorithm 1 and the fleet router trust the wall clock: predicted
+//! accuracy comes from programmed-age plus the offline drift model, so a
+//! chip whose real devices drift faster or slower than modeled silently
+//! switches compensation sets at the wrong times. Following AIDX's
+//! adaptive-inference idea (Elshamy et al., PAPERS.md) — and staying
+//! inside the paper's no-retraining, no-data-replay constraint — this
+//! module closes the loop with calibration hardware the chip already
+//! has room for:
+//!
+//! - [`ProbeCfg`]/[`ProbePlan`]: at programming time every tile sets
+//!   aside one probe row ([`ArrayBank::with_reserve`]) programmed to
+//!   known conductance levels after the weights
+//!   ([`ArrayBank::program_probes`]). Weight readout iterates only the
+//!   tensors' own segments, so probes are excluded from inference by
+//!   construction; probe reads go through the same
+//!   [`ArrayBank::read_drifted_slice`] path, so they inherit injected
+//!   faults and stay RNG-transparent.
+//! - [`AgeEstimator`]: inverts the drift model's mean decay curve
+//!   ([`DriftModel::mean`], monotone in `ln t` for every model in this
+//!   repo) per probe level by bisection, aggregates the per-level ages
+//!   by median in log-time, derives confidence bounds from the probe
+//!   standard error, and *falls back to the clock* — never panics or
+//!   mis-switches — when levels saturate (e.g. probe rows stuck-at) or
+//!   disagree beyond a spread threshold.
+//! - [`AgeSource`]: the clock-vs-estimate arbitration switch consumed
+//!   by `coordinator::serve::Server` and `fleet::AnalyticEngine`.
+//!
+//! Determinism: inversion is pure arithmetic; probe reads draw from a
+//! dedicated RNG stream (serve: `0x9b0be`), so enabling the
+//! estimator never perturbs the serving or weight-readout streams, and
+//! the thread-invariance contract of `read_drifted_into_threads` is
+//! untouched (probes are read serially, outside the per-tensor fan-out).
+
+use crate::rram::array::ArrayBank;
+use crate::rram::device::ConductanceGrid;
+use crate::rram::drift::{DriftModel, YEAR};
+use crate::util::rng::Pcg64;
+
+/// Where serving-time set selection gets the device age from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AgeSource {
+    /// Trust the lifetime clock (programmed age + modeled aging).
+    #[default]
+    Clock,
+    /// Trust the probe-row estimator, falling back to the clock when
+    /// the estimate is unusable.
+    Estimated,
+}
+
+impl AgeSource {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AgeSource::Clock => "clock",
+            AgeSource::Estimated => "estimated",
+        }
+    }
+}
+
+/// Probe-row layout: which conductance levels to reserve, and how many
+/// cells per level per tile.
+#[derive(Debug, Clone)]
+pub struct ProbeCfg {
+    /// Known targets programmed into the probe cells (µS). Default: the
+    /// full 8-level grid of the paper's device.
+    pub levels: Vec<f64>,
+    /// Probe cells per level per tile.
+    pub cells_per_level: usize,
+}
+
+impl Default for ProbeCfg {
+    /// 8 levels × 64 cells = 512 cells: exactly one 512-cell row of the
+    /// paper's 256×512 tile reserved per tile.
+    fn default() -> Self {
+        ProbeCfg {
+            levels: ConductanceGrid::default().levels,
+            cells_per_level: 64,
+        }
+    }
+}
+
+impl ProbeCfg {
+    /// Cells to reserve per tile ([`ArrayBank::with_reserve`]).
+    pub fn reserve_cells(&self) -> usize {
+        self.levels.len() * self.cells_per_level
+    }
+}
+
+/// The programmed probe rows of one bank: per tile one contiguous
+/// segment holding `cells_per_level` cells of each level, in level
+/// order.
+#[derive(Debug, Clone)]
+pub struct ProbePlan {
+    pub levels: Vec<f64>,
+    pub cells_per_level: usize,
+    /// One (tile, cell range) segment per tile.
+    pub tiles: Vec<(usize, std::ops::Range<usize>)>,
+}
+
+impl ProbePlan {
+    /// Program the probe rows into a bank built with a matching reserve
+    /// ([`ProbeCfg::reserve_cells`]). Must run AFTER all weight
+    /// programming (probes append behind the weight cells), so the
+    /// weight cells and their RNG draws are byte-identical with or
+    /// without probes.
+    pub fn program(
+        bank: &mut ArrayBank,
+        grid: &ConductanceGrid,
+        cfg: &ProbeCfg,
+        rng: &mut Pcg64,
+    ) -> ProbePlan {
+        let mut targets =
+            Vec::with_capacity(cfg.reserve_cells());
+        for &level in &cfg.levels {
+            targets.extend(
+                std::iter::repeat(level).take(cfg.cells_per_level),
+            );
+        }
+        let tiles = bank.program_probes(&targets, grid, rng);
+        ProbePlan {
+            levels: cfg.levels.clone(),
+            cells_per_level: cfg.cells_per_level,
+            tiles,
+        }
+    }
+
+    /// Total probe cells across the bank.
+    pub fn n_cells(&self) -> usize {
+        self.tiles.len() * self.levels.len() * self.cells_per_level
+    }
+
+    /// The (tile, range) segments holding level `li` across all tiles.
+    pub fn level_segs(
+        &self,
+        li: usize,
+    ) -> Vec<(usize, std::ops::Range<usize>)> {
+        let c = self.cells_per_level;
+        self.tiles
+            .iter()
+            .map(|(ti, r)| {
+                (*ti, r.start + li * c..r.start + (li + 1) * c)
+            })
+            .collect()
+    }
+
+    /// Every probe cell as a (tile, cell) address — the fault-injection
+    /// and accounting surface.
+    pub fn cells(&self) -> Vec<(usize, usize)> {
+        self.tiles
+            .iter()
+            .flat_map(|(ti, r)| r.clone().map(move |c| (*ti, c)))
+            .collect()
+    }
+
+    /// Probe-read one level at physical age `t` through the standard
+    /// faulted readout path. Returns the raw per-cell conductances.
+    pub fn read_level(
+        &self,
+        bank: &ArrayBank,
+        li: usize,
+        t: f64,
+        model: &dyn DriftModel,
+        rng: &mut Pcg64,
+    ) -> Vec<f32> {
+        let segs = self.level_segs(li);
+        let n: usize = segs.iter().map(|(_, r)| r.len()).sum();
+        let mut out = vec![0f32; n];
+        bank.read_drifted_slice(&segs, t, model, rng, &mut out);
+        out
+    }
+}
+
+/// One level's slice of an [`AgeEstimate`].
+#[derive(Debug, Clone)]
+pub struct LevelEstimate {
+    pub g_level: f64,
+    pub n: usize,
+    /// Mean / std of the probe conductances (µS).
+    pub mean: f64,
+    pub std: f64,
+    /// Inverted effective age and its ±1-stderr bounds (seconds).
+    pub age: f64,
+    pub age_lo: f64,
+    pub age_hi: f64,
+    /// Inversion pinned at the search boundary — the observed mean is
+    /// outside the decay curve's reachable range (stuck probes, or
+    /// drift far beyond the model horizon).
+    pub saturated: bool,
+}
+
+/// Robust aggregate of the per-level inversions.
+#[derive(Debug, Clone)]
+pub struct AgeEstimate {
+    /// Median effective age across usable levels (seconds). When
+    /// `fallback` is set the caller must use its clock instead.
+    pub age: f64,
+    /// Median ±1-stderr confidence bounds (seconds).
+    pub lo: f64,
+    pub hi: f64,
+    /// Worst per-level disagreement with the median (decades).
+    pub spread_decades: f64,
+    /// Usable (non-saturated, populated) levels.
+    pub used_levels: usize,
+    /// Probes are not trustworthy: too few usable levels or too much
+    /// disagreement. Graceful-degradation contract: the estimate is
+    /// advisory only and the clock age must be used.
+    pub fallback: bool,
+    pub levels: Vec<LevelEstimate>,
+}
+
+/// Inverse-decay age estimator over a [`DriftModel`]'s mean curve.
+#[derive(Debug, Clone)]
+pub struct AgeEstimator {
+    /// Inversion search window (seconds).
+    pub t_min: f64,
+    pub t_max: f64,
+    /// Fallback when fewer usable levels than this survive.
+    pub min_levels: usize,
+    /// Fallback when any usable level disagrees with the median by
+    /// more than this many decades.
+    pub max_spread_decades: f64,
+}
+
+impl Default for AgeEstimator {
+    fn default() -> Self {
+        AgeEstimator {
+            t_min: 1.0,
+            t_max: 100.0 * YEAR,
+            min_levels: 2,
+            max_spread_decades: 1.5,
+        }
+    }
+}
+
+fn median(sorted: &[f64]) -> f64 {
+    let n = sorted.len();
+    if n % 2 == 1 {
+        sorted[n / 2]
+    } else {
+        0.5 * (sorted[n / 2 - 1] + sorted[n / 2])
+    }
+}
+
+impl AgeEstimator {
+    /// Invert `model.mean(g_level, ·)` at `observed` by bisection on
+    /// `ln t`. Every drift model in this repo has a mean that is
+    /// monotone in `ln t` at fixed target (log-time kinetics); the
+    /// direction is detected from the window endpoints so decaying
+    /// levels invert just as well as relaxing ones. Returns
+    /// `(age, saturated)` — saturated means `observed` lies outside
+    /// the reachable range and the age is pinned at a boundary.
+    pub fn invert(
+        &self,
+        model: &dyn DriftModel,
+        g_level: f64,
+        observed: f64,
+    ) -> (f64, bool) {
+        let y_lo = model.mean(g_level, self.t_min);
+        let y_hi = model.mean(g_level, self.t_max);
+        if (y_hi - y_lo).abs() < 1e-12 {
+            // Drift-free mean curve (e.g. NoDrift): any age explains
+            // the reading equally; report saturation so aggregation
+            // falls back to the clock.
+            return (self.t_min, true);
+        }
+        let up = y_hi > y_lo;
+        let (y_min, y_max) = if up { (y_lo, y_hi) } else { (y_hi, y_lo) };
+        if observed <= y_min {
+            return (if up { self.t_min } else { self.t_max }, true);
+        }
+        if observed >= y_max {
+            return (if up { self.t_max } else { self.t_min }, true);
+        }
+        let mut lo = self.t_min.ln();
+        let mut hi = self.t_max.ln();
+        for _ in 0..64 {
+            let mid = 0.5 * (lo + hi);
+            let y = model.mean(g_level, mid.exp());
+            if (y > observed) == up {
+                hi = mid;
+            } else {
+                lo = mid;
+            }
+        }
+        ((0.5 * (lo + hi)).exp(), false)
+    }
+
+    /// Estimate from raw per-level probe readings
+    /// `(g_level, conductances)`. Pure arithmetic — no RNG, no I/O —
+    /// so the estimate is bit-identical for identical readings.
+    pub fn estimate_readings(
+        &self,
+        model: &dyn DriftModel,
+        readings: &[(f64, &[f32])],
+    ) -> AgeEstimate {
+        let mut levels = Vec::with_capacity(readings.len());
+        for &(g_level, vals) in readings {
+            if vals.is_empty() {
+                continue;
+            }
+            let n = vals.len();
+            let mean = vals.iter().map(|&v| v as f64).sum::<f64>()
+                / n as f64;
+            let var = vals
+                .iter()
+                .map(|&v| {
+                    let d = v as f64 - mean;
+                    d * d
+                })
+                .sum::<f64>()
+                / n as f64;
+            let std = var.sqrt();
+            let stderr = std / (n as f64).sqrt();
+            let (age, saturated) = self.invert(model, g_level, mean);
+            let (a1, _) = self.invert(model, g_level, mean - stderr);
+            let (a2, _) = self.invert(model, g_level, mean + stderr);
+            levels.push(LevelEstimate {
+                g_level,
+                n,
+                mean,
+                std,
+                age,
+                age_lo: a1.min(a2),
+                age_hi: a1.max(a2),
+                saturated,
+            });
+        }
+        let usable: Vec<&LevelEstimate> =
+            levels.iter().filter(|l| !l.saturated).collect();
+        // Aggregate in log-time over whatever is usable; when nothing
+        // is, keep the saturated ages so telemetry still shows where
+        // the probes pinned.
+        let pool: Vec<&LevelEstimate> = if usable.is_empty() {
+            levels.iter().collect()
+        } else {
+            usable.clone()
+        };
+        if pool.is_empty() {
+            return AgeEstimate {
+                age: self.t_min,
+                lo: self.t_min,
+                hi: self.t_max,
+                spread_decades: f64::INFINITY,
+                used_levels: 0,
+                fallback: true,
+                levels,
+            };
+        }
+        let mut lns: Vec<f64> =
+            pool.iter().map(|l| l.age.ln()).collect();
+        lns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = median(&lns);
+        let spread = lns
+            .iter()
+            .map(|l| (l - med).abs())
+            .fold(0.0, f64::max)
+            / std::f64::consts::LN_10;
+        let mut lo: Vec<f64> =
+            pool.iter().map(|l| l.age_lo.ln()).collect();
+        let mut hi: Vec<f64> =
+            pool.iter().map(|l| l.age_hi.ln()).collect();
+        lo.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        hi.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let fallback = usable.len() < self.min_levels
+            || spread > self.max_spread_decades;
+        AgeEstimate {
+            age: med.exp(),
+            lo: median(&lo).exp(),
+            hi: median(&hi).exp(),
+            spread_decades: spread,
+            used_levels: usable.len(),
+            fallback,
+            levels,
+        }
+    }
+
+    /// Probe-read the plan's rows at physical age `t` and estimate.
+    /// `rng` must be a dedicated probe stream — the draws consumed here
+    /// are proportional to the probe count, and keeping them off the
+    /// serving stream is what makes the estimator RNG-transparent to
+    /// everything else.
+    pub fn estimate(
+        &self,
+        plan: &ProbePlan,
+        bank: &ArrayBank,
+        t: f64,
+        model: &dyn DriftModel,
+        rng: &mut Pcg64,
+    ) -> AgeEstimate {
+        let reads: Vec<(f64, Vec<f32>)> = plan
+            .levels
+            .iter()
+            .enumerate()
+            .map(|(li, &g)| {
+                (g, plan.read_level(bank, li, t, model, rng))
+            })
+            .collect();
+        let borrowed: Vec<(f64, &[f32])> = reads
+            .iter()
+            .map(|(g, v)| (*g, v.as_slice()))
+            .collect();
+        self.estimate_readings(model, &borrowed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rram::drift::{IbmDrift, NoDrift, MONTH, WEEK};
+
+    fn exact_ibm() -> IbmDrift {
+        // Noise-free decay: σ ≡ 0, no device variation — the mean
+        // curve IS the readout.
+        let mut m = IbmDrift::default();
+        m.sigma_slope = 0.0;
+        m.sigma_icept = 0.0;
+        m.dev_var = 0.0;
+        m
+    }
+
+    fn probed_bank(
+        cfg: &ProbeCfg,
+    ) -> (ArrayBank, ProbePlan, ConductanceGrid) {
+        let mut grid = ConductanceGrid::default();
+        grid.prog_sigma = 0.0;
+        let mut bank = ArrayBank::with_reserve(cfg.reserve_cells());
+        let mut rng = Pcg64::new(3);
+        bank.program(&vec![20.0; 4096], &grid, &mut rng);
+        let plan = ProbePlan::program(&mut bank, &grid, cfg, &mut rng);
+        (bank, plan, grid)
+    }
+
+    #[test]
+    fn inversion_roundtrips_the_mean_curve() {
+        let est = AgeEstimator::default();
+        let model = exact_ibm();
+        for &t in &[2.0, 3600.0, WEEK, MONTH, YEAR] {
+            let y = model.mean(20.0, t);
+            let (age, sat) = est.invert(&model, 20.0, y);
+            assert!(!sat, "t={t} saturated");
+            assert!(
+                (age.ln() - t.ln()).abs() < 1e-6,
+                "t={t} inverted to {age}"
+            );
+        }
+    }
+
+    #[test]
+    fn inversion_saturates_outside_the_window() {
+        let est = AgeEstimator::default();
+        let model = exact_ibm();
+        // Below the t_min mean (e.g. a stuck-at-HRS probe reading 0).
+        let (age, sat) = est.invert(&model, 20.0, 0.0);
+        assert!(sat);
+        assert_eq!(age, est.t_min);
+        // Above the t_max mean (stuck-at-LRS).
+        let (age, sat) = est.invert(&model, 20.0, 1e6);
+        assert!(sat);
+        assert_eq!(age, est.t_max);
+        // A drift-free mean curve cannot date anything.
+        let (_, sat) = est.invert(&NoDrift, 20.0, 20.0);
+        assert!(sat);
+    }
+
+    #[test]
+    fn noise_free_probes_recover_the_true_age() {
+        let cfg = ProbeCfg::default();
+        let (bank, plan, _) = probed_bank(&cfg);
+        let est = AgeEstimator::default();
+        let model = exact_ibm();
+        let mut last = 0.0;
+        for &t in &[10.0, 3600.0, WEEK, YEAR] {
+            let e = est.estimate(
+                &plan, &bank, t, &model, &mut Pcg64::new(7),
+            );
+            assert!(!e.fallback, "t={t} fell back: {e:?}");
+            assert!(
+                (e.age.ln() - t.ln()).abs() < 0.01,
+                "t={t} estimated {}",
+                e.age
+            );
+            assert!(e.lo <= e.age && e.age <= e.hi);
+            assert!(e.age > last, "estimate not monotone in true age");
+            last = e.age;
+        }
+    }
+
+    #[test]
+    fn estimate_is_deterministic_at_fixed_seed() {
+        let cfg = ProbeCfg::default();
+        let (bank, plan, _) = probed_bank(&cfg);
+        let est = AgeEstimator::default();
+        let model = IbmDrift::default();
+        let a =
+            est.estimate(&plan, &bank, WEEK, &model, &mut Pcg64::new(9));
+        let b =
+            est.estimate(&plan, &bank, WEEK, &model, &mut Pcg64::new(9));
+        assert_eq!(a.age, b.age);
+        assert_eq!(a.lo, b.lo);
+        assert_eq!(a.hi, b.hi);
+        assert_eq!(a.spread_decades, b.spread_decades);
+    }
+
+    #[test]
+    fn stuck_probe_rows_trigger_clock_fallback() {
+        let cfg = ProbeCfg::default();
+        let (mut bank, plan, _) = probed_bank(&cfg);
+        for (ti, cell) in plan.cells() {
+            bank.inject_fault(
+                ti,
+                cell,
+                crate::rram::array::CellFault::StuckAt(0.0),
+            );
+        }
+        let est = AgeEstimator::default();
+        let e = est.estimate(
+            &plan,
+            &bank,
+            MONTH,
+            &IbmDrift::default(),
+            &mut Pcg64::new(5),
+        );
+        assert!(e.fallback, "100% stuck probes must not be trusted");
+        assert_eq!(e.used_levels, 0);
+    }
+}

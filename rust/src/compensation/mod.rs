@@ -3,6 +3,10 @@
 //! BN-calibration baseline state.
 
 pub mod bn_calib;
+pub mod estimator;
 pub mod store;
 
-pub use store::{CompSet, SetStore};
+pub use estimator::{
+    AgeEstimate, AgeEstimator, AgeSource, ProbeCfg, ProbePlan,
+};
+pub use store::{CompSet, SetStore, AGE_HORIZON_FACTOR};

@@ -11,6 +11,15 @@ use crate::util::tensor::{read_vpts, write_vpts, TensorMap};
 use anyhow::{bail, Context, Result};
 use std::path::Path;
 
+/// How far past the last trained level an age may extrapolate before it
+/// is clamped: one decade. The offline ladder covers `[t_0, t_last]`;
+/// estimated ages (probe-row inversion) can legitimately exceed the
+/// horizon under accelerated drift, but the trained accuracies say
+/// nothing that far out, so selection and prediction clamp to
+/// `t_last · AGE_HORIZON_FACTOR` and bump the `serve.age_clamped`
+/// counter instead of silently extrapolating.
+pub const AGE_HORIZON_FACTOR: f64 = 10.0;
+
 /// One trained compensation set.
 #[derive(Debug, Clone)]
 pub struct CompSet {
@@ -73,6 +82,28 @@ impl SetStore {
         }
         let pos = self.sets.partition_point(|set| set.t_start <= t);
         Some(pos.saturating_sub(1))
+    }
+
+    /// Last trained level times [`AGE_HORIZON_FACTOR`]: ages beyond this
+    /// are outside the offline schedule's knowledge.
+    pub fn horizon(&self) -> Option<f64> {
+        self.sets
+            .last()
+            .map(|s| s.t_start * AGE_HORIZON_FACTOR)
+    }
+
+    /// Clamp an age into the trained range `[t_0, horizon]`. Returns
+    /// `(clamped_age, was_clamped)`; the caller bumps
+    /// `serve.age_clamped` when the flag is set (selection itself stays
+    /// pure so the scheduler/tests can call it without obs noise).
+    pub fn clamp_age(&self, t: f64) -> (f64, bool) {
+        let (Some(first), Some(horizon)) =
+            (self.sets.first(), self.horizon())
+        else {
+            return (t, false);
+        };
+        let clamped = t.clamp(first.t_start, horizon);
+        (clamped, clamped != t)
     }
 
     pub fn len(&self) -> usize {
@@ -226,6 +257,42 @@ mod tests {
         }
         let ts: Vec<f64> = st.sets.iter().map(|s| s.t_start).collect();
         assert_eq!(ts, vec![1.0, 50.0, 100.0, 10_000.0]);
+    }
+
+    #[test]
+    fn clamp_age_pins_the_horizon_boundary() {
+        let mut st = SetStore::new("m", "veraplus", 1, 7);
+        for t in [1.0, 100.0, 10_000.0] {
+            st.insert(set(t));
+        }
+        // Horizon = last level × factor.
+        assert_eq!(st.horizon(), Some(10_000.0 * AGE_HORIZON_FACTOR));
+        // Exactly at the horizon: NOT clamped (boundary is inclusive).
+        let (t, clamped) = st.clamp_age(100_000.0);
+        assert_eq!(t, 100_000.0);
+        assert!(!clamped);
+        // One epsilon past: clamped back to the horizon.
+        let (t, clamped) = st.clamp_age(100_000.0 * (1.0 + 1e-12));
+        assert_eq!(t, 100_000.0);
+        assert!(clamped);
+        // Far beyond (an estimated age under runaway drift).
+        let (t, clamped) = st.clamp_age(1e30);
+        assert_eq!(t, 100_000.0);
+        assert!(clamped);
+        // Before the first trained level: clamped up, same selection
+        // as the Eq. 9 pre-first fallback.
+        let (t, clamped) = st.clamp_age(0.25);
+        assert_eq!(t, 1.0);
+        assert!(clamped);
+        assert_eq!(st.select_index(t), Some(0));
+        // In-range ages pass through untouched.
+        let (t, clamped) = st.clamp_age(555.0);
+        assert_eq!(t, 555.0);
+        assert!(!clamped);
+        // Empty store: nothing to clamp against.
+        let empty = SetStore::new("m", "veraplus", 1, 7);
+        assert_eq!(empty.clamp_age(1e30), (1e30, false));
+        assert_eq!(empty.horizon(), None);
     }
 
     #[test]

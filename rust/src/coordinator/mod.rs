@@ -41,6 +41,10 @@ pub struct Deployment {
     pub frozen: TensorMap,
     pub drift: Box<dyn DriftModel>,
     pub projection_seed: u64,
+    /// Probe rows reserved per tile at programming time (closed-loop
+    /// drift estimation, [`crate::compensation::estimator`]); `None`
+    /// for deployments programmed without probe reservation.
+    pub probes: Option<crate::compensation::ProbePlan>,
 }
 
 impl Deployment {
@@ -89,6 +93,7 @@ impl Deployment {
             frozen,
             drift,
             projection_seed,
+            probes: None,
         }
     }
 
@@ -143,17 +148,50 @@ pub fn deploy(
     grid: crate::rram::ConductanceGrid,
     seed: u64,
 ) -> Result<Deployment> {
+    deploy_with_probes(
+        rt, model, train_params, method, rank, drift, grid, seed, None,
+    )
+}
+
+/// [`deploy`] with probe-row reservation: every tile sets aside
+/// `probe.reserve_cells()` cells, programmed to the probe levels after
+/// the weights (so the weight cells and their RNG draws are identical
+/// with or without probes). The resulting [`Deployment::probes`] plan
+/// feeds the closed-loop age estimator at serve time.
+#[allow(clippy::too_many_arguments)]
+pub fn deploy_with_probes(
+    rt: Arc<Runtime>,
+    model: &str,
+    train_params: &TensorMap,
+    method: &str,
+    rank: usize,
+    drift: Box<dyn DriftModel>,
+    grid: crate::rram::ConductanceGrid,
+    seed: u64,
+    probe: Option<&crate::compensation::ProbeCfg>,
+) -> Result<Deployment> {
     let manifest = rt.manifest(model)?;
     let deploy_weights = crate::rram::fold_bn(&manifest, train_params)?;
     let mut rng = Pcg64::with_stream(seed, 0xdeb1);
-    let net = ProgrammedNetwork::program(
+    let mut net = ProgrammedNetwork::program_with_reserve(
         &manifest,
         &deploy_weights,
         grid,
         &mut rng,
+        probe.map_or(0, |p| p.reserve_cells()),
     )?;
+    let plan = probe.map(|p| {
+        crate::compensation::ProbePlan::program(
+            &mut net.bank,
+            &net.grid,
+            p,
+            &mut rng,
+        )
+    });
     let dataset = crate::data::for_model(model, crate::data::TASK_SEED)?;
-    Ok(Deployment::new(
+    let mut dep = Deployment::new(
         rt, manifest, net, dataset, method, rank, drift, seed,
-    ))
+    );
+    dep.probes = plan;
+    Ok(dep)
 }

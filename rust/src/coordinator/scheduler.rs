@@ -13,6 +13,14 @@
 //! (`rust/tests/scheduler_props.rs`) drives [`schedule_with`] through a
 //! closed-form analytic oracle — Algorithm 1's invariants are testable
 //! without artifacts or training runs.
+//!
+//! Serving-time set selection ([`SetStore::select`], Eq. 9) consumes
+//! whatever age the server trusts: the lifetime clock by default, or
+//! the probe-row estimate when the closed-loop estimator is on
+//! (`compensation::estimator`, `serve --estimator`). The ladder this
+//! module schedules is age-indexed, not clock-indexed, so estimated
+//! ages feed the exact same lookup — no scheduler change is needed for
+//! clock-mistrust recovery.
 
 use crate::compensation::{CompSet, SetStore};
 use crate::coordinator::eval::{self, EvalMode, Stats};

@@ -8,7 +8,9 @@
 //! the SRAM slot if it changed, and the batcher groups requests so one
 //! executable invocation serves many requests.
 
-use crate::compensation::SetStore;
+use crate::compensation::{
+    AgeEstimate, AgeEstimator, AgeSource, SetStore,
+};
 use crate::coordinator::eval::accuracy_of;
 use crate::coordinator::Deployment;
 use crate::obs;
@@ -289,6 +291,17 @@ pub struct Server {
     graph_batches: Vec<usize>,
     rng: Pcg64,
     wall: f64,
+    /// Which age drives compensation-set selection: the lifetime
+    /// clock, or the probe-row estimator (closed-loop drift
+    /// estimation; requires [`Deployment::probes`]).
+    age_source: AgeSource,
+    estimator: AgeEstimator,
+    /// Dedicated probe-read stream: probing never perturbs the
+    /// serving/weight-readout stream, so enabling the estimator
+    /// leaves every weight readout bit-identical.
+    probe_rng: Pcg64,
+    /// Most recent estimate (kept for telemetry and routing weights).
+    last_estimate: Option<AgeEstimate>,
 }
 
 impl Server {
@@ -303,6 +316,7 @@ impl Server {
         seed: u64,
     ) -> Server {
         let mut rng = Pcg64::with_stream(seed, 0x5e12e);
+        let probe_rng = Pcg64::with_stream(seed, 0x9b0be);
         let weights = dep.drifted_weights(clock.device_age(), &mut rng);
         // Derive the lowered-graph key prefix from the canonical key
         // builder so the two formats can never drift apart.
@@ -324,7 +338,24 @@ impl Server {
             graph_batches,
             rng,
             wall: 0.0,
+            age_source: AgeSource::Clock,
+            estimator: AgeEstimator::default(),
+            probe_rng,
+            last_estimate: None,
         }
+    }
+
+    /// Flip clock-vs-estimator arbitration. With no probe plan on the
+    /// deployment the estimated mode degrades to the clock (counted
+    /// under `serve.est_fallback`), never an error.
+    pub fn set_age_source(&mut self, src: AgeSource) {
+        self.age_source = src;
+    }
+
+    /// The most recent probe-row age estimate (None before the first
+    /// estimated-mode routing decision or after a refresh).
+    pub fn last_estimate(&self) -> Option<&AgeEstimate> {
+        self.last_estimate.as_ref()
     }
 
     /// Requests waiting to be batched.
@@ -341,8 +372,12 @@ impl Server {
     /// device age (recorded by Alg. 1 when the set was trained). The
     /// fleet's drift-aware balancer weights chips by this.
     pub fn predicted_accuracy(&self) -> f64 {
+        let age = match (&self.age_source, &self.last_estimate) {
+            (AgeSource::Estimated, Some(e)) if !e.fallback => e.age,
+            _ => self.clock.device_age(),
+        };
         self.store
-            .select(self.clock.device_age())
+            .select(age)
             .map(|s| s.accuracy)
             .unwrap_or(0.0)
     }
@@ -370,15 +405,68 @@ impl Server {
     pub fn refresh(&mut self, t0: f64) {
         self.clock = LifetimeClock::new(t0, self.clock.accel);
         self.active_set = None;
+        self.last_estimate = None;
     }
 
-    /// Route: pick the set for the current age; reload SRAM + refresh the
-    /// drifted weight view when the era changes.
+    /// The age compensation-set selection keys on. Under
+    /// [`AgeSource::Estimated`] this probe-reads the reserved rows at
+    /// the device's physical age, inverts the drift model, and uses
+    /// the estimate unless it flagged fallback (probe rows saturated,
+    /// faulted out, or disagreeing) — then, and when the deployment
+    /// has no probe plan at all, the clock wins and
+    /// `serve.est_fallback` counts the decision.
+    fn selection_age(&mut self) -> f64 {
+        let age = self.clock.device_age();
+        if self.age_source != AgeSource::Estimated {
+            return age;
+        }
+        let est = match self.dep.probes.as_ref() {
+            Some(plan) => self.estimator.estimate(
+                plan,
+                &self.dep.net.bank,
+                age,
+                self.dep.drift.as_ref(),
+                &mut self.probe_rng,
+            ),
+            None => {
+                obs::counter_add("serve.est_fallback", 1);
+                return age;
+            }
+        };
+        let sel = if est.fallback {
+            obs::counter_add("serve.est_fallback", 1);
+            age
+        } else {
+            obs::event("serve.est_age", "serve", || {
+                vec![
+                    ("age_s", num(age)),
+                    ("est_s", num(est.age)),
+                    ("lo_s", num(est.lo)),
+                    ("hi_s", num(est.hi)),
+                    ("levels", num(est.used_levels as f64)),
+                ]
+            });
+            est.age
+        };
+        self.last_estimate = Some(est);
+        sel
+    }
+
+    /// Route: pick the set for the selection age (clock or estimated);
+    /// reload SRAM + refresh the drifted weight view when the era
+    /// changes. The weight readout ALWAYS samples at the physical
+    /// (clock) age — the estimator only arbitrates which compensation
+    /// set is loaded, it cannot rejuvenate the devices.
     fn route(&mut self) -> usize {
         let age = self.clock.device_age();
+        let (sel_age, clamped) =
+            self.store.clamp_age(self.selection_age());
+        if clamped {
+            obs::counter_add("serve.age_clamped", 1);
+        }
         let idx = self
             .store
-            .select_index(age)
+            .select_index(sel_age)
             .expect("serving requires a scheduled store");
         if self.active_set != Some(idx) {
             self.sram = self.store.sets[idx].trainables.clone();
@@ -390,7 +478,7 @@ impl Server {
             obs::event("serve.set_switch", "serve", || {
                 vec![
                     ("set", num(idx as f64)),
-                    ("age_s", num(age)),
+                    ("age_s", num(sel_age)),
                     ("pred_acc", num(self.store.sets[idx].accuracy)),
                 ]
             });

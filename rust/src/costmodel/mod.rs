@@ -28,6 +28,9 @@ pub mod constants {
     /// Mean write-verify pulses per cell to land a multilevel target
     /// (the program-and-verify loop of §IV-G).
     pub const WRITE_VERIFY_PULSES: f64 = 8.0;
+    /// Energy of one RRAM cell read (pJ) — a probe-row sense is a
+    /// single-cell current read, ~2 orders below a write pulse.
+    pub const RRAM_READ_PJ: f64 = 0.1;
 }
 
 use crate::nn::manifest::LayerGeom;
@@ -285,6 +288,52 @@ pub struct FleetCost {
     pub n_chips: usize,
     pub per_chip: MethodCost,
     pub bn_baseline: BnCalibCost,
+    /// Probe-row reservation for the closed-loop age estimator, when
+    /// the fleet serves with `--estimator` (None = clock-only fleet).
+    pub probes: Option<ProbeCost>,
+}
+
+/// Cost of the closed-loop estimator's probe rows on one chip: RRAM
+/// cells reserved away from weights at programming time, plus the
+/// periodic probe-read energy each estimate spends. Both are tiny next
+/// to the backbone — the point of accounting them is to keep the
+/// Table III-style overhead comparison honest once probes are on.
+#[derive(Debug, Clone)]
+pub struct ProbeCost {
+    /// Probe conductance levels per tile.
+    pub levels: usize,
+    /// Probe cells per level per tile.
+    pub cells_per_level: usize,
+    /// RRAM tiles per chip carrying a probe reservation.
+    pub tiles_per_chip: usize,
+    /// Age estimates per second while serving (probe-read cadence).
+    pub estimates_per_s: f64,
+}
+
+impl ProbeCost {
+    /// Probe cells reserved per chip.
+    pub fn cells_per_chip(&self) -> u64 {
+        (self.levels * self.cells_per_level * self.tiles_per_chip)
+            as u64
+    }
+
+    /// Fraction of the chip's RRAM devices given up to probes
+    /// (differential weight mapping: 2 devices per weight).
+    pub fn storage_fraction(&self, backbone_params: u64) -> f64 {
+        self.cells_per_chip() as f64
+            / (2 * backbone_params + self.cells_per_chip()) as f64
+    }
+
+    /// Energy of one full probe sweep (nJ): every probe cell read once.
+    pub fn energy_per_estimate_nj(&self) -> f64 {
+        self.cells_per_chip() as f64 * constants::RRAM_READ_PJ / 1e3
+    }
+
+    /// Continuous probe-read power per chip (W) at the configured
+    /// estimate cadence.
+    pub fn read_power_w(&self) -> f64 {
+        self.energy_per_estimate_nj() * 1e-9 * self.estimates_per_s
+    }
 }
 
 impl FleetCost {
@@ -298,7 +347,35 @@ impl FleetCost {
             n_chips,
             per_chip,
             bn_baseline,
+            probes: None,
         }
+    }
+
+    /// Attach the estimator's probe-row reservation to the roll-up.
+    pub fn with_probes(mut self, probes: ProbeCost) -> FleetCost {
+        self.probes = Some(probes);
+        self
+    }
+
+    /// RRAM cells the fleet reserves for probes (0 without probes).
+    pub fn probe_cells_total(&self) -> u64 {
+        self.probes
+            .as_ref()
+            .map_or(0, |p| p.cells_per_chip() * self.n_chips as u64)
+    }
+
+    /// Fraction of fleet RRAM devices spent on probe rows.
+    pub fn probe_storage_fraction(&self) -> f64 {
+        self.probes.as_ref().map_or(0.0, |p| {
+            p.storage_fraction(self.per_chip.backbone_params)
+        })
+    }
+
+    /// Fleet-wide probe-read power (W) at the configured cadence.
+    pub fn probe_power_w(&self) -> f64 {
+        self.probes
+            .as_ref()
+            .map_or(0.0, |p| p.read_power_w() * self.n_chips as f64)
     }
 
     /// Compensation storage across the fleet (KB): every chip carries
@@ -588,6 +665,41 @@ mod tests {
         let p = f16.serving_power_w(1e6);
         assert!(p > 0.1 && p < 1.0, "power {p}");
         assert!(f16.bn_extra_power_w(1e6) > 0.0);
+    }
+
+    #[test]
+    fn probe_overhead_is_honest_and_small() {
+        let layers = paper20();
+        let vp = cost_method(&layers, 64, 64, Method::VeraPlus, 1, 11);
+        let bn = BnCalibCost::for_cifar_like(&layers, 50_000, 3072);
+        // Default ProbeCfg geometry: 8 levels x 64 cells, one row per
+        // tile; ~0.27M-param backbone maps to ~17 tiles of 32k cells.
+        let probes = ProbeCost {
+            levels: 8,
+            cells_per_level: 64,
+            tiles_per_chip: 17,
+            estimates_per_s: 1.0,
+        };
+        assert_eq!(probes.cells_per_chip(), 8 * 64 * 17);
+        let bare = FleetCost::new(16, vp.clone(), bn.clone());
+        assert_eq!(bare.probe_cells_total(), 0);
+        assert_eq!(bare.probe_power_w(), 0.0);
+        let fc = FleetCost::new(16, vp, bn).with_probes(probes);
+        assert_eq!(fc.probe_cells_total(), 16 * 8 * 64 * 17);
+        // Probe rows cost ~1.6% of the array — visible, not free.
+        let frac = fc.probe_storage_fraction();
+        assert!(frac > 0.001 && frac < 0.05, "fraction {frac}");
+        // One probe sweep reads 8704 cells at 0.1 pJ ≈ 0.87 nJ — a few
+        // inferences' worth of energy; at 1 Hz the fleet-wide probe
+        // power is noise next to serving power at any real rate.
+        let sweep = fc.probes.as_ref().unwrap().energy_per_estimate_nj();
+        assert!(sweep < 10.0 * fc.per_chip.energy_nj(), "sweep {sweep}");
+        assert!(
+            fc.probe_power_w() < 0.01 * fc.serving_power_w(1e4),
+            "probe power {} vs serving {}",
+            fc.probe_power_w(),
+            fc.serving_power_w(1e4)
+        );
     }
 
     #[test]

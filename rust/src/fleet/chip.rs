@@ -19,6 +19,7 @@
 //!   hundreds of thousands of requests) tractable and lets the fleet
 //!   subsystem run in environments without the PJRT runtime.
 
+use crate::compensation::AgeSource;
 use crate::coordinator::serve::{
     BatchPolicy, Completion, LifetimeClock, Request, ServeMetrics, Server,
 };
@@ -62,6 +63,12 @@ pub trait ChipEngine: Send {
     /// era, so serving re-enters the set ladder at set 0 on the next
     /// batch.
     fn refresh(&mut self, t0: f64);
+
+    /// Switch which age feeds compensation-set selection: the lifetime
+    /// clock, or the probe-row estimator (closed-loop drift
+    /// estimation). Default is a no-op so engines without an estimator
+    /// keep clock behavior.
+    fn set_age_source(&mut self, _src: AgeSource) {}
 
     /// Execute one batch (no-op on an empty queue), returning its
     /// [`Completion`]s.
@@ -138,6 +145,10 @@ impl ChipEngine for Server {
         Server::refresh(self, t0);
     }
 
+    fn set_age_source(&mut self, src: AgeSource) {
+        Server::set_age_source(self, src);
+    }
+
     fn step(&mut self, wall_per_exec: f64) -> Result<Vec<Completion>> {
         Server::step(self, wall_per_exec)
     }
@@ -160,6 +171,21 @@ pub struct AnalyticEngine {
     active_segment: Option<usize>,
     rng: Pcg64,
     wall: f64,
+    /// Ratio of TRUE drift kinetics to what the lifetime clock
+    /// believes (mis-modeled drift: clock skew, thermal or fault
+    /// acceleration). 1.0 = the clock is honest. Outcomes are always
+    /// drawn at the true age; only set selection can be fooled.
+    drift_skew: f64,
+    /// Age at which the skew took hold (programming time — the clock
+    /// and the devices agreed at t0).
+    skew_origin: f64,
+    /// Which age drives era selection: the (possibly skewed) clock, or
+    /// the probe-row estimator. The analytic engine models the
+    /// estimator as exact — it reads the true age — because estimator
+    /// noise/fallback realism lives in
+    /// [`crate::compensation::estimator`]'s own tests and the real
+    /// server path.
+    age_source: AgeSource,
 }
 
 impl AnalyticEngine {
@@ -169,6 +195,7 @@ impl AnalyticEngine {
         policy: BatchPolicy,
         seed: u64,
     ) -> AnalyticEngine {
+        let skew_origin = clock.device_age();
         AnalyticEngine {
             clock,
             policy,
@@ -178,6 +205,41 @@ impl AnalyticEngine {
             active_segment: None,
             rng: Pcg64::with_stream(seed, 0xf1ee7),
             wall: 0.0,
+            drift_skew: 1.0,
+            skew_origin,
+            age_source: AgeSource::Clock,
+        }
+    }
+
+    /// Configure mis-modeled drift: the devices really age
+    /// `drift_skew`× faster than the lifetime clock records (past the
+    /// construction-time origin), and `age_source` picks whether era
+    /// selection trusts the clock or the probe-row estimator.
+    pub fn with_drift(
+        mut self,
+        drift_skew: f64,
+        age_source: AgeSource,
+    ) -> AnalyticEngine {
+        assert!(drift_skew > 0.0, "skew must be positive");
+        self.drift_skew = drift_skew;
+        self.age_source = age_source;
+        self
+    }
+
+    /// The device's TRUE age: clock time re-scaled by the skew from
+    /// the origin outward. Identical to the clock when skew = 1.
+    pub fn true_age(&self) -> f64 {
+        self.skew_origin
+            + (self.clock.device_age() - self.skew_origin)
+                * self.drift_skew
+    }
+
+    /// The age era selection keys on under the current
+    /// [`AgeSource`].
+    fn selection_age(&self) -> f64 {
+        match self.age_source {
+            AgeSource::Clock => self.clock.device_age(),
+            AgeSource::Estimated => self.true_age(),
         }
     }
 
@@ -189,9 +251,14 @@ impl AnalyticEngine {
         if self.queue.is_empty() {
             return Vec::new();
         }
-        let age = self.clock.device_age();
+        // Era selection keys on the selection age (clock or
+        // estimated); outcomes are ALWAYS drawn at the true age under
+        // whichever set that selection loaded. With an honest clock
+        // the three ages coincide and this is the classic
+        // predict(age) path, bit for bit.
+        let age = self.selection_age();
         let segment = self.profile.segment_index(age);
-        let p = self.profile.predict(age);
+        let p = self.profile.predict_with_segment(self.true_age(), segment);
         if self.active_segment != Some(segment) {
             self.metrics.set_switches += 1;
             self.active_segment = Some(segment);
@@ -267,7 +334,11 @@ impl ChipEngine for AnalyticEngine {
     }
 
     fn predicted_accuracy(&self) -> f64 {
-        self.profile.predict(self.clock.device_age())
+        // The router sees what its age source believes: a skewed
+        // clock yields optimistic routing weights (part of the
+        // mis-modeled-drift failure), the estimator yields honest
+        // ones.
+        self.profile.predict(self.selection_age())
     }
 
     fn advance_idle(&mut self, wall_seconds: f64) {
@@ -281,6 +352,13 @@ impl ChipEngine for AnalyticEngine {
     fn refresh(&mut self, t0: f64) {
         self.clock = LifetimeClock::new(t0, self.clock.accel);
         self.active_segment = None;
+        // Reprogramming re-synchronizes devices and clock: the skew
+        // (if any) accumulates afresh from the new origin.
+        self.skew_origin = t0;
+    }
+
+    fn set_age_source(&mut self, src: AgeSource) {
+        self.age_source = src;
     }
 
     fn step(&mut self, wall_per_exec: f64) -> Result<Vec<Completion>> {
@@ -393,6 +471,55 @@ mod tests {
         assert_eq!(taken.iter().map(|r| r.id).collect::<Vec<_>>(),
                    vec![2, 3]);
         assert_eq!(ChipEngine::queue_len(&e), 0);
+    }
+
+    #[test]
+    fn estimator_source_recovers_mis_modeled_drift() {
+        // Two eras with per-decade decay: selecting the stale era-0
+        // set at a true age deep into era 1 costs real accuracy.
+        let profile = Arc::new(AccuracyProfile::new(
+            vec![
+                crate::fleet::Segment { t_start: 1.0, accuracy: 0.9 },
+                crate::fleet::Segment { t_start: 1e4, accuracy: 0.9 },
+            ],
+            0.05,
+            0.1,
+        ));
+        let mk = |src| {
+            AnalyticEngine::new(
+                Arc::clone(&profile),
+                LifetimeClock::new(1.0, 1.0),
+                BatchPolicy { max_batch: 8, max_wait: 0.01 },
+                11,
+            )
+            .with_drift(1e4, src)
+        };
+        let mut clocked = mk(AgeSource::Clock);
+        let mut probed = mk(AgeSource::Estimated);
+        for e in [&mut clocked, &mut probed] {
+            // Clock records 2 s of aging; devices really took 2e4 s.
+            ChipEngine::advance_idle(e, 2.0);
+        }
+        assert!((clocked.true_age() - 2.0001e4).abs() < 1.0);
+        for i in 0..4000 {
+            ChipEngine::submit(&mut clocked, req(i, 0.0));
+            ChipEngine::submit(&mut probed, req(i, 0.0));
+        }
+        clocked.drain_budgeted(usize::MAX, 1e-6).unwrap();
+        probed.drain_budgeted(usize::MAX, 1e-6).unwrap();
+        // The fooled clock stays on era 0 (~4.3 decades stale ⇒
+        // p ≈ 0.685); the estimator selects era 1 (p ≈ 0.885).
+        assert_eq!(clocked.active_segment(), Some(0));
+        assert_eq!(probed.active_segment(), Some(1));
+        let a_clock = clocked.metrics.accuracy();
+        let a_est = probed.metrics.accuracy();
+        assert!((a_clock - 0.685).abs() < 0.04, "clock {a_clock}");
+        assert!((a_est - 0.885).abs() < 0.04, "est {a_est}");
+        // Flipping the source mid-life re-selects on the next batch.
+        ChipEngine::set_age_source(&mut clocked, AgeSource::Estimated);
+        ChipEngine::submit(&mut clocked, req(9000, 0.0));
+        let c = clocked.drain_budgeted(1, 1e-6).unwrap();
+        assert_eq!(c[0].set_index, 1);
     }
 
     #[test]

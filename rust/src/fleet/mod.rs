@@ -32,6 +32,7 @@ pub mod metrics;
 pub mod profile;
 pub mod router;
 
+pub use crate::compensation::AgeSource;
 pub use chip::{native_engine, AnalyticEngine, ChipEngine, NativeEngine};
 pub use metrics::{
     ChipLoad, ChipSummary, FleetMetrics, FleetSummary, PhaseSummary,
@@ -85,6 +86,15 @@ pub struct FleetConfig {
     /// capacity model (max throughput = max_batch / exec_seconds).
     pub exec_seconds_per_batch: f64,
     pub seed: u64,
+    /// Mis-modeled drift: devices really age this many times faster
+    /// than the lifetime clocks record (1.0 = honest clocks). See
+    /// [`AnalyticEngine::with_drift`].
+    pub drift_skew: f64,
+    /// Which age drives compensation-set selection fleet-wide at
+    /// start: the clock, or the probe-row estimator
+    /// ([`crate::compensation::estimator`]). Scenario
+    /// `estimator on/off` events flip this at runtime.
+    pub age_source: AgeSource,
 }
 
 impl Default for FleetConfig {
@@ -98,6 +108,8 @@ impl Default for FleetConfig {
             batch: BatchPolicy::default(),
             exec_seconds_per_batch: 0.002,
             seed: 0xf1ee7,
+            drift_skew: 1.0,
+            age_source: AgeSource::Clock,
         }
     }
 }
@@ -473,6 +485,18 @@ impl<E: ChipEngine> Fleet<E> {
         Ok(out)
     }
 
+    /// Flip the age source feeding every chip's compensation-set
+    /// selection (closed-loop estimator on/off). Scenario
+    /// `estimator` events land here.
+    pub fn set_age_source(&mut self, src: crate::compensation::AgeSource) {
+        for chip in &mut self.chips {
+            chip.set_age_source(src);
+        }
+        obs::event("fleet.age_source", "fleet", || {
+            vec![("source", crate::util::json::s(src.name()))]
+        });
+    }
+
     /// Snapshot combining fleet counters with per-engine metrics.
     pub fn summary(&self) -> FleetSummary {
         FleetSummary::collect(&self.chips, &self.metrics)
@@ -496,6 +520,7 @@ pub fn analytic_fleet(
                 cfg.seed ^ 0x9e37_79b9_7f4a_7c15u64
                     .wrapping_mul(i as u64 + 1),
             )
+            .with_drift(cfg.drift_skew, cfg.age_source)
         })
         .collect();
     Fleet::new(chips, cfg.policy, cfg.exec_seconds_per_batch)

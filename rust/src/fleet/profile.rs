@@ -11,7 +11,7 @@
 //! [`SetStore`] (each set carries its EVALSTATS accuracy) or built
 //! synthetically for artifact-free simulation.
 
-use crate::compensation::SetStore;
+use crate::compensation::{SetStore, AGE_HORIZON_FACTOR};
 
 /// One compensation era: the set programmed at `t_start` with its
 /// scheduler-estimated accuracy at that age.
@@ -122,14 +122,56 @@ impl AccuracyProfile {
         pos.saturating_sub(1)
     }
 
-    /// Predicted accuracy at device age `t`.
+    /// Last era start times [`AGE_HORIZON_FACTOR`]: the profile's
+    /// trained accuracies say nothing beyond this age.
+    pub fn horizon(&self) -> f64 {
+        self.segments.last().unwrap().t_start * AGE_HORIZON_FACTOR
+    }
+
+    /// Clamp an age into `[t_0, horizon]`; bumps `serve.age_clamped`
+    /// when the age was out of range (estimated ages under runaway or
+    /// mis-modeled drift can land arbitrarily far out).
+    fn clamp_age(&self, t: f64) -> f64 {
+        let clamped =
+            t.clamp(self.segments[0].t_start, self.horizon());
+        if clamped != t {
+            crate::obs::counter_add("serve.age_clamped", 1);
+        }
+        clamped
+    }
+
+    /// Predicted accuracy at device age `t`. Ages beyond the horizon
+    /// clamp (see [`AccuracyProfile::horizon`]) rather than decaying to
+    /// the floor on extrapolated eras the ladder never trained.
     pub fn predict(&self, t: f64) -> f64 {
+        let t = self.clamp_age(t);
         let seg = self.segments[self.segment_index(t)];
         let decades = if t > seg.t_start {
             (t / seg.t_start).log10()
         } else {
             0.0
         };
+        (seg.accuracy - self.decay_per_decade * decades)
+            .clamp(self.floor, 1.0)
+    }
+
+    /// Predicted accuracy at TRUE age `t` when the chip is serving
+    /// with era `k`'s compensation set (closed-loop estimation: the
+    /// selected era comes from the estimated age, which may disagree
+    /// with the physical age). When `k` is the era `t` itself falls
+    /// in, this is exactly [`AccuracyProfile::predict`]; otherwise the
+    /// mis-selection penalty is the usual per-decade decay over the
+    /// log-distance between `t` and the stale era's start — a set
+    /// trained for the wrong decade mis-cancels drift by roughly the
+    /// amount it is out of date.
+    pub fn predict_with_segment(&self, t: f64, k: usize) -> f64 {
+        let k = k.min(self.segments.len() - 1);
+        let t = self.clamp_age(t);
+        if k == self.segment_index(t) {
+            return self.predict(t);
+        }
+        let seg = &self.segments[k];
+        let decades = (t.max(1e-12) / seg.t_start).log10().abs();
         (seg.accuracy - self.decay_per_decade * decades)
             .clamp(self.floor, 1.0)
     }
@@ -158,8 +200,55 @@ mod tests {
         assert!((p.predict(100.0) - 0.80).abs() < 1e-12);
         // Ages before the first era clamp to the era start.
         assert!((p.predict(0.01) - 0.9).abs() < 1e-12);
-        // Deep time hits the floor.
-        assert!((p.predict(1e30) - 0.1).abs() < 1e-12);
+        // Deep time clamps to the horizon (one decade past the only
+        // era) instead of extrapolating to the floor.
+        assert!((p.predict(1e30) - 0.85).abs() < 1e-12);
+    }
+
+    #[test]
+    fn predict_clamps_at_the_horizon_boundary() {
+        let p = AccuracyProfile::new(
+            vec![
+                Segment { t_start: 1.0, accuracy: 0.9 },
+                Segment { t_start: 100.0, accuracy: 0.9 },
+            ],
+            0.05,
+            0.1,
+        );
+        // Horizon = last era start × factor = 1000 s.
+        assert!((p.horizon() - 1000.0).abs() < 1e-12);
+        // Exactly at the horizon: one decade into the last era.
+        assert!((p.predict(1000.0) - 0.85).abs() < 1e-12);
+        // Beyond it: pinned to the horizon value, not the floor.
+        assert!((p.predict(1e6) - 0.85).abs() < 1e-12);
+        assert!((p.predict(1e30) - p.predict(1000.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn predict_with_segment_penalizes_stale_eras() {
+        let p = AccuracyProfile::new(
+            vec![
+                Segment { t_start: 1.0, accuracy: 0.9 },
+                Segment { t_start: 1e4, accuracy: 0.9 },
+            ],
+            0.05,
+            0.1,
+        );
+        // Correct era: bit-identical to plain predict.
+        for &t in &[1.0, 50.0, 1e4, 5e4] {
+            let k = p.segment_index(t);
+            assert_eq!(p.predict_with_segment(t, k), p.predict(t));
+        }
+        // Serving era 0's set at t = 1e4 (four decades stale) loses
+        // four decades of decay; the fresh set would be at 0.9.
+        let stale = p.predict_with_segment(1e4, 0);
+        assert!((stale - 0.7).abs() < 1e-12);
+        assert!(stale < p.predict(1e4));
+        // Out-of-range k clamps to the last era.
+        assert_eq!(
+            p.predict_with_segment(2e4, 99),
+            p.predict_with_segment(2e4, 1)
+        );
     }
 
     #[test]

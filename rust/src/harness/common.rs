@@ -4,7 +4,8 @@
 use crate::coordinator::trainer::{
     train_backbone, BackboneTrainCfg, CompTrainCfg,
 };
-use crate::coordinator::{deploy, Deployment};
+use crate::compensation::ProbeCfg;
+use crate::coordinator::{deploy, deploy_with_probes, Deployment};
 use crate::rram::drift::DriftModel;
 use crate::rram::{ConductanceGrid, IbmDrift};
 use crate::runtime::Runtime;
@@ -152,6 +153,30 @@ impl Ctx {
             drift,
             ConductanceGrid::default(),
             self.budget.seed,
+        )
+    }
+
+    /// [`Ctx::deployment`] with probe rows reserved per tile for the
+    /// closed-loop age estimator (`serve --estimator`).
+    pub fn deployment_with_probes(
+        &self,
+        model: &str,
+        method: &str,
+        rank: usize,
+        drift: Box<dyn DriftModel>,
+        probe: &ProbeCfg,
+    ) -> Result<Deployment> {
+        let params = self.backbone(model)?;
+        deploy_with_probes(
+            self.rt.clone(),
+            model,
+            &params,
+            method,
+            rank,
+            drift,
+            ConductanceGrid::default(),
+            self.budget.seed,
+            Some(probe),
         )
     }
 

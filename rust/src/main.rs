@@ -32,7 +32,8 @@ use vera_plus::util::cli::Args;
 use vera_plus::util::tensor::{read_vpts, write_vpts};
 
 fn main() {
-    let args = match Args::parse(&["quick", "full", "help"]) {
+    let args = match Args::parse(&["quick", "full", "help", "estimator"])
+    {
         Ok(a) => a,
         Err(e) => {
             eprintln!("argument error: {e}");
@@ -72,16 +73,22 @@ fn print_help() {
          schedule        Run Alg. 1, save the compensation set store\n  \
          \u{20}                (--model, --drop, --instances, --epochs, --out)\n  \
          serve           Serve an accelerated lifetime against a store\n  \
-         \u{20}                (--model, --store, --rate, --seconds, --batch)\n  \
+         \u{20}                (--model, --store, --rate, --seconds, --batch,\n  \
+         \u{20}                 --estimator: reserve probe rows and select\n  \
+         \u{20}                 sets from estimated drift age, not the clock)\n  \
          fleet           Multi-chip sharded serving with staggered drift\n  \
          \u{20}                ages (--chips, --stagger-years, --policy\n  \
          \u{20}                 round-robin|least-queue|drift-aware, --rate,\n  \
-         \u{20}                 --seconds, --engine analytic|pjrt, --store)\n  \
+         \u{20}                 --seconds, --engine analytic|pjrt, --store,\n  \
+         \u{20}                 --skew: mis-model true drift by a factor,\n  \
+         \u{20}                 --estimator: select sets from estimated age)\n  \
          scenario        Scripted stress timeline on the analytic fleet:\n  \
          \u{20}                chip failures, refresh campaigns, traffic\n  \
          \u{20}                shapes, per-phase report (--chips, --seconds,\n  \
-         \u{20}                 --preset chaos|diurnal | --script FILE.json,\n  \
-         \u{20}                 --policy, --seed, --store)\n  \
+         \u{20}                 --preset chaos|diurnal|misdrift |\n  \
+         \u{20}                 --script FILE.json, --policy, --seed,\n  \
+         \u{20}                 --store, --skew: clock-vs-true drift factor,\n  \
+         \u{20}                 default 1000 for the misdrift preset)\n  \
          experiment      Regenerate a paper table/figure\n  \
          \u{20}                (--id fig3|fig4|fig5|fig6|table2..table5|all,\n  \
          \u{20}                 --quick | --full)\n  \
@@ -267,12 +274,31 @@ fn cmd_serve(args: &Args) -> Result<()> {
         std::path::Path::new(&store_path),
     )?);
     let ctx = Ctx::new(budget(args))?;
-    let dep = Arc::new(ctx.deployment(
-        &model,
-        &method,
-        rank,
-        Box::new(IbmDrift::default()),
-    )?);
+    let estimator = args.has_flag("estimator");
+    let dep = Arc::new(if estimator {
+        let probe = vera_plus::compensation::ProbeCfg::default();
+        println!(
+            "estimator: reserving {} probe cells/tile \
+             ({} levels x {} cells)",
+            probe.reserve_cells(),
+            probe.levels.len(),
+            probe.cells_per_level,
+        );
+        ctx.deployment_with_probes(
+            &model,
+            &method,
+            rank,
+            Box::new(IbmDrift::default()),
+            &probe,
+        )?
+    } else {
+        ctx.deployment(
+            &model,
+            &method,
+            rank,
+            Box::new(IbmDrift::default()),
+        )?
+    });
     let seconds = args.get_f64("seconds", 20.0)?;
     let accel = args.get_f64("accel", 10.0 * YEAR / 20.0)?;
     let rate = args.get_f64("rate", 500.0)?;
@@ -287,6 +313,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         },
         args.get_u64("seed", 11)?,
     );
+    if estimator {
+        server
+            .set_age_source(vera_plus::compensation::AgeSource::Estimated);
+    }
     let mut workload = Workload::new(rate, 5);
     let mut wall = 0.0;
     let tick = 0.5;
@@ -318,6 +348,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
         1e3 * lat[0],
         1e3 * lat[1],
     );
+    if let Some(est) = server.last_estimate() {
+        println!(
+            "estimator: clock age {}  estimated {} [{} .. {}] from {} \
+             probe levels{}",
+            fmt_time(server.clock.device_age()),
+            fmt_time(est.age),
+            fmt_time(est.lo),
+            fmt_time(est.hi),
+            est.used_levels,
+            if est.fallback { "  (FELL BACK to clock)" } else { "" },
+        );
+    }
     Ok(())
 }
 
@@ -328,11 +370,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
 fn cmd_fleet(args: &Args) -> Result<()> {
     use vera_plus::costmodel::{
         cost_method, paper_resnet20_layers, BnCalibCost, FleetCost,
-        Method,
+        Method, ProbeCost,
     };
     use vera_plus::fleet::{
-        analytic_fleet, AccuracyProfile, BalancePolicy, Fleet,
-        FleetConfig,
+        analytic_fleet, AccuracyProfile, AgeSource, BalancePolicy,
+        Fleet, FleetConfig,
     };
 
     let (chrome, jsonl) = trace_arm(args);
@@ -368,7 +410,21 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         },
         exec_seconds_per_batch: args.get_f64("exec-ms", 2.0)? * 1e-3,
         seed: args.get_u64("seed", 0xf1ee7)?,
+        drift_skew: args.get_f64("skew", 1.0)?,
+        age_source: if args.has_flag("estimator") {
+            AgeSource::Estimated
+        } else {
+            AgeSource::Clock
+        },
     };
+    if cfg.drift_skew != 1.0 {
+        println!(
+            "mis-modeled drift: true age runs {}x the clock; set \
+             selection uses the {} age",
+            cfg.drift_skew,
+            cfg.age_source.name(),
+        );
+    }
     println!(
         "fleet: {} chips, ages {} .. {}, policy {}, {} req/s for {}s",
         n_chips,
@@ -465,7 +521,18 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     let per_chip =
         cost_method(&layers, 64, 64, cost_kind, rank, cost_sets);
     let bn = BnCalibCost::for_cifar_like(&layers, 50_000, 3072);
-    let fc = FleetCost::new(n_chips, per_chip, bn);
+    let mut fc = FleetCost::new(n_chips, per_chip, bn);
+    if args.has_flag("estimator") {
+        let probe = vera_plus::compensation::ProbeCfg::default();
+        // One probe row per 32k-cell tile on the costed backbone.
+        let tiles = (2 * fc.per_chip.backbone_params).div_ceil(32_768);
+        fc = fc.with_probes(ProbeCost {
+            levels: probe.levels.len(),
+            cells_per_level: probe.cells_per_level,
+            tiles_per_chip: tiles as usize,
+            estimates_per_s: 1.0,
+        });
+    }
     println!(
         "\nfleet cost ({} chips, {} r={rank}, {cost_sets} sets): \
          sets {:.1} KB total vs BN-calibration {:.0} KB ({:.0}x); \
@@ -479,6 +546,18 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         rate,
         fc.serving_power_w(rate),
     );
+    if let Some(p) = &fc.probes {
+        println!(
+            "probe overhead: {} cells/chip ({:.2}% of the array), \
+             {:.2} nJ per estimator sweep, fleet probe power {:.2e} W \
+             at {:.0} Hz",
+            p.cells_per_chip(),
+            100.0 * fc.probe_storage_fraction(),
+            p.energy_per_estimate_nj(),
+            fc.probe_power_w(),
+            p.estimates_per_s,
+        );
+    }
     if chrome.is_some() || jsonl.is_some() {
         let events = vera_plus::obs::take_events();
         trace_write(&chrome, &jsonl, &events)?;
@@ -515,6 +594,7 @@ fn scenario_run(args: &Args) -> Result<()> {
         &args.get_or("policy", "drift-aware"),
     )?;
     let seed = args.get_u64("seed", 0x5ce0a)?;
+    let preset = args.get_or("preset", "chaos");
     let cfg = match args.get("script") {
         Some(path) => {
             let text = std::fs::read_to_string(path)?;
@@ -522,12 +602,11 @@ fn scenario_run(args: &Args) -> Result<()> {
                 &text,
             )?)?
         }
-        None => ScenarioConfig::preset(
-            &args.get_or("preset", "chaos"),
-            n_chips,
-            seconds,
-        )?,
+        None => ScenarioConfig::preset(&preset, n_chips, seconds)?,
     };
+    // The misdrift preset needs a clock that actually lies; other
+    // timelines default to a faithful clock. `--skew` overrides both.
+    let default_skew = if preset == "misdrift" { 1000.0 } else { 1.0 };
     let mut sets = args.get_usize("sets", 11)?;
     let profile = match args.get("store") {
         Some(stem) => {
@@ -556,6 +635,10 @@ fn scenario_run(args: &Args) -> Result<()> {
         },
         exec_seconds_per_batch: args.get_f64("exec-ms", 2.0)? * 1e-3,
         seed,
+        drift_skew: args.get_f64("skew", default_skew)?,
+        // Timelines flip the estimator themselves (Action::Estimator),
+        // so every scenario starts on the clock.
+        age_source: vera_plus::fleet::AgeSource::Clock,
     };
     println!(
         "scenario: {} chips, {} events over {}s, traffic {} \

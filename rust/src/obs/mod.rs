@@ -36,6 +36,19 @@
 //!   non-empty, non-`0` value both enables it and names the default
 //!   Chrome-trace output path for CLI commands.
 //! - `VERA_METRICS` — `1`/`true` enables counters/gauges/histograms.
+//!
+//! ## Closed-loop estimator telemetry
+//! The drift-age estimator (`compensation::estimator`) reports through:
+//! - `serve.est_age` (event, cat `serve`) — clock age vs estimated age
+//!   with confidence bounds, each time probe-based selection runs;
+//! - `serve.est_fallback` (counter) — estimates rejected or probes
+//!   absent: selection deferred to the clock;
+//! - `serve.age_clamped` (counter) — selection ages clamped at the
+//!   ladder's trained horizon (`compensation::AGE_HORIZON_FACTOR`);
+//! - `fleet.age_source` (event, cat `fleet`) — a fleet-wide
+//!   clock/estimated arbitration flip;
+//! - `scenario.estimator` (event, cat `scenario`) — the timeline
+//!   action driving such a flip.
 
 pub mod quantile;
 pub mod trace;

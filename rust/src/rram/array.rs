@@ -187,11 +187,36 @@ pub struct ArrayBank {
     /// after drift sampling; empty for a healthy bank (zero overhead on
     /// the hot path beyond one `is_empty` check per segment).
     faults: BTreeMap<(usize, usize), CellFault>,
+    /// Cells per tile set aside at programming time for probe rows
+    /// (closed-loop drift estimation): weight programming fills each
+    /// tile only up to `capacity - reserve`, so every tile keeps room
+    /// for its calibration cells. 0 (the default) reproduces the
+    /// pre-estimator layout exactly.
+    reserve: usize,
 }
 
 impl ArrayBank {
+    /// Bank whose tiles each set aside `reserve` cells for probe rows.
+    pub fn with_reserve(reserve: usize) -> ArrayBank {
+        assert!(
+            reserve < TILE_ROWS * TILE_COLS,
+            "probe reserve {reserve} swallows a whole tile"
+        );
+        ArrayBank {
+            reserve,
+            ..ArrayBank::default()
+        }
+    }
+
+    /// Per-tile probe-row reservation (cells).
+    pub fn reserve(&self) -> usize {
+        self.reserve
+    }
+
     /// Allocate + program a run of conductance targets, adding tiles as
-    /// needed. Returns (tile index, cell range) segments.
+    /// needed. Returns (tile index, cell range) segments. Each tile's
+    /// last `reserve` cells are skipped — they belong to the probe rows
+    /// programmed afterwards by [`program_probes`](Self::program_probes).
     pub fn program(
         &mut self,
         targets: &[f64],
@@ -201,17 +226,49 @@ impl ArrayBank {
         let mut segs = Vec::new();
         let mut off = 0;
         while off < targets.len() {
-            if self.tiles.last().map_or(true, |t| t.free() == 0) {
+            if self
+                .tiles
+                .last()
+                .map_or(true, |t| t.free() <= self.reserve)
+            {
                 self.tiles.push(Tile::new(TILE_ROWS, TILE_COLS));
             }
             let ti = self.tiles.len() - 1;
             let tile = &mut self.tiles[ti];
-            let take = tile.free().min(targets.len() - off);
+            let take = (tile.free() - self.reserve)
+                .min(targets.len() - off);
             let range = tile.program(&targets[off..off + take], grid, rng);
             segs.push((ti, range));
             off += take;
         }
         segs
+    }
+
+    /// Program one identical run of probe targets into EVERY tile's
+    /// reserved region (after all weight programming). Returns one
+    /// (tile, cell range) segment per tile. The probe cells sit inside
+    /// `0..used` like any programmed cell, so fault injection and
+    /// [`read_drifted_slice`](Self::read_drifted_slice) treat them
+    /// exactly like weight devices.
+    pub fn program_probes(
+        &mut self,
+        targets: &[f64],
+        grid: &ConductanceGrid,
+        rng: &mut Pcg64,
+    ) -> Vec<(usize, std::ops::Range<usize>)> {
+        assert!(
+            targets.len() <= self.reserve,
+            "probe run {} exceeds per-tile reserve {}",
+            targets.len(),
+            self.reserve
+        );
+        (0..self.tiles.len())
+            .map(|ti| {
+                let range =
+                    self.tiles[ti].program(targets, grid, rng);
+                (ti, range)
+            })
+            .collect()
     }
 
     /// Total programmed devices.
@@ -549,6 +606,35 @@ mod tests {
         let g = grid();
         bank.program(&vec![5.0; 4], &g, &mut Pcg64::new(1));
         bank.inject_fault(0, 10, CellFault::StuckAt(0.0));
+    }
+
+    #[test]
+    fn probe_reserve_keeps_room_in_every_tile() {
+        let g = grid();
+        let reserve = 512; // one probe row per 256×512 tile
+        let mut bank = ArrayBank::with_reserve(reserve);
+        let mut rng = Pcg64::new(1);
+        let cap = TILE_ROWS * TILE_COLS;
+        // Enough weights to fill one tile's weight region and spill.
+        let n = cap - reserve + 100;
+        let targets: Vec<f64> =
+            (0..n).map(|i| 5.0 + (i % 8) as f64).collect();
+        let segs = bank.program(&targets, &g, &mut rng);
+        assert_eq!(bank.n_tiles(), 2, "reserve must force the spill");
+        assert_eq!(segs[0].1.len(), cap - reserve);
+        // Probe programming lands in the reserved region of BOTH tiles.
+        let probes = vec![20.0; reserve];
+        let psegs = bank.program_probes(&probes, &g, &mut rng);
+        assert_eq!(psegs.len(), 2);
+        assert_eq!(psegs[0].1.start, cap - reserve);
+        assert_eq!(psegs[0].1.len(), reserve);
+        // Probe cells are programmed hardware: fault injection accepts
+        // them, and reads return the probe targets.
+        bank.inject_fault(0, psegs[0].1.start, CellFault::StuckAt(0.0));
+        let mut out = Vec::new();
+        bank.read_drifted(&[psegs[1].clone()], 1.0, &NoDrift,
+                          &mut Pcg64::new(2), &mut out);
+        assert!(out.iter().all(|&v| v == 20.0));
     }
 
     #[test]

@@ -153,7 +153,24 @@ impl ProgrammedNetwork {
         grid: ConductanceGrid,
         rng: &mut Pcg64,
     ) -> Result<ProgrammedNetwork> {
-        let mut bank = ArrayBank::default();
+        Self::program_with_reserve(manifest, deploy, grid, rng, 0)
+    }
+
+    /// [`program`](Self::program) with `reserve` cells per tile held
+    /// back for probe rows (closed-loop drift estimation — see
+    /// `compensation::estimator`). The probe rows themselves are
+    /// programmed afterwards via [`ArrayBank::program_probes`]; weight
+    /// readout iterates only the tensors' own segments, so probes are
+    /// excluded from inference by construction. `reserve = 0` is the
+    /// plain layout.
+    pub fn program_with_reserve(
+        manifest: &ModelManifest,
+        deploy: &TensorMap,
+        grid: ConductanceGrid,
+        rng: &mut Pcg64,
+        reserve: usize,
+    ) -> Result<ProgrammedNetwork> {
+        let mut bank = ArrayBank::with_reserve(reserve);
         let mut tensors = Vec::new();
         let mut digital = TensorMap::new();
         for spec in &manifest.deploy_weights {

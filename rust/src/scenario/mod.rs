@@ -54,6 +54,10 @@ pub enum Action {
     Retire { chip: usize },
     /// Switch the workload's traffic shape from this point on.
     Traffic { shape: TrafficShape },
+    /// Flip the closed-loop drift-age estimator fleet-wide: `on` makes
+    /// compensation-set selection trust the probe-row estimate,
+    /// `off` returns it to the lifetime clock.
+    Estimator { on: bool },
 }
 
 impl Action {
@@ -65,6 +69,8 @@ impl Action {
             Action::Traffic { shape } => {
                 format!("traffic-{}", shape.name())
             }
+            Action::Estimator { on: true } => "estimator-on".into(),
+            Action::Estimator { on: false } => "estimator-off".into(),
         }
     }
 }
@@ -166,7 +172,38 @@ impl ScenarioConfig {
         )
     }
 
-    /// Look up a named preset (`chaos` | `diurnal`).
+    /// The mis-modeled-drift acceptance timeline: steady traffic on a
+    /// fleet whose lifetime clocks under-report real drift (configure
+    /// the fleet with `drift_skew > 1`, e.g. `--skew 1000`). The run
+    /// opens on clock-based set selection — accuracy sags as every
+    /// chip serves with stale compensation sets — then the probe-row
+    /// estimator switches on mid-run and recovers it, and switches
+    /// back off near the end to show the loss returning. Three phases
+    /// (`start` → `estimator-on` → `estimator-off`) on the
+    /// [`FleetSummary`] make the closed loop's value directly
+    /// readable.
+    pub fn misdrift(n_chips: usize, seconds: f64) -> ScenarioConfig {
+        let per_chip = 260.0;
+        ScenarioConfig::new(
+            seconds,
+            seconds / 48.0,
+            TrafficShape::Constant {
+                rate: per_chip * n_chips as f64,
+            },
+            vec![
+                Event::new(
+                    0.45 * seconds,
+                    Action::Estimator { on: true },
+                ),
+                Event::new(
+                    0.9 * seconds,
+                    Action::Estimator { on: false },
+                ),
+            ],
+        )
+    }
+
+    /// Look up a named preset (`chaos` | `diurnal` | `misdrift`).
     pub fn preset(
         name: &str,
         n_chips: usize,
@@ -175,7 +212,12 @@ impl ScenarioConfig {
         match name {
             "chaos" => Ok(ScenarioConfig::chaos(n_chips, seconds)),
             "diurnal" => Ok(ScenarioConfig::diurnal(n_chips, seconds)),
-            other => bail!("unknown preset '{other}' (chaos | diurnal)"),
+            "misdrift" => {
+                Ok(ScenarioConfig::misdrift(n_chips, seconds))
+            }
+            other => bail!(
+                "unknown preset '{other}' (chaos | diurnal | misdrift)"
+            ),
         }
     }
 
@@ -236,9 +278,17 @@ impl ScenarioConfig {
                             ev.req("traffic")?,
                         )?,
                     },
+                    "estimator" => Action::Estimator {
+                        on: ev
+                            .req("on")
+                            .context("estimator event needs 'on'")?
+                            .as_bool()
+                            .context("'on' must be a bool")?,
+                    },
                     other => bail!(
                         "event {i}: unknown action '{other}' \
-                         (fail | refresh | retire | traffic)"
+                         (fail | refresh | retire | traffic | \
+                          estimator)"
                     ),
                 };
                 let label = match ev.get("label") {
@@ -359,6 +409,14 @@ fn apply<E: ChipEngine>(
             shape.validate()?;
             Ok(Some(shape.clone()))
         }
+        Action::Estimator { on } => {
+            fleet.set_age_source(if *on {
+                crate::compensation::AgeSource::Estimated
+            } else {
+                crate::compensation::AgeSource::Clock
+            });
+            Ok(None)
+        }
     }
 }
 
@@ -414,6 +472,7 @@ pub fn run_scenario<E: ChipEngine>(
                     Action::Refresh { .. } => "scenario.refresh",
                     Action::Retire { .. } => "scenario.retire",
                     Action::Traffic { .. } => "scenario.traffic",
+                    Action::Estimator { .. } => "scenario.estimator",
                 },
                 "scenario",
                 || {
@@ -426,6 +485,12 @@ pub fn run_scenario<E: ChipEngine>(
                             args.push(("chip", num(chip as f64)));
                         }
                         Action::Traffic { .. } => {}
+                        Action::Estimator { on } => {
+                            args.push((
+                                "on",
+                                num(if on { 1.0 } else { 0.0 }),
+                            ));
+                        }
                     }
                     args
                 },
@@ -488,6 +553,8 @@ mod tests {
             },
             exec_seconds_per_batch: 0.002,
             seed: 0x5ce0,
+            drift_skew: 1.0,
+            age_source: crate::compensation::AgeSource::Clock,
         }
     }
 
@@ -549,6 +616,51 @@ mod tests {
         let phase_served: usize =
             out.summary.phases.iter().map(|p| p.served).sum();
         assert_eq!(phase_served, out.summary.served);
+    }
+
+    #[test]
+    fn misdrift_preset_flips_the_estimator_and_recovers_accuracy() {
+        let cfg = ScenarioConfig::misdrift(3, 6.0);
+        assert_eq!(cfg.events.len(), 2);
+        assert_eq!(cfg.events[0].label, "estimator-on");
+        assert_eq!(cfg.events[1].label, "estimator-off");
+        assert!(ScenarioConfig::preset("misdrift", 3, 6.0).is_ok());
+        // A fleet whose clocks under-report drift 1000×: clock-based
+        // selection serves with badly stale sets; the estimator-on
+        // phase recovers, and switching it back off degrades again.
+        let mut fc = fleet_cfg(3);
+        fc.t0 = 3600.0;
+        fc.stagger = 0.0;
+        fc.accel = 1e6;
+        fc.drift_skew = 1e3;
+        let profile = AccuracyProfile::synthetic(
+            8, 10.0 * YEAR, 0.9, 0.08, 0.3,
+        );
+        let mut fleet = analytic_fleet(&fc, &profile);
+        let mut wl = Workload::new(0.0, 0xd21f7);
+        let out =
+            run_scenario(&mut fleet, &cfg, &mut wl, 64).unwrap();
+        assert_eq!(out.summary.phases.len(), 3);
+        let (clocked, probed, reverted) = (
+            &out.summary.phases[0],
+            &out.summary.phases[1],
+            &out.summary.phases[2],
+        );
+        assert!(clocked.served > 1000, "served {}", clocked.served);
+        // The closed loop buys back real accuracy...
+        assert!(
+            probed.accuracy > clocked.accuracy + 0.05,
+            "clock {} vs estimator {}",
+            clocked.accuracy,
+            probed.accuracy
+        );
+        // ...and the gain disappears when it is switched off.
+        assert!(
+            reverted.accuracy < probed.accuracy - 0.03,
+            "estimator {} vs reverted {}",
+            probed.accuracy,
+            reverted.accuracy
+        );
     }
 
     #[test]

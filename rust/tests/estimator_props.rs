@@ -1,0 +1,202 @@
+//! Closed-loop age-estimator integration properties (ISSUE 7):
+//!
+//! - **RNG transparency** — reserving probe rows and programming them
+//!   after the weights leaves the weight cells, their layout, and
+//!   their readout draws byte-identical to a probe-free bank;
+//! - **thread invariance** — the full per-tensor readout fan-out stays
+//!   bit-identical across `VERA_THREADS` values with probes reserved;
+//! - **noise tolerance** — under the default (noisy) IBM drift model
+//!   the probe-row median dates the device well within a decade;
+//! - **graceful degradation** — a majority of stuck probe levels still
+//!   yields a usable estimate; total probe loss flips the fallback
+//!   flag (clock wins) instead of panicking.
+
+use std::path::Path;
+use vera_plus::compensation::{AgeEstimator, ProbeCfg, ProbePlan};
+use vera_plus::nn::manifest::ModelManifest;
+use vera_plus::rram::drift::{MONTH, WEEK};
+use vera_plus::rram::{
+    ArrayBank, CellFault, ConductanceGrid, IbmDrift, ProgrammedNetwork,
+    YEAR,
+};
+use vera_plus::util::json::parse;
+use vera_plus::util::rng::Pcg64;
+use vera_plus::util::tensor::{Tensor, TensorMap};
+
+#[test]
+fn probe_reservation_is_rng_transparent_to_weight_readout() {
+    let cfg = ProbeCfg::default();
+    let grid = ConductanceGrid::default();
+    let targets: Vec<f64> =
+        (0..4096).map(|i| 5.0 + 5.0 * (i % 8) as f64).collect();
+
+    let mut plain = ArrayBank::default();
+    let mut rng_a = Pcg64::new(0xdeb1);
+    let segs_a = plain.program(&targets, &grid, &mut rng_a);
+
+    let mut probed = ArrayBank::with_reserve(cfg.reserve_cells());
+    let mut rng_b = Pcg64::new(0xdeb1);
+    let segs_b = probed.program(&targets, &grid, &mut rng_b);
+    // Probes draw from the SAME programming stream, strictly after the
+    // weight draws — the weights above are already settled.
+    let plan = ProbePlan::program(&mut probed, &grid, &cfg, &mut rng_b);
+    assert_eq!(plan.n_cells(), cfg.reserve_cells() * plan.tiles.len());
+
+    assert_eq!(segs_a, segs_b, "weight layout moved under the reserve");
+    let model = IbmDrift::default();
+    let mut out_a = vec![0f32; targets.len()];
+    let mut out_b = vec![0f32; targets.len()];
+    plain.read_drifted_slice(
+        &segs_a, YEAR, &model, &mut Pcg64::new(5), &mut out_a,
+    );
+    probed.read_drifted_slice(
+        &segs_b, YEAR, &model, &mut Pcg64::new(5), &mut out_b,
+    );
+    assert_eq!(out_a, out_b, "probe rows perturbed the weight readout");
+}
+
+fn tiny_manifest() -> ModelManifest {
+    let j = parse(
+        r#"{
+        "model": "t", "kind": "resnet", "classes": 4, "image": 8,
+        "w_bits": 4, "a_bits": 4, "d_in_max": 8, "d_out_max": 8,
+        "layers": [
+          {"name": "stem", "kind": "conv", "cin": 3, "cout": 4,
+           "k": 3, "stride": 1, "hw_in": 8, "hw_out": 8},
+          {"name": "fc", "kind": "linear", "cin": 4, "cout": 4,
+           "k": 1, "stride": 1, "hw_in": 1, "hw_out": 1}
+        ],
+        "deploy_weights": [
+          {"name": "stem.w", "shape": [3,3,3,4], "rram": true},
+          {"name": "stem.bias", "shape": [4], "rram": false},
+          {"name": "fc.w", "shape": [4,4], "rram": true},
+          {"name": "fc.bias", "shape": [4], "rram": false}
+        ],
+        "train_weights": [],
+        "graphs": {}}"#,
+    )
+    .unwrap();
+    ModelManifest::from_json(&j, Path::new(".")).unwrap()
+}
+
+fn deploy_map() -> TensorMap {
+    let mut m = TensorMap::new();
+    let mut rng = Pcg64::new(7);
+    let mut w = vec![0f32; 108];
+    rng.fill_normal_f32(&mut w, 0.0, 0.2);
+    m.insert("stem.w".into(), Tensor::from_f32(&[3, 3, 3, 4], w));
+    m.insert("stem.bias".into(), Tensor::from_f32(&[4], vec![0.1; 4]));
+    let mut w2 = vec![0f32; 16];
+    rng.fill_normal_f32(&mut w2, 0.0, 0.4);
+    m.insert("fc.w".into(), Tensor::from_f32(&[4, 4], w2));
+    m.insert("fc.bias".into(), Tensor::from_f32(&[4], vec![0.0; 4]));
+    m
+}
+
+#[test]
+fn thread_fanout_stays_bit_identical_with_probes_reserved() {
+    let man = tiny_manifest();
+    let cfg = ProbeCfg::default();
+    let mut rng = Pcg64::new(0xdeb1);
+    let mut net = ProgrammedNetwork::program_with_reserve(
+        &man,
+        &deploy_map(),
+        ConductanceGrid::default(),
+        &mut rng,
+        cfg.reserve_cells(),
+    )
+    .unwrap();
+    let grid = net.grid.clone();
+    let _plan = ProbePlan::program(&mut net.bank, &grid, &cfg, &mut rng);
+
+    let model = IbmDrift::default();
+    let mut one = TensorMap::new();
+    let mut four = TensorMap::new();
+    net.read_drifted_into_threads(
+        MONTH, &model, &mut Pcg64::new(42), &mut one, 1,
+    );
+    net.read_drifted_into_threads(
+        MONTH, &model, &mut Pcg64::new(42), &mut four, 4,
+    );
+    for (k, a) in &one {
+        let b = four.get(k).expect("tensor set must match");
+        assert_eq!(
+            a.as_f32(),
+            b.as_f32(),
+            "tensor {k} diverged across thread counts"
+        );
+    }
+}
+
+fn probed_bank(cfg: &ProbeCfg) -> (ArrayBank, ProbePlan) {
+    let grid = ConductanceGrid::default();
+    let mut bank = ArrayBank::with_reserve(cfg.reserve_cells());
+    let mut rng = Pcg64::new(0x9b0be);
+    bank.program(&vec![20.0; 2048], &grid, &mut rng);
+    let plan = ProbePlan::program(&mut bank, &grid, cfg, &mut rng);
+    (bank, plan)
+}
+
+#[test]
+fn noisy_probes_date_the_device_within_a_decade() {
+    let cfg = ProbeCfg::default();
+    let (bank, plan) = probed_bank(&cfg);
+    let est = AgeEstimator::default();
+    let model = IbmDrift::default();
+    let mut rng = Pcg64::new(17);
+    let mut last = 0.0;
+    for &t in &[3600.0, WEEK, MONTH, YEAR] {
+        let e = est.estimate(&plan, &bank, t, &model, &mut rng);
+        assert!(!e.fallback, "t={t} fell back");
+        let decades =
+            (e.age.ln() - t.ln()).abs() / std::f64::consts::LN_10;
+        assert!(
+            decades < 1.0,
+            "t={t}: estimated {} ({decades:.2} decades off)",
+            e.age
+        );
+        assert!(e.lo <= e.hi, "bounds inverted at t={t}");
+        assert!(e.age > last, "estimate not monotone in true age");
+        last = e.age;
+    }
+}
+
+#[test]
+fn majority_stuck_levels_degrade_gracefully_then_fall_back() {
+    let cfg = ProbeCfg::default();
+    let (mut bank, plan) = probed_bank(&cfg);
+    let est = AgeEstimator::default();
+    let model = IbmDrift::default();
+    let n_levels = plan.levels.len();
+
+    // Kill all but the top two levels: the estimator must keep dating
+    // the device from the survivors (min_levels = 2 exactly).
+    for li in 0..n_levels - 2 {
+        for (ti, r) in plan.level_segs(li) {
+            for cell in r {
+                bank.inject_fault(ti, cell, CellFault::StuckAt(0.0));
+            }
+        }
+    }
+    let e = est.estimate(&plan, &bank, MONTH, &model, &mut Pcg64::new(3));
+    assert!(
+        !e.fallback,
+        "two healthy levels should still be trusted: {e:?}"
+    );
+    assert_eq!(e.used_levels, 2);
+    let decades =
+        (e.age.ln() - MONTH.ln()).abs() / std::f64::consts::LN_10;
+    assert!(decades < 1.0, "degraded estimate {decades:.2} decades off");
+
+    // Kill the rest: total probe loss must flip fallback, not panic.
+    for li in n_levels - 2..n_levels {
+        for (ti, r) in plan.level_segs(li) {
+            for cell in r {
+                bank.inject_fault(ti, cell, CellFault::StuckAt(0.0));
+            }
+        }
+    }
+    let e = est.estimate(&plan, &bank, MONTH, &model, &mut Pcg64::new(3));
+    assert!(e.fallback, "100% stuck probes must defer to the clock");
+    assert_eq!(e.used_levels, 0);
+}

@@ -27,6 +27,8 @@ fn cfg(
         },
         exec_seconds_per_batch: 0.001,
         seed,
+        drift_skew: 1.0,
+        age_source: vera_plus::fleet::AgeSource::Clock,
     }
 }
 

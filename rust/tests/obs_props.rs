@@ -38,6 +38,8 @@ fn fleet_cfg(n_chips: usize, seed: u64) -> FleetConfig {
         },
         exec_seconds_per_batch: 2e-3,
         seed,
+        drift_skew: 1.0,
+        age_source: vera_plus::fleet::AgeSource::Clock,
     }
 }
 

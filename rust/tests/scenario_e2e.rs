@@ -46,6 +46,7 @@ fn fleet_cfg() -> FleetConfig {
         // the fleet so the mid-burst failure redelivers a real backlog.
         exec_seconds_per_batch: 0.02,
         seed: 0xe2e5c,
+        ..FleetConfig::default()
     }
 }
 
@@ -209,6 +210,97 @@ fn scripted_chaos_timeline_meets_acceptance_criteria() {
     for (a, b) in phases.iter().zip(&outcome2.summary.phases) {
         assert_eq!(a.served, b.served);
         assert_eq!(a.requeued, b.requeued);
+    }
+}
+
+/// Mis-modeled-drift acceptance (ISSUE 7): a fleet whose lifetime
+/// clocks under-report true drift 1000x serves with badly stale
+/// compensation sets; the timeline flips the closed-loop estimator on
+/// mid-run (set selection follows the probed age) and accuracy
+/// recovers, then regresses again when the timeline reverts to the
+/// clock. The timeline arrives via the JSON script path, so the CLI
+/// `--script` estimator event is covered end to end, and the whole
+/// run replays bit-identically.
+#[test]
+fn misdrift_script_recovers_accuracy_with_the_estimator() {
+    let rate = 260.0 * CHIPS as f64;
+    let text = format!(
+        r#"{{"seconds": {SECONDS}, "tick": {TICK},
+            "traffic": {{"shape": "constant", "rate": {rate}}},
+            "events": [
+              {{"at": 3.6, "action": "estimator", "on": true}},
+              {{"at": 7.2, "action": "estimator", "on": false}}
+            ]}}"#
+    );
+    let scenario = ScenarioConfig::from_json(
+        &vera_plus::util::json::parse(&text).unwrap(),
+    )
+    .unwrap();
+    // Same shape as the misdrift preset at this scale.
+    let preset = ScenarioConfig::misdrift(CHIPS, SECONDS);
+    assert_eq!(scenario.events.len(), preset.events.len());
+    for (a, b) in scenario.events.iter().zip(&preset.events) {
+        assert_eq!(a.label, b.label);
+    }
+
+    // All chips programmed young together; wall-accelerated aging with
+    // a clock that under-reports true drift by drift_skew.
+    let cfg = FleetConfig {
+        n_chips: CHIPS,
+        t0: 3600.0,
+        stagger: 0.0,
+        accel: 1e6,
+        policy: BalancePolicy::DriftAware,
+        batch: BatchPolicy {
+            max_batch: 16,
+            max_wait: 0.01,
+        },
+        exec_seconds_per_batch: 0.02,
+        seed: 0xe2e5c,
+        drift_skew: 1e3,
+        ..FleetConfig::default()
+    };
+    let profile =
+        AccuracyProfile::synthetic(8, 10.0 * YEAR, 0.9, 0.08, 0.3);
+    let mut fleet = analytic_fleet(&cfg, &profile);
+    let mut wl = Workload::new(0.0, 0xd21f7);
+    let outcome =
+        run_scenario(&mut fleet, &scenario, &mut wl, 512).unwrap();
+
+    let phases = &outcome.summary.phases;
+    assert_eq!(phases.len(), 3, "start + estimator-on + estimator-off");
+    let (clocked, probed, reverted) =
+        (&phases[0], &phases[1], &phases[2]);
+    assert_eq!(probed.name, "estimator-on");
+    assert_eq!(reverted.name, "estimator-off");
+    assert!(clocked.served > 1000, "served {}", clocked.served);
+    assert!(probed.served > 1000, "served {}", probed.served);
+    // The closed loop buys back real accuracy under the mistrusted
+    // clock...
+    assert!(
+        probed.accuracy > clocked.accuracy + 0.05,
+        "clock-phase {} vs estimator-phase {}",
+        clocked.accuracy,
+        probed.accuracy
+    );
+    // ...and the gain disappears when selection reverts to the clock.
+    assert!(
+        reverted.accuracy < probed.accuracy - 0.03,
+        "estimator-phase {} vs reverted {}",
+        probed.accuracy,
+        reverted.accuracy
+    );
+
+    // Deterministic end to end, estimator flips included.
+    let mut fleet2 = analytic_fleet(&cfg, &profile);
+    let mut wl2 = Workload::new(0.0, 0xd21f7);
+    let outcome2 =
+        run_scenario(&mut fleet2, &scenario, &mut wl2, 512).unwrap();
+    assert_eq!(outcome.summary.served, outcome2.summary.served);
+    assert_eq!(outcome.summary.accuracy, outcome2.summary.accuracy);
+    for (a, b) in phases.iter().zip(&outcome2.summary.phases) {
+        assert_eq!(a.served, b.served);
+        assert_eq!(a.accuracy, b.accuracy);
     }
 }
 
