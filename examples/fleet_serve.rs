@@ -9,9 +9,10 @@
 //! and compares fleet-wide accuracy against a single-chip baseline at
 //! the fleet's mean device age (it must match within 2 points — drift
 //! compensation is what makes the heterogeneous fleet behave like a
-//! uniform one). Runs artifact-free on the analytic engine; the same
-//! `Fleet` loop drives real PJRT-backed `Server` chips via
-//! `vera-plus fleet --engine pjrt`.
+//! uniform one). Runs artifact-free on the analytic engine, on the
+//! event-driven deadline scheduler (`Fleet::run_events`, the serving
+//! default); the same scheduler drives real PJRT-backed `Server`
+//! chips via `vera-plus fleet --engine pjrt`.
 //!
 //! Run: `cargo run --release --example fleet_serve`
 
@@ -34,8 +35,8 @@ fn run(cfg: &FleetConfig, profile: &AccuracyProfile, rate: f64)
        -> anyhow::Result<FleetSummary> {
     let mut fleet = analytic_fleet(cfg, profile);
     let mut workload = Workload::new(rate, 5);
-    fleet.run(SECONDS, TICK, &mut workload, 512)?;
-    fleet.flush()?;
+    // Event-driven scheduler (drains terminally; no flush needed).
+    fleet.run_events(SECONDS, TICK, &mut workload, 512)?;
     Ok(fleet.summary())
 }
 

@@ -1,14 +1,24 @@
-//! `cargo bench --bench fleet_scale`: fleet throughput scaling.
+//! `cargo bench --bench fleet_scale`: fleet scheduler scaling.
 //!
-//! Saturates 1-, 4- and 16-chip fleets with the same offered load
-//! (60 k req/s, well above any single chip's 3.2 k req/s capacity at
-//! 16-deep batches / 5 ms per execution) and reports
+//! Benchmarks the event-driven fleet scheduler (`Fleet::run_events`)
+//! against the legacy lockstep tick loop (`Fleet::run`) on saturated
+//! analytic fleets from 1 to 256 chips, and reports
 //!
 //!  - simulated aggregate throughput (requests served per serving
-//!    second) — must grow with chip count, since each added chip adds
-//!    capacity the router can actually reach;
-//!  - host wall time per simulated run (the event-loop overhead the
-//!    fleet layer adds per request).
+//!    second) — must grow with chip count through 1 → 4 → 16, since
+//!    each added chip adds capacity the router can actually reach;
+//!  - host wall time per simulated run. The lockstep loop rebuilds an
+//!    O(n_chips) routing view per request, the event loop routes from
+//!    a lazy score heap in O(log n): parity at 16 chips, and the event
+//!    loop must be strictly faster at 256;
+//!  - admission control: a deliberately overloaded capped fleet whose
+//!    shed rate and conservation (`routed + shed = arrivals`) are
+//!    checked and recorded;
+//!  - a 64-chip chaos-scenario run on the event scheduler, reported
+//!    per phase (p50/p99 latency, throughput, availability, shed).
+//!
+//! Emits the repo-root `BENCH_fleet.json` perf-trajectory point.
+//! Quick mode for CI: set `VERA_BENCH_QUICK=1`.
 //!
 //! Artifact-free: uses the analytic chip engine.
 
@@ -18,11 +28,12 @@ use vera_plus::fleet::{
     analytic_fleet, AccuracyProfile, BalancePolicy, FleetConfig,
 };
 use vera_plus::rram::YEAR;
+use vera_plus::scenario::{run_scenario_events, ScenarioConfig};
 use vera_plus::util::bencher::Bencher;
+use vera_plus::util::json::{arr, num, obj, s, Json};
 
-const OFFERED_RATE: f64 = 60_000.0; // fleet-wide req/s
-const SECONDS: f64 = 2.0;
-const TICK: f64 = 0.1;
+/// Per-chip capacity: 16 / 0.005 = 3 200 req/s.
+const PER_CHIP_CAP: f64 = 3_200.0;
 
 fn config(n_chips: usize) -> FleetConfig {
     FleetConfig {
@@ -35,48 +46,102 @@ fn config(n_chips: usize) -> FleetConfig {
             max_batch: 16,
             max_wait: 0.01,
         },
-        // Per-chip capacity: 16 / 0.005 = 3 200 req/s.
         exec_seconds_per_batch: 0.005,
         seed: 0xbe7c4,
         ..FleetConfig::default()
     }
 }
 
-/// One saturated serving run; returns requests served in-window (no
-/// final flush — throughput under overload is capacity-bound, and the
-/// backlog is precisely what should NOT count).
-fn simulate(n_chips: usize, profile: &AccuracyProfile) -> usize {
+/// Offered load: the historical 60 k req/s through 16 chips (1.17x a
+/// 16-chip fleet's capacity), 1.5x capacity beyond that so the big
+/// fleets stay saturated without unbounded backlog.
+fn offered(n_chips: usize) -> f64 {
+    if n_chips <= 16 {
+        60_000.0
+    } else {
+        1.5 * PER_CHIP_CAP * n_chips as f64
+    }
+}
+
+/// Simulated horizon: long enough to see scaling on the small ladder,
+/// short on the big fleets so a bench iteration stays cheap.
+fn horizon(n_chips: usize) -> f64 {
+    if n_chips <= 16 {
+        2.0
+    } else {
+        0.25
+    }
+}
+
+/// One saturated run on the event scheduler; returns
+/// `(served, serving_wall)`.
+fn simulate_events(
+    n_chips: usize,
+    profile: &AccuracyProfile,
+) -> (usize, f64) {
     let mut fleet = analytic_fleet(&config(n_chips), profile);
-    let mut workload = Workload::new(OFFERED_RATE, 42);
+    let mut workload = Workload::new(offered(n_chips), 42);
     fleet
-        .run(SECONDS, TICK, &mut workload, 512)
+        .run_events(horizon(n_chips), 0.1, &mut workload, 512)
         .expect("analytic fleet cannot fail");
-    fleet.metrics.served
+    (fleet.metrics.served, fleet.metrics.wall)
+}
+
+/// The same run on the legacy lockstep loop (no flush: throughput
+/// under overload is capacity-bound and the backlog must not count).
+fn simulate_lockstep(
+    n_chips: usize,
+    profile: &AccuracyProfile,
+) -> (usize, f64) {
+    let mut fleet = analytic_fleet(&config(n_chips), profile);
+    let mut workload = Workload::new(offered(n_chips), 42);
+    fleet
+        .run(horizon(n_chips), 0.1, &mut workload, 512)
+        .expect("analytic fleet cannot fail");
+    (fleet.metrics.served, fleet.metrics.wall)
 }
 
 fn main() -> anyhow::Result<()> {
     let profile =
         AccuracyProfile::synthetic(11, 10.0 * YEAR, 0.92, 0.02, 0.5);
-    let mut bench = Bencher::quick();
+    let mut bench = if std::env::var("VERA_BENCH_QUICK").is_ok() {
+        Bencher::quick()
+    } else {
+        Bencher::default()
+    };
+    let mut sim_rows: Vec<Json> = Vec::new();
 
-    let mut throughputs = Vec::new();
-    for &n in &[1usize, 4, 16] {
-        let served = simulate(n, &profile);
-        let sim_tput = served as f64 / SECONDS;
+    // Event-scheduler ladder. Scaling must be visible through the
+    // saturated small ladder: each 4x in chips buys >2x throughput.
+    let mut small_tputs: Vec<(usize, f64)> = Vec::new();
+    for &n in &[1usize, 4, 16, 64, 256] {
+        let (served, wall) = simulate_events(n, &profile);
+        let sim_tput = served as f64 / wall;
         println!(
-            "chips={n:<3} served {served:>7} in {SECONDS}s sim -> \
-             aggregate {sim_tput:>9.0} req/s \
-             (per-chip cap 3200 req/s, offered {OFFERED_RATE:.0})"
+            "events   chips={n:<3} served {served:>7} in {:>5.2}s sim \
+             -> aggregate {sim_tput:>9.0} req/s (per-chip cap \
+             {PER_CHIP_CAP:.0}, offered {:.0})",
+            wall,
+            offered(n),
         );
-        throughputs.push((n, sim_tput));
-        bench.bench(&format!("fleet_event_loop/{n}_chips"), || {
-            std::hint::black_box(simulate(n, &profile));
-        });
+        if n <= 16 {
+            small_tputs.push((n, sim_tput));
+        }
+        sim_rows.push(obj(vec![
+            ("scheduler", s("events")),
+            ("chips", num(n as f64)),
+            ("served", num(served as f64)),
+            ("sim_throughput_req_s", num(sim_tput)),
+        ]));
+        bench.bench_items(
+            &format!("fleet_events/{n}_chips"),
+            served as f64,
+            || {
+                std::hint::black_box(simulate_events(n, &profile));
+            },
+        );
     }
-
-    // Scaling must be visible: each 4x in chips buys >2x throughput
-    // until the offered load itself saturates.
-    for pair in throughputs.windows(2) {
+    for pair in small_tputs.windows(2) {
         let ((n0, t0), (n1, t1)) = (pair[0], pair[1]);
         assert!(
             t1 > t0 * 2.0,
@@ -87,25 +152,153 @@ fn main() -> anyhow::Result<()> {
     println!(
         "aggregate throughput scales {:.0} -> {:.0} -> {:.0} req/s \
          across 1 -> 4 -> 16 chips",
-        throughputs[0].1, throughputs[1].1, throughputs[2].1
+        small_tputs[0].1, small_tputs[1].1, small_tputs[2].1
     );
 
-    // Host-side event-loop cost: the same saturated 16-chip run with
-    // the chip-service fan-out pinned to one thread vs the machine
-    // default. Simulated results are bit-identical either way; only
-    // host wall time differs.
-    std::env::set_var("VERA_THREADS", "1");
-    let serial = bench.bench("fleet_event_loop/16_chips/1_thread", || {
-        std::hint::black_box(simulate(16, &profile));
-    });
-    std::env::remove_var("VERA_THREADS");
-    if let Some(par) = bench.find("fleet_event_loop/16_chips") {
-        println!(
-            "event-loop thread fan-out speedup at 16 chips: {:.2}x",
-            serial.median_ns / par.median_ns
+    // Lockstep baseline at the parity point (16) and the scaling
+    // cliff (256), where its per-request O(n_chips) routing-view scan
+    // dominates.
+    for &n in &[16usize, 256] {
+        let (served, wall) = simulate_lockstep(n, &profile);
+        sim_rows.push(obj(vec![
+            ("scheduler", s("lockstep")),
+            ("chips", num(n as f64)),
+            ("served", num(served as f64)),
+            ("sim_throughput_req_s", num(served as f64 / wall)),
+        ]));
+        bench.bench_items(
+            &format!("fleet_lockstep/{n}_chips"),
+            served as f64,
+            || {
+                std::hint::black_box(simulate_lockstep(n, &profile));
+            },
         );
     }
+    let ratio = |a: &str, b: &str| {
+        bench.find(a).unwrap().median_ns / bench.find(b).unwrap().median_ns
+    };
+    let r16 = ratio("fleet_events/16_chips", "fleet_lockstep/16_chips");
+    let r256 = ratio("fleet_events/256_chips", "fleet_lockstep/256_chips");
+    println!(
+        "event-vs-lockstep host wall: {r16:.2}x at 16 chips, \
+         {r256:.2}x at 256 chips (lower is better)"
+    );
+    assert!(
+        r16 < 1.5,
+        "event loop must hold parity with lockstep at 16 chips \
+         (got {r16:.2}x)"
+    );
+    assert!(
+        r256 < 1.0,
+        "event loop must beat lockstep at 256 chips (got {r256:.2}x)"
+    );
 
+    // Admission control: 4 chips capped at 64 queued each, offered
+    // ~5x capacity. The cap must shed, and conservation must hold.
+    {
+        let mut fleet = analytic_fleet(&config(4), &profile);
+        fleet.set_queue_cap(64);
+        let mut workload = Workload::new(64_000.0, 42);
+        let comps = fleet
+            .run_events(0.5, 0.1, &mut workload, 512)
+            .expect("capped fleet cannot fail");
+        let m = &fleet.metrics;
+        assert!(m.shed > 0, "5x overload through a 64-deep cap must shed");
+        assert_eq!(
+            comps.len(),
+            m.total_routed(),
+            "admitted set must complete exactly once"
+        );
+        let shed_rate = m.shed as f64 / (m.shed + m.total_routed()) as f64;
+        println!(
+            "backpressure: 4 chips, qcap 64, 64k req/s offered -> \
+             shed {} of {} arrivals ({:.1}%)",
+            m.shed,
+            m.shed + m.total_routed(),
+            100.0 * shed_rate,
+        );
+        sim_rows.push(obj(vec![
+            ("scheduler", s("events+qcap64")),
+            ("chips", num(4.0)),
+            ("served", num(m.served as f64)),
+            ("shed", num(m.shed as f64)),
+            ("shed_rate", num(shed_rate)),
+        ]));
+    }
+
+    // 64-chip chaos scenario on the event scheduler: the per-phase
+    // serving report (latency percentiles, throughput, availability,
+    // shed) that lands in BENCH_fleet.json.
+    let phases: Vec<Json> = {
+        let cfg = ScenarioConfig::chaos(64, 2.0);
+        let mut fleet = analytic_fleet(&config(64), &profile);
+        let mut workload = Workload::new(0.0, 0xbe7c4 ^ 0x57a6);
+        let out = run_scenario_events(&mut fleet, &cfg, &mut workload, 512)?;
+        println!();
+        out.summary.print();
+        out.summary
+            .phases
+            .iter()
+            .map(|p| {
+                obj(vec![
+                    ("name", s(&p.name)),
+                    ("start_s", num(p.start)),
+                    ("end_s", num(p.end)),
+                    ("served", num(p.served as f64)),
+                    ("p50_latency_s", num(p.p50_latency)),
+                    ("p99_latency_s", num(p.p99_latency)),
+                    ("throughput_req_s", num(p.throughput)),
+                    ("availability", num(p.availability)),
+                    ("shed", num(p.shed as f64)),
+                    ("shed_rate", num(p.shed_rate)),
+                ])
+            })
+            .collect()
+    };
+
+    // Perf trajectory point at the repo root: bench rows + the
+    // event-vs-lockstep speedups + simulated serving numbers + the
+    // 64-chip chaos phase table.
+    let rows: Vec<Json> = bench
+        .results
+        .iter()
+        .map(|r| {
+            obj(vec![
+                ("name", s(&r.name)),
+                ("iters", num(r.iters as f64)),
+                ("median_ns", num(r.median_ns)),
+                ("mean_ns", num(r.mean_ns)),
+                ("p10_ns", num(r.p10_ns)),
+                ("p90_ns", num(r.p90_ns)),
+                ("items_per_iter", num(r.items_per_iter)),
+                ("ns_per_item", num(r.ns_per_item())),
+            ])
+        })
+        .collect();
+    let speedups: Vec<Json> = [
+        ("fleet_events/16_chips", "fleet_lockstep/16_chips"),
+        ("fleet_events/256_chips", "fleet_lockstep/256_chips"),
+    ]
+    .iter()
+    .map(|&(stage, baseline)| {
+        obj(vec![
+            ("stage", s(stage)),
+            ("baseline", s(baseline)),
+            ("speedup", num(ratio(baseline, stage))),
+        ])
+    })
+    .collect();
+    let out = obj(vec![
+        ("bench", s("fleet_scale")),
+        ("rows", arr(rows)),
+        ("speedups", arr(speedups)),
+        ("sim", arr(sim_rows)),
+        ("chaos_64chip_phases", arr(phases)),
+    ]);
+    let root_json =
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_fleet.json");
+    std::fs::write(root_json, out.to_string_pretty())?;
+    println!("perf trajectory point written to {root_json}");
     bench.write_json("fleet_scale")?;
     Ok(())
 }

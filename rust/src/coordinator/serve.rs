@@ -391,6 +391,34 @@ impl Server {
         self.queue.push_back(req);
     }
 
+    /// Ratchet the serving wall forward to the fleet's authoritative
+    /// time axis. Per-chip walls only ever advance via arrivals and
+    /// executions, so without this a lightly-loaded chip's wall lags
+    /// the fleet clock and its latency measurements sit on a different
+    /// axis than its neighbors'. The fleet loop calls this at every
+    /// window/event boundary; the ratchet (never backwards) keeps the
+    /// submit-time alignment above intact.
+    pub fn align_wall(&mut self, wall: f64) {
+        if wall > self.wall {
+            self.wall = wall;
+        }
+    }
+
+    /// Arrival time of the oldest queued request (the deadline-aware
+    /// batcher closes a batch at `oldest_arrival + max_wait`).
+    pub fn oldest_arrival(&self) -> Option<f64> {
+        self.queue.front().map(|r| r.arrival_wall)
+    }
+
+    /// Remove and return up to `n` requests from the TAIL of the queue
+    /// (the newest ones, relative order preserved) — work stealing
+    /// hands them to an idle chip while the oldest requests keep their
+    /// position here.
+    pub fn steal_tail(&mut self, n: usize) -> Vec<Request> {
+        let keep = self.queue.len().saturating_sub(n);
+        self.queue.split_off(keep).into_iter().collect()
+    }
+
     /// Remove and return every queued request (oldest first) without
     /// executing — the fleet failover path redelivers them elsewhere.
     pub fn take_queue(&mut self) -> Vec<Request> {
@@ -509,16 +537,20 @@ impl Server {
         }
         let _span = obs::span("serve.step", "serve");
         let set_index = self.route();
-        // Take up to max_batch requests (oldest first).
-        let take = self.queue.len().min(self.policy.max_batch);
+        // Take up to max_batch requests (oldest first). Pick the
+        // smallest lowered graph that fits and pad the remainder; a
+        // partial batch no longer pays for a full `max_batch`
+        // invocation. When every lowered graph is SMALLER than the
+        // intended take, the batch splits: this invocation runs the
+        // largest available graph full, the rest stays queued for the
+        // next step.
+        let want = self.queue.len().min(self.policy.max_batch);
+        let exec_batch =
+            pick_exec_batch(&self.graph_batches, want,
+                            self.policy.max_batch);
+        let take = want.min(exec_batch);
         let batch: Vec<Request> =
             self.queue.drain(..take).collect();
-        // Pick the smallest lowered graph that fits this batch and pad
-        // the remainder; a partial batch no longer pays for a full
-        // `max_batch` invocation.
-        let exec_batch =
-            pick_exec_batch(&self.graph_batches, batch.len(),
-                            self.policy.max_batch);
         let pad = exec_batch - batch.len();
         let indices: Vec<usize> = batch
             .iter()
@@ -548,16 +580,27 @@ impl Server {
         let mut completions = Vec::with_capacity(batch.len());
         for (i, req) in batch.iter().enumerate() {
             let latency = self.wall - req.arrival_wall;
+            // The serving wall and the arrival timeline are one axis
+            // (submit ratchets forward, the fleet aligns at window
+            // start): a negative latency means a time-accounting bug
+            // upstream, not a value to clamp away.
+            debug_assert!(
+                latency >= -1e-9,
+                "negative latency {latency}: arrival_wall {} \
+                 vs serving wall {}",
+                req.arrival_wall,
+                self.wall
+            );
             self.metrics.served += 1;
             if per_row[i] {
                 self.metrics.correct += 1;
             }
-            self.metrics.latencies.record(latency.max(0.0));
-            obs::hist_record("serve.latency_ms", latency.max(0.0) * 1e3);
+            self.metrics.latencies.record(latency);
+            obs::hist_record("serve.latency_ms", latency * 1e3);
             completions.push(Completion {
                 id: req.id,
                 correct: per_row[i],
-                latency: latency.max(0.0),
+                latency,
                 batch_size: batch.len(),
                 set_index,
             });
@@ -576,7 +619,11 @@ impl Server {
 /// the smallest available graph that fits and respects `max_batch`;
 /// else the smallest available graph that fits at all (some
 /// configurations only lower one large graph — padding to it beats
-/// failing on a nonexistent `max_batch` key); else `max_batch`.
+/// failing on a nonexistent `max_batch` key); else the LARGEST
+/// available graph (the caller splits the batch across invocations —
+/// resolving to a `max_batch` graph that was never lowered only
+/// produces a "no graph" error at execution). Only with no inventory
+/// at all does the policy batch win.
 pub(crate) fn pick_exec_batch(
     available: &[usize],
     len: usize,
@@ -587,6 +634,7 @@ pub(crate) fn pick_exec_batch(
         .copied()
         .find(|&b| b >= len && b <= max_batch)
         .or_else(|| available.iter().copied().find(|&b| b >= len))
+        .or_else(|| available.last().copied())
         .unwrap_or(max_batch)
 }
 
@@ -628,27 +676,52 @@ impl Workload {
     }
 
     /// Generate arrivals for the next `dt` wall-seconds at device age
-    /// provided by `clock`.
+    /// provided by `clock`. Equivalent to draining
+    /// [`next_before`](Self::next_before)`(wall + dt)` — same RNG call
+    /// order, same stream.
     pub fn arrivals(&mut self, dt: f64, clock: &LifetimeClock,
                     test_len: usize) -> Vec<Request> {
-        let mut out = Vec::new();
         let end = self.wall + dt;
-        loop {
-            let gap = -self.rng.uniform().max(1e-12).ln() / self.rate;
-            if self.wall + gap > end {
-                self.wall = end;
-                break;
-            }
-            self.wall += gap;
-            out.push(Request {
-                id: self.next_id,
-                sample: self.rng.below(test_len),
-                arrival_age: clock.device_age(),
-                arrival_wall: self.wall,
-            });
-            self.next_id += 1;
+        let mut out = Vec::new();
+        while let Some(req) = self.next_before(end, clock, test_len) {
+            out.push(req);
         }
         out
+    }
+
+    /// Draw the next Poisson arrival at the current `rate`, if it lands
+    /// at or before `horizon` on the workload wall. A gap that
+    /// overshoots is discarded and the wall jumps to `horizon` (exactly
+    /// as the batch generator always did at window ends), so repeated
+    /// calls against a tick grid consume the RNG stream identically to
+    /// [`arrivals`](Self::arrivals) — one uniform per gap, one draw per
+    /// sample. The event-driven fleet loop uses this to turn arrivals
+    /// into individually-timed queue events.
+    pub fn next_before(
+        &mut self,
+        horizon: f64,
+        clock: &LifetimeClock,
+        test_len: usize,
+    ) -> Option<Request> {
+        let gap = -self.rng.uniform().max(1e-12).ln() / self.rate;
+        if self.wall + gap > horizon {
+            self.wall = horizon;
+            return None;
+        }
+        self.wall += gap;
+        let req = Request {
+            id: self.next_id,
+            sample: self.rng.below(test_len),
+            arrival_age: clock.device_age(),
+            arrival_wall: self.wall,
+        };
+        self.next_id += 1;
+        Some(req)
+    }
+
+    /// Current position on the workload's wall axis (seconds).
+    pub fn wall(&self) -> f64 {
+        self.wall
     }
 
     /// Acceptance check: `accuracy_of` vs per-row scoring must agree.
@@ -704,8 +777,153 @@ mod tests {
         assert_eq!(pick_exec_batch(&avail, 33, 64), 256);
         // No lowered graphs known: fall back to the policy batch.
         assert_eq!(pick_exec_batch(&[], 5, 32), 32);
-        // Nothing large enough: fall back to the policy batch.
-        assert_eq!(pick_exec_batch(&[1, 8], 9, 16), 16);
+        // Nothing large enough: the largest AVAILABLE graph (the
+        // caller splits the batch), never a nonexistent max_batch key.
+        assert_eq!(pick_exec_batch(&[1, 8], 9, 16), 8);
+        assert_eq!(pick_exec_batch(&[1, 8], 100, 512), 8);
+    }
+
+    /// Satellite regression: a manifest whose lowered batches exclude
+    /// `max_batch` (testkit lowers only b256) must split oversized
+    /// batches across the largest available graph instead of resolving
+    /// a nonexistent `comp_*_b{max_batch}` key and erroring.
+    #[test]
+    fn oversized_batch_splits_across_available_graphs() {
+        use crate::compensation::{CompSet, SetStore};
+        use crate::rram::IbmDrift;
+        use crate::util::testkit::{
+            native_deployment, NATIVE_MODEL, NATIVE_TEST_LEN,
+        };
+        let dep = Arc::new(native_deployment(
+            1,
+            23,
+            Box::new(IbmDrift::default()),
+        ));
+        let mut store = SetStore::new(NATIVE_MODEL, "veraplus", 1, 23);
+        store.insert(CompSet {
+            t_start: 1.0,
+            trainables: dep.fresh_trainables(5),
+            train_loss: 0.0,
+            accuracy: 0.9,
+        });
+        // max_batch 512 > the only lowered graph (b256): the old
+        // fallback resolved comp_veraplus_r1_b512 and failed at
+        // execution.
+        let mut srv = Server::new(
+            Arc::clone(&dep),
+            Arc::new(store),
+            LifetimeClock::new(1.0, 1.0),
+            BatchPolicy {
+                max_batch: 512,
+                max_wait: 0.01,
+            },
+            7,
+        );
+        for i in 0..600u64 {
+            srv.submit(Request {
+                id: i,
+                sample: i as usize % NATIVE_TEST_LEN,
+                arrival_age: 1.0,
+                arrival_wall: 0.0,
+            });
+        }
+        let comps = srv.drain(0.001).expect(
+            "oversized batches must split, not resolve a \
+             nonexistent lowered graph",
+        );
+        assert_eq!(comps.len(), 600);
+        assert_eq!(srv.metrics.served, 600);
+        // 256 + 256 + 88(padded) — three invocations, all on the one
+        // graph that actually exists.
+        assert_eq!(srv.metrics.batches, 3);
+        assert_eq!(srv.metrics.graph_execs.len(), 1);
+        assert_eq!(
+            srv.metrics.graph_execs.get("comp_veraplus_r1_b256"),
+            Some(&3)
+        );
+        // Split batches stay oldest-first and exactly-once.
+        let mut ids: Vec<u64> = comps.iter().map(|c| c.id).collect();
+        ids.sort_unstable();
+        assert!(ids.iter().copied().eq(0..600));
+    }
+
+    /// The event loop's one-at-a-time arrival API consumes the RNG
+    /// stream identically to the batch generator over the same tick
+    /// grid: same gaps, same samples, same ids.
+    #[test]
+    fn next_before_matches_batched_arrivals() {
+        let clock = LifetimeClock::new(1.0, 1.0);
+        let mut batch_wl = Workload::new(250.0, 42);
+        let mut event_wl = Workload::new(250.0, 42);
+        let mut batched = Vec::new();
+        let mut evented = Vec::new();
+        for w in 0..3 {
+            batched.extend(batch_wl.arrivals(0.1, &clock, 64));
+            let end = (w + 1) as f64 * 0.1;
+            while let Some(r) = event_wl.next_before(end, &clock, 64) {
+                evented.push(r);
+            }
+            assert_eq!(event_wl.wall(), batch_wl.wall());
+        }
+        assert!(batched.len() > 40, "arrivals {}", batched.len());
+        assert_eq!(batched.len(), evented.len());
+        for (a, b) in batched.iter().zip(&evented) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.sample, b.sample);
+            assert_eq!(a.arrival_wall.to_bits(), b.arrival_wall.to_bits());
+        }
+    }
+
+    /// Satellite regression: chip walls ratchet onto the fleet's time
+    /// axis; tail-stealing takes the newest requests and keeps order.
+    #[test]
+    fn wall_alignment_and_tail_stealing() {
+        use crate::compensation::{CompSet, SetStore};
+        use crate::rram::IbmDrift;
+        use crate::util::testkit::{native_deployment, NATIVE_MODEL};
+        let dep = Arc::new(native_deployment(
+            1,
+            29,
+            Box::new(IbmDrift::default()),
+        ));
+        let mut store = SetStore::new(NATIVE_MODEL, "veraplus", 1, 29);
+        store.insert(CompSet {
+            t_start: 1.0,
+            trainables: dep.fresh_trainables(5),
+            train_loss: 0.0,
+            accuracy: 0.9,
+        });
+        let mut srv = Server::new(
+            dep,
+            Arc::new(store),
+            LifetimeClock::new(1.0, 1.0),
+            BatchPolicy::default(),
+            7,
+        );
+        assert_eq!(srv.oldest_arrival(), None);
+        srv.align_wall(2.0);
+        assert_eq!(srv.wall(), 2.0);
+        // Ratchet only — never backwards.
+        srv.align_wall(1.0);
+        assert_eq!(srv.wall(), 2.0);
+        for i in 0..6u64 {
+            srv.submit(Request {
+                id: i,
+                sample: 0,
+                arrival_age: 1.0,
+                arrival_wall: 2.0 + i as f64 * 0.01,
+            });
+        }
+        assert_eq!(srv.oldest_arrival(), Some(2.0));
+        let stolen = srv.steal_tail(2);
+        assert_eq!(
+            stolen.iter().map(|r| r.id).collect::<Vec<_>>(),
+            vec![4, 5]
+        );
+        assert_eq!(srv.queue_len(), 4);
+        // Stealing more than remains empties the queue, no panic.
+        assert_eq!(srv.steal_tail(100).len(), 4);
+        assert_eq!(srv.steal_tail(1).len(), 0);
     }
 
     #[test]

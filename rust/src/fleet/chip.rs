@@ -57,6 +57,34 @@ pub trait ChipEngine: Send {
     /// chip's backlog is redelivered exactly once.
     fn take_queue(&mut self) -> Vec<Request>;
 
+    /// Ratchet the chip's serving wall forward to the fleet's
+    /// authoritative time axis (never backwards). Keeps every chip's
+    /// latency measurements on the one fleet clock instead of a
+    /// per-chip axis that only advances on arrivals and executions.
+    /// Default no-op for engines without a wall.
+    fn align_wall(&mut self, _wall: f64) {}
+
+    /// Arrival wall time of the oldest queued request — the
+    /// deadline-aware batcher closes a batch at
+    /// `oldest_arrival + max_wait`. `None` when the engine has no
+    /// queue introspection (the event loop then falls back to
+    /// now-relative deadlines).
+    fn oldest_arrival(&self) -> Option<f64> {
+        None
+    }
+
+    /// Remove up to `n` requests from the TAIL of the queue (newest
+    /// first removed, relative order preserved) for work stealing.
+    /// Default: refuse to be stolen from.
+    fn steal_tail(&mut self, _n: usize) -> Vec<Request> {
+        Vec::new()
+    }
+
+    /// The chip's batching policy: the event-driven fleet loop reads
+    /// `max_batch` (size trigger) and `max_wait` (deadline budget) to
+    /// schedule batch-close events.
+    fn batch_policy(&self) -> &BatchPolicy;
+
     /// Reprogramming/refresh campaign: the arrays are rewritten, which
     /// resets the programming-age clock to `t0` (the drift clock the
     /// scheduler keys on restarts) and drops the active compensation
@@ -139,6 +167,22 @@ impl ChipEngine for Server {
 
     fn take_queue(&mut self) -> Vec<Request> {
         Server::take_queue(self)
+    }
+
+    fn align_wall(&mut self, wall: f64) {
+        Server::align_wall(self, wall);
+    }
+
+    fn oldest_arrival(&self) -> Option<f64> {
+        Server::oldest_arrival(self)
+    }
+
+    fn steal_tail(&mut self, n: usize) -> Vec<Request> {
+        Server::steal_tail(self, n)
+    }
+
+    fn batch_policy(&self) -> &BatchPolicy {
+        &self.policy
     }
 
     fn refresh(&mut self, t0: f64) {
@@ -280,7 +324,14 @@ impl AnalyticEngine {
         let mut out = Vec::with_capacity(batch.len());
         for req in &batch {
             let correct = self.rng.uniform() < p;
-            let latency = (self.wall - req.arrival_wall).max(0.0);
+            let latency = self.wall - req.arrival_wall;
+            debug_assert!(
+                latency >= -1e-9,
+                "negative latency {latency}: arrival_wall {} \
+                 vs serving wall {}",
+                req.arrival_wall,
+                self.wall
+            );
             self.metrics.served += 1;
             if correct {
                 self.metrics.correct += 1;
@@ -347,6 +398,25 @@ impl ChipEngine for AnalyticEngine {
 
     fn take_queue(&mut self) -> Vec<Request> {
         self.queue.drain(..).collect()
+    }
+
+    fn align_wall(&mut self, wall: f64) {
+        if wall > self.wall {
+            self.wall = wall;
+        }
+    }
+
+    fn oldest_arrival(&self) -> Option<f64> {
+        self.queue.front().map(|r| r.arrival_wall)
+    }
+
+    fn steal_tail(&mut self, n: usize) -> Vec<Request> {
+        let keep = self.queue.len().saturating_sub(n);
+        self.queue.split_off(keep).into_iter().collect()
+    }
+
+    fn batch_policy(&self) -> &BatchPolicy {
+        &self.policy
     }
 
     fn refresh(&mut self, t0: f64) {
@@ -520,6 +590,37 @@ mod tests {
         ChipEngine::submit(&mut clocked, req(9000, 0.0));
         let c = clocked.drain_budgeted(1, 1e-6).unwrap();
         assert_eq!(c[0].set_index, 1);
+    }
+
+    /// Satellite regression: latency is measured on the unified fleet
+    /// axis. A request that arrived at t=1.0 into a chip whose own
+    /// wall never advanced past 1.0 has STILL waited while the fleet
+    /// clock ran to 3.0 — aligning the wall surfaces that queueing
+    /// delay instead of silently under-reporting it.
+    #[test]
+    fn aligned_wall_pins_queueing_delay_on_the_fleet_axis() {
+        let mut e = engine(1.0);
+        ChipEngine::submit(&mut e, req(0, 1.0));
+        ChipEngine::align_wall(&mut e, 3.0);
+        let comps = e.drain_budgeted(usize::MAX, 0.25).unwrap();
+        assert!((comps[0].latency - 2.25).abs() < 1e-9);
+        // The ratchet never rewinds the wall.
+        ChipEngine::align_wall(&mut e, 0.5);
+        ChipEngine::submit(&mut e, req(1, 3.25));
+        let comps = e.drain_budgeted(usize::MAX, 0.25).unwrap();
+        assert!((comps[0].latency - 0.25).abs() < 1e-9);
+        // Tail stealing removes the newest block, order preserved,
+        // leaving the oldest arrival in place for deadline batching.
+        for i in 0..5 {
+            ChipEngine::submit(&mut e, req(10 + i, 3.5));
+        }
+        let stolen = ChipEngine::steal_tail(&mut e, 2);
+        assert_eq!(
+            stolen.iter().map(|r| r.id).collect::<Vec<_>>(),
+            vec![13, 14]
+        );
+        assert_eq!(ChipEngine::oldest_arrival(&e), Some(3.5));
+        assert_eq!(ChipEngine::queue_len(&e), 3);
     }
 
     #[test]

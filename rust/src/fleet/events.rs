@@ -1,0 +1,1140 @@
+//! Event-driven fleet scheduler: a continuous-time replacement for the
+//! lockstep tick loop.
+//!
+//! The lockstep loop ([`Fleet::tick`]) is a barrier machine: every tick
+//! it routes the whole arrival window, then drains every chip, then
+//! ages everything — O(n_chips) of work per tick whether or not a chip
+//! has anything to do, and per-request timing quantized to the tick.
+//! Fine at 6 chips, wrong at hundreds. This module replaces it with a
+//! binary-heap event queue over three event kinds:
+//!
+//! - **Arrival** — one Poisson arrival, drawn one-ahead from
+//!   [`Workload::next_before`] so the generator's RNG stream is
+//!   consumed identically to the batched `arrivals()` grid;
+//! - **BatchClose** — the deadline-aware batcher: a partial batch is
+//!   closed at `oldest_arrival + max_wait` (size `max_batch` closes it
+//!   immediately), at which point [`ChipEngine::step`] picks the
+//!   smallest fitting lowered graph via `pick_exec_batch`;
+//! - **ExecComplete** — the chip finishes a batch `exec_seconds` after
+//!   it started; completions are delivered, the next batch starts, and
+//!   an idle chip with an empty queue tries to **steal** the tail of
+//!   the longest over-capacity queue.
+//!
+//! Lifecycle/scenario timeline actions are events on the same clock:
+//! the scenario engine cuts its windows at the action timestamps, so an
+//! action lands between two heap events exactly where its time orders
+//! it (see [`crate::scenario`]).
+//!
+//! **Determinism.** The loop is serial — chips execute at distinct
+//! event times, so there is nothing to fan out — which makes runs
+//! bit-reproducible across `VERA_THREADS` by construction. Heap ties
+//! break by a monotone sequence number, so event order is a pure
+//! function of the seed: `(time, seq)` is unique per event.
+//!
+//! **Routing cost.** Instead of the lockstep router's O(n_chips) scan
+//! per request, the loop keeps a lazy max-heap of per-chip route scores
+//! (drift-aware: `predicted_acc − queue_penalty · queue_len`;
+//! least-queue: `−queue_len`). Every chip-touching event bumps the
+//! chip's stamp and pushes a fresh entry; stale entries are discarded
+//! on pop. Scores are therefore exact as of the chip's last touch —
+//! between touches a chip's predicted accuracy can drift slightly
+//! without re-scoring, a documented (and tiny: ages move per-event, not
+//! per-year) staleness in exchange for O(log n) routing.
+//!
+//! **Backpressure.** With [`Fleet::set_queue_cap`] set, an arrival
+//! routed to a chip whose queue is at the cap is shed: dropped,
+//! counted in [`FleetMetrics::shed`], never routed — so
+//! `routed + shed = arrivals` and conservation checks stay exact over
+//! the admitted set.
+//!
+//! **Aging.** Chips age lazily: `aged_to[i]` records the wall covered
+//! by chip `i`'s lifetime clock. Execution ages the chip through
+//! [`ChipEngine::step`]; idle gaps are covered on demand (at exec
+//! start, at tick samples, and at drain end), so total coverage per
+//! chip is exactly the elapsed wall — same lockstep-aging invariant as
+//! the tick loop, without the per-tick barrier.
+//!
+//! **Failure.** A batch in flight when its chip fails still delivers —
+//! the execution already happened on-device — but a failed chip starts
+//! nothing new. If a step errors, completions already produced this
+//! run are parked in `Fleet::pending` and redelivered by the next
+//! successful run: exactly-once across mid-flush failures.
+
+use crate::coordinator::serve::{Completion, Request, Workload};
+use crate::fleet::chip::ChipEngine;
+use crate::fleet::router::BalancePolicy;
+use crate::fleet::{ChipState, Fleet, FleetCompletion};
+use crate::obs;
+use crate::util::json::num;
+use anyhow::Result;
+use std::cmp::Ordering;
+use std::collections::{BTreeSet, BinaryHeap};
+
+/// What happens at an event time.
+#[derive(Debug)]
+enum EventKind {
+    /// One workload arrival reaches the router.
+    Arrival(Request),
+    /// Deadline batcher: close chip's partial batch if this deadline
+    /// is still the live one (stale closes are ignored).
+    BatchClose { chip: usize, deadline: f64 },
+    /// Chip finishes the batch it started `exec_seconds` ago.
+    ExecComplete { chip: usize },
+}
+
+/// Heap entry: events order by `(time, seq)` — `seq` is assigned
+/// monotonically at push, so ties are FIFO and the whole order is a
+/// pure function of the seed (bit-reproducible replays).
+#[derive(Debug)]
+struct Event {
+    time: f64,
+    seq: u64,
+    kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Inverted: BinaryHeap is a max-heap, we pop earliest-first.
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Lazy route-heap entry. Max-heap on score; ties break to the LOWEST
+/// chip index (same contract as [`crate::fleet::Router::route`]).
+#[derive(Debug)]
+struct RouteEntry {
+    score: f64,
+    stamp: u64,
+    chip: usize,
+}
+
+impl PartialEq for RouteEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.score == other.score && self.chip == other.chip
+    }
+}
+impl Eq for RouteEntry {}
+impl PartialOrd for RouteEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for RouteEntry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.score
+            .partial_cmp(&other.score)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.chip.cmp(&self.chip))
+    }
+}
+
+/// The event-driven scheduler over a borrowed fleet. Owns the event
+/// heap and per-chip scheduling state; the fleet keeps the chips,
+/// router policy and metrics. One `EventLoop` spans one run (or one
+/// scenario, across phases) — construct, run windows, drain.
+pub struct EventLoop<'a, E: ChipEngine> {
+    fleet: &'a mut Fleet<E>,
+    test_len: usize,
+    heap: BinaryHeap<Event>,
+    seq: u64,
+    /// Current position on the fleet wall axis (absolute seconds,
+    /// shared with the workload generator — the unified clock the
+    /// latency fix keys on).
+    now: f64,
+    /// Arrival draw horizon (current window end).
+    horizon: f64,
+    /// One arrival is drawn ahead and sits in the heap.
+    arrival_pending: bool,
+    /// Chip is mid-execution (its ExecComplete is in the heap).
+    busy: Vec<bool>,
+    /// Completions produced at exec start, delivered at ExecComplete.
+    held: Vec<Vec<Completion>>,
+    /// The live batch-close deadline per chip (stale heap entries
+    /// carry a different value and are ignored).
+    deadline: Vec<Option<f64>>,
+    /// Wall time covered by each chip's lifetime clock (lazy aging).
+    aged_to: Vec<f64>,
+    /// Route-score versions: a popped entry with a stale stamp is
+    /// discarded.
+    stamp: Vec<u64>,
+    routes: BinaryHeap<RouteEntry>,
+    /// Chips whose queue exceeds their own max_batch — the only
+    /// stealing victims, kept as a set so the common no-backlog case
+    /// costs nothing.
+    over_cap: BTreeSet<usize>,
+    /// Round-robin cursor (only used under that policy).
+    rr_next: usize,
+    /// Cached per-chip batch policy (static over a run).
+    max_batch: Vec<usize>,
+    max_wait: Vec<f64>,
+}
+
+impl<'a, E: ChipEngine> EventLoop<'a, E> {
+    /// Start a scheduler at `start` on the wall axis (pass the
+    /// workload's current wall so arrivals and chip walls share one
+    /// clock).
+    pub fn new(
+        fleet: &'a mut Fleet<E>,
+        test_len: usize,
+        start: f64,
+    ) -> EventLoop<'a, E> {
+        let n = fleet.chips.len();
+        let max_batch: Vec<usize> = fleet
+            .chips
+            .iter()
+            .map(|c| c.batch_policy().max_batch)
+            .collect();
+        let max_wait: Vec<f64> = fleet
+            .chips
+            .iter()
+            .map(|c| c.batch_policy().max_wait)
+            .collect();
+        let mut ev = EventLoop {
+            fleet,
+            test_len,
+            heap: BinaryHeap::new(),
+            seq: 0,
+            now: start,
+            horizon: start,
+            arrival_pending: false,
+            busy: vec![false; n],
+            held: vec![Vec::new(); n],
+            deadline: vec![None; n],
+            aged_to: vec![start; n],
+            stamp: vec![0; n],
+            routes: BinaryHeap::new(),
+            over_cap: BTreeSet::new(),
+            rr_next: 0,
+            max_batch,
+            max_wait,
+        };
+        for i in 0..n {
+            ev.touch(i);
+            ev.update_over_cap(i);
+        }
+        ev
+    }
+
+    /// Current position on the wall axis.
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// The underlying fleet (scenario engine: metrics, lifecycle).
+    pub fn fleet(&self) -> &Fleet<E> {
+        self.fleet
+    }
+
+    /// Mutable fleet access for timeline actions. Call
+    /// [`resync`](Self::resync) afterwards so the scheduler re-reads
+    /// queue depths and lifecycle states.
+    pub fn fleet_mut(&mut self) -> &mut Fleet<E> {
+        self.fleet
+    }
+
+    fn push(&mut self, time: f64, kind: EventKind) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Event { time, seq, kind });
+    }
+
+    /// Re-score chip `i` in the route heap (bump stamp, push fresh
+    /// entry). Called after every queue/lifecycle/era change.
+    fn touch(&mut self, i: usize) {
+        let policy = self.fleet.router.policy;
+        if policy == BalancePolicy::RoundRobin {
+            return;
+        }
+        self.stamp[i] = self.stamp[i].wrapping_add(1);
+        let chip = &self.fleet.chips[i];
+        let score = match policy {
+            BalancePolicy::LeastQueue => -(chip.queue_len() as f64),
+            BalancePolicy::DriftAware => {
+                chip.predicted_accuracy()
+                    - self.fleet.router.queue_penalty
+                        * chip.queue_len() as f64
+            }
+            BalancePolicy::RoundRobin => unreachable!(),
+        };
+        self.routes.push(RouteEntry {
+            score,
+            stamp: self.stamp[i],
+            chip: i,
+        });
+    }
+
+    fn update_over_cap(&mut self, i: usize) {
+        if self.fleet.chips[i].queue_len() > self.max_batch[i]
+            && self.fleet.state[i] != ChipState::Failed
+        {
+            self.over_cap.insert(i);
+        } else {
+            self.over_cap.remove(&i);
+        }
+    }
+
+    fn chip_changed(&mut self, i: usize) {
+        self.touch(i);
+        self.update_over_cap(i);
+    }
+
+    /// O(log n) routing: pop route-heap entries until one matches its
+    /// chip's current stamp and the chip is alive. The winner's entry
+    /// leaves the heap; the caller re-scores via
+    /// [`chip_changed`](Self::chip_changed) after mutating it.
+    fn pick_route(&mut self) -> usize {
+        let n = self.fleet.chips.len();
+        match self.fleet.router.policy {
+            BalancePolicy::RoundRobin => loop {
+                let i = self.rr_next % n;
+                self.rr_next = self.rr_next.wrapping_add(1);
+                if self.fleet.state[i] == ChipState::Alive {
+                    return i;
+                }
+            },
+            _ => loop {
+                let e = self
+                    .routes
+                    .pop()
+                    .expect("routing needs >= 1 live chip");
+                if e.stamp != self.stamp[e.chip]
+                    || self.fleet.state[e.chip] != ChipState::Alive
+                {
+                    continue;
+                }
+                return e.chip;
+            },
+        }
+    }
+
+    /// Route one arrival; shed it if the target queue is at the
+    /// admission cap.
+    fn route_and_submit(&mut self, mut req: Request) -> Result<()> {
+        let i = self.pick_route();
+        let cap = self.fleet.queue_cap;
+        if cap > 0 && self.fleet.chips[i].queue_len() >= cap {
+            self.fleet.metrics.record_shed(1);
+            obs::counter_add("fleet.shed", 1);
+            // Queue unchanged — restore the popped route entry.
+            self.touch(i);
+            return Ok(());
+        }
+        req.arrival_age = self.fleet.chips[i].device_age();
+        self.fleet.metrics.record_routed(i);
+        self.fleet.chips[i].submit(req);
+        self.chip_changed(i);
+        self.consider_batch(i)
+    }
+
+    /// Size-or-timeout batch trigger for chip `i` at the current time:
+    /// a full batch starts immediately; a partial batch gets (or
+    /// keeps) a close deadline at `oldest_arrival + max_wait`.
+    fn consider_batch(&mut self, i: usize) -> Result<()> {
+        if self.busy[i] || self.fleet.state[i] == ChipState::Failed {
+            return Ok(());
+        }
+        let ql = self.fleet.chips[i].queue_len();
+        if ql == 0 {
+            self.deadline[i] = None;
+            return Ok(());
+        }
+        if ql >= self.max_batch[i] {
+            return self.start_exec(i);
+        }
+        let due = self.fleet.chips[i]
+            .oldest_arrival()
+            .unwrap_or(self.now)
+            + self.max_wait[i];
+        if due <= self.now {
+            return self.start_exec(i);
+        }
+        if self.deadline[i] != Some(due) {
+            self.deadline[i] = Some(due);
+            self.push(due, EventKind::BatchClose { chip: i, deadline: due });
+        }
+        Ok(())
+    }
+
+    /// Execute chip `i`'s next batch at `now`. Execution is eager —
+    /// the batch composition and latencies are fixed now, on the
+    /// unified wall — but its completions are *held* until the
+    /// ExecComplete event `exec_seconds` later, when the chip frees up.
+    fn start_exec(&mut self, i: usize) -> Result<()> {
+        debug_assert!(!self.busy[i]);
+        self.deadline[i] = None;
+        let t = self.now;
+        if self.aged_to[i] < t {
+            self.fleet.chips[i].advance_idle(t - self.aged_to[i]);
+            self.aged_to[i] = t;
+        }
+        self.fleet.chips[i].align_wall(t);
+        let exec = self.fleet.exec_seconds_per_batch;
+        let comps = self.fleet.chips[i].step(exec)?;
+        self.fleet.metrics.record_completions(i, &comps);
+        obs::counter_add("fleet.served", comps.len() as u64);
+        self.held[i] = comps;
+        self.busy[i] = true;
+        self.aged_to[i] = t + exec;
+        self.push(t + exec, EventKind::ExecComplete { chip: i });
+        self.chip_changed(i);
+        Ok(())
+    }
+
+    /// Deliver a finished batch, then keep the chip working: next
+    /// batch if queued, otherwise steal from the longest backlog.
+    fn on_exec_complete(
+        &mut self,
+        i: usize,
+        out: &mut Vec<FleetCompletion>,
+    ) -> Result<()> {
+        self.busy[i] = false;
+        let comps = std::mem::take(&mut self.held[i]);
+        out.extend(comps.into_iter().map(|completion| FleetCompletion {
+            chip: i,
+            completion,
+        }));
+        self.chip_changed(i);
+        // A chip that failed mid-batch delivered above (the execution
+        // already happened on-device) but starts nothing new.
+        if self.fleet.state[i] == ChipState::Failed {
+            return Ok(());
+        }
+        if self.fleet.chips[i].queue_len() > 0 {
+            return self.consider_batch(i);
+        }
+        if self.fleet.state[i] == ChipState::Alive {
+            return self.try_steal(i);
+        }
+        Ok(())
+    }
+
+    /// Work stealing: an idle, empty, alive chip pulls up to its own
+    /// max_batch from the TAIL of the longest over-capacity queue,
+    /// leaving the victim at least one full batch. Ties break to the
+    /// lowest victim index.
+    fn try_steal(&mut self, i: usize) -> Result<()> {
+        if self.over_cap.is_empty() {
+            return Ok(());
+        }
+        let mut victim: Option<(usize, usize)> = None;
+        for &j in &self.over_cap {
+            if j == i || self.fleet.state[j] == ChipState::Failed {
+                continue;
+            }
+            let ql = self.fleet.chips[j].queue_len();
+            if ql <= self.max_batch[j] {
+                continue;
+            }
+            match victim {
+                Some((_, best)) if ql <= best => {}
+                _ => victim = Some((j, ql)),
+            }
+        }
+        let Some((j, ql)) = victim else {
+            return Ok(());
+        };
+        let n = self.max_batch[i].min(ql - self.max_batch[j]);
+        if n == 0 {
+            return Ok(());
+        }
+        let stolen = self.fleet.chips[j].steal_tail(n);
+        let count = stolen.len();
+        if count == 0 {
+            return Ok(());
+        }
+        let age = self.fleet.chips[i].device_age();
+        for mut req in stolen {
+            req.arrival_age = age;
+            self.fleet.chips[i].submit(req);
+        }
+        self.fleet.metrics.record_steal(count);
+        obs::counter_add("fleet.steals", count as u64);
+        obs::event("fleet.steal", "fleet", || {
+            vec![
+                ("thief", num(i as f64)),
+                ("victim", num(j as f64)),
+                ("count", num(count as f64)),
+            ]
+        });
+        self.chip_changed(j);
+        self.chip_changed(i);
+        self.consider_batch(i)
+    }
+
+    /// Keep exactly one arrival drawn ahead in the heap (one-ahead
+    /// drawing consumes the workload RNG identically to the batched
+    /// per-window generator).
+    fn ensure_arrival(&mut self, workload: &mut Workload) {
+        if self.arrival_pending {
+            return;
+        }
+        if let Some(req) = workload.next_before(
+            self.horizon,
+            &self.fleet.ref_clock,
+            self.test_len,
+        ) {
+            let t = req.arrival_wall;
+            self.push(t, EventKind::Arrival(req));
+            self.arrival_pending = true;
+        }
+    }
+
+    fn pop_due(&mut self, end: f64) -> Option<Event> {
+        if self.heap.peek().map_or(false, |e| e.time <= end) {
+            self.heap.pop()
+        } else {
+            None
+        }
+    }
+
+    /// Arm batch closes for any idle chip with queued work (window
+    /// starts, post-lifecycle reconciliation, drain progress).
+    fn reconcile_batches(&mut self) -> Result<()> {
+        for i in 0..self.fleet.chips.len() {
+            if self.busy[i] || self.fleet.state[i] == ChipState::Failed {
+                continue;
+            }
+            let ql = self.fleet.chips[i].queue_len();
+            if ql == 0 {
+                continue;
+            }
+            if self.deadline[i].is_none() || ql >= self.max_batch[i] {
+                self.consider_batch(i)?;
+            }
+        }
+        // Idle empty chips get a per-window stealing opportunity even
+        // if they never execute (a cold chip has no ExecComplete to
+        // wake it).
+        for i in 0..self.fleet.chips.len() {
+            if !self.busy[i]
+                && self.fleet.state[i] == ChipState::Alive
+                && self.fleet.chips[i].queue_len() == 0
+            {
+                self.try_steal(i)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Re-read queue depths and lifecycle states after external fleet
+    /// mutations (scenario timeline actions): re-score every chip and
+    /// drop deadlines owned by now-failed chips. Batch re-arming
+    /// happens at the next window/drain step.
+    pub fn resync(&mut self) {
+        for i in 0..self.fleet.chips.len() {
+            self.chip_changed(i);
+            if self.fleet.state[i] == ChipState::Failed {
+                self.deadline[i] = None;
+            }
+        }
+    }
+
+    /// Process all events up to `end`, drawing arrivals against that
+    /// horizon. `now` lands exactly on `end` afterwards.
+    pub fn run_window(
+        &mut self,
+        end: f64,
+        workload: &mut Workload,
+        out: &mut Vec<FleetCompletion>,
+    ) -> Result<()> {
+        debug_assert!(end >= self.now);
+        let _span = obs::span("fleet.event_window", "fleet")
+            .arg("end_s", num(end));
+        self.horizon = end;
+        self.reconcile_batches()?;
+        self.ensure_arrival(workload);
+        while let Some(e) = self.pop_due(end) {
+            self.now = self.now.max(e.time);
+            match e.kind {
+                EventKind::Arrival(req) => {
+                    self.arrival_pending = false;
+                    obs::counter_add("fleet.arrivals", 1);
+                    self.route_and_submit(req)?;
+                    self.ensure_arrival(workload);
+                }
+                EventKind::BatchClose { chip, deadline } => {
+                    if self.deadline[chip] == Some(deadline) {
+                        self.deadline[chip] = None;
+                        self.consider_batch(chip)?;
+                    }
+                }
+                EventKind::ExecComplete { chip } => {
+                    self.on_exec_complete(chip, out)?;
+                }
+            }
+        }
+        self.now = end;
+        Ok(())
+    }
+
+    /// Tick-grid statistics sample covering the last `dt` seconds:
+    /// same per-tick accounting as the lockstep loop (availability,
+    /// queue depths, reference clock), so summaries stay comparable.
+    pub fn sample(&mut self, dt: f64) {
+        self.age_all_to(self.now);
+        self.fleet.ref_clock.advance(dt);
+        let alive = self.fleet.n_alive();
+        self.fleet.metrics.end_tick(dt, alive);
+        let metrics_on = obs::metrics_enabled();
+        for i in 0..self.fleet.chips.len() {
+            let depth = self.fleet.chips[i].queue_len();
+            self.fleet.metrics.observe_queue(i, depth);
+            if metrics_on {
+                obs::gauge_set(
+                    &format!("fleet.queue.chip{i}"),
+                    depth as f64,
+                );
+                obs::hist_record("fleet.queue_depth", depth as f64);
+            }
+        }
+        // Compact the lazy route heap if stale entries piled up.
+        let n = self.fleet.chips.len();
+        if self.routes.len() > 8 * n.max(16) {
+            self.routes.clear();
+            for i in 0..n {
+                self.touch(i);
+            }
+        }
+    }
+
+    /// Serve everything still queued or in flight — the event-loop
+    /// flush. No new arrivals; deadlines and execution times still
+    /// cost real wall time, booked via `add_wall` (flush time is not
+    /// steady-state, same contract as [`Fleet::flush`]). Ends with
+    /// every chip aged to the final event time.
+    pub fn drain(&mut self, out: &mut Vec<FleetCompletion>) -> Result<()> {
+        let _span = obs::span("fleet.event_drain", "fleet");
+        let start = self.now;
+        self.horizon = self.now;
+        let r = self.drain_inner(out);
+        if r.is_err() {
+            self.salvage(out);
+        }
+        self.age_all_to(self.now);
+        self.fleet.metrics.add_wall(self.now - start);
+        r
+    }
+
+    fn drain_inner(&mut self, out: &mut Vec<FleetCompletion>) -> Result<()> {
+        loop {
+            self.reconcile_batches()?;
+            let working = self.busy.iter().any(|&b| b)
+                || self
+                    .fleet
+                    .chips
+                    .iter()
+                    .zip(&self.fleet.state)
+                    .any(|(c, &s)| {
+                        s != ChipState::Failed && c.queue_len() > 0
+                    });
+            if !working {
+                return Ok(());
+            }
+            let e = self
+                .heap
+                .pop()
+                .expect("queued fleet work with an empty event heap");
+            self.now = self.now.max(e.time);
+            match e.kind {
+                // Arrivals never outlive their window, but route one
+                // defensively if a caller drains mid-window.
+                EventKind::Arrival(req) => {
+                    self.arrival_pending = false;
+                    self.route_and_submit(req)?;
+                }
+                EventKind::BatchClose { chip, deadline } => {
+                    if self.deadline[chip] == Some(deadline) {
+                        self.deadline[chip] = None;
+                        self.consider_batch(chip)?;
+                    }
+                }
+                EventKind::ExecComplete { chip } => {
+                    self.on_exec_complete(chip, out)?;
+                }
+            }
+        }
+    }
+
+    /// Deliver completions held by in-flight batches (their execution
+    /// and metrics already happened) — the error path's exactly-once
+    /// guarantee.
+    pub fn salvage(&mut self, out: &mut Vec<FleetCompletion>) {
+        for i in 0..self.held.len() {
+            if self.busy[i] {
+                self.busy[i] = false;
+                let comps = std::mem::take(&mut self.held[i]);
+                out.extend(comps.into_iter().map(|completion| {
+                    FleetCompletion {
+                        chip: i,
+                        completion,
+                    }
+                }));
+            }
+        }
+    }
+
+    /// Error-window teardown: salvage in-flight batches, age chips to
+    /// the failure time, and book the partial window (`now −
+    /// window_start`) as a sampled tick — the window consumed real
+    /// time even though it errored (the lockstep loop's satellite fix,
+    /// mirrored here).
+    pub fn abort(
+        &mut self,
+        window_start: f64,
+        out: &mut Vec<FleetCompletion>,
+    ) {
+        self.salvage(out);
+        self.age_all_to(self.now);
+        let elapsed = (self.now - window_start).max(0.0);
+        self.fleet.ref_clock.advance(elapsed);
+        let alive = self.fleet.n_alive();
+        self.fleet.metrics.end_tick(elapsed, alive);
+    }
+
+    fn age_all_to(&mut self, t: f64) {
+        for i in 0..self.fleet.chips.len() {
+            if self.aged_to[i] < t {
+                self.fleet.chips[i].advance_idle(t - self.aged_to[i]);
+                self.aged_to[i] = t;
+            }
+        }
+    }
+}
+
+impl<E: ChipEngine> Fleet<E> {
+    /// Run the event-driven scheduler for `seconds` of serving wall
+    /// time (statistics sampled on a `tick` grid so summaries stay
+    /// comparable with the lockstep loop), then drain the backlog.
+    /// Replaces `run(...)` + `flush()`; returns every completion. On a
+    /// chip error, completions produced so far are parked in
+    /// `pending` and redelivered by the next successful call
+    /// (exactly-once across failures).
+    pub fn run_events(
+        &mut self,
+        seconds: f64,
+        tick: f64,
+        workload: &mut Workload,
+        test_len: usize,
+    ) -> Result<Vec<FleetCompletion>> {
+        assert!(tick > 0.0, "tick must be positive");
+        let _span = obs::span("fleet.run_events", "fleet")
+            .arg("seconds", num(seconds))
+            .arg("chips", num(self.chips.len() as f64));
+        let mut out = std::mem::take(&mut self.pending);
+        let start = workload.wall();
+        let mut ev = EventLoop::new(self, test_len, start);
+        // `wall` mirrors the lockstep run()'s progress accumulator;
+        // `end` chains by `+ tick` exactly like the workload's own
+        // window ends, so the arrival grid (and thus the RNG stream)
+        // is bit-identical to the lockstep loop's.
+        let mut wall = 0.0;
+        let mut end = start;
+        while wall < seconds {
+            end += tick;
+            if let Err(e) = ev.run_window(end, workload, &mut out) {
+                ev.abort(end - tick, &mut out);
+                drop(ev);
+                self.pending = out;
+                return Err(e);
+            }
+            ev.sample(tick);
+            wall += tick;
+        }
+        if let Err(e) = ev.drain(&mut out) {
+            drop(ev);
+            self.pending = out;
+            return Err(e);
+        }
+        drop(ev);
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compensation::AgeSource;
+    use crate::coordinator::serve::{
+        BatchPolicy, LifetimeClock, ServeMetrics,
+    };
+    use crate::fleet::profile::AccuracyProfile;
+    use crate::fleet::{analytic_fleet, AnalyticEngine, FleetConfig};
+    use crate::rram::YEAR;
+    use anyhow::anyhow;
+    use std::sync::Arc;
+
+    fn cfg(n: usize, policy: BalancePolicy) -> FleetConfig {
+        FleetConfig {
+            n_chips: n,
+            t0: 1.0,
+            stagger: YEAR,
+            accel: 1e5,
+            policy,
+            exec_seconds_per_batch: 0.001,
+            ..Default::default()
+        }
+    }
+
+    fn flat_fleet(
+        n: usize,
+        policy: BalancePolicy,
+    ) -> Fleet<AnalyticEngine> {
+        analytic_fleet(
+            &cfg(n, policy),
+            &AccuracyProfile::uncompensated(1.0, 0.0, 0.5),
+        )
+    }
+
+    fn req(id: u64, arrival_wall: f64) -> Request {
+        Request {
+            id,
+            sample: 0,
+            arrival_age: 0.0,
+            arrival_wall,
+        }
+    }
+
+    /// Ids of `comps`, sorted — for exactly-once assertions.
+    fn sorted_ids(comps: &[FleetCompletion]) -> Vec<u64> {
+        let mut ids: Vec<u64> =
+            comps.iter().map(|c| c.completion.id).collect();
+        ids.sort_unstable();
+        ids
+    }
+
+    fn assert_contiguous(ids: &[u64]) {
+        for (want, &got) in (0..ids.len() as u64).zip(ids) {
+            assert_eq!(got, want, "id {want} lost or duplicated");
+        }
+    }
+
+    #[test]
+    fn heap_orders_by_time_then_seq_and_routes_break_ties_low() {
+        let mut h = BinaryHeap::new();
+        h.push(Event { time: 2.0, seq: 0, kind: EventKind::ExecComplete { chip: 0 } });
+        h.push(Event { time: 1.0, seq: 2, kind: EventKind::ExecComplete { chip: 1 } });
+        h.push(Event { time: 1.0, seq: 1, kind: EventKind::ExecComplete { chip: 2 } });
+        let order: Vec<(f64, u64)> = std::iter::from_fn(|| h.pop())
+            .map(|e| (e.time, e.seq))
+            .collect();
+        assert_eq!(order, vec![(1.0, 1), (1.0, 2), (2.0, 0)]);
+
+        let mut r = BinaryHeap::new();
+        r.push(RouteEntry { score: 0.9, stamp: 0, chip: 3 });
+        r.push(RouteEntry { score: 0.9, stamp: 0, chip: 1 });
+        r.push(RouteEntry { score: 0.95, stamp: 0, chip: 2 });
+        assert_eq!(r.pop().unwrap().chip, 2);
+        // Equal scores: lowest chip index wins, like Router::route.
+        assert_eq!(r.pop().unwrap().chip, 1);
+        assert_eq!(r.pop().unwrap().chip, 3);
+    }
+
+    #[test]
+    fn event_loop_conserves_requests_and_ages_in_lockstep() {
+        let mut fleet = flat_fleet(3, BalancePolicy::DriftAware);
+        let ages0: Vec<f64> =
+            fleet.chips.iter().map(|c| c.device_age()).collect();
+        let mut wl = Workload::new(300.0, 9);
+        let comps = fleet.run_events(1.0, 0.1, &mut wl, 64).unwrap();
+        assert!(comps.len() > 150, "arrivals {}", comps.len());
+        // Conservation: routed == served == delivered, exactly once.
+        assert_eq!(fleet.metrics.total_routed(), comps.len());
+        assert_eq!(fleet.metrics.served, comps.len());
+        assert_eq!(fleet.metrics.shed, 0);
+        let ids = sorted_ids(&comps);
+        assert_contiguous(&ids);
+        // Unified wall axis: no negative latencies, anywhere.
+        assert!(comps.iter().all(|c| c.completion.latency >= 0.0));
+        // Sampled a tick per window and booked the wall (the window
+        // count mirrors lockstep `run`: one per `tick` until
+        // `seconds`, float accumulation included).
+        assert!(fleet.metrics.ticks >= 10);
+        assert!(fleet.metrics.wall >= 1.0 - 1e-9);
+        // Lazy aging still lands every chip on the same total: all
+        // clocks covered exactly the same wall span.
+        let aged: Vec<f64> = fleet
+            .chips
+            .iter()
+            .zip(&ages0)
+            .map(|(c, a0)| c.device_age() - a0)
+            .collect();
+        assert!(aged[0] >= 1.0 * 1e5 - 1.0, "aged {aged:?}");
+        for a in &aged {
+            assert!((a - aged[0]).abs() < 1e-6 * 1e5, "aged {aged:?}");
+        }
+        // Flat profile ⇒ everything correct.
+        assert!((fleet.metrics.accuracy() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn replay_is_bit_identical_for_equal_seeds() {
+        let run = || {
+            let mut fleet = flat_fleet(4, BalancePolicy::DriftAware);
+            let mut wl = Workload::new(500.0, 0xabc);
+            let comps =
+                fleet.run_events(0.8, 0.05, &mut wl, 128).unwrap();
+            let sig: Vec<(u64, usize, u64, bool)> = comps
+                .iter()
+                .map(|c| {
+                    (
+                        c.completion.id,
+                        c.chip,
+                        c.completion.latency.to_bits(),
+                        c.completion.correct,
+                    )
+                })
+                .collect();
+            (sig, fleet.metrics.served, fleet.metrics.steals)
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.0.len(), b.0.len());
+        assert_eq!(a, b, "event replay must be bit-identical");
+    }
+
+    #[test]
+    fn queue_cap_sheds_load_and_conserves_the_admitted_set() {
+        let mut c = cfg(2, BalancePolicy::LeastQueue);
+        // Two slow chips (1 batch / 0.1 s) under ~200 req/s: queues
+        // grow without bound unless admission steps in.
+        c.exec_seconds_per_batch = 0.1;
+        let mut fleet = analytic_fleet(
+            &c,
+            &AccuracyProfile::uncompensated(1.0, 0.0, 0.5),
+        );
+        fleet.set_queue_cap(50);
+        assert_eq!(fleet.queue_cap(), 50);
+        let mut wl = Workload::new(2000.0, 3);
+        let comps = fleet.run_events(0.5, 0.05, &mut wl, 64).unwrap();
+        assert!(fleet.metrics.shed > 0, "cap never engaged");
+        // Conservation over the admitted set: every routed request
+        // completes exactly once; shed ids simply never appear.
+        assert_eq!(fleet.metrics.total_routed(), comps.len());
+        let ids = sorted_ids(&comps);
+        for w in ids.windows(2) {
+            assert!(w[0] < w[1], "duplicate id {}", w[0]);
+        }
+        // Admission held every queue at or below the cap.
+        for load in &fleet.metrics.per_chip {
+            assert!(
+                load.max_queue_depth <= 50,
+                "cap breached: {}",
+                load.max_queue_depth
+            );
+        }
+        // The summary surfaces the backpressure counters.
+        let s = fleet.summary();
+        assert_eq!(s.shed, fleet.metrics.shed);
+        assert!(
+            crate::fleet::PhaseSummary::shed_rate_of(s.served, s.shed)
+                > 0.0
+        );
+    }
+
+    #[test]
+    fn idle_chips_steal_from_over_capacity_queues() {
+        let mut fleet = flat_fleet(2, BalancePolicy::LeastQueue);
+        // Pre-load chip 0 far past its max_batch (32); chip 1 idles.
+        for i in 0..200 {
+            fleet.metrics.record_routed(0);
+            fleet.chips[0].submit(req(i, 0.0));
+        }
+        // Starved workload: windows fire but no new arrivals.
+        let mut wl = Workload::new(1e-12, 1);
+        let comps = fleet.run_events(0.2, 0.02, &mut wl, 64).unwrap();
+        assert_eq!(comps.len(), 200);
+        assert_contiguous(&sorted_ids(&comps));
+        assert!(fleet.metrics.steals > 0, "no steals happened");
+        // The idle chip did real work it was never routed.
+        assert!(
+            fleet.metrics.per_chip[1].served > 0,
+            "thief served nothing"
+        );
+        assert_eq!(fleet.metrics.per_chip[1].routed, 0);
+        assert_eq!(fleet.summary().steals, fleet.metrics.steals);
+    }
+
+    #[test]
+    fn drain_covers_retired_and_excludes_failed_chips() {
+        let mut fleet = flat_fleet(3, BalancePolicy::LeastQueue);
+        for i in 0..60 {
+            fleet.metrics.record_routed(1);
+            fleet.chips[1].submit(req(i, 0.0));
+        }
+        for i in 60..100 {
+            fleet.metrics.record_routed(2);
+            fleet.chips[2].submit(req(i, 0.0));
+        }
+        // Retired: drains its own backlog. Failed: its backlog is
+        // redelivered at fail time and it executes nothing after.
+        fleet.retire_chip(1).unwrap();
+        fleet.fail_chip(2).unwrap();
+        assert_eq!(fleet.chips[2].queue_len(), 0);
+        let mut wl = Workload::new(1e-12, 2);
+        let comps = fleet.run_events(0.05, 0.05, &mut wl, 64).unwrap();
+        assert_eq!(comps.len(), 100);
+        assert_contiguous(&sorted_ids(&comps));
+        // Retired chip finished exactly its own queue; failed chip
+        // served nothing; the survivors absorbed the redelivery.
+        assert_eq!(fleet.metrics.per_chip[1].served, 60);
+        assert_eq!(fleet.metrics.per_chip[2].served, 0);
+        assert_eq!(fleet.metrics.per_chip[0].served, 40);
+        assert_eq!(fleet.chips[1].queue_len(), 0);
+    }
+
+    /// Chip engine that errors on one chosen `step` call (before
+    /// touching its queue), then recovers — the injected fault for the
+    /// error-path satellites.
+    struct FailingEngine {
+        inner: AnalyticEngine,
+        fail_on_step: usize,
+        steps: usize,
+    }
+
+    impl FailingEngine {
+        fn new(seed: u64, fail_on_step: usize) -> FailingEngine {
+            FailingEngine {
+                inner: AnalyticEngine::new(
+                    Arc::new(AccuracyProfile::uncompensated(
+                        1.0, 0.0, 0.5,
+                    )),
+                    LifetimeClock::new(1.0, 1e5),
+                    BatchPolicy {
+                        max_batch: 32,
+                        max_wait: 0.01,
+                    },
+                    seed,
+                ),
+                fail_on_step,
+                steps: 0,
+            }
+        }
+    }
+
+    impl ChipEngine for FailingEngine {
+        fn submit(&mut self, req: Request) {
+            ChipEngine::submit(&mut self.inner, req);
+        }
+        fn queue_len(&self) -> usize {
+            ChipEngine::queue_len(&self.inner)
+        }
+        fn device_age(&self) -> f64 {
+            ChipEngine::device_age(&self.inner)
+        }
+        fn predicted_accuracy(&self) -> f64 {
+            ChipEngine::predicted_accuracy(&self.inner)
+        }
+        fn advance_idle(&mut self, wall_seconds: f64) {
+            ChipEngine::advance_idle(&mut self.inner, wall_seconds);
+        }
+        fn take_queue(&mut self) -> Vec<Request> {
+            ChipEngine::take_queue(&mut self.inner)
+        }
+        fn align_wall(&mut self, wall: f64) {
+            ChipEngine::align_wall(&mut self.inner, wall);
+        }
+        fn oldest_arrival(&self) -> Option<f64> {
+            ChipEngine::oldest_arrival(&self.inner)
+        }
+        fn steal_tail(&mut self, n: usize) -> Vec<Request> {
+            ChipEngine::steal_tail(&mut self.inner, n)
+        }
+        fn batch_policy(&self) -> &BatchPolicy {
+            ChipEngine::batch_policy(&self.inner)
+        }
+        fn refresh(&mut self, t0: f64) {
+            ChipEngine::refresh(&mut self.inner, t0);
+        }
+        fn set_age_source(&mut self, src: AgeSource) {
+            ChipEngine::set_age_source(&mut self.inner, src);
+        }
+        fn step(&mut self, wall_per_exec: f64) -> Result<Vec<Completion>> {
+            let this = self.steps;
+            self.steps += 1;
+            if this == self.fail_on_step {
+                return Err(anyhow!("injected chip fault"));
+            }
+            ChipEngine::step(&mut self.inner, wall_per_exec)
+        }
+        fn metrics(&self) -> &ServeMetrics {
+            &self.inner.metrics
+        }
+    }
+
+    #[test]
+    fn mid_flush_failure_delivers_exactly_once_on_retry() {
+        // Chip 1 dies on its second batch, mid-drain.
+        let chips = vec![
+            FailingEngine::new(11, usize::MAX),
+            FailingEngine::new(12, 1),
+        ];
+        let mut fleet =
+            Fleet::new(chips, BalancePolicy::LeastQueue, 0.01);
+        for i in 0..80 {
+            let chip = (i % 2) as usize;
+            fleet.metrics.record_routed(chip);
+            fleet.chips[chip].submit(req(i, 0.0));
+        }
+        let mut wl = Workload::new(1e-12, 4);
+        let err = fleet.run_events(0.02, 0.02, &mut wl, 64);
+        assert!(err.is_err(), "the injected fault must surface");
+        let wall_after_err = fleet.metrics.wall;
+        assert!(
+            wall_after_err > 0.0,
+            "the failed run still consumed wall time"
+        );
+        // Retry: parked completions come back first, then the rest —
+        // every id exactly once across the failure.
+        let mut wl2 = Workload::new(1e-12, 5);
+        let comps = fleet.run_events(0.02, 0.02, &mut wl2, 64).unwrap();
+        assert_eq!(comps.len(), 80);
+        assert_contiguous(&sorted_ids(&comps));
+        assert_eq!(fleet.metrics.served, 80);
+        assert!(fleet.metrics.wall > wall_after_err);
+    }
+
+    /// Satellite regression (lockstep path): a service window that
+    /// errors still advances the reference clock, the tick count and
+    /// the wall — availability/throughput no longer pretend the window
+    /// never happened.
+    #[test]
+    fn failed_lockstep_window_still_accounts_time() {
+        let chips = vec![
+            FailingEngine::new(21, usize::MAX),
+            FailingEngine::new(22, 0),
+        ];
+        let mut fleet =
+            Fleet::new(chips, BalancePolicy::RoundRobin, 0.001);
+        let mut wl = Workload::new(400.0, 7);
+        assert!(fleet.tick(0.1, &mut wl, 64).is_err());
+        assert_eq!(fleet.metrics.ticks, 1, "error tick not counted");
+        assert!(
+            (fleet.metrics.wall - 0.1).abs() < 1e-12,
+            "error tick wall not booked: {}",
+            fleet.metrics.wall
+        );
+        // Retry succeeds (the fault was one-shot): parked completions
+        // redeliver and conservation holds across the error.
+        let mut comps = fleet.tick(0.1, &mut wl, 64).unwrap();
+        comps.extend(fleet.flush().unwrap());
+        assert_eq!(fleet.metrics.ticks, 2);
+        assert!(fleet.metrics.wall > 0.2 - 1e-12);
+        assert_contiguous(&sorted_ids(&comps));
+        assert_eq!(comps.len(), fleet.metrics.total_routed());
+    }
+}

@@ -57,6 +57,15 @@ pub struct FleetMetrics {
     pub wall: f64,
     /// Requests redelivered off failed chips (fleet-wide).
     pub requeues: usize,
+    /// Requests refused at admission (queue cap exceeded) and dropped —
+    /// the event loop's backpressure valve. Shed requests consume
+    /// workload ids but are never routed, so
+    /// `routed + shed = arrivals`.
+    pub shed: usize,
+    /// Requests moved between chips by work stealing (an idle chip
+    /// pulling from the longest backlog). Stolen requests stay counted
+    /// under their first routing, like requeues.
+    pub steals: usize,
     /// Sum over sampled ticks of the live-chip count — availability is
     /// `alive_chip_ticks / (ticks · n_chips)`.
     pub alive_chip_ticks: usize,
@@ -99,6 +108,17 @@ impl FleetMetrics {
     pub fn record_requeue(&mut self, from: usize, n: usize) {
         self.per_chip[from].requeued += n;
         self.requeues += n;
+    }
+
+    /// Record `n` requests refused at admission and dropped.
+    pub fn record_shed(&mut self, n: usize) {
+        self.shed += n;
+    }
+
+    /// Record `n` requests migrated by a work steal. Like requeues,
+    /// steals never touch `routed`.
+    pub fn record_steal(&mut self, n: usize) {
+        self.steals += n;
     }
 
     pub fn end_tick(&mut self, dt: f64, alive_chips: usize) {
@@ -190,14 +210,19 @@ pub struct PhaseSummary {
     pub requeued: usize,
     /// Served requests per phase wall-second (`served / (end - start)`).
     pub throughput: f64,
-    /// Fraction of phase traffic shed to another chip by failures:
+    /// Fraction of phase traffic moved to another chip by failures:
     /// `requeued / (served + requeued)`, 0 when the phase saw nothing.
     pub requeue_rate: f64,
+    /// Requests refused at admission (queue cap) during the phase.
+    pub shed: usize,
+    /// Fraction of phase arrivals dropped by admission control:
+    /// `shed / (served + shed)`, 0 when the phase saw nothing.
+    pub shed_rate: f64,
 }
 
 impl PhaseSummary {
-    /// Direction-2 groundwork: per-phase throughput and shed rate from
-    /// the phase's own counters and wall interval.
+    /// Direction-2 groundwork: per-phase throughput and requeue rate
+    /// from the phase's own counters and wall interval.
     pub fn rates(served: usize, requeued: usize, start: f64, end: f64)
         -> (f64, f64)
     {
@@ -208,6 +233,16 @@ impl PhaseSummary {
         let requeue_rate =
             if total > 0 { requeued as f64 / total as f64 } else { 0.0 };
         (throughput, requeue_rate)
+    }
+
+    /// Shed-load share of the phase's offered traffic.
+    pub fn shed_rate_of(served: usize, shed: usize) -> f64 {
+        let total = served + shed;
+        if total > 0 {
+            shed as f64 / total as f64
+        } else {
+            0.0
+        }
     }
 
     pub fn print(&self) {
@@ -224,7 +259,7 @@ impl PhaseSummary {
             1e3 * self.p99_latency,
             100.0 * self.availability,
             self.throughput,
-            100.0 * self.requeue_rate,
+            100.0 * self.shed_rate,
             self.requeued,
         );
     }
@@ -245,6 +280,10 @@ pub struct FleetSummary {
     pub availability: f64,
     /// Failure redeliveries across the run.
     pub requeues: usize,
+    /// Requests dropped by admission control across the run.
+    pub shed: usize,
+    /// Requests migrated by work stealing across the run.
+    pub steals: usize,
     /// Per-phase breakdown when the run came from the scenario engine
     /// (empty for plain fleet runs).
     pub phases: Vec<PhaseSummary>,
@@ -306,6 +345,8 @@ impl FleetSummary {
             wall: fm.wall,
             availability: fm.availability(),
             requeues: fm.requeues,
+            shed: fm.shed,
+            steals: fm.steals,
             phases: Vec::new(),
             chips: rows,
         }
@@ -349,6 +390,15 @@ impl FleetSummary {
                 String::new()
             },
         );
+        if self.shed > 0 || self.steals > 0 {
+            println!(
+                "backpressure: {} shed ({:.1}% of offered) | {} stolen",
+                self.shed,
+                100.0
+                    * PhaseSummary::shed_rate_of(self.served, self.shed),
+                self.steals,
+            );
+        }
         if !self.graph_execs.is_empty() {
             let execs: Vec<String> = self
                 .graph_execs
@@ -401,6 +451,14 @@ mod tests {
         assert_eq!(m.per_chip[1].requeued, 3);
         // Requeues never touch routed: conservation counts stay exact.
         assert_eq!(m.total_routed(), 3);
+        // Shed/steal counters: neither touches routed either.
+        m.record_shed(2);
+        m.record_steal(4);
+        assert_eq!(m.shed, 2);
+        assert_eq!(m.steals, 4);
+        assert_eq!(m.total_routed(), 3);
+        assert!((PhaseSummary::shed_rate_of(3, 2) - 0.4).abs() < 1e-12);
+        assert_eq!(PhaseSummary::shed_rate_of(0, 0), 0.0);
         assert!((m.accuracy() - 2.0 / 3.0).abs() < 1e-12);
         assert!((m.per_chip[0].mean_queue_depth() - 3.0).abs() < 1e-12);
         assert_eq!(m.per_chip[0].max_queue_depth, 4);

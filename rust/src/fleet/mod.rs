@@ -28,12 +28,14 @@
 //! [`crate::costmodel::FleetCost`].
 
 pub mod chip;
+pub mod events;
 pub mod metrics;
 pub mod profile;
 pub mod router;
 
 pub use crate::compensation::AgeSource;
 pub use chip::{native_engine, AnalyticEngine, ChipEngine, NativeEngine};
+pub use events::EventLoop;
 pub use metrics::{
     ChipLoad, ChipSummary, FleetMetrics, FleetSummary, PhaseSummary,
 };
@@ -152,13 +154,18 @@ pub struct Fleet<E: ChipEngine> {
     /// error: the healthy chips had already drained (their requests
     /// left the queues), so these are held here and delivered at the
     /// front of the next successful window instead of being dropped —
-    /// exactly-once delivery survives a failed tick.
-    pending: Vec<FleetCompletion>,
+    /// exactly-once delivery survives a failed tick. `pub(crate)` so
+    /// the scenario event runner can park/retry across errors too.
+    pub(crate) pending: Vec<FleetCompletion>,
     /// Per-chip lifecycle state (all `Alive` until a scenario event).
     state: Vec<ChipState>,
     /// Reference clock handed to the workload generator; request
     /// arrival ages are re-stamped with the routed chip's age.
     ref_clock: LifetimeClock,
+    /// Admission control: maximum queued requests per chip before the
+    /// event loop sheds new arrivals (0 = unbounded, the default — the
+    /// lockstep loop ignores this entirely).
+    queue_cap: usize,
 }
 
 impl<E: ChipEngine> Fleet<E> {
@@ -180,7 +187,21 @@ impl<E: ChipEngine> Fleet<E> {
             pending: Vec::new(),
             state: vec![ChipState::Alive; n],
             ref_clock: LifetimeClock::new(0.0, 0.0),
+            queue_cap: 0,
         }
+    }
+
+    /// Enable admission control for the event-driven loop: arrivals
+    /// routed to a chip whose queue already holds `cap` requests are
+    /// shed (dropped and counted in [`FleetMetrics::shed`]) instead of
+    /// queued. 0 disables shedding (the default).
+    pub fn set_queue_cap(&mut self, cap: usize) {
+        self.queue_cap = cap;
+    }
+
+    /// The admission-control queue cap (0 = unbounded).
+    pub fn queue_cap(&self) -> usize {
+        self.queue_cap
     }
 
     pub fn n_chips(&self) -> usize {
@@ -218,6 +239,11 @@ impl<E: ChipEngine> Fleet<E> {
             self.state[chip] = was;
             bail!("cannot fail chip {chip}: no live chip would remain");
         }
+        // A dead chip's banked capacity and aging debt die with it —
+        // otherwise a later refresh would inherit up to one free batch
+        // of credit earned while the chip executed nothing.
+        self.exec_credit[chip] = 0.0;
+        self.age_debt[chip] = 0.0;
         let orphans = self.chips[chip].take_queue();
         let n = orphans.len();
         let mut views = self.views();
@@ -266,6 +292,11 @@ impl<E: ChipEngine> Fleet<E> {
         }
         self.chips[chip].refresh(t0);
         self.state[chip] = ChipState::Alive;
+        // A reprogrammed chip starts from zero capacity: no credit
+        // banked across the refresh (nor aging debt — the rewritten
+        // arrays restart the drift clock anyway).
+        self.exec_credit[chip] = 0.0;
+        self.age_debt[chip] = 0.0;
         obs::event("fleet.refresh_chip", "fleet", || {
             vec![("chip", num(chip as f64)), ("t_s", num(t0))]
         });
@@ -400,9 +431,14 @@ impl<E: ChipEngine> Fleet<E> {
             };
             // Bank at most one batch of unused capacity: a starved
             // chip may need several short ticks to afford one
-            // execution, but an idle chip must not stockpile.
-            self.exec_credit[i] =
-                (self.exec_credit[i] + dt - spent).min(exec);
+            // execution, but an idle chip must not stockpile — and a
+            // failed chip banks nothing at all (it will re-enter
+            // service through a refresh, which starts from zero).
+            self.exec_credit[i] = if self.state[i] == ChipState::Failed {
+                0.0
+            } else {
+                (self.exec_credit[i] + dt - spent).min(exec)
+            };
             let idle = (dt - spent - self.age_debt[i]).max(0.0);
             self.age_debt[i] += spent + idle - dt;
             self.metrics.record_completions(i, &comps);
@@ -431,6 +467,17 @@ impl<E: ChipEngine> Fleet<E> {
             // Can't hand `out` back alongside the error: park the
             // already-drained completions for the next window.
             self.pending = out;
+            // The window still consumed real time — the surviving
+            // chips drained and aged above. Skipping the clock/wall
+            // accounting here (as this path once did) inflated
+            // throughput and availability after every error window.
+            self.ref_clock.advance(dt);
+            if sample {
+                let alive = self.n_alive();
+                self.metrics.end_tick(dt, alive);
+            } else {
+                self.metrics.add_wall(dt);
+            }
             return Err(e);
         }
         self.ref_clock.advance(dt);
@@ -682,6 +729,41 @@ mod tests {
         assert_eq!(fleet.metrics.per_chip[1].routed, before);
         fleet.flush().unwrap();
         assert_eq!(fleet.chips[1].queue_len(), 0);
+        assert_eq!(fleet.metrics.served, fleet.metrics.total_routed());
+    }
+
+    /// Satellite regression: a `Failed` chip must not keep banking
+    /// `exec_credit` while dead — that used to grant a refreshed chip
+    /// up to one free batch it never earned.
+    #[test]
+    fn dead_chips_bank_no_exec_credit() {
+        let mut cfg = small_cfg(BalancePolicy::RoundRobin);
+        cfg.n_chips = 2;
+        // One batch takes 0.1 s; 0.04 s ticks bank fractional credit.
+        cfg.exec_seconds_per_batch = 0.1;
+        let profile = AccuracyProfile::uncompensated(1.0, 0.0, 0.5);
+        let mut fleet = analytic_fleet(&cfg, &profile);
+        let mut wl = Workload::new(100.0, 5);
+        for _ in 0..3 {
+            fleet.tick(0.04, &mut wl, 64).unwrap();
+        }
+        assert!(fleet.exec_credit[1] > 0.0, "no credit banked");
+        fleet.fail_chip(1).unwrap();
+        assert_eq!(fleet.exec_credit[1], 0.0);
+        assert_eq!(fleet.age_debt[1], 0.0);
+        for _ in 0..5 {
+            fleet.tick(0.04, &mut wl, 64).unwrap();
+        }
+        // Still zero while dead: no capacity accrues to a corpse.
+        assert_eq!(fleet.exec_credit[1], 0.0);
+        fleet.refresh_chip(1, 1.0).unwrap();
+        assert_eq!(fleet.exec_credit[1], 0.0);
+        // First post-refresh window is shorter than one batch time:
+        // with no banked credit the revived chip cannot execute yet.
+        let served_before = fleet.metrics.per_chip[1].served;
+        fleet.tick(0.04, &mut wl, 64).unwrap();
+        assert_eq!(fleet.metrics.per_chip[1].served, served_before);
+        fleet.flush().unwrap();
         assert_eq!(fleet.metrics.served, fleet.metrics.total_routed());
     }
 

@@ -77,16 +77,21 @@ fn print_help() {
          \u{20}                 --estimator: reserve probe rows and select\n  \
          \u{20}                 sets from estimated drift age, not the clock)\n  \
          fleet           Multi-chip sharded serving with staggered drift\n  \
-         \u{20}                ages (--chips, --stagger-years, --policy\n  \
-         \u{20}                 round-robin|least-queue|drift-aware, --rate,\n  \
-         \u{20}                 --seconds, --engine analytic|pjrt, --store,\n  \
+         \u{20}                ages, event-driven deadline scheduler with\n  \
+         \u{20}                work stealing (--chips, --stagger-years,\n  \
+         \u{20}                 --policy round-robin|least-queue|drift-aware,\n  \
+         \u{20}                 --rate, --seconds, --engine analytic|pjrt,\n  \
+         \u{20}                 --store, --qcap: shed arrivals over N queued\n  \
+         \u{20}                 per chip, --lockstep: legacy tick loop,\n  \
          \u{20}                 --skew: mis-model true drift by a factor,\n  \
          \u{20}                 --estimator: select sets from estimated age)\n  \
          scenario        Scripted stress timeline on the analytic fleet:\n  \
          \u{20}                chip failures, refresh campaigns, traffic\n  \
-         \u{20}                shapes, per-phase report (--chips, --seconds,\n  \
-         \u{20}                 --preset chaos|diurnal|misdrift |\n  \
-         \u{20}                 --script FILE.json, --policy, --seed,\n  \
+         \u{20}                shapes, per-phase report; actions cut serving\n  \
+         \u{20}                windows at exact timestamps (--chips,\n  \
+         \u{20}                 --seconds, --preset chaos|diurnal|misdrift |\n  \
+         \u{20}                 --script FILE.json, --policy, --seed, --qcap,\n  \
+         \u{20}                 --lockstep: legacy tick-grid runner,\n  \
          \u{20}                 --store, --skew: clock-vs-true drift factor,\n  \
          \u{20}                 default 1000 for the misdrift preset)\n  \
          experiment      Regenerate a paper table/figure\n  \
@@ -436,6 +441,11 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     );
 
     let engine = args.get_or("engine", "analytic");
+    // Event-driven scheduler by default; `--lockstep` keeps the legacy
+    // barrier-synchronised tick loop. `--qcap N` bounds each chip's
+    // queue (admission control; arrivals over the cap are shed).
+    let lockstep = args.has_flag("lockstep");
+    let qcap = args.get_usize("qcap", 0)?;
     let mut workload = Workload::new(rate, cfg.seed ^ 0x57a6);
     let summary = match engine.as_str() {
         "analytic" => {
@@ -464,8 +474,13 @@ fn cmd_fleet(args: &Args) -> Result<()> {
                 ),
             };
             let mut fleet = analytic_fleet(&cfg, &profile);
-            fleet.run(seconds, tick, &mut workload, 512)?;
-            fleet.flush()?;
+            fleet.set_queue_cap(qcap);
+            if lockstep {
+                fleet.run(seconds, tick, &mut workload, 512)?;
+                fleet.flush()?;
+            } else {
+                fleet.run_events(seconds, tick, &mut workload, 512)?;
+            }
             fleet.summary()
         }
         "pjrt" => {
@@ -502,13 +517,23 @@ fn cmd_fleet(args: &Args) -> Result<()> {
                 .collect();
             let mut fleet =
                 Fleet::new(chips, policy, cfg.exec_seconds_per_batch);
-            fleet.run(
-                seconds,
-                tick,
-                &mut workload,
-                dep.dataset.test_len(),
-            )?;
-            fleet.flush()?;
+            fleet.set_queue_cap(qcap);
+            if lockstep {
+                fleet.run(
+                    seconds,
+                    tick,
+                    &mut workload,
+                    dep.dataset.test_len(),
+                )?;
+                fleet.flush()?;
+            } else {
+                fleet.run_events(
+                    seconds,
+                    tick,
+                    &mut workload,
+                    dep.dataset.test_len(),
+                )?;
+            }
             fleet.summary()
         }
         other => anyhow::bail!("unknown engine '{other}' (analytic|pjrt)"),
@@ -585,7 +610,9 @@ fn scenario_run(args: &Args) -> Result<()> {
         cost_method, paper_resnet20_layers, Method, RefreshCost,
     };
     use vera_plus::fleet::{analytic_fleet, AccuracyProfile, FleetConfig};
-    use vera_plus::scenario::{run_scenario, Action, ScenarioConfig};
+    use vera_plus::scenario::{
+        run_scenario, run_scenario_events, Action, ScenarioConfig,
+    };
 
     let n_chips = args.get_usize("chips", 6)?;
     anyhow::ensure!(n_chips >= 2, "--chips must be at least 2");
@@ -654,8 +681,16 @@ fn scenario_run(args: &Args) -> Result<()> {
         println!("  t={:>6.2}s  {}", e.at, e.label);
     }
     let mut fleet = analytic_fleet(&fleet_cfg, &profile);
+    fleet.set_queue_cap(args.get_usize("qcap", 0)?);
     let mut workload = Workload::new(0.0, seed ^ 0x57a6);
-    let outcome = run_scenario(&mut fleet, &cfg, &mut workload, 512)?;
+    // Event-driven scheduler by default (timeline actions cut serving
+    // windows at their exact timestamps); `--lockstep` keeps the
+    // legacy tick-grid runner.
+    let outcome = if args.has_flag("lockstep") {
+        run_scenario(&mut fleet, &cfg, &mut workload, 512)?
+    } else {
+        run_scenario_events(&mut fleet, &cfg, &mut workload, 512)?
+    };
     println!();
     outcome.summary.print();
 

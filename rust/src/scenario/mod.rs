@@ -35,7 +35,8 @@ pub use traffic::TrafficShape;
 
 use crate::coordinator::serve::{percentile_sorted, Workload};
 use crate::fleet::{
-    ChipEngine, Fleet, FleetCompletion, FleetSummary, PhaseSummary,
+    ChipEngine, EventLoop, Fleet, FleetCompletion, FleetSummary,
+    PhaseSummary,
 };
 use crate::obs;
 use crate::util::json::{num, s, Json};
@@ -324,10 +325,17 @@ struct PhaseAcc {
     ticks: usize,
     requeued_at_start: usize,
     requeued_at_end: usize,
+    shed_at_start: usize,
+    shed_at_end: usize,
 }
 
 impl PhaseAcc {
-    fn new(name: &str, start: f64, requeues: usize) -> PhaseAcc {
+    fn new(
+        name: &str,
+        start: f64,
+        requeues: usize,
+        shed: usize,
+    ) -> PhaseAcc {
         PhaseAcc {
             name: name.to_string(),
             start,
@@ -338,6 +346,8 @@ impl PhaseAcc {
             ticks: 0,
             requeued_at_start: requeues,
             requeued_at_end: requeues,
+            shed_at_start: shed,
+            shed_at_end: shed,
         }
     }
 
@@ -370,6 +380,7 @@ impl PhaseAcc {
         let requeued = self.requeued_at_end - self.requeued_at_start;
         let (throughput, requeue_rate) =
             PhaseSummary::rates(self.served, requeued, self.start, end);
+        let shed = self.shed_at_end - self.shed_at_start;
         PhaseSummary {
             name: self.name,
             start: self.start,
@@ -382,6 +393,8 @@ impl PhaseAcc {
             requeued,
             throughput,
             requeue_rate,
+            shed,
+            shed_rate: PhaseSummary::shed_rate_of(self.served, shed),
         }
     }
 }
@@ -438,7 +451,12 @@ pub fn run_scenario<E: ChipEngine>(
     events.sort_by(|a, b| a.at.partial_cmp(&b.at).unwrap());
     let mut next_event = 0usize;
     let mut phases: Vec<PhaseSummary> = Vec::new();
-    let mut acc = PhaseAcc::new("start", 0.0, fleet.metrics.requeues);
+    let mut acc = PhaseAcc::new(
+        "start",
+        0.0,
+        fleet.metrics.requeues,
+        fleet.metrics.shed,
+    );
     let mut completions: Vec<FleetCompletion> = Vec::new();
     let mut wall = 0.0f64;
     loop {
@@ -460,41 +478,15 @@ pub fn run_scenario<E: ChipEngine>(
             // Close the running phase first, so redeliveries caused by
             // this event are charged to the phase it opens.
             acc.requeued_at_end = fleet.metrics.requeues;
+            acc.shed_at_end = fleet.metrics.shed;
             phases.push(acc.close(wall, n_chips));
-            acc = PhaseAcc::new(&ev.label, wall,
-                                fleet.metrics.requeues);
-            // Timeline telemetry: the lifecycle action lands on the
-            // same trace as kernel spans, fleet ticks and set switches,
-            // so one trace shows the fault and the reaction.
-            obs::event(
-                match ev.action {
-                    Action::Fail { .. } => "scenario.fail",
-                    Action::Refresh { .. } => "scenario.refresh",
-                    Action::Retire { .. } => "scenario.retire",
-                    Action::Traffic { .. } => "scenario.traffic",
-                    Action::Estimator { .. } => "scenario.estimator",
-                },
-                "scenario",
-                || {
-                    let mut args =
-                        vec![("t_s", num(ev.at)), ("phase", s(&ev.label))];
-                    match ev.action {
-                        Action::Fail { chip }
-                        | Action::Retire { chip }
-                        | Action::Refresh { chip, .. } => {
-                            args.push(("chip", num(chip as f64)));
-                        }
-                        Action::Traffic { .. } => {}
-                        Action::Estimator { on } => {
-                            args.push((
-                                "on",
-                                num(if on { 1.0 } else { 0.0 }),
-                            ));
-                        }
-                    }
-                    args
-                },
+            acc = PhaseAcc::new(
+                &ev.label,
+                wall,
+                fleet.metrics.requeues,
+                fleet.metrics.shed,
             );
+            timeline_obs(ev);
             if let Some(shape) = apply(fleet, &ev.action)
                 .with_context(|| {
                     format!("event '{}' at t={}", ev.label, ev.at)
@@ -520,6 +512,181 @@ pub fn run_scenario<E: ChipEngine>(
     acc.absorb(&tail);
     completions.extend(tail);
     acc.requeued_at_end = fleet.metrics.requeues;
+    acc.shed_at_end = fleet.metrics.shed;
+    phases.push(acc.close(fleet.metrics.wall, n_chips));
+    let mut summary = fleet.summary();
+    summary.phases = phases;
+    Ok(ScenarioOutcome {
+        summary,
+        completions,
+    })
+}
+
+/// Timeline telemetry: the lifecycle action lands on the same trace as
+/// kernel spans, fleet windows and set switches, so one trace shows the
+/// fault and the reaction.
+fn timeline_obs(ev: &Event) {
+    obs::event(
+        match ev.action {
+            Action::Fail { .. } => "scenario.fail",
+            Action::Refresh { .. } => "scenario.refresh",
+            Action::Retire { .. } => "scenario.retire",
+            Action::Traffic { .. } => "scenario.traffic",
+            Action::Estimator { .. } => "scenario.estimator",
+        },
+        "scenario",
+        || {
+            let mut args =
+                vec![("t_s", num(ev.at)), ("phase", s(&ev.label))];
+            match ev.action {
+                Action::Fail { chip }
+                | Action::Retire { chip }
+                | Action::Refresh { chip, .. } => {
+                    args.push(("chip", num(chip as f64)));
+                }
+                Action::Traffic { .. } => {}
+                Action::Estimator { on } => {
+                    args.push(("on", num(if on { 1.0 } else { 0.0 })));
+                }
+            }
+            args
+        },
+    );
+}
+
+/// Event-driven counterpart of [`run_scenario`]: drives the fleet with
+/// the continuous-time [`EventLoop`](crate::fleet::EventLoop) instead
+/// of the lockstep tick loop.
+///
+/// Two behavioural differences from the lockstep runner, both
+/// intentional:
+///
+/// - **Timeline actions cut windows at their exact timestamps.** The
+///   lockstep loop can only apply an action at the next tick boundary;
+///   here the serving window is split at `at`, the action applies, and
+///   the loop resumes — so phase boundaries in the report are the
+///   scripted times, not grid-rounded ones.
+/// - **Windows tile `[0, seconds]` exactly** (the last window is
+///   clamped), where the lockstep loop runs whole ticks and may
+///   overshoot. Traffic rates are still re-pinned per window start.
+///
+/// Determinism: the event loop is serial and seeded, so a fixed
+/// `(config, workload seed)` replays bit-identically regardless of
+/// `VERA_THREADS`.
+pub fn run_scenario_events<E: ChipEngine>(
+    fleet: &mut Fleet<E>,
+    cfg: &ScenarioConfig,
+    workload: &mut Workload,
+    test_len: usize,
+) -> Result<ScenarioOutcome> {
+    let _span = obs::span("scenario.run_events", "scenario");
+    let n_chips = fleet.n_chips();
+    let mut traffic = cfg.traffic.clone();
+    traffic.validate()?;
+    let mut events = cfg.events.clone();
+    events.sort_by(|a, b| a.at.partial_cmp(&b.at).unwrap());
+    let mut next_event = 0usize;
+    let mut phases: Vec<PhaseSummary> = Vec::new();
+    let mut acc = PhaseAcc::new(
+        "start",
+        0.0,
+        fleet.metrics.requeues,
+        fleet.metrics.shed,
+    );
+    // Retry path: requests parked by a previous failed run are
+    // delivered first (exactly-once across errors).
+    let mut completions = std::mem::take(&mut fleet.pending);
+    let start = workload.wall();
+    let mut ev = EventLoop::new(fleet, test_len, start);
+    let mut wall = 0.0f64;
+    loop {
+        // Apply every timeline action due at this point on the wall;
+        // each closes the running phase and opens one named after it.
+        // `at == seconds` is reached once the loop lands on the final
+        // clamped window end, so end-pinned events still execute.
+        while next_event < events.len()
+            && events[next_event].at <= wall + 1e-9
+        {
+            let tev = &events[next_event];
+            acc.requeued_at_end = ev.fleet().metrics.requeues;
+            acc.shed_at_end = ev.fleet().metrics.shed;
+            phases.push(acc.close(wall, n_chips));
+            acc = PhaseAcc::new(
+                &tev.label,
+                wall,
+                ev.fleet().metrics.requeues,
+                ev.fleet().metrics.shed,
+            );
+            timeline_obs(tev);
+            let applied = apply(ev.fleet_mut(), &tev.action)
+                .with_context(|| {
+                    format!("event '{}' at t={}", tev.label, tev.at)
+                });
+            let applied = match applied {
+                Ok(a) => a,
+                Err(e) => {
+                    // Park what already completed so a retry after a
+                    // bad script entry cannot double-deliver.
+                    let mut salvaged = Vec::new();
+                    ev.salvage(&mut salvaged);
+                    drop(ev);
+                    completions.extend(salvaged);
+                    fleet.pending = completions;
+                    return Err(e);
+                }
+            };
+            if let Some(shape) = applied {
+                traffic = shape;
+            }
+            // Lifecycle actions mutate chips behind the scheduler's
+            // back: rebuild routing scores, deadlines and queue views.
+            ev.resync();
+            next_event += 1;
+        }
+        if wall >= cfg.seconds - 1e-9 {
+            break;
+        }
+        // Next cut: the tick boundary, the scenario end, or an earlier
+        // timeline action (exact-time application).
+        let mut end_rel = (wall + cfg.tick).min(cfg.seconds);
+        if next_event < events.len()
+            && events[next_event].at < end_rel - 1e-9
+        {
+            end_rel = events[next_event].at;
+        }
+        workload.rate = traffic.rate_at(wall);
+        let dt = end_rel - wall;
+        let mut comps = Vec::new();
+        if let Err(e) = ev.run_window(start + end_rel, workload, &mut comps)
+        {
+            // Mirror Fleet::run_events: abort salvages held batches
+            // and accounts the partial window's elapsed time.
+            ev.abort(start + wall, &mut comps);
+            drop(ev);
+            completions.extend(comps);
+            fleet.pending = completions;
+            return Err(e);
+        }
+        ev.sample(dt);
+        acc.absorb(&comps);
+        acc.ticks += 1;
+        acc.alive_chip_ticks += ev.fleet().n_alive();
+        completions.extend(comps);
+        wall = end_rel;
+    }
+    // Drain the backlog; drained completions belong to the last phase.
+    let mut tail = Vec::new();
+    if let Err(e) = ev.drain(&mut tail) {
+        drop(ev);
+        completions.extend(tail);
+        fleet.pending = completions;
+        return Err(e);
+    }
+    drop(ev);
+    acc.absorb(&tail);
+    completions.extend(tail);
+    acc.requeued_at_end = fleet.metrics.requeues;
+    acc.shed_at_end = fleet.metrics.shed;
     phases.push(acc.close(fleet.metrics.wall, n_chips));
     let mut summary = fleet.summary();
     summary.phases = phases;
@@ -762,5 +929,163 @@ mod tests {
             .unwrap_err();
         let msg = format!("{err:#}");
         assert!(msg.contains("fail1"), "error lost event context: {msg}");
+    }
+
+    #[test]
+    fn event_scenario_chaos_segments_phases_and_conserves() {
+        let cfg = ScenarioConfig::chaos(3, 6.0);
+        let profile = AccuracyProfile::synthetic(
+            11, 10.0 * YEAR, 0.92, 0.02, 0.5,
+        );
+        let mut fleet = analytic_fleet(&fleet_cfg(3), &profile);
+        let mut wl = Workload::new(0.0, 0x11ad);
+        let out =
+            run_scenario_events(&mut fleet, &cfg, &mut wl, 64)
+                .unwrap();
+        // Same phase structure as the lockstep runner...
+        assert_eq!(out.summary.phases.len(), 4);
+        assert_eq!(out.summary.phases[0].name, "start");
+        assert_eq!(out.summary.phases[1].name, "fail1");
+        assert_eq!(out.summary.phases[2].name, "refresh1");
+        assert_eq!(out.summary.phases[3].name, "retire2");
+        // ...but phase boundaries sit on the scripted times exactly
+        // (the lockstep loop rounds them up to the tick grid).
+        assert!((out.summary.phases[1].start - 0.35 * 6.0).abs() < 1e-9);
+        assert!((out.summary.phases[2].start - 0.65 * 6.0).abs() < 1e-9);
+        assert!((out.summary.phases[3].start - 0.85 * 6.0).abs() < 1e-9);
+        // Phases tile the wall axis.
+        for w in out.summary.phases.windows(2) {
+            assert!((w[0].end - w[1].start).abs() < 1e-9);
+        }
+        // Conservation: every routed request completed exactly once.
+        let mut ids: Vec<u64> = out
+            .completions
+            .iter()
+            .map(|c| c.completion.id)
+            .collect();
+        ids.sort_unstable();
+        assert_eq!(ids.len(), fleet.metrics.total_routed());
+        for (want, &got) in (0..ids.len() as u64).zip(&ids) {
+            assert_eq!(got, want);
+        }
+        assert_eq!(out.summary.served, ids.len());
+        // No negative latencies on the unified wall.
+        assert!(out
+            .completions
+            .iter()
+            .all(|c| c.completion.latency >= 0.0));
+        // The failure phase dips availability; the refresh recovers it.
+        assert!(out.summary.phases[1].availability < 1.0);
+        assert!(
+            out.summary.phases[2].availability
+                > out.summary.phases[1].availability
+        );
+        assert_eq!(fleet.chip_state(1), ChipState::Alive);
+        assert_eq!(fleet.chip_state(2), ChipState::Retired);
+        // Phase served counts sum to the fleet total.
+        let phase_served: usize =
+            out.summary.phases.iter().map(|p| p.served).sum();
+        assert_eq!(phase_served, out.summary.served);
+    }
+
+    #[test]
+    fn event_scenario_replays_bit_identically() {
+        // Same seed, same script → bit-identical completion stream.
+        // The event loop is serial, so this holds regardless of
+        // VERA_THREADS; the CI matrix runs this test at 1 and 4.
+        let run = || {
+            let cfg = ScenarioConfig::chaos(3, 6.0);
+            let profile = AccuracyProfile::synthetic(
+                11, 10.0 * YEAR, 0.92, 0.02, 0.5,
+            );
+            let mut fleet = analytic_fleet(&fleet_cfg(3), &profile);
+            let mut wl = Workload::new(0.0, 0xc0de);
+            let out =
+                run_scenario_events(&mut fleet, &cfg, &mut wl, 64)
+                    .unwrap();
+            let sig: Vec<(u64, usize, u64, bool)> = out
+                .completions
+                .iter()
+                .map(|c| {
+                    (
+                        c.completion.id,
+                        c.chip,
+                        c.completion.latency.to_bits(),
+                        c.completion.correct,
+                    )
+                })
+                .collect();
+            (
+                sig,
+                fleet.metrics.served,
+                fleet.metrics.steals,
+                fleet.metrics.shed,
+            )
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn event_scenario_misdrift_recovers_accuracy() {
+        // The estimator flip works identically under the event loop:
+        // same fleet knob, different serving engine.
+        let cfg = ScenarioConfig::misdrift(3, 6.0);
+        let mut fc = fleet_cfg(3);
+        fc.t0 = 3600.0;
+        fc.stagger = 0.0;
+        fc.accel = 1e6;
+        fc.drift_skew = 1e3;
+        let profile = AccuracyProfile::synthetic(
+            8, 10.0 * YEAR, 0.9, 0.08, 0.3,
+        );
+        let mut fleet = analytic_fleet(&fc, &profile);
+        let mut wl = Workload::new(0.0, 0xd21f7);
+        let out =
+            run_scenario_events(&mut fleet, &cfg, &mut wl, 64)
+                .unwrap();
+        assert_eq!(out.summary.phases.len(), 3);
+        let (clocked, probed, reverted) = (
+            &out.summary.phases[0],
+            &out.summary.phases[1],
+            &out.summary.phases[2],
+        );
+        assert!(clocked.served > 1000, "served {}", clocked.served);
+        assert!(
+            probed.accuracy > clocked.accuracy + 0.05,
+            "clock {} vs estimator {}",
+            clocked.accuracy,
+            probed.accuracy
+        );
+        assert!(
+            reverted.accuracy < probed.accuracy - 0.03,
+            "estimator {} vs reverted {}",
+            probed.accuracy,
+            reverted.accuracy
+        );
+    }
+
+    #[test]
+    fn event_scenario_diurnal_stays_single_phase_and_available() {
+        let cfg = ScenarioConfig::diurnal(2, 4.0);
+        let profile = AccuracyProfile::uncompensated(0.9, 0.0, 0.5);
+        let mut fleet = analytic_fleet(&fleet_cfg(2), &profile);
+        let mut wl = Workload::new(0.0, 42);
+        let out =
+            run_scenario_events(&mut fleet, &cfg, &mut wl, 64)
+                .unwrap();
+        // No lifecycle events: one phase, fully available throughout.
+        assert_eq!(out.summary.phases.len(), 1);
+        assert!((out.summary.phases[0].availability - 1.0).abs() < 1e-9);
+        assert_eq!(out.summary.phases[0].shed, 0);
+        let mut ids: Vec<u64> = out
+            .completions
+            .iter()
+            .map(|c| c.completion.id)
+            .collect();
+        ids.sort_unstable();
+        assert_eq!(ids.len(), fleet.metrics.total_routed());
+        for (want, &got) in (0..ids.len() as u64).zip(&ids) {
+            assert_eq!(got, want);
+        }
     }
 }
