@@ -15,7 +15,10 @@
 //!    shed rate and conservation (`routed + shed = arrivals`) are
 //!    checked and recorded;
 //!  - a 64-chip chaos-scenario run on the event scheduler, reported
-//!    per phase (p50/p99 latency, throughput, availability, shed).
+//!    per phase (p50/p99 latency, throughput, availability, shed);
+//!  - a 64-chip flaky-fleet comparison (same seed, fault injection
+//!    on): breaker off aborts on the first fault, breaker on
+//!    completes with exactly-once conservation — both recorded.
 //!
 //! Emits the repo-root `BENCH_fleet.json` perf-trajectory point.
 //! Quick mode for CI: set `VERA_BENCH_QUICK=1`.
@@ -28,7 +31,9 @@ use vera_plus::fleet::{
     analytic_fleet, AccuracyProfile, BalancePolicy, FleetConfig,
 };
 use vera_plus::rram::YEAR;
-use vera_plus::scenario::{run_scenario_events, ScenarioConfig};
+use vera_plus::scenario::{
+    flaky_fleet, run_scenario_events, FlakyConfig, ScenarioConfig,
+};
 use vera_plus::util::bencher::Bencher;
 use vera_plus::util::json::{arr, num, obj, s, Json};
 
@@ -256,6 +261,80 @@ fn main() -> anyhow::Result<()> {
             .collect()
     };
 
+    // Self-healing comparison: the identical 64-chip flaky run
+    // (transient faults + latency spikes + one persistent-fault chip,
+    // same seed) with the breaker off and on. Off must abort on the
+    // first fault; on must complete with conservation intact.
+    let breaker_rows: Vec<Json> = {
+        let fcfg = FlakyConfig::default();
+        let scen = ScenarioConfig::flaky(64, 2.0);
+        let mut rows = Vec::new();
+        for &on in &[false, true] {
+            let mut c = config(64);
+            c.health.enabled = on;
+            let mut fleet = flaky_fleet(&c, &profile, &fcfg);
+            let mut wl = Workload::new(0.0, 0xbe7c4 ^ 0x57a6);
+            let res =
+                run_scenario_events(&mut fleet, &scen, &mut wl, 512);
+            let label = if on { "breaker_on" } else { "breaker_off" };
+            match res {
+                Err(e) => {
+                    assert!(
+                        !on,
+                        "breaker-on flaky run must not abort: {e}"
+                    );
+                    println!(
+                        "flaky 64 chips, {label}: ABORTED on the \
+                         first fault ({e})"
+                    );
+                    rows.push(obj(vec![
+                        ("config", s(label)),
+                        ("aborted", num(1.0)),
+                        ("served", num(0.0)),
+                        ("availability", num(0.0)),
+                    ]));
+                }
+                Ok(out) => {
+                    assert!(
+                        on,
+                        "breaker-off flaky run should have aborted"
+                    );
+                    let sum = &out.summary;
+                    assert_eq!(
+                        fleet.metrics.total_routed(),
+                        sum.served + sum.shed_deadline,
+                        "flaky conservation broke"
+                    );
+                    println!(
+                        "flaky 64 chips, {label}: served {} \
+                         (availability {:.3}, {} opens, {} refreshes, \
+                         {} deadline-shed)",
+                        sum.served,
+                        sum.availability,
+                        sum.breaker_opens,
+                        sum.breaker_refreshes,
+                        sum.shed_deadline,
+                    );
+                    rows.push(obj(vec![
+                        ("config", s(label)),
+                        ("aborted", num(0.0)),
+                        ("served", num(sum.served as f64)),
+                        ("availability", num(sum.availability)),
+                        ("throughput_req_s", num(sum.throughput)),
+                        ("shed_deadline", num(sum.shed_deadline as f64)),
+                        ("retries", num(sum.retries as f64)),
+                        ("breaker_opens", num(sum.breaker_opens as f64)),
+                        (
+                            "breaker_refreshes",
+                            num(sum.breaker_refreshes as f64),
+                        ),
+                    ]));
+                }
+            }
+        }
+        rows
+    };
+
     // Perf trajectory point at the repo root: bench rows + the
     // event-vs-lockstep speedups + simulated serving numbers + the
     // 64-chip chaos phase table.
@@ -294,6 +373,7 @@ fn main() -> anyhow::Result<()> {
         ("speedups", arr(speedups)),
         ("sim", arr(sim_rows)),
         ("chaos_64chip_phases", arr(phases)),
+        ("flaky_breaker_64chip", arr(breaker_rows)),
     ]);
     let root_json =
         concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_fleet.json");

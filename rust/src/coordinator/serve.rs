@@ -61,6 +61,13 @@ pub struct Request {
     pub arrival_age: f64,
     /// Arrival time on the serving (wall) axis, seconds.
     pub arrival_wall: f64,
+    /// Delivery attempts so far (0 = first dispatch; breaker
+    /// salvage/redelivery increments it, bounded by the fleet's
+    /// retry budget).
+    pub attempt: u32,
+    /// Absolute wall deadline: a salvaged request past it is shed as
+    /// `deadline_exceeded`. `INFINITY` = no deadline (the default).
+    pub deadline: f64,
 }
 
 /// Completed request with measured latency.
@@ -302,6 +309,10 @@ pub struct Server {
     probe_rng: Pcg64,
     /// Most recent estimate (kept for telemetry and routing weights).
     last_estimate: Option<AgeEstimate>,
+    /// Degradation-ladder override: a temporary batch-size ceiling
+    /// below `policy.max_batch` (smaller lowered graphs get picked
+    /// while the fleet sheds load). `None` = nominal.
+    batch_cap: Option<usize>,
 }
 
 impl Server {
@@ -342,7 +353,14 @@ impl Server {
             estimator: AgeEstimator::default(),
             probe_rng,
             last_estimate: None,
+            batch_cap: None,
         }
+    }
+
+    /// Cap (or un-cap) the per-step batch size without touching the
+    /// configured policy — the degradation ladder's rung-2 lever.
+    pub fn set_batch_cap(&mut self, cap: Option<usize>) {
+        self.batch_cap = cap;
     }
 
     /// Flip clock-vs-estimator arbitration. With no probe plan on the
@@ -544,10 +562,13 @@ impl Server {
         // intended take, the batch splits: this invocation runs the
         // largest available graph full, the rest stays queued for the
         // next step.
-        let want = self.queue.len().min(self.policy.max_batch);
+        let eff_max = match self.batch_cap {
+            Some(cap) => self.policy.max_batch.min(cap.max(1)),
+            None => self.policy.max_batch,
+        };
+        let want = self.queue.len().min(eff_max);
         let exec_batch =
-            pick_exec_batch(&self.graph_batches, want,
-                            self.policy.max_batch);
+            pick_exec_batch(&self.graph_batches, want, eff_max);
         let take = want.min(exec_batch);
         let batch: Vec<Request> =
             self.queue.drain(..take).collect();
@@ -714,6 +735,8 @@ impl Workload {
             sample: self.rng.below(test_len),
             arrival_age: clock.device_age(),
             arrival_wall: self.wall,
+            attempt: 0,
+            deadline: f64::INFINITY,
         };
         self.next_id += 1;
         Some(req)
@@ -825,6 +848,8 @@ mod tests {
                 sample: i as usize % NATIVE_TEST_LEN,
                 arrival_age: 1.0,
                 arrival_wall: 0.0,
+                attempt: 0,
+                deadline: f64::INFINITY,
             });
         }
         let comps = srv.drain(0.001).expect(
@@ -912,6 +937,8 @@ mod tests {
                 sample: 0,
                 arrival_age: 1.0,
                 arrival_wall: 2.0 + i as f64 * 0.01,
+                attempt: 0,
+                deadline: f64::INFINITY,
             });
         }
         assert_eq!(srv.oldest_arrival(), Some(2.0));

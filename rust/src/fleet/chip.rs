@@ -98,6 +98,13 @@ pub trait ChipEngine: Send {
     /// keep clock behavior.
     fn set_age_source(&mut self, _src: AgeSource) {}
 
+    /// Temporarily cap the per-step batch size below the policy's
+    /// `max_batch` (`None` = nominal). The degradation ladder's
+    /// rung-2 lever: smaller batches mean smaller lowered graphs and
+    /// shorter head-of-line blocking under pressure. Default no-op
+    /// for engines without batch control.
+    fn set_batch_cap(&mut self, _cap: Option<usize>) {}
+
     /// Execute one batch (no-op on an empty queue), returning its
     /// [`Completion`]s.
     fn step(&mut self, wall_per_exec: f64) -> Result<Vec<Completion>>;
@@ -193,6 +200,10 @@ impl ChipEngine for Server {
         Server::set_age_source(self, src);
     }
 
+    fn set_batch_cap(&mut self, cap: Option<usize>) {
+        Server::set_batch_cap(self, cap);
+    }
+
     fn step(&mut self, wall_per_exec: f64) -> Result<Vec<Completion>> {
         Server::step(self, wall_per_exec)
     }
@@ -230,6 +241,8 @@ pub struct AnalyticEngine {
     /// [`crate::compensation::estimator`]'s own tests and the real
     /// server path.
     age_source: AgeSource,
+    /// Degradation-ladder batch ceiling (`None` = nominal).
+    batch_cap: Option<usize>,
 }
 
 impl AnalyticEngine {
@@ -252,6 +265,7 @@ impl AnalyticEngine {
             drift_skew: 1.0,
             skew_origin,
             age_source: AgeSource::Clock,
+            batch_cap: None,
         }
     }
 
@@ -317,7 +331,11 @@ impl AnalyticEngine {
             });
             crate::obs::counter_add("serve.set_switches", 1);
         }
-        let take = self.queue.len().min(self.policy.max_batch);
+        let eff_max = match self.batch_cap {
+            Some(cap) => self.policy.max_batch.min(cap.max(1)),
+            None => self.policy.max_batch,
+        };
+        let take = self.queue.len().min(eff_max);
         let batch: Vec<Request> = self.queue.drain(..take).collect();
         self.wall += wall_per_exec;
         self.clock.advance(wall_per_exec);
@@ -431,6 +449,10 @@ impl ChipEngine for AnalyticEngine {
         self.age_source = src;
     }
 
+    fn set_batch_cap(&mut self, cap: Option<usize>) {
+        self.batch_cap = cap;
+    }
+
     fn step(&mut self, wall_per_exec: f64) -> Result<Vec<Completion>> {
         Ok(AnalyticEngine::step(self, wall_per_exec))
     }
@@ -450,6 +472,8 @@ mod tests {
             sample: 0,
             arrival_age: 0.0,
             arrival_wall,
+            attempt: 0,
+            deadline: f64::INFINITY,
         }
     }
 
@@ -492,6 +516,22 @@ mod tests {
         assert_eq!(ChipEngine::queue_len(&e), 12);
         // Oldest-first: ids 0..8 completed.
         assert!(comps.iter().map(|c| c.id).eq(0..8));
+    }
+
+    #[test]
+    fn batch_cap_shrinks_and_restores_the_take() {
+        let mut e = engine(1.0);
+        for i in 0..20 {
+            ChipEngine::submit(&mut e, req(i, 0.0));
+        }
+        ChipEngine::set_batch_cap(&mut e, Some(4));
+        let comps = e.drain_budgeted(1, 0.001).unwrap();
+        assert_eq!(comps.len(), 4, "rung-2 cap must shrink the batch");
+        // A zero cap clamps to 1 instead of stalling the queue.
+        ChipEngine::set_batch_cap(&mut e, Some(0));
+        assert_eq!(e.drain_budgeted(1, 0.001).unwrap().len(), 1);
+        ChipEngine::set_batch_cap(&mut e, None);
+        assert_eq!(e.drain_budgeted(1, 0.001).unwrap().len(), 8);
     }
 
     #[test]

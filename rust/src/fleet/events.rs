@@ -59,9 +59,29 @@
 //! nothing new. If a step errors, completions already produced this
 //! run are parked in `Fleet::pending` and redelivered by the next
 //! successful run: exactly-once across mid-flush failures.
+//!
+//! **Self-healing.** With [`crate::fleet::HealthConfig::enabled`]
+//! (the default), a chip `step()` error no longer aborts the run:
+//! the error feeds the chip's health scores, the circuit breaker
+//! quarantines the chip once the failure threshold (or EWMA floor)
+//! trips, its queue is salvaged and redelivered to survivors with a
+//! bumped attempt count (requests out of retry budget or past their
+//! deadline are shed into the `deadline_exceeded` class, so
+//! `routed = served + shed_deadline + in_flight` conserves), and a
+//! **Probe** event fires after an exponentially backed-off, jittered
+//! delay — probe success rejoins the chip, repeated failure schedules
+//! a `refresh_chip` campaign. The last routable chip never opens:
+//! it degrades to pass-through (salvage-to-self with the same retry
+//! budget) so a drain always terminates. A fleet-global degradation
+//! ladder reacts to queue/quarantine pressure: rung 1 shrinks
+//! `max_wait`, rung 2 halves the effective batch, rung 3 adds an
+//! admission queue cap; rungs release with hysteresis. All decisions
+//! are functions of `(time, seq)`-ordered events and seeded RNG
+//! streams, so replays stay bit-identical at any `VERA_THREADS`.
 
 use crate::coordinator::serve::{Completion, Request, Workload};
 use crate::fleet::chip::ChipEngine;
+use crate::fleet::health::BreakerState;
 use crate::fleet::router::BalancePolicy;
 use crate::fleet::{ChipState, Fleet, FleetCompletion};
 use crate::obs;
@@ -80,6 +100,9 @@ enum EventKind {
     BatchClose { chip: usize, deadline: f64 },
     /// Chip finishes the batch it started `exec_seconds` ago.
     ExecComplete { chip: usize },
+    /// Circuit-breaker backoff expiry: offer the quarantined chip a
+    /// Half-Open probe (or a scheduled refresh) if it is still Open.
+    Probe { chip: usize },
 }
 
 /// Heap entry: events order by `(time, seq)` — `seq` is assigned
@@ -179,9 +202,16 @@ pub struct EventLoop<'a, E: ChipEngine> {
     over_cap: BTreeSet<usize>,
     /// Round-robin cursor (only used under that policy).
     rr_next: usize,
-    /// Cached per-chip batch policy (static over a run).
+    /// Effective per-chip batch policy (degradation ladder rungs
+    /// rewrite these from the `base_*` copies).
     max_batch: Vec<usize>,
     max_wait: Vec<f64>,
+    /// Nominal (rung-0) batch policy, captured at construction.
+    base_batch: Vec<usize>,
+    base_wait: Vec<f64>,
+    /// Rung-3 admission queue cap (None below rung 3). Combines with
+    /// `Fleet::queue_cap` by `min`.
+    ladder_qcap: Option<usize>,
 }
 
 impl<'a, E: ChipEngine> EventLoop<'a, E> {
@@ -220,9 +250,23 @@ impl<'a, E: ChipEngine> EventLoop<'a, E> {
             routes: BinaryHeap::new(),
             over_cap: BTreeSet::new(),
             rr_next: 0,
+            base_batch: max_batch.clone(),
+            base_wait: max_wait.clone(),
             max_batch,
             max_wait,
+            ladder_qcap: None,
         };
+        // Health state outlives any one EventLoop (it lives on the
+        // fleet): re-apply the persisted ladder rung and re-arm a
+        // probe for every chip still quarantined from a prior run.
+        ev.apply_rung();
+        for i in 0..n {
+            if let BreakerState::Open { until, .. } =
+                ev.fleet.health.chips[i].state
+            {
+                ev.push(until.max(start), EventKind::Probe { chip: i });
+            }
+        }
         for i in 0..n {
             ev.touch(i);
             ev.update_over_cap(i);
@@ -281,11 +325,20 @@ impl<'a, E: ChipEngine> EventLoop<'a, E> {
     fn update_over_cap(&mut self, i: usize) {
         if self.fleet.chips[i].queue_len() > self.max_batch[i]
             && self.fleet.state[i] != ChipState::Failed
+            && !self.fleet.health.quarantined(i)
         {
             self.over_cap.insert(i);
         } else {
             self.over_cap.remove(&i);
         }
+    }
+
+    /// Alive and not breaker-quarantined — eligible for routing,
+    /// stealing and batch starts. Half-Open chips are routable (the
+    /// probe is real traffic).
+    fn routable(&self, i: usize) -> bool {
+        self.fleet.state[i] == ChipState::Alive
+            && !self.fleet.health.quarantined(i)
     }
 
     fn chip_changed(&mut self, i: usize) {
@@ -300,20 +353,42 @@ impl<'a, E: ChipEngine> EventLoop<'a, E> {
     fn pick_route(&mut self) -> usize {
         let n = self.fleet.chips.len();
         match self.fleet.router.policy {
-            BalancePolicy::RoundRobin => loop {
-                let i = self.rr_next % n;
-                self.rr_next = self.rr_next.wrapping_add(1);
-                if self.fleet.state[i] == ChipState::Alive {
-                    return i;
+            BalancePolicy::RoundRobin => {
+                for _ in 0..n {
+                    let i = self.rr_next % n;
+                    self.rr_next = self.rr_next.wrapping_add(1);
+                    if self.routable(i) {
+                        return i;
+                    }
                 }
-            },
+                // Every live chip is quarantined: route to any alive
+                // chip rather than drop traffic on the floor (the
+                // last-chip pass-through keeps it from erroring out).
+                loop {
+                    let i = self.rr_next % n;
+                    self.rr_next = self.rr_next.wrapping_add(1);
+                    if self.fleet.state[i] == ChipState::Alive {
+                        return i;
+                    }
+                }
+            }
             _ => loop {
-                let e = self
-                    .routes
-                    .pop()
-                    .expect("routing needs >= 1 live chip");
+                let Some(e) = self.routes.pop() else {
+                    // Heap exhausted: every entry was stale or its
+                    // chip unroutable (all survivors quarantined).
+                    // Rebuild the scores and fall back to any alive
+                    // chip.
+                    for i in 0..n {
+                        self.touch(i);
+                    }
+                    return (0..n)
+                        .find(|&i| {
+                            self.fleet.state[i] == ChipState::Alive
+                        })
+                        .expect("routing needs >= 1 live chip");
+                };
                 if e.stamp != self.stamp[e.chip]
-                    || self.fleet.state[e.chip] != ChipState::Alive
+                    || !self.routable(e.chip)
                 {
                     continue;
                 }
@@ -323,10 +398,19 @@ impl<'a, E: ChipEngine> EventLoop<'a, E> {
     }
 
     /// Route one arrival; shed it if the target queue is at the
-    /// admission cap.
+    /// admission cap (fleet cap, tightened by ladder rung 3).
     fn route_and_submit(&mut self, mut req: Request) -> Result<()> {
+        let budget = self.fleet.health.cfg.deadline;
+        if budget.is_finite() && req.deadline.is_infinite() {
+            req.deadline = req.arrival_wall + budget;
+        }
         let i = self.pick_route();
-        let cap = self.fleet.queue_cap;
+        let cap = match (self.fleet.queue_cap, self.ladder_qcap) {
+            (0, None) => 0,
+            (0, Some(l)) => l,
+            (c, None) => c,
+            (c, Some(l)) => c.min(l),
+        };
         if cap > 0 && self.fleet.chips[i].queue_len() >= cap {
             self.fleet.metrics.record_shed(1);
             obs::counter_add("fleet.shed", 1);
@@ -345,7 +429,10 @@ impl<'a, E: ChipEngine> EventLoop<'a, E> {
     /// a full batch starts immediately; a partial batch gets (or
     /// keeps) a close deadline at `oldest_arrival + max_wait`.
     fn consider_batch(&mut self, i: usize) -> Result<()> {
-        if self.busy[i] || self.fleet.state[i] == ChipState::Failed {
+        if self.busy[i]
+            || self.fleet.state[i] == ChipState::Failed
+            || self.fleet.health.quarantined(i)
+        {
             return Ok(());
         }
         let ql = self.fleet.chips[i].queue_len();
@@ -384,7 +471,24 @@ impl<'a, E: ChipEngine> EventLoop<'a, E> {
         }
         self.fleet.chips[i].align_wall(t);
         let exec = self.fleet.exec_seconds_per_batch;
-        let comps = self.fleet.chips[i].step(exec)?;
+        let comps = match self.fleet.chips[i].step(exec) {
+            Ok(c) => c,
+            Err(e) => return self.contain_step_error(i, e),
+        };
+        let budget = self.fleet.health.cfg.deadline;
+        let misses = if budget.is_finite() {
+            comps.iter().filter(|c| c.latency > budget).count()
+        } else {
+            0
+        };
+        if self.fleet.health.note_success(i, comps.len(), misses) {
+            // Half-Open probe succeeded: the chip rejoins the fleet.
+            self.fleet.metrics.breaker_rejoins += 1;
+            obs::counter_add("fleet.breaker_rejoins", 1);
+            obs::event("fleet.breaker_close", "fleet", || {
+                vec![("chip", num(i as f64))]
+            });
+        }
         self.fleet.metrics.record_completions(i, &comps);
         obs::counter_add("fleet.served", comps.len() as u64);
         self.held[i] = comps;
@@ -393,6 +497,142 @@ impl<'a, E: ChipEngine> EventLoop<'a, E> {
         self.push(t + exec, EventKind::ExecComplete { chip: i });
         self.chip_changed(i);
         Ok(())
+    }
+
+    /// A chip `step()` errored. With the breaker disabled this is the
+    /// legacy abort; with it enabled the error is contained: health
+    /// bookkeeping, breaker trip (unless this is the last routable
+    /// chip), queue salvage and redelivery under the retry budget.
+    /// The engine error contract (fail *before* touching the queue,
+    /// as `FailingEngine`/`FlakyEngine` do) is what makes the queue
+    /// salvageable here.
+    fn contain_step_error(
+        &mut self,
+        i: usize,
+        err: anyhow::Error,
+    ) -> Result<()> {
+        if !self.fleet.health.cfg.enabled {
+            return Err(err);
+        }
+        obs::counter_add("fleet.chip_errors", 1);
+        obs::event("fleet.chip_error", "fleet", || {
+            vec![("chip", num(i as f64))]
+        });
+        let should_open = self.fleet.health.note_error(i);
+        let n = self.fleet.chips.len();
+        let survivors =
+            (0..n).any(|j| j != i && self.routable(j));
+        if !survivors {
+            // Never kill the last routable chip: pass through with
+            // logging — salvage to self under the retry budget, so a
+            // persistent fault sheds (deadline_exceeded) instead of
+            // looping forever.
+            self.fleet.metrics.breaker_pass_throughs += 1;
+            obs::counter_add("fleet.breaker_pass_throughs", 1);
+            return self.redeliver_orphans(i, true);
+        }
+        if should_open {
+            let until = self.fleet.health.open(i, self.now);
+            self.fleet.metrics.breaker_opens += 1;
+            obs::counter_add("fleet.breaker_opens", 1);
+            obs::event("fleet.breaker_open", "fleet", || {
+                vec![("chip", num(i as f64)), ("until", num(until))]
+            });
+            self.deadline[i] = None;
+            self.push(until, EventKind::Probe { chip: i });
+        }
+        self.redeliver_orphans(i, false)
+    }
+
+    /// Salvage chip `i`'s queue after a step error and redeliver it
+    /// with a bumped attempt count — to the surviving fleet
+    /// (excluding `i`), or back to `i` itself in the last-chip
+    /// pass-through case. Requests over the retry budget or past
+    /// their deadline are shed as `deadline_exceeded`, which keeps
+    /// `routed = served + shed_deadline + in_flight` exact.
+    fn redeliver_orphans(
+        &mut self,
+        i: usize,
+        to_self: bool,
+    ) -> Result<()> {
+        let orphans = self.fleet.chips[i].take_queue();
+        self.chip_changed(i);
+        if orphans.is_empty() {
+            return Ok(());
+        }
+        let max_attempts = self.fleet.health.cfg.max_attempts;
+        let mut views = self.fleet.views();
+        views[i].alive = to_self;
+        let mut shed = 0usize;
+        let mut retried = 0usize;
+        let mut targets = BTreeSet::new();
+        for mut req in orphans {
+            req.attempt += 1;
+            if req.attempt > max_attempts || self.now > req.deadline {
+                shed += 1;
+                continue;
+            }
+            retried += 1;
+            let j = if to_self {
+                i
+            } else {
+                self.fleet.router.route(&views)
+            };
+            views[j].queue_len += 1;
+            req.arrival_age = self.fleet.chips[j].device_age();
+            self.fleet.chips[j].submit(req);
+            targets.insert(j);
+        }
+        self.fleet.metrics.record_requeue(i, retried);
+        self.fleet.metrics.record_retry(retried);
+        self.fleet.metrics.record_shed_deadline(shed);
+        if shed > 0 {
+            obs::counter_add("fleet.shed_deadline", shed as u64);
+        }
+        for j in targets {
+            self.chip_changed(j);
+            // Self-redelivery recurses through start_exec on a still-
+            // failing chip; the attempt bump above bounds the depth
+            // at `max_attempts` before everything sheds.
+            self.consider_batch(j)?;
+        }
+        Ok(())
+    }
+
+    /// Probe timer fired for a quarantined chip: schedule a refresh
+    /// campaign if its record (or predicted accuracy) warrants one,
+    /// otherwise go Half-Open and offer it real traffic.
+    fn on_probe(&mut self, i: usize) -> Result<()> {
+        if self.fleet.state[i] != ChipState::Alive
+            || !matches!(
+                self.fleet.health.chips[i].state,
+                BreakerState::Open { .. }
+            )
+        {
+            // Stale probe: the chip failed, was refreshed, or already
+            // closed since this event was scheduled.
+            return Ok(());
+        }
+        self.fleet.metrics.breaker_probes += 1;
+        obs::counter_add("fleet.breaker_probes", 1);
+        let acc = self.fleet.chips[i].predicted_accuracy();
+        if self.fleet.health.wants_refresh(i, acc) {
+            let t0 = self.fleet.health.cfg.refresh_t0;
+            self.fleet.refresh_chip(i, t0)?;
+            self.fleet.metrics.breaker_refreshes += 1;
+            obs::counter_add("fleet.breaker_refreshes", 1);
+            obs::event("fleet.breaker_refresh", "fleet", || {
+                vec![("chip", num(i as f64)), ("t0", num(t0))]
+            });
+            self.aged_to[i] = self.now;
+        } else {
+            self.fleet.health.begin_probe(i);
+            obs::event("fleet.breaker_half_open", "fleet", || {
+                vec![("chip", num(i as f64))]
+            });
+        }
+        self.chip_changed(i);
+        self.consider_batch(i)
     }
 
     /// Deliver a finished batch, then keep the chip working: next
@@ -417,7 +657,7 @@ impl<'a, E: ChipEngine> EventLoop<'a, E> {
         if self.fleet.chips[i].queue_len() > 0 {
             return self.consider_batch(i);
         }
-        if self.fleet.state[i] == ChipState::Alive {
+        if self.routable(i) {
             return self.try_steal(i);
         }
         Ok(())
@@ -428,12 +668,15 @@ impl<'a, E: ChipEngine> EventLoop<'a, E> {
     /// leaving the victim at least one full batch. Ties break to the
     /// lowest victim index.
     fn try_steal(&mut self, i: usize) -> Result<()> {
-        if self.over_cap.is_empty() {
+        if self.over_cap.is_empty() || !self.routable(i) {
             return Ok(());
         }
         let mut victim: Option<(usize, usize)> = None;
         for &j in &self.over_cap {
-            if j == i || self.fleet.state[j] == ChipState::Failed {
+            if j == i
+                || self.fleet.state[j] == ChipState::Failed
+                || self.fleet.health.quarantined(j)
+            {
                 continue;
             }
             let ql = self.fleet.chips[j].queue_len();
@@ -506,7 +749,10 @@ impl<'a, E: ChipEngine> EventLoop<'a, E> {
     /// starts, post-lifecycle reconciliation, drain progress).
     fn reconcile_batches(&mut self) -> Result<()> {
         for i in 0..self.fleet.chips.len() {
-            if self.busy[i] || self.fleet.state[i] == ChipState::Failed {
+            if self.busy[i]
+                || self.fleet.state[i] == ChipState::Failed
+                || self.fleet.health.quarantined(i)
+            {
                 continue;
             }
             let ql = self.fleet.chips[i].queue_len();
@@ -522,7 +768,7 @@ impl<'a, E: ChipEngine> EventLoop<'a, E> {
         // wake it).
         for i in 0..self.fleet.chips.len() {
             if !self.busy[i]
-                && self.fleet.state[i] == ChipState::Alive
+                && self.routable(i)
                 && self.fleet.chips[i].queue_len() == 0
             {
                 self.try_steal(i)?;
@@ -576,6 +822,9 @@ impl<'a, E: ChipEngine> EventLoop<'a, E> {
                 EventKind::ExecComplete { chip } => {
                     self.on_exec_complete(chip, out)?;
                 }
+                EventKind::Probe { chip } => {
+                    self.on_probe(chip)?;
+                }
             }
         }
         self.now = end;
@@ -588,8 +837,11 @@ impl<'a, E: ChipEngine> EventLoop<'a, E> {
     pub fn sample(&mut self, dt: f64) {
         self.age_all_to(self.now);
         self.fleet.ref_clock.advance(dt);
-        let alive = self.fleet.n_alive();
+        // Availability counts routable chips: a quarantined chip is
+        // not serving even though it has not failed.
+        let alive = self.fleet.n_routable();
         self.fleet.metrics.end_tick(dt, alive);
+        self.update_ladder();
         let metrics_on = obs::metrics_enabled();
         for i in 0..self.fleet.chips.len() {
             let depth = self.fleet.chips[i].queue_len();
@@ -631,6 +883,7 @@ impl<'a, E: ChipEngine> EventLoop<'a, E> {
     }
 
     fn drain_inner(&mut self, out: &mut Vec<FleetCompletion>) -> Result<()> {
+        let mut stalls = 0u32;
         loop {
             self.reconcile_batches()?;
             let working = self.busy.iter().any(|&b| b)
@@ -645,10 +898,20 @@ impl<'a, E: ChipEngine> EventLoop<'a, E> {
             if !working {
                 return Ok(());
             }
-            let e = self
-                .heap
-                .pop()
-                .expect("queued fleet work with an empty event heap");
+            let Some(e) = self.heap.pop() else {
+                // Breaker containment can leave queued work with no
+                // armed event for one pass (reconcile re-arms it at
+                // the top of the loop, consuming retry budget as it
+                // goes). A loop that never drains the heap again is
+                // a real bug, so bound the passes.
+                stalls += 1;
+                anyhow::ensure!(
+                    stalls < 10_000,
+                    "event drain stalled with queued work"
+                );
+                continue;
+            };
+            stalls = 0;
             self.now = self.now.max(e.time);
             match e.kind {
                 // Arrivals never outlive their window, but route one
@@ -665,6 +928,9 @@ impl<'a, E: ChipEngine> EventLoop<'a, E> {
                 }
                 EventKind::ExecComplete { chip } => {
                     self.on_exec_complete(chip, out)?;
+                }
+                EventKind::Probe { chip } => {
+                    self.on_probe(chip)?;
                 }
             }
         }
@@ -702,8 +968,103 @@ impl<'a, E: ChipEngine> EventLoop<'a, E> {
         self.age_all_to(self.now);
         let elapsed = (self.now - window_start).max(0.0);
         self.fleet.ref_clock.advance(elapsed);
-        let alive = self.fleet.n_alive();
+        let alive = self.fleet.n_routable();
         self.fleet.metrics.end_tick(elapsed, alive);
+    }
+
+    /// Apply the current ladder rung to the effective batch policy:
+    /// rung 1 shrinks `max_wait` to a quarter, rung 2 additionally
+    /// halves the effective batch (and caps the engines' lowered
+    /// graph pick to match), rung 3 adds an admission queue cap of
+    /// twice the largest nominal batch.
+    fn apply_rung(&mut self) {
+        let rung = self.fleet.health.rung;
+        for i in 0..self.fleet.chips.len() {
+            self.max_wait[i] = if rung >= 1 {
+                self.base_wait[i] * 0.25
+            } else {
+                self.base_wait[i]
+            };
+            let eff = if rung >= 2 {
+                (self.base_batch[i] / 2).max(1)
+            } else {
+                self.base_batch[i]
+            };
+            self.max_batch[i] = eff;
+            self.fleet.chips[i].set_batch_cap(if rung >= 2 {
+                Some(eff)
+            } else {
+                None
+            });
+        }
+        self.ladder_qcap = if rung >= 3 {
+            Some(
+                self.base_batch.iter().copied().max().unwrap_or(32) * 2,
+            )
+        } else {
+            None
+        };
+    }
+
+    /// Re-evaluate the degradation ladder on the sample grid (a pure
+    /// function of sim state at tick boundaries, so replays stay
+    /// deterministic). Pressure = queued work over routable capacity
+    /// (in units of 8 nominal batches) plus the quarantined fraction.
+    fn update_ladder(&mut self) {
+        if !self.fleet.health.cfg.enabled {
+            return;
+        }
+        let n = self.fleet.chips.len();
+        let mut queued = 0usize;
+        let mut capacity = 0usize;
+        let mut alive = 0usize;
+        let mut routable = 0usize;
+        for i in 0..n {
+            if self.fleet.state[i] != ChipState::Alive {
+                continue;
+            }
+            alive += 1;
+            if self.fleet.health.quarantined(i) {
+                continue;
+            }
+            routable += 1;
+            queued += self.fleet.chips[i].queue_len();
+            capacity += self.base_batch[i];
+        }
+        let quarantined_frac = if alive > 0 {
+            (alive - routable) as f64 / alive as f64
+        } else {
+            0.0
+        };
+        let backlog = if capacity > 0 {
+            queued as f64 / (8.0 * capacity as f64)
+        } else {
+            1.0
+        };
+        let pressure = backlog + quarantined_frac;
+        if let Some(rung) =
+            self.fleet.health.update_rung(pressure, self.now)
+        {
+            obs::counter_add("fleet.ladder_changes", 1);
+            obs::event("fleet.ladder", "fleet", || {
+                vec![
+                    ("rung", num(rung as f64)),
+                    ("pressure", num(pressure)),
+                ]
+            });
+            self.apply_rung();
+            // Effective policy changed: re-evaluate over-cap sets and
+            // route scores against the new batch sizes.
+            for i in 0..n {
+                self.chip_changed(i);
+            }
+        }
+        if obs::metrics_enabled() {
+            obs::gauge_set(
+                "fleet.ladder_rung",
+                self.fleet.health.rung as f64,
+            );
+        }
     }
 
     fn age_all_to(&mut self, t: f64) {
@@ -773,7 +1134,9 @@ mod tests {
         BatchPolicy, LifetimeClock, ServeMetrics,
     };
     use crate::fleet::profile::AccuracyProfile;
-    use crate::fleet::{analytic_fleet, AnalyticEngine, FleetConfig};
+    use crate::fleet::{
+        analytic_fleet, AnalyticEngine, FleetConfig, HealthConfig,
+    };
     use crate::rram::YEAR;
     use anyhow::anyhow;
     use std::sync::Arc;
@@ -806,6 +1169,8 @@ mod tests {
             sample: 0,
             arrival_age: 0.0,
             arrival_wall,
+            attempt: 0,
+            deadline: f64::INFINITY,
         }
     }
 
@@ -997,17 +1362,27 @@ mod tests {
         assert_eq!(fleet.chips[1].queue_len(), 0);
     }
 
-    /// Chip engine that errors on one chosen `step` call (before
-    /// touching its queue), then recovers — the injected fault for the
-    /// error-path satellites.
+    /// Chip engine that errors on `fail_count` consecutive `step`
+    /// calls starting at `fail_on_step` (before touching its queue),
+    /// then recovers — the injected fault for the error-path and
+    /// breaker satellites.
     struct FailingEngine {
         inner: AnalyticEngine,
         fail_on_step: usize,
+        fail_count: usize,
         steps: usize,
     }
 
     impl FailingEngine {
         fn new(seed: u64, fail_on_step: usize) -> FailingEngine {
+            FailingEngine::with_count(seed, fail_on_step, 1)
+        }
+
+        fn with_count(
+            seed: u64,
+            fail_on_step: usize,
+            fail_count: usize,
+        ) -> FailingEngine {
             FailingEngine {
                 inner: AnalyticEngine::new(
                     Arc::new(AccuracyProfile::uncompensated(
@@ -1021,6 +1396,7 @@ mod tests {
                     seed,
                 ),
                 fail_on_step,
+                fail_count,
                 steps: 0,
             }
         }
@@ -1066,7 +1442,9 @@ mod tests {
         fn step(&mut self, wall_per_exec: f64) -> Result<Vec<Completion>> {
             let this = self.steps;
             self.steps += 1;
-            if this == self.fail_on_step {
+            if this >= self.fail_on_step
+                && this - self.fail_on_step < self.fail_count
+            {
                 return Err(anyhow!("injected chip fault"));
             }
             ChipEngine::step(&mut self.inner, wall_per_exec)
@@ -1078,13 +1456,22 @@ mod tests {
 
     #[test]
     fn mid_flush_failure_delivers_exactly_once_on_retry() {
-        // Chip 1 dies on its second batch, mid-drain.
+        // Chip 1 dies on its second batch, mid-drain. Breaker OFF:
+        // this pins the legacy abort-on-error contract (satellite
+        // regression — `enabled: false` must restore it exactly).
         let chips = vec![
             FailingEngine::new(11, usize::MAX),
             FailingEngine::new(12, 1),
         ];
         let mut fleet =
             Fleet::new(chips, BalancePolicy::LeastQueue, 0.01);
+        fleet.set_health_config(
+            HealthConfig {
+                enabled: false,
+                ..Default::default()
+            },
+            0,
+        );
         for i in 0..80 {
             let chip = (i % 2) as usize;
             fleet.metrics.record_routed(chip);
@@ -1106,6 +1493,85 @@ mod tests {
         assert_contiguous(&sorted_ids(&comps));
         assert_eq!(fleet.metrics.served, 80);
         assert!(fleet.metrics.wall > wall_after_err);
+    }
+
+    /// Tentpole: with the breaker enabled (the default), a chip that
+    /// errors is quarantined — not fatal — its queue is redelivered
+    /// to survivors, and a Half-Open probe rejoins it once it
+    /// recovers. Conservation holds over the whole episode.
+    #[test]
+    fn breaker_contains_errors_and_rejoins_via_probe() {
+        // Chip 1 fails its first three batches, then recovers.
+        let chips = vec![
+            FailingEngine::new(31, usize::MAX),
+            FailingEngine::with_count(32, 0, 3),
+        ];
+        let mut fleet =
+            Fleet::new(chips, BalancePolicy::LeastQueue, 0.001);
+        let mut wl = Workload::new(2000.0, 6);
+        let comps = fleet
+            .run_events(1.0, 0.05, &mut wl, 64)
+            .expect("breaker must contain the injected fault");
+        assert!(fleet.metrics.breaker_opens >= 1, "never opened");
+        assert!(fleet.metrics.breaker_probes >= 1, "never probed");
+        assert!(fleet.metrics.breaker_rejoins >= 1, "never rejoined");
+        assert!(fleet.metrics.retries > 0, "salvage never redelivered");
+        assert!(
+            !fleet.health().quarantined(1),
+            "chip 1 must have rejoined by the end"
+        );
+        // The recovered chip did real work after rejoining.
+        assert!(
+            fleet.metrics.per_chip[1].served > 0,
+            "rejoined chip served nothing"
+        );
+        // Conservation with the new shed class: every routed request
+        // either completed or was shed as deadline_exceeded.
+        assert_eq!(
+            fleet.metrics.total_routed(),
+            comps.len() + fleet.metrics.shed_deadline,
+        );
+        let ids = sorted_ids(&comps);
+        for w in ids.windows(2) {
+            assert!(w[0] < w[1], "duplicate id {}", w[0]);
+        }
+    }
+
+    /// Satellite: the last routable chip never opens its breaker —
+    /// it degrades to pass-through, and a persistent fault sheds the
+    /// backlog through the retry budget instead of looping or
+    /// aborting.
+    #[test]
+    fn last_routable_chip_passes_through_and_sheds_on_budget() {
+        let chips =
+            vec![FailingEngine::with_count(41, 0, usize::MAX)];
+        let mut fleet =
+            Fleet::new(chips, BalancePolicy::LeastQueue, 0.001);
+        for i in 0..20 {
+            fleet.metrics.record_routed(0);
+            fleet.chips[0].submit(req(i, 0.0));
+        }
+        let mut wl = Workload::new(1e-12, 9);
+        let comps = fleet
+            .run_events(0.05, 0.05, &mut wl, 64)
+            .expect("pass-through must not abort the run");
+        assert!(comps.is_empty(), "a dead chip served {}", comps.len());
+        assert!(
+            fleet.metrics.breaker_pass_throughs > 0,
+            "pass-through never engaged"
+        );
+        assert_eq!(fleet.metrics.breaker_opens, 0);
+        assert!(
+            !fleet.health().quarantined(0),
+            "the last routable chip must never be quarantined"
+        );
+        // Every routed request was shed on the retry budget:
+        // routed = served + shed_deadline, with served = 0.
+        assert_eq!(fleet.metrics.shed_deadline, 20);
+        assert_eq!(
+            fleet.metrics.total_routed(),
+            fleet.metrics.served + fleet.metrics.shed_deadline
+        );
     }
 
     /// Satellite regression (lockstep path): a service window that

@@ -1,0 +1,418 @@
+//! Per-chip health scoring, circuit breakers and the fleet-wide
+//! graceful-degradation ladder.
+//!
+//! The event scheduler feeds this module from execution outcomes:
+//! every `step()` error and every delivered completion updates a
+//! per-chip [`ChipHealth`] (EWMA error rate, consecutive-failure
+//! count, deadline-miss rate). A per-chip circuit breaker turns those
+//! scores into routing decisions:
+//!
+//! ```text
+//!             errors >= threshold
+//!             or EWMA > error_floor
+//!   Closed ──────────────────────────> Open(until = now + backoff)
+//!     ^                                   │
+//!     │ probe batch succeeds              │ backoff elapses
+//!     │                                   v
+//!     └────────────────────────────── Half-Open
+//!                 ^                       │
+//!                 │   probe batch fails   │
+//!                 └───────────────────────┘
+//!                   (re-Open, backoff doubled; after
+//!                    `refresh_after_opens` opens — or a predicted
+//!                    accuracy below `acc_floor` — the breaker
+//!                    schedules a `refresh_chip` campaign instead)
+//! ```
+//!
+//! An `Open` chip is quarantined: it disappears from the routing heap
+//! (and from work stealing) without being failed, its in-flight batch
+//! is salvaged and redelivered to survivors, and a probe event is
+//! scheduled at `until`. Backoff is exponential with deterministic
+//! jitter drawn from a dedicated [`Pcg64`] stream, so the whole
+//! timeline replays bit-identically at any `VERA_THREADS`.
+//!
+//! The degradation ladder is fleet-global and pressure-driven (queue
+//! depth vs. routable capacity, plus the quarantined fraction):
+//! rung 1 shrinks `max_wait`, rung 2 halves `max_batch` (preferring
+//! smaller lowered batch graphs), rung 3 applies an admission queue
+//! cap. Rungs release with hysteresis (`ladder_low < ladder_high`).
+
+use crate::util::rng::Pcg64;
+
+/// RNG stream tag for breaker backoff jitter (distinct from the
+/// engine / workload / probe-cell streams).
+const JITTER_STREAM: u64 = 0xb4ea5e;
+
+/// Breaker, retry and degradation-ladder knobs. Lives on
+/// [`super::FleetConfig`]; `enabled: false` restores the legacy
+/// abort-on-first-error behavior exactly.
+#[derive(Debug, Clone)]
+pub struct HealthConfig {
+    /// Master switch. Off = any chip `step()` error aborts the run
+    /// (the pre-breaker contract, kept for regression pinning).
+    pub enabled: bool,
+    /// EWMA smoothing factor for error/deadline-miss rates.
+    pub alpha: f64,
+    /// Consecutive step errors that trip the breaker.
+    pub failure_threshold: u32,
+    /// EWMA error rate that trips the breaker even without a
+    /// consecutive run (slow flapping).
+    pub error_floor: f64,
+    /// First-open quarantine duration (seconds of sim time).
+    pub backoff_base: f64,
+    /// Exponential growth per re-open.
+    pub backoff_factor: f64,
+    /// Backoff ceiling (seconds).
+    pub backoff_max: f64,
+    /// Jitter half-width as a fraction of the backoff (`0.1` keeps
+    /// the probe inside ±10% of the nominal delay).
+    pub jitter: f64,
+    /// Redelivery budget per request: a salvaged request whose
+    /// attempt count exceeds this is shed as `deadline_exceeded`.
+    pub max_attempts: u32,
+    /// Per-request latency deadline (seconds past arrival). Salvaged
+    /// requests past their deadline are shed; completions past it
+    /// count into the deadline-miss EWMA. `INFINITY` disables both.
+    pub deadline: f64,
+    /// Opens after which the probe schedules a `refresh_chip`
+    /// reprogramming campaign instead of another Half-Open pass.
+    pub refresh_after_opens: u32,
+    /// Predicted-accuracy floor: a quarantined chip below it at probe
+    /// time is refreshed rather than probed.
+    pub acc_floor: f64,
+    /// Post-refresh programming age handed to `refresh_chip`.
+    pub refresh_t0: f64,
+    /// Ladder escalation threshold on fleet pressure.
+    pub ladder_high: f64,
+    /// Ladder release threshold (hysteresis: `< ladder_high`).
+    pub ladder_low: f64,
+}
+
+impl Default for HealthConfig {
+    fn default() -> Self {
+        HealthConfig {
+            enabled: true,
+            alpha: 0.2,
+            failure_threshold: 3,
+            error_floor: 0.6,
+            backoff_base: 0.05,
+            backoff_factor: 2.0,
+            backoff_max: 2.0,
+            jitter: 0.1,
+            max_attempts: 3,
+            deadline: f64::INFINITY,
+            refresh_after_opens: 3,
+            acc_floor: 0.25,
+            refresh_t0: 3_600.0,
+            ladder_high: 0.75,
+            ladder_low: 0.35,
+        }
+    }
+}
+
+impl HealthConfig {
+    /// Nominal (un-jittered) backoff for the `opens`-th open.
+    pub fn backoff_for(&self, opens: u32) -> f64 {
+        let exp = opens.saturating_sub(1).min(30);
+        (self.backoff_base * self.backoff_factor.powi(exp as i32))
+            .min(self.backoff_max)
+    }
+}
+
+/// Circuit-breaker state for one chip.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum BreakerState {
+    /// Healthy: fully routable.
+    Closed,
+    /// Quarantined until `until`; `opens` counts trips so far.
+    Open { until: f64, opens: u32 },
+    /// Probing: routable again, judged on the next step outcome.
+    HalfOpen { opens: u32 },
+}
+
+/// Health scores + breaker state for one chip.
+#[derive(Debug, Clone)]
+pub struct ChipHealth {
+    pub state: BreakerState,
+    /// EWMA of step error outcomes (1 = error, 0 = success).
+    pub err_ewma: f64,
+    /// EWMA of the per-batch deadline-miss fraction.
+    pub miss_ewma: f64,
+    /// Consecutive step errors since the last success.
+    pub consecutive: u32,
+    /// Lifetime breaker trips (survives close/reopen cycles).
+    pub total_opens: u32,
+}
+
+impl Default for ChipHealth {
+    fn default() -> Self {
+        ChipHealth {
+            state: BreakerState::Closed,
+            err_ewma: 0.0,
+            miss_ewma: 0.0,
+            consecutive: 0,
+            total_opens: 0,
+        }
+    }
+}
+
+impl ChipHealth {
+    /// Composite badness in [0, 1] for gauges/reports.
+    pub fn score(&self) -> f64 {
+        (0.7 * self.err_ewma + 0.3 * self.miss_ewma).clamp(0.0, 1.0)
+    }
+}
+
+/// Fleet-wide health registry: one [`ChipHealth`] per chip, the
+/// jitter RNG stream, and the degradation-ladder rung.
+#[derive(Debug, Clone)]
+pub struct FleetHealth {
+    pub cfg: HealthConfig,
+    pub chips: Vec<ChipHealth>,
+    /// Current degradation rung: 0 = nominal, 1 = shrink `max_wait`,
+    /// 2 = + halve `max_batch`, 3 = + admission queue cap.
+    pub rung: u8,
+    /// `(sim_time, rung)` activation/release record.
+    pub rung_log: Vec<(f64, u8)>,
+    rng: Pcg64,
+}
+
+impl FleetHealth {
+    pub fn new(cfg: HealthConfig, n_chips: usize, seed: u64) -> Self {
+        FleetHealth {
+            cfg,
+            chips: vec![ChipHealth::default(); n_chips],
+            rung: 0,
+            rung_log: Vec::new(),
+            rng: Pcg64::with_stream(seed, JITTER_STREAM),
+        }
+    }
+
+    /// Is chip `i` quarantined (removed from routing)? Half-Open
+    /// chips are NOT quarantined: the probe is real traffic.
+    pub fn quarantined(&self, i: usize) -> bool {
+        matches!(self.chips[i].state, BreakerState::Open { .. })
+    }
+
+    /// A successful step on chip `i` (delivered `misses` deadline
+    /// misses out of `n` completions). Closes a Half-Open probe;
+    /// returns `true` when that rejoin happened.
+    pub fn note_success(&mut self, i: usize, n: usize, misses: usize)
+        -> bool
+    {
+        let a = self.cfg.alpha;
+        let h = &mut self.chips[i];
+        h.consecutive = 0;
+        h.err_ewma *= 1.0 - a;
+        if n > 0 {
+            let m = misses as f64 / n as f64;
+            h.miss_ewma = a * m + (1.0 - a) * h.miss_ewma;
+        }
+        if let BreakerState::HalfOpen { .. } = h.state {
+            h.state = BreakerState::Closed;
+            return true;
+        }
+        false
+    }
+
+    /// A step error on chip `i`. Returns `true` when the breaker
+    /// should now open (threshold or EWMA floor reached, or the chip
+    /// was mid-probe — a failed probe always re-opens).
+    pub fn note_error(&mut self, i: usize) -> bool {
+        let a = self.cfg.alpha;
+        let h = &mut self.chips[i];
+        h.consecutive += 1;
+        h.err_ewma = a + (1.0 - a) * h.err_ewma;
+        matches!(h.state, BreakerState::HalfOpen { .. })
+            || h.consecutive >= self.cfg.failure_threshold
+            || h.err_ewma > self.cfg.error_floor
+    }
+
+    /// Trip the breaker on chip `i` at sim time `now`; returns the
+    /// quarantine-end instant (probe time). Re-opening from Half-Open
+    /// doubles the backoff (the `opens` count carries across).
+    pub fn open(&mut self, i: usize, now: f64) -> f64 {
+        let opens = match self.chips[i].state {
+            BreakerState::Open { opens, .. }
+            | BreakerState::HalfOpen { opens } => opens + 1,
+            BreakerState::Closed => 1,
+        };
+        let nominal = self.cfg.backoff_for(opens);
+        // One uniform draw per open, in event order: deterministic.
+        let u = self.rng.uniform();
+        let until =
+            now + nominal * (1.0 + self.cfg.jitter * (2.0 * u - 1.0));
+        let h = &mut self.chips[i];
+        h.state = BreakerState::Open { until, opens };
+        h.total_opens += 1;
+        until
+    }
+
+    /// The probe timer fired: move an Open chip to Half-Open so the
+    /// router can offer it one real batch. No-op unless Open.
+    pub fn begin_probe(&mut self, i: usize) {
+        if let BreakerState::Open { opens, .. } = self.chips[i].state {
+            self.chips[i].state = BreakerState::HalfOpen { opens };
+        }
+    }
+
+    /// Should the probe be replaced by a `refresh_chip` campaign?
+    /// True once the chip has tripped `refresh_after_opens` times or
+    /// its predicted accuracy fell through the floor.
+    pub fn wants_refresh(&self, i: usize, predicted_acc: f64) -> bool {
+        let opens = match self.chips[i].state {
+            BreakerState::Open { opens, .. }
+            | BreakerState::HalfOpen { opens } => opens,
+            BreakerState::Closed => 0,
+        };
+        opens >= self.cfg.refresh_after_opens
+            || predicted_acc < self.cfg.acc_floor
+    }
+
+    /// Wipe chip `i`'s record (after `refresh_chip` / `fail_chip`).
+    pub fn reset(&mut self, i: usize) {
+        self.chips[i] = ChipHealth::default();
+    }
+
+    /// Re-evaluate the degradation ladder against fleet `pressure`
+    /// (queue depth over routable capacity + quarantined fraction).
+    /// Escalates one rung past `ladder_high`, releases one rung below
+    /// `ladder_low`; returns the new rung when it changed.
+    pub fn update_rung(&mut self, pressure: f64, now: f64)
+        -> Option<u8>
+    {
+        let next = if pressure > self.cfg.ladder_high {
+            (self.rung + 1).min(3)
+        } else if pressure < self.cfg.ladder_low {
+            self.rung.saturating_sub(1)
+        } else {
+            self.rung
+        };
+        if next != self.rung {
+            self.rung = next;
+            self.rung_log.push((now, next));
+            return Some(next);
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn health(n: usize) -> FleetHealth {
+        FleetHealth::new(HealthConfig::default(), n, 0x5eed)
+    }
+
+    #[test]
+    fn opens_after_consecutive_failures() {
+        let mut h = health(2);
+        assert!(!h.note_error(0));
+        assert!(!h.note_error(0));
+        assert!(h.note_error(0), "third consecutive error must trip");
+        let until = h.open(0, 1.0);
+        assert!(h.quarantined(0));
+        assert!(!h.quarantined(1));
+        // Jitter keeps the probe within ±10% of the 50 ms base.
+        assert!(until > 1.0 + 0.045 && until < 1.0 + 0.055,
+                "until {until}");
+    }
+
+    #[test]
+    fn success_resets_the_consecutive_count() {
+        let mut h = health(1);
+        assert!(!h.note_error(0));
+        assert!(!h.note_error(0));
+        h.note_success(0, 4, 0);
+        assert_eq!(h.chips[0].consecutive, 0);
+        assert!(!h.note_error(0));
+        assert!(!h.note_error(0));
+        assert!(h.note_error(0));
+    }
+
+    #[test]
+    fn ewma_floor_trips_without_a_consecutive_run() {
+        let mut h = health(1);
+        let mut tripped = false;
+        for _ in 0..40 {
+            tripped = h.note_error(0);
+            if tripped {
+                break;
+            }
+            h.note_success(0, 1, 0);
+            // Interleaved successes keep `consecutive` below the
+            // threshold; only the EWMA floor can trip.
+            assert!(h.chips[0].consecutive < 3);
+        }
+        assert!(tripped, "persistent flapping must trip the EWMA floor");
+    }
+
+    #[test]
+    fn probe_failure_reopens_with_doubled_backoff() {
+        let mut h = health(1);
+        for _ in 0..3 {
+            h.note_error(0);
+        }
+        let t1 = h.open(0, 0.0);
+        h.begin_probe(0);
+        assert!(!h.quarantined(0), "Half-Open must be routable");
+        assert!(h.note_error(0), "a failed probe always re-opens");
+        let t2 = h.open(0, 0.0) ;
+        assert!(t2 > 1.5 * t1, "re-open must double the backoff");
+        h.begin_probe(0);
+        assert!(h.note_success(0, 8, 0), "probe success rejoins");
+        assert_eq!(h.chips[0].state, BreakerState::Closed);
+        assert_eq!(h.chips[0].total_opens, 2);
+    }
+
+    #[test]
+    fn backoff_is_capped_and_refresh_kicks_in() {
+        let mut h = health(1);
+        for k in 1..12u32 {
+            assert!(h.cfg.backoff_for(k) <= h.cfg.backoff_max + 1e-12);
+        }
+        for _ in 0..3 {
+            h.note_error(0);
+        }
+        h.open(0, 0.0);
+        assert!(!h.wants_refresh(0, 0.9));
+        h.begin_probe(0);
+        h.open(0, 0.0);
+        h.begin_probe(0);
+        h.open(0, 0.0);
+        assert!(h.wants_refresh(0, 0.9), "3rd open schedules refresh");
+        h.reset(0);
+        assert!(!h.quarantined(0));
+        assert_eq!(h.chips[0].total_opens, 0);
+        // Accuracy floor triggers refresh regardless of open count.
+        assert!(h.wants_refresh(0, 0.1));
+    }
+
+    #[test]
+    fn ladder_escalates_and_releases_with_hysteresis() {
+        let mut h = health(4);
+        assert_eq!(h.update_rung(0.9, 1.0), Some(1));
+        assert_eq!(h.update_rung(0.9, 2.0), Some(2));
+        // Between the thresholds: hold (hysteresis).
+        assert_eq!(h.update_rung(0.5, 3.0), None);
+        assert_eq!(h.rung, 2);
+        assert_eq!(h.update_rung(0.1, 4.0), Some(1));
+        assert_eq!(h.update_rung(0.1, 5.0), Some(0));
+        assert_eq!(h.update_rung(0.1, 6.0), None);
+        assert_eq!(h.rung_log.len(), 4);
+    }
+
+    #[test]
+    fn jitter_stream_is_deterministic() {
+        let mut a = health(1);
+        let mut b = health(1);
+        for _ in 0..5 {
+            let ta = a.open(0, 10.0);
+            let tb = b.open(0, 10.0);
+            assert_eq!(ta.to_bits(), tb.to_bits());
+            a.begin_probe(0);
+            b.begin_probe(0);
+        }
+    }
+}

@@ -69,6 +69,25 @@ pub struct FleetMetrics {
     /// Sum over sampled ticks of the live-chip count — availability is
     /// `alive_chip_ticks / (ticks · n_chips)`.
     pub alive_chip_ticks: usize,
+    /// Already-routed requests shed because their retry budget or
+    /// deadline ran out during breaker salvage. Unlike admission
+    /// `shed`, these WERE routed:
+    /// `routed = served + shed_deadline + in_flight`.
+    pub shed_deadline: usize,
+    /// Salvaged requests redelivered to a survivor with an
+    /// incremented attempt count (breaker containment path).
+    pub retries: usize,
+    /// Circuit-breaker trips (Closed/Half-Open → Open).
+    pub breaker_opens: usize,
+    /// Half-Open probes offered (backoff expiries).
+    pub breaker_probes: usize,
+    /// Probe successes that closed a breaker (chip rejoined).
+    pub breaker_rejoins: usize,
+    /// Breaker-scheduled `refresh_chip` reprogramming campaigns.
+    pub breaker_refreshes: usize,
+    /// Errors absorbed in pass-through mode on the last routable chip
+    /// (the breaker never opens there — see the fleet invariant).
+    pub breaker_pass_throughs: usize,
 }
 
 impl FleetMetrics {
@@ -119,6 +138,18 @@ impl FleetMetrics {
     /// steals never touch `routed`.
     pub fn record_steal(&mut self, n: usize) {
         self.steals += n;
+    }
+
+    /// Record `n` already-routed requests shed because their retry
+    /// budget or deadline expired during breaker salvage.
+    pub fn record_shed_deadline(&mut self, n: usize) {
+        self.shed_deadline += n;
+    }
+
+    /// Record `n` salvaged requests redelivered with a bumped attempt
+    /// count. Retries never touch `routed` (first routing counts).
+    pub fn record_retry(&mut self, n: usize) {
+        self.retries += n;
     }
 
     pub fn end_tick(&mut self, dt: f64, alive_chips: usize) {
@@ -218,6 +249,10 @@ pub struct PhaseSummary {
     /// Fraction of phase arrivals dropped by admission control:
     /// `shed / (served + shed)`, 0 when the phase saw nothing.
     pub shed_rate: f64,
+    /// Routed requests shed during the phase because their retry
+    /// budget/deadline expired in breaker salvage (the
+    /// `deadline_exceeded` accounting class).
+    pub shed_deadline: usize,
 }
 
 impl PhaseSummary {
@@ -262,6 +297,12 @@ impl PhaseSummary {
             100.0 * self.shed_rate,
             self.requeued,
         );
+        if self.shed_deadline > 0 {
+            println!(
+                "      {:<18} deadline_exceeded {}",
+                "", self.shed_deadline
+            );
+        }
     }
 }
 
@@ -282,6 +323,18 @@ pub struct FleetSummary {
     pub requeues: usize,
     /// Requests dropped by admission control across the run.
     pub shed: usize,
+    /// Routed requests shed as `deadline_exceeded` (retry budget or
+    /// deadline exhausted during breaker salvage).
+    pub shed_deadline: usize,
+    /// Breaker redeliveries (salvaged requests re-dispatched).
+    pub retries: usize,
+    /// Breaker trips / probes / rejoins / scheduled refreshes /
+    /// last-chip pass-throughs across the run.
+    pub breaker_opens: usize,
+    pub breaker_probes: usize,
+    pub breaker_rejoins: usize,
+    pub breaker_refreshes: usize,
+    pub breaker_pass_throughs: usize,
     /// Requests migrated by work stealing across the run.
     pub steals: usize,
     /// Per-phase breakdown when the run came from the scenario engine
@@ -346,6 +399,13 @@ impl FleetSummary {
             availability: fm.availability(),
             requeues: fm.requeues,
             shed: fm.shed,
+            shed_deadline: fm.shed_deadline,
+            retries: fm.retries,
+            breaker_opens: fm.breaker_opens,
+            breaker_probes: fm.breaker_probes,
+            breaker_rejoins: fm.breaker_rejoins,
+            breaker_refreshes: fm.breaker_refreshes,
+            breaker_pass_throughs: fm.breaker_pass_throughs,
             steals: fm.steals,
             phases: Vec::new(),
             chips: rows,
@@ -390,13 +450,31 @@ impl FleetSummary {
                 String::new()
             },
         );
-        if self.shed > 0 || self.steals > 0 {
+        if self.shed > 0 || self.steals > 0 || self.shed_deadline > 0 {
             println!(
-                "backpressure: {} shed ({:.1}% of offered) | {} stolen",
+                "backpressure: {} shed at admission ({:.1}% of \
+                 offered) | {} deadline_exceeded | {} stolen",
                 self.shed,
                 100.0
                     * PhaseSummary::shed_rate_of(self.served, self.shed),
+                self.shed_deadline,
                 self.steals,
+            );
+        }
+        if self.breaker_opens > 0
+            || self.retries > 0
+            || self.breaker_pass_throughs > 0
+        {
+            println!(
+                "self-healing: {} breaker opens | {} probes | {} \
+                 rejoins | {} refreshes | {} retries | {} last-chip \
+                 pass-throughs",
+                self.breaker_opens,
+                self.breaker_probes,
+                self.breaker_rejoins,
+                self.breaker_refreshes,
+                self.retries,
+                self.breaker_pass_throughs,
             );
         }
         if !self.graph_execs.is_empty() {
@@ -456,6 +534,13 @@ mod tests {
         m.record_steal(4);
         assert_eq!(m.shed, 2);
         assert_eq!(m.steals, 4);
+        assert_eq!(m.total_routed(), 3);
+        // Breaker-era classes: deadline sheds and retries are also
+        // invisible to routed (conservation keys on first routing).
+        m.record_shed_deadline(1);
+        m.record_retry(2);
+        assert_eq!(m.shed_deadline, 1);
+        assert_eq!(m.retries, 2);
         assert_eq!(m.total_routed(), 3);
         assert!((PhaseSummary::shed_rate_of(3, 2) - 0.4).abs() < 1e-12);
         assert_eq!(PhaseSummary::shed_rate_of(0, 0), 0.0);

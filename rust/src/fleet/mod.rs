@@ -29,6 +29,7 @@
 
 pub mod chip;
 pub mod events;
+pub mod health;
 pub mod metrics;
 pub mod profile;
 pub mod router;
@@ -36,6 +37,9 @@ pub mod router;
 pub use crate::compensation::AgeSource;
 pub use chip::{native_engine, AnalyticEngine, ChipEngine, NativeEngine};
 pub use events::EventLoop;
+pub use health::{
+    BreakerState, ChipHealth, FleetHealth, HealthConfig,
+};
 pub use metrics::{
     ChipLoad, ChipSummary, FleetMetrics, FleetSummary, PhaseSummary,
 };
@@ -97,6 +101,10 @@ pub struct FleetConfig {
     /// ([`crate::compensation::estimator`]). Scenario
     /// `estimator on/off` events flip this at runtime.
     pub age_source: AgeSource,
+    /// Circuit-breaker / retry / degradation-ladder policy for the
+    /// event-driven scheduler (`health.enabled = false` restores the
+    /// legacy abort-on-first-error behavior).
+    pub health: HealthConfig,
 }
 
 impl Default for FleetConfig {
@@ -112,6 +120,7 @@ impl Default for FleetConfig {
             seed: 0xf1ee7,
             drift_skew: 1.0,
             age_source: AgeSource::Clock,
+            health: HealthConfig::default(),
         }
     }
 }
@@ -166,6 +175,10 @@ pub struct Fleet<E: ChipEngine> {
     /// event loop sheds new arrivals (0 = unbounded, the default — the
     /// lockstep loop ignores this entirely).
     queue_cap: usize,
+    /// Per-chip health scores + circuit breakers + degradation ladder
+    /// (event scheduler only; lives on the fleet so breaker state
+    /// survives across `EventLoop` constructions within one timeline).
+    health: FleetHealth,
 }
 
 impl<E: ChipEngine> Fleet<E> {
@@ -188,7 +201,21 @@ impl<E: ChipEngine> Fleet<E> {
             state: vec![ChipState::Alive; n],
             ref_clock: LifetimeClock::new(0.0, 0.0),
             queue_cap: 0,
+            health: FleetHealth::new(HealthConfig::default(), n,
+                                     0xf1ee7),
         }
+    }
+
+    /// Install a breaker/retry/ladder policy (and the seed for its
+    /// jitter RNG stream). Resets any accumulated health state.
+    pub fn set_health_config(&mut self, cfg: HealthConfig, seed: u64) {
+        self.health =
+            FleetHealth::new(cfg, self.chips.len(), seed);
+    }
+
+    /// Read-only view of breaker/health state (tests, reports).
+    pub fn health(&self) -> &FleetHealth {
+        &self.health
     }
 
     /// Enable admission control for the event-driven loop: arrivals
@@ -220,6 +247,19 @@ impl<E: ChipEngine> Fleet<E> {
             .count()
     }
 
+    /// Alive chips the router may actually use: `Alive` AND not
+    /// quarantined by an open circuit breaker. This is the capacity
+    /// the availability metric counts under the event scheduler.
+    pub fn n_routable(&self) -> usize {
+        self.state
+            .iter()
+            .enumerate()
+            .filter(|&(i, &s)| {
+                s == ChipState::Alive && !self.health.quarantined(i)
+            })
+            .count()
+    }
+
     /// Crash chip `chip`: evict it from the router and redeliver its
     /// queued requests to the surviving chips, exactly once (their
     /// first-routing counts are untouched; `metrics.requeues` records
@@ -244,9 +284,20 @@ impl<E: ChipEngine> Fleet<E> {
         // of credit earned while the chip executed nothing.
         self.exec_credit[chip] = 0.0;
         self.age_debt[chip] = 0.0;
+        // Its breaker record dies too: a refresh-revived chip starts
+        // Closed with clean scores.
+        self.health.reset(chip);
         let orphans = self.chips[chip].take_queue();
         let n = orphans.len();
         let mut views = self.views();
+        // If every survivor is quarantined, redeliver to live chips
+        // anyway — stranding the backlog is worse than routing to a
+        // chip mid-backoff (it serves the requests once it rejoins).
+        if !views.iter().any(|v| v.alive) {
+            for (v, &s) in views.iter_mut().zip(&self.state) {
+                v.alive = s == ChipState::Alive;
+            }
+        }
         for mut req in orphans {
             let i = self.router.route(&views);
             views[i].queue_len += 1;
@@ -294,24 +345,30 @@ impl<E: ChipEngine> Fleet<E> {
         self.state[chip] = ChipState::Alive;
         // A reprogrammed chip starts from zero capacity: no credit
         // banked across the refresh (nor aging debt — the rewritten
-        // arrays restart the drift clock anyway).
+        // arrays restart the drift clock anyway). Its breaker closes
+        // with clean health scores.
         self.exec_credit[chip] = 0.0;
         self.age_debt[chip] = 0.0;
+        self.health.reset(chip);
         obs::event("fleet.refresh_chip", "fleet", || {
             vec![("chip", num(chip as f64)), ("t_s", num(t0))]
         });
         Ok(())
     }
 
-    /// Router-facing snapshots of every chip (queue, prediction, alive).
+    /// Router-facing snapshots of every chip (queue, prediction,
+    /// alive). Quarantined chips (open breaker) read as not-alive so
+    /// routing and redelivery both exclude them.
     fn views(&self) -> Vec<ChipView> {
         self.chips
             .iter()
             .zip(&self.state)
-            .map(|(c, &s)| ChipView {
+            .enumerate()
+            .map(|(i, (c, &s))| ChipView {
                 queue_len: c.queue_len(),
                 predicted_acc: c.predicted_accuracy(),
-                alive: s == ChipState::Alive,
+                alive: s == ChipState::Alive
+                    && !self.health.quarantined(i),
             })
             .collect()
     }
@@ -570,7 +627,10 @@ pub fn analytic_fleet(
             .with_drift(cfg.drift_skew, cfg.age_source)
         })
         .collect();
-    Fleet::new(chips, cfg.policy, cfg.exec_seconds_per_batch)
+    let mut fleet =
+        Fleet::new(chips, cfg.policy, cfg.exec_seconds_per_batch);
+    fleet.set_health_config(cfg.health.clone(), cfg.seed);
+    fleet
 }
 
 #[cfg(test)]

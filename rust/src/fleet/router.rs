@@ -15,6 +15,12 @@
 //! the chips themselves; the fleet loop increments the routed chip's
 //! queue count between requests, which keeps all three policies
 //! well-behaved within a single arrival burst.
+//!
+//! Breaker quarantine composes through the same mechanism: a chip
+//! whose circuit breaker is Open ([`crate::fleet::FleetHealth`]) is
+//! reported `alive: false` in [`crate::fleet::Fleet`]'s views, so
+//! every policy skips it without the router knowing about health at
+//! all. Half-Open chips stay routable — the probe is real traffic.
 
 use anyhow::{bail, Result};
 
@@ -60,7 +66,8 @@ pub struct ChipView {
     pub queue_len: usize,
     /// Scheduler-predicted accuracy at the chip's current device age.
     pub predicted_acc: f64,
-    /// Routable: failed/retired chips are skipped by every policy.
+    /// Routable: failed/retired and breaker-quarantined chips are
+    /// skipped by every policy.
     pub alive: bool,
 }
 

@@ -32,8 +32,9 @@ use vera_plus::util::cli::Args;
 use vera_plus::util::tensor::{read_vpts, write_vpts};
 
 fn main() {
-    let args = match Args::parse(&["quick", "full", "help", "estimator"])
-    {
+    let args = match Args::parse(&[
+        "quick", "full", "help", "estimator", "lockstep", "flaky",
+    ]) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("argument error: {e}");
@@ -84,16 +85,21 @@ fn print_help() {
          \u{20}                 --store, --qcap: shed arrivals over N queued\n  \
          \u{20}                 per chip, --lockstep: legacy tick loop,\n  \
          \u{20}                 --skew: mis-model true drift by a factor,\n  \
-         \u{20}                 --estimator: select sets from estimated age)\n  \
+         \u{20}                 --estimator: select sets from estimated age,\n  \
+         \u{20}                 --breaker on|off, --retries, --deadline)\n  \
          scenario        Scripted stress timeline on the analytic fleet:\n  \
          \u{20}                chip failures, refresh campaigns, traffic\n  \
          \u{20}                shapes, per-phase report; actions cut serving\n  \
          \u{20}                windows at exact timestamps (--chips,\n  \
-         \u{20}                 --seconds, --preset chaos|diurnal|misdrift |\n  \
+         \u{20}                 --seconds,\n  \
+         \u{20}                 --preset chaos|diurnal|misdrift|flaky |\n  \
          \u{20}                 --script FILE.json, --policy, --seed, --qcap,\n  \
          \u{20}                 --lockstep: legacy tick-grid runner,\n  \
          \u{20}                 --store, --skew: clock-vs-true drift factor,\n  \
-         \u{20}                 default 1000 for the misdrift preset)\n  \
+         \u{20}                 default 1000 for the misdrift preset,\n  \
+         \u{20}                 --flaky: fault-injecting engines,\n  \
+         \u{20}                 --flaky-rate: transient fault probability,\n  \
+         \u{20}                 --breaker on|off, --retries, --deadline)\n  \
          experiment      Regenerate a paper table/figure\n  \
          \u{20}                (--id fig3|fig4|fig5|fig6|table2..table5|all,\n  \
          \u{20}                 --quick | --full)\n  \
@@ -102,6 +108,14 @@ fn print_help() {
          \u{20}                (--input TRACE.json to report on a saved\n  \
          \u{20}                 trace; else takes every scenario option)\n  \
          info            Show artifact/manifest inventory\n\n\
+         SELF-HEALING:\n  \
+         fleet/scenario run a per-chip circuit breaker by default\n  \
+         (--breaker off restores fail-fast aborts). Failed chips are\n  \
+         quarantined and probed back in with exponential backoff;\n  \
+         salvaged requests are redelivered up to --retries N times\n  \
+         (default 3) and shed as `deadline_exceeded` once the budget\n  \
+         or a --deadline S latency deadline is exhausted, keeping\n  \
+         routed == served + shed_deadline + in_flight exact.\n\n\
          OBSERVABILITY:\n  \
          fleet/scenario/obs accept --trace PATH to record the run as\n  \
          Chrome trace-event JSON (load in chrome://tracing or Perfetto)\n  \
@@ -113,6 +127,27 @@ fn print_help() {
          VERA_LAT_SAMPLES  serve-latency reservoir cap (default 8192)\n  \
          VERA_THREADS      worker pool width (bit-identical results)\n"
     );
+}
+
+/// Self-healing knobs shared by `fleet` and `scenario`:
+/// `--breaker on|off` (default on) gates the per-chip circuit
+/// breaker, `--retries N` bounds redeliveries per salvaged request
+/// (exhausted requests are shed as `deadline_exceeded`), and
+/// `--deadline S` sets the per-request latency budget in seconds
+/// (also feeds the deadline-miss health score; unset = no deadline).
+fn health_from_args(args: &Args) -> Result<vera_plus::fleet::HealthConfig> {
+    let breaker = args.get_or("breaker", "on");
+    let enabled = match breaker.as_str() {
+        "on" => true,
+        "off" => false,
+        other => anyhow::bail!("--breaker must be on|off, got '{other}'"),
+    };
+    Ok(vera_plus::fleet::HealthConfig {
+        enabled,
+        max_attempts: args.get_usize("retries", 3)? as u32,
+        deadline: args.get_f64("deadline", f64::INFINITY)?,
+        ..Default::default()
+    })
 }
 
 /// `--trace PATH` / `--jsonl PATH` (or a path-valued `VERA_TRACE`)
@@ -421,6 +456,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         } else {
             AgeSource::Clock
         },
+        health: health_from_args(args)?,
     };
     if cfg.drift_skew != 1.0 {
         println!(
@@ -517,6 +553,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
                 .collect();
             let mut fleet =
                 Fleet::new(chips, policy, cfg.exec_seconds_per_batch);
+            fleet.set_health_config(cfg.health.clone(), cfg.seed);
             fleet.set_queue_cap(qcap);
             if lockstep {
                 fleet.run(
@@ -666,6 +703,7 @@ fn scenario_run(args: &Args) -> Result<()> {
         // Timelines flip the estimator themselves (Action::Estimator),
         // so every scenario starts on the clock.
         age_source: vera_plus::fleet::AgeSource::Clock,
+        health: health_from_args(args)?,
     };
     println!(
         "scenario: {} chips, {} events over {}s, traffic {} \
@@ -680,34 +718,61 @@ fn scenario_run(args: &Args) -> Result<()> {
     for e in &cfg.events {
         println!("  t={:>6.2}s  {}", e.at, e.label);
     }
-    let mut fleet = analytic_fleet(&fleet_cfg, &profile);
-    fleet.set_queue_cap(args.get_usize("qcap", 0)?);
+    let qcap = args.get_usize("qcap", 0)?;
     let mut workload = Workload::new(0.0, seed ^ 0x57a6);
+    // The flaky preset (or an explicit `--flaky` on any timeline) wraps
+    // every chip in a fault-injecting engine: transient step errors,
+    // latency spikes and one persistent-fault chip, all seeded. The
+    // breaker (on by default) contains the faults; `--breaker off`
+    // shows the fail-fast behaviour the self-healing path replaces.
+    let use_flaky = preset == "flaky" || args.has_flag("flaky");
     // Event-driven scheduler by default (timeline actions cut serving
     // windows at their exact timestamps); `--lockstep` keeps the
     // legacy tick-grid runner.
-    let outcome = if args.has_flag("lockstep") {
-        run_scenario(&mut fleet, &cfg, &mut workload, 512)?
+    let lockstep = args.has_flag("lockstep");
+    let outcome = if use_flaky {
+        let fcfg = vera_plus::scenario::FlakyConfig {
+            transient_rate: args.get_f64("flaky-rate", 0.08)?,
+            ..Default::default()
+        };
+        let mut fleet =
+            vera_plus::scenario::flaky_fleet(&fleet_cfg, &profile, &fcfg);
+        fleet.set_queue_cap(qcap);
+        if lockstep {
+            run_scenario(&mut fleet, &cfg, &mut workload, 512)?
+        } else {
+            run_scenario_events(&mut fleet, &cfg, &mut workload, 512)?
+        }
     } else {
-        run_scenario_events(&mut fleet, &cfg, &mut workload, 512)?
+        let mut fleet = analytic_fleet(&fleet_cfg, &profile);
+        fleet.set_queue_cap(qcap);
+        if lockstep {
+            run_scenario(&mut fleet, &cfg, &mut workload, 512)?
+        } else {
+            run_scenario_events(&mut fleet, &cfg, &mut workload, 512)?
+        }
     };
     println!();
     outcome.summary.print();
 
     // Cost the timeline's refresh campaigns against VeRA+'s no-rewrite
     // serving (paper Table III comparison, now with refresh energy).
-    let refreshes = cfg
+    // Breaker-initiated refreshes (self-healing escalation) are priced
+    // through the same model as scripted campaigns.
+    let scripted = cfg
         .events
         .iter()
         .filter(|e| matches!(e.action, Action::Refresh { .. }))
         .count();
+    let refreshes = scripted + outcome.summary.breaker_refreshes;
     let layers = paper_resnet20_layers(10);
     let vp = cost_method(&layers, 64, 64, Method::VeraPlus, 1, sets);
     let refresh = RefreshCost::for_backbone(&vp);
     println!(
-        "\nrefresh accounting: {refreshes} campaign(s) x {:.1} uJ = \
-         {:.1} uJ (one campaign = {:.0} inferences; {:.0}x a VeRA+ \
-         set load)",
+        "\nrefresh accounting: {refreshes} campaign(s) ({scripted} \
+         scripted + {} breaker-initiated) x {:.1} uJ = {:.1} uJ \
+         (one campaign = {:.0} inferences; {:.0}x a VeRA+ set load)",
+        outcome.summary.breaker_refreshes,
         refresh.energy_per_refresh_uj(),
         refresh.campaign_energy_uj(refreshes),
         refresh.equivalent_inferences(vp.energy_nj()),

@@ -1,0 +1,361 @@
+//! Flaky-chip fault injection for self-healing scenarios.
+//!
+//! [`FlakyEngine`] wraps any [`ChipEngine`] and injects seeded,
+//! deterministic faults at the `step()` boundary — exactly where the
+//! event scheduler's circuit breaker listens:
+//!
+//! - **transient faults**: with probability `transient_rate` a step
+//!   errors *before touching the queue* (the engine error contract the
+//!   breaker's queue salvage relies on), then the chip is fine again;
+//! - **latency spikes**: with probability `spike_rate` a batch's
+//!   completions come back with `spike_factor ×` the nominal exec
+//!   latency. The spike mutates only the *reported* latencies, never
+//!   the scheduler's exec time — the event clock and the completion
+//!   stream must not disagree;
+//! - **a persistent fault**: one designated chip starts failing every
+//!   step after `persistent_after` executions and stays broken until
+//!   a refresh campaign ([`ChipEngine::refresh`]) reprograms it — the
+//!   path that exercises breaker-scheduled refresh instead of probe
+//!   rejoin.
+//!
+//! All draws come from one dedicated [`Pcg64`] stream per chip
+//! (`FLAKY_STREAM`), consumed in a fixed order (fault, then spike) on
+//! every step, so a fixed seed replays bit-identically at any
+//! `VERA_THREADS`.
+
+use crate::coordinator::serve::{Completion, Request};
+use crate::fleet::{
+    analytic_fleet, AccuracyProfile, AnalyticEngine, ChipEngine, Fleet,
+    FleetConfig,
+};
+use crate::util::rng::Pcg64;
+use anyhow::{anyhow, Result};
+
+/// RNG stream tag for fault draws (distinct from the engine /
+/// workload / probe / breaker-jitter streams).
+const FLAKY_STREAM: u64 = 0xf7a11;
+
+/// Fault-injection knobs for a flaky fleet.
+#[derive(Debug, Clone)]
+pub struct FlakyConfig {
+    /// Per-step probability of a transient `step()` error.
+    pub transient_rate: f64,
+    /// Per-step probability of a latency spike on a healthy batch.
+    pub spike_rate: f64,
+    /// Latency multiplier applied to spiked batches.
+    pub spike_factor: f64,
+    /// Chip that develops a persistent fault (`None` = nobody does).
+    pub persistent_chip: Option<usize>,
+    /// Steps the persistent chip executes before it starts failing
+    /// every step (until refreshed).
+    pub persistent_after: u64,
+}
+
+impl Default for FlakyConfig {
+    fn default() -> Self {
+        FlakyConfig {
+            transient_rate: 0.08,
+            spike_rate: 0.05,
+            spike_factor: 8.0,
+            persistent_chip: Some(1),
+            persistent_after: 40,
+        }
+    }
+}
+
+/// A [`ChipEngine`] wrapper that injects seeded transient faults,
+/// latency spikes and an optional persistent fault. Every scheduling
+/// question delegates to the wrapped engine; only `step()` (fault
+/// draws) and `refresh()` (persistent-fault repair) differ.
+pub struct FlakyEngine<E: ChipEngine> {
+    inner: E,
+    cfg: FlakyConfig,
+    rng: Pcg64,
+    /// Executed (attempted) steps — drives `persistent_after`.
+    steps: u64,
+    /// `persistent_after` fires only on this chip.
+    is_persistent_chip: bool,
+    /// Broken-until-refresh latch.
+    persistent: bool,
+}
+
+impl<E: ChipEngine> FlakyEngine<E> {
+    pub fn new(
+        inner: E,
+        cfg: FlakyConfig,
+        seed: u64,
+        chip: usize,
+    ) -> FlakyEngine<E> {
+        let is_persistent_chip = cfg.persistent_chip == Some(chip);
+        FlakyEngine {
+            inner,
+            cfg,
+            rng: Pcg64::with_stream(seed, FLAKY_STREAM),
+            steps: 0,
+            is_persistent_chip,
+            persistent: false,
+        }
+    }
+
+    /// Is this chip currently latched on its persistent fault?
+    pub fn is_broken(&self) -> bool {
+        self.persistent
+    }
+}
+
+impl<E: ChipEngine> ChipEngine for FlakyEngine<E> {
+    fn submit(&mut self, req: Request) {
+        self.inner.submit(req);
+    }
+    fn queue_len(&self) -> usize {
+        self.inner.queue_len()
+    }
+    fn device_age(&self) -> f64 {
+        self.inner.device_age()
+    }
+    fn predicted_accuracy(&self) -> f64 {
+        self.inner.predicted_accuracy()
+    }
+    fn advance_idle(&mut self, wall_seconds: f64) {
+        self.inner.advance_idle(wall_seconds);
+    }
+    fn take_queue(&mut self) -> Vec<Request> {
+        self.inner.take_queue()
+    }
+    fn align_wall(&mut self, wall: f64) {
+        self.inner.align_wall(wall);
+    }
+    fn oldest_arrival(&self) -> Option<f64> {
+        self.inner.oldest_arrival()
+    }
+    fn steal_tail(&mut self, n: usize) -> Vec<Request> {
+        self.inner.steal_tail(n)
+    }
+    fn batch_policy(&self) -> &crate::coordinator::serve::BatchPolicy {
+        self.inner.batch_policy()
+    }
+    fn refresh(&mut self, t0: f64) {
+        // A reprogramming campaign repairs the persistent fault (and
+        // restarts its countdown) — the breaker's refresh escalation
+        // is what actually heals a latched chip.
+        self.persistent = false;
+        self.steps = 0;
+        self.inner.refresh(t0);
+    }
+    fn set_age_source(&mut self, src: crate::compensation::AgeSource) {
+        self.inner.set_age_source(src);
+    }
+    fn set_batch_cap(&mut self, cap: Option<usize>) {
+        self.inner.set_batch_cap(cap);
+    }
+    fn step(&mut self, wall_per_exec: f64) -> Result<Vec<Completion>> {
+        let this = self.steps;
+        self.steps += 1;
+        if self.is_persistent_chip
+            && this >= self.cfg.persistent_after
+        {
+            self.persistent = true;
+        }
+        if self.persistent {
+            // Errors fire BEFORE the queue is touched, so the
+            // breaker can salvage and redeliver it.
+            return Err(anyhow!(
+                "persistent chip fault (needs refresh)"
+            ));
+        }
+        // Fixed draw order per step (fault, then spike): the stream
+        // is consumed identically whether or not either fires.
+        let fault = self.rng.uniform() < self.cfg.transient_rate;
+        let spike = self.rng.uniform() < self.cfg.spike_rate;
+        if fault {
+            return Err(anyhow!("transient chip fault"));
+        }
+        let mut comps = self.inner.step(wall_per_exec)?;
+        if spike {
+            // Spike the reported latency only; the scheduler's exec
+            // clock is untouched (clock/stream desync would break
+            // replay determinism).
+            let extra = wall_per_exec * (self.cfg.spike_factor - 1.0);
+            for c in &mut comps {
+                c.latency += extra;
+            }
+        }
+        Ok(comps)
+    }
+    fn metrics(&self) -> &crate::coordinator::serve::ServeMetrics {
+        self.inner.metrics()
+    }
+}
+
+/// Build a flaky analytic fleet: [`analytic_fleet`] construction with
+/// every engine wrapped in a seeded [`FlakyEngine`]. Fault streams
+/// decorrelate per chip with the same seed-splitting scheme as the
+/// engines' own outcome streams.
+pub fn flaky_fleet(
+    cfg: &FleetConfig,
+    profile: &AccuracyProfile,
+    fcfg: &FlakyConfig,
+) -> Fleet<FlakyEngine<AnalyticEngine>> {
+    let exec = cfg.exec_seconds_per_batch;
+    let chips: Vec<FlakyEngine<AnalyticEngine>> =
+        analytic_fleet(cfg, profile)
+        .chips
+        .into_iter()
+        .enumerate()
+        .map(|(i, inner)| {
+            FlakyEngine::new(
+                inner,
+                fcfg.clone(),
+                cfg.seed ^ 0x9e37_79b9_7f4a_7c15u64
+                    .wrapping_mul(i as u64 + 1),
+                i,
+            )
+        })
+        .collect();
+    let mut fleet = Fleet::new(chips, cfg.policy, exec);
+    fleet.set_health_config(cfg.health.clone(), cfg.seed);
+    fleet
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::serve::{
+        BatchPolicy, LifetimeClock, Workload,
+    };
+    use std::sync::Arc;
+
+    fn engine(seed: u64, cfg: FlakyConfig, chip: usize)
+        -> FlakyEngine<AnalyticEngine>
+    {
+        FlakyEngine::new(
+            AnalyticEngine::new(
+                Arc::new(AccuracyProfile::uncompensated(1.0, 0.0, 0.5)),
+                LifetimeClock::new(1.0, 1e5),
+                BatchPolicy { max_batch: 8, max_wait: 0.01 },
+                seed,
+            ),
+            cfg,
+            seed,
+            chip,
+        )
+    }
+
+    fn req(id: u64) -> Request {
+        Request {
+            id,
+            sample: 0,
+            arrival_age: 0.0,
+            arrival_wall: 0.0,
+            attempt: 0,
+            deadline: f64::INFINITY,
+        }
+    }
+
+    #[test]
+    fn faults_fire_before_the_queue_is_touched() {
+        let cfg = FlakyConfig {
+            transient_rate: 1.0, // always faults
+            spike_rate: 0.0,
+            persistent_chip: None,
+            ..Default::default()
+        };
+        let mut e = engine(7, cfg, 0);
+        for i in 0..5 {
+            ChipEngine::submit(&mut e, req(i));
+        }
+        assert!(ChipEngine::step(&mut e, 0.001).is_err());
+        // The queue survives the fault intact — salvageable.
+        assert_eq!(ChipEngine::queue_len(&e), 5);
+    }
+
+    #[test]
+    fn persistent_fault_latches_and_refresh_repairs_it() {
+        let cfg = FlakyConfig {
+            transient_rate: 0.0,
+            spike_rate: 0.0,
+            persistent_chip: Some(0),
+            persistent_after: 2,
+            ..Default::default()
+        };
+        let mut e = engine(9, cfg, 0);
+        for i in 0..40 {
+            ChipEngine::submit(&mut e, req(i));
+        }
+        assert!(ChipEngine::step(&mut e, 0.001).is_ok());
+        assert!(ChipEngine::step(&mut e, 0.001).is_ok());
+        // Step 3 onward: latched until refresh.
+        assert!(ChipEngine::step(&mut e, 0.001).is_err());
+        assert!(e.is_broken());
+        assert!(ChipEngine::step(&mut e, 0.001).is_err());
+        ChipEngine::refresh(&mut e, 1.0);
+        assert!(!e.is_broken());
+        assert!(ChipEngine::step(&mut e, 0.001).is_ok());
+    }
+
+    #[test]
+    fn latency_spikes_mutate_reports_not_the_clock() {
+        let cfg = FlakyConfig {
+            transient_rate: 0.0,
+            spike_rate: 1.0, // every batch spikes
+            spike_factor: 10.0,
+            persistent_chip: None,
+            ..Default::default()
+        };
+        let mut e = engine(11, cfg.clone(), 0);
+        for i in 0..4 {
+            ChipEngine::submit(&mut e, req(i));
+        }
+        ChipEngine::align_wall(&mut e, 0.0);
+        let spiked = ChipEngine::step(&mut e, 0.001).unwrap();
+        let mut quiet_e = engine(11, FlakyConfig {
+            spike_rate: 0.0,
+            ..cfg
+        }, 0);
+        for i in 0..4 {
+            ChipEngine::submit(&mut quiet_e, req(i));
+        }
+        ChipEngine::align_wall(&mut quiet_e, 0.0);
+        let quiet = ChipEngine::step(&mut quiet_e, 0.001).unwrap();
+        assert_eq!(spiked.len(), quiet.len());
+        let extra = 0.001 * 9.0;
+        for (a, b) in spiked.iter().zip(&quiet) {
+            assert!((a.latency - b.latency - extra).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn flaky_fleet_replays_bit_identically() {
+        let run = || {
+            let fc = FleetConfig {
+                n_chips: 3,
+                exec_seconds_per_batch: 0.001,
+                ..Default::default()
+            };
+            let profile =
+                AccuracyProfile::uncompensated(0.95, 0.0, 0.5);
+            let mut fleet =
+                flaky_fleet(&fc, &profile, &FlakyConfig::default());
+            let mut wl = Workload::new(900.0, 0xf1a);
+            let comps =
+                fleet.run_events(1.0, 0.05, &mut wl, 64).unwrap();
+            let sig: Vec<(u64, usize, u64)> = comps
+                .iter()
+                .map(|c| {
+                    (
+                        c.completion.id,
+                        c.chip,
+                        c.completion.latency.to_bits(),
+                    )
+                })
+                .collect();
+            (
+                sig,
+                fleet.metrics.breaker_opens,
+                fleet.metrics.shed_deadline,
+                fleet.metrics.retries,
+            )
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -28,9 +28,11 @@
 //! application order, traffic rates and the workload stream.
 
 pub mod fault;
+pub mod flaky;
 pub mod traffic;
 
 pub use fault::{inject_faults, FaultReport, FaultSpec, ReadNoiseBurst};
+pub use flaky::{flaky_fleet, FlakyConfig, FlakyEngine};
 pub use traffic::TrafficShape;
 
 use crate::coordinator::serve::{percentile_sorted, Workload};
@@ -204,7 +206,27 @@ impl ScenarioConfig {
         )
     }
 
-    /// Look up a named preset (`chaos` | `diurnal` | `misdrift`).
+    /// The self-healing acceptance timeline: steady traffic, no
+    /// scripted lifecycle events — every disturbance comes from the
+    /// [`flaky`] fault layer (transient step faults, latency spikes,
+    /// one chip latching a persistent fault). Run it against a
+    /// [`flaky_fleet`]: with the breaker enabled the fleet contains
+    /// the faults (quarantine → probe → rejoin, refresh for the
+    /// latched chip); with `--breaker off` the first fault aborts.
+    pub fn flaky(n_chips: usize, seconds: f64) -> ScenarioConfig {
+        let per_chip = 260.0;
+        ScenarioConfig::new(
+            seconds,
+            seconds / 48.0,
+            TrafficShape::Constant {
+                rate: per_chip * n_chips as f64,
+            },
+            Vec::new(),
+        )
+    }
+
+    /// Look up a named preset
+    /// (`chaos` | `diurnal` | `misdrift` | `flaky`).
     pub fn preset(
         name: &str,
         n_chips: usize,
@@ -216,8 +238,10 @@ impl ScenarioConfig {
             "misdrift" => {
                 Ok(ScenarioConfig::misdrift(n_chips, seconds))
             }
+            "flaky" => Ok(ScenarioConfig::flaky(n_chips, seconds)),
             other => bail!(
-                "unknown preset '{other}' (chaos | diurnal | misdrift)"
+                "unknown preset '{other}' \
+                 (chaos | diurnal | misdrift | flaky)"
             ),
         }
     }
@@ -327,6 +351,8 @@ struct PhaseAcc {
     requeued_at_end: usize,
     shed_at_start: usize,
     shed_at_end: usize,
+    shed_deadline_at_start: usize,
+    shed_deadline_at_end: usize,
 }
 
 impl PhaseAcc {
@@ -335,6 +361,7 @@ impl PhaseAcc {
         start: f64,
         requeues: usize,
         shed: usize,
+        shed_deadline: usize,
     ) -> PhaseAcc {
         PhaseAcc {
             name: name.to_string(),
@@ -348,6 +375,8 @@ impl PhaseAcc {
             requeued_at_end: requeues,
             shed_at_start: shed,
             shed_at_end: shed,
+            shed_deadline_at_start: shed_deadline,
+            shed_deadline_at_end: shed_deadline,
         }
     }
 
@@ -381,6 +410,8 @@ impl PhaseAcc {
         let (throughput, requeue_rate) =
             PhaseSummary::rates(self.served, requeued, self.start, end);
         let shed = self.shed_at_end - self.shed_at_start;
+        let shed_deadline =
+            self.shed_deadline_at_end - self.shed_deadline_at_start;
         PhaseSummary {
             name: self.name,
             start: self.start,
@@ -395,6 +426,7 @@ impl PhaseAcc {
             requeue_rate,
             shed,
             shed_rate: PhaseSummary::shed_rate_of(self.served, shed),
+            shed_deadline,
         }
     }
 }
@@ -456,6 +488,7 @@ pub fn run_scenario<E: ChipEngine>(
         0.0,
         fleet.metrics.requeues,
         fleet.metrics.shed,
+        fleet.metrics.shed_deadline,
     );
     let mut completions: Vec<FleetCompletion> = Vec::new();
     let mut wall = 0.0f64;
@@ -479,12 +512,14 @@ pub fn run_scenario<E: ChipEngine>(
             // this event are charged to the phase it opens.
             acc.requeued_at_end = fleet.metrics.requeues;
             acc.shed_at_end = fleet.metrics.shed;
+            acc.shed_deadline_at_end = fleet.metrics.shed_deadline;
             phases.push(acc.close(wall, n_chips));
             acc = PhaseAcc::new(
                 &ev.label,
                 wall,
                 fleet.metrics.requeues,
                 fleet.metrics.shed,
+                fleet.metrics.shed_deadline,
             );
             timeline_obs(ev);
             if let Some(shape) = apply(fleet, &ev.action)
@@ -513,6 +548,7 @@ pub fn run_scenario<E: ChipEngine>(
     completions.extend(tail);
     acc.requeued_at_end = fleet.metrics.requeues;
     acc.shed_at_end = fleet.metrics.shed;
+    acc.shed_deadline_at_end = fleet.metrics.shed_deadline;
     phases.push(acc.close(fleet.metrics.wall, n_chips));
     let mut summary = fleet.summary();
     summary.phases = phases;
@@ -592,6 +628,7 @@ pub fn run_scenario_events<E: ChipEngine>(
         0.0,
         fleet.metrics.requeues,
         fleet.metrics.shed,
+        fleet.metrics.shed_deadline,
     );
     // Retry path: requests parked by a previous failed run are
     // delivered first (exactly-once across errors).
@@ -610,12 +647,15 @@ pub fn run_scenario_events<E: ChipEngine>(
             let tev = &events[next_event];
             acc.requeued_at_end = ev.fleet().metrics.requeues;
             acc.shed_at_end = ev.fleet().metrics.shed;
+            acc.shed_deadline_at_end =
+                ev.fleet().metrics.shed_deadline;
             phases.push(acc.close(wall, n_chips));
             acc = PhaseAcc::new(
                 &tev.label,
                 wall,
                 ev.fleet().metrics.requeues,
                 ev.fleet().metrics.shed,
+                ev.fleet().metrics.shed_deadline,
             );
             timeline_obs(tev);
             let applied = apply(ev.fleet_mut(), &tev.action)
@@ -670,7 +710,9 @@ pub fn run_scenario_events<E: ChipEngine>(
         ev.sample(dt);
         acc.absorb(&comps);
         acc.ticks += 1;
-        acc.alive_chip_ticks += ev.fleet().n_alive();
+        // Routable chips only: a breaker-quarantined chip is not
+        // serving, and phase availability should say so.
+        acc.alive_chip_ticks += ev.fleet().n_routable();
         completions.extend(comps);
         wall = end_rel;
     }
@@ -687,6 +729,7 @@ pub fn run_scenario_events<E: ChipEngine>(
     completions.extend(tail);
     acc.requeued_at_end = fleet.metrics.requeues;
     acc.shed_at_end = fleet.metrics.shed;
+    acc.shed_deadline_at_end = fleet.metrics.shed_deadline;
     phases.push(acc.close(fleet.metrics.wall, n_chips));
     let mut summary = fleet.summary();
     summary.phases = phases;
@@ -722,6 +765,7 @@ mod tests {
             seed: 0x5ce0,
             drift_skew: 1.0,
             age_source: crate::compensation::AgeSource::Clock,
+            health: crate::fleet::HealthConfig::default(),
         }
     }
 
@@ -1061,6 +1105,39 @@ mod tests {
             "estimator {} vs reverted {}",
             probed.accuracy,
             reverted.accuracy
+        );
+    }
+
+    #[test]
+    fn flaky_preset_contains_faults_and_conserves() {
+        let cfg = ScenarioConfig::preset("flaky", 3, 6.0).unwrap();
+        assert!(cfg.events.is_empty());
+        let profile = AccuracyProfile::uncompensated(0.95, 0.0, 0.5);
+        let mut fleet = flaky_fleet(
+            &fleet_cfg(3),
+            &profile,
+            &FlakyConfig::default(),
+        );
+        let mut wl = Workload::new(0.0, 0xf1a2);
+        let out = run_scenario_events(&mut fleet, &cfg, &mut wl, 64)
+            .expect("breaker must contain the flaky faults");
+        let m = &fleet.metrics;
+        // The persistent chip latched and the breaker reacted.
+        assert!(m.breaker_opens >= 1, "no breaker activity");
+        assert!(
+            m.breaker_refreshes >= 1,
+            "latched chip never escalated to refresh"
+        );
+        // Exactly-once over the whole episode, with the new shed
+        // class broken out: routed = served + deadline_exceeded.
+        assert_eq!(m.total_routed(), m.served + m.shed_deadline);
+        assert_eq!(out.summary.served, out.completions.len());
+        // Quarantines cost some availability, but self-healing keeps
+        // the fleet serving.
+        assert!(
+            out.summary.phases[0].availability > 0.9,
+            "availability {}",
+            out.summary.phases[0].availability
         );
     }
 

@@ -29,6 +29,7 @@ fn cfg(
         seed,
         drift_skew: 1.0,
         age_source: vera_plus::fleet::AgeSource::Clock,
+        health: vera_plus::fleet::HealthConfig::default(),
     }
 }
 

@@ -1,0 +1,305 @@
+//! Property tests for the self-healing fleet: circuit-breaker state
+//! machine, bounded retries with `deadline_exceeded` conservation,
+//! thread-count replay determinism under fault injection, and the
+//! composition of fault injection with mis-modeled drift.
+
+use vera_plus::coordinator::serve::{BatchPolicy, Workload};
+use vera_plus::fleet::{
+    BalancePolicy, BreakerState, FleetConfig, FleetHealth, HealthConfig,
+};
+use vera_plus::rram::YEAR;
+use vera_plus::scenario::{
+    flaky_fleet, run_scenario_events, FlakyConfig, ScenarioConfig,
+};
+
+fn fleet_cfg(n_chips: usize, seed: u64) -> FleetConfig {
+    FleetConfig {
+        n_chips,
+        t0: 30.0 * 86_400.0,
+        stagger: YEAR,
+        accel: 1e6,
+        policy: BalancePolicy::DriftAware,
+        batch: BatchPolicy {
+            max_batch: 16,
+            max_wait: 0.01,
+        },
+        exec_seconds_per_batch: 2e-3,
+        seed,
+        ..FleetConfig::default()
+    }
+}
+
+fn profile() -> vera_plus::fleet::AccuracyProfile {
+    vera_plus::fleet::AccuracyProfile::synthetic(
+        8,
+        10.0 * YEAR,
+        0.92,
+        0.02,
+        0.5,
+    )
+}
+
+/// The breaker walks Closed → Open → Half-Open → Closed, trips only at
+/// the consecutive-failure threshold, doubles its backoff on a failed
+/// probe (with bounded jitter), and rejoins on a successful one.
+#[test]
+fn breaker_state_machine_transitions() {
+    let cfg = HealthConfig::default();
+    let mut h = FleetHealth::new(cfg.clone(), 2, 0xbead);
+
+    // Two errors stay below failure_threshold = 3.
+    assert!(!h.note_error(1));
+    assert!(!h.note_error(1));
+    assert!(matches!(h.chips[1].state, BreakerState::Closed));
+    assert!(!h.quarantined(1));
+    // The third trips it.
+    assert!(h.note_error(1));
+    let until = h.open(1, 10.0);
+    assert!(h.quarantined(1));
+    let nominal = cfg.backoff_for(1);
+    assert!(
+        until - 10.0 >= nominal * (1.0 - cfg.jitter) - 1e-12
+            && until - 10.0 <= nominal * (1.0 + cfg.jitter) + 1e-12,
+        "first backoff {} outside ±{:.0}% of {}",
+        until - 10.0,
+        100.0 * cfg.jitter,
+        nominal,
+    );
+    // Chip 0 was never touched.
+    assert!(matches!(h.chips[0].state, BreakerState::Closed));
+
+    // Probe timer fires: Half-Open is routable again.
+    h.begin_probe(1);
+    assert!(matches!(h.chips[1].state,
+                     BreakerState::HalfOpen { opens: 1 }));
+    assert!(!h.quarantined(1));
+
+    // A failed probe re-opens immediately (no threshold wait) and the
+    // backoff doubles because `opens` carries across.
+    assert!(h.note_error(1), "a Half-Open failure must re-open");
+    let until2 = h.open(1, 20.0);
+    assert!(matches!(h.chips[1].state,
+                     BreakerState::Open { opens: 2, .. }));
+    let nominal2 = cfg.backoff_for(2);
+    assert!((nominal2 - 2.0 * nominal).abs() < 1e-12);
+    assert!(
+        until2 - 20.0 >= nominal2 * (1.0 - cfg.jitter) - 1e-12
+            && until2 - 20.0 <= nominal2 * (1.0 + cfg.jitter) + 1e-12,
+        "re-open backoff {} did not double (nominal {})",
+        until2 - 20.0,
+        nominal2,
+    );
+
+    // A successful probe closes the breaker and reports the rejoin.
+    h.begin_probe(1);
+    assert!(h.note_success(1, 8, 0), "probe success must rejoin");
+    assert!(matches!(h.chips[1].state, BreakerState::Closed));
+    assert_eq!(h.chips[1].consecutive, 0);
+    assert_eq!(h.chips[1].total_opens, 2);
+    // A plain success on a Closed chip is not a rejoin.
+    assert!(!h.note_success(1, 8, 0));
+}
+
+/// Nominal backoff grows geometrically and saturates at `backoff_max`;
+/// refresh escalation fires on the opens count or the accuracy floor.
+#[test]
+fn backoff_caps_and_refresh_escalates() {
+    let cfg = HealthConfig::default();
+    let mut prev = 0.0;
+    for opens in 1..=12 {
+        let b = cfg.backoff_for(opens);
+        assert!(b >= prev, "backoff must be monotone");
+        assert!(b <= cfg.backoff_max + 1e-12, "backoff must cap");
+        prev = b;
+    }
+    assert_eq!(cfg.backoff_for(1), cfg.backoff_base);
+    assert_eq!(cfg.backoff_for(30), cfg.backoff_max);
+
+    let mut h = FleetHealth::new(cfg.clone(), 1, 7);
+    // Below the opens threshold with healthy accuracy: keep probing.
+    h.open(0, 0.0);
+    assert!(!h.wants_refresh(0, 0.9));
+    // The accuracy floor forces a refresh regardless of opens.
+    assert!(h.wants_refresh(0, cfg.acc_floor / 2.0));
+    // Enough opens force it regardless of accuracy.
+    for _ in 1..cfg.refresh_after_opens {
+        h.begin_probe(0);
+        h.note_error(0);
+        h.open(0, 0.0);
+    }
+    assert!(h.wants_refresh(0, 0.9));
+    // reset() wipes the record (post-refresh).
+    h.reset(0);
+    assert!(matches!(h.chips[0].state, BreakerState::Closed));
+    assert_eq!(h.chips[0].total_opens, 0);
+}
+
+/// A zero-second deadline exhausts every salvaged request: all breaker
+/// redeliveries shed into `deadline_exceeded`, and the routed ledger
+/// still balances exactly (`routed = served + shed_deadline`).
+#[test]
+fn retry_budget_exhaustion_sheds_and_conserves() {
+    let mut cfg = fleet_cfg(3, 0xdead1);
+    cfg.health = HealthConfig {
+        deadline: 0.0,
+        ..HealthConfig::default()
+    };
+    let fcfg = FlakyConfig {
+        transient_rate: 0.0,
+        spike_rate: 0.0,
+        persistent_chip: Some(1),
+        persistent_after: 5,
+        ..FlakyConfig::default()
+    };
+    let mut fleet = flaky_fleet(&cfg, &profile(), &fcfg);
+    let mut wl = Workload::new(900.0, cfg.seed ^ 0x57a6);
+    let comps = fleet
+        .run_events(4.0, 0.1, &mut wl, 512)
+        .expect("breaker must contain the persistent fault");
+    let m = &fleet.metrics;
+    assert!(m.breaker_opens >= 1, "persistent chip never tripped");
+    assert!(
+        m.shed_deadline > 0,
+        "zero deadline must shed every salvaged request"
+    );
+    assert_eq!(
+        m.total_routed(),
+        comps.len() + m.shed_deadline,
+        "routed ({}) != served ({}) + deadline_exceeded ({})",
+        m.total_routed(),
+        comps.len(),
+        m.shed_deadline,
+    );
+    // No duplicate deliveries.
+    let mut ids: Vec<u64> =
+        comps.iter().map(|c| c.completion.id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), comps.len(), "duplicate completion ids");
+}
+
+/// With a finite retry budget and survivors available, salvaged
+/// requests are redelivered (retries > 0) and every request is
+/// accounted exactly once across faults, probes and rejoins.
+#[test]
+fn bounded_retries_conserve_exactly_once() {
+    let cfg = fleet_cfg(3, 0xf1a4);
+    let fcfg = FlakyConfig {
+        transient_rate: 0.15,
+        spike_rate: 0.1,
+        persistent_chip: Some(1),
+        persistent_after: 10,
+        ..FlakyConfig::default()
+    };
+    let mut fleet = flaky_fleet(&cfg, &profile(), &fcfg);
+    let mut wl = Workload::new(700.0, cfg.seed ^ 0x57a6);
+    let comps = fleet
+        .run_events(6.0, 0.125, &mut wl, 512)
+        .expect("breaker must contain transient + persistent faults");
+    let m = &fleet.metrics;
+    assert!(m.breaker_opens >= 1);
+    assert!(m.retries > 0, "no salvaged request was redelivered");
+    assert_eq!(
+        m.total_routed(),
+        comps.len() + m.shed_deadline,
+        "conservation: routed != served + deadline_exceeded",
+    );
+    let mut ids: Vec<u64> =
+        comps.iter().map(|c| c.completion.id).collect();
+    ids.sort_unstable();
+    let before = ids.len();
+    ids.dedup();
+    assert_eq!(ids.len(), before, "duplicate completion ids");
+}
+
+/// The same seeded flaky run replays bit-identically at
+/// `VERA_THREADS=1` and `VERA_THREADS=4`: identical completion
+/// streams (id, chip, latency bits, correctness) and identical
+/// breaker/retry/shed counters. All fault, jitter and probe draws sit
+/// on dedicated event-ordered RNG streams, so worker-pool width must
+/// not leak into outcomes.
+#[test]
+fn flaky_replay_is_bit_identical_across_thread_counts() {
+    let capture = |threads: &str| {
+        std::env::set_var("VERA_THREADS", threads);
+        let cfg = fleet_cfg(4, 0x5eed);
+        let fcfg = FlakyConfig::default();
+        let mut fleet = flaky_fleet(&cfg, &profile(), &fcfg);
+        let mut wl = Workload::new(800.0, cfg.seed ^ 0x57a6);
+        let comps = fleet
+            .run_events(5.0, 0.125, &mut wl, 512)
+            .expect("flaky run must survive under the breaker");
+        let stream: Vec<(u64, usize, u64, bool)> = comps
+            .iter()
+            .map(|c| {
+                (
+                    c.completion.id,
+                    c.chip,
+                    c.completion.latency.to_bits(),
+                    c.completion.correct,
+                )
+            })
+            .collect();
+        let m = &fleet.metrics;
+        let counters = (
+            m.served,
+            m.shed,
+            m.shed_deadline,
+            m.retries,
+            m.breaker_opens,
+            m.breaker_probes,
+            m.breaker_rejoins,
+            m.breaker_refreshes,
+            m.requeues,
+            m.steals,
+        );
+        (stream, counters)
+    };
+    let serial = capture("1");
+    let parallel = capture("4");
+    std::env::remove_var("VERA_THREADS");
+    assert_eq!(
+        serial.1, parallel.1,
+        "breaker counters diverged across thread counts"
+    );
+    assert_eq!(
+        serial.0, parallel.0,
+        "completion stream diverged across thread counts"
+    );
+    assert!(
+        serial.1 .4 >= 1,
+        "fault injection never tripped a breaker (counters {:?})",
+        serial.1
+    );
+}
+
+/// Fault injection composes with mis-modeled drift: a flaky fleet
+/// whose clocks under-estimate true aging by 1000x still completes
+/// the flaky scenario timeline under the breaker, with exact
+/// conservation and non-zero self-healing activity.
+#[test]
+fn misdrift_and_flaky_compose() {
+    let mut cfg = fleet_cfg(3, 0x3d5ca);
+    cfg.drift_skew = 1e3;
+    let scen = ScenarioConfig::flaky(3, 6.0);
+    let fcfg = FlakyConfig {
+        persistent_after: 20,
+        ..FlakyConfig::default()
+    };
+    let mut fleet = flaky_fleet(&cfg, &profile(), &fcfg);
+    let mut wl = Workload::new(0.0, cfg.seed ^ 0x57a6);
+    let outcome = run_scenario_events(&mut fleet, &scen, &mut wl, 512)
+        .expect("misdrift + flaky must be contained");
+    let s = &outcome.summary;
+    assert!(s.breaker_opens >= 1, "no breaker activity under faults");
+    assert_eq!(
+        fleet.metrics.total_routed(),
+        s.served + s.shed_deadline,
+        "conservation under misdrift + flaky",
+    );
+    assert!(
+        s.availability > 0.6,
+        "availability collapsed: {}",
+        s.availability
+    );
+}

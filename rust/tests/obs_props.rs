@@ -40,6 +40,7 @@ fn fleet_cfg(n_chips: usize, seed: u64) -> FleetConfig {
         seed,
         drift_skew: 1.0,
         age_source: vera_plus::fleet::AgeSource::Clock,
+        health: vera_plus::fleet::HealthConfig::default(),
     }
 }
 

@@ -304,6 +304,137 @@ fn misdrift_script_recovers_accuracy_with_the_estimator() {
     }
 }
 
+/// Self-healing acceptance (ISSUE 9): under the `flaky` preset —
+/// transient step faults, latency spikes and one persistently faulty
+/// chip — a breaker-off fleet aborts on the first fault (the legacy
+/// fail-fast contract), while the self-healing fleet completes the
+/// run with:
+///
+/// - availability ≥ 0.95 (quarantines are brief and bounded);
+/// - exactly-once conservation with the shed ledger broken out:
+///   admission `shed` vs breaker `deadline_exceeded`
+///   (`routed = served + shed_deadline`, all ids unique);
+/// - quarantined chips returning via Half-Open probes, and the
+///   persistent chip escalated to a breaker-scheduled refresh;
+/// - bit-identical replay at the same seed across
+///   `VERA_THREADS={1,4}`.
+#[test]
+fn flaky_preset_self_heals_where_fail_fast_aborts() {
+    use vera_plus::fleet::HealthConfig;
+    use vera_plus::scenario::{
+        flaky_fleet, run_scenario_events, FlakyConfig,
+    };
+
+    let scen = ScenarioConfig::flaky(CHIPS, SECONDS);
+    let base = FleetConfig {
+        exec_seconds_per_batch: 2e-3,
+        accel: 1e6,
+        ..fleet_cfg()
+    };
+    let fcfg = FlakyConfig::default();
+    let profile = profile();
+
+    // Breaker off: the first injected fault aborts the run — the
+    // pre-breaker fleet loses the whole timeline to one bad chip.
+    let off_cfg = FleetConfig {
+        health: HealthConfig {
+            enabled: false,
+            ..HealthConfig::default()
+        },
+        ..base.clone()
+    };
+    let mut off = flaky_fleet(&off_cfg, &profile, &fcfg);
+    let mut wl = Workload::new(0.0, 0x5eed);
+    let res = run_scenario_events(&mut off, &scen, &mut wl, 512);
+    assert!(
+        res.is_err(),
+        "breaker-off flaky run should abort on the first fault"
+    );
+
+    // Breaker on (default): the same faults are contained.
+    let capture = |threads: &str| {
+        std::env::set_var("VERA_THREADS", threads);
+        let mut fleet = flaky_fleet(&base, &profile, &fcfg);
+        let mut wl = Workload::new(0.0, 0x5eed);
+        let outcome =
+            run_scenario_events(&mut fleet, &scen, &mut wl, 512)
+                .expect("self-healing fleet must survive the preset");
+        let routed = fleet.metrics.total_routed();
+        (outcome, routed)
+    };
+    let (outcome, routed) = capture("1");
+    let s = &outcome.summary;
+
+    // Availability stays high: quarantine windows are short.
+    assert!(
+        s.availability >= 0.95,
+        "availability {} under the flaky preset",
+        s.availability
+    );
+    // Conservation with the shed ledger broken out: admission shed
+    // never entered `routed`; deadline_exceeded did.
+    assert_eq!(
+        routed,
+        s.served + s.shed_deadline,
+        "routed != served + deadline_exceeded \
+         (admission shed = {})",
+        s.shed,
+    );
+    let mut ids: Vec<u64> = outcome
+        .completions
+        .iter()
+        .map(|c| c.completion.id)
+        .collect();
+    ids.sort_unstable();
+    let n = ids.len();
+    ids.dedup();
+    assert_eq!(ids.len(), n, "duplicate completion ids");
+    assert_eq!(n, s.served);
+
+    // Self-healing actually happened: breakers tripped, probes were
+    // offered, and the persistent chip escalated to a refresh.
+    assert!(s.breaker_opens >= 1, "no breaker trips under faults");
+    assert!(s.breaker_probes >= 1, "no probes were scheduled");
+    assert!(
+        s.breaker_refreshes >= 1,
+        "persistent fault never escalated to a refresh"
+    );
+    assert!(
+        s.breaker_rejoins + s.breaker_refreshes >= 1,
+        "no quarantined chip ever returned to the pool"
+    );
+    // The persistent chip kept serving overall (it rejoined).
+    assert!(
+        s.chips[fcfg.persistent_chip.unwrap()].served > 0,
+        "persistent chip never served after containment"
+    );
+
+    // Bit-identical replay across worker-pool widths.
+    let (outcome4, routed4) = capture("4");
+    std::env::remove_var("VERA_THREADS");
+    assert_eq!(routed, routed4);
+    assert_eq!(s.served, outcome4.summary.served);
+    assert_eq!(s.shed_deadline, outcome4.summary.shed_deadline);
+    assert_eq!(s.breaker_opens, outcome4.summary.breaker_opens);
+    assert_eq!(s.accuracy, outcome4.summary.accuracy);
+    assert_eq!(
+        outcome.completions.len(),
+        outcome4.completions.len()
+    );
+    for (a, b) in outcome
+        .completions
+        .iter()
+        .zip(&outcome4.completions)
+    {
+        assert_eq!(a.chip, b.chip);
+        assert_eq!(a.completion.id, b.completion.id);
+        assert_eq!(
+            a.completion.latency.to_bits(),
+            b.completion.latency.to_bits()
+        );
+    }
+}
+
 /// The same timeline parsed from the JSON script format produces the
 /// identical run — the CLI `--script` path is equivalent to the
 /// programmatic API.
