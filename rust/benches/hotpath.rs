@@ -7,8 +7,10 @@
 //!    parallel readout, bulk Gaussian generation, percentile selection
 //!    and SetStore routing.
 //! 2. **Native execution backend** (artifact-free, always runs):
-//!    `forward/*` — naive vs blocked vs parallel GEMM, fused vs
-//!    unfused VeRA+ compensation epilogue, end-to-end native forward
+//!    `forward/*` — naive vs blocked vs parallel GEMM, the int8
+//!    crossbar rung (`forward/int8_*`) and the hardware-numeric
+//!    DAC→crossbar→ADC chain (`forward/hwnum_*`), fused vs unfused
+//!    VeRA+ compensation epilogue, end-to-end native forward
 //!    executables — and `evalstats/*` — the batched EVALSTATS path at
 //!    1 worker vs the pool.
 //! 3. **PJRT-backed** (needs artifacts + real xla bindings): fwd /
@@ -25,7 +27,7 @@ use vera_plus::compensation::{CompSet, SetStore};
 use vera_plus::coordinator::eval::{eval_stats_workers, EvalMode};
 use vera_plus::nn::init;
 use vera_plus::rram::{ArrayBank, ConductanceGrid, IbmDrift, YEAR};
-use vera_plus::runtime::native::gemm;
+use vera_plus::runtime::native::{gemm, int8};
 use vera_plus::runtime::Runtime;
 use vera_plus::util::bencher::Bencher;
 use vera_plus::util::parallel;
@@ -195,6 +197,75 @@ fn native_stages(bench: &mut Bencher) -> anyhow::Result<()> {
         gemm::gemm_threads(threads, m, n, k, &a, &b, &mut c);
         std::hint::black_box(c[0]);
     });
+
+    // --- int8 crossbar rung: i8×i8→i32, blocked vs parallel ----------
+    let rand_i8 = |len: usize, lim: i32, rng: &mut Pcg64| -> Vec<i8> {
+        (0..len)
+            .map(|_| (rng.below(2 * lim as usize + 1) as i32 - lim) as i8)
+            .collect()
+    };
+    let ai = rand_i8(m * k, 127, &mut rng);
+    let bi = rand_i8(k * n, 7, &mut rng);
+    let mut ci = vec![0i32; m * n];
+    bench.bench_items("forward/int8_gemm_256/blocked", macs, || {
+        int8::gemm_i8_threads(1, m, n, k, &ai, &bi, &mut ci);
+        std::hint::black_box(ci[0]);
+    });
+    bench.bench_items("forward/int8_gemm_256/parallel", macs, || {
+        int8::gemm_i8_threads(threads, m, n, k, &ai, &bi, &mut ci);
+        std::hint::black_box(ci[0]);
+    });
+    // The full crossbar kernel (GEMM + 8-bit ADC requant) at the
+    // Pallas artifact's geometry.
+    let (cn, ck, cc) = (128usize, 256usize, 512usize);
+    let cx = rand_i8(cn * ck, 7, &mut rng);
+    let cw = rand_i8(ck * cc, 7, &mut rng);
+    bench.bench_items(
+        "forward/int8_crossbar_128x256x512",
+        (cn * ck * cc) as f64,
+        || {
+            let y = int8::kernel_crossbar(
+                &cx, &cw, 0.1, 0.02, cn, ck, cc, threads,
+            );
+            std::hint::black_box(y[0]);
+        },
+    );
+
+    // --- hardware-numeric chain: DAC → int8 GEMM → ADC/LUT deq -------
+    // Layer-shaped like the comp-epilogue stage below; measures the
+    // full bit-accurate path hwnum mode runs per layer.
+    {
+        let (rows, cin, cout) = (4096usize, 64usize, 128usize);
+        let h = randn(rows * cin, &mut rng);
+        let wq = rand_i8(cin * cout, 7, &mut rng);
+        let w_scales = vec![0.02f32; cout];
+        let adc = int8::AdcCfg::for_chain(cin, 8, 4);
+        let lut = int8::AdcLut::identity(adc.bits);
+        let lsb = adc.lsb();
+        let mut acc = vec![0i32; rows * cout];
+        let mut y = vec![0f32; rows * cout];
+        bench.bench_items(
+            "forward/hwnum_chain_4096x64x128",
+            (rows * cin * cout) as f64,
+            || {
+                let (codes, x_scales) = int8::dac_quant(&h, rows, 8);
+                int8::gemm_i8_threads(
+                    threads, rows, cout, cin, &codes, &wq, &mut acc,
+                );
+                for (idx, (&a, o)) in
+                    acc.iter().zip(y.iter_mut()).enumerate()
+                {
+                    let code = adc.quantize(a as f64);
+                    *o = (lut.correct(code)
+                        * lsb
+                        * x_scales[idx / cout] as f64
+                        * w_scales[idx % cout] as f64)
+                        as f32;
+                }
+                std::hint::black_box(y[0]);
+            },
+        );
+    }
 
     // --- fused vs unfused VeRA+ compensation epilogue ----------------
     // Layer-shaped: 4096 activation rows, 64→128 channels, rank 8.
@@ -655,6 +726,11 @@ fn main() -> anyhow::Result<()> {
         (&parallel_stage, "net_readout/pre_pr_scalar"),
         ("forward/gemm_256/blocked", "forward/gemm_256/naive"),
         ("forward/gemm_256/parallel", "forward/gemm_256/blocked"),
+        (
+            "forward/int8_gemm_256/parallel",
+            "forward/int8_gemm_256/blocked",
+        ),
+        ("forward/int8_gemm_256/blocked", "forward/gemm_256/blocked"),
         (
             "forward/comp_epilogue/fused",
             "forward/comp_epilogue/unfused",

@@ -20,10 +20,33 @@ use crate::coordinator::Deployment;
 use crate::harness::common::{print_row, Ctx};
 use crate::rram::drift::YEAR;
 use crate::rram::mapping::{quantize_per_channel, quantize_tensor};
-use crate::util::json::{arr, num, obj, s};
+use crate::util::json::{arr, num, obj, s, Json};
 use crate::util::rng::Pcg64;
 use crate::util::tensor::TensorMap;
 use anyhow::Result;
+
+/// Fold one section's outcome into the result rows. A section whose
+/// graphs fail to lower or train must degrade LOUDLY — visible
+/// "row skipped (reason)" marker, an obs instant, and a `skipped` row
+/// in the JSON — never a quiet omission (the native backend used to
+/// silently drop whatever it could not run).
+fn section(name: &str, rows: &mut Vec<Json>, out: Result<Vec<Json>>) {
+    match out {
+        Ok(mut r) => rows.append(&mut r),
+        Err(e) => {
+            let reason = format!("{e:#}");
+            println!("!! row skipped ({name}): {reason}");
+            crate::obs::event("ablations.row_skipped", "harness", || {
+                vec![("ablation", s(name)), ("reason", s(&reason))]
+            });
+            rows.push(obj(vec![
+                ("ablation", s(name)),
+                ("skipped", num(1.0)),
+                ("skip_reason", s(&reason)),
+            ]));
+        }
+    }
+}
 
 pub fn run(ctx: &Ctx) -> Result<()> {
     println!("\n== Ablations ==");
@@ -33,110 +56,127 @@ pub fn run(ctx: &Ctx) -> Result<()> {
     let mut rng = Pcg64::with_stream(ctx.budget.seed, 0xab1a);
     let mut rows = Vec::new();
 
-    // --- 1. drift-instance cadence -----------------------------------------
-    println!("-- drift-inject cadence (t = 10y, {model}) --");
-    let per_batch = train_comp_at(
-        &dep,
-        t,
-        dep.fresh_trainables(1),
-        &ctx.budget.comp_train_cfg(),
-        &mut rng,
-    )?;
-    let st_batch = eval_stats(
-        &dep, &per_batch.trainables, EvalMode::Compensated, t,
-        ctx.budget.instances.max(4), ctx.budget.samples, &mut rng,
-    )?;
-    let per_epoch = train_comp_frozen_instance(
-        &dep, t, dep.fresh_trainables(1),
-        &ctx.budget.comp_train_cfg(), &mut rng,
-    )?;
-    let st_epoch = eval_stats(
-        &dep, &per_epoch, EvalMode::Compensated, t,
-        ctx.budget.instances.max(4), ctx.budget.samples, &mut rng,
-    )?;
-    let widths = [26usize, 12, 12];
-    print_row(&["cadence".into(), "mean acc".into(), "std".into()],
-              &widths);
-    print_row(
-        &["per-batch (paper)".into(),
-          format!("{:.3}", st_batch.mean), format!("{:.4}", st_batch.std)],
-        &widths,
-    );
-    print_row(
-        &["single instance".into(),
-          format!("{:.3}", st_epoch.mean), format!("{:.4}", st_epoch.std)],
-        &widths,
-    );
-    rows.push(obj(vec![
-        ("ablation", s("drift_cadence")),
-        ("per_batch_mean", num(st_batch.mean)),
-        ("per_batch_std", num(st_batch.std)),
-        ("single_instance_mean", num(st_epoch.mean)),
-        ("single_instance_std", num(st_epoch.std)),
-    ]));
+    // --- 1+2. drift-instance cadence, then warm-start (which reuses
+    // the per-batch training run) ------------------------------------------
+    let out = (|| -> Result<Vec<Json>> {
+        let mut out = Vec::new();
+        println!("-- drift-inject cadence (t = 10y, {model}) --");
+        let per_batch = train_comp_at(
+            &dep,
+            t,
+            dep.fresh_trainables(1),
+            &ctx.budget.comp_train_cfg(),
+            &mut rng,
+        )?;
+        let st_batch = eval_stats(
+            &dep, &per_batch.trainables, EvalMode::Compensated, t,
+            ctx.budget.instances.max(4), ctx.budget.samples, &mut rng,
+        )?;
+        let per_epoch = train_comp_frozen_instance(
+            &dep, t, dep.fresh_trainables(1),
+            &ctx.budget.comp_train_cfg(), &mut rng,
+        )?;
+        let st_epoch = eval_stats(
+            &dep, &per_epoch, EvalMode::Compensated, t,
+            ctx.budget.instances.max(4), ctx.budget.samples, &mut rng,
+        )?;
+        let widths = [26usize, 12, 12];
+        print_row(&["cadence".into(), "mean acc".into(), "std".into()],
+                  &widths);
+        print_row(
+            &["per-batch (paper)".into(),
+              format!("{:.3}", st_batch.mean),
+              format!("{:.4}", st_batch.std)],
+            &widths,
+        );
+        print_row(
+            &["single instance".into(),
+              format!("{:.3}", st_epoch.mean),
+              format!("{:.4}", st_epoch.std)],
+            &widths,
+        );
+        out.push(obj(vec![
+            ("ablation", s("drift_cadence")),
+            ("per_batch_mean", num(st_batch.mean)),
+            ("per_batch_std", num(st_batch.std)),
+            ("single_instance_mean", num(st_epoch.mean)),
+            ("single_instance_std", num(st_epoch.std)),
+        ]));
 
-    // --- 2. warm-start vs fresh-init ----------------------------------------
-    println!("-- warm-start vs fresh init (second level at 10y) --");
-    let warm = train_comp_at(
-        &dep, t, per_batch.trainables.clone(),
-        &ctx.budget.comp_train_cfg(), &mut rng,
-    )?;
-    let st_warm = eval_stats(
-        &dep, &warm.trainables, EvalMode::Compensated, t,
-        ctx.budget.instances.max(4), ctx.budget.samples, &mut rng,
-    )?;
-    print_row(
-        &["fresh init (paper)".into(),
-          format!("{:.3}", st_batch.mean), format!("{:.4}", st_batch.std)],
-        &widths,
-    );
-    print_row(
-        &["warm-start".into(),
-          format!("{:.3}", st_warm.mean), format!("{:.4}", st_warm.std)],
-        &widths,
-    );
-    rows.push(obj(vec![
-        ("ablation", s("warm_start")),
-        ("fresh_mean", num(st_batch.mean)),
-        ("warm_mean", num(st_warm.mean)),
-    ]));
+        println!("-- warm-start vs fresh init (second level at 10y) --");
+        let warm = train_comp_at(
+            &dep, t, per_batch.trainables.clone(),
+            &ctx.budget.comp_train_cfg(), &mut rng,
+        )?;
+        let st_warm = eval_stats(
+            &dep, &warm.trainables, EvalMode::Compensated, t,
+            ctx.budget.instances.max(4), ctx.budget.samples, &mut rng,
+        )?;
+        print_row(
+            &["fresh init (paper)".into(),
+              format!("{:.3}", st_batch.mean),
+              format!("{:.4}", st_batch.std)],
+            &widths,
+        );
+        print_row(
+            &["warm-start".into(),
+              format!("{:.3}", st_warm.mean),
+              format!("{:.4}", st_warm.std)],
+            &widths,
+        );
+        out.push(obj(vec![
+            ("ablation", s("warm_start")),
+            ("fresh_mean", num(st_batch.mean)),
+            ("warm_mean", num(st_warm.mean)),
+        ]));
+        Ok(out)
+    })();
+    section("drift_cadence+warm_start", &mut rows, out);
 
     // --- 3. per-channel vs per-tensor quantization ---------------------------
-    println!("-- programming quantization granularity --");
-    let params = ctx.backbone(model)?;
-    let folded = crate::rram::fold_bn(&dep.manifest, &params)?;
-    let mut worst_tensor_err = (0.0f64, 0.0f64); // (per-tensor, per-chan)
-    for spec in dep.manifest.deploy_weights.iter().filter(|w| w.rram) {
-        let w = folded.get(&spec.name).unwrap().as_f32();
-        let cout = *spec.shape.last().unwrap();
-        let (ct, st_) = quantize_tensor(w, 4);
-        let (cc, sc) = quantize_per_channel(w, cout, 4);
-        let rms = |deq: &dyn Fn(usize) -> f32| -> f64 {
-            let num: f64 = w
-                .iter()
-                .enumerate()
-                .map(|(i, &v)| ((v - deq(i)) as f64).powi(2))
-                .sum();
-            let den: f64 =
-                w.iter().map(|&v| (v as f64).powi(2)).sum::<f64>().max(1e-12);
-            (num / den).sqrt()
-        };
-        let e_t = rms(&|i| ct[i] as f32 * st_);
-        let e_c = rms(&|i| cc[i] as f32 * sc[i % cout]);
-        if e_t > worst_tensor_err.0 {
-            worst_tensor_err = (e_t, e_c);
+    let out = (|| -> Result<Vec<Json>> {
+        println!("-- programming quantization granularity --");
+        let params = ctx.backbone(model)?;
+        let folded = crate::rram::fold_bn(&dep.manifest, &params)?;
+        let mut worst_tensor_err = (0.0f64, 0.0f64); // (per-tensor, per-chan)
+        for spec in
+            dep.manifest.deploy_weights.iter().filter(|w| w.rram)
+        {
+            let w = folded.get(&spec.name).unwrap().as_f32();
+            let cout = *spec.shape.last().unwrap();
+            let (ct, st_) = quantize_tensor(w, 4);
+            let (cc, sc) = quantize_per_channel(w, cout, 4);
+            let rms = |deq: &dyn Fn(usize) -> f32| -> f64 {
+                let num: f64 = w
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &v)| ((v - deq(i)) as f64).powi(2))
+                    .sum();
+                let den: f64 = w
+                    .iter()
+                    .map(|&v| (v as f64).powi(2))
+                    .sum::<f64>()
+                    .max(1e-12);
+                (num / den).sqrt()
+            };
+            let e_t = rms(&|i| ct[i] as f32 * st_);
+            let e_c = rms(&|i| cc[i] as f32 * sc[i % cout]);
+            if e_t > worst_tensor_err.0 {
+                worst_tensor_err = (e_t, e_c);
+            }
         }
-    }
-    println!(
-        "worst-layer relative RMS quant error: per-tensor {:.3}, \
-         per-channel {:.3}",
-        worst_tensor_err.0, worst_tensor_err.1
-    );
-    rows.push(obj(vec![
-        ("ablation", s("quant_granularity")),
-        ("per_tensor_worst_rms", num(worst_tensor_err.0)),
-        ("per_channel_worst_rms", num(worst_tensor_err.1)),
-    ]));
+        println!(
+            "worst-layer relative RMS quant error: per-tensor {:.3}, \
+             per-channel {:.3}",
+            worst_tensor_err.0, worst_tensor_err.1
+        );
+        Ok(vec![obj(vec![
+            ("ablation", s("quant_granularity")),
+            ("per_tensor_worst_rms", num(worst_tensor_err.0)),
+            ("per_channel_worst_rms", num(worst_tensor_err.1)),
+        ])])
+    })();
+    section("quant_granularity", &mut rows, out);
 
     ctx.write_result("ablations", obj(vec![("rows", arr(rows))]))
 }

@@ -51,8 +51,15 @@ pub fn run(ctx: &Ctx) -> Result<()> {
         &widths,
     );
 
-    // Measured normalized 10-y accuracy on the scaled analog.
+    // Measured normalized 10-y accuracy on the scaled analog. A row
+    // whose graphs fail to lower must degrade LOUDLY: the measurement
+    // error becomes a visible "row skipped (reason)" marker + an obs
+    // instant + a `skipped` field in the JSON row, never a quiet
+    // omission (the table would otherwise silently lose its vera/lora
+    // columns on backends that cannot run them).
     let mut measured: std::collections::BTreeMap<String, (f64, f64)> =
+        Default::default();
+    let mut skipped: std::collections::BTreeMap<String, String> =
         Default::default();
     for cfg in &CONFIGS {
         let key = cfg.label.to_string();
@@ -60,11 +67,35 @@ pub fn run(ctx: &Ctx) -> Result<()> {
         for (slot, model) in
             ["resnet20_easy", "resnet20_hard"].iter().enumerate()
         {
-            let acc = measure_10y(ctx, model, cfg)?;
-            if slot == 0 {
-                norms.0 = acc;
-            } else {
-                norms.1 = acc;
+            match measure_10y(ctx, model, cfg) {
+                Ok(acc) => {
+                    if slot == 0 {
+                        norms.0 = acc;
+                    } else {
+                        norms.1 = acc;
+                    }
+                }
+                Err(e) => {
+                    let reason = format!("{e:#}");
+                    println!(
+                        "!! row skipped ({}, {model}): {reason}",
+                        cfg.label
+                    );
+                    crate::obs::event(
+                        "table4.row_skipped",
+                        "harness",
+                        || {
+                            vec![
+                                ("config", s(cfg.label)),
+                                ("model", s(model)),
+                                ("reason", s(&reason)),
+                            ]
+                        },
+                    );
+                    skipped
+                        .entry(key.clone())
+                        .or_insert(reason);
+                }
             }
         }
         measured.insert(key, norms);
@@ -95,6 +126,7 @@ pub fn run(ctx: &Ctx) -> Result<()> {
                 }
             };
         let (n_easy, n_hard) = measured[cfg.label];
+        let skip_reason = skipped.get(cfg.label);
         print_row(
             &[
                 cfg.label.to_string(),
@@ -109,7 +141,7 @@ pub fn run(ctx: &Ctx) -> Result<()> {
             ],
             &widths,
         );
-        rows.push(obj(vec![
+        let mut fields = vec![
             ("config", s(cfg.label)),
             ("area_mm2", num(area)),
             ("area_overhead", num(area_oh)),
@@ -119,7 +151,12 @@ pub fn run(ctx: &Ctx) -> Result<()> {
             ("storage_kb", num(store_kb)),
             ("norm10y_easy", num(n_easy)),
             ("norm10y_hard", num(n_hard)),
-        ]));
+            ("skipped", num(u8::from(skip_reason.is_some()) as f64)),
+        ];
+        if let Some(reason) = skip_reason {
+            fields.push(("skip_reason", s(reason)));
+        }
+        rows.push(obj(fields));
     }
     ctx.write_result("table4", obj(vec![("rows", arr(rows))]))
 }

@@ -16,8 +16,8 @@
 //! model gets `fwd_b256`, `train_backbone`, `train_fwd_b256`,
 //! `comp_veraplus_r1_b256` and `train_veraplus_r1`; `resnet20_easy` /
 //! `resnet20_hard` add the rank sweep (r ∈ {2,4,6,8}) plus the
-//! vera/lora baselines (whose graphs the native backend reports as
-//! PJRT-only at compile time, matching the lowered set); and
+//! vera/lora baselines (lowered natively like veraplus — the harness's
+//! full Table-IV method grid runs with no artifacts); and
 //! `resnet20_easy` adds `bn_fwd_b256` and the small-batch serving
 //! graphs (`b1`, `b32`).
 

@@ -84,6 +84,29 @@ impl ConductanceGrid {
     pub fn pair_to_weight(&self, g_plus: f64, g_minus: f64) -> f64 {
         (g_plus - g_minus) / self.step()
     }
+
+    /// Worst-case magnitude of a `k_rows`-row column accumulation in
+    /// integer code units: every row driven at the top DAC code while
+    /// its differential pair sits at the top weight level,
+    /// `k_rows · (n_levels−1)²`. This is the full-scale the column ADC
+    /// is ranged to — the level→conductance→ADC-code chain divides by
+    /// it (per LSB) before rounding.
+    pub fn column_full_scale(&self, k_rows: usize) -> f64 {
+        let lim = (self.n_levels() - 1) as f64;
+        k_rows as f64 * lim * lim
+    }
+
+    /// Level→conductance→ADC-code mapping for one column read: `acc` is
+    /// the column accumulation in code units (the analog current
+    /// `V_read·Σ xᵢ·(gᵢ⁺−gᵢ⁻)` divided by `V_read·step`, i.e.
+    /// [`pair_to_weight`] summed over rows). A `bits`-bit signed ADC
+    /// ranged to [`column_full_scale`] rounds to the nearest LSB and
+    /// saturates at ±(2^(bits−1)−1).
+    pub fn adc_code(&self, acc: f64, k_rows: usize, bits: u32) -> i32 {
+        let lim = ((1i64 << (bits - 1)) - 1) as f64;
+        let lsb = self.column_full_scale(k_rows) / lim;
+        (acc / lsb).round().clamp(-lim, lim) as i32
+    }
 }
 
 #[cfg(test)]
@@ -120,6 +143,23 @@ mod tests {
     #[should_panic(expected = "outside")]
     fn code_out_of_range_panics() {
         ConductanceGrid::default().code_to_pair(8);
+    }
+
+    #[test]
+    fn adc_code_rounds_and_saturates() {
+        let g = ConductanceGrid::default();
+        // 8-level grid → ±7 codes → 49 per-row full scale.
+        assert_eq!(g.column_full_scale(256), 256.0 * 49.0);
+        let lsb = g.column_full_scale(256) / 127.0;
+        // Dead zone around zero rounds to code 0.
+        assert_eq!(g.adc_code(0.49 * lsb, 256, 8), 0);
+        assert_eq!(g.adc_code(-0.49 * lsb, 256, 8), 0);
+        // Nearest-LSB rounding in the middle of the range.
+        assert_eq!(g.adc_code(10.4 * lsb, 256, 8), 10);
+        assert_eq!(g.adc_code(10.6 * lsb, 256, 8), 11);
+        // Saturation at the rails, both polarities.
+        assert_eq!(g.adc_code(1e9, 256, 8), 127);
+        assert_eq!(g.adc_code(-1e9, 256, 8), -127);
     }
 
     #[test]

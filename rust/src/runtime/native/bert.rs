@@ -40,7 +40,8 @@ use super::gemm;
 use super::model::{
     act_quant, add_into, ce_loss_grad, comp_bwd_su, comp_fwd_su,
     comp_sgd_update, layer_rows, req_f32, resolve_w, BertMeta,
-    CompInputs, FwdOpts, Named, Topo, TrainStep, WeightOverrides,
+    CompInputs, CompMethod, FwdOpts, Named, Topo, TrainStep,
+    WeightOverrides,
 };
 use super::ops;
 use crate::util::tensor::Tensor;
@@ -351,7 +352,8 @@ fn linear_bwd(
             .as_mut()
             .context("comp grads requested with an active branch")?;
         let dxc = comp_bwd_su(
-            topo, li, c, g, rows, cin, cout, s, u, dd, db, threads,
+            topo, li, c, g, &cache.xq, rows, cin, cout, s, u, dd, db,
+            threads,
         );
         add_into(&mut dx, &dxc);
     }
@@ -647,7 +649,10 @@ pub(crate) fn comp_train_step(
     lr: f32,
     threads: usize,
 ) -> Result<TrainStep> {
-    let comp = CompInputs::gather(topo, named, rank)?;
+    // veraplus-only: vera/lora on bert bail at compile time
+    // ([`super::compile`]).
+    let comp =
+        CompInputs::gather(topo, named, CompMethod::VeraPlus, rank)?;
     let (tokens, n) = token_batch(meta, x)?;
     if labels.len() != n {
         bail!("train labels: {} for batch {n}", labels.len());

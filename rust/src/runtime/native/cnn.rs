@@ -23,9 +23,10 @@
 
 use super::gemm;
 use super::model::{
-    act_quant, add_into, ce_loss_grad, col2im, comp_bwd_su, comp_fwd_su,
-    comp_sgd_update, im2col, req_f32, resolve_w, subsample_rows, Block,
-    CompInputs, Named, Topo, TrainStep, WeightOverrides,
+    act_quant, add_into, ce_loss_grad, col2im, comp_apply_su,
+    comp_bwd_ds, comp_bwd_su, comp_fwd_su, comp_sgd_update, im2col,
+    req_f32, resolve_w, Block, CompInputs, CompMethod, Named, Topo,
+    TrainStep, WeightOverrides,
 };
 use crate::rram::mapping::BN_EPS;
 use crate::util::tensor::Tensor;
@@ -227,17 +228,13 @@ fn conv_fwd_cached(
     gemm::gemm_threads(threads, rows, cout, kdim, &patches, w, &mut y);
     let (s, u) = match comp {
         Some(c) => {
-            // 1x1 scheme: a strided conv corrects the subsampled rows.
-            let sub;
-            let crows: &[f32] = if layer.stride > 1 {
-                sub = subsample_rows(&xq, n, hs, ws, cin, layer.stride);
-                &sub
-            } else {
-                &xq
-            };
-            let (s, u) = comp_fwd_su(
-                topo, li, c, crows, rows, cin, cout, &mut y, threads,
+            // Method-aware stage: veraplus's 1×1 scheme corrects the
+            // stride-subsampled grid, vera/lora contract conv patches.
+            let s = c.stage_conv(
+                topo, li, &xq, &patches, n, hs, ws, rows, threads,
             );
+            let u = comp_apply_su(c, li, &s, rows, cout, &mut y,
+                                  threads);
             (Some(s), Some(u))
         }
         None => (None, None),
@@ -425,44 +422,103 @@ fn deploy_conv_bwd(
     threads: usize,
 ) -> Result<Vec<f32>> {
     let layer = &topo.layers[li];
+    let (cin, cout) = (layer.cin, layer.cout);
     let rows = n * cache.geom.ho * cache.geom.wo;
+    let (hs, ws) = (cache.geom.hs, cache.geom.ws);
     let (mut dx, _) = conv_bwd(
         topo, li, named, None, g, &cache.xq, cache.geom, n, false,
         threads,
     )?;
     let s = cache.s.as_ref().context("comp cache missing s")?;
     let u = cache.u.as_ref().context("comp cache missing u")?;
-    let dsub = comp_bwd_su(
-        topo, li, comp, g, rows, layer.cin, layer.cout, s, u, dd, db,
-        threads,
-    );
-    scatter_comp_dx(
-        &mut dx,
-        &dsub,
-        n,
-        cache.geom.hs,
-        cache.geom.ws,
-        layer.cin,
-        layer.stride,
-    );
+    let r = comp.rank;
+    match comp.method {
+        CompMethod::VeraPlus => {
+            // 1×1 scheme: branch-input grad lives on the subsampled
+            // grid; scatter it back onto the full activation grid.
+            let dsub = comp_bwd_su(
+                topo, li, comp, g, &[], rows, cin, cout, s, u, dd, db,
+                threads,
+            );
+            scatter_comp_dx(
+                &mut dx, &dsub, n, hs, ws, cin, layer.stride,
+            );
+        }
+        CompMethod::Vera => {
+            // k×k scheme: stage grad flows back through the frozen
+            // 3×3 projection onto im2col(k=3) patches → col2im.
+            let ds = comp_bwd_ds(
+                li, comp, g, rows, cout, s, u, dd, db, threads,
+            );
+            let a_flat = comp.vera_a_flat(topo, cin);
+            let mut dp = vec![0f32; rows * 9 * cin];
+            gemm::gemm_nt_threads(
+                threads, rows, 9 * cin, r, &ds, &a_flat, &mut dp,
+            );
+            let dxc = col2im(&dp, n, hs, ws, cin, 3, layer.stride);
+            add_into(&mut dx, &dxc);
+        }
+        CompMethod::Lora => {
+            // Both factors train: dB = gᵀ s, dA = patchesᵀ (g B),
+            // branch-input grad = (g B) Aᵀ through col2im.
+            let kdim = layer.k * layer.k * cin;
+            let (patches, _, _) = im2col(
+                &cache.xq, n, hs, ws, cin, layer.k, layer.stride,
+            );
+            let mut dbm = vec![0f32; cout * r];
+            gemm::gemm_tn_threads(threads, rows, r, cout, g, s,
+                                  &mut dbm);
+            add_into(&mut db[li], &dbm);
+            let mut dt = vec![0f32; rows * r];
+            gemm::gemm_threads(
+                threads,
+                rows,
+                r,
+                cout,
+                g,
+                &comp.b[li][..cout * r],
+                &mut dt,
+            );
+            let mut dam = vec![0f32; kdim * r];
+            gemm::gemm_tn_threads(
+                threads, rows, r, kdim, &patches, &dt, &mut dam,
+            );
+            add_into(&mut dd[li], &dam);
+            let mut dp = vec![0f32; rows * kdim];
+            gemm::gemm_nt_threads(
+                threads,
+                rows,
+                kdim,
+                r,
+                &dt,
+                &comp.d[li][..kdim * r],
+                &mut dp,
+            );
+            let dxc =
+                col2im(&dp, n, hs, ws, cin, layer.k, layer.stride);
+            add_into(&mut dx, &dxc);
+        }
+    }
     Ok(dx)
 }
 
-/// One Alg. 1 inner-loop SGD-momentum step on the VeRA+ `(d, b)`
-/// vectors with the (drifted) folded resnet backbone frozen — the
-/// native `train_veraplus_r{r}` graph for `resnet` manifests.
+/// One Alg. 1 inner-loop SGD-momentum step on the compensation
+/// trainables (veraplus/vera `(d, b)` vectors, lora `(A, B)` factors)
+/// with the (drifted) folded resnet backbone frozen — the native
+/// `train_{method}_r{r}` graph for `resnet` manifests.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn comp_train_step(
     topo: &Topo,
     blocks: &[Block],
     named: &Named,
+    method: CompMethod,
     rank: usize,
     x: &Tensor,
     labels: &[i32],
     lr: f32,
     threads: usize,
 ) -> Result<TrainStep> {
-    let comp = CompInputs::gather(topo, named, rank)?;
+    let comp = CompInputs::gather(topo, named, method, rank)?;
     let n = *x.shape.first().context("train batch axis")?;
     if labels.len() != n {
         bail!("train labels: {} for batch {n}", labels.len());
@@ -471,11 +527,14 @@ pub(crate) fn comp_train_step(
         deploy_forward_cached(topo, blocks, named, x, &comp, threads)?;
     let (loss, dlogits) = ce_loss_grad(&logits, labels, n, topo.classes);
 
+    // Grad slots mirror the gathered trainables ((d, b) or (A, B)).
     let n_layers = topo.layers.len();
-    let mut dd: Vec<Vec<f32>> =
-        topo.layers.iter().map(|_| vec![0f32; rank]).collect();
-    let mut db: Vec<Vec<f32>> =
-        topo.layers.iter().map(|l| vec![0f32; l.cout]).collect();
+    let mut dd: Vec<Vec<f32>> = (0..n_layers)
+        .map(|li| vec![0f32; comp.d[li].len()])
+        .collect();
+    let mut db: Vec<Vec<f32>> = (0..n_layers)
+        .map(|li| vec![0f32; comp.b[li].len()])
+        .collect();
 
     // fc backward → pooled → feature-map gradient.
     let fc = n_layers - 1;
@@ -493,6 +552,7 @@ pub(crate) fn comp_train_step(
         fc,
         &comp,
         &dlogits,
+        &fcache.xq,
         n,
         chans,
         cout,

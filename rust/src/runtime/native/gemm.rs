@@ -3,8 +3,9 @@
 //! Layouts are row-major throughout: `a` is m×k, `b` is k×n, `c` is m×n.
 //! The blocked kernel packs `b` into NR-column panels once (weight
 //! panels are reused by every row block), then walks the output in
-//! MR×NR register tiles with the k loop innermost, so the microkernel
-//! accumulates each output element in a fixed k order. Parallelism is
+//! MR×NR register tiles with the k loop innermost (2×-unrolled over
+//! dual accumulator banks), so the microkernel accumulates each output
+//! element in a fixed k order. Parallelism is
 //! over disjoint row chunks ([`crate::util::parallel`], `VERA_THREADS`
 //! respected): because every `c[i][j]` is produced by exactly one
 //! thread with the same per-element accumulation order regardless of
@@ -104,14 +105,40 @@ fn gemm_rows(
             let j0 = jp * NR;
             let jw = NR.min(n - j0);
             let bp = &packed_b[jp * k * NR..(jp + 1) * k * NR];
+            // 2×-unrolled k loop: even/odd depths feed independent
+            // accumulator banks (twice the FMA chains in flight),
+            // merged once after the loop. The per-element order is
+            // still a pure function of k — chunk-independent, so the
+            // thread bit-identity contract is untouched.
             let mut acc = [[0f32; NR]; MR];
-            for p in 0..k {
+            let mut acc2 = [[0f32; NR]; MR];
+            let mut p = 0usize;
+            while p + 1 < k {
+                let brow = &bp[p * NR..p * NR + NR];
+                let brow2 = &bp[(p + 1) * NR..(p + 2) * NR];
+                for ir in 0..mr {
+                    let arow = (row0 + i0 + ir) * k;
+                    let av = a[arow + p];
+                    let av2 = a[arow + p + 1];
+                    for jr in 0..NR {
+                        acc[ir][jr] += av * brow[jr];
+                        acc2[ir][jr] += av2 * brow2[jr];
+                    }
+                }
+                p += 2;
+            }
+            if p < k {
                 let brow = &bp[p * NR..p * NR + NR];
                 for ir in 0..mr {
                     let av = a[(row0 + i0 + ir) * k + p];
                     for jr in 0..NR {
                         acc[ir][jr] += av * brow[jr];
                     }
+                }
+            }
+            for ir in 0..mr {
+                for jr in 0..NR {
+                    acc[ir][jr] += acc2[ir][jr];
                 }
             }
             // Epilogue on the hot tile: comp, bias, relu, store.

@@ -1,0 +1,638 @@
+//! Int8 crossbar rung of the native GEMM ladder + the hardware-numeric
+//! (DAC→crossbar→ADC→LUT) execution mode (§Perf, §IV-G).
+//!
+//! The f32 interpreter in [`super::model`] runs the *fake-quant*
+//! abstraction of the paper's signal chain: activations and weights are
+//! rounded onto their integer grids but accumulated in f32. This module
+//! models the analog chain bit-accurately instead:
+//!
+//! 1. **DAC** — [`dac_quant`] ranges each sample's DAC exactly like
+//!    `model::act_quant`, but keeps the integer codes (`i8`) and the
+//!    per-row scale instead of dequantizing.
+//! 2. **Crossbar** — [`gemm_i8_threads`] accumulates `i8×i8→i32` per
+//!    column. Integer accumulation is exact, so the result is
+//!    bit-identical across `VERA_THREADS` by construction (no rounding
+//!    order to preserve, unlike the f32 rungs). Weight codes come from
+//!    `rram::mapping::quantize_per_channel` (per-column scales), the
+//!    same mapping the programming path uses before
+//!    `ConductanceGrid::code_to_pair` turns codes into differential
+//!    conductance pairs.
+//! 3. **ADC** — [`AdcCfg`] ranges a signed ADC to the column's
+//!    worst-case accumulation
+//!    ([`ConductanceGrid::column_full_scale`]); codes round to the
+//!    nearest LSB and saturate at the rails. [`AdcLut`] then maps each
+//!    raw code through a per-array calibration table (identity when
+//!    uncalibrated) — the digital hook the paper's read-out chain
+//!    leaves for reference-current correction.
+//! 4. **Digital epilogue** — dequantization (`code·lsb·x_scale[i]·
+//!    w_scale[o]`), bias, the VeRA+/vera/lora compensation branch, and
+//!    ReLU all run in f32/f64 *after* the ADC, exactly where the paper
+//!    deploys the vector epilogue (digital domain, drift-free).
+//!
+//! Determinism contract: the only floating-point reductions are the
+//! per-row DAC abs-max (serial per row) and the rank-r compensation
+//! GEMMs (thread bit-identical per [`super::gemm`]); everything between
+//! DAC and ADC is integer-exact. Hence hwnum outputs are bit-identical
+//! across thread counts, and the whole chain has a closed-form f64
+//! oracle that `tests/native_backend.rs` checks against.
+
+use anyhow::{bail, Context, Result};
+
+use super::gemm::{MR, NR};
+use super::model::{
+    act_quant, req_f32, CompInputs, FwdOpts, Named, Topo, TopoKind,
+};
+use crate::rram::device::ConductanceGrid;
+use crate::rram::mapping::quantize_per_channel;
+use crate::util::parallel;
+use crate::util::tensor::Tensor;
+
+/// Reference triple loop (i → j → k): the oracle the property tests
+/// compare the packed rung against. `a` is m×k, `b` is k×n, row-major.
+pub fn gemm_i8_naive(
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[i8],
+    b: &[i8],
+    c: &mut [i32],
+) {
+    assert_eq!(a.len(), m * k, "a is m×k");
+    assert_eq!(b.len(), k * n, "b is k×n");
+    assert_eq!(c.len(), m * n, "c is m×n");
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0i32;
+            for p in 0..k {
+                acc += a[i * k + p] as i32 * b[p * n + j] as i32;
+            }
+            c[i * n + j] = acc;
+        }
+    }
+}
+
+/// Pack `b` (k×n row-major i8) into NR-column panels, k-major within
+/// each panel — the same layout as the f32 rung's `pack_b`, so the
+/// microkernel streams one contiguous panel row per depth step. Ragged
+/// final panels are zero-padded (0 is exact under integer accumulate).
+fn pack_b_i8(n: usize, k: usize, b: &[i8]) -> Vec<i8> {
+    let panels = n.div_ceil(NR);
+    let mut packed = vec![0i8; panels * k * NR];
+    for jp in 0..panels {
+        let j0 = jp * NR;
+        let jw = NR.min(n - j0);
+        let dst = &mut packed[jp * k * NR..(jp + 1) * k * NR];
+        for p in 0..k {
+            for jj in 0..jw {
+                dst[p * NR + jj] = b[p * n + j0 + jj];
+            }
+        }
+    }
+    packed
+}
+
+/// Compute rows `[row0, row0 + rows.len()/n)` of `c = a·b` against
+/// pre-packed B panels, MR×NR register tiles of widened i32
+/// accumulators. Integer adds are associative — any chunking of the
+/// rows yields the same bits.
+fn gemm_i8_rows(
+    row0: usize,
+    rows: &mut [i32],
+    n: usize,
+    k: usize,
+    a: &[i8],
+    packed_b: &[i8],
+) {
+    let m_rows = rows.len() / n;
+    let panels = n.div_ceil(NR);
+    let mut i0 = 0usize;
+    while i0 < m_rows {
+        let mr = MR.min(m_rows - i0);
+        for jp in 0..panels {
+            let j0 = jp * NR;
+            let jw = NR.min(n - j0);
+            let bp = &packed_b[jp * k * NR..(jp + 1) * k * NR];
+            let mut acc = [[0i32; NR]; MR];
+            for p in 0..k {
+                let brow = &bp[p * NR..p * NR + NR];
+                for ir in 0..mr {
+                    let av = a[(row0 + i0 + ir) * k + p] as i32;
+                    for jr in 0..NR {
+                        acc[ir][jr] += av * brow[jr] as i32;
+                    }
+                }
+            }
+            for ir in 0..mr {
+                for jr in 0..jw {
+                    rows[(i0 + ir) * n + j0 + jr] = acc[ir][jr];
+                }
+            }
+        }
+        i0 += mr;
+    }
+}
+
+/// Blocked parallel `c = a·b` over i8 operands with i32 accumulation —
+/// the int8 rung of the GEMM ladder (packed panels, register
+/// microkernel, row-chunk fan-out). Exact: every thread count produces
+/// identical bits.
+pub fn gemm_i8_threads(
+    threads: usize,
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[i8],
+    b: &[i8],
+    c: &mut [i32],
+) {
+    assert_eq!(a.len(), m * k, "a is m×k");
+    assert_eq!(b.len(), k * n, "b is k×n");
+    assert_eq!(c.len(), m * n, "c is m×n");
+    if m == 0 || n == 0 {
+        return;
+    }
+    let _span = crate::obs::span("kernel.gemm_i8", "kernel")
+        .arg("rows", crate::util::json::num(m as f64))
+        .arg("cols", crate::util::json::num(n as f64))
+        .arg("depth", crate::util::json::num(k as f64));
+    if k == 0 {
+        c.fill(0);
+        return;
+    }
+    let packed = pack_b_i8(n, k, b);
+    let threads = threads.max(1).min(m);
+    if threads == 1 {
+        gemm_i8_rows(0, c, n, k, a, &packed);
+        return;
+    }
+    let rpc = m.div_ceil(threads);
+    let mut chunks: Vec<(usize, &mut [i32])> = c
+        .chunks_mut(rpc * n)
+        .enumerate()
+        .map(|(ci, ch)| (ci * rpc, ch))
+        .collect();
+    let packed = &packed;
+    parallel::for_each_mut(threads, &mut chunks, |_, item| {
+        let (row0, rows) = item;
+        let _span = crate::obs::span("kernel.gemm_i8.panel", "kernel")
+            .arg(
+                "rows",
+                crate::util::json::num((rows.len() / n) as f64),
+            );
+        gemm_i8_rows(*row0, rows, n, k, a, packed);
+    });
+}
+
+/// Signed column ADC: `bits`-bit two's-complement-symmetric converter
+/// ranged so that `±full_scale` maps onto the `±(2^(bits−1)−1)` rails.
+#[derive(Debug, Clone, Copy)]
+pub struct AdcCfg {
+    pub bits: u32,
+    /// Worst-case column accumulation magnitude in integer code units.
+    pub full_scale: f64,
+}
+
+impl AdcCfg {
+    /// ADC ranged to a `k_rows`-row crossbar column on `grid`
+    /// ([`ConductanceGrid::column_full_scale`]): the hardware default
+    /// for [`kernel_crossbar`].
+    pub fn for_crossbar(
+        grid: &ConductanceGrid,
+        k_rows: usize,
+        bits: u32,
+    ) -> AdcCfg {
+        AdcCfg {
+            bits,
+            full_scale: grid.column_full_scale(k_rows),
+        }
+    }
+
+    /// ADC ranged to an arbitrary DAC/weight code-grid pair: full scale
+    /// `k_rows·x_lim·w_lim` where the limits are `2^(bits−1)−1` of the
+    /// respective quantizers (the hwnum-mode default, which must track
+    /// the manifest's `a_bits`/`w_bits` rather than the device grid).
+    pub fn for_chain(
+        k_rows: usize,
+        a_bits: usize,
+        w_bits: usize,
+    ) -> AdcCfg {
+        let x_lim = ((1i64 << (a_bits - 1)) - 1) as f64;
+        let w_lim = ((1i64 << (w_bits - 1)) - 1) as f64;
+        AdcCfg {
+            bits: 8,
+            full_scale: (k_rows as f64) * x_lim * w_lim,
+        }
+    }
+
+    /// Positive rail, `2^(bits−1)−1`.
+    pub fn lim(&self) -> f64 {
+        ((1i64 << (self.bits - 1)) - 1) as f64
+    }
+
+    /// Code-unit width of one ADC step.
+    pub fn lsb(&self) -> f64 {
+        self.full_scale / self.lim()
+    }
+
+    /// Quantize a column accumulation (code units) to the raw ADC code:
+    /// nearest-LSB rounding, saturating at the rails.
+    pub fn quantize(&self, acc: f64) -> i32 {
+        let lim = self.lim();
+        (acc / self.lsb()).round().clamp(-lim, lim) as i32
+    }
+}
+
+/// Per-array ADC calibration table: corrected (possibly fractional)
+/// code for each raw code in `−lim ..= lim`. Identity when the array
+/// is uncalibrated; measured transfer curves (reference-current
+/// correction) drop in via [`AdcLut::from_fn`] without touching the
+/// integer pipeline.
+#[derive(Debug, Clone)]
+pub struct AdcLut {
+    lim: i32,
+    /// `corrected[(code + lim) as usize]` is the corrected code.
+    corrected: Vec<f64>,
+}
+
+impl AdcLut {
+    /// Identity calibration for a `bits`-bit ADC.
+    pub fn identity(bits: u32) -> AdcLut {
+        Self::from_fn(bits, |c| c as f64)
+    }
+
+    /// Build from a measured transfer function raw-code → corrected
+    /// code (tabulated once; lookups are O(1)).
+    pub fn from_fn(bits: u32, f: impl Fn(i32) -> f64) -> AdcLut {
+        let lim = ((1i64 << (bits - 1)) - 1) as i32;
+        let corrected = (-lim..=lim).map(f).collect();
+        AdcLut { lim, corrected }
+    }
+
+    /// Corrected code for a raw ADC code (raw codes outside the rails
+    /// cannot occur — [`AdcCfg::quantize`] saturates first).
+    pub fn correct(&self, code: i32) -> f64 {
+        debug_assert!(code.abs() <= self.lim, "raw code off the rails");
+        self.corrected[(code + self.lim) as usize]
+    }
+}
+
+/// Per-sample DAC quantization, the code-level twin of
+/// `model::act_quant`: each of the `n` rows ranges its own DAC by
+/// abs-max; returns the i8 codes and the per-row scale such that
+/// `code[i][j]·scale[i]` reproduces `act_quant`'s dequantized grid
+/// value bit-for-bit (codes are small integers, exact in f32).
+pub fn dac_quant(
+    x: &[f32],
+    n: usize,
+    bits: usize,
+) -> (Vec<i8>, Vec<f32>) {
+    assert!(n > 0 && x.len() % n == 0, "dac rows must divide input");
+    assert!(
+        (2..=8).contains(&bits),
+        "dac codes must fit i8 (got {bits} bits)"
+    );
+    let row = x.len() / n;
+    let lim = ((1i64 << (bits - 1)) - 1) as f32;
+    let mut codes = vec![0i8; x.len()];
+    let mut scales = vec![0f32; n];
+    for i in 0..n {
+        let src = &x[i * row..(i + 1) * row];
+        let amax = src.iter().fold(0f32, |a, &v| a.max(v.abs()));
+        let scale = amax.max(1e-8) / lim;
+        scales[i] = scale;
+        for (o, &v) in codes[i * row..(i + 1) * row].iter_mut().zip(src)
+        {
+            *o = (v / scale).round().clamp(-lim, lim) as i8;
+        }
+    }
+    (codes, scales)
+}
+
+/// The `kernel_crossbar` graph: `y = ADC(x·w)·x_scale·w_scale` on a
+/// `k_rows×cols` int8 crossbar with per-tensor scales and an 8-bit
+/// column ADC ranged to the device grid's worst case — the native
+/// lowering of the Pallas kernel the PJRT path runs, numerically
+/// matching its exact-int + ADC-requantization reference.
+#[allow(clippy::too_many_arguments)]
+pub fn kernel_crossbar(
+    x: &[i8],
+    w: &[i8],
+    x_scale: f32,
+    w_scale: f32,
+    n: usize,
+    k_rows: usize,
+    cols: usize,
+    threads: usize,
+) -> Vec<f32> {
+    let mut acc = vec![0i32; n * cols];
+    gemm_i8_threads(threads, n, cols, k_rows, x, w, &mut acc);
+    let cfg =
+        AdcCfg::for_crossbar(&ConductanceGrid::default(), k_rows, 8);
+    let lut = AdcLut::identity(8);
+    let lsb = cfg.lsb();
+    let (xs, ws) = (x_scale as f64, w_scale as f64);
+    acc.iter()
+        .map(|&a| {
+            let code = cfg.quantize(a as f64);
+            (lut.correct(code) * lsb * xs * ws) as f32
+        })
+        .collect()
+}
+
+/// Hardware-numeric chain configuration: ADC width + per-array
+/// calibration shared by every layer of a forward.
+#[derive(Debug, Clone)]
+pub struct HwNumCfg {
+    pub adc_bits: u32,
+    pub lut: AdcLut,
+}
+
+impl HwNumCfg {
+    pub fn new(adc_bits: u32) -> HwNumCfg {
+        HwNumCfg {
+            adc_bits,
+            lut: AdcLut::identity(adc_bits),
+        }
+    }
+}
+
+/// One linear layer through the bit-accurate analog chain:
+/// DAC codes × per-channel weight codes → i32 columns → ADC/LUT →
+/// dequantize → digital bias/compensation/ReLU. Returns `[rows, cout]`.
+#[allow(clippy::too_many_arguments)]
+fn hwnum_layer(
+    topo: &Topo,
+    li: usize,
+    named: &Named,
+    h: &[f32],
+    rows: usize,
+    comp: Option<&CompInputs>,
+    relu: bool,
+    cfg: &HwNumCfg,
+    threads: usize,
+) -> Result<Vec<f32>> {
+    let layer = &topo.layers[li];
+    let (cin, cout) = (layer.cin, layer.cout);
+    if h.len() != rows * cin {
+        bail!(
+            "hwnum layer {}: input has {} features, expected {cin}",
+            layer.name,
+            h.len() / rows.max(1)
+        );
+    }
+    let w = req_f32(named, &format!("{}.w", layer.name), cin * cout)?;
+    let bias = req_f32(named, &format!("{}.bias", layer.name), cout)?;
+    // DAC + weight programming grids (the manifest's quantizers).
+    let (x_codes, x_scales) = dac_quant(h, rows, topo.a_bits);
+    let (w_codes, w_scales) = quantize_per_channel(w, cout, topo.w_bits);
+    // Analog: exact integer column accumulation.
+    let mut acc = vec![0i32; rows * cout];
+    gemm_i8_threads(threads, rows, cout, cin, &x_codes, &w_codes,
+                    &mut acc);
+    // ADC ranged to this layer's chain (cin rows, a_bits×w_bits grids).
+    let adc = AdcCfg {
+        bits: cfg.adc_bits,
+        ..AdcCfg::for_chain(cin, topo.a_bits, topo.w_bits)
+    };
+    let lsb = adc.lsb();
+    // Digital epilogue needs the dequantized DAC grid (what the paper's
+    // epilogue sees: the quantized activations, not the raw input).
+    let stage = comp.map(|c| {
+        let xq: Vec<f32> = x_codes
+            .iter()
+            .enumerate()
+            .map(|(idx, &code)| code as f32 * x_scales[idx / cin])
+            .collect();
+        c.stage_linear(topo, li, &xq, rows, threads)
+    });
+    let panel = comp.map(|c| c.panel(li, cout));
+    let r = comp.map_or(0, |c| c.rank);
+    let mut y = vec![0f32; rows * cout];
+    for i in 0..rows {
+        for o in 0..cout {
+            let code = adc.quantize(acc[i * cout + o] as f64);
+            let deq = cfg.lut.correct(code)
+                * lsb
+                * x_scales[i] as f64
+                * w_scales[o] as f64;
+            let mut v = deq as f32 + bias[o];
+            if let (Some(s), Some(bd)) = (&stage, &panel) {
+                let srow = &s[i * r..(i + 1) * r];
+                let bdrow = &bd[o * r..(o + 1) * r];
+                let mut add = 0f32;
+                for q in 0..r {
+                    add += srow[q] * bdrow[q];
+                }
+                v += add;
+            }
+            y[i * cout + o] = if relu { v.max(0.0) } else { v };
+        }
+    }
+    Ok(y)
+}
+
+/// Hardware-numeric forward for MLP topologies: every layer runs the
+/// DAC→crossbar→ADC→LUT chain of [`hwnum_layer`]; the compensation
+/// branch (veraplus/vera/lora) and all nonlinearities stay digital.
+/// Logits `[n, classes]`, bit-identical across thread counts.
+pub(crate) fn forward_mlp_hwnum(
+    topo: &Topo,
+    named: &Named,
+    x: &Tensor,
+    comp: Option<&CompInputs>,
+    cfg: &HwNumCfg,
+    threads: usize,
+) -> Result<Vec<f32>> {
+    if !matches!(topo.kind, TopoKind::Mlp) {
+        bail!(
+            "hardware-numeric mode covers mlp topologies; run the \
+             fake-quant interpreter (or PJRT) for this model kind"
+        );
+    }
+    let n = *x.shape.first().context("mlp input needs a batch axis")?;
+    let mut h = x.as_f32().to_vec();
+    let n_layers = topo.layers.len();
+    for li in 0..n_layers {
+        let last = li + 1 == n_layers;
+        h = hwnum_layer(
+            topo, li, named, &h, n, comp, !last, cfg, threads,
+        )?;
+    }
+    Ok(h)
+}
+
+/// Whether the hardware-numeric execution mode is switched on for this
+/// process (`VERA_HWNUM=1`): deployment forwards on MLP graphs then run
+/// the bit-accurate analog chain instead of the fake-quant interpreter.
+pub fn hwnum_enabled() -> bool {
+    std::env::var("VERA_HWNUM").is_ok_and(|v| v == "1")
+}
+
+/// Fake-quant reference for the hwnum chain (test oracle): what the
+/// standard interpreter computes for one layer on the same grids, i.e.
+/// f32 accumulation with no ADC in the loop. Used to bound the ADC's
+/// contribution to the end-to-end error.
+#[allow(dead_code)]
+pub(crate) fn fake_quant_layer_ref(
+    topo: &Topo,
+    li: usize,
+    named: &Named,
+    h: &[f32],
+    rows: usize,
+    relu: bool,
+    opts: FwdOpts,
+) -> Result<Vec<f32>> {
+    let xq = act_quant(h, rows, topo.a_bits);
+    super::model::layer_rows(
+        topo,
+        li,
+        named,
+        &xq,
+        None,
+        rows,
+        topo.layers[li].cin,
+        None,
+        relu,
+        opts,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn rand_i8(rng: &mut Pcg64, len: usize, lim: i32) -> Vec<i8> {
+        (0..len)
+            .map(|_| {
+                (rng.below(2 * lim as usize + 1) as i32 - lim) as i8
+            })
+            .collect()
+    }
+
+    #[test]
+    fn blocked_i8_matches_naive_on_ragged_shapes() {
+        let mut rng = Pcg64::new(11);
+        for &(m, n, k) in &[
+            (1usize, 1usize, 1usize),
+            (3, 5, 7),
+            (4, 8, 16),
+            (5, 9, 3),
+            (17, 23, 31),
+            (32, 7, 40),
+            (2, 64, 1),
+            (6, 13, 0),
+        ] {
+            let a = rand_i8(&mut rng, m * k, 127);
+            let b = rand_i8(&mut rng, k * n, 127);
+            let mut want = vec![0i32; m * n];
+            gemm_i8_naive(m, n, k, &a, &b, &mut want);
+            let mut got = vec![7i32; m * n];
+            gemm_i8_threads(1, m, n, k, &a, &b, &mut got);
+            assert_eq!(got, want, "{m}x{n}x{k}");
+        }
+    }
+
+    #[test]
+    fn i8_threads_are_bit_identical() {
+        let mut rng = Pcg64::new(12);
+        let (m, n, k) = (37, 19, 29);
+        let a = rand_i8(&mut rng, m * k, 127);
+        let b = rand_i8(&mut rng, k * n, 127);
+        let run = |threads: usize| {
+            let mut c = vec![0i32; m * n];
+            gemm_i8_threads(threads, m, n, k, &a, &b, &mut c);
+            c
+        };
+        let serial = run(1);
+        for t in [2usize, 4, 9, 64] {
+            assert_eq!(run(t), serial, "threads {t}");
+        }
+    }
+
+    #[test]
+    fn adc_quantize_saturates_and_rounds() {
+        let cfg = AdcCfg::for_crossbar(
+            &ConductanceGrid::default(),
+            256,
+            8,
+        );
+        assert_eq!(cfg.full_scale, 256.0 * 49.0);
+        let lsb = cfg.lsb();
+        assert_eq!(cfg.quantize(0.0), 0);
+        assert_eq!(cfg.quantize(0.49 * lsb), 0);
+        assert_eq!(cfg.quantize(0.51 * lsb), 1);
+        assert_eq!(cfg.quantize(-3.5 * lsb), -4); // ties away (round)
+        assert_eq!(cfg.quantize(1e12), 127);
+        assert_eq!(cfg.quantize(-1e12), -127);
+        // The chain-ranged variant reproduces the grid's full scale for
+        // the paper's 4/4-bit quantizers (both limits are 7).
+        let chain = AdcCfg::for_chain(256, 4, 4);
+        assert_eq!(chain.full_scale, cfg.full_scale);
+    }
+
+    #[test]
+    fn adc_lut_identity_and_calibrated() {
+        let id = AdcLut::identity(8);
+        for c in [-127i32, -1, 0, 1, 127] {
+            assert_eq!(id.correct(c), c as f64);
+        }
+        // A gain/offset calibration curve passes through unchanged.
+        let cal = AdcLut::from_fn(8, |c| 1.25 * c as f64 - 0.5);
+        assert_eq!(cal.correct(0), -0.5);
+        assert_eq!(cal.correct(4), 4.5);
+        assert_eq!(cal.correct(-127), 1.25 * -127.0 - 0.5);
+    }
+
+    #[test]
+    fn dac_codes_reproduce_act_quant_grid() {
+        let mut rng = Pcg64::new(13);
+        let (n, d) = (5usize, 17usize);
+        let mut x = vec![0f32; n * d];
+        rng.fill_normal_f32(&mut x, 0.0, 2.0);
+        let (codes, scales) = dac_quant(&x, n, 4);
+        let deq: Vec<f32> = codes
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| c as f32 * scales[i / d])
+            .collect();
+        assert_eq!(deq, act_quant(&x, n, 4), "code·scale == act_quant");
+        let lim = 7i8;
+        assert!(codes.iter().all(|c| (-lim..=lim).contains(c)));
+        // Each row's abs-max sample sits exactly on the rail.
+        for i in 0..n {
+            let row = &codes[i * d..(i + 1) * d];
+            assert_eq!(
+                row.iter().map(|c| c.abs()).max(),
+                Some(lim),
+                "row {i} DAC under-ranged"
+            );
+        }
+    }
+
+    #[test]
+    fn kernel_crossbar_matches_pinned_adc_reference() {
+        // Mirrors tests/runtime_roundtrip.rs's spot-check math exactly.
+        let mut rng = Pcg64::new(2);
+        let (n, k, cols) = (16usize, 256usize, 32usize);
+        let x = rand_i8(&mut rng, n * k, 7);
+        let w = rand_i8(&mut rng, k * cols, 7);
+        let y = kernel_crossbar(&x, &w, 0.1, 0.02, n, k, cols, 3);
+        let lim = 127f64;
+        let lsb = (k * 49) as f64 / lim;
+        for i in 0..n {
+            for j in 0..cols {
+                let exact: i64 = (0..k)
+                    .map(|p| {
+                        x[i * k + p] as i64 * w[p * cols + j] as i64
+                    })
+                    .sum();
+                let code =
+                    (exact as f64 / lsb).round().clamp(-lim, lim);
+                let want =
+                    (code * lsb * 0.1f32 as f64 * 0.02f32 as f64) as f32;
+                assert_eq!(y[i * cols + j], want, "[{i},{j}]");
+            }
+        }
+    }
+}

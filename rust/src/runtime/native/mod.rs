@@ -9,20 +9,28 @@
 //! |----------------------------|------------------------|-------|
 //! | `fwd_b{N}`                 | `mlp`, `resnet`, `bert`| plain deploy forward |
 //! | `comp_veraplus_r{r}_b{N}`  | `mlp`, `resnet`, `bert`| forward + fused VeRA+ branch |
+//! | `comp_vera_r{r}_b{N}`      | `mlp`, `resnet`        | forward + frozen-projection VeRA baseline |
+//! | `comp_lora_r{r}_b{N}`      | `mlp`, `resnet`        | forward + per-layer LoRA baseline |
 //! | `train_veraplus_r{r}`      | `mlp`, `resnet`, `bert`| Alg. 1 inner-loop SGD step |
+//! | `train_vera_r{r}`          | `mlp`, `resnet`        | VeRA baseline (d, b) SGD step |
+//! | `train_lora_r{r}`          | `mlp`, `resnet`        | LoRA baseline (A, B) SGD step |
 //! | `train_backbone`           | `mlp`, `resnet`, `bert`| QAT SGD-momentum step ([`train`]) |
 //! | `train_fwd_b{N}`           | `mlp`, `resnet`, `bert`| train-form eval forward |
 //! | `bn_fwd_b{N}`              | `resnet`               | BN-calibration forward + batch stats |
 //! | `kernel_vera*`             | kernel manifest        | standalone L1 kernel |
+//! | `kernel_crossbar*`         | kernel manifest        | int8 crossbar + ADC requant ([`int8`]) |
 //!
 //! The `bert` topology ([`bert`]) is reconstructed from the
 //! `l{i}.{wq,wk,wv,wo,ff1,ff2}` / `cls` layer-naming contract
 //! (embedding lookup on i32 `[n, seq]` inputs, pre-LN multi-head
 //! attention, GELU FFN, mean-pool + classifier); the training graphs
 //! run hand-derived VJPs through attention / LayerNorm / GELU / im2col
-//! ([`ops`], [`cnn`], [`train`]). Everything still missing (vera/lora
-//! comp lowerings, the int8 crossbar kernel) reports a descriptive
-//! unsupported error and stays on the PJRT path.
+//! ([`ops`], [`cnn`], [`train`]). The only remaining PJRT-only
+//! surface is bert×{vera,lora} (graphs the lowered set never emits);
+//! unknown methods and malformed keys report a descriptive
+//! unsupported error and stay on the PJRT path. The int8 crossbar
+//! kernel and the hardware-numeric DAC→crossbar→ADC→LUT chain live in
+//! [`int8`].
 //!
 //! **Determinism contract**: one execution's outputs — logits, train
 //! losses, gradients, updated parameters — are bit-identical for every
@@ -35,6 +43,7 @@
 //! logits), not bit-exactly.
 
 pub mod gemm;
+pub mod int8;
 pub mod ops;
 pub(crate) mod bert;
 pub(crate) mod cnn;
@@ -43,25 +52,26 @@ pub(crate) mod train;
 
 use crate::nn::manifest::{GraphSig, ModelManifest};
 use crate::util::parallel;
-use crate::util::tensor::Tensor;
+use crate::util::tensor::{DType, Tensor};
 use anyhow::{bail, Context, Result};
-use model::{build_topo, CompInputs, FwdOpts, Named, Topo};
+use model::{build_topo, CompInputs, CompMethod, FwdOpts, Named, Topo};
 use std::sync::Arc;
 
 /// What one compiled native graph executes.
 enum GraphKind {
     /// `fwd_b{N}` / `comp_{method}_r{r}_b{N}` / `train_fwd_b{N}`:
-    /// `comp_rank` is `Some` for the compensated variant, `train_form`
-    /// selects the QAT train-parameterization forward.
+    /// `comp` is `Some((method, rank))` for the compensated variant,
+    /// `train_form` selects the QAT train-parameterization forward.
     Forward {
-        comp_rank: Option<usize>,
+        comp: Option<(CompMethod, usize)>,
         train_form: bool,
     },
     /// `bn_fwd_b{N}`: unfolded BN-calibration forward (resnet only),
     /// emitting logits + per-conv batch statistics.
     BnFwd,
-    /// `train_veraplus_r{r}` (all three topologies).
-    CompTrain { rank: usize },
+    /// `train_{method}_r{r}` (veraplus on all three topologies,
+    /// vera/lora on mlp/resnet).
+    CompTrain { method: CompMethod, rank: usize },
     /// `train_backbone`: one QAT SGD-momentum step ([`train`]).
     BackboneTrain,
     /// `kernel_vera*`: shapes fixed by the signature.
@@ -70,6 +80,13 @@ enum GraphKind {
         cin: usize,
         cout: usize,
         rank: usize,
+    },
+    /// `kernel_crossbar*`: int8 crossbar GEMM + ADC requantization
+    /// ([`int8::kernel_crossbar`]); shapes fixed by the signature.
+    KernelCrossbar {
+        n: usize,
+        k_rows: usize,
+        cols: usize,
     },
 }
 
@@ -97,11 +114,88 @@ fn parse_method_key(
     }
 }
 
+/// Resolve a parsed method string to a [`CompMethod`], with the
+/// descriptive unsupported-graph error for anything unknown (an
+/// unrecognized method never falls through to a mis-parsed default).
+fn comp_method(
+    method: &str,
+    key: &str,
+    rank: usize,
+) -> Result<CompMethod> {
+    let Some(m) = CompMethod::parse(method) else {
+        bail!(
+            "native backend knows the veraplus/vera/lora compensation \
+             branches only (got method '{method}'); graph '{key}' \
+             needs PJRT"
+        );
+    };
+    if rank == 0 {
+        bail!(
+            "native: compensation graph '{key}' declares rank 0; \
+             ranks start at 1"
+        );
+    }
+    Ok(m)
+}
+
+/// The vera/lora baselines are lowered for mlp/resnet topologies only
+/// (the graph inventory never emits them for bert).
+fn check_method_topo(
+    method: CompMethod,
+    topo: &Topo,
+    key: &str,
+    manifest: &ModelManifest,
+) -> Result<()> {
+    if method != CompMethod::VeraPlus
+        && matches!(topo.kind, model::TopoKind::Bert { .. })
+    {
+        bail!(
+            "native vera/lora lowerings cover mlp/resnet topologies \
+             only; graph '{key}' on kind '{}' needs PJRT",
+            manifest.kind
+        );
+    }
+    Ok(())
+}
+
 pub(crate) fn compile(
     manifest: &Arc<ModelManifest>,
     sig: &GraphSig,
 ) -> Result<NativeGraph> {
     let key = sig.key.as_str();
+    if key.starts_with("kernel_crossbar") {
+        if sig.inputs.len() != 4 {
+            bail!(
+                "native crossbar kernel '{key}': expected 4 inputs \
+                 (x i8, w i8, x_scale, w_scale), got {}",
+                sig.inputs.len()
+            );
+        }
+        let xs = &sig.inputs[0].shape;
+        let ws = &sig.inputs[1].shape;
+        if xs.len() != 2 || ws.len() != 2 || xs[1] != ws[0] {
+            bail!(
+                "native crossbar kernel '{key}': unexpected shapes \
+                 x{xs:?} w{ws:?}"
+            );
+        }
+        if sig.inputs[0].dtype != DType::I8
+            || sig.inputs[1].dtype != DType::I8
+        {
+            bail!(
+                "native crossbar kernel '{key}': x/w must be i8 \
+                 (DAC / programmed-level codes)"
+            );
+        }
+        return Ok(NativeGraph {
+            topo: None,
+            kind: GraphKind::KernelCrossbar {
+                n: xs[0],
+                k_rows: xs[1],
+                cols: ws[1],
+            },
+        });
+    }
     if key.starts_with("kernel_vera") {
         if sig.inputs.len() != 5 {
             bail!("native kernel graph '{key}': expected 5 inputs");
@@ -129,7 +223,7 @@ pub(crate) fn compile(
         return Ok(NativeGraph {
             topo: Some(build_topo(manifest)?),
             kind: GraphKind::Forward {
-                comp_rank: None,
+                comp: None,
                 train_form: false,
             },
         });
@@ -141,7 +235,7 @@ pub(crate) fn compile(
         return Ok(NativeGraph {
             topo: Some(build_topo(manifest)?),
             kind: GraphKind::Forward {
-                comp_rank: None,
+                comp: None,
                 train_form: true,
             },
         });
@@ -170,33 +264,30 @@ pub(crate) fn compile(
         });
     }
     if let Some((method, rank, batch)) = parse_method_key(key, "comp_") {
-        if batch.is_none() {
+        let Some(batch) = batch else {
             bail!("native: comp key '{key}' is missing its batch");
+        };
+        if batch == 0 {
+            bail!("native: comp key '{key}' has batch 0");
         }
-        if method != "veraplus" {
-            bail!(
-                "native backend supports the veraplus compensation \
-                 branch only; graph '{key}' needs PJRT"
-            );
-        }
+        let method = comp_method(&method, key, rank)?;
+        let topo = build_topo(manifest)?;
+        check_method_topo(method, &topo, key, manifest)?;
         return Ok(NativeGraph {
-            topo: Some(build_topo(manifest)?),
+            topo: Some(topo),
             kind: GraphKind::Forward {
-                comp_rank: Some(rank),
+                comp: Some((method, rank)),
                 train_form: false,
             },
         });
     }
     if let Some((method, rank, _)) = parse_method_key(key, "train_") {
-        if method != "veraplus" {
-            bail!(
-                "native backend trains veraplus vectors only; graph \
-                 '{key}' needs PJRT"
-            );
-        }
+        let method = comp_method(&method, key, rank)?;
+        let topo = build_topo(manifest)?;
+        check_method_topo(method, &topo, key, manifest)?;
         return Ok(NativeGraph {
-            topo: Some(build_topo(manifest)?),
-            kind: GraphKind::CompTrain { rank },
+            topo: Some(topo),
+            kind: GraphKind::CompTrain { method, rank },
         });
     }
     bail!(
@@ -226,20 +317,17 @@ impl NativeGraph {
             .map(|(spec, t)| (spec.name.as_str(), *t))
             .collect();
         match &self.kind {
-            GraphKind::Forward {
-                comp_rank,
-                train_form,
-            } => {
+            GraphKind::Forward { comp, train_form } => {
                 let topo = self.topo.as_ref().expect("forward has topo");
                 let x = *named
                     .get("x")
                     .with_context(|| {
                         format!("graph {}: missing input 'x'", sig.key)
                     })?;
-                let comp = match comp_rank {
-                    Some(rank) => {
-                        Some(CompInputs::gather(topo, &named, *rank)?)
-                    }
+                let comp = match comp {
+                    Some((method, rank)) => Some(CompInputs::gather(
+                        topo, &named, *method, *rank,
+                    )?),
                     None => None,
                 };
                 let opts = FwdOpts {
@@ -303,6 +391,21 @@ impl NativeGraph {
                             )?
                         }
                     }
+                } else if int8::hwnum_enabled()
+                    && matches!(topo.kind, model::TopoKind::Mlp)
+                {
+                    // Hardware-numeric mode (`VERA_HWNUM=1`): the
+                    // bit-accurate DAC→crossbar→ADC→LUT chain instead
+                    // of the fake-quant f32 interpreter (MLP
+                    // topologies; others stay on the standard path).
+                    int8::forward_mlp_hwnum(
+                        topo,
+                        &named,
+                        x,
+                        comp.as_ref(),
+                        &int8::HwNumCfg::new(8),
+                        threads,
+                    )?
                 } else {
                     model::forward(topo, &named, x, comp.as_ref(),
                                    opts)?
@@ -370,7 +473,7 @@ impl NativeGraph {
                     self.topo.as_ref().expect("train_backbone has topo");
                 train::backbone_step(topo, sig, &named, threads)
             }
-            GraphKind::CompTrain { rank } => {
+            GraphKind::CompTrain { method, rank } => {
                 let topo = self.topo.as_ref().expect("train has topo");
                 let x = *named.get("x").context("train input 'x'")?;
                 let y = named.get("y").context("train input 'y'")?;
@@ -380,6 +483,7 @@ impl NativeGraph {
                     model::TopoKind::Mlp => model::train_step_mlp(
                         topo,
                         &named,
+                        *method,
                         *rank,
                         x,
                         y.as_i32(),
@@ -391,6 +495,7 @@ impl NativeGraph {
                             topo,
                             blocks,
                             &named,
+                            *method,
                             *rank,
                             x,
                             y.as_i32(),
@@ -466,6 +571,23 @@ impl NativeGraph {
                     .context("kernel graph declares one output")?;
                 Ok(vec![Tensor::from_f32(&spec.shape, y)])
             }
+            GraphKind::KernelCrossbar { n, k_rows, cols } => {
+                let y = int8::kernel_crossbar(
+                    args[0].as_i8(),
+                    args[1].as_i8(),
+                    args[2].as_f32()[0],
+                    args[3].as_f32()[0],
+                    *n,
+                    *k_rows,
+                    *cols,
+                    threads,
+                );
+                let spec = sig
+                    .outputs
+                    .first()
+                    .context("kernel graph declares one output")?;
+                Ok(vec![Tensor::from_f32(&spec.shape, y)])
+            }
         }
     }
 }
@@ -490,5 +612,52 @@ mod tests {
         );
         assert_eq!(parse_method_key("fwd_b256", "comp_"), None);
         assert_eq!(parse_method_key("comp_bad", "comp_"), None);
+    }
+
+    #[test]
+    fn method_key_parsing_rejects_malformed_rank_batch() {
+        // Garbage rank / batch digits never mis-parse into a fallback.
+        assert_eq!(parse_method_key("comp_lora_rX_b256", "comp_"), None);
+        assert_eq!(parse_method_key("comp_lora_r6_bX", "comp_"), None);
+        assert_eq!(parse_method_key("comp_lora_r_b256", "comp_"), None);
+        // A second `_b` segment lands in the batch parse and fails
+        // (usize::parse rejects "32_b64") instead of silently taking
+        // the first match.
+        assert_eq!(
+            parse_method_key("comp_lora_r6_b32_b64", "comp_"),
+            None
+        );
+        // Negative / overflowing numerals are parse failures, not
+        // panics.
+        assert_eq!(parse_method_key("comp_vera_r-1_b256", "comp_"), None);
+        assert_eq!(
+            parse_method_key(
+                "comp_vera_r99999999999999999999_b256",
+                "comp_"
+            ),
+            None
+        );
+        // Rank 0 parses at this layer; `comp_method` rejects it.
+        assert_eq!(
+            parse_method_key("comp_vera_r0_b256", "comp_"),
+            Some(("vera".to_string(), 0, Some(256)))
+        );
+        let err = comp_method("vera", "comp_vera_r0_b256", 0)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("rank 0"), "unhelpful: {err}");
+        // Unknown and empty method names get the descriptive PJRT
+        // hand-off.
+        for (m, key) in [
+            ("nomethod", "comp_nomethod_r1_b256"),
+            ("", "comp__r1_b256"),
+        ] {
+            let err = comp_method(m, key, 1).unwrap_err().to_string();
+            assert!(
+                err.contains("needs PJRT") && err.contains(key),
+                "unhelpful: {err}"
+            );
+        }
+        assert_eq!(comp_method("lora", "k", 6).unwrap(), CompMethod::Lora);
     }
 }

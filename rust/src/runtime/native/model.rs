@@ -22,13 +22,22 @@
 //!
 //! Numerics mirror the lowered JAX graphs: per-sample abs-max
 //! activation quantization (`quant.act_quant`), SAME-padded NHWC/HWIO
-//! convolution via im2col + GEMM, and the VeRA+ branch
-//! `y += b ⊙ (B_R (d ⊙ (A_R x_q)))` applied to each layer's quantized
-//! input (1×1 scheme for convs: spatial positions corrected
-//! independently on the stride-subsampled input). The shared projection
-//! `s = x_q A_Rᵀ` is computed once per batch and the per-set vectors
-//! enter the fused GEMM epilogue as a `b⊙d`-scaled rank-r panel — the
-//! corrected weight matrix is never materialized.
+//! convolution via im2col + GEMM, and a method-aware compensation
+//! branch ([`CompMethod`]):
+//!
+//! - **veraplus** — `y += b ⊙ (B_R (d ⊙ (A_R x_q)))` on each layer's
+//!   quantized input (1×1 scheme for convs: spatial positions corrected
+//!   independently on the stride-subsampled input).
+//! - **vera** — same frozen-(A, B) epilogue but with a k×k correction
+//!   for convs: the stage contracts full 3×3 im2col patches against the
+//!   shared `[9·d_in_max, r]` slice of `A`.
+//! - **lora** — per-layer trainable `A` (`[k·k·cin, r]`) and `B`
+//!   (`[cout, r]`); `y += (patches A) Bᵀ` with no `(d, b)` vectors.
+//!
+//! In every case the stage `s = x A'ᵀ` (`[rows, r]`) is computed once
+//! per batch and the per-layer `[cout, r]` panel (`b⊙d⊙B` or raw lora
+//! `B`) enters the fused GEMM epilogue — the corrected weight matrix is
+//! never materialized.
 
 use crate::nn::manifest::{LayerGeom, ModelManifest};
 use crate::runtime::native::gemm::{self, Epilogue};
@@ -339,15 +348,48 @@ pub(crate) fn req_f32<'a>(
     Ok(v)
 }
 
-/// VeRA+ compensation inputs for one execution: the frozen shared
-/// projections plus each layer's `(d, b)` vectors, in layer order.
+/// Which compensation parameterization a `comp_*`/`train_*` graph
+/// carries (`python/compile/model.py` method naming contract).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum CompMethod {
+    /// Frozen shared `(A_max, B_max)` + trainable per-layer `(d, b)`
+    /// vectors (1×1 scheme on convs).
+    VeraPlus,
+    /// Frozen 3×3 shared `A_max [3,3,d_in_max,r]` / `B_max` + trainable
+    /// per-layer `(d, b)` vectors (3×3 scheme on convs).
+    Vera,
+    /// Trainable per-layer low-rank factors `A [k·k·cin, r]`,
+    /// `B [cout, r]` (no frozen projections, no `(d, b)` scaling).
+    Lora,
+}
+
+impl CompMethod {
+    pub(crate) fn parse(s: &str) -> Option<CompMethod> {
+        match s {
+            "veraplus" => Some(CompMethod::VeraPlus),
+            "vera" => Some(CompMethod::Vera),
+            "lora" => Some(CompMethod::Lora),
+            _ => None,
+        }
+    }
+}
+
+/// Compensation inputs for one execution. For veraplus/vera the frozen
+/// shared projections plus each layer's `(d, b)` vectors; for lora the
+/// `d`/`b` slots carry each layer's own `A`/`B` factors instead.
 pub(crate) struct CompInputs<'a> {
+    pub method: CompMethod,
     pub rank: usize,
-    /// `A_max` `[rank, d_in_max]`.
+    /// veraplus: `A_max` `[rank, d_in_max]`; vera: `A_max`
+    /// `[3, 3, d_in_max, rank]`; lora: empty.
     pub a_max: &'a [f32],
-    /// `B_max` `[d_out_max, rank]`.
+    /// `B_max` `[d_out_max, rank]` (veraplus/vera); lora: empty.
     pub b_max: &'a [f32],
+    /// veraplus/vera: per-layer `d` `[rank]`; lora: per-layer `A`
+    /// `[k·k·cin, rank]` (`[cin, rank]` for linears).
     pub d: Vec<&'a [f32]>,
+    /// veraplus/vera: per-layer `b` `[cout]`; lora: per-layer `B`
+    /// `[cout, rank]`.
     pub b: Vec<&'a [f32]>,
 }
 
@@ -355,17 +397,53 @@ impl<'a> CompInputs<'a> {
     pub fn gather(
         topo: &Topo,
         named: &Named<'a>,
+        method: CompMethod,
         rank: usize,
     ) -> Result<CompInputs<'a>> {
-        let a_max = req_f32(named, "A_max", rank * topo.d_in_max)?;
-        let b_max = req_f32(named, "B_max", topo.d_out_max * rank)?;
+        let (a_max, b_max): (&[f32], &[f32]) = match method {
+            CompMethod::VeraPlus => (
+                req_f32(named, "A_max", rank * topo.d_in_max)?,
+                req_f32(named, "B_max", topo.d_out_max * rank)?,
+            ),
+            CompMethod::Vera => (
+                req_f32(named, "A_max", 9 * topo.d_in_max * rank)?,
+                req_f32(named, "B_max", topo.d_out_max * rank)?,
+            ),
+            CompMethod::Lora => (&[], &[]),
+        };
         let mut d = Vec::with_capacity(topo.layers.len());
         let mut b = Vec::with_capacity(topo.layers.len());
         for l in &topo.layers {
-            d.push(req_f32(named, &format!("{}.d", l.name), rank)?);
-            b.push(req_f32(named, &format!("{}.b", l.name), l.cout)?);
+            match method {
+                CompMethod::Lora => {
+                    let kdim = l.k * l.k * l.cin;
+                    d.push(req_f32(
+                        named,
+                        &format!("{}.A", l.name),
+                        kdim * rank,
+                    )?);
+                    b.push(req_f32(
+                        named,
+                        &format!("{}.B", l.name),
+                        l.cout * rank,
+                    )?);
+                }
+                _ => {
+                    d.push(req_f32(
+                        named,
+                        &format!("{}.d", l.name),
+                        rank,
+                    )?);
+                    b.push(req_f32(
+                        named,
+                        &format!("{}.b", l.name),
+                        l.cout,
+                    )?);
+                }
+            }
         }
         Ok(CompInputs {
+            method,
             rank,
             a_max,
             b_max,
@@ -402,6 +480,162 @@ impl<'a> CompInputs<'a> {
             }
         }
         bd
+    }
+
+    /// vera: the 3×3 shared projection flattened to the im2col column
+    /// order, `[9·cin, rank]` with row `(kh·3 + kw)·cin + ci` taken from
+    /// `A_max[kh][kw][ci][:]` (each tap's first `cin` input channels).
+    pub(crate) fn vera_a_flat(&self, topo: &Topo, cin: usize) -> Vec<f32> {
+        let r = self.rank;
+        let dmax = topo.d_in_max;
+        let mut out = Vec::with_capacity(9 * cin * r);
+        for tap in 0..9 {
+            for ci in 0..cin {
+                let base = (tap * dmax + ci) * r;
+                out.extend_from_slice(&self.a_max[base..base + r]);
+            }
+        }
+        out
+    }
+
+    /// vera on a linear layer: the center-tap-free `[cin, rank]` prefix
+    /// (first `cin` rows of tap (0,0)), matching the lowered graphs'
+    /// treatment of linears as 1×1 "convs".
+    pub(crate) fn vera_a_lin(&self, cin: usize) -> &'a [f32] {
+        &self.a_max[..cin * self.rank]
+    }
+
+    /// The fused-epilogue rank-`r` panel `[cout, rank]`:
+    /// `b⊙d⊙B_R` for veraplus/vera, the raw `B` factor for lora. The
+    /// compensation branch is always `y += stage @ panelᵀ`.
+    pub(crate) fn panel(&self, li: usize, cout: usize) -> Vec<f32> {
+        match self.method {
+            CompMethod::Lora => {
+                self.b[li][..cout * self.rank].to_vec()
+            }
+            _ => self.bd_panel(li, cout),
+        }
+    }
+
+    /// Compensation stage for a linear layer (`[rows, rank]` such that
+    /// the branch output is `stage @ panelᵀ` up to the `d`/`b` scaling
+    /// folded into [`CompInputs::panel`]): veraplus projects through
+    /// `A_R`, vera through the tap-(0,0) prefix, lora through the
+    /// layer's own `A`.
+    pub(crate) fn stage_linear(
+        &self,
+        topo: &Topo,
+        li: usize,
+        xq: &[f32],
+        rows: usize,
+        threads: usize,
+    ) -> Vec<f32> {
+        let cin = topo.layers[li].cin;
+        let r = self.rank;
+        debug_assert_eq!(xq.len(), rows * cin);
+        let mut s = vec![0f32; rows * r];
+        match self.method {
+            CompMethod::VeraPlus => {
+                let a_sl = self.a_slice(topo, cin);
+                gemm::gemm_nt_threads(
+                    threads, rows, r, cin, xq, &a_sl, &mut s,
+                );
+            }
+            CompMethod::Vera => {
+                gemm::gemm_threads(
+                    threads,
+                    rows,
+                    r,
+                    cin,
+                    xq,
+                    self.vera_a_lin(cin),
+                    &mut s,
+                );
+            }
+            CompMethod::Lora => {
+                gemm::gemm_threads(
+                    threads, rows, r, cin, xq, self.d[li], &mut s,
+                );
+            }
+        }
+        s
+    }
+
+    /// Compensation stage for a conv layer. veraplus uses the 1×1
+    /// scheme on the (stride-subsampled) quantized grid; vera projects
+    /// 3×3 patches through the flattened `A_max` (re-extracted at k=3
+    /// when the layer's own kernel differs); lora projects the layer's
+    /// own im2col patches through its `A` factor. Row counts always
+    /// match the conv output rows (`same_pad` output extent depends
+    /// only on the stride).
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn stage_conv(
+        &self,
+        topo: &Topo,
+        li: usize,
+        xq: &[f32],
+        patches: &[f32],
+        n: usize,
+        hs: usize,
+        ws: usize,
+        rows: usize,
+        threads: usize,
+    ) -> Vec<f32> {
+        let layer = &topo.layers[li];
+        let (cin, r) = (layer.cin, self.rank);
+        let mut s = vec![0f32; rows * r];
+        match self.method {
+            CompMethod::VeraPlus => {
+                let sub;
+                let crows: &[f32] = if layer.stride > 1 {
+                    sub = subsample_rows(
+                        xq, n, hs, ws, cin, layer.stride,
+                    );
+                    &sub
+                } else {
+                    xq
+                };
+                debug_assert_eq!(crows.len(), rows * cin);
+                let a_sl = self.a_slice(topo, cin);
+                gemm::gemm_nt_threads(
+                    threads, rows, r, cin, crows, &a_sl, &mut s,
+                );
+            }
+            CompMethod::Vera => {
+                let p3;
+                let p: &[f32] = if layer.k == 3 {
+                    patches
+                } else {
+                    p3 = im2col(xq, n, hs, ws, cin, 3, layer.stride).0;
+                    &p3
+                };
+                debug_assert_eq!(p.len(), rows * 9 * cin);
+                let a_flat = self.vera_a_flat(topo, cin);
+                gemm::gemm_threads(
+                    threads,
+                    rows,
+                    r,
+                    9 * cin,
+                    p,
+                    &a_flat,
+                    &mut s,
+                );
+            }
+            CompMethod::Lora => {
+                let kdim = layer.k * layer.k * cin;
+                debug_assert_eq!(patches.len(), rows * kdim);
+                gemm::gemm_threads(
+                    threads,
+                    rows,
+                    r,
+                    kdim,
+                    patches,
+                    self.d[li],
+                    &mut s,
+                );
+            }
+        }
+        s
     }
 }
 
@@ -573,20 +807,6 @@ pub(crate) struct FwdOpts {
     pub fused: bool,
 }
 
-/// Shared projection for one layer: `s = x_q A_Rᵀ` (`[rows, r]`).
-pub(crate) fn shared_projection(
-    xq: &[f32],
-    rows: usize,
-    cin: usize,
-    a_sl: &[f32],
-    r: usize,
-    threads: usize,
-) -> Vec<f32> {
-    let mut s = vec![0f32; rows * r];
-    gemm::gemm_nt_threads(threads, rows, r, cin, xq, a_sl, &mut s);
-    s
-}
-
 /// `dst += src`, elementwise.
 pub(crate) fn add_into(dst: &mut [f32], src: &[f32]) {
     debug_assert_eq!(dst.len(), src.len());
@@ -595,11 +815,69 @@ pub(crate) fn add_into(dst: &mut [f32], src: &[f32]) {
     }
 }
 
-/// Forward VeRA+ branch on pre-quantized rows for one layer: computes
-/// the shared projection `s = x_q A_Rᵀ` and the pre-`b` output
-/// `u = (s ⊙ d) B_Rᵀ`, adds `u ⊙ b` into `y`, and returns `(s, u)`
-/// for the backward cache. The ONE implementation behind every
-/// unfused train path (mlp / resnet / bert).
+/// Apply the compensation branch given a precomputed stage `s`
+/// (`[rows, r]`): veraplus/vera add `b ⊙ ((s ⊙ d) B_Rᵀ)` into `y` and
+/// return the pre-`b` output `u`; lora adds `s Bᵀ` directly (and
+/// returns it). The ONE epilogue implementation behind every unfused
+/// train path (mlp / resnet / bert).
+pub(crate) fn comp_apply_su(
+    comp: &CompInputs,
+    li: usize,
+    s: &[f32],
+    rows: usize,
+    cout: usize,
+    y: &mut [f32],
+    threads: usize,
+) -> Vec<f32> {
+    let r = comp.rank;
+    debug_assert_eq!(s.len(), rows * r);
+    match comp.method {
+        CompMethod::Lora => {
+            let mut u = vec![0f32; rows * cout];
+            gemm::gemm_nt_threads(
+                threads,
+                rows,
+                cout,
+                r,
+                s,
+                &comp.b[li][..cout * r],
+                &mut u,
+            );
+            add_into(y, &u);
+            u
+        }
+        _ => {
+            let mut t = vec![0f32; rows * r];
+            for i in 0..rows {
+                for q in 0..r {
+                    t[i * r + q] = s[i * r + q] * comp.d[li][q];
+                }
+            }
+            let mut u = vec![0f32; rows * cout];
+            gemm::gemm_nt_threads(
+                threads,
+                rows,
+                cout,
+                r,
+                &t,
+                comp.b_slice(cout),
+                &mut u,
+            );
+            for i in 0..rows {
+                for o in 0..cout {
+                    y[i * cout + o] += u[i * cout + o] * comp.b[li][o];
+                }
+            }
+            u
+        }
+    }
+}
+
+/// Forward compensation branch on pre-quantized *linear* rows for one
+/// layer: computes the stage (`s = x_q A_Rᵀ` for veraplus, `x_q A` for
+/// vera/lora), applies [`comp_apply_su`], and returns `(s, u)` for the
+/// backward cache. Conv layers with vera/lora go through
+/// [`CompInputs::stage_conv`] + [`comp_apply_su`] instead.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn comp_fwd_su(
     topo: &Topo,
@@ -614,43 +892,44 @@ pub(crate) fn comp_fwd_su(
 ) -> (Vec<f32>, Vec<f32>) {
     let r = comp.rank;
     debug_assert_eq!(crows.len(), rows * cin);
-    let a_sl = comp.a_slice(topo, cin);
-    let s = shared_projection(crows, rows, cin, &a_sl, r, threads);
-    let mut t = vec![0f32; rows * r];
-    for i in 0..rows {
-        for q in 0..r {
-            t[i * r + q] = s[i * r + q] * comp.d[li][q];
+    let mut s = vec![0f32; rows * r];
+    match comp.method {
+        CompMethod::VeraPlus => {
+            let a_sl = comp.a_slice(topo, cin);
+            gemm::gemm_nt_threads(
+                threads, rows, r, cin, crows, &a_sl, &mut s,
+            );
+        }
+        CompMethod::Vera => {
+            gemm::gemm_threads(
+                threads,
+                rows,
+                r,
+                cin,
+                crows,
+                comp.vera_a_lin(cin),
+                &mut s,
+            );
+        }
+        CompMethod::Lora => {
+            gemm::gemm_threads(
+                threads, rows, r, cin, crows, comp.d[li], &mut s,
+            );
         }
     }
-    let mut u = vec![0f32; rows * cout];
-    gemm::gemm_nt_threads(
-        threads,
-        rows,
-        cout,
-        r,
-        &t,
-        comp.b_slice(cout),
-        &mut u,
-    );
-    for i in 0..rows {
-        for o in 0..cout {
-            y[i * cout + o] += u[i * cout + o] * comp.b[li][o];
-        }
-    }
+    let u = comp_apply_su(comp, li, &s, rows, cout, y, threads);
     (s, u)
 }
 
-/// VJP of [`comp_fwd_su`]: accumulates this layer's `(dd, db)` and
-/// returns the branch-input gradient `(dt ⊙ d) A_R` (on the branch's
-/// own rows). Shared by every unfused train path.
+/// Shared `(db, dt, dd)` half of the veraplus/vera VJP: accumulates
+/// `db[o] += Σ g⊙u` and `dd[q] += Σ dt⊙s` with `dt = (g⊙b) B_R`, and
+/// returns `ds = dt ⊙ d` — the gradient w.r.t. the stage.
 #[allow(clippy::too_many_arguments)]
-pub(crate) fn comp_bwd_su(
-    topo: &Topo,
+pub(crate) fn comp_bwd_ds(
     li: usize,
     comp: &CompInputs,
     g: &[f32],
     rows: usize,
-    cin: usize,
     cout: usize,
     s: &[f32],
     u: &[f32],
@@ -688,20 +967,103 @@ pub(crate) fn comp_bwd_su(
             dd[li][q] += dt[i * r + q] * s[i * r + q];
         }
     }
-    // Branch-input gradient: (dt ⊙ d) A_R.
-    let mut ds = vec![0f32; rows * r];
+    // ds = dt ⊙ d.
     for i in 0..rows {
         for q in 0..r {
-            ds[i * r + q] = dt[i * r + q] * comp.d[li][q];
+            dt[i * r + q] *= comp.d[li][q];
         }
     }
-    let a_sl = comp.a_slice(topo, cin);
-    let mut dxc = vec![0f32; rows * cin];
-    gemm::gemm_threads(threads, rows, cin, r, &ds, &a_sl, &mut dxc);
-    dxc
+    dt
 }
 
-/// Unfused reference compensation: `b ⊙ ((s ⊙ d) B_Rᵀ)` added into `y`.
+/// VJP of [`comp_fwd_su`] (linear-stage layers): accumulates this
+/// layer's gradients into `(dd, db)` and returns the branch-input
+/// gradient on the branch's own rows. `crows` is the branch input the
+/// forward stage consumed — required by lora (its `A` factor trains),
+/// unused by veraplus/vera (their projections are frozen). Shared by
+/// every unfused train path.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn comp_bwd_su(
+    topo: &Topo,
+    li: usize,
+    comp: &CompInputs,
+    g: &[f32],
+    crows: &[f32],
+    rows: usize,
+    cin: usize,
+    cout: usize,
+    s: &[f32],
+    u: &[f32],
+    dd: &mut [Vec<f32>],
+    db: &mut [Vec<f32>],
+    threads: usize,
+) -> Vec<f32> {
+    let r = comp.rank;
+    match comp.method {
+        CompMethod::Lora => {
+            let bmat = &comp.b[li][..cout * r];
+            // dB[o,q] += Σ_i g[i,o]·s[i,q]   (y_comp = s Bᵀ).
+            let mut dbm = vec![0f32; cout * r];
+            gemm::gemm_tn_threads(
+                threads, rows, r, cout, g, s, &mut dbm,
+            );
+            add_into(&mut db[li], &dbm);
+            // dt = g B   [rows, r] — the stage gradient.
+            let mut dt = vec![0f32; rows * r];
+            gemm::gemm_threads(
+                threads, rows, r, cout, g, bmat, &mut dt,
+            );
+            // dA[c,q] += Σ_i x[i,c]·dt[i,q].
+            debug_assert_eq!(crows.len(), rows * cin);
+            let mut dam = vec![0f32; cin * r];
+            gemm::gemm_tn_threads(
+                threads, rows, r, cin, crows, &dt, &mut dam,
+            );
+            add_into(&mut dd[li], &dam);
+            // Branch-input gradient: dt Aᵀ.
+            let mut dxc = vec![0f32; rows * cin];
+            gemm::gemm_nt_threads(
+                threads,
+                rows,
+                cin,
+                r,
+                &dt,
+                &comp.d[li][..cin * r],
+                &mut dxc,
+            );
+            dxc
+        }
+        _ => {
+            let ds = comp_bwd_ds(
+                li, comp, g, rows, cout, s, u, dd, db, threads,
+            );
+            let mut dxc = vec![0f32; rows * cin];
+            match comp.method {
+                CompMethod::VeraPlus => {
+                    let a_sl = comp.a_slice(topo, cin);
+                    gemm::gemm_threads(
+                        threads, rows, cin, r, &ds, &a_sl, &mut dxc,
+                    );
+                }
+                _ => {
+                    gemm::gemm_nt_threads(
+                        threads,
+                        rows,
+                        cin,
+                        r,
+                        &ds,
+                        comp.vera_a_lin(cin),
+                        &mut dxc,
+                    );
+                }
+            }
+            dxc
+        }
+    }
+}
+
+/// Unfused reference compensation: `stage @ panelᵀ` added into `y`
+/// (the same rank-r panel the fused epilogue consumes).
 pub(crate) fn add_comp_reference(
     y: &mut [f32],
     s: &[f32],
@@ -711,40 +1073,33 @@ pub(crate) fn add_comp_reference(
     cout: usize,
     threads: usize,
 ) {
-    let r = comp.rank;
-    let d = comp.d[li];
-    let b = comp.b[li];
-    let mut t = vec![0f32; rows * r];
-    for i in 0..rows {
-        for q in 0..r {
-            t[i * r + q] = s[i * r + q] * d[q];
-        }
-    }
+    let panel = comp.panel(li, cout);
     let mut u = vec![0f32; rows * cout];
     gemm::gemm_nt_threads(
         threads,
         rows,
         cout,
-        r,
-        &t,
-        comp.b_slice(cout),
+        comp.rank,
+        s,
+        &panel,
         &mut u,
     );
-    for i in 0..rows {
-        for o in 0..cout {
-            y[i * cout + o] += u[i * cout + o] * b[o];
-        }
-    }
+    add_into(y, &u);
 }
 
 /// One linear/conv-as-GEMM layer on pre-quantized input rows.
+/// `comp_stage` is a precomputed compensation stage (`[rows, rank]` —
+/// conv callers build it from [`CompInputs::stage_conv`]); when `None`
+/// with an active branch, the stage is derived from `xq` itself via
+/// [`CompInputs::stage_linear`] (linear layers, where the GEMM input
+/// rows are the branch input).
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn layer_rows(
     topo: &Topo,
     li: usize,
     named: &Named,
     xq: &[f32],
-    comp_rows: Option<&[f32]>,
+    comp_stage: Option<&[f32]>,
     rows: usize,
     kdim: usize,
     comp: Option<&CompInputs>,
@@ -756,28 +1111,25 @@ pub(crate) fn layer_rows(
     let w = req_f32(named, &format!("{}.w", layer.name), kdim * cout)?;
     let bias = req_f32(named, &format!("{}.bias", layer.name), cout)?;
     let mut y = vec![0f32; rows * cout];
-    let comp_data = match comp {
-        Some(c) => {
-            let cin = layer.cin;
-            let crows = comp_rows.unwrap_or(xq);
-            debug_assert_eq!(crows.len(), rows * cin);
-            let a_sl = c.a_slice(topo, cin);
-            let s = shared_projection(
-                crows, rows, cin, &a_sl, c.rank, opts.threads,
-            );
-            Some(s)
+    let computed;
+    let comp_data: Option<&[f32]> = match (comp, comp_stage) {
+        (Some(_), Some(s)) => Some(s),
+        (Some(c), None) => {
+            computed =
+                c.stage_linear(topo, li, xq, rows, opts.threads);
+            Some(&computed)
         }
-        None => None,
+        _ => None,
     };
     if opts.fused || comp.is_none() {
         let bd;
         let epi = Epilogue {
             bias: Some(bias),
             relu,
-            comp: match (comp, &comp_data) {
+            comp: match (comp, comp_data) {
                 (Some(c), Some(s)) => {
-                    bd = c.bd_panel(li, cout);
-                    Some((s.as_slice(), c.rank, bd.as_slice()))
+                    bd = c.panel(li, cout);
+                    Some((s, c.rank, bd.as_slice()))
                 }
                 _ => None,
             },
@@ -795,7 +1147,7 @@ pub(crate) fn layer_rows(
     } else {
         // Reference path: separate blocked GEMM + comp + bias + relu.
         gemm::gemm_threads(opts.threads, rows, cout, kdim, xq, w, &mut y);
-        if let (Some(c), Some(s)) = (comp, &comp_data) {
+        if let (Some(c), Some(s)) = (comp, comp_data) {
             add_comp_reference(
                 &mut y,
                 s,
@@ -835,13 +1187,16 @@ pub(crate) fn forward(
     }
 }
 
-/// Per-layer forward cache for the MLP train step. The quantized
-/// input itself is not retained: the backbone is frozen, so the
-/// backward pass only needs the comp intermediates and the ReLU mask.
+/// Per-layer forward cache for the MLP train step: the comp
+/// intermediates, the ReLU mask source, and the quantized input rows
+/// (the lora backward trains `A` against them; veraplus/vera keep
+/// their projections frozen and ignore it).
 pub(crate) struct LayerCache {
-    /// Shared projection `[n, r]`.
+    /// Quantized input rows `[n, cin]`.
+    xq: Vec<f32>,
+    /// Compensation stage `[n, r]`.
     s: Vec<f32>,
-    /// Comp pre-`b` output `u = (s⊙d) B_Rᵀ` `[n, cout]`.
+    /// Comp pre-`b` output `u = (s⊙d) B_Rᵀ` (lora: `s Bᵀ`) `[n, cout]`.
     u: Vec<f32>,
     /// Pre-ReLU layer output `[n, cout]`.
     y: Vec<f32>,
@@ -898,7 +1253,7 @@ fn forward_mlp(
             } else {
                 y.iter().map(|&v| v.max(0.0)).collect()
             };
-            cache.push(LayerCache { s, u, y });
+            cache.push(LayerCache { xq, s, u, y });
             h = h_next;
         } else {
             h = layer_rows(
@@ -964,31 +1319,27 @@ fn forward_resnet(
             im2col(&xq, n, hs, ws, cin, layer.k, layer.stride);
         let rows = n * ho * wo;
         let kdim = layer.k * layer.k * cin;
-        // Compensation input: the quantized activation rows; only a
-        // strided conv needs the materialized subsample — stride 1
-        // borrows `xq` directly (its row count already matches).
-        let comp_sub = match comp {
-            Some(_) if layer.stride > 1 => Some(subsample_rows(
+        // Method-aware compensation stage: veraplus on the (stride-
+        // subsampled) quantized grid, vera/lora on conv patches.
+        let stage = comp.map(|c| {
+            c.stage_conv(
+                topo,
+                li,
                 &xq,
+                &patches,
                 n,
                 hs,
                 ws,
-                cin,
-                layer.stride,
-            )),
-            _ => None,
-        };
-        let comp_rows: Option<&[f32]> = if comp.is_some() {
-            Some(comp_sub.as_deref().unwrap_or(&xq))
-        } else {
-            None
-        };
+                rows,
+                opts.threads,
+            )
+        });
         let y = layer_rows(
             topo,
             li,
             named,
             &patches,
-            comp_rows,
+            stage.as_deref(),
             rows,
             kdim,
             comp,
@@ -1149,6 +1500,7 @@ pub(crate) struct TrainStep {
 pub(crate) fn train_step_mlp(
     topo: &Topo,
     named: &Named,
+    method: CompMethod,
     rank: usize,
     x: &Tensor,
     labels: &[i32],
@@ -1158,7 +1510,7 @@ pub(crate) fn train_step_mlp(
     if !matches!(topo.kind, TopoKind::Mlp) {
         bail!("native comp training supports mlp topologies only");
     }
-    let comp = CompInputs::gather(topo, named, rank)?;
+    let comp = CompInputs::gather(topo, named, method, rank)?;
     let n = *x.shape.first().context("train batch axis")?;
     if labels.len() != n {
         bail!("train labels: {} for batch {n}", labels.len());
@@ -1172,18 +1524,15 @@ pub(crate) fn train_step_mlp(
         forward_mlp(topo, named, x, Some(&comp), opts, Some(&mut cache))?;
     let (loss, dlogits) = ce_loss_grad(&logits, labels, n, topo.classes);
 
-    // Backward (backbone frozen; only (d, b) and the data path).
+    // Backward (backbone frozen; only the comp trainables and the data
+    // path). Grad slots mirror the gathered trainables so one sizing
+    // covers veraplus/vera ((d, b)) and lora ((A, B)).
     let n_layers = topo.layers.len();
-    let r = rank;
-    let mut dd: Vec<Vec<f32>> = topo
-        .layers
-        .iter()
-        .map(|_| vec![0f32; r])
+    let mut dd: Vec<Vec<f32>> = (0..n_layers)
+        .map(|li| vec![0f32; comp.d[li].len()])
         .collect();
-    let mut db: Vec<Vec<f32>> = topo
-        .layers
-        .iter()
-        .map(|l| vec![0f32; l.cout])
+    let mut db: Vec<Vec<f32>> = (0..n_layers)
+        .map(|li| vec![0f32; comp.b[li].len()])
         .collect();
     // `upstream` starts as dL/dlogits; for earlier layers it is the
     // gradient w.r.t. the layer's post-ReLU output.
@@ -1204,8 +1553,8 @@ pub(crate) fn train_step_mlp(
         };
         // Comp-branch VJP: (dd, db) for this layer + branch-input grad.
         let dxc = comp_bwd_su(
-            topo, li, &comp, &g, n, cin, cout, &lc.s, &lc.u, &mut dd,
-            &mut db, threads,
+            topo, li, &comp, &g, &lc.xq, n, cin, cout, &lc.s, &lc.u,
+            &mut dd, &mut db, threads,
         );
         if li > 0 {
             // dx = g Wᵀ + (dt ⊙ d) A_R, passed up through the quant STE
@@ -1240,7 +1589,6 @@ pub(crate) fn comp_sgd_update(
     loss: f32,
 ) -> Result<TrainStep> {
     let n_layers = topo.layers.len();
-    let r = comp.rank;
     // Global-norm clip to 1 (matches the lowered train graph).
     let mut sq = 0f64;
     for li in 0..n_layers {
@@ -1250,15 +1598,22 @@ pub(crate) fn comp_sgd_update(
     let gnorm = (sq + 1e-12).sqrt() as f32;
     let clip = 1f32.min(1.0 / gnorm);
 
-    // SGD momentum 0.9 on each trainable.
+    // SGD momentum 0.9 on each trainable. The (dd, db) grad slots hold
+    // (d, b) for veraplus/vera and (A, B) for lora; the parameter names
+    // follow the gathered trainables.
+    let (sfx_d, sfx_b) = match comp.method {
+        CompMethod::Lora => ("A", "B"),
+        _ => ("d", "b"),
+    };
     let mut trainables = BTreeMap::new();
     let mut momenta = BTreeMap::new();
     for li in 0..n_layers {
         let layer = &topo.layers[li];
-        for (suffix, grad, cur, len) in [
-            ("d", &dd[li], comp.d[li], r),
-            ("b", &db[li], comp.b[li], layer.cout),
+        for (suffix, grad, cur) in [
+            (sfx_d, &dd[li], comp.d[li]),
+            (sfx_b, &db[li], comp.b[li]),
         ] {
+            let len = cur.len();
             let name = format!("{}.{suffix}", layer.name);
             let mom0 = req_f32(named, &format!("m:{name}"), len)?;
             let mut mom = vec![0f32; len];
@@ -1420,7 +1775,9 @@ mod tests {
         ] {
             named.insert(k, v);
         }
-        let comp = CompInputs::gather(&topo, &named, 2).unwrap();
+        let comp =
+            CompInputs::gather(&topo, &named, CompMethod::VeraPlus, 2)
+                .unwrap();
         let fused = forward(
             &topo,
             &named,
@@ -1489,7 +1846,8 @@ mod tests {
                 named.insert(k, v);
             }
             let step = train_step_mlp(
-                &topo, &named, 2, &x, &labels, 0.2, 1,
+                &topo, &named, CompMethod::VeraPlus, 2, &x, &labels,
+                0.2, 1,
             )
             .unwrap();
             losses.push(step.loss);

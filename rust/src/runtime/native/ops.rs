@@ -25,6 +25,11 @@
 //!
 //! The VJPs treat both fake-quant ops as straight-through identities,
 //! exactly like the lowered `stop_gradient` formulations.
+//!
+//! The *activation* quantizers here and in [`super::model`] are the
+//! fake-quant (round-then-f32) abstraction; their code-level twins —
+//! DAC codes, int8 crossbar accumulation, ADC requantization — live in
+//! [`super::int8`] and take over under the hardware-numeric mode.
 
 use crate::util::parallel;
 use anyhow::{bail, Result};

@@ -111,6 +111,55 @@ fn bn_storage_vs_veraplus_is_three_orders() {
     assert!(reduction > 1000.0, "reduction {reduction}");
 }
 
+/// Every method row Table IV / the ablations measure must lower on the
+/// native backend: all compensation forwards and trainer graphs
+/// ({veraplus, vera, lora} × ranks) of the builtin ResNet-20 manifest
+/// compile natively, so a zero-artifact run can never print a
+/// "row skipped" marker for the method grid. (Artifact-free: builtin
+/// manifest + native runtime, compile-level only.)
+#[test]
+fn table4_method_grid_lowers_natively_with_zero_skips() {
+    use vera_plus::nn::configs::builtin_manifest;
+    use vera_plus::runtime::Runtime;
+    let man = builtin_manifest("resnet20_hard").unwrap();
+    let keys: Vec<String> = man
+        .graphs
+        .keys()
+        .filter(|k| k.starts_with("comp_") || k.starts_with("train_"))
+        .cloned()
+        .collect();
+    // The harness's full grid is present in the manifest...
+    for (method, rank) in [
+        ("veraplus", 1),
+        ("veraplus", 6),
+        ("vera", 1),
+        ("vera", 6),
+        ("lora", 1),
+        ("lora", 6),
+    ] {
+        for key in [
+            format!("comp_{method}_r{rank}_b256"),
+            format!("train_{method}_r{rank}"),
+        ] {
+            assert!(
+                keys.contains(&key),
+                "manifest lost harness graph '{key}'"
+            );
+        }
+    }
+    // ...and every one of those graphs compiles natively.
+    let rt = Runtime::with_manifest(man);
+    assert_eq!(rt.backend_name(), "native");
+    for key in &keys {
+        if let Err(e) = rt.executable("resnet20_hard", key) {
+            panic!(
+                "graph '{key}' would skip a harness row on the native \
+                 backend: {e:#}"
+            );
+        }
+    }
+}
+
 #[test]
 fn experiment_registry_rejects_unknown() {
     let Some(ctx) = ctx() else { return };

@@ -12,14 +12,20 @@
 //!   parity (fused comp epilogue included) against a from-scratch f64
 //!   forward, and the padded tail-batch eval path on the BERT testkit
 //!   deployment.
+//! - The int8 rung and the hardware-numeric chain: blocked i8×i8→i32
+//!   GEMM against a from-scratch i64 reference (ragged shapes, thread
+//!   bit-identity), DAC / per-channel weight-code round trips, ADC
+//!   saturation edges, and the full DAC→crossbar→ADC→LUT chain against
+//!   a closed-form f64 oracle.
 //!
 //! All artifact-free: deployments come from
 //! `util::testkit::{native_deployment, native_bert_deployment}`
 //! (in-memory manifests, native backend).
 
 use vera_plus::coordinator::eval::{self, EvalMode};
+use vera_plus::rram::mapping::quantize_per_channel;
 use vera_plus::rram::{IbmDrift, NoDrift};
-use vera_plus::runtime::native::{gemm, ops};
+use vera_plus::runtime::native::{gemm, int8, ops};
 use vera_plus::util::prop::{forall, Gen};
 use vera_plus::util::rng::Pcg64;
 use vera_plus::util::tensor::{Tensor, TensorMap};
@@ -269,8 +275,8 @@ fn unsupported_graphs_error_descriptively() {
         .rt
         .executable(NATIVE_MODEL, "train_backbone")
         .is_ok());
-    // Present-but-unsupported method: native compile error mentions
-    // PJRT.
+    // The vera/lora baselines lower natively now — a method graph only
+    // stays on the PJRT path when its method is unknown.
     let mut manifest =
         vera_plus::util::testkit::native_manifest(1);
     let comp = manifest.graphs.get("comp_veraplus_r1_b256").unwrap();
@@ -279,6 +285,11 @@ fn unsupported_graphs_error_descriptively() {
     manifest
         .graphs
         .insert("comp_lora_r1_b256".to_string(), lora);
+    let mut unknown = comp.clone();
+    unknown.key = "comp_nomethod_r1_b256".to_string();
+    manifest
+        .graphs
+        .insert("comp_nomethod_r1_b256".to_string(), unknown);
     // A bn_fwd key on a non-resnet manifest: compile-level error that
     // names the PJRT path.
     let fwd = manifest.graphs.get("fwd_b256").unwrap();
@@ -286,11 +297,18 @@ fn unsupported_graphs_error_descriptively() {
     bn.key = "bn_fwd_b256".to_string();
     manifest.graphs.insert("bn_fwd_b256".to_string(), bn);
     let rt = vera_plus::runtime::Runtime::with_manifest(manifest);
+    assert!(
+        rt.executable(NATIVE_MODEL, "comp_lora_r1_b256").is_ok(),
+        "lora comp graphs lower natively"
+    );
     let err = rt
-        .executable(NATIVE_MODEL, "comp_lora_r1_b256")
+        .executable(NATIVE_MODEL, "comp_nomethod_r1_b256")
         .unwrap_err();
     let msg = format!("{err:#}");
-    assert!(msg.contains("PJRT"), "unhelpful error: {msg}");
+    assert!(
+        msg.contains("PJRT") && msg.contains("nomethod"),
+        "unhelpful error: {msg}"
+    );
     let err =
         rt.executable(NATIVE_MODEL, "bn_fwd_b256").unwrap_err();
     let msg = format!("{err:#}");
@@ -785,4 +803,231 @@ fn bert_eval_handles_padded_tail_batch() {
     .unwrap();
     assert_eq!(a.mean.to_bits(), b.mean.to_bits());
     assert_eq!(a.std.to_bits(), b.std.to_bits());
+}
+
+// ---------------------------------------------------------------------
+// Int8 crossbar rung + hardware-numeric chain: from-scratch integer /
+// f64 references that share no code with `runtime::native::int8`.
+// ---------------------------------------------------------------------
+
+fn rand_i8(rng: &mut Pcg64, len: usize, lim: i32) -> Vec<i8> {
+    (0..len)
+        .map(|_| (rng.below(2 * lim as usize + 1) as i32 - lim) as i8)
+        .collect()
+}
+
+#[derive(Debug)]
+struct GemmI8Case {
+    m: usize,
+    n: usize,
+    k: usize,
+    threads: usize,
+    a: Vec<i8>,
+    b: Vec<i8>,
+}
+
+fn gen_i8_case(rng: &mut Pcg64) -> GemmI8Case {
+    let m = Gen::usize_in(rng, 1, 40);
+    let n = Gen::usize_in(rng, 1, 40);
+    let k = Gen::usize_in(rng, 1, 64);
+    let a = rand_i8(rng, m * k, 127);
+    let b = rand_i8(rng, k * n, 127);
+    GemmI8Case {
+        m,
+        n,
+        k,
+        threads: Gen::usize_in(rng, 1, 8),
+        a,
+        b,
+    }
+}
+
+#[test]
+fn int8_gemm_matches_i64_reference() {
+    forall("gemm_i8=exact", 0x18a7, 48, gen_i8_case, |c| {
+        let mut got = vec![0i32; c.m * c.n];
+        int8::gemm_i8_threads(
+            c.threads, c.m, c.n, c.k, &c.a, &c.b, &mut got,
+        );
+        for i in 0..c.m {
+            for j in 0..c.n {
+                // Independent exact dot in i64 (never overflows:
+                // 64·127·127 ≪ 2^63).
+                let want: i64 = (0..c.k)
+                    .map(|p| {
+                        c.a[i * c.k + p] as i64
+                            * c.b[p * c.n + j] as i64
+                    })
+                    .sum();
+                if got[i * c.n + j] as i64 != want {
+                    return Err(format!(
+                        "({},{},{}) t={}: [{i},{j}] {} vs {want}",
+                        c.m,
+                        c.n,
+                        c.k,
+                        c.threads,
+                        got[i * c.n + j]
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn int8_gemm_is_bit_identical_across_threads() {
+    forall("gemm_i8 thread-invariance", 0x18b2, 32, gen_i8_case, |c| {
+        let run = |threads: usize| {
+            let mut out = vec![0i32; c.m * c.n];
+            int8::gemm_i8_threads(
+                threads, c.m, c.n, c.k, &c.a, &c.b, &mut out,
+            );
+            out
+        };
+        let serial = run(1);
+        for t in [2usize, 4, 16] {
+            if run(t) != serial {
+                return Err(format!(
+                    "({},{},{}): {t} threads diverged",
+                    c.m, c.n, c.k
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn adc_saturation_edges_and_calibration_order() {
+    let cfg = int8::AdcCfg::for_chain(64, 8, 8);
+    let lim = cfg.lim();
+    let fs = cfg.full_scale;
+    // The rails: exactly full scale lands on ±lim, anything beyond
+    // saturates (never wraps, never panics).
+    assert_eq!(cfg.quantize(fs), lim as i32);
+    assert_eq!(cfg.quantize(fs * 10.0), lim as i32);
+    assert_eq!(cfg.quantize(-fs * 10.0), -(lim as i32));
+    assert_eq!(cfg.quantize(0.0), 0);
+    // Calibration applies AFTER saturation: the rail code maps through
+    // the LUT curve.
+    let lut = int8::AdcLut::from_fn(cfg.bits, |c| 0.5 * c as f64);
+    assert_eq!(lut.correct(cfg.quantize(fs * 2.0)), 0.5 * lim);
+    assert_eq!(lut.correct(0), 0.0);
+}
+
+/// The full DAC→crossbar→ADC→LUT chain through the public int8 API
+/// against independent f64 math: the code-level round trips, the
+/// exactness of the integer accumulation, the ADC's half-LSB error
+/// bound, and bit-identity of the dequantized output across thread
+/// counts. (Deliberately does NOT flip `VERA_HWNUM` — env vars leak
+/// across concurrently running tests in this process.)
+#[test]
+fn hwnum_chain_matches_f64_differential_oracle() {
+    let mut rng = Pcg64::new(0xadc);
+    let (rows, cin, cout) = (9usize, 33usize, 13usize);
+    let h = randn(&mut rng, rows * cin);
+    let w = randn(&mut rng, cin * cout);
+    let (a_bits, w_bits) = (8usize, 4usize);
+    let (x_codes, x_scales) = int8::dac_quant(&h, rows, a_bits);
+    let (w_codes, w_scales) = quantize_per_channel(&w, cout, w_bits);
+    // DAC / weight-code round trips: every sample lands within half a
+    // quantization step of its grid.
+    for i in 0..rows * cin {
+        let deq = x_codes[i] as f32 * x_scales[i / cin];
+        let step = x_scales[i / cin];
+        assert!(
+            (deq - h[i]).abs() <= 0.5 * step + 1e-6,
+            "DAC[{i}]: {deq} vs {}",
+            h[i]
+        );
+    }
+    for i in 0..cin * cout {
+        let deq = w_codes[i] as f32 * w_scales[i % cout];
+        let step = w_scales[i % cout];
+        assert!(
+            (deq - w[i]).abs() <= 0.5 * step + 1e-6,
+            "wq[{i}]: {deq} vs {}",
+            w[i]
+        );
+    }
+    let adc = int8::AdcCfg::for_chain(cin, a_bits, w_bits);
+    let lut = int8::AdcLut::identity(adc.bits);
+    let lsb = adc.lsb();
+    let mut acc = vec![0i32; rows * cout];
+    int8::gemm_i8_threads(
+        1, rows, cout, cin, &x_codes, &w_codes, &mut acc,
+    );
+    for i in 0..rows {
+        for o in 0..cout {
+            // Integer accumulation is exact (vs a from-scratch i64
+            // dot).
+            let exact: i64 = (0..cin)
+                .map(|p| {
+                    x_codes[i * cin + p] as i64
+                        * w_codes[p * cout + o] as i64
+                })
+                .sum();
+            assert_eq!(acc[i * cout + o] as i64, exact, "[{i},{o}]");
+            // ADC error bound: within half an LSB whenever the column
+            // is inside the converter's range.
+            let code = adc.quantize(exact as f64);
+            if (exact as f64).abs() <= adc.full_scale {
+                assert!(
+                    (lut.correct(code) * lsb - exact as f64).abs()
+                        <= 0.5 * lsb + 1e-9,
+                    "ADC[{i},{o}]: code {code} vs exact {exact}"
+                );
+            }
+        }
+    }
+    // The dequantized chain output is bit-identical across thread
+    // counts (integer core + deterministic f64 epilogue).
+    let chain = |threads: usize| -> Vec<u32> {
+        let mut acc = vec![0i32; rows * cout];
+        int8::gemm_i8_threads(
+            threads, rows, cout, cin, &x_codes, &w_codes, &mut acc,
+        );
+        acc.iter()
+            .enumerate()
+            .map(|(idx, &a)| {
+                let code = adc.quantize(a as f64);
+                let deq = lut.correct(code)
+                    * lsb
+                    * x_scales[idx / cout] as f64
+                    * w_scales[idx % cout] as f64;
+                (deq as f32).to_bits()
+            })
+            .collect()
+    };
+    let one = chain(1);
+    assert_eq!(one, chain(4), "hwnum chain diverged across threads");
+    assert!(one.iter().any(|&b| f32::from_bits(b) != 0.0));
+}
+
+/// `kernel_crossbar` (the native lowering of the Pallas int8 kernel),
+/// artifact-free: full-matrix check against the same exact-int + ADC
+/// reference math `tests/runtime_roundtrip.rs` spot-checks on the AOT
+/// artifact.
+#[test]
+fn native_kernel_crossbar_matches_exact_int_reference() {
+    let mut rng = Pcg64::new(0xcb);
+    let (n, k, cols) = (16usize, 256usize, 32usize);
+    let x = rand_i8(&mut rng, n * k, 7);
+    let w = rand_i8(&mut rng, k * cols, 7);
+    let y = int8::kernel_crossbar(&x, &w, 0.1, 0.02, n, k, cols, 4);
+    assert_eq!(y.len(), n * cols);
+    let lim = 127f64; // 8-bit ADC
+    let lsb = (k * 49) as f64 / lim; // grid full scale: k·(levels−1)²
+    for i in 0..n {
+        for j in 0..cols {
+            let exact: i64 = (0..k)
+                .map(|p| x[i * k + p] as i64 * w[p * cols + j] as i64)
+                .sum();
+            let code = (exact as f64 / lsb).round().clamp(-lim, lim);
+            let want =
+                (code * lsb * 0.1f32 as f64 * 0.02f32 as f64) as f32;
+            assert_eq!(y[i * cols + j], want, "[{i},{j}]");
+        }
+    }
 }

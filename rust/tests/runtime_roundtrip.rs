@@ -15,8 +15,9 @@ fn runtime() -> Option<Runtime> {
         return None;
     }
     // Auto-selects PJRT when the bindings exist; otherwise the native
-    // interpreter runs the manifest graphs it supports (the crossbar
-    // kernel test gates itself on the backend).
+    // interpreter runs the manifest graphs — including the int8
+    // crossbar kernel, which matches the PJRT Pallas artifact's exact
+    // int + ADC reference either way.
     Some(Runtime::cpu(dir).expect("runtime over artifacts"))
 }
 
@@ -86,12 +87,6 @@ fn kernel_vera_small_matches_host_reference() {
 #[test]
 fn kernel_crossbar_executes_and_quantizes() {
     let Some(rt) = runtime() else { return };
-    if rt.backend_name() != "pjrt" {
-        // The int8 crossbar kernel is not in the native interpreter's
-        // inventory; it needs the lowered Pallas artifact.
-        eprintln!("native backend: skipping crossbar kernel test");
-        return;
-    }
     let exe = rt.kernel_executable("kernel_crossbar").unwrap();
     // Signature: x[128,256] i8, w[256,512] i8, scales f32.
     let mut rng = Pcg64::new(2);
